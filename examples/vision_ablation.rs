@@ -1,0 +1,113 @@
+//! Vision-side experiments on the DeiT/CIFAR substitute:
+//!   --fig3    CEU + accuracy trajectories (paper Fig. 3)
+//!   --fig4    λ / rank-ratio / T_u hyper-parameter grid (paper Fig. 4)
+//!   --table7  Eqn-6 / Eqn-7 component ablation (paper Table 7)
+//!   --tucker  conv projection format comparison (paper App. Fig 1)
+//!
+//!     cargo run --release --example vision_ablation -- --fig3 --steps 120
+
+use coap::benchlib::{self, print_report_table, quality, run_spec};
+use coap::config::TrainConfig;
+use coap::runtime::Runtime;
+use coap::util::bench::print_table;
+use coap::util::cli::Args;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = TrainConfig::from_args(&args)?;
+    let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+    let steps = args.usize_or("steps", benchlib::bench_steps(100));
+    let mut ran = false;
+
+    if args.has("fig3") {
+        ran = true;
+        let specs = benchlib::fig3_specs(steps);
+        let mut rows = Vec::new();
+        let mut curves = Vec::new();
+        for s in &specs {
+            eprintln!("-- fig3: {} ({steps} steps)", s.label);
+            let rep = run_spec(&rt, s)?;
+            curves.push((s.label.clone(), rep.ceu_curve.clone()));
+            let (_, acc) = quality("vit_tiny", false, &rep);
+            rows.push(vec![
+                s.label.clone(),
+                format!("{:.1}", rep.ceu_total),
+                acc,
+            ]);
+            // Print the CEU trajectory at quartiles (the figure's x-axis).
+            let c = &rep.ceu_curve;
+            if !c.is_empty() {
+                let pick = |q: f64| c[((c.len() - 1) as f64 * q) as usize].1;
+                eprintln!(
+                    "   CEU @25/50/75/100%: {:.1} / {:.1} / {:.1} / {:.1}",
+                    pick(0.25),
+                    pick(0.5),
+                    pick(0.75),
+                    pick(1.0)
+                );
+            }
+        }
+        print_table(
+            &format!("Fig 3 substitute — CEU and accuracy after {steps} steps"),
+            &["Method", "CEU (total)", "Acc(%)"],
+            &rows,
+        );
+    }
+
+    if args.has("fig4") {
+        ran = true;
+        let specs = benchlib::fig4_specs(steps);
+        let mut rows = Vec::new();
+        for s in &specs {
+            eprintln!("-- fig4: {}", s.label);
+            let rep = run_spec(&rt, s)?;
+            let (_, acc) = quality("vit_tiny", false, &rep);
+            rows.push(vec![s.label.clone(), acc, format!("{:.3}", rep.final_train_loss)]);
+        }
+        print_table(
+            &format!("Fig 4 substitute — hyper-parameter grid ({steps} steps)"),
+            &["Config", "Acc(%)", "Train loss"],
+            &rows,
+        );
+    }
+
+    if args.has("table7") {
+        ran = true;
+        for (regime, pretrain) in [("fine-tuning", false), ("pre-training", true)] {
+            let specs = benchlib::table7_specs(steps, pretrain);
+            let mut reports = Vec::new();
+            for s in &specs {
+                eprintln!("-- table7 ({regime}): {}", s.label);
+                reports.push(run_spec(&rt, s)?);
+            }
+            print_report_table(
+                &format!("Table 7 substitute — {regime} ({steps} steps)"),
+                "vit_tiny",
+                false,
+                &reports,
+            );
+        }
+    }
+
+    if args.has("tucker") {
+        ran = true;
+        let specs = benchlib::tucker_specs(steps);
+        let mut reports = Vec::new();
+        for s in &specs {
+            eprintln!("-- tucker: {}", s.label);
+            reports.push(run_spec(&rt, s)?);
+        }
+        print_report_table(
+            &format!("App. Fig 1 substitute — conv formats ({steps} steps)"),
+            "cnn_tiny",
+            false,
+            &reports,
+        );
+    }
+
+    if !ran {
+        eprintln!("pass one of --fig3 --fig4 --table7 --tucker (see header)");
+    }
+    Ok(())
+}

@@ -1,0 +1,368 @@
+"""AOT driver: lower every graph the experiments need to HLO text.
+
+Run once via `make artifacts` (from python/):
+
+    python -m compile.aot --out ../artifacts [--only PREFIX] [--force]
+
+Outputs:
+    artifacts/<graph>.hlo.txt   one per (template, shape) instantiation
+    artifacts/manifest.json     the Rust<->Python contract (DESIGN.md §2)
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+runtime behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Graph naming (mirrored by rust/src/runtime/names.rs):
+    matrix proj:  {tpl}__{m}x{n}_r{r}
+    full-rank:    {tpl}__{m}x{n}
+    conv:         {tpl}__{o}x{i}x{k1}x{k2}_rO{ro}_rI{ri}[_rS{rs}]
+    models:       train_step__{model}, eval_step__{model}
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import optim, shapes
+from .models import module_for
+from .shapes import EXPERIMENTS, MODELS, conv_ranks, param_specs, rank_for
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(dtype) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dtype).name]
+
+
+class GraphDef:
+    """A lowerable graph: fn + positional input ShapeDtypeStructs."""
+
+    def __init__(self, name, fn, inputs, outputs, template, meta=None):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs      # list of ShapeDtypeStruct (flat order)
+        self.outputs = outputs    # list of (shape tuple, dtype)
+        self.template = template
+        self.meta = meta or {}
+
+    def manifest_entry(self):
+        flat = []
+        for s in self.inputs:  # model graphs nest the params tuple first
+            flat.extend(s) if isinstance(s, tuple) else flat.append(s)
+        return {
+            "file": self.name + ".hlo.txt",
+            "template": self.template,
+            "inputs": [{"shape": list(s.shape), "dtype": _dt(s.dtype)}
+                       for s in flat],
+            "outputs": [{"shape": list(s), "dtype": d} for s, d in self.outputs],
+            **self.meta,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Matrix optimizer graph instantiation
+# ---------------------------------------------------------------------------
+
+def matrix_graphs(m, n, r):
+    """All optimizer graphs for a raw weight shape (m, n) at rank r."""
+    tr = m < n
+    mb, nb = max(m, n), min(m, n)
+    sc = sds(())
+    w, g = sds((m, n)), sds((m, n))
+    mom, vmom = sds((mb, r)), sds((mb, r))
+    p = sds((nb, r))
+    rfac, cfac = sds((mb, 1)), sds((1, r))
+    defs = []
+
+    defs.append(GraphDef(
+        f"coap_adam_step__{m}x{n}_r{r}",
+        functools.partial(optim.coap_adam_step, transpose=tr),
+        [w, g, mom, vmom, p, sc, sc, sc, sc],
+        [((m, n), "f32"), ((mb, r), "f32"), ((mb, r), "f32"), ((), "f32")],
+        "coap_adam_step", {"rank": r}))
+
+    defs.append(GraphDef(
+        f"coap_adafactor_step__{m}x{n}_r{r}",
+        functools.partial(optim.coap_adafactor_step, transpose=tr),
+        [w, g, mom, rfac, cfac, p, sc, sc],
+        [((m, n), "f32"), ((mb, r), "f32"), ((mb, 1), "f32"),
+         ((1, r), "f32"), ((), "f32")],
+        "coap_adafactor_step", {"rank": r}))
+
+    defs.append(GraphDef(
+        f"pupdate__{m}x{n}_r{r}",
+        functools.partial(optim.pupdate, transpose=tr),
+        [p, g, mom],
+        [((nb, r), "f32")],
+        "pupdate", {"rank": r}))
+
+    defs.append(GraphDef(
+        f"recalib__{m}x{n}_r{r}",
+        functools.partial(optim.recalib, transpose=tr),
+        [p, g],
+        [((nb, r), "f32")],
+        "recalib", {"rank": r}))
+
+    defs.append(GraphDef(
+        f"galore_svd__{m}x{n}_r{r}",
+        functools.partial(optim.galore_svd, rank=r, transpose=tr),
+        [g],
+        [((nb, r), "f32")],
+        "galore_svd", {"rank": r}))
+
+    a, b = sds((r, n)), sds((m, r))
+    defs.append(GraphDef(
+        f"lora_adam_step__{m}x{n}_r{r}",
+        optim.lora_adam_step,
+        [w, a, b, g, a, a, b, b, sc, sc, sc],
+        [((m, n), "f32"), ((r, n), "f32"), ((m, r), "f32"),
+         ((r, n), "f32"), ((r, n), "f32"), ((m, r), "f32"), ((m, r), "f32"),
+         ((), "f32")],
+        "lora_adam_step", {"rank": r}))
+    return defs
+
+
+def fullrank_graphs(m, n):
+    sc = sds(())
+    w, g = sds((m, n)), sds((m, n))
+    defs = [
+        GraphDef(f"adam_step__{m}x{n}", optim.adam_step,
+                 [w, g, w, w, sc, sc, sc, sc],
+                 [((m, n), "f32")] * 3 + [((), "f32")],
+                 "adam_step"),
+        GraphDef(f"adafactor_step__{m}x{n}", optim.adafactor_step,
+                 [w, g, w, sds((m, 1)), sds((1, n)), sc, sc],
+                 [((m, n), "f32"), ((m, n), "f32"), ((m, 1), "f32"),
+                  ((1, n), "f32"), ((), "f32")],
+                 "adafactor_step"),
+    ]
+    return defs
+
+
+def conv_graphs(o, i, k1, k2, ro, ri, with_full=False):
+    sc = sds(())
+    w = sds((o, i, k1, k2))
+    mom = sds((ro, ri, k1, k2))
+    po, pi = sds((o, ro)), sds((i, ri))
+    base = f"{o}x{i}x{k1}x{k2}_rO{ro}_rI{ri}"
+    defs = []
+
+    defs.append(GraphDef(
+        f"coap_adam_conv_step__{base}", optim.coap_adam_conv_step,
+        [w, w, mom, mom, po, pi, sc, sc, sc, sc],
+        [((o, i, k1, k2), "f32"), ((ro, ri, k1, k2), "f32"),
+         ((ro, ri, k1, k2), "f32"), ((), "f32")],
+        "coap_adam_conv_step", {"rank_o": ro, "rank_i": ri}))
+
+    defs.append(GraphDef(
+        f"coap_adafactor_conv_step__{base}", optim.coap_adafactor_conv_step,
+        [w, w, mom, sds((ro, 1)), sds((1, ri * k1 * k2)), po, pi, sc, sc],
+        [((o, i, k1, k2), "f32"), ((ro, ri, k1, k2), "f32"),
+         ((ro, 1), "f32"), ((1, ri * k1 * k2), "f32"), ((), "f32")],
+        "coap_adafactor_conv_step", {"rank_o": ro, "rank_i": ri}))
+
+    for mode, p, r, side in ((1, po, ro, "o"), (2, pi, ri, "i")):
+        other = pi if mode == 1 else po
+        defs.append(GraphDef(
+            f"conv_pupdate_{side}__{base}",
+            functools.partial(optim.conv_pupdate, mode=mode),
+            [p, w, mom, other],
+            [((o, ro) if mode == 1 else (i, ri), "f32")],
+            f"conv_pupdate_{side}", {"rank_o": ro, "rank_i": ri}))
+        defs.append(GraphDef(
+            f"conv_recalib_{side}__{base}",
+            functools.partial(optim.conv_recalib, mode=mode),
+            [p, w],
+            [((o, ro) if mode == 1 else (i, ri), "f32")],
+            f"conv_recalib_{side}", {"rank_o": ro, "rank_i": ri}))
+        defs.append(GraphDef(
+            f"conv_svd_{side}__{base}",
+            functools.partial(optim.conv_svd, rank=r, mode=mode),
+            [w],
+            [((o, ro) if mode == 1 else (i, ri), "f32")],
+            f"conv_svd_{side}", {"rank_o": ro, "rank_i": ri}))
+
+    if with_full:
+        rs = max(2, (k1 * k2) // 2)
+        ps = sds((k1 * k2, rs))
+        mom3 = sds((ro, ri, rs))
+        defs.append(GraphDef(
+            f"coap_adam_convfull_step__{base}_rS{rs}",
+            optim.coap_adam_convfull_step,
+            [w, w, mom3, mom3, po, pi, ps, sc, sc, sc, sc],
+            [((o, i, k1, k2), "f32"), ((ro, ri, rs), "f32"),
+             ((ro, ri, rs), "f32"), ((), "f32")],
+            "coap_adam_convfull_step",
+            {"rank_o": ro, "rank_i": ri, "rank_s": rs}))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Model graphs
+# ---------------------------------------------------------------------------
+
+def model_graphs(cfg):
+    mod = module_for(cfg)
+    specs = param_specs(cfg)
+    p_sds = tuple(sds(p.shape) for p in specs)
+    d_sds = [sds(s, dt) for _, s, dt in mod.data_specs(cfg)]
+
+    def train_step(params, *data):
+        loss, grads = jax.value_and_grad(
+            lambda ps: mod.loss_fn(ps, *data, cfg=cfg))(params)
+        return (loss, *grads)
+
+    train_out = [((), "f32")] + [(p.shape, "f32") for p in specs]
+    defs = [GraphDef(f"train_step__{cfg.name}", train_step,
+                     [p_sds, *d_sds],
+                     train_out, "train_step", {"model": cfg.name})]
+
+    if hasattr(mod, "eval_fn"):
+        def eval_step(params, *data):
+            return mod.eval_fn(params, *data, cfg=cfg)
+        if cfg.family == "cnn":
+            ev_out = [((), "f32"),
+                      (tuple(d_sds[0].shape), "f32")]  # loss, pred
+        else:
+            ev_out = [((), "f32"), ((), "f32")]        # loss, n_correct
+    else:
+        def eval_step(params, *data):
+            return (mod.loss_fn(params, *data, cfg=cfg),)
+        ev_out = [((), "f32")]
+    defs.append(GraphDef(f"eval_step__{cfg.name}", eval_step,
+                         [p_sds, *d_sds], ev_out, "eval_step",
+                         {"model": cfg.name}))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Registry assembly
+# ---------------------------------------------------------------------------
+
+def build_registry():
+    """Dedup-by-name union of every graph any experiment needs."""
+    reg = {}
+
+    def add(defs):
+        for d in defs:
+            reg.setdefault(d.name, d)
+
+    needed_models = set()
+    for exp in EXPERIMENTS:
+        cfg = MODELS[exp.model]
+        needed_models.add(cfg.name)
+        with_full = exp.id == "app_tucker"
+        for p in param_specs(cfg):
+            if p.kind == "matrix":
+                m, n = p.shape
+                add(fullrank_graphs(m, n))
+                for ratio in exp.ratios:
+                    r = rank_for(p.shape, ratio)
+                    add(matrix_graphs(m, n, r))
+            elif p.kind == "conv":
+                o, i, k1, k2 = p.shape
+                add(fullrank_graphs(o, i * k1 * k2))
+                for ratio in exp.ratios:
+                    ro, ri = conv_ranks(p.shape, ratio)
+                    add(conv_graphs(o, i, k1, k2, ro, ri, with_full=with_full))
+                    # Tucker-1 path reuses matrix graphs on the mode-1
+                    # unfolding (DESIGN.md §3): (O, I*K1*K2) at rank rO.
+                    if with_full:
+                        add(matrix_graphs(o, i * k1 * k2, ro))
+
+    for name in sorted(needed_models):
+        add(model_graphs(MODELS[name]))
+    return reg
+
+
+def model_manifest(cfg):
+    mod = module_for(cfg)
+    specs = param_specs(cfg)
+    entry = {
+        "family": cfg.family,
+        "cfg": {k: (list(v) if isinstance(v, tuple) else v)
+                for k, v in cfg.__dict__.items()},
+        "param_count": sum(p.numel for p in specs),
+        "params": [{"name": p.name, "shape": list(p.shape), "kind": p.kind,
+                    "init": p.init, "scale": p.scale} for p in specs],
+        "data": [{"name": nm, "shape": list(s), "dtype": _dt(dt)}
+                 for nm, s, dt in mod.data_specs(cfg)],
+        "train_step": f"train_step__{cfg.name}",
+        "eval_step": f"eval_step__{cfg.name}",
+        "eval_outputs": mod.eval_outputs(cfg),
+    }
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower only names with prefix")
+    ap.add_argument("--force", action="store_true", help="relower existing files")
+    ap.add_argument("--list", action="store_true", help="print names and exit")
+    args = ap.parse_args()
+
+    reg = build_registry()
+    if args.list:
+        for name in sorted(reg):
+            print(name)
+        print(f"total: {len(reg)} graphs", file=sys.stderr)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    lowered_n = skipped = 0
+    for idx, name in enumerate(sorted(reg)):
+        if args.only and not name.startswith(args.only):
+            continue
+        gd = reg[name]
+        path = os.path.join(args.out, gd.name + ".hlo.txt")
+        if os.path.exists(path) and not args.force:
+            skipped += 1
+            continue
+        lowered = jax.jit(gd.fn).lower(*gd.inputs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        lowered_n += 1
+        if lowered_n % 25 == 0:
+            print(f"[{idx + 1}/{len(reg)}] {name} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    manifest = {
+        "version": 1,
+        "graphs": {n: reg[n].manifest_entry() for n in sorted(reg)},
+        "models": {m: model_manifest(MODELS[m])
+                   for m in sorted({e.model for e in EXPERIMENTS})},
+        "experiments": [{"id": e.id, "model": e.model,
+                         "ratios": list(e.ratios), "note": e.note}
+                        for e in EXPERIMENTS],
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts: {lowered_n} lowered, {skipped} cached, "
+          f"{len(reg)} total in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

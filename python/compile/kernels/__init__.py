@@ -1,0 +1,44 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO graphs).
+
+COAP_PALLAS_SCOPE selects which call sites lower through Pallas
+(correctness is identical either way — pytest asserts kernel == oracle):
+
+  all   every kernel through Pallas. The TPU-structure configuration
+        (tiles sized for VMEM / the MXU; DESIGN.md §Hardware-Adaptation).
+  proj  (default) the Eqn-6 CosSim-gradient kernel — the paper's novel
+        compute, executed every T_u steps — stays Pallas; the per-step
+        adam-update/matmul go through the jnp oracles. This is the CPU
+        hardware adaptation: interpret-mode grids cost ~5.8x wallclock on
+        CPU (EXPERIMENTS.md §Perf), and the per-step path runs every
+        layer every step.
+  none  all oracles (debug / lowering-cost comparisons).
+
+COAP_DISABLE_PALLAS=1 is a back-compat alias for scope=none.
+"""
+
+import os
+
+from . import ref
+
+_SCOPE = os.environ.get("COAP_PALLAS_SCOPE", "proj")
+if os.environ.get("COAP_DISABLE_PALLAS", "0") == "1":
+    _SCOPE = "none"
+
+if _SCOPE == "all":
+    from .projected_update import adam_update
+    from .projection_matmul import matmul
+    from .pupdate import cosgrad_rows
+elif _SCOPE == "proj":
+    adam_update = ref.adam_update_ref
+    matmul = ref.matmul_ref
+    from .pupdate import cosgrad_rows
+elif _SCOPE == "none":
+    adam_update = ref.adam_update_ref
+    matmul = ref.matmul_ref
+    cosgrad_rows = ref.cosgrad_rows_ref
+else:
+    raise ValueError(f"COAP_PALLAS_SCOPE={_SCOPE!r} (want all|proj|none)")
+
+adafactor_update = ref.adafactor_update_ref  # row/col reductions: left to XLA
+
+__all__ = ["adam_update", "matmul", "cosgrad_rows", "adafactor_update", "ref"]

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: tiled projection matmul (G @ P and friends).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid tiles the output (M, R)
+into MXU-aligned (bm, br) blocks (multiples of 128 feed the 128x128
+systolic array); the contraction dimension K is kept whole per tile —
+for COAP's projections K = n <= 4096, so an f32 (128, K) A-slab plus a
+(K, 128) B-slab stay under 4 MB of VMEM, and `jnp.dot` inside the kernel
+maps to one MXU pass with f32 accumulation (`preferred_element_type`).
+
+This is the paper's hot matmul family: G@P (project), Delta@P^T (restore),
+and the G^T G P products inside the Eqn-6 update.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def matmul(a, b, bm=DEFAULT_BM, bn=DEFAULT_BN):
+    """a (M, K) @ b (K, N) -> (M, N), f32 accumulation."""
+    assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    pm = (-m) % bm
+    pn = (-n) % bn
+    ap = jnp.pad(a, ((0, pm), (0, 0))) if pm else a
+    bp = jnp.pad(b, ((0, 0), (0, pn))) if pn else b
+    gm, gn = (m + pm) // bm, (n + pn) // bn
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + pm, n + pn), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]

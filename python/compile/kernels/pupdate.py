@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: row-wise pieces of the Eqn-6 direction-term gradient.
+
+For the inter-projection correlation-aware update, the CosSim gradient
+(appendix Eqn. 6) needs, per gradient row i:
+
+    A_i = G_i/(|Mhat_i||G_i|) - Mhat_i <Mhat_i,G_i>/(|Mhat_i|^3 |G_i|)
+
+plus the per-row cosine for the objective value. Rows are independent, so
+the kernel tiles over rows with the full row width N resident: one
+HBM->VMEM pass produces both reductions (dot, two norms) and the A tile.
+
+TPU mapping: block (bm, N) with bm chosen so 2*bm*N*4 bytes (mhat+g tiles)
+plus the A output tile fit VMEM — bm=128 covers N up to ~8k. All VPU work;
+the reductions are lane-wise adds feeding a scalar broadcast.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import COS_EPS
+
+DEFAULT_BM = 128
+
+
+def _kernel(mhat_ref, g_ref, a_ref, cos_ref, *, eps):
+    mhat = mhat_ref[...]
+    g = g_ref[...]
+    d = jnp.sum(mhat * g, axis=1, keepdims=True)
+    nm = jnp.sqrt(jnp.sum(mhat * mhat, axis=1, keepdims=True))
+    ng = jnp.sqrt(jnp.sum(g * g, axis=1, keepdims=True))
+    denom = nm * ng + eps
+    a_ref[...] = g / denom - mhat * d / (nm * nm * denom + eps)
+    cos_ref[...] = d / denom
+
+
+def cosgrad_rows(mhat, g, eps=COS_EPS, bm=DEFAULT_BM):
+    """Same contract as ref.cosgrad_rows_ref: returns (A, cos_rows)."""
+    assert mhat.shape == g.shape and mhat.ndim == 2
+    m, n = mhat.shape
+    bm = min(bm, m)
+    pm = (-m) % bm
+    # Rows are independent; zero-padded rows produce garbage A rows that we
+    # slice away (their norms are eps, no NaNs thanks to the +eps guards).
+    mp = jnp.pad(mhat, ((0, pm), (0, 0))) if pm else mhat
+    gp = jnp.pad(g, ((0, pm), (0, 0))) if pm else g
+    grid = ((m + pm) // bm,)
+
+    a, cos_rows = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m + pm, n), jnp.float32),
+            jax.ShapeDtypeStruct((m + pm, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(mp, gp)
+    return a[:m], cos_rows[:m]

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These define the exact semantics a kernel must reproduce; the pytest suite
+(`python/tests/test_kernels.py`) asserts allclose between each kernel and
+its oracle over hypothesis-generated shapes. They are also imported by
+`optim.py` when COAP_DISABLE_PALLAS=1 (debug / perf-comparison path).
+"""
+
+import jax.numpy as jnp
+
+ADAM_EPS = 1e-8
+# f32-safe: denominators are formed as (nm*ng + eps) and (nm^2*denom +
+# eps) so exactly-zero rows (unseen embedding tokens) yield 0, not 0/0.
+# 1e-12 would underflow when cubed in f32.
+COS_EPS = 1e-8
+
+
+def adam_update_ref(m, v, g, b1t, b2t, beta1=0.9, beta2=0.999, eps=ADAM_EPS):
+    """Fused Adam moment update + bias-corrected step direction.
+
+    Args:
+      m, v, g: (M, R) first moment, second moment, (projected) gradient.
+      b1t, b2t: scalars beta1**t, beta2**t (bias-correction powers).
+    Returns:
+      (m_new, v_new, delta) with delta = m_hat / (sqrt(v_hat) + eps).
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * (g * g)
+    m_hat = m_new / (1.0 - b1t)
+    v_hat = v_new / (1.0 - b2t)
+    delta = m_hat / (jnp.sqrt(v_hat) + eps)
+    return m_new, v_new, delta
+
+
+def matmul_ref(a, b):
+    """Plain a @ b in f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def cosgrad_rows_ref(mhat, g, eps=COS_EPS):
+    """Row-wise pieces of the Eqn-6 direction-term gradient.
+
+    For each row i:
+      d_i   = <mhat_i, g_i>
+      nm_i  = ||mhat_i||,  ng_i = ||g_i||,  den_i = nm_i*ng_i + eps
+      A_i   = g_i / den_i - mhat_i * d_i / (nm_i^2 * den_i + eps)
+      cos_i = d_i / den_i
+    Returns (A, cos_rows) with A (M, N) and cos_rows (M, 1).
+    CosSim(mhat, g) = mean(cos_rows); dCos/dP = (1/m) A^T @ M_proj.
+    """
+    d = jnp.sum(mhat * g, axis=1, keepdims=True)
+    nm = jnp.sqrt(jnp.sum(mhat * mhat, axis=1, keepdims=True))
+    ng = jnp.sqrt(jnp.sum(g * g, axis=1, keepdims=True))
+    denom = nm * ng + eps
+    a = g / denom - mhat * d / (nm * nm * denom + eps)
+    cos_rows = d / denom
+    return a, cos_rows
+
+
+def adafactor_update_ref(m, r, c, g, t, beta1=0.9, eps=1e-30, decay=-0.8):
+    """Adafactor second-moment factored update with first-moment momentum.
+
+    Implements the paper's Algorithm 2 body (projected frame):
+      beta2_t = 1 - t**decay
+      R = beta2_t R + (1-beta2_t) sum(G^2, axis=1)   (rows, (M,1))
+      C = beta2_t C + (1-beta2_t) sum(G^2, axis=0)   (cols, (1,N))
+      Vhat = sqrt(mean(R) / (R C))    (element-wise rsqrt scale)
+      M = beta1 M + (1-beta1) G
+      delta = M * Vhat
+    Returns (m_new, r_new, c_new, delta).
+    """
+    beta2t = 1.0 - jnp.power(t, decay)
+    g2 = g * g + eps
+    r_new = beta2t * r + (1.0 - beta2t) * jnp.sum(g2, axis=1, keepdims=True)
+    c_new = beta2t * c + (1.0 - beta2t) * jnp.sum(g2, axis=0, keepdims=True)
+    vhat = jnp.sqrt(jnp.mean(r_new) / (r_new * c_new + eps))
+    m_new = beta1 * m + (1.0 - beta1) * g
+    delta = m_new * vhat
+    return m_new, r_new, c_new, delta

@@ -1,0 +1,220 @@
+"""Pure-jnp linear algebra for the AOT path.
+
+jnp.linalg.{svd,qr} lower to jaxlib-registered LAPACK FFI custom-calls
+that xla_extension 0.5.1 (the runtime behind the Rust `xla` crate) cannot
+resolve, so every decomposition used at training time is implemented here
+from primitive HLO ops only (dots, gathers/scatters, while-loops):
+
+  * `mgs_qr`            — modified Gram-Schmidt reduced QR (two passes).
+  * `onesided_jacobi`   — one-sided Jacobi column-orthogonalization, the
+                          building block of both SVDs below. Round-robin
+                          (circle-method) pair scheduling makes every
+                          sweep n-1 rounds of n/2 *independent* rotations,
+                          which vectorizes into gathers + 2-column GEMV
+                          updates (no O(n^2) sequential scalar rotations).
+  * `svd_topk`          — full(ish) SVD of G via Jacobi, returning the
+                          top-r right singular vectors. Cost O(mn^2) per
+                          sweep — intentionally expensive: this *is*
+                          GaLore's projection step whose cost the paper
+                          benchmarks against (Sec. 3.2, challenge 2).
+  * `lowcost_recalib`   — the paper's Eqn. 7: Q = QR_red(G P), small SVD
+                          of Q^T G via Jacobi on the (n, r) side. Cost
+                          O(mnr + nr^2) — the 20x-cheaper path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+QR_EPS = 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Modified Gram-Schmidt reduced QR
+# ---------------------------------------------------------------------------
+
+def mgs_qr(x):
+    """Reduced QR of x (m, r), m >= r, via two-pass modified Gram-Schmidt.
+
+    Returns Q (m, r) with (numerically) orthonormal columns spanning
+    range(x). Rank-deficient columns degrade to near-zero columns rather
+    than NaNs (guarded normalization) — acceptable for Eqn. 7, where Q is
+    only used as an approximate range basis.
+    """
+    m, r = x.shape
+
+    def body(j, q):
+        v = lax.dynamic_slice(x, (0, j), (m, 1))  # (m, 1)
+        # Two projection passes for numerical stability. Columns >= j of q
+        # are still zero, so projecting against all of q is a no-op there.
+        for _ in range(2):
+            coef = q.T @ v                      # (r, 1)
+            v = v - q @ coef
+        norm = jnp.sqrt(jnp.sum(v * v)) + QR_EPS
+        v = v / norm
+        return lax.dynamic_update_slice(q, v, (0, j))
+
+    q0 = jnp.zeros((m, r), dtype=x.dtype)
+    return lax.fori_loop(0, r, body, q0)
+
+
+# ---------------------------------------------------------------------------
+# One-sided Jacobi
+# ---------------------------------------------------------------------------
+
+def _round_pairs(k, n):
+    """Circle-method round-robin pairing for round k of n players (n even).
+
+    Player n-1 is fixed; players 0..n-2 rotate. Returns (a_idx, b_idx),
+    each (n/2,), pairing a_idx[i] with b_idx[i]; over k = 0..n-2 every
+    unordered pair appears exactly once.
+    """
+    half = n // 2
+    i = jnp.arange(half)
+    nm1 = n - 1
+    a = jnp.where(i == 0, nm1, (k + i) % nm1)
+    b = (k - i + nm1) % nm1
+    b = jnp.where(i == 0, k % nm1, b)
+    return a, b
+
+
+def onesided_jacobi(x, sweeps=8, compute_v=False):
+    """Orthogonalize the columns of x (m, n) by Jacobi rotations.
+
+    After enough sweeps, x_out = X V has orthogonal columns with norms
+    equal to the singular values of X. If compute_v, also accumulates and
+    returns V (n, n). n odd is handled by padding a zero column (rotations
+    against a zero column are identities).
+    """
+    m, n = x.shape
+    padded = n % 2 == 1
+    if padded:
+        x = jnp.pad(x, ((0, 0), (0, 1)))
+        n += 1
+    half = n // 2
+    v = jnp.eye(n, dtype=x.dtype) if compute_v else jnp.zeros((1, 1), x.dtype)
+
+    def rotate(mat, a_idx, b_idx, c, s):
+        """Apply per-pair Givens rotations to columns (a_idx[i], b_idx[i])."""
+        cols_a = mat.T[a_idx]                  # (half, rows)
+        cols_b = mat.T[b_idx]
+        new_a = c[:, None] * cols_a - s[:, None] * cols_b
+        new_b = s[:, None] * cols_a + c[:, None] * cols_b
+        mt = mat.T
+        mt = mt.at[a_idx].set(new_a)
+        mt = mt.at[b_idx].set(new_b)
+        return mt.T
+
+    def round_body(k, carry):
+        xc, vc = carry
+        a_idx, b_idx = _round_pairs(k, n)
+        cols_a = xc.T[a_idx]                   # (half, m)
+        cols_b = xc.T[b_idx]
+        alpha = jnp.sum(cols_a * cols_a, axis=1)
+        beta = jnp.sum(cols_b * cols_b, axis=1)
+        gamma = jnp.sum(cols_a * cols_b, axis=1)
+        # Rotation zeroing the off-diagonal gamma (Rutishauser formulas).
+        safe = jnp.abs(gamma) > 1e-20
+        zeta = (beta - alpha) / (2.0 * jnp.where(safe, gamma, 1.0))
+        # sign(0) must be +1 here (zeta == 0 is a 45-degree rotation).
+        sz = jnp.where(zeta >= 0.0, 1.0, -1.0)
+        t = sz / (jnp.abs(zeta) + jnp.sqrt(1.0 + zeta * zeta))
+        t = jnp.where(safe, t, 0.0)
+        c = 1.0 / jnp.sqrt(1.0 + t * t)
+        s = c * t
+        xc = rotate(xc, a_idx, b_idx, c, s)
+        if compute_v:
+            vc = rotate(vc, a_idx, b_idx, c, s)
+        return xc, vc
+
+    def sweep_body(_, carry):
+        return lax.fori_loop(0, n - 1, round_body, carry)
+
+    x, v = lax.fori_loop(0, sweeps, sweep_body, (x, v))
+    if padded:
+        x = x[:, :-1]
+        if compute_v:
+            v = v[:-1, :-1]  # safe: the pad column never mixes (zero gamma)
+    return (x, v) if compute_v else (x, None)
+
+
+def _sort_desc_by_norm(y, extra=None):
+    """Sort columns of y by descending norm; apply same order to extra."""
+    norms = jnp.sqrt(jnp.sum(y * y, axis=0))
+    order = jnp.argsort(-norms)
+    y = y[:, order]
+    norms = norms[order]
+    if extra is not None:
+        extra = extra[:, order]
+    return y, norms, extra
+
+
+def svd_topk(g, rank, sweeps=8):
+    """Top-`rank` right singular vectors of g (m, n): GaLore's SVD step.
+
+    Returns (p, sigma) with p (n, rank) orthonormal. Full one-sided Jacobi
+    on all n columns — O(mn^2) work per sweep, the expensive baseline.
+    """
+    y, v = onesided_jacobi(g, sweeps=sweeps, compute_v=True)
+    _, sigma, v_sorted = _sort_desc_by_norm(y, v)
+    return v_sorted[:, :rank], sigma[:rank]
+
+
+def lowcost_recalib(g, p_prev, sweeps=8):
+    """The paper's Eqn. 7 — occasional low-cost SVD recalibration.
+
+        Q_red = QR_red(G P_prev)           (m, r)
+        U S Z^T = SVD(Q_red^T G)           (r, n) small SVD
+        P_t = Z                            (n, r)
+
+    The small SVD runs one-sided Jacobi on B^T = (Q^T G)^T (n, r): after
+    rotations Y = B^T V has orthogonal columns with norms sigma, and the
+    right singular vectors of B are Z = Y diag(1/sigma). Total cost
+    O(mnr + mr^2 + nr^2) vs O(mn^2) for svd_topk.
+    """
+    q = mgs_qr(g @ p_prev)                   # (m, r)
+    b = q.T @ g                              # (r, n)
+    y, _ = onesided_jacobi(b.T, sweeps=sweeps, compute_v=False)  # (n, r)
+    y, sigma, _ = _sort_desc_by_norm(y)
+    z = y / (sigma[None, :] + QR_EPS)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Eqn. 6 — inter-projection correlation-aware P update (SGD on the product
+# objective). The row-wise CosSim gradient pieces come from the L1 kernel.
+# ---------------------------------------------------------------------------
+
+def pupdate_sgd(p, g, m_proj, iters=2, lr=0.1, cosgrad_rows_fn=None):
+    """SGD iterations on Eqn. 6: min_P MSE(GPP^T, G) * (1 - CosSim(MP^T, G)).
+
+    Gradient (appendix Eqns. 3-7, with the descent sign on the CosSim term
+    — the appendix writes `+ dCos * MSE` inside the update, which ascends
+    the (1 - CosSim) factor; we use the mathematically consistent
+    `- dCos * MSE`):
+
+        dL/dP = dMSE/dP * (1 - cos) - dCos/dP * mse
+        dMSE/dP = 2/(mn) (Ghat^T G P - 2 G^T G P + G^T Ghat P)
+        dCos/dP = 1/m * A^T M_proj          (A from the L1 kernel)
+    """
+    if cosgrad_rows_fn is None:
+        from .kernels import cosgrad_rows as cosgrad_rows_fn
+    m, n = g.shape
+
+    def body(_, p):
+        gp = g @ p                            # (m, r)
+        ghat = gp @ p.T                       # (m, n)
+        diff = ghat - g
+        mse = jnp.mean(diff * diff)
+        gtg_p = g.T @ gp                      # G^T G P   (n, r)
+        dmse = (2.0 / (m * n)) * (ghat.T @ gp - 2.0 * gtg_p + g.T @ (ghat @ p))
+        mhat = m_proj @ p.T                   # (m, n)
+        a, cos_rows = cosgrad_rows_fn(mhat, g)
+        cos = jnp.mean(cos_rows)
+        dcos = (a.T @ m_proj) / m             # (n, r)
+        grad = dmse * (1.0 - cos) - dcos * mse
+        return p - lr * grad
+
+    return lax.fori_loop(0, iters, body, p)

@@ -1,0 +1,17 @@
+"""L2 model graphs. Each module exposes loss_fn / data_specs (and for
+models with quality metrics, eval_fn / eval_outputs)."""
+
+from . import cnn, layers, llava, sit, transformer, vit
+
+
+def module_for(cfg):
+    return {
+        "lm": transformer,
+        "vit": vit,
+        "cnn": cnn,
+        "sit": sit,
+        "llava": llava,
+    }[cfg.family]
+
+
+__all__ = ["cnn", "layers", "llava", "sit", "transformer", "vit", "module_for"]

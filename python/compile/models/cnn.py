@@ -1,0 +1,86 @@
+"""L2 model: small conv denoiser (LDM / DDPM U-Net substitute; Table 1,
+Appendix Table 2) and its ControlNet variant (Table 3).
+
+Plain variant inputs:  noisy (B,C,H,W), clean (B,C,H,W). Loss: MSE.
+Control variant adds:  control (B,1,H,W) — a keypoint-blob map injected
+into the mid features through a zero-initialized-style side branch,
+mirroring ControlNet's architecture at toy scale.
+
+Eval graphs also return the prediction so the Rust harness can compute
+the FID-proxy / keypoint-mAP-proxy metrics.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers
+
+
+def _conv(x, w, b):
+    """Same-padded stride-1 conv, NCHW x OIHW."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return y + b[None, :, None, None]
+
+
+def _predict(params, noisy, control, cfg):
+    it = iter(params)
+    n_body = len(cfg.widths)
+    mid = n_body // 2
+    x = noisy
+    ctrl_feat = None
+    body = []
+    for _ in range(n_body):
+        body.append((next(it), next(it)))
+    w_out, b_out = next(it), next(it)
+    if cfg.control:
+        c0w, c0b = next(it), next(it)
+        c1w, c1b = next(it), next(it)
+        h = layers.gelu(_conv(control, c0w, c0b))
+        ctrl_feat = _conv(h, c1w, c1b)
+    rest = list(it)
+    assert not rest, f"unconsumed params: {len(rest)}"
+
+    for i, (w, b) in enumerate(body):
+        x = layers.gelu(_conv(x, w, b))
+        if cfg.control and i == mid and ctrl_feat is not None:
+            x = x + ctrl_feat
+    return noisy + _conv(x, w_out, b_out)  # residual prediction
+
+
+def loss_fn_plain(params, noisy, clean, cfg):
+    pred = _predict(params, noisy, None, cfg)
+    return jnp.mean((pred - clean) ** 2)
+
+
+def loss_fn_control(params, noisy, clean, control, cfg):
+    pred = _predict(params, noisy, control, cfg)
+    return jnp.mean((pred - clean) ** 2)
+
+
+def loss_fn(params, *data, cfg):
+    if cfg.control:
+        return loss_fn_control(params, *data, cfg=cfg)
+    return loss_fn_plain(params, *data, cfg=cfg)
+
+
+def eval_fn(params, *data, cfg):
+    noisy, clean = data[0], data[1]
+    control = data[2] if cfg.control else None
+    pred = _predict(params, noisy, control, cfg)
+    return jnp.mean((pred - clean) ** 2), pred
+
+
+def data_specs(cfg):
+    s = [
+        ("noisy", (cfg.batch, cfg.chans, cfg.img, cfg.img), jnp.float32),
+        ("clean", (cfg.batch, cfg.chans, cfg.img, cfg.img), jnp.float32),
+    ]
+    if cfg.control:
+        s.append(("control", (cfg.batch, 1, cfg.img, cfg.img), jnp.float32))
+    return s
+
+
+def eval_outputs(cfg):
+    return ["loss", "pred"]

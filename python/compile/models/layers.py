@@ -1,0 +1,82 @@
+"""Shared L2 building blocks for all model graphs.
+
+Every model consumes its parameter list positionally in the exact order
+declared by `shapes.*_param_specs` — the manifest, the Rust parameter
+store, and these apply functions all share that single ordering.
+"""
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps=1e-6):
+    """RMSNorm (scale-only), LLaMA-style."""
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * scale / jnp.sqrt(var + eps)
+
+
+def attention(x, wq, wk, wv, wo, heads, causal):
+    """Multi-head self-attention. x: (B, T, d)."""
+    b, t, d = x.shape
+    dh = d // heads
+    q = (x @ wq).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, t, heads, dh).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x ** 3)))
+
+
+def mlp(x, w1, w2):
+    return gelu(x @ w1) @ w2
+
+
+def transformer_block(x, it, heads, causal):
+    """Pre-norm block consuming 8 params from iterator `it` in spec order:
+    ln1, wq, wk, wv, wo, ln2, w1, w2."""
+    ln1 = next(it)
+    wq, wk, wv, wo = next(it), next(it), next(it), next(it)
+    ln2 = next(it)
+    w1, w2 = next(it), next(it)
+    x = x + attention(rms_norm(x, ln1), wq, wk, wv, wo, heads, causal)
+    x = x + mlp(rms_norm(x, ln2), w1, w2)
+    return x
+
+
+def cross_entropy(logits, labels):
+    """Mean CE. logits (..., V), labels (...) int32. Returns scalar."""
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(logits), axis=-1))
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def n_correct(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def patchify(images, patch):
+    """(B, C, H, W) -> (B, T, C*patch*patch) row-major patch grid."""
+    b, c, h, w = images.shape
+    gh, gw = h // patch, w // patch
+    x = images.reshape(b, c, gh, patch, gw, patch)
+    x = x.transpose(0, 2, 4, 1, 3, 5)  # (B, gh, gw, C, p, p)
+    return x.reshape(b, gh * gw, c * patch * patch)
+
+
+def unpatchify(tokens, patch, chans, img):
+    """Inverse of patchify: (B, T, C*p*p) -> (B, C, H, W)."""
+    b = tokens.shape[0]
+    g = img // patch
+    x = tokens.reshape(b, g, g, chans, patch, patch)
+    x = x.transpose(0, 3, 1, 4, 2, 5)
+    return x.reshape(b, chans, img, img)

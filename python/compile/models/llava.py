@@ -1,0 +1,50 @@
+"""L2 model: LLaVA-style multimodal stub (Table 6 substitute).
+
+Frozen 'CLIP' features (B, F) are mapped by a trainable projector into a
+prefix token, concatenated with the embedded question tokens, run through
+a causal trunk; the final position classifies over answer classes.
+Data inputs: feats (B,F) f32, tokens (B,S) i32, answers (B,) i32.
+"""
+
+import jax.numpy as jnp
+
+from . import layers
+
+
+def _logits(params, feats, tokens, cfg):
+    it = iter(params)
+    projector = next(it)
+    embed = next(it)
+    prefix = (feats @ projector)[:, None, :]       # (B, 1, d)
+    x = jnp.concatenate([prefix, embed[tokens]], axis=1)  # (B, 1+S, d)
+    for _ in range(cfg.layers):
+        x = layers.transformer_block(x, it, cfg.heads, causal=True)
+    lnf = next(it)
+    head = next(it)
+    x = layers.rms_norm(x[:, -1, :], lnf)
+    logits = x @ head
+    rest = list(it)
+    assert not rest, f"unconsumed params: {len(rest)}"
+    return logits
+
+
+def loss_fn(params, feats, tokens, answers, cfg):
+    return layers.cross_entropy(_logits(params, feats, tokens, cfg), answers)
+
+
+def eval_fn(params, feats, tokens, answers, cfg):
+    logits = _logits(params, feats, tokens, cfg)
+    return (layers.cross_entropy(logits, answers),
+            layers.n_correct(logits, answers))
+
+
+def data_specs(cfg):
+    return [
+        ("feats", (cfg.batch, cfg.feat), jnp.float32),
+        ("tokens", (cfg.batch, cfg.seq), jnp.int32),
+        ("answers", (cfg.batch,), jnp.int32),
+    ]
+
+
+def eval_outputs(cfg):
+    return ["loss", "n_correct"]

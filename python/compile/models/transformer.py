@@ -1,0 +1,36 @@
+"""L2 model: decoder-only LLaMA-style language model (Table 5 substitute).
+
+Data inputs: tokens (B, S) i32, targets (B, S) i32 (pre-shifted by the
+Rust data pipeline). Loss: mean next-token cross-entropy.
+"""
+
+import jax.numpy as jnp
+
+from . import layers
+
+
+def loss_fn(params, tokens, targets, cfg):
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]                       # (B, S, d)
+    for _ in range(cfg.layers):
+        x = layers.transformer_block(x, it, cfg.heads, causal=True)
+    lnf = next(it)
+    head = next(it)
+    x = layers.rms_norm(x, lnf)
+    logits = x @ head                       # (B, S, V)
+    loss = layers.cross_entropy(logits, targets)
+    rest = list(it)
+    assert not rest, f"unconsumed params: {len(rest)}"
+    return loss
+
+
+def data_specs(cfg):
+    return [
+        ("tokens", (cfg.batch, cfg.seq), jnp.int32),
+        ("targets", (cfg.batch, cfg.seq), jnp.int32),
+    ]
+
+
+def eval_outputs(cfg):
+    return ["loss"]

@@ -1,0 +1,46 @@
+"""L2 model: ViT classifier (DeiT-Base on CIFAR-100 substitute; Fig 3/4,
+Table 7).
+
+Data inputs: images (B, C, H, W) f32, labels (B,) i32.
+Eval graph additionally returns n_correct for accuracy.
+"""
+
+import jax.numpy as jnp
+
+from . import layers
+
+
+def _logits(params, images, cfg):
+    it = iter(params)
+    patch_embed = next(it)
+    pos_embed = next(it)
+    x = layers.patchify(images, cfg.patch) @ patch_embed + pos_embed[None]
+    for _ in range(cfg.layers):
+        x = layers.transformer_block(x, it, cfg.heads, causal=False)
+    lnf = next(it)
+    head = next(it)
+    x = layers.rms_norm(jnp.mean(x, axis=1), lnf)   # mean-pool tokens
+    logits = x @ head
+    rest = list(it)
+    assert not rest, f"unconsumed params: {len(rest)}"
+    return logits
+
+
+def loss_fn(params, images, labels, cfg):
+    return layers.cross_entropy(_logits(params, images, cfg), labels)
+
+
+def eval_fn(params, images, labels, cfg):
+    logits = _logits(params, images, cfg)
+    return layers.cross_entropy(logits, labels), layers.n_correct(logits, labels)
+
+
+def data_specs(cfg):
+    return [
+        ("images", (cfg.batch, cfg.chans, cfg.img, cfg.img), jnp.float32),
+        ("labels", (cfg.batch,), jnp.int32),
+    ]
+
+
+def eval_outputs(cfg):
+    return ["loss", "n_correct"]

@@ -1,0 +1,252 @@
+"""L2 optimizer step graphs — one HLO executable per (template, shape).
+
+Every graph is a pure function (state in, state out); the Rust coordinator
+owns all state between steps and decides *when* each graph runs (the
+T_u / lambda schedule of Algorithm 1). Scalars (lr, wd, beta powers, t)
+are graph inputs so Rust can drive schedules without recompilation.
+
+Projection frame convention (GaLore side rule, DESIGN.md §6): for
+W (m, n) the graphs internally operate on Gn = G if m >= n else G^T, so
+the projection P always lives on the smaller side: P (n', r) with
+n' = min(m, n), and moments are (m', r) with m' = max(m, n). The manifest
+records the exact I/O shapes, so the Rust side never needs the rule.
+
+Betas/eps follow the paper: beta1=0.9, beta2=0.999, eps=1e-8; Adafactor
+decay gamma=-0.8; Eqn-6 SGD: 2 iterations at lr=0.1 (appendix §1.1).
+"""
+
+import jax.numpy as jnp
+
+from . import kernels, linalg
+
+BETA1 = 0.9
+BETA2 = 0.999
+PUPDATE_ITERS = 2
+PUPDATE_LR = 0.1
+SVD_SWEEPS = 8
+
+
+def _norm(g, transpose):
+    return g.T if transpose else g
+
+
+# ---------------------------------------------------------------------------
+# Matrix steps
+# ---------------------------------------------------------------------------
+
+def coap_adam_step(w, g, m, v, p, b1t, b2t, lr, wd, *, transpose):
+    """Projected Adam step (Algorithm 1 inner body).
+
+    w, g: (m, n); m, v: (m', r); p: (n', r). Returns (w', m', v', ceu).
+    Used by COAP, GaLore and Flora alike — they differ only in how the
+    coordinator refreshes P.
+    """
+    gn = _norm(g, transpose)
+    g_proj = kernels.matmul(gn, p)                     # (m', r)
+    m_new, v_new, delta = kernels.adam_update(m, v, g_proj, b1t, b2t,
+                                              beta1=BETA1, beta2=BETA2)
+    dw = kernels.matmul(delta, p.T)                    # (m', n')
+    dw = _norm(dw, transpose)
+    w_new = w - lr * (dw + wd * w)
+    ceu = jnp.sum(jnp.abs(w_new - w))
+    return w_new, m_new, v_new, ceu
+
+
+def coap_adafactor_step(w, g, m, r_, c_, p, t, lr, *, transpose):
+    """Projected Adafactor-with-momentum step (appendix Algorithm 2).
+
+    m: (m', r); r_: (m', 1); c_: (1, r); p: (n', r).
+    Returns (w', m', r', c', ceu).
+    """
+    gn = _norm(g, transpose)
+    g_proj = kernels.matmul(gn, p)
+    m_new, r_new, c_new, delta = kernels.adafactor_update(
+        m, r_, c_, g_proj, t, beta1=BETA1)
+    dw = kernels.matmul(delta, p.T)
+    dw = _norm(dw, transpose)
+    w_new = w - lr * dw
+    ceu = jnp.sum(jnp.abs(w_new - w))
+    return w_new, m_new, r_new, c_new, ceu
+
+
+def adam_step(w, g, m, v, b1t, b2t, lr, wd):
+    """Full-rank Adam(W) baseline. All operands (m, n)."""
+    m_new, v_new, delta = kernels.adam_update(m, v, g, b1t, b2t,
+                                              beta1=BETA1, beta2=BETA2)
+    w_new = w - lr * (delta + wd * w)
+    ceu = jnp.sum(jnp.abs(w_new - w))
+    return w_new, m_new, v_new, ceu
+
+
+def adafactor_step(w, g, m, r_, c_, t, lr):
+    """Full-rank Adafactor-with-momentum baseline."""
+    m_new, r_new, c_new, delta = kernels.adafactor_update(
+        m, r_, c_, g, t, beta1=BETA1)
+    w_new = w - lr * delta
+    ceu = jnp.sum(jnp.abs(w_new - w))
+    return w_new, m_new, r_new, c_new, ceu
+
+
+def pupdate(p, g, m_proj, *, transpose):
+    """Eqn-6 inter-projection correlation-aware P update (2 SGD iters)."""
+    gn = _norm(g, transpose)
+    return linalg.pupdate_sgd(p, gn, m_proj, iters=PUPDATE_ITERS,
+                              lr=PUPDATE_LR,
+                              cosgrad_rows_fn=kernels.cosgrad_rows)
+
+
+def recalib(p, g, *, transpose):
+    """Eqn-7 occasional low-cost SVD recalibration."""
+    gn = _norm(g, transpose)
+    return linalg.lowcost_recalib(gn, p, sweeps=SVD_SWEEPS)
+
+
+def galore_svd(g, *, rank, transpose):
+    """GaLore's full SVD projection refresh (expensive baseline)."""
+    gn = _norm(g, transpose)
+    p, _ = linalg.svd_topk(gn, rank, sweeps=SVD_SWEEPS)
+    return p
+
+
+def lora_adam_step(w, a, b, g, ma, va, mb, vb, b1t, b2t, lr):
+    """Optimizer-level LoRA baseline (DESIGN.md §3).
+
+    Effective weight w = w0 + b @ a is maintained directly; the adapter
+    gradients come from the full gradient: dA = B^T G, dB = G A^T. ReLoRA
+    is this plus a coordinator-side periodic merge (reset a, b, moments).
+    a: (r, n), b: (m, r). Returns (w', a', b', ma', va', mb', vb', ceu).
+    """
+    da = b.T @ g                                      # (r, n)
+    db = g @ a.T                                      # (m, r)
+    ma_new, va_new, delta_a = kernels.adam_update(ma, va, da, b1t, b2t,
+                                                  beta1=BETA1, beta2=BETA2)
+    mb_new, vb_new, delta_b = kernels.adam_update(mb, vb, db, b1t, b2t,
+                                                  beta1=BETA1, beta2=BETA2)
+    a_new = a - lr * delta_a
+    b_new = b - lr * delta_b
+    w_new = w + b_new @ a_new - b @ a
+    ceu = jnp.sum(jnp.abs(w_new - w))
+    return w_new, a_new, b_new, ma_new, va_new, mb_new, vb_new, ceu
+
+
+# ---------------------------------------------------------------------------
+# Conv (Tucker-2) steps — appendix Algorithm 3
+# ---------------------------------------------------------------------------
+
+def _mode1(g4, po):
+    """G x1 PO^T : (O,I,K,K) -> (rO,I,K,K)."""
+    return jnp.einsum("oikl,or->rikl", g4, po)
+
+
+def _mode2(g4, pi):
+    """G x2 PI^T : (*,I,K,K) -> (*,rI,K,K)."""
+    return jnp.einsum("xikl,is->xskl", g4, pi)
+
+
+def _unfold1(g4):
+    o = g4.shape[0]
+    return g4.reshape(o, -1)
+
+
+def _unfold2(g4):
+    i = g4.shape[1]
+    return jnp.transpose(g4, (1, 0, 2, 3)).reshape(i, -1)
+
+
+def coap_adam_conv_step(w, g, m, v, po, pi, b1t, b2t, lr, wd):
+    """Tucker-2 projected Adam for conv weights (O,I,K1,K2).
+
+    m, v: (rO, rI, K1, K2). Returns (w', m', v', ceu).
+    """
+    ro, ri = po.shape[1], pi.shape[1]
+    k1, k2 = g.shape[2], g.shape[3]
+    g_proj = _mode2(_mode1(g, po), pi)                 # (rO,rI,K,K)
+    m2, v2, g2 = (x.reshape(ro, ri * k1 * k2) for x in (m, v, g_proj))
+    m_new, v_new, delta = kernels.adam_update(m2, v2, g2, b1t, b2t,
+                                              beta1=BETA1, beta2=BETA2)
+    delta4 = delta.reshape(ro, ri, k1, k2)
+    dw = jnp.einsum("rskl,or,is->oikl", delta4, po, pi)
+    w_new = w - lr * (dw + wd * w)
+    ceu = jnp.sum(jnp.abs(w_new - w))
+    return (w_new, m_new.reshape(ro, ri, k1, k2),
+            v_new.reshape(ro, ri, k1, k2), ceu)
+
+
+def coap_adafactor_conv_step(w, g, m, r_, c_, po, pi, t, lr):
+    """Tucker-2 projected Adafactor for conv weights.
+
+    m: (rO, rI, K1, K2); r_: (rO, 1); c_: (1, rI*K1*K2).
+    Returns (w', m', r', c', ceu).
+    """
+    ro, ri = po.shape[1], pi.shape[1]
+    k1, k2 = g.shape[2], g.shape[3]
+    g_proj = _mode2(_mode1(g, po), pi).reshape(ro, ri * k1 * k2)
+    m2 = m.reshape(ro, ri * k1 * k2)
+    m_new, r_new, c_new, delta = kernels.adafactor_update(
+        m2, r_, c_, g_proj, t, beta1=BETA1)
+    delta4 = delta.reshape(ro, ri, k1, k2)
+    dw = jnp.einsum("rskl,or,is->oikl", delta4, po, pi)
+    w_new = w - lr * dw
+    ceu = jnp.sum(jnp.abs(w_new - w))
+    return w_new, m_new.reshape(ro, ri, k1, k2), r_new, c_new, ceu
+
+
+def coap_adam_convfull_step(w, g, m, v, po, pi, ps, b1t, b2t, lr, wd):
+    """'Full' Tucker variant for App. Fig 1: Tucker-2 plus a projection of
+    the combined spatial mode (K1*K2 -> rS). m, v: (rO, rI, rS)."""
+    ro, ri, rs = po.shape[1], pi.shape[1], ps.shape[1]
+    k1, k2 = g.shape[2], g.shape[3]
+    g_proj = _mode2(_mode1(g, po), pi).reshape(ro, ri, k1 * k2)
+    g_proj = jnp.einsum("xys,st->xyt", g_proj, ps)     # (rO,rI,rS)
+    m2, v2, g2 = (x.reshape(ro, ri * rs) for x in (m, v, g_proj))
+    m_new, v_new, delta = kernels.adam_update(m2, v2, g2, b1t, b2t,
+                                              beta1=BETA1, beta2=BETA2)
+    delta3 = delta.reshape(ro, ri, rs)
+    dk = jnp.einsum("xyt,st->xys", delta3, ps).reshape(ro, ri, k1, k2)
+    dw = jnp.einsum("rskl,or,is->oikl", dk, po, pi)
+    w_new = w - lr * (dw + wd * w)
+    ceu = jnp.sum(jnp.abs(w_new - w))
+    return (w_new, m_new.reshape(ro, ri, rs), v_new.reshape(ro, ri, rs), ceu)
+
+
+def conv_pupdate(p, g, m_proj, other_p, *, mode):
+    """Eqn-6 update for PO (mode=1) or PI (mode=2) of a conv layer.
+
+    m_proj is the Tucker-2 projected moment (rO, rI, K1, K2); we restore
+    it along the *other* mode, unfold along this mode, and run the matrix
+    update in the normalized (transposed) frame where P sits on the small
+    side.
+    """
+    if mode == 1:
+        m_part = _mode_restore2(m_proj, other_p)       # (rO, I, K, K)
+        gn = _unfold1(g).T                             # (IKK, O)
+        mn = _unfold1(m_part).T                        # (IKK, rO)
+    else:
+        m_part = _mode_restore1(m_proj, other_p)       # (O, rI, K, K)
+        gn = _unfold2(g).T                             # (OKK, I)
+        mn = _unfold2(m_part).T                        # (OKK, rI)
+    return linalg.pupdate_sgd(p, gn, mn, iters=PUPDATE_ITERS, lr=PUPDATE_LR,
+                              cosgrad_rows_fn=kernels.cosgrad_rows)
+
+
+def _mode_restore1(t4, po):
+    """(rO,*,K,K) x1 PO -> (O,*,K,K)."""
+    return jnp.einsum("rikl,or->oikl", t4, po)
+
+
+def _mode_restore2(t4, pi):
+    """(*,rI,K,K) x2 PI -> (*,I,K,K)."""
+    return jnp.einsum("xskl,is->xikl", t4, pi)
+
+
+def conv_recalib(p, g, *, mode):
+    """Eqn-7 recalibration on the mode-1/mode-2 unfolding of G."""
+    gn = (_unfold1(g) if mode == 1 else _unfold2(g)).T
+    return linalg.lowcost_recalib(gn, p, sweeps=SVD_SWEEPS)
+
+
+def conv_svd(g, *, rank, mode):
+    """GaLore-style full SVD on the unfolding (expensive conv baseline)."""
+    gn = (_unfold1(g) if mode == 1 else _unfold2(g)).T
+    p, _ = linalg.svd_topk(gn, rank, sweeps=SVD_SWEEPS)
+    return p

@@ -1,0 +1,343 @@
+"""Model / experiment shape census — the single source of truth.
+
+Every model architecture and every experiment (paper table / figure) is
+declared here. ``aot.py`` derives from these declarations the exact set of
+(graph-template, shape) instantiations to lower, and emits the same
+information into ``artifacts/manifest.json`` so the Rust coordinator never
+re-derives architecture.
+
+Paper mapping (see DESIGN.md §5):
+  lm_*        -> Table 5 (LLaMA-1B/7B substitutes) + end-to-end driver
+  vit_*       -> Fig 3/4, Table 7 (DeiT-Base on CIFAR-100 substitute)
+  cnn_*       -> Table 1 / Appendix Table 2 (LDM / DDPM U-Net substitutes)
+  sit_small   -> Table 2 (SiT-XL/2 substitute)
+  ctrl_small  -> Table 3 (ControlNet-SDXL substitute)
+  llava_small -> Table 6 (LLaVA-v1.5-7B fine-tune substitute)
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One trainable tensor in a model.
+
+    kind:   'matrix' (2-D, low-rank-projectable), 'conv' (4-D OIHW,
+            Tucker-2-projectable), or 'vector' (updated full-rank on the
+            Rust side with the refimpl optimizer).
+    init:   'normal' | 'zeros' | 'ones'
+    scale:  stddev for 'normal' init.
+    """
+
+    name: str
+    shape: Tuple[int, ...]
+    kind: str = "matrix"
+    init: str = "normal"
+    scale: float = 0.02
+
+    @property
+    def numel(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LmConfig:
+    name: str
+    d: int
+    layers: int
+    heads: int
+    vocab: int
+    seq: int
+    batch: int
+    family: str = "lm"
+
+    @property
+    def mlp(self) -> int:
+        return 4 * self.d
+
+
+@dataclass(frozen=True)
+class VitConfig:
+    """ViT classifier (DeiT substitute). Also the trunk for sit/llava."""
+
+    name: str
+    d: int
+    layers: int
+    heads: int
+    img: int
+    patch: int
+    chans: int
+    classes: int
+    batch: int
+    family: str = "vit"
+
+    @property
+    def tokens(self) -> int:
+        return (self.img // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.chans * self.patch * self.patch
+
+
+@dataclass(frozen=True)
+class CnnConfig:
+    """Small conv denoiser (LDM / DDPM U-Net substitute)."""
+
+    name: str
+    img: int
+    chans: int
+    widths: Tuple[int, ...]
+    kernel: int
+    batch: int
+    family: str = "cnn"
+    control: bool = False  # ControlNet-style conditioning branch
+
+
+@dataclass(frozen=True)
+class SitConfig:
+    """Transformer diffusion-ish model: patch tokens -> velocity field."""
+
+    name: str
+    d: int
+    layers: int
+    heads: int
+    img: int
+    patch: int
+    chans: int
+    batch: int
+    family: str = "sit"
+
+    @property
+    def tokens(self) -> int:
+        return (self.img // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.chans * self.patch * self.patch
+
+
+@dataclass(frozen=True)
+class LlavaConfig:
+    """Multimodal stub: frozen 'CLIP' features + projector + LM trunk."""
+
+    name: str
+    feat: int           # vision feature dim
+    d: int
+    layers: int
+    heads: int
+    vocab: int          # question token vocab
+    seq: int            # question length
+    answers: int        # answer classes
+    batch: int
+    family: str = "llava"
+
+
+MODELS: Dict[str, object] = {}
+
+
+def _reg(cfg) -> None:
+    MODELS[cfg.name] = cfg
+
+
+_reg(LmConfig("lm_tiny", d=128, layers=2, heads=2, vocab=512, seq=64, batch=8))
+_reg(LmConfig("lm_small", d=256, layers=4, heads=4, vocab=2048, seq=128, batch=8))
+_reg(LmConfig("lm_base", d=512, layers=8, heads=8, vocab=4096, seq=128, batch=8))
+_reg(LmConfig("lm_large", d=768, layers=12, heads=12, vocab=8192, seq=256, batch=4))
+_reg(VitConfig("vit_tiny", d=128, layers=2, heads=2, img=16, patch=4, chans=3,
+               classes=10, batch=32))
+_reg(VitConfig("vit_small", d=192, layers=4, heads=3, img=32, patch=4, chans=3,
+               classes=100, batch=32))
+_reg(CnnConfig("cnn_tiny", img=16, chans=3, widths=(16, 32, 16), kernel=3, batch=16))
+_reg(CnnConfig("cnn_small", img=32, chans=3, widths=(32, 64, 32), kernel=3, batch=16))
+_reg(CnnConfig("cnn_celeb", img=64, chans=3, widths=(32, 64, 64, 32), kernel=3, batch=8))
+_reg(SitConfig("sit_small", d=256, layers=4, heads=4, img=32, patch=4, chans=3, batch=16))
+_reg(CnnConfig("ctrl_small", img=32, chans=3, widths=(32, 64, 32), kernel=3,
+               batch=8, control=True))
+_reg(LlavaConfig("llava_small", feat=512, d=256, layers=4, heads=4, vocab=1024,
+                 seq=32, answers=16, batch=16))
+
+
+# ---------------------------------------------------------------------------
+# Param census per model (must match models/*.py param order exactly)
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(cfg: LmConfig) -> List[ParamSpec]:
+    s = []
+    s.append(ParamSpec("embed", (cfg.vocab, cfg.d)))
+    for i in range(cfg.layers):
+        p = f"blk{i}."
+        s.append(ParamSpec(p + "ln1", (cfg.d,), kind="vector", init="ones"))
+        s.append(ParamSpec(p + "wq", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wk", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wv", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wo", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "ln2", (cfg.d,), kind="vector", init="ones"))
+        s.append(ParamSpec(p + "w1", (cfg.d, cfg.mlp)))
+        s.append(ParamSpec(p + "w2", (cfg.mlp, cfg.d)))
+    s.append(ParamSpec("lnf", (cfg.d,), kind="vector", init="ones"))
+    s.append(ParamSpec("head", (cfg.d, cfg.vocab)))
+    return s
+
+
+def vit_param_specs(cfg: VitConfig) -> List[ParamSpec]:
+    s = []
+    s.append(ParamSpec("patch_embed", (cfg.patch_dim, cfg.d)))
+    s.append(ParamSpec("pos_embed", (cfg.tokens, cfg.d), kind="vector", scale=0.02,
+                       init="normal"))
+    for i in range(cfg.layers):
+        p = f"blk{i}."
+        s.append(ParamSpec(p + "ln1", (cfg.d,), kind="vector", init="ones"))
+        s.append(ParamSpec(p + "wq", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wk", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wv", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wo", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "ln2", (cfg.d,), kind="vector", init="ones"))
+        s.append(ParamSpec(p + "w1", (cfg.d, 4 * cfg.d)))
+        s.append(ParamSpec(p + "w2", (4 * cfg.d, cfg.d)))
+    s.append(ParamSpec("lnf", (cfg.d,), kind="vector", init="ones"))
+    s.append(ParamSpec("head", (cfg.d, cfg.classes)))
+    return s
+
+
+def cnn_param_specs(cfg: CnnConfig) -> List[ParamSpec]:
+    s = []
+    k = cfg.kernel
+    chain = (cfg.chans,) + cfg.widths
+    for i in range(len(chain) - 1):
+        s.append(ParamSpec(f"conv{i}.w", (chain[i + 1], chain[i], k, k), kind="conv",
+                           scale=0.1))
+        s.append(ParamSpec(f"conv{i}.b", (chain[i + 1],), kind="vector", init="zeros"))
+    s.append(ParamSpec("conv_out.w", (cfg.chans, chain[-1], k, k), kind="conv",
+                       scale=0.1))
+    s.append(ParamSpec("conv_out.b", (cfg.chans,), kind="vector", init="zeros"))
+    if cfg.control:
+        # control branch: takes the 1-channel control map to mid-width features
+        mid = cfg.widths[len(cfg.widths) // 2]
+        s.append(ParamSpec("ctrl0.w", (cfg.widths[0], 1, k, k), kind="conv", scale=0.1))
+        s.append(ParamSpec("ctrl0.b", (cfg.widths[0],), kind="vector", init="zeros"))
+        s.append(ParamSpec("ctrl1.w", (mid, cfg.widths[0], k, k), kind="conv",
+                           scale=0.1))
+        s.append(ParamSpec("ctrl1.b", (mid,), kind="vector", init="zeros"))
+    return s
+
+
+def sit_param_specs(cfg: SitConfig) -> List[ParamSpec]:
+    s = []
+    s.append(ParamSpec("patch_embed", (cfg.patch_dim, cfg.d)))
+    s.append(ParamSpec("pos_embed", (cfg.tokens, cfg.d), kind="vector"))
+    s.append(ParamSpec("time_embed", (cfg.d,), kind="vector"))
+    for i in range(cfg.layers):
+        p = f"blk{i}."
+        s.append(ParamSpec(p + "ln1", (cfg.d,), kind="vector", init="ones"))
+        s.append(ParamSpec(p + "wq", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wk", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wv", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wo", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "ln2", (cfg.d,), kind="vector", init="ones"))
+        s.append(ParamSpec(p + "w1", (cfg.d, 4 * cfg.d)))
+        s.append(ParamSpec(p + "w2", (4 * cfg.d, cfg.d)))
+    s.append(ParamSpec("lnf", (cfg.d,), kind="vector", init="ones"))
+    s.append(ParamSpec("head", (cfg.d, cfg.patch_dim)))
+    return s
+
+
+def llava_param_specs(cfg: LlavaConfig) -> List[ParamSpec]:
+    s = []
+    s.append(ParamSpec("projector", (cfg.feat, cfg.d)))
+    s.append(ParamSpec("embed", (cfg.vocab, cfg.d)))
+    for i in range(cfg.layers):
+        p = f"blk{i}."
+        s.append(ParamSpec(p + "ln1", (cfg.d,), kind="vector", init="ones"))
+        s.append(ParamSpec(p + "wq", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wk", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wv", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "wo", (cfg.d, cfg.d)))
+        s.append(ParamSpec(p + "ln2", (cfg.d,), kind="vector", init="ones"))
+        s.append(ParamSpec(p + "w1", (cfg.d, 4 * cfg.d)))
+        s.append(ParamSpec(p + "w2", (4 * cfg.d, cfg.d)))
+    s.append(ParamSpec("lnf", (cfg.d,), kind="vector", init="ones"))
+    s.append(ParamSpec("answer_head", (cfg.d, cfg.answers)))
+    return s
+
+
+def param_specs(cfg) -> List[ParamSpec]:
+    return {
+        "lm": lm_param_specs,
+        "vit": vit_param_specs,
+        "cnn": cnn_param_specs,
+        "sit": sit_param_specs,
+        "llava": llava_param_specs,
+    }[cfg.family](cfg)
+
+
+def param_count(cfg) -> int:
+    return sum(p.numel for p in param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Rank policy (paper's rank-ratio convention: r = min(m,n)/c)
+# ---------------------------------------------------------------------------
+
+def rank_for(shape: Tuple[int, ...], ratio: float) -> int:
+    mn = min(shape[0], shape[1])
+    return min(mn, max(4, int(mn / ratio)))
+
+
+def conv_ranks(shape: Tuple[int, ...], ratio: float) -> Tuple[int, int]:
+    """Tucker-2 ranks (r_O, r_I) for an OIHW conv weight, clamped to the
+    mode dimensions (a 1-input-channel control conv gets r_I = 1)."""
+    o, i = shape[0], shape[1]
+    return min(o, max(2, int(o / ratio))), min(i, max(2, int(i / ratio)))
+
+
+# ---------------------------------------------------------------------------
+# Experiments: which (model, rank-ratio) combinations need artifacts
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Experiment:
+    """One paper table/figure: which model and which rank ratios it sweeps."""
+
+    id: str
+    model: str
+    ratios: Tuple[float, ...] = (4.0,)
+    note: str = ""
+
+
+EXPERIMENTS: List[Experiment] = [
+    Experiment("table1_ldm", "cnn_tiny", (2.0,), "LDM pre-train substitute"),
+    Experiment("table2_sit", "sit_small", (2.0,), "SiT-XL/2 + REPA substitute"),
+    Experiment("table3_controlnet", "ctrl_small", (2.0, 4.0, 8.0),
+               "ControlNet-SDXL rank-ratio sweep"),
+    Experiment("table5_llama1b", "lm_small", (4.0,), "LLaMA-1B substitute"),
+    Experiment("table5_llama7b", "lm_base", (4.0,), "LLaMA-7B substitute"),
+    Experiment("table6_llava", "llava_small", (4.0,), "LLaVA fine-tune substitute"),
+    Experiment("table7_ablation", "vit_tiny", (4.0,), "Eqn6/Eqn7 component ablation"),
+    Experiment("fig3_ceu", "vit_tiny", (4.0,), "CEU trajectory comparison"),
+    Experiment("fig4_grid", "vit_tiny", (2.0, 4.0, 8.0), "lambda/r/T_u grid"),
+    Experiment("app_ddpm_cifar", "cnn_small", (1.5,), "DDPM CIFAR-10 substitute"),
+    Experiment("app_ddpm_celeba", "cnn_celeb", (2.0,), "DDPM CelebA-HQ substitute"),
+    Experiment("app_tucker", "cnn_tiny", (4.0,), "Tucker format comparison"),
+    Experiment("e2e_lm", "lm_base", (4.0,), "end-to-end training driver"),
+    Experiment("e2e_lm_large", "lm_large", (4.0,), "large config (opt-in)"),
+    Experiment("smoke", "lm_tiny", (4.0,), "integration tests"),
+]
+
+
+def normalized_matrix_shape(shape: Tuple[int, ...]) -> Tuple[int, int]:
+    """Projection-frame shape (m', n') with m' >= n' (GaLore side rule)."""
+    m, n = shape
+    return (m, n) if m >= n else (n, m)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Allow `pytest python/tests` from the repo root: tests import the
+# `compile` package that lives next to this file.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,144 @@
+"""L2 model graphs: shapes, gradient flow to every parameter, loss
+sanity, and the AOT registry/manifest contract."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.models import module_for
+from compile.shapes import EXPERIMENTS, MODELS, param_specs
+
+
+def init_params(cfg, rng):
+    out = []
+    for p in param_specs(cfg):
+        if p.init == "ones":
+            out.append(jnp.ones(p.shape, jnp.float32))
+        elif p.init == "zeros":
+            out.append(jnp.zeros(p.shape, jnp.float32))
+        else:
+            out.append(jnp.array(rng.normal(0, p.scale, p.shape), jnp.float32))
+    return out
+
+
+def make_data(cfg, rng):
+    mod = module_for(cfg)
+    data = []
+    for name, shape, dtype in mod.data_specs(cfg):
+        if dtype == jnp.int32:
+            hi = {"tokens": getattr(cfg, "vocab", 2),
+                  "targets": getattr(cfg, "vocab", 2),
+                  "labels": getattr(cfg, "classes", 2),
+                  "answers": getattr(cfg, "answers", 2)}.get(name, 2)
+            data.append(jnp.array(rng.integers(0, hi, shape), jnp.int32))
+        else:
+            x = rng.normal(0, 1, shape).astype(np.float32)
+            if name == "tvals":
+                x = rng.uniform(0, 1, shape).astype(np.float32)
+            data.append(jnp.array(x))
+    return data
+
+
+SMALL = ["lm_tiny", "vit_tiny", "cnn_tiny", "ctrl_small", "sit_small", "llava_small"]
+
+
+@pytest.mark.parametrize("name", SMALL)
+def test_loss_finite_and_grads_flow_everywhere(name):
+    cfg = MODELS[name]
+    mod = module_for(cfg)
+    rng = np.random.default_rng(0)
+    params = init_params(cfg, rng)
+    data = make_data(cfg, rng)
+    loss, grads = jax.value_and_grad(
+        lambda ps: mod.loss_fn(ps, *data, cfg=cfg))(tuple(params))
+    assert np.isfinite(float(loss)), name
+    specs = param_specs(cfg)
+    assert len(grads) == len(specs)
+    for g, s in zip(grads, specs):
+        assert g.shape == s.shape, s.name
+        assert bool(jnp.all(jnp.isfinite(g))), s.name
+        # every trainable tensor receives signal (embeddings may have
+        # zero rows but never an all-zero gradient)
+        assert float(jnp.abs(g).sum()) > 0, f"no gradient into {s.name}"
+
+
+def test_lm_loss_at_init_is_log_vocab():
+    cfg = MODELS["lm_tiny"]
+    mod = module_for(cfg)
+    rng = np.random.default_rng(1)
+    params = init_params(cfg, rng)
+    data = make_data(cfg, rng)
+    loss = mod.loss_fn(tuple(params), *data, cfg=cfg)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+
+def test_vit_eval_counts_correct():
+    cfg = MODELS["vit_tiny"]
+    mod = module_for(cfg)
+    rng = np.random.default_rng(2)
+    params = init_params(cfg, rng)
+    data = make_data(cfg, rng)
+    loss, ncorrect = mod.eval_fn(tuple(params), *data, cfg=cfg)
+    assert 0 <= float(ncorrect) <= cfg.batch
+    assert np.isfinite(float(loss))
+
+
+def test_control_branch_changes_prediction():
+    cfg = MODELS["ctrl_small"]
+    mod = module_for(cfg)
+    rng = np.random.default_rng(3)
+    params = init_params(cfg, rng)
+    noisy, clean, control = make_data(cfg, rng)
+    _, pred1 = mod.eval_fn(tuple(params), noisy, clean, control, cfg=cfg)
+    _, pred2 = mod.eval_fn(tuple(params), noisy, clean, control * 0.0, cfg=cfg)
+    assert float(jnp.abs(pred1 - pred2).max()) > 0, \
+        "control input does not reach the prediction"
+
+
+def test_patchify_roundtrip():
+    from compile.models import layers
+    rng = np.random.default_rng(4)
+    x = jnp.array(rng.normal(size=(2, 3, 16, 16)), jnp.float32)
+    t = layers.patchify(x, 4)
+    assert t.shape == (2, 16, 48)
+    back = layers.unpatchify(t, 4, 3, 16)
+    np.testing.assert_allclose(back, x)
+
+
+# ---------------------------------------------------------------------------
+# AOT registry / manifest contract
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_every_experiment_model():
+    reg = aot.build_registry()
+    for e in EXPERIMENTS:
+        assert f"train_step__{e.model}" in reg, e.id
+        assert f"eval_step__{e.model}" in reg, e.id
+
+
+def test_registry_names_follow_convention():
+    reg = aot.build_registry()
+    for name, gd in reg.items():
+        assert name == gd.name
+        assert "__" in name
+        entry = gd.manifest_entry()
+        assert entry["file"] == name + ".hlo.txt"
+        assert len(entry["inputs"]) >= 1
+        assert len(entry["outputs"]) >= 1
+
+
+def test_matrix_graph_shape_contract():
+    reg = aot.build_registry()
+    gd = reg.get("coap_adam_step__2048x256_r64")
+    assert gd is not None
+    e = gd.manifest_entry()
+    shapes = [tuple(i["shape"]) for i in e["inputs"]]
+    # w, g, m, v, p, b1t, b2t, lr, wd
+    assert shapes[0] == (2048, 256)
+    assert shapes[2] == (2048, 64)   # moments on the max side
+    assert shapes[4] == (256, 64)    # projection on the min side
+    assert shapes[5] == ()
+    outs = [tuple(o["shape"]) for o in e["outputs"]]
+    assert outs[0] == (2048, 256) and outs[3] == ()

@@ -1,0 +1,152 @@
+"""L2 optimizer step graphs: semantics vs hand-rolled numpy, shape
+contracts, and the projection side rule."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import functools
+
+from compile import optim
+
+
+def arr(rng, *shape, scale=1.0):
+    return jnp.array(rng.normal(0, scale, shape), jnp.float32)
+
+
+def np_adam(w, g, m, v, t, lr, wd=0.0):
+    m = 0.9 * m + 0.1 * g
+    v = 0.999 * v + 0.001 * g * g
+    mh = m / (1 - 0.9**t)
+    vh = v / (1 - 0.999**t)
+    w2 = w - lr * (mh / (np.sqrt(vh) + 1e-8) + wd * w)
+    return w2, m, v
+
+
+def test_adam_step_matches_numpy():
+    rng = np.random.default_rng(0)
+    w, g = arr(rng, 6, 4, scale=0.1), arr(rng, 6, 4, scale=0.01)
+    m, v = arr(rng, 6, 4, scale=0.01), jnp.abs(arr(rng, 6, 4, scale=0.001))
+    t = 7
+    out = jax.jit(optim.adam_step)(w, g, m, v, jnp.float32(0.9**t),
+                                   jnp.float32(0.999**t), jnp.float32(0.01),
+                                   jnp.float32(0.1))
+    w2, m2, v2 = np_adam(np.array(w), np.array(g), np.array(m), np.array(v),
+                         t, 0.01, 0.1)
+    np.testing.assert_allclose(out[0], w2, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(out[1], m2, rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(out[2], v2, rtol=1e-5, atol=1e-8)
+    # CEU = ||w' - w||_1
+    np.testing.assert_allclose(
+        float(out[3]), np.abs(w2 - np.array(w)).sum(), rtol=1e-4)
+
+
+def test_coap_adam_step_projected_semantics():
+    """The projected step must equal: project G, Adam in low-rank space,
+    restore through P^T."""
+    rng = np.random.default_rng(1)
+    m_, n_, r_ = 12, 8, 4
+    w, g = arr(rng, m_, n_, scale=0.1), arr(rng, m_, n_, scale=0.05)
+    mom, vom = np.zeros((m_, r_), np.float32), np.zeros((m_, r_), np.float32)
+    q, _ = np.linalg.qr(rng.normal(size=(n_, r_)))
+    p = q.astype(np.float32)
+    t = 1
+    fn = jax.jit(functools.partial(optim.coap_adam_step, transpose=False))
+    out = fn(w, g, jnp.array(mom), jnp.array(vom), jnp.array(p),
+             jnp.float32(0.9), jnp.float32(0.999), jnp.float32(0.02),
+             jnp.float32(0.0))
+    gp = np.array(g) @ p
+    _, m2, v2 = np_adam(np.zeros_like(gp), gp, mom, vom, 1, 0.0)
+    mh = m2 / (1 - 0.9)
+    vh = v2 / (1 - 0.999)
+    delta = mh / (np.sqrt(vh) + 1e-8)
+    w2 = np.array(w) - 0.02 * (delta @ p.T)
+    np.testing.assert_allclose(out[0], w2, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(out[1], m2, rtol=1e-4, atol=1e-7)
+
+
+def test_transpose_side_rule():
+    """For m < n the graph must project the row space (G^T's columns):
+    running the transposed graph on G == running the plain graph on G^T."""
+    rng = np.random.default_rng(2)
+    m_, n_, r_ = 6, 10, 3   # m < n -> transpose frame
+    w, g = arr(rng, m_, n_, scale=0.1), arr(rng, m_, n_, scale=0.05)
+    mom = jnp.zeros((n_, r_))
+    vom = jnp.zeros((n_, r_))
+    q, _ = np.linalg.qr(rng.normal(size=(m_, r_)))
+    p = jnp.array(q, jnp.float32)
+    tr_fn = jax.jit(functools.partial(optim.coap_adam_step, transpose=True))
+    plain_fn = jax.jit(functools.partial(optim.coap_adam_step, transpose=False))
+    a = tr_fn(w, g, mom, vom, p, jnp.float32(0.9), jnp.float32(0.999),
+              jnp.float32(0.01), jnp.float32(0.0))
+    b = plain_fn(w.T, g.T, mom, vom, p, jnp.float32(0.9), jnp.float32(0.999),
+                 jnp.float32(0.01), jnp.float32(0.0))
+    np.testing.assert_allclose(np.array(a[0]), np.array(b[0]).T, rtol=1e-5,
+                               atol=1e-7)
+    np.testing.assert_allclose(a[1], b[1], rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(a[3]), float(b[3]), rtol=1e-4)
+
+
+def test_lora_step_updates_effective_weight():
+    rng = np.random.default_rng(3)
+    m_, n_, r_ = 8, 6, 2
+    w = arr(rng, m_, n_, scale=0.1)
+    a = arr(rng, r_, n_, scale=0.02)
+    b = jnp.zeros((m_, r_))
+    g = arr(rng, m_, n_, scale=0.05)
+    zeros_a, zeros_b = jnp.zeros((r_, n_)), jnp.zeros((m_, r_))
+    out = jax.jit(optim.lora_adam_step)(
+        w, a, b, g, zeros_a, zeros_a, zeros_b, zeros_b,
+        jnp.float32(0.9), jnp.float32(0.999), jnp.float32(0.01))
+    w2, a2, b2 = np.array(out[0]), np.array(out[1]), np.array(out[2])
+    # W' - W == B'A' - BA  (the adapter delta)
+    np.testing.assert_allclose(
+        w2 - np.array(w), b2 @ a2 - np.array(b) @ np.array(a),
+        rtol=1e-4, atol=1e-6)
+    # with B=0 init, dB = G A^T is nonzero -> B moves
+    assert np.abs(b2).max() > 0
+
+
+def test_conv_tucker2_step_shapes_and_direction():
+    rng = np.random.default_rng(4)
+    o, i, k = 8, 6, 3
+    ro, ri = 4, 3
+    w = arr(rng, o, i, k, k, scale=0.1)
+    g = arr(rng, o, i, k, k, scale=0.05)
+    mom = jnp.zeros((ro, ri, k, k))
+    po = jnp.array(np.linalg.qr(rng.normal(size=(o, ro)))[0], jnp.float32)
+    pi = jnp.array(np.linalg.qr(rng.normal(size=(i, ri)))[0], jnp.float32)
+    out = jax.jit(optim.coap_adam_conv_step)(
+        w, g, mom, mom, po, pi, jnp.float32(0.9), jnp.float32(0.999),
+        jnp.float32(0.01), jnp.float32(0.0))
+    assert out[0].shape == (o, i, k, k)
+    assert out[1].shape == (ro, ri, k, k)
+    # The update moves against the projected-restored gradient:
+    dw = np.array(out[0]) - np.array(w)
+    gproj = np.einsum("oikl,or,is->rskl", np.array(g), po, pi)
+    grest = np.einsum("rskl,or,is->oikl", gproj, po, pi)
+    # cos(dw, -grest) positive: Adam's per-coordinate normalization bends
+    # the direction but must stay in the descent half-space.
+    cos = -(dw * grest).sum() / (np.linalg.norm(dw) * np.linalg.norm(grest))
+    assert cos > 0.5, cos
+    assert float(out[3]) > 0  # ceu
+
+
+def test_conv_recalib_orthonormal():
+    rng = np.random.default_rng(5)
+    o, i, k, ro, ri = 8, 6, 3, 4, 3
+    g = arr(rng, o, i, k, k)
+    po = jnp.array(np.linalg.qr(rng.normal(size=(o, ro)))[0], jnp.float32)
+    p2 = jax.jit(functools.partial(optim.conv_recalib, mode=1))(po, g)
+    assert p2.shape == (o, ro)
+    np.testing.assert_allclose(np.array(p2.T @ p2), np.eye(ro), atol=2e-2)
+
+
+def test_galore_svd_captures_energy():
+    rng = np.random.default_rng(6)
+    g = arr(rng, 20, 12, scale=1.0)
+    p = jax.jit(functools.partial(optim.galore_svd, rank=4, transpose=False))(g)
+    assert p.shape == (12, 4)
+    q, _ = np.linalg.qr(rng.normal(size=(12, 4)))
+    cap = np.linalg.norm(np.array(g) @ np.array(p))
+    cap_rand = np.linalg.norm(np.array(g) @ q)
+    assert cap > cap_rand

@@ -1,0 +1,68 @@
+//! Per-layer optimizer-step latency: full-rank Adam/Adafactor vs the
+//! projected COAP step, across weight shapes — the microscopic source
+//! of the tables' "training time" column.
+
+use coap::config::default_artifacts_dir;
+use coap::rng::Rng;
+use coap::runtime::{names, Runtime};
+use coap::tensor::Tensor;
+use coap::util::bench::{print_table, Bench};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open(&default_artifacts_dir())?;
+    let mut rng = Rng::new(1);
+    let bench = Bench::quick();
+    let mut rows = Vec::new();
+    let scalars = [
+        Tensor::scalar_f32(0.9),
+        Tensor::scalar_f32(0.999),
+        Tensor::scalar_f32(1e-3),
+        Tensor::scalar_f32(0.0),
+    ];
+    for (m, n, r) in [(256usize, 256usize, 64usize), (2048, 256, 64), (4096, 512, 128)] {
+        let mb = m.max(n);
+        let nb = m.min(n);
+        let w = Tensor::from_f32(&[m, n], rng.normal_vec(m * n, 0.02));
+        let g = Tensor::from_f32(&[m, n], rng.normal_vec(m * n, 0.02));
+        let mom_full = Tensor::zeros(&[m, n]);
+        let mom_proj = Tensor::zeros(&[mb, r]);
+        let p = Tensor::from_f32(&[nb, r], rng.normal_vec(nb * r, 0.1));
+        let rfac = Tensor::zeros(&[m, 1]);
+        let cfac = Tensor::zeros(&[1, n]);
+        let t_s = Tensor::scalar_f32(10.0);
+
+        let adam = names::fullrank("adam_step", m, n);
+        let af = names::fullrank("adafactor_step", m, n);
+        let coap = names::matrix_proj("coap_adam_step", m, n, r);
+        if rt.manifest.graphs.get(&coap).is_none() {
+            continue;
+        }
+        let s_adam = bench.run(&adam, || {
+            rt.exec(&adam, &[&w, &g, &mom_full, &mom_full, &scalars[0], &scalars[1], &scalars[2], &scalars[3]])
+                .unwrap();
+        });
+        let s_af = bench.run(&af, || {
+            rt.exec(&af, &[&w, &g, &mom_full, &rfac, &cfac, &t_s, &scalars[2]]).unwrap();
+        });
+        let s_coap = bench.run(&coap, || {
+            rt.exec(
+                &coap,
+                &[&w, &g, &mom_proj, &mom_proj, &p, &scalars[0], &scalars[1], &scalars[2], &scalars[3]],
+            )
+            .unwrap();
+        });
+        rows.push(vec![
+            format!("{m}x{n} r={r}"),
+            format!("{:.2}", s_adam.mean_ms()),
+            format!("{:.2}", s_af.mean_ms()),
+            format!("{:.2}", s_coap.mean_ms()),
+            format!("{:.2}x", s_coap.mean_ms() / s_adam.mean_ms()),
+        ]);
+    }
+    print_table(
+        "Optimizer step latency per layer",
+        &["shape", "Adam (ms)", "Adafactor (ms)", "COAP proj step (ms)", "COAP/Adam"],
+        &rows,
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! §3.3 claim: COAP's occasional low-cost SVD (Eqn 7) is ~20x cheaper
+//! than GaLore's full SVD, and the Eqn-6 SGD update is cheaper still.
+//! Benchmarks the three projection-refresh executables across the real
+//! weight shapes of the LM models.
+
+use coap::config::default_artifacts_dir;
+use coap::rng::Rng;
+use coap::runtime::{names, Runtime};
+use coap::tensor::Tensor;
+use coap::util::bench::{print_table, Bench};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open(&default_artifacts_dir())?;
+    let mut rng = Rng::new(0);
+    let bench = Bench::quick();
+    let mut rows = Vec::new();
+
+    // (m, n, r) triples drawn from the lm_small / lm_base shape census.
+    let shapes = [
+        (256usize, 256usize, 64usize),
+        (1024, 256, 64),
+        (2048, 256, 64),
+        (512, 512, 128),
+        (2048, 512, 128),
+    ];
+    for (m, n, r) in shapes {
+        let nb = m.min(n);
+        let mb = m.max(n);
+        let g = Tensor::from_f32(&[m, n], rng.normal_vec(m * n, 0.02));
+        let p = Tensor::from_f32(&[nb, r], rng.normal_vec(nb * r, 0.1));
+        let mom = Tensor::from_f32(&[mb, r], rng.normal_vec(mb * r, 0.01));
+
+        let svd_name = names::matrix_proj("galore_svd", m, n, r);
+        let rec_name = names::matrix_proj("recalib", m, n, r);
+        let pup_name = names::matrix_proj("pupdate", m, n, r);
+        if rt.manifest.graphs.get(&svd_name).is_none() {
+            continue;
+        }
+        let s_svd = bench.run(&svd_name, || {
+            rt.exec(&svd_name, &[&g]).unwrap();
+        });
+        let s_rec = bench.run(&rec_name, || {
+            rt.exec(&rec_name, &[&p, &g]).unwrap();
+        });
+        let s_pup = bench.run(&pup_name, || {
+            rt.exec(&pup_name, &[&p, &g, &mom]).unwrap();
+        });
+        rows.push(vec![
+            format!("{m}x{n} r={r}"),
+            format!("{:.2}", s_svd.mean_ms()),
+            format!("{:.2}", s_rec.mean_ms()),
+            format!("{:.2}", s_pup.mean_ms()),
+            format!("{:.1}x", s_svd.mean_ms() / s_rec.mean_ms()),
+            format!("{:.1}x", s_svd.mean_ms() / s_pup.mean_ms()),
+        ]);
+    }
+    print_table(
+        "Projection refresh cost (paper §3.3: low-cost SVD ~20x cheaper than full SVD)",
+        &[
+            "shape", "GaLore SVD (ms)", "Eqn7 recalib (ms)", "Eqn6 update (ms)",
+            "SVD/recalib", "SVD/Eqn6",
+        ],
+        &rows,
+    );
+    Ok(())
+}

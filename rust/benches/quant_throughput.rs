@@ -1,0 +1,43 @@
+//! 8-bit state store throughput: dynamic block-wise quantize/dequantize
+//! bandwidth plus bf16 encode/decode — the per-step cost the 8-bit rows
+//! of Tables 3/5/6 pay to cut optimizer memory.
+
+use coap::rng::Rng;
+use coap::tensor::{bf16, quant};
+use coap::util::bench::{print_table, Bench};
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let bench = Bench::default();
+    let mut rows = Vec::new();
+    for n in [1usize << 16, 1 << 20, 1 << 22] {
+        let src: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
+        let mb = (n * 4) as f64 / 1048576.0;
+
+        let s_q = bench.run(&format!("quantize {n}"), || {
+            std::hint::black_box(quant::quantize(&src));
+        });
+        let q = quant::quantize(&src);
+        let mut dst = vec![0f32; n];
+        let s_dq = bench.run(&format!("dequantize {n}"), || {
+            quant::dequantize(&q, &mut dst);
+            std::hint::black_box(&dst);
+        });
+        let mut h = Vec::new();
+        let s_bf = bench.run(&format!("bf16 encode {n}"), || {
+            bf16::encode(&src, &mut h);
+            std::hint::black_box(&h);
+        });
+        rows.push(vec![
+            format!("{:.1} MB", mb),
+            format!("{:.0} MB/s", mb / s_q.mean.as_secs_f64()),
+            format!("{:.0} MB/s", mb / s_dq.mean.as_secs_f64()),
+            format!("{:.0} MB/s", mb / s_bf.mean.as_secs_f64()),
+        ]);
+    }
+    print_table(
+        "State-precision store throughput",
+        &["buffer", "int8 quantize", "int8 dequantize", "bf16 encode"],
+        &rows,
+    );
+}

@@ -1,0 +1,26 @@
+//! Table 1 bench — LDM pre-training substitute (conv denoiser):
+//! AdamW / GaLore / COAP and the Adafactor branch at rank ratio 2.
+//! Short runs by default; COAP_BENCH_STEPS=N lengthens them.
+
+use coap::benchlib::{self, print_report_table, run_spec};
+use coap::config::default_artifacts_dir;
+use coap::runtime::Runtime;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::open(&default_artifacts_dir())?);
+    let steps = benchlib::bench_steps(16);
+    let specs = benchlib::table1_specs(steps);
+    let mut reports = Vec::new();
+    for s in &specs {
+        eprintln!("-- {}", s.label);
+        reports.push(run_spec(&rt, s)?);
+    }
+    print_report_table(
+        &format!("Table 1 — LDM substitute (cnn_tiny, {steps} steps)"),
+        "cnn_tiny",
+        false,
+        &reports,
+    );
+    Ok(())
+}

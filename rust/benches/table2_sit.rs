@@ -1,0 +1,25 @@
+//! Table 2 bench — SiT-XL/2 + REPA substitute: AdamW branch
+//! (GaLore/LoRA/ReLoRA/COAP) and Adafactor branch (GaLore/Flora/COAP).
+
+use coap::benchlib::{self, print_report_table, run_spec};
+use coap::config::default_artifacts_dir;
+use coap::runtime::Runtime;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::open(&default_artifacts_dir())?);
+    let steps = benchlib::bench_steps(16);
+    let specs = benchlib::table2_specs(steps);
+    let mut reports = Vec::new();
+    for s in &specs {
+        eprintln!("-- {}", s.label);
+        reports.push(run_spec(&rt, s)?);
+    }
+    print_report_table(
+        &format!("Table 2 — SiT substitute (sit_small, {steps} steps)"),
+        "sit_small",
+        false,
+        &reports,
+    );
+    Ok(())
+}

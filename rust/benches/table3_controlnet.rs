@@ -1,0 +1,26 @@
+//! Table 3 bench — ControlNet-SDXL substitute: rank-ratio sweep {2,4,8}
+//! with 8-bit variants (quality checkpoints live in the longer
+//! examples/controlnet_sweep run; this bench reports memory + time).
+
+use coap::benchlib::{self, print_report_table, run_spec};
+use coap::config::default_artifacts_dir;
+use coap::runtime::Runtime;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::open(&default_artifacts_dir())?);
+    let steps = benchlib::bench_steps(8);
+    let specs = benchlib::table3_specs(steps, &[2.0, 4.0, 8.0]);
+    let mut reports = Vec::new();
+    for s in &specs {
+        eprintln!("-- {}", s.label);
+        reports.push(run_spec(&rt, s)?);
+    }
+    print_report_table(
+        &format!("Table 3 — ControlNet substitute (ctrl_small, {steps} steps)"),
+        "ctrl_small",
+        true,
+        &reports,
+    );
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! Table 5 bench — LLaMA-1B substitute (lm_small): AdamW / GaLore /
+//! LoRA / ReLoRA / COAP. The 8-bit "7B" branch runs with --large via
+//! examples/train_lm --table5 --large (lm_base is slow on 1 core).
+
+use coap::benchlib::{self, print_report_table, run_spec};
+use coap::config::default_artifacts_dir;
+use coap::runtime::Runtime;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::open(&default_artifacts_dir())?);
+    let steps = benchlib::bench_steps(16);
+    let specs = benchlib::table5_specs(steps, false);
+    let mut reports = Vec::new();
+    for s in &specs {
+        eprintln!("-- {}", s.label);
+        reports.push(run_spec(&rt, s)?);
+    }
+    print_report_table(
+        &format!("Table 5 — LLaMA-1B substitute (lm_small, {steps} steps)"),
+        "lm_small",
+        false,
+        &reports,
+    );
+    Ok(())
+}

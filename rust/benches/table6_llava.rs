@@ -1,0 +1,26 @@
+//! Table 6 bench — LLaVA-v1.5-7B fine-tuning substitute (llava_small,
+//! pretrained-init regime): DeepSpeed-offload is N/A on this substrate;
+//! AdamW plays the full-rank baseline role.
+
+use coap::benchlib::{self, print_report_table, run_spec};
+use coap::config::default_artifacts_dir;
+use coap::runtime::Runtime;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(Runtime::open(&default_artifacts_dir())?);
+    let steps = benchlib::bench_steps(16);
+    let specs = benchlib::table6_specs(steps);
+    let mut reports = Vec::new();
+    for s in &specs {
+        eprintln!("-- {}", s.label);
+        reports.push(run_spec(&rt, s)?);
+    }
+    print_report_table(
+        &format!("Table 6 — LLaVA fine-tune substitute (llava_small, {steps} steps)"),
+        "llava_small",
+        false,
+        &reports,
+    );
+    Ok(())
+}

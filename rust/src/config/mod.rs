@@ -1,0 +1,320 @@
+//! Training configuration: defaults -> optional JSON config file ->
+//! CLI overrides, in that precedence order (Megatron-style launcher UX).
+
+use crate::tensor::Precision;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Which optimizer family drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptKind {
+    /// Full-rank AdamW (paper baseline).
+    AdamW,
+    /// Full-rank Adafactor-with-momentum (paper baseline).
+    Adafactor,
+    /// COAP on Adam (Algorithm 1).
+    Coap,
+    /// COAP on Adafactor (appendix Algorithm 2).
+    CoapAdafactor,
+    /// GaLore: periodic full-SVD projection refresh.
+    Galore,
+    /// Flora: fresh random projection every refresh interval.
+    Flora,
+    /// Optimizer-level LoRA (adapters from full gradient).
+    Lora,
+    /// ReLoRA: LoRA + periodic merge-and-reset.
+    Relora,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Result<OptKind> {
+        Ok(match s {
+            "adamw" | "adam" => OptKind::AdamW,
+            "adafactor" => OptKind::Adafactor,
+            "coap" => OptKind::Coap,
+            "coap-adafactor" | "coap_adafactor" => OptKind::CoapAdafactor,
+            "galore" => OptKind::Galore,
+            "flora" => OptKind::Flora,
+            "lora" => OptKind::Lora,
+            "relora" => OptKind::Relora,
+            _ => anyhow::bail!(
+                "unknown optimizer '{s}' \
+                 (adamw|adafactor|coap|coap-adafactor|galore|flora|lora|relora)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OptKind::AdamW => "adamw",
+            OptKind::Adafactor => "adafactor",
+            OptKind::Coap => "coap",
+            OptKind::CoapAdafactor => "coap-adafactor",
+            OptKind::Galore => "galore",
+            OptKind::Flora => "flora",
+            OptKind::Lora => "lora",
+            OptKind::Relora => "relora",
+        }
+    }
+
+    pub fn is_low_rank(&self) -> bool {
+        !matches!(self, OptKind::AdamW | OptKind::Adafactor)
+    }
+}
+
+/// COAP component toggles for the Table-7 ablation.
+#[derive(Debug, Clone, Copy)]
+pub struct CoapAblation {
+    /// Use Eqn-7 occasional low-cost SVD recalibration.
+    pub use_recalib: bool,
+    /// Use the Eqn-6 SGD update at all (if false, P changes only at
+    /// recalibration boundaries).
+    pub use_pupdate: bool,
+    /// Include the MSE reconstruction term / CosSim direction term.
+    /// (Baked into the lowered graph; toggling here selects among
+    /// pre-lowered variants — the default artifacts carry both terms, so
+    /// ablations that disable one term fall back to skipping pupdate and
+    /// are reported as such. See benchlib::table7.)
+    pub mse_term: bool,
+    pub cos_term: bool,
+}
+
+impl Default for CoapAblation {
+    fn default() -> Self {
+        CoapAblation { use_recalib: true, use_pupdate: true, mse_term: true, cos_term: true }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub optimizer: OptKind,
+    /// Paper's rank ratio c: r = min(m, n) / c for each matrix.
+    pub rank_ratio: f64,
+    /// Eqn-6 SGD update interval (steps).
+    pub t_update: usize,
+    /// Recalibration multiplier: Eqn-7 every lambda * t_update steps.
+    pub lambda: usize,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub steps: usize,
+    pub seed: u64,
+    /// Storage precision for optimizer state between steps.
+    pub state_precision: Precision,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub track_ceu: bool,
+    pub threads: usize,
+    pub artifacts_dir: String,
+    pub ablation: CoapAblation,
+    /// ReLoRA merge interval (steps).
+    pub relora_merge_every: usize,
+    /// Pretrained-init scale multiplier (fine-tuning regime emulation).
+    pub finetune: bool,
+    /// GaLore SVD refresh interval; 0 = t_update * lambda (same cadence
+    /// as COAP's recalibration — generous to GaLore).
+    pub galore_interval: usize,
+    /// Flora resample interval; 0 = t_update.
+    pub flora_interval: usize,
+    /// Conv projection format (App. Fig 1): tucker1 | tucker2 | full.
+    pub conv_format: ConvFormat,
+    /// Moment base for low-rank policies (GaLore/Flora under AdamW vs
+    /// Adafactor). `coap-adafactor` forces Adafactor regardless.
+    pub lowrank_base: MomentBase,
+}
+
+/// Which moment machinery a low-rank policy wraps (the paper's AdamW vs
+/// Adafactor branches of Tables 1-3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MomentBase {
+    Adam,
+    Adafactor,
+}
+
+impl MomentBase {
+    pub fn parse(s: &str) -> Result<MomentBase> {
+        Ok(match s {
+            "adam" | "adamw" => MomentBase::Adam,
+            "adafactor" => MomentBase::Adafactor,
+            _ => anyhow::bail!("unknown base '{s}' (adam|adafactor)"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvFormat {
+    Tucker1,
+    Tucker2,
+    Full,
+}
+
+impl ConvFormat {
+    pub fn parse(s: &str) -> Result<ConvFormat> {
+        Ok(match s {
+            "tucker1" => ConvFormat::Tucker1,
+            "tucker2" => ConvFormat::Tucker2,
+            "full" => ConvFormat::Full,
+            _ => anyhow::bail!("unknown conv format '{s}' (tucker1|tucker2|full)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ConvFormat::Tucker1 => "tucker1",
+            ConvFormat::Tucker2 => "tucker2",
+            ConvFormat::Full => "full",
+        }
+    }
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "lm_tiny".into(),
+            optimizer: OptKind::Coap,
+            rank_ratio: 4.0,
+            t_update: 16,
+            lambda: 10,
+            lr: 1e-3,
+            weight_decay: 0.0,
+            steps: 100,
+            seed: 42,
+            state_precision: Precision::F32,
+            eval_every: 50,
+            eval_batches: 4,
+            log_every: 10,
+            track_ceu: false,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            artifacts_dir: default_artifacts_dir(),
+            ablation: CoapAblation::default(),
+            relora_merge_every: 200,
+            finetune: false,
+            galore_interval: 0,
+            flora_interval: 0,
+            conv_format: ConvFormat::Tucker2,
+            lowrank_base: MomentBase::Adam,
+        }
+    }
+}
+
+/// artifacts/ next to the workspace root (works from target/... binaries).
+pub fn default_artifacts_dir() -> String {
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        if std::path::Path::new(cand).join("manifest.json").exists() {
+            return cand.to_string();
+        }
+    }
+    // CARGO_MANIFEST_DIR is compiled in; useful for `cargo test`.
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+impl TrainConfig {
+    /// Apply a JSON config object (flat keys matching CLI flags).
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj().context("config file must be a JSON object")?;
+        for (k, v) in obj {
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => format!("{n}"),
+                Json::Bool(b) => format!("{b}"),
+                _ => anyhow::bail!("config key '{k}' must be scalar"),
+            };
+            self.set(k, &s)?;
+        }
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        match key {
+            "model" => self.model = val.into(),
+            "optimizer" | "opt" => self.optimizer = OptKind::parse(val)?,
+            "rank-ratio" | "rank_ratio" => self.rank_ratio = val.parse()?,
+            "t-update" | "t_update" | "tu" => self.t_update = val.parse()?,
+            "lambda" => self.lambda = val.parse()?,
+            "lr" => self.lr = val.parse()?,
+            "weight-decay" | "weight_decay" | "wd" => self.weight_decay = val.parse()?,
+            "steps" => self.steps = val.parse()?,
+            "seed" => self.seed = val.parse()?,
+            "precision" | "state-precision" => {
+                self.state_precision = Precision::parse(val)
+            }
+            "eval-every" | "eval_every" => self.eval_every = val.parse()?,
+            "eval-batches" | "eval_batches" => self.eval_batches = val.parse()?,
+            "log-every" | "log_every" => self.log_every = val.parse()?,
+            "track-ceu" | "track_ceu" => self.track_ceu = val.parse()?,
+            "threads" => self.threads = val.parse()?,
+            "artifacts" | "artifacts-dir" => self.artifacts_dir = val.into(),
+            "no-recalib" => self.ablation.use_recalib = !val.parse::<bool>()?,
+            "no-pupdate" => self.ablation.use_pupdate = !val.parse::<bool>()?,
+            "relora-merge-every" => self.relora_merge_every = val.parse()?,
+            "finetune" => self.finetune = val.parse()?,
+            "galore-interval" | "galore_interval" => self.galore_interval = val.parse()?,
+            "flora-interval" | "flora_interval" => self.flora_interval = val.parse()?,
+            "conv-format" | "conv_format" => self.conv_format = ConvFormat::parse(val)?,
+            "base" | "lowrank-base" => self.lowrank_base = MomentBase::parse(val)?,
+            _ => anyhow::bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Defaults -> (optional) --config file -> CLI flags.
+    pub fn from_args(args: &Args) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::default();
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+            cfg.apply_json(&j)?;
+        }
+        for key in args.seen_keys() {
+            if key == "config" {
+                continue;
+            }
+            if let Some(val) = args.get(key) {
+                // Unknown CLI keys may belong to the subcommand; skip them.
+                let _ = cfg.set(key, val);
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_overrides() {
+        let args = Args::parse(
+            ["--model", "lm_small", "--optimizer", "galore", "--lr", "0.01",
+             "--precision", "int8", "--t-update", "8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = TrainConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.model, "lm_small");
+        assert_eq!(cfg.optimizer, OptKind::Galore);
+        assert!((cfg.lr - 0.01).abs() < 1e-9);
+        assert_eq!(cfg.state_precision, Precision::Int8);
+        assert_eq!(cfg.t_update, 8);
+        assert_eq!(cfg.lambda, 10); // default survives
+    }
+
+    #[test]
+    fn json_config_applies() {
+        let mut cfg = TrainConfig::default();
+        let j = Json::parse(r#"{"model":"vit_tiny","steps":250,"lr":0.005}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.model, "vit_tiny");
+        assert_eq!(cfg.steps, 250);
+    }
+
+    #[test]
+    fn optimizer_parse_errors() {
+        assert!(OptKind::parse("sgd").is_err());
+        assert!(OptKind::parse("coap").unwrap().is_low_rank());
+        assert!(!OptKind::parse("adamw").unwrap().is_low_rank());
+    }
+}

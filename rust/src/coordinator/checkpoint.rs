@@ -1,0 +1,158 @@
+//! Checkpointing: own little binary format (no serde offline).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic "COAPCKPT" | u32 version | u64 step
+//! u32 model-name len | bytes
+//! u32 n_params | per param: u32 name len | bytes | u32 ndims | u64*dims
+//!                           | f32 data
+//! ```
+//! Gradients/optimizer state are NOT checkpointed (the paper's
+//! fine-tuning experiments restart optimizer state from scratch, as do
+//! ours); resuming mid-run warm restarts the moments.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 8] = b"COAPCKPT";
+const VERSION: u32 = 1;
+
+pub struct Checkpoint {
+    pub model: String,
+    pub step: u64,
+    pub params: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &str) -> Result<()> {
+        let mut w = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
+        );
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        write_str(&mut w, &self.model)?;
+        w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.params {
+            write_str(&mut w, name)?;
+            w.write_all(&(t.dims().len() as u32).to_le_bytes())?;
+            for &d in t.dims() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            let data = t.f32s();
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            };
+            w.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path}: not a COAP checkpoint");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("{path}: checkpoint version {version}, want {VERSION}");
+        }
+        let step = read_u64(&mut r)?;
+        let model = read_str(&mut r)?;
+        let n = read_u32(&mut r)? as usize;
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = read_str(&mut r)?;
+            let ndims = read_u32(&mut r)? as usize;
+            if ndims > 8 {
+                bail!("{path}: corrupt dims for {name}");
+            }
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(read_u64(&mut r)? as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let mut buf = vec![0u8; numel * 4];
+            r.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            params.push((name, Tensor::from_f32(&dims, data)));
+        }
+        Ok(Checkpoint { model, step, params })
+    }
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    if len > 1 << 20 {
+        bail!("corrupt string length {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("coap_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let path = path.to_str().unwrap();
+        let ck = Checkpoint {
+            model: "lm_tiny".into(),
+            step: 123,
+            params: vec![
+                ("w".into(), Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.])),
+                ("b".into(), Tensor::from_f32(&[4], vec![0.5; 4])),
+            ],
+        };
+        ck.save(path).unwrap();
+        let back = Checkpoint::load(path).unwrap();
+        assert_eq!(back.model, "lm_tiny");
+        assert_eq!(back.step, 123);
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.params[0].1.f32s(), ck.params[0].1.f32s());
+        assert_eq!(back.params[1].1.dims(), &[4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("coap_ckpt_g_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(path.to_str().unwrap()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

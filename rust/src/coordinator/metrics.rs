@@ -1,0 +1,84 @@
+//! Training metrics: loss curve, PPL, accuracy, and the paper's CEU
+//! (cumulative effective update, Fig. 3).
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub loss: f64,
+    /// exp(loss) — perplexity for LM workloads.
+    pub ppl: f64,
+    /// Classification accuracy in [0, 1] when the model reports it.
+    pub accuracy: Option<f64>,
+    /// Extra quality scalar (e.g. keypoint-mAP-proxy for ControlNet).
+    pub aux: Option<f64>,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub train_losses: Vec<(usize, f64)>,
+    pub evals: Vec<EvalPoint>,
+    /// Running CEU: sum over steps of sum_l ||W_t - W_{t-1}||_1.
+    pub ceu_total: f64,
+    pub ceu_curve: Vec<(usize, f64)>,
+    ema_loss: Option<f64>,
+}
+
+impl Metrics {
+    pub fn record_train(&mut self, step: usize, loss: f64) {
+        self.train_losses.push((step, loss));
+        let ema = self.ema_loss.map_or(loss, |e| 0.95 * e + 0.05 * loss);
+        self.ema_loss = Some(ema);
+    }
+
+    pub fn ema(&self) -> f64 {
+        self.ema_loss.unwrap_or(f64::NAN)
+    }
+
+    pub fn record_ceu(&mut self, step: usize, ceu: f64) {
+        self.ceu_total += ceu;
+        self.ceu_curve.push((step, self.ceu_total));
+    }
+
+    pub fn record_eval(&mut self, p: EvalPoint) {
+        self.evals.push(p);
+    }
+
+    pub fn final_eval(&self) -> Option<&EvalPoint> {
+        self.evals.last()
+    }
+
+    /// Mean train loss over the last `n` recorded steps.
+    pub fn tail_loss(&self, n: usize) -> f64 {
+        let k = self.train_losses.len().saturating_sub(n);
+        let tail = &self.train_losses[k..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|(_, l)| l).sum::<f64>() / tail.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_tracks_and_tail_averages() {
+        let mut m = Metrics::default();
+        for i in 1..=10 {
+            m.record_train(i, 10.0 - i as f64);
+        }
+        assert!(m.ema() < 10.0);
+        assert!((m.tail_loss(2) - 0.5).abs() < 1e-9); // (1 + 0) / 2
+        assert!(m.tail_loss(100) > m.tail_loss(2)); // earlier losses higher
+    }
+
+    #[test]
+    fn ceu_accumulates_monotonically() {
+        let mut m = Metrics::default();
+        m.record_ceu(1, 2.0);
+        m.record_ceu(2, 3.0);
+        assert_eq!(m.ceu_total, 5.0);
+        assert_eq!(m.ceu_curve, vec![(1, 2.0), (2, 5.0)]);
+    }
+}

@@ -1,0 +1,11 @@
+//! The training coordinator (L3 leader): the loop, metrics, memory
+//! accounting and checkpointing around the pure HLO compute graphs.
+
+pub mod checkpoint;
+pub mod memory;
+pub mod metrics;
+pub mod trainer;
+
+pub use memory::MemoryAccountant;
+pub use metrics::{EvalPoint, Metrics};
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,210 @@
+//! The training loop (leader): data -> fwd/bwd executable -> per-layer
+//! optimizer dispatch -> metrics, with the projection-update schedule
+//! driven from the optimizer's policy.
+
+use super::metrics::{EvalPoint, Metrics};
+use crate::config::TrainConfig;
+use crate::data::{self, vision, DataSource};
+use crate::model::ParamStore;
+use crate::optim::{self, Optimizer};
+use crate::runtime::{ModelInfo, Runtime};
+use crate::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub rt: Arc<Runtime>,
+    pub model: ModelInfo,
+    pub store: ParamStore,
+    pub opt: Box<dyn Optimizer>,
+    pub data: Box<dyn DataSource>,
+    pub metrics: Metrics,
+    pub quiet: bool,
+}
+
+/// Everything a bench/table needs from one finished run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub label: String,
+    pub model: String,
+    pub steps: usize,
+    pub final_train_loss: f64,
+    pub final_eval: EvalPoint,
+    pub wall: Duration,
+    pub fwdbwd_time: Duration,
+    pub opt_step_time: Duration,
+    pub proj_time: Duration,
+    pub optimizer_bytes: usize,
+    pub param_bytes: usize,
+    pub ceu_total: f64,
+    pub train_losses: Vec<(usize, f64)>,
+    pub ceu_curve: Vec<(usize, f64)>,
+    pub evals: Vec<EvalPoint>,
+}
+
+impl TrainReport {
+    /// Optimizer-time overhead relative to pure fwd/bwd — the paper's
+    /// "Training Time +x%" columns measure exactly the optimizer-induced
+    /// extra time over the baseline optimizer's step cost.
+    pub fn opt_overhead_frac(&self) -> f64 {
+        let fb = self.fwdbwd_time.as_secs_f64().max(1e-9);
+        (self.opt_step_time + self.proj_time).as_secs_f64() / fb
+    }
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig, rt: Arc<Runtime>) -> Result<Trainer> {
+        let model = rt.manifest.model(&cfg.model)?.clone();
+        let store = ParamStore::init(&model, cfg.seed, cfg.finetune);
+        let opt = optim::build(&cfg, &model)?;
+        let data = data::for_model(&model, cfg.seed);
+        Ok(Trainer {
+            cfg,
+            rt,
+            model,
+            store,
+            opt,
+            data,
+            metrics: Metrics::default(),
+            quiet: false,
+        })
+    }
+
+    /// Pre-compile the train/eval executables (excluded from step timing).
+    pub fn warmup(&self) -> Result<()> {
+        self.rt.executable(&self.model.train_step)?;
+        self.rt.executable(&self.model.eval_step)?;
+        Ok(())
+    }
+
+    pub fn run(&mut self) -> Result<TrainReport> {
+        self.warmup()?;
+        let wall0 = Instant::now();
+        let mut fwdbwd = Duration::ZERO;
+        let mut opt_step = Duration::ZERO;
+        let mut proj = Duration::ZERO;
+
+        for t in 1..=self.cfg.steps {
+            let batch = self.data.next_train();
+            let t0 = Instant::now();
+            let mut inputs: Vec<&Tensor> = self.store.params.iter().collect();
+            inputs.extend(batch.iter());
+            let out = self
+                .rt
+                .exec(&self.model.train_step, &inputs)
+                .with_context(|| format!("train step {t}"))?;
+            fwdbwd += t0.elapsed();
+
+            let loss = out[0].scalar() as f64;
+            let grads = &out[1..];
+            let stats = self.opt.step(
+                t,
+                self.cfg.lr,
+                grads,
+                &mut self.store.params,
+                &self.rt,
+            )?;
+            opt_step += stats.step_time;
+            proj += stats.proj_time;
+
+            self.metrics.record_train(t, loss);
+            if self.cfg.track_ceu {
+                self.metrics.record_ceu(t, stats.ceu);
+            }
+            if !self.quiet && self.cfg.log_every > 0 && t % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[{}] step {t:>5}  loss {loss:.4}  ema {:.4}  {:.0} ms/step",
+                    self.opt.label(),
+                    self.metrics.ema(),
+                    wall0.elapsed().as_secs_f64() * 1e3 / t as f64,
+                );
+            }
+            if self.cfg.eval_every > 0
+                && (t % self.cfg.eval_every == 0 || t == self.cfg.steps)
+            {
+                let ev = self.eval(t)?;
+                if !self.quiet {
+                    eprintln!(
+                        "[{}] eval @ {t}: loss {:.4} ppl {:.2}{}",
+                        self.opt.label(),
+                        ev.loss,
+                        ev.ppl,
+                        ev.accuracy
+                            .map(|a| format!(" acc {:.1}%", a * 100.0))
+                            .unwrap_or_default(),
+                    );
+                }
+                self.metrics.record_eval(ev);
+            }
+        }
+
+        let final_eval = self
+            .metrics
+            .final_eval()
+            .cloned()
+            .unwrap_or_default();
+        Ok(TrainReport {
+            label: self.opt.label(),
+            model: self.model.name.clone(),
+            steps: self.cfg.steps,
+            final_train_loss: self.metrics.tail_loss(10),
+            final_eval,
+            wall: wall0.elapsed(),
+            fwdbwd_time: fwdbwd,
+            opt_step_time: opt_step,
+            proj_time: proj,
+            optimizer_bytes: self.opt.state_bytes(),
+            param_bytes: self.store.param_bytes(),
+            ceu_total: self.metrics.ceu_total,
+            train_losses: self.metrics.train_losses.clone(),
+            ceu_curve: self.metrics.ceu_curve.clone(),
+            evals: self.metrics.evals.clone(),
+        })
+    }
+
+    /// Held-out evaluation: loss (+ accuracy / keypoint-mAP-proxy where
+    /// the model reports them).
+    pub fn eval(&mut self, step: usize) -> Result<EvalPoint> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut examples = 0usize;
+        let mut aux_sum = 0.0f64;
+        let mut aux_n = 0usize;
+        let has_acc = self.model.eval_outputs.iter().any(|o| o == "n_correct");
+        let has_pred = self.model.eval_outputs.iter().any(|o| o == "pred");
+        let batch_size = self.model.cfg_usize_or("batch", 1);
+        let control = self.model.family == "cnn"
+            && self.model.data.iter().any(|d| d.name == "control");
+
+        for i in 0..self.cfg.eval_batches.max(1) {
+            let batch = self.data.eval_batch(i);
+            let mut inputs: Vec<&Tensor> = self.store.params.iter().collect();
+            inputs.extend(batch.iter());
+            let out = self.rt.exec(&self.model.eval_step, &inputs)?;
+            loss_sum += out[0].scalar() as f64;
+            if has_acc {
+                correct += out[1].scalar() as f64;
+                examples += batch_size;
+            }
+            if has_pred && control {
+                aux_sum += vision::keypoint_match_score(&out[1], batch.last().unwrap());
+                aux_n += 1;
+            }
+        }
+        let n = self.cfg.eval_batches.max(1) as f64;
+        let loss = loss_sum / n;
+        Ok(EvalPoint {
+            step,
+            loss,
+            ppl: loss.exp(),
+            accuracy: if has_acc && examples > 0 {
+                Some(correct / examples as f64)
+            } else {
+                None
+            },
+            aux: if aux_n > 0 { Some(aux_sum / aux_n as f64) } else { None },
+        })
+    }
+}

@@ -1,0 +1,43 @@
+//! Synthetic data pipelines (DESIGN.md §3 substitutions).
+//!
+//! Every paper workload is replaced by a deterministic, seeded synthetic
+//! generator that exercises the same code path and produces a learnable
+//! signal, so quality metrics (PPL, accuracy, denoising MSE, keypoint
+//! match) *move* during training and can be compared across optimizers:
+//!
+//! - C4 corpus            -> Zipf-Markov token stream ([`lm`])
+//! - CIFAR/ImageNet       -> class-template images + noise ([`vision`])
+//! - diffusion datasets   -> smooth random fields ([`vision`])
+//! - ControlNet poses     -> keypoint-blob control maps ([`vision`])
+//! - LLaVA/ScienceQA      -> clustered features + answer labels ([`vision`])
+//!
+//! Train and eval streams use independent RNG forks of the same process —
+//! a genuine held-out set from the same distribution.
+
+pub mod lm;
+pub mod vision;
+
+use crate::runtime::ModelInfo;
+use crate::tensor::Tensor;
+
+/// A batch is the model's data inputs, in manifest order.
+pub type Batch = Vec<Tensor>;
+
+pub trait DataSource: Send {
+    /// Next training batch (advances the train stream).
+    fn next_train(&mut self) -> Batch;
+    /// Deterministic eval batch `i` (same batch every call).
+    fn eval_batch(&mut self, i: usize) -> Batch;
+}
+
+/// Build the right generator for a model from its manifest entry.
+pub fn for_model(model: &ModelInfo, seed: u64) -> Box<dyn DataSource> {
+    match model.family.as_str() {
+        "lm" => Box::new(lm::LmCorpus::new(model, seed)),
+        "vit" => Box::new(vision::ClassImages::new(model, seed)),
+        "cnn" => Box::new(vision::Denoising::new(model, seed)),
+        "sit" => Box::new(vision::Interpolant::new(model, seed)),
+        "llava" => Box::new(vision::MultimodalQa::new(model, seed)),
+        f => panic!("no data source for family '{f}'"),
+    }
+}

@@ -1,0 +1,531 @@
+//! Synthetic vision / multimodal generators (DESIGN.md §3).
+
+use super::{Batch, DataSource};
+use crate::rng::Rng;
+use crate::runtime::ModelInfo;
+use crate::tensor::Tensor;
+
+/// Deterministic class template: a smooth sinusoidal pattern whose
+/// frequency/phase/orientation derive from the class id. Distinct enough
+/// that a small ViT separates classes; noisy enough to need learning.
+fn class_template(class: usize, chans: usize, img: usize, out: &mut [f32]) {
+    let f1 = 1.0 + (class % 5) as f32;
+    let f2 = 1.0 + ((class / 5) % 5) as f32;
+    let phase = (class % 7) as f32 * 0.9;
+    for c in 0..chans {
+        let cw = 0.5 + 0.5 * ((class + c * 3) % 4) as f32 / 3.0;
+        for y in 0..img {
+            for x in 0..img {
+                let u = x as f32 / img as f32 * std::f32::consts::TAU;
+                let v = y as f32 / img as f32 * std::f32::consts::TAU;
+                out[(c * img + y) * img + x] =
+                    cw * ((f1 * u + phase).sin() + (f2 * v - phase).cos()) * 0.5;
+            }
+        }
+    }
+}
+
+/// Smooth random field: a few random low-frequency sinusoids. Base signal
+/// for the denoising / diffusion workloads.
+fn random_field(rng: &mut Rng, chans: usize, img: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for _ in 0..3 {
+        let fx = 1.0 + rng.below(3) as f32;
+        let fy = 1.0 + rng.below(3) as f32;
+        let ph = rng.uniform() * std::f32::consts::TAU;
+        let amp = 0.3 + 0.4 * rng.uniform();
+        for c in 0..chans {
+            let cw = 0.6 + 0.4 * rng.uniform();
+            for y in 0..img {
+                for x in 0..img {
+                    let u = x as f32 / img as f32 * std::f32::consts::TAU;
+                    let v = y as f32 / img as f32 * std::f32::consts::TAU;
+                    out[(c * img + y) * img + x] +=
+                        amp * cw * (fx * u + fy * v + ph).sin();
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ViT classification (CIFAR-100 / DeiT substitute)
+// ---------------------------------------------------------------------------
+
+pub struct ClassImages {
+    classes: usize,
+    chans: usize,
+    img: usize,
+    batch: usize,
+    noise: f32,
+    train_rng: Rng,
+    eval_seed: Rng,
+}
+
+impl ClassImages {
+    pub fn new(model: &ModelInfo, seed: u64) -> ClassImages {
+        let base = Rng::new(seed ^ 0x3c4d);
+        ClassImages {
+            classes: model.cfg_usize("classes"),
+            chans: model.cfg_usize("chans"),
+            img: model.cfg_usize("img"),
+            batch: model.cfg_usize("batch"),
+            // High enough that short-run accuracy separates optimizers
+            // (SNR ~0.5 per pixel; the class signal needs integrating).
+            noise: 1.1,
+            train_rng: base.fork(1),
+            eval_seed: base.fork(2),
+        }
+    }
+
+    fn batch_from(&self, rng: &mut Rng) -> Batch {
+        let px = self.chans * self.img * self.img;
+        let mut images = vec![0.0f32; self.batch * px];
+        let mut labels = Vec::with_capacity(self.batch);
+        let mut tmpl = vec![0.0f32; px];
+        for b in 0..self.batch {
+            let y = rng.below(self.classes);
+            labels.push(y as i32);
+            class_template(y, self.chans, self.img, &mut tmpl);
+            let dst = &mut images[b * px..(b + 1) * px];
+            for (d, &t) in dst.iter_mut().zip(&tmpl) {
+                *d = t + rng.normal() * self.noise;
+            }
+        }
+        vec![
+            Tensor::from_f32(&[self.batch, self.chans, self.img, self.img], images),
+            Tensor::from_i32(&[self.batch], labels),
+        ]
+    }
+}
+
+impl DataSource for ClassImages {
+    fn next_train(&mut self) -> Batch {
+        let mut rng = self.train_rng.clone();
+        let b = self.batch_from(&mut rng);
+        self.train_rng = rng;
+        b
+    }
+
+    fn eval_batch(&mut self, i: usize) -> Batch {
+        let mut rng = self.eval_seed.fork(i as u64);
+        self.batch_from(&mut rng)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Denoising (LDM / DDPM substitute) + ControlNet variant
+// ---------------------------------------------------------------------------
+
+pub struct Denoising {
+    chans: usize,
+    img: usize,
+    batch: usize,
+    control: bool,
+    sigma: f32,
+    train_rng: Rng,
+    eval_seed: Rng,
+}
+
+pub const KEYPOINTS: usize = 4;
+const BLOB_AMP: f32 = 1.6;
+
+impl Denoising {
+    pub fn new(model: &ModelInfo, seed: u64) -> Denoising {
+        let control = model
+            .cfg
+            .get("control")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+        let base = Rng::new(seed ^ 0x5e6f);
+        Denoising {
+            chans: model.cfg_usize("chans"),
+            img: model.cfg_usize("img"),
+            batch: model.cfg_usize("batch"),
+            control,
+            sigma: 0.5,
+            train_rng: base.fork(1),
+            eval_seed: base.fork(2),
+        }
+    }
+
+    /// ControlNet-style sample: the keypoint blobs exist ONLY in the
+    /// clean target and the control map — the noisy input carries no
+    /// trace of them, so the model must route control information to
+    /// predict them (this is what the mAP-proxy measures).
+    fn batch_from(&self, rng: &mut Rng) -> Batch {
+        let px = self.chans * self.img * self.img;
+        let cpx = self.img * self.img;
+        let mut noisy = vec![0.0f32; self.batch * px];
+        let mut clean = vec![0.0f32; self.batch * px];
+        let mut control = vec![0.0f32; self.batch * cpx];
+        let mut field = vec![0.0f32; px];
+        for b in 0..self.batch {
+            random_field(rng, self.chans, self.img, &mut field);
+            let nz = &mut noisy[b * px..(b + 1) * px];
+            let cl = &mut clean[b * px..(b + 1) * px];
+            for i in 0..px {
+                cl[i] = field[i];
+                nz[i] = field[i] + rng.normal() * self.sigma;
+            }
+            if self.control {
+                let ct = &mut control[b * cpx..(b + 1) * cpx];
+                for _ in 0..KEYPOINTS {
+                    let ky = 2 + rng.below(self.img - 4);
+                    let kx = 2 + rng.below(self.img - 4);
+                    // 2-px gaussian blob into control map and clean target.
+                    for dy in -2i32..=2 {
+                        for dx in -2i32..=2 {
+                            let y = (ky as i32 + dy) as usize;
+                            let x = (kx as i32 + dx) as usize;
+                            let w = (-((dx * dx + dy * dy) as f32) / 2.0).exp();
+                            ct[y * self.img + x] += w;
+                            for c in 0..self.chans {
+                                cl[(c * self.img + y) * self.img + x] += BLOB_AMP * w;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let mut out = vec![
+            Tensor::from_f32(&[self.batch, self.chans, self.img, self.img], noisy),
+            Tensor::from_f32(&[self.batch, self.chans, self.img, self.img], clean),
+        ];
+        if self.control {
+            out.push(Tensor::from_f32(&[self.batch, 1, self.img, self.img], control));
+        }
+        out
+    }
+}
+
+impl DataSource for Denoising {
+    fn next_train(&mut self) -> Batch {
+        let mut rng = self.train_rng.clone();
+        let b = self.batch_from(&mut rng);
+        self.train_rng = rng;
+        b
+    }
+
+    fn eval_batch(&mut self, i: usize) -> Batch {
+        let mut rng = self.eval_seed.fork(i as u64);
+        self.batch_from(&mut rng)
+    }
+}
+
+/// Keypoint-match proxy for the ControlNet mAP metric: a keypoint counts
+/// as detected when the predicted image is locally brighter at the
+/// keypoint than its 5x5 surround by half the blob amplitude.
+pub fn keypoint_match_score(pred: &Tensor, control: &Tensor) -> f64 {
+    let pd = pred.dims();
+    let (batch, chans, img) = (pd[0], pd[1], pd[2]);
+    let px = chans * img * img;
+    let cpx = img * img;
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for b in 0..batch {
+        let p = &pred.f32s()[b * px..(b + 1) * px];
+        let c = &control.f32s()[b * cpx..(b + 1) * cpx];
+        for y in 3..img - 3 {
+            for x in 3..img - 3 {
+                if c[y * img + x] < 0.95 {
+                    continue; // not a blob center
+                }
+                // local maxima of the control map only (blob centers)
+                let is_center = (-1i32..=1).all(|dy| {
+                    (-1i32..=1).all(|dx| {
+                        c[((y as i32 + dy) as usize) * img + (x as i32 + dx) as usize]
+                            <= c[y * img + x] + 1e-6
+                    })
+                });
+                if !is_center {
+                    continue;
+                }
+                total += 1;
+                // mean channel intensity at keypoint vs ring at distance 3
+                let at: f32 = (0..chans).map(|ch| p[(ch * img + y) * img + x]).sum::<f32>()
+                    / chans as f32;
+                let mut ring = 0.0f32;
+                let mut n = 0;
+                for (dy, dx) in [(-3i32, 0i32), (3, 0), (0, -3), (0, 3)] {
+                    let yy = (y as i32 + dy) as usize;
+                    let xx = (x as i32 + dx) as usize;
+                    ring += (0..chans)
+                        .map(|ch| p[(ch * img + yy) * img + xx])
+                        .sum::<f32>()
+                        / chans as f32;
+                    n += 1;
+                }
+                if at - ring / n as f32 > BLOB_AMP * 0.25 {
+                    hits += 1;
+                }
+            }
+        }
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    100.0 * hits as f64 / total as f64
+}
+
+// ---------------------------------------------------------------------------
+// SiT interpolant data
+// ---------------------------------------------------------------------------
+
+pub struct Interpolant {
+    inner: ClassImagesLike,
+}
+
+struct ClassImagesLike {
+    chans: usize,
+    img: usize,
+    batch: usize,
+    train_rng: Rng,
+    eval_seed: Rng,
+}
+
+impl Interpolant {
+    pub fn new(model: &ModelInfo, seed: u64) -> Interpolant {
+        let base = Rng::new(seed ^ 0x7a8b);
+        Interpolant {
+            inner: ClassImagesLike {
+                chans: model.cfg_usize("chans"),
+                img: model.cfg_usize("img"),
+                batch: model.cfg_usize("batch"),
+                train_rng: base.fork(1),
+                eval_seed: base.fork(2),
+            },
+        }
+    }
+
+    fn batch_from(&self, rng: &mut Rng) -> Batch {
+        let s = &self.inner;
+        let px = s.chans * s.img * s.img;
+        let mut images = vec![0.0f32; s.batch * px];
+        let mut noise = vec![0.0f32; s.batch * px];
+        let mut tvals = Vec::with_capacity(s.batch);
+        let mut tmpl = vec![0.0f32; px];
+        for b in 0..s.batch {
+            // "Dataset" = the class-template distribution (256 classes).
+            class_template(rng.below(256), s.chans, s.img, &mut tmpl);
+            images[b * px..(b + 1) * px].copy_from_slice(&tmpl);
+            for v in &mut noise[b * px..(b + 1) * px] {
+                *v = rng.normal();
+            }
+            tvals.push(rng.uniform());
+        }
+        vec![
+            Tensor::from_f32(&[s.batch, s.chans, s.img, s.img], images),
+            Tensor::from_f32(&[s.batch, s.chans, s.img, s.img], noise),
+            Tensor::from_f32(&[s.batch], tvals),
+        ]
+    }
+}
+
+impl DataSource for Interpolant {
+    fn next_train(&mut self) -> Batch {
+        let mut rng = self.inner.train_rng.clone();
+        let b = self.batch_from(&mut rng);
+        self.inner.train_rng = rng;
+        b
+    }
+
+    fn eval_batch(&mut self, i: usize) -> Batch {
+        let mut rng = self.inner.eval_seed.fork(i as u64);
+        self.batch_from(&mut rng)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LLaVA-style multimodal QA
+// ---------------------------------------------------------------------------
+
+pub struct MultimodalQa {
+    feat: usize,
+    vocab: usize,
+    seq: usize,
+    answers: usize,
+    batch: usize,
+    train_rng: Rng,
+    eval_seed: Rng,
+}
+
+impl MultimodalQa {
+    pub fn new(model: &ModelInfo, seed: u64) -> MultimodalQa {
+        let base = Rng::new(seed ^ 0x9cad);
+        MultimodalQa {
+            feat: model.cfg_usize("feat"),
+            vocab: model.cfg_usize("vocab"),
+            seq: model.cfg_usize("seq"),
+            answers: model.cfg_usize("answers"),
+            batch: model.cfg_usize("batch"),
+            train_rng: base.fork(1),
+            eval_seed: base.fork(2),
+        }
+    }
+
+    /// Answer class y defines a fixed feature-cluster center (hash-based
+    /// signs); features = center + noise. The question tokens carry a
+    /// learnable hint too (answer-dependent token bias), mirroring how
+    /// ScienceQA answers depend on both image and question.
+    fn batch_from(&self, rng: &mut Rng) -> Batch {
+        let mut feats = vec![0.0f32; self.batch * self.feat];
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut answers = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            let y = rng.below(self.answers);
+            answers.push(y as i32);
+            for f in 0..self.feat {
+                let mut h = (y as u64 * 0x9e3779b97f4a7c15) ^ (f as u64) << 17;
+                h ^= h >> 31;
+                h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+                let sign = if h & 1 == 0 { 1.0 } else { -1.0 };
+                feats[b * self.feat + f] = sign * 0.5 + rng.normal() * 0.4;
+            }
+            for s in 0..self.seq {
+                let t = if rng.uniform() < 0.3 {
+                    // answer-correlated tokens in a reserved band
+                    (y * (self.vocab / self.answers) + rng.below(self.vocab / self.answers))
+                        as i32
+                } else {
+                    rng.below(self.vocab) as i32
+                };
+                tokens.push(t);
+                let _ = s;
+            }
+        }
+        vec![
+            Tensor::from_f32(&[self.batch, self.feat], feats),
+            Tensor::from_i32(&[self.batch, self.seq], tokens),
+            Tensor::from_i32(&[self.batch], answers),
+        ]
+    }
+}
+
+impl DataSource for MultimodalQa {
+    fn next_train(&mut self) -> Batch {
+        let mut rng = self.train_rng.clone();
+        let b = self.batch_from(&mut rng);
+        self.train_rng = rng;
+        b
+    }
+
+    fn eval_batch(&mut self, i: usize) -> Batch {
+        let mut rng = self.eval_seed.fork(i as u64);
+        self.batch_from(&mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn model(family: &str, cfg: &str) -> ModelInfo {
+        ModelInfo {
+            name: "toy".into(),
+            family: family.into(),
+            cfg: Json::parse(cfg).unwrap(),
+            param_count: 0,
+            params: vec![],
+            data: vec![],
+            train_step: String::new(),
+            eval_step: String::new(),
+            eval_outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn class_images_shapes_and_determinism() {
+        let m = model("vit", r#"{"classes": 10, "chans": 3, "img": 16, "batch": 4}"#);
+        let mut d = ClassImages::new(&m, 7);
+        let b = d.next_train();
+        assert_eq!(b[0].dims(), &[4, 3, 16, 16]);
+        assert_eq!(b[1].dims(), &[4]);
+        assert!(b[1].i32s().iter().all(|&y| (0..10).contains(&y)));
+        let e1 = d.eval_batch(0);
+        let e2 = d.eval_batch(0);
+        assert_eq!(e1[0].f32s(), e2[0].f32s());
+    }
+
+    #[test]
+    fn templates_are_class_distinct() {
+        let mut a = vec![0.0; 3 * 16 * 16];
+        let mut b = vec![0.0; 3 * 16 * 16];
+        class_template(1, 3, 16, &mut a);
+        class_template(2, 3, 16, &mut b);
+        let dist: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(dist > 10.0, "templates too similar: {dist}");
+    }
+
+    #[test]
+    fn control_batch_has_three_tensors_and_blobs_only_in_clean() {
+        let m = model(
+            "cnn",
+            r#"{"chans": 3, "img": 32, "batch": 2, "control": true}"#,
+        );
+        let mut d = Denoising::new(&m, 3);
+        let b = d.next_train();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[2].dims(), &[2, 1, 32, 32]);
+        // control map total mass ~ KEYPOINTS blobs
+        let mass: f32 = b[2].f32s().iter().sum();
+        assert!(mass > 1.0);
+    }
+
+    #[test]
+    fn keypoint_score_perfect_for_clean_target() {
+        let m = model(
+            "cnn",
+            r#"{"chans": 3, "img": 32, "batch": 4, "control": true}"#,
+        );
+        let mut d = Denoising::new(&m, 4);
+        let b = d.eval_batch(0);
+        // The clean target embeds the blobs -> near-perfect score.
+        let s_clean = keypoint_match_score(&b[1], &b[2]);
+        assert!(s_clean > 80.0, "clean score {s_clean}");
+        // The noisy input has no blobs -> low score.
+        let s_noisy = keypoint_match_score(&b[0], &b[2]);
+        assert!(s_noisy < 60.0, "noisy score {s_noisy}");
+        assert!(s_clean > s_noisy + 25.0);
+    }
+
+    #[test]
+    fn interpolant_tvals_in_unit_range() {
+        let m = model("sit", r#"{"chans": 3, "img": 16, "batch": 4}"#);
+        let mut d = Interpolant::new(&m, 5);
+        let b = d.next_train();
+        assert_eq!(b.len(), 3);
+        assert!(b[2].f32s().iter().all(|&t| (0.0..1.0).contains(&t)));
+    }
+
+    #[test]
+    fn multimodal_feats_cluster_by_answer() {
+        let m = model(
+            "llava",
+            r#"{"feat": 64, "vocab": 128, "seq": 8, "answers": 4, "batch": 32}"#,
+        );
+        let mut d = MultimodalQa::new(&m, 6);
+        let b = d.next_train();
+        // Same-answer feature vectors correlate more than cross-answer.
+        let feats = b[0].f32s();
+        let ans = b[2].i32s();
+        let dot = |i: usize, j: usize| -> f32 {
+            (0..64).map(|f| feats[i * 64 + f] * feats[j * 64 + f]).sum()
+        };
+        let mut same = (0.0, 0);
+        let mut diff = (0.0, 0);
+        for i in 0..32 {
+            for j in (i + 1)..32 {
+                if ans[i] == ans[j] {
+                    same = (same.0 + dot(i, j), same.1 + 1);
+                } else {
+                    diff = (diff.0 + dot(i, j), diff.1 + 1);
+                }
+            }
+        }
+        if same.1 > 0 && diff.1 > 0 {
+            assert!(same.0 / same.1 as f32 > diff.0 / diff.1 as f32);
+        }
+    }
+}

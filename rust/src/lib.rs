@@ -1,0 +1,25 @@
+//! # coap — COAP: Memory-Efficient Training with Correlation-Aware
+//! # Gradient Projection (Rust + JAX + Pallas reproduction)
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - **L3 (this crate)**: the training coordinator — per-layer optimizer
+//!   state machines, the `T_u`/`λ` projection-update scheduler, 8-bit
+//!   quantized state store, data pipeline, metrics (loss/PPL/CEU),
+//!   memory accounting, checkpointing, CLI.
+//! - **L2**: JAX compute graphs AOT-lowered once to `artifacts/*.hlo.txt`
+//!   by `python/compile/aot.py`; loaded and executed here via PJRT.
+//! - **L1**: Pallas kernels inside those graphs.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! binary is self-contained.
+
+pub mod util;
+pub mod rng;
+pub mod tensor;
+pub mod config;
+pub mod data;
+pub mod runtime;
+pub mod model;
+pub mod optim;
+pub mod coordinator;
+pub mod benchlib;

@@ -1,0 +1,150 @@
+//! `coap` — the training-coordinator CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   train       run one training job per config/CLI flags
+//!   info        summarize the artifact manifest (models, graphs)
+//!   experiments list the paper tables/figures and how to regenerate them
+//!
+//! Examples:
+//!   coap train --model lm_small --optimizer coap --steps 300 --lr 2e-3
+//!   coap train --model ctrl_small --optimizer coap-adafactor \
+//!        --rank-ratio 8 --precision int8 --steps 200
+//!   coap info
+
+use anyhow::Result;
+use coap::config::TrainConfig;
+use coap::coordinator::{checkpoint::Checkpoint, memory, Trainer};
+use coap::runtime::Runtime;
+use coap::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => train(&args),
+        "info" => info(&args),
+        "experiments" => experiments(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+    eprintln!(
+        "model={} optimizer={} rank-ratio={} Tu={} λ={} precision={} steps={}",
+        cfg.model,
+        cfg.optimizer.label(),
+        cfg.rank_ratio,
+        cfg.t_update,
+        cfg.lambda,
+        cfg.state_precision.label(),
+        cfg.steps
+    );
+    let save_ckpt = args.get("save-checkpoint").map(String::from);
+    let mut trainer = Trainer::new(cfg, rt)?;
+    let report = trainer.run()?;
+    println!("\n== run report ==");
+    println!("model               {}", report.model);
+    println!("optimizer           {}", report.label);
+    println!("steps               {}", report.steps);
+    println!("final train loss    {:.4}", report.final_train_loss);
+    println!("final eval loss     {:.4}", report.final_eval.loss);
+    println!("final eval ppl      {:.2}", report.final_eval.ppl);
+    if let Some(acc) = report.final_eval.accuracy {
+        println!("final eval acc      {:.2}%", acc * 100.0);
+    }
+    if let Some(aux) = report.final_eval.aux {
+        println!("final eval aux      {:.2}", aux);
+    }
+    println!("param memory        {}", memory::fmt_mb(report.param_bytes));
+    println!("optimizer memory    {}", memory::fmt_mb(report.optimizer_bytes));
+    println!(
+        "wall {:.1}s  (fwd/bwd {:.1}s, opt steps {:.1}s, proj updates {:.1}s)",
+        report.wall.as_secs_f64(),
+        report.fwdbwd_time.as_secs_f64(),
+        report.opt_step_time.as_secs_f64(),
+        report.proj_time.as_secs_f64()
+    );
+    if let Some(path) = save_ckpt {
+        let ck = Checkpoint {
+            model: report.model.clone(),
+            step: report.steps as u64,
+            params: trainer
+                .model
+                .params
+                .iter()
+                .map(|p| p.name.clone())
+                .zip(trainer.store.params.iter().cloned())
+                .collect(),
+        };
+        ck.save(&path)?;
+        eprintln!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn info(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    let rt = Runtime::open(&cfg.artifacts_dir)?;
+    println!(
+        "manifest: {} graphs, {} models",
+        rt.manifest.graphs.len(),
+        rt.manifest.models.len()
+    );
+    println!("\nmodels:");
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  {name:<12} family={:<6} params={:>10}  ({} tensors)",
+            m.family,
+            m.param_count,
+            m.params.len()
+        );
+    }
+    Ok(())
+}
+
+fn experiments(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    let rt = Runtime::open(&cfg.artifacts_dir)?;
+    println!("paper experiments (see DESIGN.md §5 for the full index):");
+    for e in &rt.manifest.experiments {
+        println!(
+            "  {:<18} model={:<12} ratios={:?}  {}",
+            e.id, e.model, e.ratios, e.note
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "coap — COAP (correlation-aware gradient projection) training coordinator
+
+USAGE: coap <train|info|experiments> [--flags]
+
+train flags (also JSON-settable via --config file.json):
+  --model NAME            lm_tiny|lm_small|lm_base|lm_large|vit_tiny|vit_small|
+                          cnn_tiny|cnn_small|cnn_celeb|sit_small|ctrl_small|llava_small
+  --optimizer KIND        adamw|adafactor|coap|coap-adafactor|galore|flora|lora|relora
+  --rank-ratio C          r = min(m,n)/C            (default 4)
+  --t-update N --lambda K Eqn-6 every N, Eqn-7 every K*N steps
+  --precision P           f32|bf16|int8 state storage
+  --steps N --lr F --wd F --seed S
+  --track-ceu true        record the CEU metric (Fig 3)
+  --save-checkpoint PATH  write params after training
+
+see also: examples/ (quality drivers) and `cargo bench` (paper tables)."
+    );
+}

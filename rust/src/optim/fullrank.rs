@@ -1,0 +1,168 @@
+//! Full-rank baselines: AdamW and Adafactor-with-momentum.
+//!
+//! Matrix/conv parameters run through the HLO step graphs (conv weights
+//! are reshaped to their mode-1 unfolding (O, I*K1*K2) — layout-free);
+//! vector parameters use the pure-Rust refimpl (a PJRT round trip costs
+//! more than the math for O(d) tensors).
+
+use super::{beta_powers, refimpl, Optimizer, StateBuf, StepStats};
+use crate::config::TrainConfig;
+use crate::runtime::{names, ModelInfo, Runtime};
+use crate::tensor::{Precision, Tensor};
+use anyhow::Result;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Base {
+    Adam,
+    Adafactor,
+}
+
+enum Slot {
+    /// HLO-updated matrix (possibly a reshaped conv): Adam states.
+    MatrixAdam { rows: usize, cols: usize, m: StateBuf, v: StateBuf },
+    /// HLO-updated matrix: Adafactor states.
+    MatrixFactor { rows: usize, cols: usize, m: StateBuf, r: StateBuf, c: StateBuf },
+    /// Rust-updated vector.
+    Vector { m: Vec<f32>, v: Vec<f32> },
+}
+
+pub struct FullRank {
+    base: Base,
+    slots: Vec<Slot>,
+    weight_decay: f32,
+    track_ceu: bool,
+}
+
+impl FullRank {
+    pub fn adamw(cfg: &TrainConfig, info: &ModelInfo) -> FullRank {
+        Self::new(Base::Adam, cfg, info)
+    }
+
+    pub fn adafactor(cfg: &TrainConfig, info: &ModelInfo) -> FullRank {
+        Self::new(Base::Adafactor, cfg, info)
+    }
+
+    fn new(base: Base, cfg: &TrainConfig, info: &ModelInfo) -> FullRank {
+        let prec = cfg.state_precision;
+        let slots = info
+            .params
+            .iter()
+            .map(|p| match p.kind.as_str() {
+                "vector" => Slot::Vector { m: vec![0.0; p.numel()], v: vec![0.0; p.numel()] },
+                _ => {
+                    let (rows, cols) = flat2d(&p.shape);
+                    match base {
+                        Base::Adam => Slot::MatrixAdam {
+                            rows,
+                            cols,
+                            m: StateBuf::zeros(&[rows, cols], prec),
+                            v: StateBuf::zeros(&[rows, cols], prec),
+                        },
+                        Base::Adafactor => Slot::MatrixFactor {
+                            rows,
+                            cols,
+                            m: StateBuf::zeros(&[rows, cols], prec),
+                            // Factored rows/cols stay f32: they are O(m+n).
+                            r: StateBuf::zeros(&[rows, 1], Precision::F32),
+                            c: StateBuf::zeros(&[1, cols], Precision::F32),
+                        },
+                    }
+                }
+            })
+            .collect();
+        FullRank { base, slots, weight_decay: cfg.weight_decay, track_ceu: cfg.track_ceu }
+    }
+}
+
+/// Collapse an N-D shape to (first-dim, rest) — the mode-1 unfolding.
+pub fn flat2d(shape: &[usize]) -> (usize, usize) {
+    (shape[0], shape[1..].iter().product::<usize>().max(1))
+}
+
+impl Optimizer for FullRank {
+    fn step(
+        &mut self,
+        t: usize,
+        lr: f32,
+        grads: &[Tensor],
+        params: &mut [Tensor],
+        rt: &Runtime,
+    ) -> Result<StepStats> {
+        let mut stats = StepStats::default();
+        let (b1t, b2t) = beta_powers(t);
+        let lr_t = Tensor::scalar_f32(lr);
+        let wd_t = Tensor::scalar_f32(self.weight_decay);
+        let t_t = Tensor::scalar_f32(t as f32);
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            match slot {
+                Slot::Vector { m, v } => {
+                    let w = params[i].f32s_mut();
+                    let ceu = refimpl::adamw_step_flat(w, grads[i].f32s(), m, v, t, lr, 0.0);
+                    if self.track_ceu {
+                        stats.ceu += ceu;
+                    }
+                }
+                Slot::MatrixAdam { rows, cols, m, v } => {
+                    // exec() builds literals with the manifest shape, so
+                    // conv params pass through as their mode-1 unfolding
+                    // without a reshape copy.
+                    let name = names::fullrank("adam_step", *rows, *cols);
+                    let (ml, vl) = (m.loaded(), v.loaded());
+                    let out = rt.exec(
+                        &name,
+                        &[&params[i], &grads[i], &ml, &vl, &b1t, &b2t, &lr_t, &wd_t],
+                    )?;
+                    drop((ml, vl));
+                    let orig = params[i].dims().to_vec();
+                    let mut it = out.into_iter();
+                    params[i] = it.next().unwrap().reshaped(&orig);
+                    m.store(&it.next().unwrap());
+                    v.store(&it.next().unwrap());
+                    if self.track_ceu {
+                        stats.ceu += it.next().unwrap().scalar() as f64;
+                    }
+                }
+                Slot::MatrixFactor { rows, cols, m, r, c } => {
+                    let name = names::fullrank("adafactor_step", *rows, *cols);
+                    let (ml, rl, cl) = (m.loaded(), r.loaded(), c.loaded());
+                    let out = rt.exec(
+                        &name,
+                        &[&params[i], &grads[i], &ml, &rl, &cl, &t_t, &lr_t],
+                    )?;
+                    drop((ml, rl, cl));
+                    let orig = params[i].dims().to_vec();
+                    let mut it = out.into_iter();
+                    params[i] = it.next().unwrap().reshaped(&orig);
+                    m.store(&it.next().unwrap());
+                    r.store(&it.next().unwrap());
+                    c.store(&it.next().unwrap());
+                    if self.track_ceu {
+                        stats.ceu += it.next().unwrap().scalar() as f64;
+                    }
+                }
+            }
+            stats.step_time += t0.elapsed();
+        }
+        Ok(stats)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Vector { m, v } => (m.len() + v.len()) * 4,
+                Slot::MatrixAdam { m, v, .. } => m.nbytes() + v.nbytes(),
+                Slot::MatrixFactor { m, r, c, .. } => m.nbytes() + r.nbytes() + c.nbytes(),
+            })
+            .sum()
+    }
+
+    fn label(&self) -> String {
+        match self.base {
+            Base::Adam => "adamw".into(),
+            Base::Adafactor => "adafactor".into(),
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Optimizer-level LoRA / ReLoRA baselines (DESIGN.md §3).
+//!
+//! The effective weight W = W0 + B·A is maintained directly; adapter
+//! gradients derive from the full gradient (dA = B^T G, dB = G A^T) and
+//! each adapter gets its own Adam moments — memory is 4·r·(m+n) instead
+//! of 2·m·n, matching LoRA's optimizer-state footprint. ReLoRA adds the
+//! periodic merge: since W already carries B·A, a merge just re-zeros
+//! the adapters and their moments (a fresh low-rank direction), exactly
+//! the high-rank-through-low-rank-updates trick of the ReLoRA paper.
+//!
+//! Conv and vector parameters fall back to full-rank Adam (the paper
+//! applies LoRA to attention/MLP matrices).
+
+use super::{beta_powers, refimpl, Optimizer, StateBuf, StepStats};
+use crate::config::{OptKind, TrainConfig};
+use crate::rng::Rng;
+use crate::runtime::{names, ModelInfo, Runtime};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::time::Instant;
+
+enum Slot {
+    Adapters {
+        rows: usize,
+        cols: usize,
+        rank: usize,
+        a: Tensor,        // (r, n)
+        b: Tensor,        // (m, r)
+        ma: StateBuf,
+        va: StateBuf,
+        mb: StateBuf,
+        vb: StateBuf,
+    },
+    FullAdam { rows: usize, cols: usize, reshape: Option<Vec<usize>>, m: StateBuf, v: StateBuf },
+    Vector { m: Vec<f32>, v: Vec<f32> },
+}
+
+pub struct Lora {
+    relora: bool,
+    merge_every: usize,
+    slots: Vec<Slot>,
+    track_ceu: bool,
+    seed: u64,
+    /// Extra *model* bytes the adapters add (paper's "+48% model size").
+    pub adapter_bytes: usize,
+}
+
+impl Lora {
+    pub fn new(cfg: &TrainConfig, info: &ModelInfo) -> Result<Lora> {
+        let prec = cfg.state_precision;
+        let mut rng = Rng::new(cfg.seed ^ 0x70aa);
+        let mut adapter_bytes = 0usize;
+        let slots = info
+            .params
+            .iter()
+            .map(|p| match p.kind.as_str() {
+                "vector" => Slot::Vector { m: vec![0.0; p.numel()], v: vec![0.0; p.numel()] },
+                "matrix" => {
+                    let (m, n) = (p.shape[0], p.shape[1]);
+                    let rank = names::rank_for(&p.shape, cfg.rank_ratio);
+                    adapter_bytes += (rank * n + m * rank) * 4;
+                    Slot::Adapters {
+                        rows: m,
+                        cols: n,
+                        rank,
+                        // Standard LoRA init: A ~ N(0, small), B = 0.
+                        a: Tensor::from_f32(&[rank, n], rng.normal_vec(rank * n, 0.02)),
+                        b: Tensor::zeros(&[m, rank]),
+                        ma: StateBuf::zeros(&[rank, n], prec),
+                        va: StateBuf::zeros(&[rank, n], prec),
+                        mb: StateBuf::zeros(&[m, rank], prec),
+                        vb: StateBuf::zeros(&[m, rank], prec),
+                    }
+                }
+                _ => {
+                    let (rows, cols) = super::fullrank::flat2d(&p.shape);
+                    Slot::FullAdam {
+                        rows,
+                        cols,
+                        reshape: Some(p.shape.clone()),
+                        m: StateBuf::zeros(&[rows, cols], prec),
+                        v: StateBuf::zeros(&[rows, cols], prec),
+                    }
+                }
+            })
+            .collect();
+        Ok(Lora {
+            relora: cfg.optimizer == OptKind::Relora,
+            merge_every: cfg.relora_merge_every,
+            slots,
+            track_ceu: cfg.track_ceu,
+            seed: cfg.seed,
+            adapter_bytes,
+        })
+    }
+}
+
+impl Optimizer for Lora {
+    fn step(
+        &mut self,
+        t: usize,
+        lr: f32,
+        grads: &[Tensor],
+        params: &mut [Tensor],
+        rt: &Runtime,
+    ) -> Result<StepStats> {
+        let mut stats = StepStats::default();
+        let (b1t, b2t) = beta_powers(t);
+        let lr_t = Tensor::scalar_f32(lr);
+        let wd_t = Tensor::scalar_f32(0.0);
+        let merge = self.relora && self.merge_every > 0 && t % self.merge_every == 0;
+        let mut rng = Rng::new(self.seed ^ (t as u64) ^ 0x4e10);
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            match slot {
+                Slot::Vector { m, v } => {
+                    let w = params[i].f32s_mut();
+                    let ceu = refimpl::adamw_step_flat(w, grads[i].f32s(), m, v, t, lr, 0.0);
+                    if self.track_ceu {
+                        stats.ceu += ceu;
+                    }
+                }
+                Slot::FullAdam { rows, cols, reshape, m, v } => {
+                    let name = names::fullrank("adam_step", *rows, *cols);
+                    let (ml, vl) = (m.loaded(), v.loaded());
+                    let out = rt.exec(
+                        &name,
+                        &[&params[i], &grads[i], &ml, &vl, &b1t, &b2t, &lr_t, &wd_t],
+                    )?;
+                    drop((ml, vl));
+                    let orig = reshape.clone().unwrap_or_else(|| vec![*rows, *cols]);
+                    let mut it = out.into_iter();
+                    params[i] = it.next().unwrap().reshaped(&orig);
+                    m.store(&it.next().unwrap());
+                    v.store(&it.next().unwrap());
+                    if self.track_ceu {
+                        stats.ceu += it.next().unwrap().scalar() as f64;
+                    }
+                }
+                Slot::Adapters { rows, cols, rank, a, b, ma, va, mb, vb } => {
+                    let name = names::matrix_proj("lora_adam_step", *rows, *cols, *rank);
+                    let (mal, val, mbl, vbl) =
+                        (ma.loaded(), va.loaded(), mb.loaded(), vb.loaded());
+                    let out = rt.exec(
+                        &name,
+                        &[&params[i], a, b, &grads[i], &mal, &val, &mbl, &vbl, &b1t,
+                          &b2t, &lr_t],
+                    )?;
+                    drop((mal, val, mbl, vbl));
+                    let mut it = out.into_iter();
+                    params[i] = it.next().unwrap();
+                    *a = it.next().unwrap();
+                    *b = it.next().unwrap();
+                    ma.store(&it.next().unwrap());
+                    va.store(&it.next().unwrap());
+                    mb.store(&it.next().unwrap());
+                    vb.store(&it.next().unwrap());
+                    if self.track_ceu {
+                        stats.ceu += it.next().unwrap().scalar() as f64;
+                    }
+                    if merge {
+                        // ReLoRA merge: W keeps B·A (already applied);
+                        // restart the low-rank direction.
+                        *a = Tensor::from_f32(
+                            &[*rank, *cols],
+                            rng.normal_vec(*rank * *cols, 0.02),
+                        );
+                        *b = Tensor::zeros(&[*rows, *rank]);
+                        ma.store(&Tensor::zeros(&[*rank, *cols]));
+                        va.store(&Tensor::zeros(&[*rank, *cols]));
+                        mb.store(&Tensor::zeros(&[*rows, *rank]));
+                        vb.store(&Tensor::zeros(&[*rows, *rank]));
+                    }
+                }
+            }
+            stats.step_time += t0.elapsed();
+        }
+        Ok(stats)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Vector { m, v } => (m.len() + v.len()) * 4,
+                Slot::FullAdam { m, v, .. } => m.nbytes() + v.nbytes(),
+                Slot::Adapters { ma, va, mb, vb, .. } => {
+                    ma.nbytes() + va.nbytes() + mb.nbytes() + vb.nbytes()
+                }
+            })
+            .sum()
+    }
+
+    fn label(&self) -> String {
+        if self.relora { "relora".into() } else { "lora".into() }
+    }
+}

@@ -1,0 +1,517 @@
+//! The low-rank projected optimizers: COAP, GaLore and Flora.
+//!
+//! All three share the projected step executables (`coap_adam_step` /
+//! `coap_adafactor_step` and their Tucker-2 conv variants) — they differ
+//! ONLY in how the coordinator refreshes each layer's projection:
+//!
+//!   COAP    Eqn-6 SGD every T_u steps + Eqn-7 recalib every λ·T_u
+//!   GaLore  full SVD every `galore_interval` steps
+//!   Flora   fresh random Gaussian every `flora_interval` steps
+//!
+//! which is exactly the paper's framing (Sec. 3.2): the step math is
+//! identical, the *inter-projection correlation policy* is the variable.
+
+use super::scheduler::{CoapSchedule, IntervalSchedule, ProjAction};
+use super::{beta_powers, refimpl, Optimizer, StateBuf, StepStats};
+use crate::config::{ConvFormat, MomentBase, OptKind, TrainConfig};
+use crate::rng::Rng;
+use crate::runtime::{names, ModelInfo, Runtime};
+use crate::tensor::{Precision, Tensor};
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+enum Policy {
+    Coap(CoapSchedule),
+    Interval(IntervalSchedule),
+}
+
+impl Policy {
+    fn action(&self, t: usize) -> ProjAction {
+        match self {
+            Policy::Coap(s) => s.action(t),
+            Policy::Interval(s) => s.action(t),
+        }
+    }
+}
+
+enum States {
+    Adam { m: StateBuf, v: StateBuf },
+    Factor { m: StateBuf, rf: StateBuf, cf: StateBuf },
+}
+
+impl States {
+    fn nbytes(&self) -> usize {
+        match self {
+            States::Adam { m, v } => m.nbytes() + v.nbytes(),
+            States::Factor { m, rf, cf } => m.nbytes() + rf.nbytes() + cf.nbytes(),
+        }
+    }
+}
+
+enum Slot {
+    /// 2-D weight (or a conv treated as its mode-1 unfolding — Tucker-1).
+    Matrix {
+        rows: usize,
+        cols: usize,
+        rank: usize,
+        /// Set when the underlying param is conv reshaped to 2-D.
+        reshape: Option<Vec<usize>>,
+        p: Option<Tensor>,
+        st: States,
+    },
+    /// 4-D conv weight under Tucker-2 (optionally + spatial mode).
+    Conv {
+        shape: Vec<usize>,
+        ro: usize,
+        ri: usize,
+        po: Option<Tensor>,
+        pi: Option<Tensor>,
+        /// `Some` => "full Tucker" variant with fixed spatial projection.
+        ps: Option<Tensor>,
+        st: States,
+    },
+    Vector { m: Vec<f32>, v: Vec<f32> },
+}
+
+pub struct LowRank {
+    kind: OptKind,
+    base: MomentBase,
+    policy: Policy,
+    slots: Vec<Slot>,
+    weight_decay: f32,
+    track_ceu: bool,
+    rng: Rng,
+}
+
+impl LowRank {
+    pub fn new(cfg: &TrainConfig, info: &ModelInfo) -> Result<LowRank> {
+        let base = match cfg.optimizer {
+            OptKind::CoapAdafactor => MomentBase::Adafactor,
+            _ => cfg.lowrank_base,
+        };
+        let policy = match cfg.optimizer {
+            OptKind::Coap | OptKind::CoapAdafactor => Policy::Coap(CoapSchedule {
+                t_update: cfg.t_update,
+                lambda: cfg.lambda,
+                use_pupdate: cfg.ablation.use_pupdate,
+                use_recalib: cfg.ablation.use_recalib,
+            }),
+            OptKind::Galore => Policy::Interval(IntervalSchedule {
+                interval: if cfg.galore_interval > 0 {
+                    cfg.galore_interval
+                } else {
+                    cfg.t_update * cfg.lambda.max(1)
+                },
+                action: ProjAction::FullSvd,
+            }),
+            OptKind::Flora => Policy::Interval(IntervalSchedule {
+                interval: if cfg.flora_interval > 0 { cfg.flora_interval } else { cfg.t_update },
+                action: ProjAction::Resample,
+            }),
+            k => bail!("LowRank does not implement {k:?}"),
+        };
+        let prec = cfg.state_precision;
+        let mk_states = |proj_dims: &[usize], fac_rows: usize, fac_cols: usize| match base {
+            MomentBase::Adam => States::Adam {
+                m: StateBuf::zeros(proj_dims, prec),
+                v: StateBuf::zeros(proj_dims, prec),
+            },
+            MomentBase::Adafactor => States::Factor {
+                m: StateBuf::zeros(proj_dims, prec),
+                rf: StateBuf::zeros(&[fac_rows, 1], Precision::F32),
+                cf: StateBuf::zeros(&[1, fac_cols], Precision::F32),
+            },
+        };
+        let mut slots = Vec::new();
+        for p in &info.params {
+            let slot = match p.kind.as_str() {
+                "vector" => Slot::Vector { m: vec![0.0; p.numel()], v: vec![0.0; p.numel()] },
+                "matrix" => {
+                    let (m, n) = (p.shape[0], p.shape[1]);
+                    let rank = names::rank_for(&p.shape, cfg.rank_ratio);
+                    let (mb, _nb) = names::normalized(m, n);
+                    Slot::Matrix {
+                        rows: m,
+                        cols: n,
+                        rank,
+                        reshape: None,
+                        p: None,
+                        st: mk_states(&[mb, rank], mb, rank),
+                    }
+                }
+                "conv" => match cfg.conv_format {
+                    ConvFormat::Tucker1 => {
+                        // Mode-1 unfolding: (O, I*K1*K2) through the
+                        // matrix machinery (App. Fig 1's Tucker-1 bar).
+                        // Rank rule matches the python emitter: the
+                        // O-side Tucker rank, not the matrix rule.
+                        let (o, rest) = super::fullrank::flat2d(&p.shape);
+                        let rank = names::conv_ranks(&p.shape, cfg.rank_ratio).0;
+                        let (mb, _) = names::normalized(o, rest);
+                        Slot::Matrix {
+                            rows: o,
+                            cols: rest,
+                            rank,
+                            reshape: Some(p.shape.clone()),
+                            p: None,
+                            st: mk_states(&[mb, rank], mb, rank),
+                        }
+                    }
+                    fmt => {
+                        let (ro, ri) = names::conv_ranks(&p.shape, cfg.rank_ratio);
+                        let (k1, k2) = (p.shape[2], p.shape[3]);
+                        let full = fmt == ConvFormat::Full;
+                        let rs = ((k1 * k2) / 2).max(2);
+                        let proj_dims: Vec<usize> = if full {
+                            vec![ro, ri, rs]
+                        } else {
+                            vec![ro, ri, k1, k2]
+                        };
+                        Slot::Conv {
+                            shape: p.shape.clone(),
+                            ro,
+                            ri,
+                            po: None,
+                            pi: None,
+                            ps: if full { Some(Tensor::zeros(&[k1 * k2, rs])) } else { None },
+                            st: mk_states(&proj_dims, ro, ri * k1 * k2),
+                        }
+                    }
+                },
+                k => bail!("unknown param kind '{k}'"),
+            };
+            slots.push(slot);
+        }
+        let mut lr = LowRank {
+            kind: cfg.optimizer,
+            base,
+            policy,
+            slots,
+            weight_decay: cfg.weight_decay,
+            track_ceu: cfg.track_ceu,
+            rng: Rng::new(cfg.seed ^ 0x10c4),
+        };
+        lr.init_spatial_projections();
+        Ok(lr)
+    }
+
+    /// Fixed random orthonormal spatial projections for the full-Tucker
+    /// variant (DESIGN.md §3 — demonstrates the format's quality cost).
+    fn init_spatial_projections(&mut self) {
+        for slot in &mut self.slots {
+            if let Slot::Conv { ps: Some(ps), .. } = slot {
+                let dims = ps.dims().to_vec();
+                let raw = Tensor::from_f32(&dims, self.rng.normal_vec(dims[0] * dims[1], 1.0));
+                *ps = refimpl::mgs_qr(&raw);
+            }
+        }
+    }
+
+    fn random_p(rng: &mut Rng, n: usize, r: usize, orthonormal: bool) -> Tensor {
+        if orthonormal {
+            refimpl::mgs_qr(&Tensor::from_f32(&[n, r], rng.normal_vec(n * r, 1.0)))
+        } else {
+            // Flora scaling: entries N(0, 1/r) so E[P P^T] = I_n / 1.
+            Tensor::from_f32(&[n, r], rng.normal_vec(n * r, 1.0 / (r as f32).sqrt()))
+        }
+    }
+
+    /// Refresh one matrix-slot projection per the policy's action.
+    #[allow(clippy::too_many_arguments)]
+    fn refresh_matrix(
+        &self,
+        rng: &mut Rng,
+        action: ProjAction,
+        rows: usize,
+        cols: usize,
+        rank: usize,
+        p: &mut Option<Tensor>,
+        st: &States,
+        g2: &Tensor,
+        rt: &Runtime,
+    ) -> Result<()> {
+        let nb = rows.min(cols);
+        if p.is_none() {
+            // Algorithm 1 line 3: random init (then the action below may
+            // immediately recalibrate/SVD it).
+            *p = Some(Self::random_p(rng, nb, rank, self.kind != OptKind::Flora));
+        }
+        match action {
+            ProjAction::Keep => {}
+            ProjAction::Resample => {
+                *p = Some(Self::random_p(rng, nb, rank, false));
+            }
+            ProjAction::Recalib => {
+                let name = names::matrix_proj("recalib", rows, cols, rank);
+                let out = rt.exec(&name, &[p.as_ref().unwrap(), g2])?;
+                *p = Some(out.into_iter().next().unwrap());
+            }
+            ProjAction::FullSvd => {
+                let name = names::matrix_proj("galore_svd", rows, cols, rank);
+                let out = rt.exec(&name, &[g2])?;
+                *p = Some(out.into_iter().next().unwrap());
+            }
+            ProjAction::PUpdate => {
+                let ml = match st {
+                    States::Adam { m, .. } => m.loaded(),
+                    States::Factor { m, .. } => m.loaded(),
+                };
+                let name = names::matrix_proj("pupdate", rows, cols, rank);
+                let out = rt.exec(&name, &[p.as_ref().unwrap(), g2, &ml])?;
+                *p = Some(out.into_iter().next().unwrap());
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Optimizer for LowRank {
+    fn step(
+        &mut self,
+        t: usize,
+        lr: f32,
+        grads: &[Tensor],
+        params: &mut [Tensor],
+        rt: &Runtime,
+    ) -> Result<StepStats> {
+        let mut stats = StepStats::default();
+        let (b1t, b2t) = beta_powers(t);
+        let lr_t = Tensor::scalar_f32(lr);
+        let wd_t = Tensor::scalar_f32(self.weight_decay);
+        let t_t = Tensor::scalar_f32(t as f32);
+        let action = self.policy.action(t);
+        let mut rng = self.rng.clone();
+        let track_ceu = self.track_ceu;
+        let kind = self.kind;
+
+        // Split borrow: we need &self for refresh_matrix while mutating
+        // slots — take the slots vector out for the loop.
+        let mut slots = std::mem::take(&mut self.slots);
+        let result = (|| -> Result<()> {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                match slot {
+                    Slot::Vector { m, v } => {
+                        let t0 = Instant::now();
+                        let w = params[i].f32s_mut();
+                        let ceu =
+                            refimpl::adamw_step_flat(w, grads[i].f32s(), m, v, t, lr, 0.0);
+                        if track_ceu {
+                            stats.ceu += ceu;
+                        }
+                        stats.step_time += t0.elapsed();
+                    }
+                    Slot::Matrix { rows, cols, rank, reshape: _, p, st } => {
+                        // exec() accepts layout-compatible shapes, so conv
+                        // weights flow through their mode-1 unfolding
+                        // graphs without reshape copies.
+                        let tp = Instant::now();
+                        self.refresh_matrix(
+                            &mut rng, action, *rows, *cols, *rank, p, st, &grads[i], rt,
+                        )?;
+                        stats.proj_time += tp.elapsed();
+
+                        let t0 = Instant::now();
+                        let pt = p.as_ref().unwrap();
+                        let orig_dims = params[i].dims().to_vec();
+                        let (ceu, new_w) = match st {
+                            States::Adam { m, v } => {
+                                let name =
+                                    names::matrix_proj("coap_adam_step", *rows, *cols, *rank);
+                                let (ml, vl) = (m.loaded(), v.loaded());
+                                let out = rt.exec(
+                                    &name,
+                                    &[&params[i], &grads[i], &ml, &vl, pt, &b1t, &b2t,
+                                      &lr_t, &wd_t],
+                                )?;
+                                drop((ml, vl));
+                                let mut it = out.into_iter();
+                                let w = it.next().unwrap();
+                                m.store(&it.next().unwrap());
+                                v.store(&it.next().unwrap());
+                                (it.next().unwrap().scalar(), w)
+                            }
+                            States::Factor { m, rf, cf } => {
+                                let name = names::matrix_proj(
+                                    "coap_adafactor_step",
+                                    *rows,
+                                    *cols,
+                                    *rank,
+                                );
+                                let (ml, rl, cl) = (m.loaded(), rf.loaded(), cf.loaded());
+                                let out = rt.exec(
+                                    &name,
+                                    &[&params[i], &grads[i], &ml, &rl, &cl, pt, &t_t, &lr_t],
+                                )?;
+                                drop((ml, rl, cl));
+                                let mut it = out.into_iter();
+                                let w = it.next().unwrap();
+                                m.store(&it.next().unwrap());
+                                rf.store(&it.next().unwrap());
+                                cf.store(&it.next().unwrap());
+                                (it.next().unwrap().scalar(), w)
+                            }
+                        };
+                        params[i] = new_w.reshaped(&orig_dims);
+                        if track_ceu {
+                            stats.ceu += ceu as f64;
+                        }
+                        stats.step_time += t0.elapsed();
+                    }
+                    Slot::Conv { shape, ro, ri, po, pi, ps, st } => {
+                        let g4 = &grads[i];
+                        let (o, ic) = (shape[0], shape[1]);
+                        let tp = Instant::now();
+                        if po.is_none() {
+                            *po = Some(Self::random_p(&mut rng, o, *ro, kind != OptKind::Flora));
+                            *pi = Some(Self::random_p(&mut rng, ic, *ri, kind != OptKind::Flora));
+                        }
+                        match action {
+                            ProjAction::Keep => {}
+                            ProjAction::Resample => {
+                                *po = Some(Self::random_p(&mut rng, o, *ro, false));
+                                *pi = Some(Self::random_p(&mut rng, ic, *ri, false));
+                            }
+                            ProjAction::Recalib | ProjAction::FullSvd => {
+                                let tpl = if action == ProjAction::Recalib {
+                                    "conv_recalib"
+                                } else {
+                                    "conv_svd"
+                                };
+                                for (side, pref) in [("o", &mut *po), ("i", &mut *pi)] {
+                                    let name = names::conv(
+                                        &format!("{tpl}_{side}"),
+                                        shape,
+                                        *ro,
+                                        *ri,
+                                    );
+                                    let inputs: Vec<&Tensor> =
+                                        if action == ProjAction::Recalib {
+                                            vec![pref.as_ref().unwrap(), g4]
+                                        } else {
+                                            vec![g4]
+                                        };
+                                    let out = rt.exec(&name, &inputs)?;
+                                    *pref = Some(out.into_iter().next().unwrap());
+                                }
+                            }
+                            ProjAction::PUpdate => {
+                                // Full-Tucker moments have an incompatible
+                                // spatial shape; recalib-only there.
+                                if ps.is_none() {
+                                    let m_proj = match st {
+                                        States::Adam { m, .. } => m.loaded(),
+                                        States::Factor { m, .. } => m.loaded(),
+                                    };
+                                    let po_t = po.clone().unwrap();
+                                    let pi_t = pi.clone().unwrap();
+                                    let name_o =
+                                        names::conv("conv_pupdate_o", shape, *ro, *ri);
+                                    let out = rt
+                                        .exec(&name_o, &[&po_t, g4, &m_proj, &pi_t])?;
+                                    *po = Some(out.into_iter().next().unwrap());
+                                    let name_i =
+                                        names::conv("conv_pupdate_i", shape, *ro, *ri);
+                                    let out = rt.exec(
+                                        &name_i,
+                                        &[&pi_t, g4, &m_proj, po.as_ref().unwrap()],
+                                    )?;
+                                    *pi = Some(out.into_iter().next().unwrap());
+                                }
+                            }
+                        }
+                        stats.proj_time += tp.elapsed();
+
+                        let t0 = Instant::now();
+                        let pot = po.as_ref().unwrap();
+                        let pit = pi.as_ref().unwrap();
+                        let (ceu, new_w) = match (st, ps.as_ref()) {
+                            (States::Adam { m, v }, None) => {
+                                let name = names::conv("coap_adam_conv_step", shape, *ro, *ri);
+                                let (ml, vl) = (m.loaded(), v.loaded());
+                                let out = rt.exec(
+                                    &name,
+                                    &[&params[i], g4, &ml, &vl, pot, pit, &b1t, &b2t,
+                                      &lr_t, &wd_t],
+                                )?;
+                                drop((ml, vl));
+                                let mut it = out.into_iter();
+                                let w = it.next().unwrap();
+                                m.store(&it.next().unwrap());
+                                v.store(&it.next().unwrap());
+                                (it.next().unwrap().scalar(), w)
+                            }
+                            (States::Adam { m, v }, Some(ps_t)) => {
+                                let name = names::conv_full(shape, *ro, *ri);
+                                let (ml, vl) = (m.loaded(), v.loaded());
+                                let out = rt.exec(
+                                    &name,
+                                    &[&params[i], g4, &ml, &vl, pot, pit, ps_t, &b1t,
+                                      &b2t, &lr_t, &wd_t],
+                                )?;
+                                drop((ml, vl));
+                                let mut it = out.into_iter();
+                                let w = it.next().unwrap();
+                                m.store(&it.next().unwrap());
+                                v.store(&it.next().unwrap());
+                                (it.next().unwrap().scalar(), w)
+                            }
+                            (States::Factor { m, rf, cf }, _) => {
+                                let name =
+                                    names::conv("coap_adafactor_conv_step", shape, *ro, *ri);
+                                let (ml, rl, cl) = (m.loaded(), rf.loaded(), cf.loaded());
+                                let out = rt.exec(
+                                    &name,
+                                    &[&params[i], g4, &ml, &rl, &cl, pot, pit, &t_t, &lr_t],
+                                )?;
+                                drop((ml, rl, cl));
+                                let mut it = out.into_iter();
+                                let w = it.next().unwrap();
+                                m.store(&it.next().unwrap());
+                                rf.store(&it.next().unwrap());
+                                cf.store(&it.next().unwrap());
+                                (it.next().unwrap().scalar(), w)
+                            }
+                        };
+                        params[i] = new_w;
+                        if track_ceu {
+                            stats.ceu += ceu as f64;
+                        }
+                        stats.step_time += t0.elapsed();
+                    }
+                }
+            }
+            Ok(())
+        })();
+        self.slots = slots;
+        self.rng = rng;
+        result?;
+        Ok(stats)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Vector { m, v } => (m.len() + v.len()) * 4,
+                Slot::Matrix { p, st, .. } => {
+                    st.nbytes() + p.as_ref().map_or(0, |p| p.numel() * 4)
+                }
+                Slot::Conv { po, pi, ps, st, .. } => {
+                    st.nbytes()
+                        + po.as_ref().map_or(0, |p| p.numel() * 4)
+                        + pi.as_ref().map_or(0, |p| p.numel() * 4)
+                        + ps.as_ref().map_or(0, |p| p.numel() * 4)
+                }
+            })
+            .sum()
+    }
+
+    fn label(&self) -> String {
+        let base = match self.base {
+            MomentBase::Adam => "",
+            MomentBase::Adafactor => "-adafactor",
+        };
+        format!("{}{base}", self.kind.label())
+    }
+}

@@ -1,0 +1,222 @@
+//! L3 optimizer coordination — the paper's system contribution.
+//!
+//! The HLO graphs are pure functions; everything stateful lives here:
+//! per-layer optimizer state (at the configured storage precision), the
+//! projection matrices, and the `T_u`/`λ` schedule that decides per step
+//! whether a layer runs a plain projected step, an Eqn-6 SGD P-update,
+//! or an Eqn-7 recalibration (Algorithm 1's control flow).
+//!
+//! Implementations:
+//! - [`fullrank`]: AdamW / Adafactor baselines.
+//! - [`lowrank`]: COAP / GaLore / Flora (matrix + Tucker-2 conv), which
+//!   share the projected step graphs and differ only in refresh policy.
+//! - [`lora`]: optimizer-level LoRA / ReLoRA baselines.
+//! - [`refimpl`]: pure-Rust oracles for every update rule (tests, vector
+//!   params, and the mock runtime).
+
+pub mod fullrank;
+pub mod lora;
+pub mod lowrank;
+pub mod refimpl;
+pub mod scheduler;
+
+use crate::config::{OptKind, TrainConfig};
+use crate::runtime::{ModelInfo, Runtime};
+use crate::tensor::{quant, Precision, Tensor};
+use anyhow::Result;
+use std::time::Duration;
+
+/// Per-step accounting returned by [`Optimizer::step`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    /// Cumulative effective update contribution: sum_l ||W_t - W_{t-1}||_1
+    /// (the paper's CEU metric, Fig. 3). Zero unless tracking is on.
+    pub ceu: f64,
+    /// Time spent refreshing projections this step (Eqn 6/7, SVD, RNG).
+    pub proj_time: Duration,
+    /// Time spent in weight/moment update executions.
+    pub step_time: Duration,
+}
+
+impl StepStats {
+    pub fn merge(&mut self, other: &StepStats) {
+        self.ceu += other.ceu;
+        self.proj_time += other.proj_time;
+        self.step_time += other.step_time;
+    }
+}
+
+pub trait Optimizer: Send {
+    /// Apply one optimizer step. `t` is 1-based; `grads` and `params`
+    /// are in manifest census order.
+    fn step(
+        &mut self,
+        t: usize,
+        lr: f32,
+        grads: &[Tensor],
+        params: &mut [Tensor],
+        rt: &Runtime,
+    ) -> Result<StepStats>;
+
+    /// Exact bytes of optimizer state currently held (paper's
+    /// "Optimizer Mem." columns).
+    fn state_bytes(&self) -> usize;
+
+    fn label(&self) -> String;
+}
+
+/// Construct the optimizer the config asks for.
+pub fn build(cfg: &TrainConfig, info: &ModelInfo) -> Result<Box<dyn Optimizer>> {
+    Ok(match cfg.optimizer {
+        OptKind::AdamW => Box::new(fullrank::FullRank::adamw(cfg, info)),
+        OptKind::Adafactor => Box::new(fullrank::FullRank::adafactor(cfg, info)),
+        OptKind::Coap | OptKind::Galore | OptKind::Flora => {
+            Box::new(lowrank::LowRank::new(cfg, info)?)
+        }
+        OptKind::CoapAdafactor => Box::new(lowrank::LowRank::new(cfg, info)?),
+        OptKind::Lora | OptKind::Relora => Box::new(lora::Lora::new(cfg, info)?),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Precision-policy state storage
+// ---------------------------------------------------------------------------
+
+/// One optimizer-state buffer stored at the configured precision.
+/// Dequantized to f32 right before an HLO step and re-quantized after —
+/// only the *storage between steps* is compressed (the 8-bit optimizer
+/// contract of Dettmers et al.).
+#[derive(Debug, Clone)]
+pub enum StateBuf {
+    F32(Tensor),
+    Bf16 { dims: Vec<usize>, data: Vec<u16> },
+    Int8 { dims: Vec<usize>, q: quant::QuantizedBuf },
+}
+
+impl StateBuf {
+    pub fn zeros(dims: &[usize], precision: Precision) -> StateBuf {
+        let n: usize = dims.iter().product();
+        match precision {
+            Precision::F32 => StateBuf::F32(Tensor::zeros(dims)),
+            Precision::Bf16 => StateBuf::Bf16 { dims: dims.to_vec(), data: vec![0; n] },
+            Precision::Int8 => StateBuf::Int8 {
+                dims: dims.to_vec(),
+                q: quant::quantize(&vec![0.0; n]),
+            },
+        }
+    }
+
+    /// Borrow the f32 state directly (no copy) or dequantize into an
+    /// owned tensor — the hot path's zero-copy accessor.
+    pub fn loaded(&self) -> Loaded<'_> {
+        match self {
+            StateBuf::F32(t) => Loaded::Ref(t),
+            _ => Loaded::Owned(self.load()),
+        }
+    }
+
+    pub fn load(&self) -> Tensor {
+        match self {
+            StateBuf::F32(t) => t.clone(),
+            StateBuf::Bf16 { dims, data } => {
+                let mut out = vec![0.0f32; data.len()];
+                crate::tensor::bf16::decode(data, &mut out);
+                Tensor::from_f32(dims, out)
+            }
+            StateBuf::Int8 { dims, q } => {
+                Tensor::from_f32(dims, quant::dequantize_vec(q))
+            }
+        }
+    }
+
+    pub fn store(&mut self, t: &Tensor) {
+        match self {
+            StateBuf::F32(slot) => {
+                debug_assert_eq!(slot.dims(), t.dims());
+                *slot = t.clone();
+            }
+            StateBuf::Bf16 { dims, data } => {
+                debug_assert_eq!(&dims[..], t.dims());
+                crate::tensor::bf16::encode(t.f32s(), data);
+            }
+            StateBuf::Int8 { dims, q } => {
+                debug_assert_eq!(&dims[..], t.dims());
+                *q = quant::quantize(t.f32s());
+            }
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        match self {
+            StateBuf::F32(t) => t.numel() * 4,
+            StateBuf::Bf16 { data, .. } => data.len() * 2,
+            StateBuf::Int8 { q, .. } => q.nbytes(),
+        }
+    }
+}
+
+/// Borrowed-or-owned state tensor (see [`StateBuf::loaded`]).
+pub enum Loaded<'a> {
+    Ref(&'a Tensor),
+    Owned(Tensor),
+}
+
+impl std::ops::Deref for Loaded<'_> {
+    type Target = Tensor;
+    fn deref(&self) -> &Tensor {
+        match self {
+            Loaded::Ref(t) => t,
+            Loaded::Owned(t) => t,
+        }
+    }
+}
+
+/// Scalar graph inputs for the Adam family: (beta1^t, beta2^t).
+pub fn beta_powers(t: usize) -> (Tensor, Tensor) {
+    let b1t = 0.9f64.powi(t as i32) as f32;
+    let b2t = 0.999f64.powi(t as i32) as f32;
+    (Tensor::scalar_f32(b1t), Tensor::scalar_f32(b2t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn statebuf_roundtrip_precisions() {
+        let t = Tensor::from_f32(&[4, 8], (0..32).map(|i| i as f32 * 0.13 - 2.0).collect());
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let mut b = StateBuf::zeros(&[4, 8], prec);
+            assert_eq!(b.load().f32s(), &vec![0.0; 32][..], "{prec:?} zero init");
+            b.store(&t);
+            let back = b.load();
+            let tol = match prec {
+                Precision::F32 => 0.0,
+                Precision::Bf16 => 0.02,
+                // dynamic 8-bit: ~7% relative error at |v| up to 2.
+                Precision::Int8 => 0.15,
+            };
+            assert!(back.max_abs_diff(&t) <= tol, "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn statebuf_bytes_ordering() {
+        let dims = [256usize, 4usize];
+        let f = StateBuf::zeros(&dims, Precision::F32).nbytes();
+        let b = StateBuf::zeros(&dims, Precision::Bf16).nbytes();
+        let i = StateBuf::zeros(&dims, Precision::Int8).nbytes();
+        assert_eq!(f, 4096);
+        assert_eq!(b, 2048);
+        assert!(i < b && i >= 1024);
+    }
+
+    #[test]
+    fn beta_powers_decay() {
+        let (b1a, b2a) = beta_powers(1);
+        let (b1b, _) = beta_powers(100);
+        assert!((b1a.scalar() - 0.9).abs() < 1e-6);
+        assert!((b2a.scalar() - 0.999).abs() < 1e-6);
+        assert!(b1b.scalar() < b1a.scalar());
+    }
+}

@@ -1,0 +1,453 @@
+//! Pure-Rust reference implementations of every update rule.
+//!
+//! Three jobs:
+//! 1. cross-layer validation — `rust/tests/refimpl_vs_hlo.rs` asserts the
+//!    HLO executables match these oracles bit-for-tolerance;
+//! 2. vector-parameter updates on the hot path (tiny tensors where a
+//!    PJRT round trip costs more than the math);
+//! 3. a mock runtime for unit tests that must not depend on artifacts.
+
+use crate::tensor::Tensor;
+
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+
+/// Fused Adam moment update; returns the bias-corrected step direction.
+pub fn adam_update(m: &mut [f32], v: &mut [f32], g: &[f32], b1t: f32, b2t: f32) -> Vec<f32> {
+    let mut delta = vec![0.0f32; g.len()];
+    for i in 0..g.len() {
+        m[i] = BETA1 * m[i] + (1.0 - BETA1) * g[i];
+        v[i] = BETA2 * v[i] + (1.0 - BETA2) * g[i] * g[i];
+        let mh = m[i] / (1.0 - b1t);
+        let vh = v[i] / (1.0 - b2t);
+        delta[i] = mh / (vh.sqrt() + EPS);
+    }
+    delta
+}
+
+/// Full AdamW step on a flat buffer (vectors and the mock path).
+pub fn adamw_step_flat(
+    w: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: usize,
+    lr: f32,
+    wd: f32,
+) -> f64 {
+    let b1t = BETA1.powi(t as i32);
+    let b2t = BETA2.powi(t as i32);
+    let delta = adam_update(m, v, g, b1t, b2t);
+    let mut ceu = 0.0f64;
+    for i in 0..w.len() {
+        let step = lr * (delta[i] + wd * w[i]);
+        w[i] -= step;
+        ceu += step.abs() as f64;
+    }
+    ceu
+}
+
+/// Adafactor-with-momentum (paper Algorithm 2 semantics) on an (m, n)
+/// matrix. r_fac (m), c_fac (n) are the factored second-moment rows/cols.
+#[allow(clippy::too_many_arguments)]
+pub fn adafactor_step(
+    w: &mut [f32],
+    g: &[f32],
+    mom: &mut [f32],
+    r_fac: &mut [f32],
+    c_fac: &mut [f32],
+    rows: usize,
+    cols: usize,
+    t: usize,
+    lr: f32,
+) -> f64 {
+    const DECAY: f32 = -0.8;
+    const AEPS: f32 = 1e-30;
+    let beta2t = 1.0 - (t as f32).powf(DECAY);
+    for i in 0..rows {
+        let sum: f32 = (0..cols).map(|j| g[i * cols + j].powi(2) + AEPS).sum();
+        r_fac[i] = beta2t * r_fac[i] + (1.0 - beta2t) * sum;
+    }
+    for j in 0..cols {
+        let sum: f32 = (0..rows).map(|i| g[i * cols + j].powi(2) + AEPS).sum();
+        c_fac[j] = beta2t * c_fac[j] + (1.0 - beta2t) * sum;
+    }
+    let rmean: f32 = r_fac.iter().sum::<f32>() / rows as f32;
+    let mut ceu = 0.0f64;
+    for i in 0..rows {
+        for j in 0..cols {
+            let idx = i * cols + j;
+            mom[idx] = BETA1 * mom[idx] + (1.0 - BETA1) * g[idx];
+            let vhat = (rmean / (r_fac[i] * c_fac[j] + AEPS)).sqrt();
+            let step = lr * mom[idx] * vhat;
+            w[idx] -= step;
+            ceu += step.abs() as f64;
+        }
+    }
+    ceu
+}
+
+// ---------------------------------------------------------------------------
+// Linear algebra oracles (mirror python/compile/linalg.py)
+// ---------------------------------------------------------------------------
+
+/// Two-pass modified Gram-Schmidt reduced QR: returns Q (m, r).
+pub fn mgs_qr(x: &Tensor) -> Tensor {
+    let (m, r) = (x.dims()[0], x.dims()[1]);
+    let xs = x.f32s();
+    let mut q = vec![0.0f32; m * r];
+    for j in 0..r {
+        let mut v: Vec<f32> = (0..m).map(|i| xs[i * r + j]).collect();
+        for _pass in 0..2 {
+            for k in 0..j {
+                let dot: f32 = (0..m).map(|i| q[i * r + k] * v[i]).sum();
+                for i in 0..m {
+                    v[i] -= dot * q[i * r + k];
+                }
+            }
+        }
+        let norm = v.iter().map(|a| a * a).sum::<f32>().sqrt() + 1e-12;
+        for i in 0..m {
+            q[i * r + j] = v[i] / norm;
+        }
+    }
+    Tensor::from_f32(&[m, r], q)
+}
+
+/// One-sided Jacobi column orthogonalization (round-robin pairing).
+/// Returns (X·V, V if requested). Mirrors `linalg.onesided_jacobi`.
+pub fn onesided_jacobi(x: &Tensor, sweeps: usize, compute_v: bool) -> (Tensor, Option<Tensor>) {
+    let (m, n0) = (x.dims()[0], x.dims()[1]);
+    let padded = n0 % 2 == 1;
+    let n = if padded { n0 + 1 } else { n0 };
+    let mut xs = vec![0.0f32; m * n];
+    for i in 0..m {
+        xs[i * n..i * n + n0].copy_from_slice(&x.f32s()[i * n0..(i + 1) * n0]);
+    }
+    let mut vs = if compute_v {
+        let mut v = vec![0.0f32; n * n];
+        for i in 0..n {
+            v[i * n + i] = 1.0;
+        }
+        Some(v)
+    } else {
+        None
+    };
+    let half = n / 2;
+    let nm1 = n - 1;
+    for _sweep in 0..sweeps {
+        for k in 0..nm1 {
+            for i in 0..half {
+                let a = if i == 0 { nm1 } else { (k + i) % nm1 };
+                let b = if i == 0 { k % nm1 } else { (k + nm1 - i) % nm1 };
+                let (mut alpha, mut beta, mut gamma) = (0.0f64, 0.0f64, 0.0f64);
+                for row in 0..m {
+                    let xa = xs[row * n + a] as f64;
+                    let xb = xs[row * n + b] as f64;
+                    alpha += xa * xa;
+                    beta += xb * xb;
+                    gamma += xa * xb;
+                }
+                if gamma.abs() <= 1e-20 {
+                    continue;
+                }
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let sz = if zeta >= 0.0 { 1.0 } else { -1.0 };
+                let t = sz / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for row in 0..m {
+                    let xa = xs[row * n + a];
+                    let xb = xs[row * n + b];
+                    xs[row * n + a] = (c as f32) * xa - (s as f32) * xb;
+                    xs[row * n + b] = (s as f32) * xa + (c as f32) * xb;
+                }
+                if let Some(v) = vs.as_mut() {
+                    for row in 0..n {
+                        let va = v[row * n + a];
+                        let vb = v[row * n + b];
+                        v[row * n + a] = (c as f32) * va - (s as f32) * vb;
+                        v[row * n + b] = (s as f32) * va + (c as f32) * vb;
+                    }
+                }
+            }
+        }
+    }
+    // Strip padding.
+    let y = if padded {
+        let mut out = vec![0.0f32; m * n0];
+        for i in 0..m {
+            out[i * n0..(i + 1) * n0].copy_from_slice(&xs[i * n..i * n + n0]);
+        }
+        Tensor::from_f32(&[m, n0], out)
+    } else {
+        Tensor::from_f32(&[m, n], xs)
+    };
+    let v = vs.map(|v| {
+        if padded {
+            let mut out = vec![0.0f32; n0 * n0];
+            for i in 0..n0 {
+                out[i * n0..(i + 1) * n0].copy_from_slice(&v[i * n..i * n + n0]);
+            }
+            Tensor::from_f32(&[n0, n0], out)
+        } else {
+            Tensor::from_f32(&[n, n], v)
+        }
+    });
+    (y, v)
+}
+
+fn sort_cols_desc(y: &Tensor, extra: Option<&Tensor>) -> (Tensor, Vec<f32>, Option<Tensor>) {
+    let (m, n) = (y.dims()[0], y.dims()[1]);
+    let ys = y.f32s();
+    let mut norms: Vec<f32> = (0..n)
+        .map(|j| (0..m).map(|i| ys[i * n + j].powi(2)).sum::<f32>().sqrt())
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+    let permute = |t: &Tensor| {
+        let (rm, rn) = (t.dims()[0], t.dims()[1]);
+        let ts = t.f32s();
+        let mut out = vec![0.0f32; rm * rn];
+        for (newj, &oldj) in order.iter().enumerate() {
+            for i in 0..rm {
+                out[i * rn + newj] = ts[i * rn + oldj];
+            }
+        }
+        Tensor::from_f32(&[rm, rn], out)
+    };
+    let sorted = permute(y);
+    norms = order.iter().map(|&j| norms[j]).collect();
+    (sorted, norms, extra.map(permute))
+}
+
+/// Top-r right singular vectors of g — the GaLore SVD oracle.
+pub fn svd_topk(g: &Tensor, rank: usize, sweeps: usize) -> (Tensor, Vec<f32>) {
+    let (y, v) = onesided_jacobi(g, sweeps, true);
+    let (_, norms, v_sorted) = sort_cols_desc(&y, v.as_ref());
+    let v_sorted = v_sorted.unwrap();
+    let n = v_sorted.dims()[0];
+    let vs = v_sorted.f32s();
+    let mut p = vec![0.0f32; n * rank];
+    for i in 0..n {
+        p[i * rank..(i + 1) * rank].copy_from_slice(&vs[i * n..i * n + rank]);
+    }
+    (Tensor::from_f32(&[n, rank], p), norms[..rank].to_vec())
+}
+
+/// Eqn-7 low-cost recalibration oracle.
+pub fn lowcost_recalib(g: &Tensor, p_prev: &Tensor, sweeps: usize) -> Tensor {
+    let q = mgs_qr(&g.matmul(p_prev)); // (m, r)
+    let b = q.transposed2d().matmul(g); // (r, n)
+    let (y, _) = onesided_jacobi(&b.transposed2d(), sweeps, false); // (n, r)
+    let (sorted, norms, _) = sort_cols_desc(&y, None);
+    let (n, r) = (sorted.dims()[0], sorted.dims()[1]);
+    let ss = sorted.f32s();
+    let mut z = vec![0.0f32; n * r];
+    for j in 0..r {
+        let inv = 1.0 / (norms[j] + 1e-12);
+        for i in 0..n {
+            z[i * r + j] = ss[i * r + j] * inv;
+        }
+    }
+    Tensor::from_f32(&[n, r], z)
+}
+
+/// Eqn-6 objective value: MSE(GPP^T, G) * (1 - CosSim(MP^T, G)).
+pub fn eqn6_objective(p: &Tensor, g: &Tensor, m_proj: &Tensor) -> f64 {
+    let ghat = g.matmul(p).matmul(&p.transposed2d());
+    let (m, n) = (g.dims()[0], g.dims()[1]);
+    let gs = g.f32s();
+    let hs = ghat.f32s();
+    let mse: f64 = gs
+        .iter()
+        .zip(hs)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / (m * n) as f64;
+    let mhat = m_proj.matmul(&p.transposed2d());
+    let ms = mhat.f32s();
+    let mut cos_sum = 0.0f64;
+    for i in 0..m {
+        let row_m = &ms[i * n..(i + 1) * n];
+        let row_g = &gs[i * n..(i + 1) * n];
+        let dot: f64 = row_m.iter().zip(row_g).map(|(a, b)| (a * b) as f64).sum();
+        let nm: f64 = row_m.iter().map(|a| (a * a) as f64).sum::<f64>().sqrt() + 1e-12;
+        let ng: f64 = row_g.iter().map(|a| (a * a) as f64).sum::<f64>().sqrt() + 1e-12;
+        cos_sum += dot / (nm * ng);
+    }
+    mse * (1.0 - cos_sum / m as f64)
+}
+
+/// Eqn-6 SGD P-update oracle (mirrors linalg.pupdate_sgd).
+pub fn pupdate_sgd(p: &Tensor, g: &Tensor, m_proj: &Tensor, iters: usize, lr: f32) -> Tensor {
+    let (m, n) = (g.dims()[0], g.dims()[1]);
+    let mut p = p.clone();
+    for _ in 0..iters {
+        let gp = g.matmul(&p); // (m, r)
+        let ghat = gp.matmul(&p.transposed2d()); // (m, n)
+        let gs = g.f32s();
+        let hs = ghat.f32s();
+        let mse: f64 = gs
+            .iter()
+            .zip(hs)
+            .map(|(a, b)| ((b - a) as f64).powi(2))
+            .sum::<f64>()
+            / (m * n) as f64;
+        // dMSE = 2/(mn) (Ghat^T G P - 2 G^T G P + G^T Ghat P)
+        let gt = g.transposed2d();
+        let ghat_t = ghat.transposed2d();
+        let term1 = ghat_t.matmul(&gp);
+        let term2 = gt.matmul(&gp);
+        let term3 = gt.matmul(&ghat.matmul(&p));
+        // CosSim pieces (row-wise)
+        let mhat = m_proj.matmul(&p.transposed2d()); // (m, n)
+        let ms = mhat.f32s();
+        let mut a = vec![0.0f32; m * n];
+        let mut cos_sum = 0.0f64;
+        const CEPS: f32 = 1e-8; // matches kernels/ref.py COS_EPS
+        for i in 0..m {
+            let rm = &ms[i * n..(i + 1) * n];
+            let rg = &gs[i * n..(i + 1) * n];
+            let dot: f32 = rm.iter().zip(rg).map(|(x, y)| x * y).sum();
+            let nm = rm.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let ng = rg.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let denom = nm * ng + CEPS;
+            cos_sum += (dot / denom) as f64;
+            for j in 0..n {
+                a[i * n + j] = rg[j] / denom - rm[j] * dot / (nm * nm * denom + CEPS);
+            }
+        }
+        let cos = cos_sum / m as f64;
+        let a_t = Tensor::from_f32(&[m, n], a).transposed2d();
+        let dcos = a_t.matmul(m_proj); // (n, r)
+        let scale_mse = 2.0 / (m * n) as f32;
+        let r = p.dims()[1];
+        let mut pn = p.f32s().to_vec();
+        let t1 = term1.f32s();
+        let t2 = term2.f32s();
+        let t3 = term3.f32s();
+        let dc = dcos.f32s();
+        for i in 0..n * r {
+            let dmse = scale_mse * (t1[i] - 2.0 * t2[i] + t3[i]);
+            let grad = dmse * (1.0 - cos as f32) - dc[i] / m as f32 * mse as f32;
+            pn[i] -= lr * grad;
+        }
+        p = Tensor::from_f32(&[n, r], pn);
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randmat(rng: &mut Rng, m: usize, n: usize) -> Tensor {
+        Tensor::from_f32(&[m, n], rng.normal_vec(m * n, 1.0))
+    }
+
+    #[test]
+    fn adam_first_step_is_unit_direction() {
+        let mut m = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        let g = vec![0.5f32, -0.5, 2.0, -2.0];
+        let d = adam_update(&mut m, &mut v, &g, BETA1, BETA2);
+        // First Adam step with fresh moments: |delta| ~ 1 in grad direction.
+        for (di, gi) in d.iter().zip(&g) {
+            assert!((di.abs() - 1.0).abs() < 1e-3, "d={di}");
+            assert_eq!(di.signum(), gi.signum());
+        }
+    }
+
+    #[test]
+    fn mgs_qr_orthonormal_and_spans() {
+        let mut rng = Rng::new(1);
+        let x = randmat(&mut rng, 32, 8);
+        let q = mgs_qr(&x);
+        let gram = q.transposed2d().matmul(&q);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((gram.f32s()[i * 8 + j] - want).abs() < 1e-4);
+            }
+        }
+        // Q Q^T x == x (same column space)
+        let proj = q.matmul(&q.transposed2d()).matmul(&x);
+        assert!(proj.max_abs_diff(&x) < 1e-3);
+    }
+
+    #[test]
+    fn jacobi_svd_orthogonalizes_and_sorts() {
+        let mut rng = Rng::new(2);
+        let g = randmat(&mut rng, 24, 12);
+        let (p, sigma) = svd_topk(&g, 4, 10);
+        assert_eq!(p.dims(), &[12, 4]);
+        for k in 1..sigma.len() {
+            assert!(sigma[k - 1] >= sigma[k] - 1e-4, "sigma not sorted: {sigma:?}");
+        }
+        let gram = p.transposed2d().matmul(&p);
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((gram.f32s()[i * 4 + j] - want).abs() < 1e-3);
+            }
+        }
+        // Projection must capture more energy than a random subspace.
+        let cap = g.matmul(&p).l2_norm();
+        let pr = {
+            let r = randmat(&mut rng, 12, 4);
+            mgs_qr(&r)
+        };
+        let cap_rand = g.matmul(&pr).l2_norm();
+        assert!(cap > cap_rand, "svd capture {cap} vs random {cap_rand}");
+    }
+
+    #[test]
+    fn recalib_improves_reconstruction_for_lowrank_gradient() {
+        // Low-rank-ish G: product of thin factors + small noise.
+        let mut rng = Rng::new(3);
+        let a = randmat(&mut rng, 24, 4);
+        let b = randmat(&mut rng, 4, 16);
+        let mut g = a.matmul(&b);
+        for v in g.f32s_mut() {
+            *v += 0.05 * rng.normal();
+        }
+        let p0 = mgs_qr(&randmat(&mut rng, 16, 4));
+        let p1 = lowcost_recalib(&g, &p0, 10);
+        let rec = |p: &Tensor| {
+            let ghat = g.matmul(p).matmul(&p.transposed2d());
+            let mut err = 0.0f64;
+            for (x, y) in g.f32s().iter().zip(ghat.f32s()) {
+                err += ((x - y) as f64).powi(2);
+            }
+            err
+        };
+        assert!(rec(&p1) < rec(&p0) * 0.6, "recalib {} vs random {}", rec(&p1), rec(&p0));
+    }
+
+    #[test]
+    fn pupdate_descends_eqn6_objective() {
+        let mut rng = Rng::new(4);
+        let g = randmat(&mut rng, 20, 12);
+        let p0 = mgs_qr(&randmat(&mut rng, 12, 4));
+        let m_proj = g.matmul(&p0); // a plausible projected moment
+        let before = eqn6_objective(&p0, &g, &m_proj);
+        let p1 = pupdate_sgd(&p0, &g, &m_proj, 4, 0.1);
+        let after = eqn6_objective(&p1, &g, &m_proj);
+        assert!(after < before, "objective rose: {before} -> {after}");
+    }
+
+    #[test]
+    fn adafactor_moves_weights() {
+        let mut w = vec![1.0f32; 12];
+        let g = vec![0.3f32; 12];
+        let mut mom = vec![0.0f32; 12];
+        let mut r = vec![0.0f32; 3];
+        let mut c = vec![0.0f32; 4];
+        let ceu = adafactor_step(&mut w, &g, &mut mom, &mut r, &mut c, 3, 4, 1, 0.01);
+        assert!(ceu > 0.0);
+        assert!(w.iter().all(|&x| x < 1.0));
+    }
+}

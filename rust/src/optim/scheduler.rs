@@ -1,0 +1,125 @@
+//! The projection-update schedule — Algorithm 1's control flow, factored
+//! out so each policy (COAP / GaLore / Flora) is a pure function of the
+//! step counter and testable in isolation.
+
+/// What the coordinator should do to a layer's projection at step `t`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProjAction {
+    /// Keep P_t = P_{t-1}.
+    Keep,
+    /// Eqn-6 inter-projection correlation-aware SGD update.
+    PUpdate,
+    /// Eqn-7 occasional low-cost SVD recalibration.
+    Recalib,
+    /// Full SVD refresh (GaLore).
+    FullSvd,
+    /// Fresh random projection (Flora).
+    Resample,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct CoapSchedule {
+    pub t_update: usize,
+    pub lambda: usize,
+    pub use_pupdate: bool,
+    pub use_recalib: bool,
+}
+
+impl CoapSchedule {
+    /// Algorithm 1: at t % T_u == 0, recalibrate if t % (λ·T_u) == 0 else
+    /// run the Eqn-6 update. t == 1 initializes via recalibration
+    /// (`P_0 <- Eqn.7(P_0, G_0)` in the paper's pseudocode).
+    pub fn action(&self, t: usize) -> ProjAction {
+        if t == 1 {
+            return if self.use_recalib { ProjAction::Recalib } else { ProjAction::Keep };
+        }
+        if self.t_update == 0 || t % self.t_update != 0 {
+            return ProjAction::Keep;
+        }
+        if self.use_recalib && t % (self.lambda.max(1) * self.t_update) == 0 {
+            return ProjAction::Recalib;
+        }
+        if self.use_pupdate {
+            ProjAction::PUpdate
+        } else {
+            ProjAction::Keep
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct IntervalSchedule {
+    pub interval: usize,
+    pub action: ProjAction,
+}
+
+impl IntervalSchedule {
+    /// GaLore (FullSvd) / Flora (Resample): refresh every `interval`.
+    pub fn action(&self, t: usize) -> ProjAction {
+        if t == 1 || (self.interval > 0 && t % self.interval == 0) {
+            self.action
+        } else {
+            ProjAction::Keep
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coap_schedule_follows_algorithm1() {
+        let s = CoapSchedule { t_update: 4, lambda: 3, use_pupdate: true, use_recalib: true };
+        assert_eq!(s.action(1), ProjAction::Recalib); // init
+        assert_eq!(s.action(2), ProjAction::Keep);
+        assert_eq!(s.action(4), ProjAction::PUpdate);
+        assert_eq!(s.action(8), ProjAction::PUpdate);
+        assert_eq!(s.action(12), ProjAction::Recalib); // λ·T_u = 12
+        assert_eq!(s.action(16), ProjAction::PUpdate);
+        assert_eq!(s.action(24), ProjAction::Recalib);
+    }
+
+    #[test]
+    fn ablation_flags_disable_components() {
+        let no_recal = CoapSchedule { t_update: 2, lambda: 2, use_pupdate: true, use_recalib: false };
+        assert_eq!(no_recal.action(1), ProjAction::Keep);
+        assert_eq!(no_recal.action(4), ProjAction::PUpdate);
+        let no_pup = CoapSchedule { t_update: 2, lambda: 2, use_pupdate: false, use_recalib: true };
+        assert_eq!(no_pup.action(2), ProjAction::Keep);
+        assert_eq!(no_pup.action(4), ProjAction::Recalib);
+        let neither = CoapSchedule { t_update: 2, lambda: 2, use_pupdate: false, use_recalib: false };
+        for t in 1..20 {
+            assert_eq!(neither.action(t), ProjAction::Keep);
+        }
+    }
+
+    #[test]
+    fn interval_schedules() {
+        let g = IntervalSchedule { interval: 10, action: ProjAction::FullSvd };
+        assert_eq!(g.action(1), ProjAction::FullSvd);
+        assert_eq!(g.action(5), ProjAction::Keep);
+        assert_eq!(g.action(10), ProjAction::FullSvd);
+        let f = IntervalSchedule { interval: 1, action: ProjAction::Resample };
+        assert_eq!(f.action(7), ProjAction::Resample);
+    }
+
+    /// Property: over any horizon, recalibrations are exactly the
+    /// multiples of λ·T_u (plus init) and pupdates the other T_u marks.
+    #[test]
+    fn prop_partition_of_refresh_steps() {
+        for (tu, lam) in [(2usize, 2usize), (8, 10), (5, 3), (16, 1)] {
+            let s = CoapSchedule { t_update: tu, lambda: lam, use_pupdate: true, use_recalib: true };
+            for t in 2..500 {
+                let a = s.action(t);
+                if t % (tu * lam.max(1)) == 0 {
+                    assert_eq!(a, ProjAction::Recalib, "t={t} tu={tu} λ={lam}");
+                } else if t % tu == 0 {
+                    assert_eq!(a, ProjAction::PUpdate, "t={t}");
+                } else {
+                    assert_eq!(a, ProjAction::Keep, "t={t}");
+                }
+            }
+        }
+    }
+}

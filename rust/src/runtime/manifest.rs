@@ -1,0 +1,291 @@
+//! Parsed form of `artifacts/manifest.json` — the Rust<->Python contract.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            shape: j
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .context("spec.shape")?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .context("spec.dtype")?
+                .to_string(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphInfo {
+    pub file: String,
+    pub template: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "matrix" | "conv" | "vector"
+    pub kind: String,
+    /// "normal" | "zeros" | "ones"
+    pub init: String,
+    pub scale: f32,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DataInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub family: String,
+    pub cfg: Json,
+    pub param_count: usize,
+    pub params: Vec<ParamInfo>,
+    pub data: Vec<DataInfo>,
+    pub train_step: String,
+    pub eval_step: String,
+    pub eval_outputs: Vec<String>,
+}
+
+impl ModelInfo {
+    pub fn cfg_usize(&self, key: &str) -> usize {
+        self.cfg
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .unwrap_or_else(|| panic!("model {} missing cfg.{key}", self.name))
+    }
+
+    pub fn cfg_usize_or(&self, key: &str, default: usize) -> usize {
+        self.cfg.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentInfo {
+    pub id: String,
+    pub model: String,
+    pub ratios: Vec<f64>,
+    pub note: String,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub graphs: BTreeMap<String, GraphInfo>,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub experiments: Vec<ExperimentInfo>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            anyhow::bail!("manifest version {version} unsupported (want 1)");
+        }
+
+        let mut graphs = BTreeMap::new();
+        for (name, g) in j.get("graphs").and_then(|g| g.as_obj()).context("graphs")? {
+            graphs.insert(
+                name.clone(),
+                GraphInfo {
+                    file: g.get("file").and_then(|f| f.as_str()).context("file")?.into(),
+                    template: g
+                        .get("template")
+                        .and_then(|t| t.as_str())
+                        .unwrap_or("")
+                        .into(),
+                    inputs: g
+                        .get("inputs")
+                        .and_then(|i| i.as_arr())
+                        .context("inputs")?
+                        .iter()
+                        .map(TensorSpec::parse)
+                        .collect::<Result<_>>()?,
+                    outputs: g
+                        .get("outputs")
+                        .and_then(|o| o.as_arr())
+                        .context("outputs")?
+                        .iter()
+                        .map(TensorSpec::parse)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").and_then(|m| m.as_obj()).context("models")? {
+            let params = m
+                .get("params")
+                .and_then(|p| p.as_arr())
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamInfo {
+                        name: p.get("name").and_then(|v| v.as_str()).context("p.name")?.into(),
+                        shape: p
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .context("p.shape")?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap_or(0))
+                            .collect(),
+                        kind: p.get("kind").and_then(|v| v.as_str()).context("p.kind")?.into(),
+                        init: p.get("init").and_then(|v| v.as_str()).unwrap_or("normal").into(),
+                        scale: p.get("scale").and_then(|v| v.as_f64()).unwrap_or(0.02) as f32,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let data = m
+                .get("data")
+                .and_then(|d| d.as_arr())
+                .context("data")?
+                .iter()
+                .map(|d| {
+                    Ok(DataInfo {
+                        name: d.get("name").and_then(|v| v.as_str()).context("d.name")?.into(),
+                        shape: d
+                            .get("shape")
+                            .and_then(|v| v.as_arr())
+                            .context("d.shape")?
+                            .iter()
+                            .map(|x| x.as_usize().unwrap_or(0))
+                            .collect(),
+                        dtype: d.get("dtype").and_then(|v| v.as_str()).context("d.dtype")?.into(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    family: m.get("family").and_then(|v| v.as_str()).context("family")?.into(),
+                    cfg: m.get("cfg").cloned().unwrap_or(Json::Null),
+                    param_count: m.get("param_count").and_then(|v| v.as_usize()).unwrap_or(0),
+                    params,
+                    data,
+                    train_step: m
+                        .get("train_step")
+                        .and_then(|v| v.as_str())
+                        .context("train_step")?
+                        .into(),
+                    eval_step: m
+                        .get("eval_step")
+                        .and_then(|v| v.as_str())
+                        .context("eval_step")?
+                        .into(),
+                    eval_outputs: m
+                        .get("eval_outputs")
+                        .and_then(|v| v.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|s| s.as_str().map(String::from))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                },
+            );
+        }
+
+        let experiments = j
+            .get("experiments")
+            .and_then(|e| e.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|e| ExperimentInfo {
+                id: e.get("id").and_then(|v| v.as_str()).unwrap_or("").into(),
+                model: e.get("model").and_then(|v| v.as_str()).unwrap_or("").into(),
+                ratios: e
+                    .get("ratios")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                    .unwrap_or_default(),
+                note: e.get("note").and_then(|v| v.as_str()).unwrap_or("").into(),
+            })
+            .collect();
+
+        Ok(Manifest { graphs, models, experiments })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "graphs": {
+        "adam_step__4x2": {
+          "file": "adam_step__4x2.hlo.txt", "template": "adam_step",
+          "inputs": [{"shape": [4,2], "dtype": "f32"}],
+          "outputs": [{"shape": [4,2], "dtype": "f32"}, {"shape": [], "dtype": "f32"}]
+        }
+      },
+      "models": {
+        "toy": {
+          "family": "lm", "cfg": {"d": 8, "batch": 2, "seq": 4},
+          "param_count": 32,
+          "params": [{"name": "w", "shape": [4, 8], "kind": "matrix",
+                      "init": "normal", "scale": 0.02}],
+          "data": [{"name": "tokens", "shape": [2, 4], "dtype": "i32"}],
+          "train_step": "train_step__toy", "eval_step": "eval_step__toy",
+          "eval_outputs": ["loss"]
+        }
+      },
+      "experiments": [{"id": "t1", "model": "toy", "ratios": [2, 4], "note": "n"}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let g = &m.graphs["adam_step__4x2"];
+        assert_eq!(g.inputs[0].shape, vec![4, 2]);
+        assert_eq!(g.outputs[1].shape, Vec::<usize>::new());
+        let model = m.model("toy").unwrap();
+        assert_eq!(model.cfg_usize("d"), 8);
+        assert_eq!(model.params[0].shape, vec![4, 8]);
+        assert_eq!(model.data[0].dtype, "i32");
+        assert_eq!(m.experiments[0].ratios, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        assert!(Manifest::parse(r#"{"version": 2, "graphs": {}, "models": {}}"#).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Graph-name construction — must mirror `python/compile/aot.py` exactly.
+//!
+//! ```text
+//! matrix proj:  {tpl}__{m}x{n}_r{r}
+//! full-rank:    {tpl}__{m}x{n}
+//! conv:         {tpl}__{o}x{i}x{k1}x{k2}_rO{ro}_rI{ri}[_rS{rs}]
+//! models:       train_step__{model}, eval_step__{model}
+//! ```
+
+/// Paper rank rule: r = min(m, n) / ratio (floored, min 4, clamped to
+/// the smaller dimension).
+pub fn rank_for(shape: &[usize], ratio: f64) -> usize {
+    let min = shape[0].min(shape[1]);
+    ((min as f64 / ratio) as usize).max(4).min(min)
+}
+
+/// Tucker-2 ranks (r_O, r_I) for an OIHW conv shape, clamped to dims.
+pub fn conv_ranks(shape: &[usize], ratio: f64) -> (usize, usize) {
+    let ro = ((shape[0] as f64 / ratio) as usize).max(2).min(shape[0]);
+    let ri = ((shape[1] as f64 / ratio) as usize).max(2).min(shape[1]);
+    (ro, ri)
+}
+
+pub fn matrix_proj(tpl: &str, m: usize, n: usize, r: usize) -> String {
+    format!("{tpl}__{m}x{n}_r{r}")
+}
+
+pub fn fullrank(tpl: &str, m: usize, n: usize) -> String {
+    format!("{tpl}__{m}x{n}")
+}
+
+pub fn conv(tpl: &str, shape: &[usize], ro: usize, ri: usize) -> String {
+    format!(
+        "{tpl}__{}x{}x{}x{}_rO{ro}_rI{ri}",
+        shape[0], shape[1], shape[2], shape[3]
+    )
+}
+
+pub fn conv_full(shape: &[usize], ro: usize, ri: usize) -> String {
+    let rs = ((shape[2] * shape[3]) / 2).max(2);
+    format!(
+        "coap_adam_convfull_step__{}x{}x{}x{}_rO{ro}_rI{ri}_rS{rs}",
+        shape[0], shape[1], shape[2], shape[3]
+    )
+}
+
+pub fn train_step(model: &str) -> String {
+    format!("train_step__{model}")
+}
+
+pub fn eval_step(model: &str) -> String {
+    format!("eval_step__{model}")
+}
+
+/// Projection-frame shape: (max, min) — the GaLore side rule.
+pub fn normalized(m: usize, n: usize) -> (usize, usize) {
+    (m.max(n), m.min(n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_python_convention() {
+        assert_eq!(matrix_proj("coap_adam_step", 512, 128, 32), "coap_adam_step__512x128_r32");
+        assert_eq!(fullrank("adam_step", 128, 512), "adam_step__128x512");
+        assert_eq!(
+            conv("coap_adam_conv_step", &[16, 3, 3, 3], 4, 2),
+            "coap_adam_conv_step__16x3x3x3_rO4_rI2"
+        );
+        assert_eq!(train_step("lm_tiny"), "train_step__lm_tiny");
+    }
+
+    #[test]
+    fn rank_rule_matches_python() {
+        assert_eq!(rank_for(&[512, 128], 4.0), 32);
+        assert_eq!(rank_for(&[128, 10], 8.0), 4); // clamped to 4
+        assert_eq!(conv_ranks(&[16, 3, 3, 3], 4.0), (4, 2));
+        assert_eq!(conv_ranks(&[32, 16, 3, 3], 2.0), (16, 8));
+    }
+}

@@ -1,0 +1,79 @@
+//! bfloat16 storage conversion (round-to-nearest-even), used by the
+//! coordinator's state-precision policy to model the paper's BF16 rows.
+//! Compute always happens in f32 inside the HLO graphs; only *storage*
+//! between steps is bf16.
+
+/// f32 -> bf16 bits with round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet NaN, keep sign
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x7fff + lsb) >> 16) as u16
+}
+
+/// bf16 bits -> f32 (exact).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+pub fn encode(src: &[f32], dst: &mut Vec<u16>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| f32_to_bf16(v)));
+}
+
+pub fn decode(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16_to_f32(s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0, -1024.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // bf16 has 8 significand bits -> rel err <= 2^-8 after rounding.
+        let mut r = Rng::new(11);
+        for _ in 0..10_000 {
+            let v = r.normal() * 10.0;
+            let back = bf16_to_f32(f32_to_bf16(v));
+            if v.abs() > 1e-30 {
+                assert!(
+                    ((back - v) / v).abs() <= 1.0 / 256.0 + 1e-6,
+                    "v={v} back={back}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_inf() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn rounding_is_to_nearest() {
+        // bf16 has 7 fraction bits: ulp(1.0) = 2^-7. Below half-ulp
+        // rounds down; an exact multiple of the ulp is representable.
+        let v = 1.0 + 2f32.powi(-8) * 0.9;
+        assert_eq!(bf16_to_f32(f32_to_bf16(v)), 1.0);
+        let v2 = 1.0 + 2f32.powi(-7);
+        assert_eq!(bf16_to_f32(f32_to_bf16(v2)), v2);
+    }
+}

@@ -1,0 +1,234 @@
+//! Host tensor substrate: the coordinator-side representation of weights,
+//! gradients and optimizer state between PJRT executions.
+//!
+//! Deliberately small: dense row-major storage, f32 or i32, plus the
+//! precision machinery the paper's memory story needs — bf16 storage
+//! ([`bf16`]) and block-wise 8-bit quantization ([`quant`]).
+
+pub mod bf16;
+pub mod quant;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    dims: Vec<usize>,
+    storage: Storage,
+}
+
+impl Tensor {
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims: dims.to_vec(), storage: Storage::F32(vec![0.0; n]) }
+    }
+
+    pub fn from_f32(dims: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { dims: dims.to_vec(), storage: Storage::F32(data) }
+    }
+
+    pub fn from_i32(dims: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { dims: dims.to_vec(), storage: Storage::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { dims: vec![], storage: Storage::F32(vec![v]) }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn storage(&self) -> &Storage {
+        &self.storage
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self.storage, Storage::F32(_))
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.storage {
+            Storage::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.storage {
+            Storage::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.storage {
+            Storage::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "scalar() on non-scalar tensor");
+        self.f32s()[0]
+    }
+
+    /// Reinterpret shape (same element count, same layout).
+    pub fn reshaped(mut self, dims: &[usize]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), self.numel());
+        self.dims = dims.to_vec();
+        self
+    }
+
+    /// 2-D transpose (copy).
+    pub fn transposed2d(&self) -> Tensor {
+        assert_eq!(self.dims.len(), 2);
+        let (m, n) = (self.dims[0], self.dims[1]);
+        let src = self.f32s();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = src[i * n + j];
+            }
+        }
+        Tensor::from_f32(&[n, m], out)
+    }
+
+    pub fn l1_norm(&self) -> f64 {
+        self.f32s().iter().map(|v| v.abs() as f64).sum()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.f32s().iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.dims, other.dims);
+        self.f32s()
+            .iter()
+            .zip(other.f32s())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Bytes this tensor occupies at a given state precision.
+    pub fn nbytes_at(&self, precision: Precision) -> usize {
+        match precision {
+            Precision::F32 => self.numel() * 4,
+            Precision::Bf16 => self.numel() * 2,
+            Precision::Int8 => {
+                // payload + one f32 scale per block
+                let blocks = self.numel().div_ceil(quant::BLOCK);
+                self.numel() + blocks * 4
+            }
+        }
+    }
+
+    /// Naive host matmul — reference implementation for tests and the
+    /// pure-Rust optimizer oracles (never on the training hot path).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.dims.len(), 2);
+        assert_eq!(other.dims.len(), 2);
+        let (m, k) = (self.dims[0], self.dims[1]);
+        let (k2, n) = (other.dims[0], other.dims[1]);
+        assert_eq!(k, k2, "matmul inner dims");
+        let a = self.f32s();
+        let b = other.f32s();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        Tensor::from_f32(&[m, n], out)
+    }
+}
+
+/// State-storage precision policy (the paper's fp32 / bf16 / 8-bit rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Bf16,
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Precision {
+        match s {
+            "f32" | "fp32" => Precision::F32,
+            "bf16" => Precision::Bf16,
+            "int8" | "8bit" => Precision::Int8,
+            _ => panic!("unknown precision '{s}' (f32|bf16|int8)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_accessors() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.f32s()[4], 5.0);
+        let r = t.clone().reshaped(&[3, 2]);
+        assert_eq!(r.dims(), &[3, 2]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transposed2d();
+        assert_eq!(tt.dims(), &[3, 2]);
+        assert_eq!(tt.f32s(), &[1., 4., 2., 5., 3., 6.]);
+        assert_eq!(tt.transposed2d(), t);
+    }
+
+    #[test]
+    fn matmul_matches_hand_computation() {
+        let a = Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_f32(&[2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(a.matmul(&b).f32s(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn nbytes_accounting() {
+        let t = Tensor::zeros(&[256, 2]);
+        assert_eq!(t.nbytes_at(Precision::F32), 2048);
+        assert_eq!(t.nbytes_at(Precision::Bf16), 1024);
+        assert_eq!(t.nbytes_at(Precision::Int8), 512 + 2 * 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(&[2, 2], vec![1.0]);
+    }
+}

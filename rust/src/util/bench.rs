@@ -1,0 +1,122 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that calls
+//! [`Bench::run`] per case and [`report`] helpers to print paper-style
+//! table rows. Timing: wall-clock warmup + fixed-iteration measurement
+//! with mean / p50 / p95 over per-iteration samples.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub total: Duration,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub max_total: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, iters: 10, max_total: Duration::from_secs(20) }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, iters: 5, max_total: Duration::from_secs(10) }
+    }
+
+    /// Time `f` and return stats. Respects `max_total` by early-stopping.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let start = Instant::now();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            if start.elapsed() > self.max_total {
+                break;
+            }
+        }
+        let total: Duration = samples.iter().sum();
+        let mut sorted = samples.clone();
+        sorted.sort();
+        let pick = |q: f64| sorted[((sorted.len() - 1) as f64 * q) as usize];
+        let stats = Stats {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: pick(0.5),
+            p95: pick(0.95),
+            total,
+        };
+        eprintln!(
+            "  bench {:<44} mean {:>9.3} ms  p50 {:>9.3} ms  p95 {:>9.3} ms  ({} iters)",
+            stats.name,
+            stats.mean_ms(),
+            stats.p50.as_secs_f64() * 1e3,
+            stats.p95.as_secs_f64() * 1e3,
+            stats.iters
+        );
+        stats
+    }
+}
+
+/// Print a paper-style table: header row then aligned data rows.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let b = Bench { warmup: 0, iters: 8, max_total: Duration::from_secs(5) };
+        let s = b.run("noop-ish", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 8);
+        assert!(s.p50 <= s.p95);
+        assert!(s.mean <= s.total);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed getters parse on demand and report readable errors.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let val = match inline {
+                    Some(v) => v,
+                    None => {
+                        // A following token that isn't itself a --flag is
+                        // this flag's value; otherwise it's a boolean flag.
+                        match it.peek() {
+                            Some(nxt) if !nxt.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                out.seen.push(key.clone());
+                out.flags.insert(key, val);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            None => default,
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a bool, got '{v}'"),
+        }
+    }
+
+    /// Keys provided on the command line, in order (for config overrides).
+    pub fn seen_keys(&self) -> &[String] {
+        &self.seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_kinds() {
+        let a = args(&["train", "--steps", "100", "--lr=0.5", "--quiet", "--name", "x"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.f32_or("lr", 0.0), 0.5);
+        assert!(a.bool_or("quiet", false));
+        assert_eq!(a.get("name"), Some("x"));
+        assert_eq!(a.usize_or("absent", 7), 7);
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = args(&["--verbose", "--steps", "3"]);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.usize_or("steps", 0), 3);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // A value starting with '-' but not '--' is consumed as a value.
+        let a = args(&["--offset", "-3.5"]);
+        assert_eq!(a.f32_or("offset", 0.0), -3.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        args(&["--steps", "abc"]).usize_or("steps", 0);
+    }
+}

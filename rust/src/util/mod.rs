@@ -1,0 +1,8 @@
+//! Hand-rolled substrates. The build is fully offline (vendored crates:
+//! `xla`, `anyhow` only), so JSON, CLI parsing, the thread pool, and the
+//! bench harness are implemented here from scratch.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod threadpool;

@@ -1,0 +1,108 @@
+//! Minimal scoped thread pool for per-layer optimizer dispatch.
+//!
+//! The coordinator fans per-layer state updates out to workers while the
+//! next batch's gradients are computed. On this single-core testbed the
+//! pool mostly provides *overlap* (XLA releases the GIL-free CPU between
+//! executions), but the code is written for multi-core boxes.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("coap-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
+    }
+
+    /// Run `jobs` to completion, blocking the caller until all finish.
+    pub fn run_all<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let tx = tx.clone();
+            self.submit(move || {
+                let out = job();
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, out) = rx.recv().expect("worker died");
+            slots[i] = Some(out);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs_in_order_of_index() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..32usize).map(|i| Box::new(move || i * 2) as _).collect();
+        let out = pool.run_all(jobs);
+        assert_eq!(out, (0..32usize).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_executes() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop waits for workers to drain the queue.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

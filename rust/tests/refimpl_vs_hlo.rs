@@ -1,0 +1,171 @@
+//! Cross-layer validation: the compiled HLO executables must agree with
+//! the pure-Rust reference implementations (which were themselves
+//! validated against numpy on the Python side). Any drift between the
+//! three implementations of the paper's math fails here.
+
+use coap::config::default_artifacts_dir;
+use coap::optim::refimpl;
+use coap::rng::Rng;
+use coap::runtime::{names, Runtime};
+use coap::tensor::Tensor;
+
+fn runtime() -> Runtime {
+    Runtime::open(&default_artifacts_dir()).expect("make artifacts first")
+}
+
+fn randmat(rng: &mut Rng, m: usize, n: usize, scale: f32) -> Tensor {
+    Tensor::from_f32(&[m, n], rng.normal_vec(m * n, scale))
+}
+
+#[test]
+fn adam_step_hlo_matches_refimpl() {
+    let rt = runtime();
+    let mut rng = Rng::new(1);
+    let (m, n) = (128usize, 128usize);
+    let w = randmat(&mut rng, m, n, 0.1);
+    let g = randmat(&mut rng, m, n, 0.02);
+    let mom = randmat(&mut rng, m, n, 0.01);
+    let vom = {
+        let mut v = randmat(&mut rng, m, n, 0.001);
+        for x in v.f32s_mut() {
+            *x = x.abs();
+        }
+        v
+    };
+    let t = 9usize;
+    let (lr, wd) = (0.01f32, 0.1f32);
+    let out = rt
+        .exec(
+            &names::fullrank("adam_step", m, n),
+            &[
+                &w,
+                &g,
+                &mom,
+                &vom,
+                &Tensor::scalar_f32(0.9f32.powi(t as i32)),
+                &Tensor::scalar_f32(0.999f32.powi(t as i32)),
+                &Tensor::scalar_f32(lr),
+                &Tensor::scalar_f32(wd),
+            ],
+        )
+        .unwrap();
+
+    let mut w2 = w.f32s().to_vec();
+    let mut m2 = mom.f32s().to_vec();
+    let mut v2 = vom.f32s().to_vec();
+    let ceu = refimpl::adamw_step_flat(&mut w2, g.f32s(), &mut m2, &mut v2, t, lr, wd);
+    let wref = Tensor::from_f32(&[m, n], w2);
+    assert!(out[0].max_abs_diff(&wref) < 1e-5, "w mismatch");
+    assert!(out[1].max_abs_diff(&Tensor::from_f32(&[m, n], m2)) < 1e-6);
+    assert!(out[2].max_abs_diff(&Tensor::from_f32(&[m, n], v2)) < 1e-7);
+    assert!(
+        (out[3].scalar() as f64 - ceu).abs() / ceu < 1e-3,
+        "ceu {} vs {}",
+        out[3].scalar(),
+        ceu
+    );
+}
+
+#[test]
+fn recalib_hlo_matches_refimpl_subspace() {
+    let rt = runtime();
+    let mut rng = Rng::new(2);
+    let (m, n, r) = (512usize, 128usize, 32usize);
+    // Low-rank-ish gradient so the top subspace is well defined.
+    let a = randmat(&mut rng, m, r, 1.0);
+    let b = randmat(&mut rng, r, n, 1.0);
+    let mut g = a.matmul(&b);
+    for v in g.f32s_mut() {
+        *v = *v * 0.01 + 0.0005 * rng.normal();
+    }
+    let p0 = refimpl::mgs_qr(&randmat(&mut rng, n, r, 1.0));
+    let hlo = rt
+        .exec(&names::matrix_proj("recalib", m, n, r), &[&p0, &g])
+        .unwrap();
+    let oracle = refimpl::lowcost_recalib(&g, &p0, 8);
+    // Column order/sign may differ; compare the projectors P P^T.
+    let proj = |p: &Tensor| p.matmul(&p.transposed2d());
+    let d = proj(&hlo[0]).max_abs_diff(&proj(&oracle));
+    assert!(d < 5e-2, "projector mismatch {d}");
+}
+
+#[test]
+fn galore_svd_hlo_matches_refimpl_subspace() {
+    let rt = runtime();
+    let mut rng = Rng::new(3);
+    let (m, n, r) = (256usize, 256usize, 64usize);
+    let a = randmat(&mut rng, m, r, 1.0);
+    let b = randmat(&mut rng, r, n, 1.0);
+    let mut g = a.matmul(&b);
+    for v in g.f32s_mut() {
+        *v = *v * 0.01 + 0.0002 * rng.normal();
+    }
+    let hlo = rt
+        .exec(&names::matrix_proj("galore_svd", m, n, r), &[&g])
+        .unwrap();
+    let (oracle, _) = refimpl::svd_topk(&g, r, 8);
+    let proj = |p: &Tensor| p.matmul(&p.transposed2d());
+    let d = proj(&hlo[0]).max_abs_diff(&proj(&oracle));
+    assert!(d < 5e-2, "projector mismatch {d}");
+}
+
+#[test]
+fn pupdate_hlo_descends_the_eqn6_objective() {
+    let rt = runtime();
+    let mut rng = Rng::new(4);
+    let (m, n, r) = (512usize, 128usize, 32usize);
+    let g = randmat(&mut rng, m, n, 0.05);
+    let p0 = refimpl::mgs_qr(&randmat(&mut rng, n, r, 1.0));
+    let m_proj = g.matmul(&p0);
+    let hlo = rt
+        .exec(&names::matrix_proj("pupdate", m, n, r), &[&p0, &g, &m_proj])
+        .unwrap();
+    let before = refimpl::eqn6_objective(&p0, &g, &m_proj);
+    let after = refimpl::eqn6_objective(&hlo[0], &g, &m_proj);
+    assert!(after < before, "objective rose {before} -> {after}");
+    // And matches the Rust oracle's trajectory closely.
+    let oracle = refimpl::pupdate_sgd(&p0, &g, &m_proj, 2, 0.1);
+    let d = hlo[0].max_abs_diff(&oracle);
+    assert!(d < 1e-3, "pupdate drift {d}");
+}
+
+#[test]
+fn coap_adam_step_hlo_matches_manual_projection() {
+    let rt = runtime();
+    let mut rng = Rng::new(5);
+    let (m, n, r) = (128usize, 128usize, 32usize);
+    let w = randmat(&mut rng, m, n, 0.1);
+    let g = randmat(&mut rng, m, n, 0.02);
+    let p = refimpl::mgs_qr(&randmat(&mut rng, n, r, 1.0));
+    let mom = Tensor::zeros(&[m, r]);
+    let vom = Tensor::zeros(&[m, r]);
+    let lr = 0.02f32;
+    let out = rt
+        .exec(
+            &names::matrix_proj("coap_adam_step", m, n, r),
+            &[
+                &w,
+                &g,
+                &mom,
+                &vom,
+                &p,
+                &Tensor::scalar_f32(0.9),
+                &Tensor::scalar_f32(0.999),
+                &Tensor::scalar_f32(lr),
+                &Tensor::scalar_f32(0.0),
+            ],
+        )
+        .unwrap();
+    // Manual: project, refimpl-Adam in low-rank space, restore.
+    let gp = g.matmul(&p);
+    let mut m2 = vec![0.0f32; m * r];
+    let mut v2 = vec![0.0f32; m * r];
+    let delta = refimpl::adam_update(&mut m2, &mut v2, gp.f32s(), 0.9, 0.999);
+    let dw = Tensor::from_f32(&[m, r], delta).matmul(&p.transposed2d());
+    let mut wref = w.f32s().to_vec();
+    for (wi, di) in wref.iter_mut().zip(dw.f32s()) {
+        *wi -= lr * di;
+    }
+    assert!(out[0].max_abs_diff(&Tensor::from_f32(&[m, n], wref)) < 1e-5);
+    assert!(out[1].max_abs_diff(&Tensor::from_f32(&[m, r], m2)) < 1e-6);
+}

@@ -1,0 +1,124 @@
+//! Integration smoke: load real artifacts, compile via PJRT, execute,
+//! and sanity-check numerics. Requires `make artifacts` to have run.
+
+use coap::config::default_artifacts_dir;
+use coap::rng::Rng;
+use coap::runtime::Runtime;
+use coap::tensor::Tensor;
+
+fn runtime() -> Runtime {
+    Runtime::open(&default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn recalib_returns_orthonormal_projection() {
+    let rt = runtime();
+    let mut rng = Rng::new(0);
+    // recalib__128x128_r32: inputs (P (128,32), G (128,128)) -> P' (128,32)
+    let p = {
+        // Random near-orthonormal start: normalize random gaussian columns.
+        let mut data = rng.normal_vec(128 * 32, 1.0);
+        for j in 0..32 {
+            let mut norm = 0.0f32;
+            for i in 0..128 {
+                norm += data[i * 32 + j] * data[i * 32 + j];
+            }
+            let norm = norm.sqrt().max(1e-6);
+            for i in 0..128 {
+                data[i * 32 + j] /= norm;
+            }
+        }
+        Tensor::from_f32(&[128, 32], data)
+    };
+    let g = Tensor::from_f32(&[128, 128], rng.normal_vec(128 * 128, 1.0));
+    let out = rt.exec("recalib__128x128_r32", &[&p, &g]).unwrap();
+    assert_eq!(out.len(), 1);
+    let pnew = &out[0];
+    assert_eq!(pnew.dims(), &[128, 32]);
+    // Columns of P' should be orthonormal: P'^T P' ~ I.
+    let gram = pnew.transposed2d().matmul(pnew);
+    for i in 0..32 {
+        for j in 0..32 {
+            let want = if i == j { 1.0 } else { 0.0 };
+            let got = gram.f32s()[i * 32 + j];
+            assert!(
+                (got - want).abs() < 5e-2,
+                "gram[{i},{j}] = {got}, want {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn adam_step_moves_weights_against_gradient() {
+    let rt = runtime();
+    let mut rng = Rng::new(1);
+    let dims = [128usize, 128usize];
+    let n = 128 * 128;
+    let w = Tensor::from_f32(&dims, rng.normal_vec(n, 0.1));
+    let g = Tensor::from_f32(&dims, vec![1.0; n]); // uniform positive grad
+    let m = Tensor::zeros(&dims);
+    let v = Tensor::zeros(&dims);
+    let b1t = Tensor::scalar_f32(0.9);
+    let b2t = Tensor::scalar_f32(0.999);
+    let lr = Tensor::scalar_f32(0.01);
+    let wd = Tensor::scalar_f32(0.0);
+    let out = rt
+        .exec("adam_step__128x128", &[&w, &g, &m, &v, &b1t, &b2t, &lr, &wd])
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    let w_new = &out[0];
+    // With g > 0 everywhere and fresh moments, every weight decreases by
+    // ~lr (bias-corrected Adam step of a constant gradient is ~1.0 * lr).
+    let mut moved = 0;
+    for (a, b) in w_new.f32s().iter().zip(w.f32s()) {
+        if b - a > 0.005 {
+            moved += 1;
+        }
+    }
+    assert!(moved > n * 9 / 10, "only {moved}/{n} weights moved down");
+    // CEU output is a positive scalar ~ n * lr.
+    let ceu = out[3].scalar();
+    assert!(ceu > 0.0 && ceu < (n as f32) * 0.011, "ceu={ceu}");
+}
+
+#[test]
+fn train_step_lm_tiny_returns_finite_loss_and_grads() {
+    let rt = runtime();
+    let mut rng = Rng::new(2);
+    let model = rt.manifest.model("lm_tiny").unwrap().clone();
+    // Build params per census.
+    let mut inputs: Vec<Tensor> = Vec::new();
+    for p in &model.params {
+        let t = match p.init.as_str() {
+            "ones" => Tensor::from_f32(&p.shape, vec![1.0; p.numel()]),
+            "zeros" => Tensor::zeros(&p.shape),
+            _ => Tensor::from_f32(&p.shape, rng.normal_vec(p.numel(), p.scale)),
+        };
+        inputs.push(t);
+    }
+    let vocab = model.cfg_usize("vocab");
+    for d in &model.data {
+        let n: usize = d.shape.iter().product();
+        let t = match d.dtype.as_str() {
+            "i32" => Tensor::from_i32(
+                &d.shape,
+                (0..n).map(|_| rng.below(vocab) as i32).collect(),
+            ),
+            _ => Tensor::from_f32(&d.shape, rng.normal_vec(n, 1.0)),
+        };
+        inputs.push(t);
+    }
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let out = rt.exec(&model.train_step, &refs).unwrap();
+    assert_eq!(out.len(), 1 + model.params.len());
+    let loss = out[0].scalar();
+    // Random init on vocab-512: loss ~ ln(512) ~ 6.24.
+    assert!(loss.is_finite() && loss > 3.0 && loss < 10.0, "loss={loss}");
+    for (g, p) in out[1..].iter().zip(&model.params) {
+        assert_eq!(g.dims(), &p.shape[..], "grad shape for {}", p.name);
+        assert!(g.f32s().iter().all(|v| v.is_finite()), "grad {} finite", p.name);
+    }
+    // At least the head/embed grads should be non-zero.
+    assert!(out[1].l1_norm() > 0.0);
+}
