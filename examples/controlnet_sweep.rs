@@ -9,7 +9,7 @@
 use coap::benchlib::{self, print_report_table, run_spec};
 use coap::config::TrainConfig;
 use coap::coordinator::Trainer;
-use coap::runtime::Runtime;
+use coap::runtime::open_backend;
 use coap::util::bench::print_table;
 use coap::util::cli::Args;
 use std::sync::Arc;
@@ -17,7 +17,7 @@ use std::sync::Arc;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let cfg = TrainConfig::from_args(&args)?;
-    let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+    let rt = open_backend(&cfg)?;
     let steps = args.usize_or("steps", benchlib::bench_steps(100));
 
     if args.has("table1") {

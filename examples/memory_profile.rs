@@ -9,7 +9,7 @@ use coap::config::{OptKind, TrainConfig};
 use coap::coordinator::memory::{fmt_mb, MemoryAccountant, MemoryToggles};
 use coap::model::ParamStore;
 use coap::optim;
-use coap::runtime::Runtime;
+use coap::runtime::{open_backend, Backend};
 use coap::tensor::Precision;
 use coap::util::bench::print_table;
 use coap::util::cli::Args;
@@ -17,9 +17,9 @@ use coap::util::cli::Args;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let cfg0 = TrainConfig::from_args(&args)?;
-    let rt = Runtime::open(&cfg0.artifacts_dir)?;
+    let rt = open_backend(&cfg0)?;
     let model_name = args.str_or("model", "llava_small");
-    let info = rt.manifest.model(&model_name)?.clone();
+    let info = rt.model(&model_name)?;
     let store = ParamStore::init(&info, 0, false);
     let param_bytes = store.param_bytes();
 

@@ -5,15 +5,14 @@
 
 use coap::benchlib::{print_report_table, run_spec, RunSpec};
 use coap::config::{OptKind, TrainConfig};
-use coap::runtime::Runtime;
+use coap::runtime::open_backend;
 use coap::util::cli::Args;
-use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let steps = args.usize_or("steps", 60);
     let cfg = TrainConfig::from_args(&args)?;
-    let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+    let rt = open_backend(&cfg)?;
 
     let mut base = TrainConfig::default();
     base.model = args.str_or("model", "lm_tiny");

@@ -11,7 +11,7 @@
 use coap::benchlib::{self, print_report_table, run_spec, RunSpec};
 use coap::config::TrainConfig;
 use coap::coordinator::Trainer;
-use coap::runtime::Runtime;
+use coap::runtime::{open_backend, Backend};
 use coap::util::cli::Args;
 use coap::util::json::Json;
 use std::collections::BTreeMap;
@@ -20,7 +20,7 @@ use std::sync::Arc;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let mut cfg = TrainConfig::from_args(&args)?;
-    let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+    let rt = open_backend(&cfg)?;
 
     if args.has("table5") {
         let steps = args.usize_or("steps", benchlib::bench_steps(120));
@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     eprintln!(
         "end-to-end: model={} ({} params), optimizer={}, {} steps",
         cfg.model,
-        rt.manifest.model(&cfg.model)?.param_count,
+        rt.model(&cfg.model)?.param_count,
         cfg.optimizer.label(),
         cfg.steps
     );

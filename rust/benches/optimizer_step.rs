@@ -2,14 +2,14 @@
 //! projected COAP step, across weight shapes — the microscopic source
 //! of the tables' "training time" column.
 
-use coap::config::default_artifacts_dir;
+use coap::config::TrainConfig;
 use coap::rng::Rng;
-use coap::runtime::{names, Runtime};
+use coap::runtime::{names, open_backend, Backend};
 use coap::tensor::Tensor;
 use coap::util::bench::{print_table, Bench};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::open(&default_artifacts_dir())?;
+    let rt = open_backend(&TrainConfig::default())?;
     let mut rng = Rng::new(1);
     let bench = Bench::quick();
     let mut rows = Vec::new();
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         let adam = names::fullrank("adam_step", m, n);
         let af = names::fullrank("adafactor_step", m, n);
         let coap = names::matrix_proj("coap_adam_step", m, n, r);
-        if rt.manifest.graphs.get(&coap).is_none() {
+        if !rt.has_graph(&coap) {
             continue;
         }
         let s_adam = bench.run(&adam, || {

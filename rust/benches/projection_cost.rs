@@ -3,14 +3,14 @@
 //! Benchmarks the three projection-refresh executables across the real
 //! weight shapes of the LM models.
 
-use coap::config::default_artifacts_dir;
+use coap::config::TrainConfig;
 use coap::rng::Rng;
-use coap::runtime::{names, Runtime};
+use coap::runtime::{names, open_backend, Backend};
 use coap::tensor::Tensor;
 use coap::util::bench::{print_table, Bench};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::open(&default_artifacts_dir())?;
+    let rt = open_backend(&TrainConfig::default())?;
     let mut rng = Rng::new(0);
     let bench = Bench::quick();
     let mut rows = Vec::new();
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         let svd_name = names::matrix_proj("galore_svd", m, n, r);
         let rec_name = names::matrix_proj("recalib", m, n, r);
         let pup_name = names::matrix_proj("pupdate", m, n, r);
-        if rt.manifest.graphs.get(&svd_name).is_none() {
+        if !rt.has_graph(&svd_name) {
             continue;
         }
         let s_svd = bench.run(&svd_name, || {

@@ -2,12 +2,11 @@
 //! (GaLore/LoRA/ReLoRA/COAP) and Adafactor branch (GaLore/Flora/COAP).
 
 use coap::benchlib::{self, print_report_table, run_spec};
-use coap::config::default_artifacts_dir;
-use coap::runtime::Runtime;
-use std::sync::Arc;
+use coap::config::TrainConfig;
+use coap::runtime::open_backend;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::open(&default_artifacts_dir())?);
+    let rt = open_backend(&TrainConfig::default())?;
     let steps = benchlib::bench_steps(16);
     let specs = benchlib::table2_specs(steps);
     let mut reports = Vec::new();

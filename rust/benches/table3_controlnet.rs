@@ -3,12 +3,11 @@
 //! examples/controlnet_sweep run; this bench reports memory + time).
 
 use coap::benchlib::{self, print_report_table, run_spec};
-use coap::config::default_artifacts_dir;
-use coap::runtime::Runtime;
-use std::sync::Arc;
+use coap::config::TrainConfig;
+use coap::runtime::open_backend;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::open(&default_artifacts_dir())?);
+    let rt = open_backend(&TrainConfig::default())?;
     let steps = benchlib::bench_steps(8);
     let specs = benchlib::table3_specs(steps, &[2.0, 4.0, 8.0]);
     let mut reports = Vec::new();

@@ -3,12 +3,11 @@
 //! examples/train_lm --table5 --large (lm_base is slow on 1 core).
 
 use coap::benchlib::{self, print_report_table, run_spec};
-use coap::config::default_artifacts_dir;
-use coap::runtime::Runtime;
-use std::sync::Arc;
+use coap::config::TrainConfig;
+use coap::runtime::open_backend;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Arc::new(Runtime::open(&default_artifacts_dir())?);
+    let rt = open_backend(&TrainConfig::default())?;
     let steps = benchlib::bench_steps(16);
     let specs = benchlib::table5_specs(steps, false);
     let mut reports = Vec::new();

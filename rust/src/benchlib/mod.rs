@@ -9,7 +9,7 @@
 
 use crate::config::{ConvFormat, MomentBase, OptKind, TrainConfig};
 use crate::coordinator::{memory, TrainReport, Trainer};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::Precision;
 use crate::util::bench::print_table;
 use anyhow::Result;
@@ -35,7 +35,7 @@ pub fn bench_steps(default: usize) -> usize {
         .unwrap_or(default)
 }
 
-pub fn run_spec(rt: &Arc<Runtime>, spec: &RunSpec) -> Result<TrainReport> {
+pub fn run_spec(rt: &Arc<dyn Backend>, spec: &RunSpec) -> Result<TrainReport> {
     let mut tr = Trainer::new(spec.cfg.clone(), Arc::clone(rt))?;
     tr.quiet = true;
     let mut rep = tr.run()?;

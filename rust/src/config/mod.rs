@@ -6,6 +6,33 @@ use crate::util::cli::Args;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 
+/// Which execution engine runs the compute graphs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust executor (default): hermetic, no artifacts needed.
+    Native,
+    /// PJRT/XLA replay of AOT artifacts (requires `--features xla` and
+    /// `make artifacts`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "native" | "rust" => BackendKind::Native,
+            "xla" | "pjrt" => BackendKind::Xla,
+            _ => anyhow::bail!("unknown backend '{s}' (native|xla)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
 /// Which optimizer family drives the run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OptKind {
@@ -89,6 +116,8 @@ impl Default for CoapAblation {
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub model: String,
+    /// Execution engine (`--backend native|xla`).
+    pub backend: BackendKind,
     pub optimizer: OptKind,
     /// Paper's rank ratio c: r = min(m, n) / c for each matrix.
     pub rank_ratio: f64,
@@ -173,6 +202,7 @@ impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
             model: "lm_tiny".into(),
+            backend: BackendKind::Native,
             optimizer: OptKind::Coap,
             rank_ratio: 4.0,
             t_update: 16,
@@ -229,6 +259,7 @@ impl TrainConfig {
     pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
         match key {
             "model" => self.model = val.into(),
+            "backend" => self.backend = BackendKind::parse(val)?,
             "optimizer" | "opt" => self.optimizer = OptKind::parse(val)?,
             "rank-ratio" | "rank_ratio" => self.rank_ratio = val.parse()?,
             "t-update" | "t_update" | "tu" => self.t_update = val.parse()?,
@@ -316,5 +347,15 @@ mod tests {
         assert!(OptKind::parse("sgd").is_err());
         assert!(OptKind::parse("coap").unwrap().is_low_rank());
         assert!(!OptKind::parse("adamw").unwrap().is_low_rank());
+    }
+
+    #[test]
+    fn backend_selection() {
+        assert_eq!(TrainConfig::default().backend, BackendKind::Native);
+        let args = Args::parse(["--backend", "xla"].iter().map(|s| s.to_string()));
+        let cfg = TrainConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.backend, BackendKind::Xla);
+        assert_eq!(BackendKind::parse("native").unwrap().label(), "native");
+        assert!(BackendKind::parse("tpu").is_err());
     }
 }

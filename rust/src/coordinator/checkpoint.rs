@@ -12,6 +12,7 @@
 //! fine-tuning experiments restart optimizer state from scratch, as do
 //! ours); resuming mid-run warm restarts the moments.
 
+use crate::runtime::ModelInfo;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
@@ -88,6 +89,45 @@ impl Checkpoint {
         }
         Ok(Checkpoint { model, step, params })
     }
+
+    /// Validate this checkpoint against a model census (any backend's)
+    /// and return the parameters in census order — the resume path for
+    /// `coap train --load-checkpoint`.
+    pub fn into_params_for(self, info: &ModelInfo) -> Result<Vec<Tensor>> {
+        if self.model != info.name {
+            bail!(
+                "checkpoint is for model '{}', not '{}'",
+                self.model,
+                info.name
+            );
+        }
+        if self.params.len() != info.params.len() {
+            bail!(
+                "checkpoint has {} tensors, census expects {}",
+                self.params.len(),
+                info.params.len()
+            );
+        }
+        let mut by_name: std::collections::BTreeMap<String, Tensor> =
+            self.params.into_iter().collect();
+        info.params
+            .iter()
+            .map(|spec| {
+                let t = by_name
+                    .remove(&spec.name)
+                    .with_context(|| format!("checkpoint missing param '{}'", spec.name))?;
+                if t.dims() != &spec.shape[..] {
+                    bail!(
+                        "checkpoint param '{}' has shape {:?}, census expects {:?}",
+                        spec.name,
+                        t.dims(),
+                        spec.shape
+                    );
+                }
+                Ok(t)
+            })
+            .collect()
+    }
 }
 
 fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
@@ -144,6 +184,64 @@ mod tests {
         assert_eq!(back.params[0].1.f32s(), ck.params[0].1.f32s());
         assert_eq!(back.params[1].1.dims(), &[4]);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_validates_census() {
+        use crate::runtime::ParamInfo;
+        let info = ModelInfo {
+            name: "toy".into(),
+            family: "lm".into(),
+            cfg: crate::util::json::Json::Null,
+            param_count: 10,
+            params: vec![
+                ParamInfo {
+                    name: "w".into(),
+                    shape: vec![2, 3],
+                    kind: "matrix".into(),
+                    init: "normal".into(),
+                    scale: 0.02,
+                },
+                ParamInfo {
+                    name: "b".into(),
+                    shape: vec![4],
+                    kind: "vector".into(),
+                    init: "zeros".into(),
+                    scale: 0.0,
+                },
+            ],
+            data: vec![],
+            train_step: String::new(),
+            eval_step: String::new(),
+            eval_outputs: vec![],
+        };
+        let ck = |params: Vec<(String, Tensor)>| Checkpoint {
+            model: "toy".into(),
+            step: 1,
+            params,
+        };
+        // Order in the file differs from census order — restore fixes it.
+        let good = ck(vec![
+            ("b".into(), Tensor::zeros(&[4])),
+            ("w".into(), Tensor::from_f32(&[2, 3], vec![1.; 6])),
+        ])
+        .into_params_for(&info)
+        .unwrap();
+        assert_eq!(good[0].dims(), &[2, 3]);
+        assert_eq!(good[1].dims(), &[4]);
+        // Wrong model name.
+        let mut bad = ck(vec![
+            ("w".into(), Tensor::from_f32(&[2, 3], vec![1.; 6])),
+            ("b".into(), Tensor::zeros(&[4])),
+        ]);
+        bad.model = "other".into();
+        assert!(bad.into_params_for(&info).is_err());
+        // Wrong shape.
+        let bad2 = ck(vec![
+            ("w".into(), Tensor::from_f32(&[3, 2], vec![1.; 6])),
+            ("b".into(), Tensor::zeros(&[4])),
+        ]);
+        assert!(bad2.into_params_for(&info).is_err());
     }
 
     #[test]

@@ -1,13 +1,15 @@
-//! The training loop (leader): data -> fwd/bwd executable -> per-layer
+//! The training loop (leader): data -> fwd/bwd graph -> per-layer
 //! optimizer dispatch -> metrics, with the projection-update schedule
-//! driven from the optimizer's policy.
+//! driven from the optimizer's policy. Engine-agnostic: everything runs
+//! through the [`Backend`] trait (native Rust by default, XLA replay
+//! behind `--features xla`).
 
 use super::metrics::{EvalPoint, Metrics};
 use crate::config::TrainConfig;
 use crate::data::{self, vision, DataSource};
 use crate::model::ParamStore;
 use crate::optim::{self, Optimizer};
-use crate::runtime::{ModelInfo, Runtime};
+use crate::runtime::{Backend, ModelInfo};
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -15,7 +17,7 @@ use std::time::{Duration, Instant};
 
 pub struct Trainer {
     pub cfg: TrainConfig,
-    pub rt: Arc<Runtime>,
+    pub rt: Arc<dyn Backend>,
     pub model: ModelInfo,
     pub store: ParamStore,
     pub opt: Box<dyn Optimizer>,
@@ -55,8 +57,8 @@ impl TrainReport {
 }
 
 impl Trainer {
-    pub fn new(cfg: TrainConfig, rt: Arc<Runtime>) -> Result<Trainer> {
-        let model = rt.manifest.model(&cfg.model)?.clone();
+    pub fn new(cfg: TrainConfig, rt: Arc<dyn Backend>) -> Result<Trainer> {
+        let model = rt.model(&cfg.model)?;
         let store = ParamStore::init(&model, cfg.seed, cfg.finetune);
         let opt = optim::build(&cfg, &model)?;
         let data = data::for_model(&model, cfg.seed);
@@ -72,11 +74,10 @@ impl Trainer {
         })
     }
 
-    /// Pre-compile the train/eval executables (excluded from step timing).
+    /// Pre-compile the train/eval executables (excluded from step
+    /// timing; a no-op on the native backend).
     pub fn warmup(&self) -> Result<()> {
-        self.rt.executable(&self.model.train_step)?;
-        self.rt.executable(&self.model.eval_step)?;
-        Ok(())
+        self.rt.warmup(&[&self.model.train_step, &self.model.eval_step])
     }
 
     pub fn run(&mut self) -> Result<TrainReport> {
@@ -104,7 +105,7 @@ impl Trainer {
                 self.cfg.lr,
                 grads,
                 &mut self.store.params,
-                &self.rt,
+                &*self.rt,
             )?;
             opt_step += stats.step_time;
             proj += stats.proj_time;

@@ -1,17 +1,22 @@
 //! # coap — COAP: Memory-Efficient Training with Correlation-Aware
-//! # Gradient Projection (Rust + JAX + Pallas reproduction)
+//! # Gradient Projection (Rust reproduction)
 //!
-//! Three-layer architecture (see DESIGN.md):
-//! - **L3 (this crate)**: the training coordinator — per-layer optimizer
-//!   state machines, the `T_u`/`λ` projection-update scheduler, 8-bit
-//!   quantized state store, data pipeline, metrics (loss/PPL/CEU),
-//!   memory accounting, checkpointing, CLI.
-//! - **L2**: JAX compute graphs AOT-lowered once to `artifacts/*.hlo.txt`
-//!   by `python/compile/aot.py`; loaded and executed here via PJRT.
-//! - **L1**: Pallas kernels inside those graphs.
+//! Pluggable-backend architecture (see DESIGN.md and rust/README.md):
+//! - **Coordinator (this crate)**: per-layer optimizer state machines,
+//!   the `T_u`/`λ` projection-update scheduler, 8-bit quantized state
+//!   store, data pipeline, metrics (loss/PPL/CEU), memory accounting,
+//!   checkpointing, CLI — all engine-agnostic over [`runtime::Backend`].
+//! - **Native backend (default)**: `runtime::native` executes every
+//!   minted graph name with pure-Rust kernels (`optim::refimpl`) and the
+//!   built-in model zoo (`model::zoo` + `model::nativenet`), with the
+//!   per-layer optimizer loop parallelized over `util::threadpool`.
+//!   Fully hermetic: no Python, no artifacts, no external crates.
+//! - **XLA backend (`--features xla`)**: `runtime::xla` replays the JAX
+//!   graphs AOT-lowered to `artifacts/*.hlo.txt` by
+//!   `python/compile/aot.py` through PJRT (Pallas kernels inside).
 //!
-//! Python never runs on the training path: after `make artifacts` the
-//! binary is self-contained.
+//! Both backends execute the same graph-name contract, so optimizers,
+//! trainer, benches and examples run unchanged on either engine.
 
 pub mod util;
 pub mod rng;

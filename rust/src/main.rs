@@ -2,21 +2,21 @@
 //!
 //! Subcommands:
 //!   train       run one training job per config/CLI flags
-//!   info        summarize the artifact manifest (models, graphs)
+//!   info        summarize the backend's model census
 //!   experiments list the paper tables/figures and how to regenerate them
 //!
 //! Examples:
 //!   coap train --model lm_small --optimizer coap --steps 300 --lr 2e-3
 //!   coap train --model ctrl_small --optimizer coap-adafactor \
 //!        --rank-ratio 8 --precision int8 --steps 200
+//!   coap train --backend xla --model lm_tiny   # needs --features xla
 //!   coap info
 
 use anyhow::Result;
 use coap::config::TrainConfig;
 use coap::coordinator::{checkpoint::Checkpoint, memory, Trainer};
-use coap::runtime::Runtime;
+use coap::runtime::open_backend;
 use coap::util::cli::Args;
-use std::sync::Arc;
 
 fn main() {
     if let Err(e) = run() {
@@ -41,9 +41,10 @@ fn run() -> Result<()> {
 
 fn train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
-    let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+    let rt = open_backend(&cfg)?;
     eprintln!(
-        "model={} optimizer={} rank-ratio={} Tu={} λ={} precision={} steps={}",
+        "backend={} model={} optimizer={} rank-ratio={} Tu={} λ={} precision={} steps={}",
+        rt.label(),
         cfg.model,
         cfg.optimizer.label(),
         cfg.rank_ratio,
@@ -54,6 +55,12 @@ fn train(args: &Args) -> Result<()> {
     );
     let save_ckpt = args.get("save-checkpoint").map(String::from);
     let mut trainer = Trainer::new(cfg, rt)?;
+    if let Some(path) = args.get("load-checkpoint") {
+        let ck = Checkpoint::load(path)?;
+        let step = ck.step;
+        trainer.store.params = ck.into_params_for(&trainer.model)?;
+        eprintln!("resumed params from {path} (saved at step {step})");
+    }
     let report = trainer.run()?;
     println!("\n== run report ==");
     println!("model               {}", report.model);
@@ -97,14 +104,12 @@ fn train(args: &Args) -> Result<()> {
 
 fn info(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
-    let rt = Runtime::open(&cfg.artifacts_dir)?;
-    println!(
-        "manifest: {} graphs, {} models",
-        rt.manifest.graphs.len(),
-        rt.manifest.models.len()
-    );
+    let rt = open_backend(&cfg)?;
+    let names = rt.model_names();
+    println!("backend: {} ({} models)", rt.label(), names.len());
     println!("\nmodels:");
-    for (name, m) in &rt.manifest.models {
+    for name in names {
+        let m = rt.model(&name)?;
         println!(
             "  {name:<12} family={:<6} params={:>10}  ({} tensors)",
             m.family,
@@ -117,9 +122,9 @@ fn info(args: &Args) -> Result<()> {
 
 fn experiments(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
-    let rt = Runtime::open(&cfg.artifacts_dir)?;
+    let rt = open_backend(&cfg)?;
     println!("paper experiments (see DESIGN.md §5 for the full index):");
-    for e in &rt.manifest.experiments {
+    for e in rt.experiments() {
         println!(
             "  {:<18} model={:<12} ratios={:?}  {}",
             e.id, e.model, e.ratios, e.note
@@ -135,15 +140,20 @@ fn print_help() {
 USAGE: coap <train|info|experiments> [--flags]
 
 train flags (also JSON-settable via --config file.json):
+  --backend B             native (default, hermetic pure-Rust) | xla
+                          (PJRT artifact replay; needs --features xla)
   --model NAME            lm_tiny|lm_small|lm_base|lm_large|vit_tiny|vit_small|
                           cnn_tiny|cnn_small|cnn_celeb|sit_small|ctrl_small|llava_small
+                          (plus *_micro test models on the native backend)
   --optimizer KIND        adamw|adafactor|coap|coap-adafactor|galore|flora|lora|relora
   --rank-ratio C          r = min(m,n)/C            (default 4)
   --t-update N --lambda K Eqn-6 every N, Eqn-7 every K*N steps
   --precision P           f32|bf16|int8 state storage
+  --threads N             per-layer optimizer-step parallelism
   --steps N --lr F --wd F --seed S
   --track-ceu true        record the CEU metric (Fig 3)
   --save-checkpoint PATH  write params after training
+  --load-checkpoint PATH  resume params before training (moments restart)
 
 see also: examples/ (quality drivers) and `cargo bench` (paper tables)."
     );

@@ -1,5 +1,9 @@
-//! Parameter store: materializes a model's weights from the manifest
-//! census and owns them across training steps (the HLO graphs are pure).
+//! Model layer: the parameter store (weights across steps — the compute
+//! graphs are pure), the native model census ([`zoo`]) and the native
+//! forward/backward implementations ([`nativenet`]).
+
+pub mod nativenet;
+pub mod zoo;
 
 use crate::rng::Rng;
 use crate::runtime::{ModelInfo, ParamInfo};

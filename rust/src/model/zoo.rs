@@ -1,0 +1,321 @@
+//! Built-in model census for the native backend — the Rust mirror of
+//! `python/compile/shapes.py` (same names, same parameter shapes/order,
+//! same data contracts), so the native and XLA backends are drop-in
+//! interchangeable for every model the paper tables use.
+//!
+//! Extra `*_micro` configs exist only here: they keep the hermetic
+//! default test suite fast while exercising every slot kind (matrix,
+//! conv Tucker-1/2, vector) on every family.
+
+use crate::runtime::{DataInfo, ExperimentInfo, ModelInfo, ParamInfo};
+use crate::runtime::names;
+use crate::util::json::Json;
+
+fn p(name: &str, shape: &[usize], kind: &str, init: &str, scale: f32) -> ParamInfo {
+    ParamInfo {
+        name: name.into(),
+        shape: shape.to_vec(),
+        kind: kind.into(),
+        init: init.into(),
+        scale,
+    }
+}
+
+fn mat(name: &str, shape: &[usize]) -> ParamInfo {
+    p(name, shape, "matrix", "normal", 0.02)
+}
+
+fn vec_ones(name: &str, n: usize) -> ParamInfo {
+    p(name, &[n], "vector", "ones", 0.0)
+}
+
+fn d_f32(name: &str, shape: &[usize]) -> DataInfo {
+    DataInfo { name: name.into(), shape: shape.to_vec(), dtype: "f32".into() }
+}
+
+fn d_i32(name: &str, shape: &[usize]) -> DataInfo {
+    DataInfo { name: name.into(), shape: shape.to_vec(), dtype: "i32".into() }
+}
+
+/// Transformer trunk census shared by lm/vit/sit/llava: per block
+/// [ln1, wq, wk, wv, wo, ln2, w1, w2] (must match `nativenet`'s layout).
+fn trunk_params(params: &mut Vec<ParamInfo>, layers: usize, d: usize) {
+    for i in 0..layers {
+        let pre = format!("blk{i}.");
+        params.push(vec_ones(&format!("{pre}ln1"), d));
+        params.push(mat(&format!("{pre}wq"), &[d, d]));
+        params.push(mat(&format!("{pre}wk"), &[d, d]));
+        params.push(mat(&format!("{pre}wv"), &[d, d]));
+        params.push(mat(&format!("{pre}wo"), &[d, d]));
+        params.push(vec_ones(&format!("{pre}ln2"), d));
+        params.push(mat(&format!("{pre}w1"), &[d, 4 * d]));
+        params.push(mat(&format!("{pre}w2"), &[4 * d, d]));
+    }
+}
+
+fn finish(
+    name: &str,
+    family: &str,
+    cfg: &str,
+    params: Vec<ParamInfo>,
+    data: Vec<DataInfo>,
+    eval_outputs: &[&str],
+) -> ModelInfo {
+    let param_count = params.iter().map(|p| p.numel()).sum();
+    ModelInfo {
+        name: name.into(),
+        family: family.into(),
+        cfg: Json::parse(cfg).expect("zoo cfg json"),
+        param_count,
+        params,
+        data,
+        train_step: names::train_step(name),
+        eval_step: names::eval_step(name),
+        eval_outputs: eval_outputs.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lm_model(name: &str, d: usize, layers: usize, heads: usize, vocab: usize, seq: usize, batch: usize) -> ModelInfo {
+    let mut params = vec![mat("embed", &[vocab, d])];
+    trunk_params(&mut params, layers, d);
+    params.push(vec_ones("lnf", d));
+    params.push(mat("head", &[d, vocab]));
+    let cfg = format!(
+        r#"{{"d":{d},"layers":{layers},"heads":{heads},"vocab":{vocab},"seq":{seq},"batch":{batch}}}"#
+    );
+    let data = vec![d_i32("tokens", &[batch, seq]), d_i32("targets", &[batch, seq])];
+    finish(name, "lm", &cfg, params, data, &["loss"])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn vit_model(
+    name: &str,
+    d: usize,
+    layers: usize,
+    heads: usize,
+    img: usize,
+    patch: usize,
+    chans: usize,
+    classes: usize,
+    batch: usize,
+) -> ModelInfo {
+    let tokens = (img / patch) * (img / patch);
+    let patch_dim = chans * patch * patch;
+    let mut params = vec![
+        mat("patch_embed", &[patch_dim, d]),
+        p("pos_embed", &[tokens, d], "vector", "normal", 0.02),
+    ];
+    trunk_params(&mut params, layers, d);
+    params.push(vec_ones("lnf", d));
+    params.push(mat("head", &[d, classes]));
+    let cfg = format!(
+        r#"{{"d":{d},"layers":{layers},"heads":{heads},"img":{img},"patch":{patch},"chans":{chans},"classes":{classes},"batch":{batch}}}"#
+    );
+    let data = vec![d_f32("images", &[batch, chans, img, img]), d_i32("labels", &[batch])];
+    finish(name, "vit", &cfg, params, data, &["loss", "n_correct"])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn sit_model(
+    name: &str,
+    d: usize,
+    layers: usize,
+    heads: usize,
+    img: usize,
+    patch: usize,
+    chans: usize,
+    batch: usize,
+) -> ModelInfo {
+    let tokens = (img / patch) * (img / patch);
+    let patch_dim = chans * patch * patch;
+    let mut params = vec![
+        mat("patch_embed", &[patch_dim, d]),
+        p("pos_embed", &[tokens, d], "vector", "normal", 0.02),
+        p("time_embed", &[d], "vector", "normal", 0.02),
+    ];
+    trunk_params(&mut params, layers, d);
+    params.push(vec_ones("lnf", d));
+    params.push(mat("head", &[d, patch_dim]));
+    let cfg = format!(
+        r#"{{"d":{d},"layers":{layers},"heads":{heads},"img":{img},"patch":{patch},"chans":{chans},"batch":{batch}}}"#
+    );
+    let data = vec![
+        d_f32("images", &[batch, chans, img, img]),
+        d_f32("noise", &[batch, chans, img, img]),
+        d_f32("t", &[batch]),
+    ];
+    finish(name, "sit", &cfg, params, data, &["loss"])
+}
+
+fn cnn_model(
+    name: &str,
+    img: usize,
+    chans: usize,
+    widths: &[usize],
+    kernel: usize,
+    batch: usize,
+    control: bool,
+) -> ModelInfo {
+    let mut params = Vec::new();
+    let mut chain = vec![chans];
+    chain.extend_from_slice(widths);
+    for i in 0..chain.len() - 1 {
+        params.push(p(
+            &format!("conv{i}.w"),
+            &[chain[i + 1], chain[i], kernel, kernel],
+            "conv",
+            "normal",
+            0.1,
+        ));
+        params.push(p(&format!("conv{i}.b"), &[chain[i + 1]], "vector", "zeros", 0.0));
+    }
+    params.push(p(
+        "conv_out.w",
+        &[chans, chain[chain.len() - 1], kernel, kernel],
+        "conv",
+        "normal",
+        0.1,
+    ));
+    params.push(p("conv_out.b", &[chans], "vector", "zeros", 0.0));
+    if control {
+        let mid = widths[widths.len() / 2];
+        params.push(p("ctrl0.w", &[widths[0], 1, kernel, kernel], "conv", "normal", 0.1));
+        params.push(p("ctrl0.b", &[widths[0]], "vector", "zeros", 0.0));
+        params.push(p("ctrl1.w", &[mid, widths[0], kernel, kernel], "conv", "normal", 0.1));
+        params.push(p("ctrl1.b", &[mid], "vector", "zeros", 0.0));
+    }
+    let widths_json =
+        widths.iter().map(|w| w.to_string()).collect::<Vec<_>>().join(",");
+    let cfg = format!(
+        r#"{{"img":{img},"chans":{chans},"widths":[{widths_json}],"kernel":{kernel},"batch":{batch},"control":{control}}}"#
+    );
+    let mut data = vec![
+        d_f32("noisy", &[batch, chans, img, img]),
+        d_f32("clean", &[batch, chans, img, img]),
+    ];
+    let mut eval_outputs = vec!["loss"];
+    if control {
+        data.push(d_f32("control", &[batch, 1, img, img]));
+        eval_outputs.push("pred");
+    }
+    finish(name, "cnn", &cfg, params, data, &eval_outputs)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn llava_model(
+    name: &str,
+    feat: usize,
+    d: usize,
+    layers: usize,
+    heads: usize,
+    vocab: usize,
+    seq: usize,
+    answers: usize,
+    batch: usize,
+) -> ModelInfo {
+    let mut params = vec![mat("projector", &[feat, d]), mat("embed", &[vocab, d])];
+    trunk_params(&mut params, layers, d);
+    params.push(vec_ones("lnf", d));
+    params.push(mat("answer_head", &[d, answers]));
+    let cfg = format!(
+        r#"{{"feat":{feat},"d":{d},"layers":{layers},"heads":{heads},"vocab":{vocab},"seq":{seq},"answers":{answers},"batch":{batch}}}"#
+    );
+    let data = vec![
+        d_f32("feats", &[batch, feat]),
+        d_i32("tokens", &[batch, seq]),
+        d_i32("answers", &[batch]),
+    ];
+    finish(name, "llava", &cfg, params, data, &["loss", "n_correct"])
+}
+
+/// The full model census (paper substitutes + native-only micros).
+pub fn models() -> Vec<ModelInfo> {
+    vec![
+        // shapes.py registry (identical geometry).
+        lm_model("lm_tiny", 128, 2, 2, 512, 64, 8),
+        lm_model("lm_small", 256, 4, 4, 2048, 128, 8),
+        lm_model("lm_base", 512, 8, 8, 4096, 128, 8),
+        lm_model("lm_large", 768, 12, 12, 8192, 256, 4),
+        vit_model("vit_tiny", 128, 2, 2, 16, 4, 3, 10, 32),
+        vit_model("vit_small", 192, 4, 3, 32, 4, 3, 100, 32),
+        cnn_model("cnn_tiny", 16, 3, &[16, 32, 16], 3, 16, false),
+        cnn_model("cnn_small", 32, 3, &[32, 64, 32], 3, 16, false),
+        cnn_model("cnn_celeb", 64, 3, &[32, 64, 64, 32], 3, 8, false),
+        sit_model("sit_small", 256, 4, 4, 32, 4, 3, 16),
+        cnn_model("ctrl_small", 32, 3, &[32, 64, 32], 3, 8, true),
+        llava_model("llava_small", 512, 256, 4, 4, 1024, 32, 16, 16),
+        // Native-only micros: one per family, sized for debug-build tests.
+        lm_model("lm_micro", 32, 1, 1, 128, 16, 4),
+        vit_model("vit_micro", 32, 1, 1, 8, 4, 2, 5, 8),
+        cnn_model("cnn_micro", 8, 2, &[8, 12, 8], 3, 4, false),
+        cnn_model("ctrl_micro", 16, 2, &[8, 16, 8], 3, 2, true),
+        sit_model("sit_micro", 32, 1, 1, 8, 4, 2, 4),
+        llava_model("llava_micro", 32, 32, 1, 1, 64, 8, 4, 8),
+    ]
+}
+
+/// Paper tables/figures (mirror of shapes.py EXPERIMENTS).
+pub fn experiments() -> Vec<ExperimentInfo> {
+    let e = |id: &str, model: &str, ratios: &[f64], note: &str| ExperimentInfo {
+        id: id.into(),
+        model: model.into(),
+        ratios: ratios.to_vec(),
+        note: note.into(),
+    };
+    vec![
+        e("table1_ldm", "cnn_tiny", &[2.0], "LDM pre-train substitute"),
+        e("table2_sit", "sit_small", &[2.0], "SiT-XL/2 + REPA substitute"),
+        e("table3_controlnet", "ctrl_small", &[2.0, 4.0, 8.0], "ControlNet-SDXL rank-ratio sweep"),
+        e("table5_llama1b", "lm_small", &[4.0], "LLaMA-1B substitute"),
+        e("table5_llama7b", "lm_base", &[4.0], "LLaMA-7B substitute"),
+        e("table6_llava", "llava_small", &[4.0], "LLaVA fine-tune substitute"),
+        e("table7_ablation", "vit_tiny", &[4.0], "Eqn6/Eqn7 component ablation"),
+        e("fig3_ceu", "vit_tiny", &[4.0], "CEU trajectory comparison"),
+        e("fig4_grid", "vit_tiny", &[2.0, 4.0, 8.0], "lambda/r/T_u grid"),
+        e("app_ddpm_cifar", "cnn_small", &[1.5], "DDPM CIFAR-10 substitute"),
+        e("app_ddpm_celeba", "cnn_celeb", &[2.0], "DDPM CelebA-HQ substitute"),
+        e("app_tucker", "cnn_tiny", &[4.0], "Tucker format comparison"),
+        e("e2e_lm", "lm_base", &[4.0], "end-to-end training driver"),
+        e("smoke", "lm_tiny", &[4.0], "integration tests"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_matches_python_shapes() {
+        let ms = models();
+        let by = |n: &str| ms.iter().find(|m| m.name == n).unwrap();
+        let lm = by("lm_tiny");
+        // embed + 2 * 8 + lnf + head
+        assert_eq!(lm.params.len(), 1 + 2 * 8 + 2);
+        assert_eq!(lm.params[0].shape, vec![512, 128]);
+        assert_eq!(lm.params[1].name, "blk0.ln1");
+        assert_eq!(lm.params[8].shape, vec![512, 128]); // blk0.w2 (4d, d)
+        assert_eq!(lm.data[0].shape, vec![8, 64]);
+        let cnn = by("cnn_tiny");
+        assert_eq!(cnn.params[0].shape, vec![16, 3, 3, 3]);
+        assert_eq!(cnn.params[0].kind, "conv");
+        assert_eq!(cnn.params.last().unwrap().name, "conv_out.b");
+        let ctrl = by("ctrl_small");
+        assert!(ctrl.params.iter().any(|p| p.name == "ctrl1.w"));
+        assert_eq!(ctrl.eval_outputs, vec!["loss", "pred"]);
+        assert_eq!(ctrl.data.len(), 3);
+        let vit = by("vit_tiny");
+        assert_eq!(vit.params[0].shape, vec![3 * 4 * 4, 128]);
+        assert_eq!(vit.params[1].kind, "vector"); // pos_embed full-rank
+        assert_eq!(vit.cfg_usize("classes"), 10);
+    }
+
+    #[test]
+    fn every_model_has_positive_param_count_and_data() {
+        for m in models() {
+            assert!(m.param_count > 0, "{}", m.name);
+            assert!(!m.data.is_empty(), "{}", m.name);
+            assert_eq!(m.train_step, format!("train_step__{}", m.name));
+        }
+    }
+}

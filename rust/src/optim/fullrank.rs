@@ -7,7 +7,7 @@
 
 use super::{beta_powers, refimpl, Optimizer, StateBuf, StepStats};
 use crate::config::TrainConfig;
-use crate::runtime::{names, ModelInfo, Runtime};
+use crate::runtime::{names, Backend, ModelInfo};
 use crate::tensor::{Precision, Tensor};
 use anyhow::Result;
 use std::time::Instant;
@@ -87,7 +87,7 @@ impl Optimizer for FullRank {
         lr: f32,
         grads: &[Tensor],
         params: &mut [Tensor],
-        rt: &Runtime,
+        rt: &dyn Backend,
     ) -> Result<StepStats> {
         let mut stats = StepStats::default();
         let (b1t, b2t) = beta_powers(t);

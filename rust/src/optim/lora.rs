@@ -14,7 +14,7 @@
 use super::{beta_powers, refimpl, Optimizer, StateBuf, StepStats};
 use crate::config::{OptKind, TrainConfig};
 use crate::rng::Rng;
-use crate::runtime::{names, ModelInfo, Runtime};
+use crate::runtime::{names, Backend, ModelInfo};
 use crate::tensor::Tensor;
 use anyhow::Result;
 use std::time::Instant;
@@ -102,7 +102,7 @@ impl Optimizer for Lora {
         lr: f32,
         grads: &[Tensor],
         params: &mut [Tensor],
-        rt: &Runtime,
+        rt: &dyn Backend,
     ) -> Result<StepStats> {
         let mut stats = StepStats::default();
         let (b1t, b2t) = beta_powers(t);

@@ -10,13 +10,19 @@
 //!
 //! which is exactly the paper's framing (Sec. 3.2): the step math is
 //! identical, the *inter-projection correlation policy* is the variable.
+//!
+//! The per-layer slot loop fans out across `util::threadpool` (layers
+//! are independent given the step's projection action). Determinism is
+//! thread-count-invariant: every slot draws from its own RNG stream
+//! forked from (seed, step, slot-index), and stats merge in slot order.
 
 use super::scheduler::{CoapSchedule, IntervalSchedule, ProjAction};
 use super::{beta_powers, refimpl, Optimizer, StateBuf, StepStats};
 use crate::config::{ConvFormat, MomentBase, OptKind, TrainConfig};
 use crate::rng::Rng;
-use crate::runtime::{names, ModelInfo, Runtime};
+use crate::runtime::{names, Backend, ModelInfo};
 use crate::tensor::{Precision, Tensor};
+use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 use std::time::Instant;
 
@@ -74,6 +80,20 @@ enum Slot {
     Vector { m: Vec<f32>, v: Vec<f32> },
 }
 
+/// Per-step constants shared (read-only) by every slot job.
+struct StepCtx {
+    kind: OptKind,
+    action: ProjAction,
+    t: usize,
+    lr: f32,
+    track_ceu: bool,
+    b1t: Tensor,
+    b2t: Tensor,
+    lr_t: Tensor,
+    wd_t: Tensor,
+    t_t: Tensor,
+}
+
 pub struct LowRank {
     kind: OptKind,
     base: MomentBase,
@@ -82,6 +102,7 @@ pub struct LowRank {
     weight_decay: f32,
     track_ceu: bool,
     rng: Rng,
+    pool: ThreadPool,
 }
 
 impl LowRank {
@@ -183,6 +204,7 @@ impl LowRank {
             };
             slots.push(slot);
         }
+        let workers = cfg.threads.max(1).min(slots.len().max(1));
         let mut lr = LowRank {
             kind: cfg.optimizer,
             base,
@@ -191,6 +213,7 @@ impl LowRank {
             weight_decay: cfg.weight_decay,
             track_ceu: cfg.track_ceu,
             rng: Rng::new(cfg.seed ^ 0x10c4),
+            pool: ThreadPool::new(workers),
         };
         lr.init_spatial_projections();
         Ok(lr)
@@ -207,63 +230,245 @@ impl LowRank {
             }
         }
     }
+}
 
-    fn random_p(rng: &mut Rng, n: usize, r: usize, orthonormal: bool) -> Tensor {
-        if orthonormal {
-            refimpl::mgs_qr(&Tensor::from_f32(&[n, r], rng.normal_vec(n * r, 1.0)))
-        } else {
-            // Flora scaling: entries N(0, 1/r) so E[P P^T] = I_n / 1.
-            Tensor::from_f32(&[n, r], rng.normal_vec(n * r, 1.0 / (r as f32).sqrt()))
+fn random_p(rng: &mut Rng, n: usize, r: usize, orthonormal: bool) -> Tensor {
+    if orthonormal {
+        refimpl::mgs_qr(&Tensor::from_f32(&[n, r], rng.normal_vec(n * r, 1.0)))
+    } else {
+        // Flora scaling: entries N(0, 1/r) so E[P P^T] = I_n / 1.
+        Tensor::from_f32(&[n, r], rng.normal_vec(n * r, 1.0 / (r as f32).sqrt()))
+    }
+}
+
+/// Refresh one matrix-slot projection per the policy's action.
+#[allow(clippy::too_many_arguments)]
+fn refresh_matrix(
+    kind: OptKind,
+    action: ProjAction,
+    rng: &mut Rng,
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    p: &mut Option<Tensor>,
+    st: &States,
+    g2: &Tensor,
+    rt: &dyn Backend,
+) -> Result<()> {
+    let nb = rows.min(cols);
+    if p.is_none() {
+        // Algorithm 1 line 3: random init (then the action below may
+        // immediately recalibrate/SVD it).
+        *p = Some(random_p(rng, nb, rank, kind != OptKind::Flora));
+    }
+    match action {
+        ProjAction::Keep => {}
+        ProjAction::Resample => {
+            *p = Some(random_p(rng, nb, rank, false));
+        }
+        ProjAction::Recalib => {
+            let name = names::matrix_proj("recalib", rows, cols, rank);
+            let out = rt.exec(&name, &[p.as_ref().unwrap(), g2])?;
+            *p = Some(out.into_iter().next().unwrap());
+        }
+        ProjAction::FullSvd => {
+            let name = names::matrix_proj("galore_svd", rows, cols, rank);
+            let out = rt.exec(&name, &[g2])?;
+            *p = Some(out.into_iter().next().unwrap());
+        }
+        ProjAction::PUpdate => {
+            let ml = match st {
+                States::Adam { m, .. } => m.loaded(),
+                States::Factor { m, .. } => m.loaded(),
+            };
+            let name = names::matrix_proj("pupdate", rows, cols, rank);
+            let out = rt.exec(&name, &[p.as_ref().unwrap(), g2, &ml])?;
+            *p = Some(out.into_iter().next().unwrap());
         }
     }
+    Ok(())
+}
 
-    /// Refresh one matrix-slot projection per the policy's action.
-    #[allow(clippy::too_many_arguments)]
-    fn refresh_matrix(
-        &self,
-        rng: &mut Rng,
-        action: ProjAction,
-        rows: usize,
-        cols: usize,
-        rank: usize,
-        p: &mut Option<Tensor>,
-        st: &States,
-        g2: &Tensor,
-        rt: &Runtime,
-    ) -> Result<()> {
-        let nb = rows.min(cols);
-        if p.is_none() {
-            // Algorithm 1 line 3: random init (then the action below may
-            // immediately recalibrate/SVD it).
-            *p = Some(Self::random_p(rng, nb, rank, self.kind != OptKind::Flora));
+/// One slot's full step: projection refresh + projected update. Runs on
+/// a pool worker; everything it touches is slot-local (or read-only).
+fn step_slot(
+    ctx: &StepCtx,
+    rng: &mut Rng,
+    slot: &mut Slot,
+    param: &mut Tensor,
+    grad: &Tensor,
+    rt: &dyn Backend,
+) -> Result<StepStats> {
+    let mut stats = StepStats::default();
+    match slot {
+        Slot::Vector { m, v } => {
+            let t0 = Instant::now();
+            let w = param.f32s_mut();
+            let ceu = refimpl::adamw_step_flat(w, grad.f32s(), m, v, ctx.t, ctx.lr, 0.0);
+            if ctx.track_ceu {
+                stats.ceu += ceu;
+            }
+            stats.step_time += t0.elapsed();
         }
-        match action {
-            ProjAction::Keep => {}
-            ProjAction::Resample => {
-                *p = Some(Self::random_p(rng, nb, rank, false));
+        Slot::Matrix { rows, cols, rank, reshape: _, p, st } => {
+            // exec() accepts layout-compatible shapes, so conv
+            // weights flow through their mode-1 unfolding
+            // graphs without reshape copies.
+            let tp = Instant::now();
+            refresh_matrix(ctx.kind, ctx.action, rng, *rows, *cols, *rank, p, st, grad, rt)?;
+            stats.proj_time += tp.elapsed();
+
+            let t0 = Instant::now();
+            let pt = p.as_ref().unwrap();
+            let orig_dims = param.dims().to_vec();
+            let (ceu, new_w) = match st {
+                States::Adam { m, v } => {
+                    let name = names::matrix_proj("coap_adam_step", *rows, *cols, *rank);
+                    let (ml, vl) = (m.loaded(), v.loaded());
+                    let out = rt.exec(
+                        &name,
+                        &[&*param, grad, &ml, &vl, pt, &ctx.b1t, &ctx.b2t, &ctx.lr_t, &ctx.wd_t],
+                    )?;
+                    drop((ml, vl));
+                    let mut it = out.into_iter();
+                    let w = it.next().unwrap();
+                    m.store(&it.next().unwrap());
+                    v.store(&it.next().unwrap());
+                    (it.next().unwrap().scalar(), w)
+                }
+                States::Factor { m, rf, cf } => {
+                    let name = names::matrix_proj("coap_adafactor_step", *rows, *cols, *rank);
+                    let (ml, rl, cl) = (m.loaded(), rf.loaded(), cf.loaded());
+                    let out = rt.exec(
+                        &name,
+                        &[&*param, grad, &ml, &rl, &cl, pt, &ctx.t_t, &ctx.lr_t],
+                    )?;
+                    drop((ml, rl, cl));
+                    let mut it = out.into_iter();
+                    let w = it.next().unwrap();
+                    m.store(&it.next().unwrap());
+                    rf.store(&it.next().unwrap());
+                    cf.store(&it.next().unwrap());
+                    (it.next().unwrap().scalar(), w)
+                }
+            };
+            *param = new_w.reshaped(&orig_dims);
+            if ctx.track_ceu {
+                stats.ceu += ceu as f64;
             }
-            ProjAction::Recalib => {
-                let name = names::matrix_proj("recalib", rows, cols, rank);
-                let out = rt.exec(&name, &[p.as_ref().unwrap(), g2])?;
-                *p = Some(out.into_iter().next().unwrap());
-            }
-            ProjAction::FullSvd => {
-                let name = names::matrix_proj("galore_svd", rows, cols, rank);
-                let out = rt.exec(&name, &[g2])?;
-                *p = Some(out.into_iter().next().unwrap());
-            }
-            ProjAction::PUpdate => {
-                let ml = match st {
-                    States::Adam { m, .. } => m.loaded(),
-                    States::Factor { m, .. } => m.loaded(),
-                };
-                let name = names::matrix_proj("pupdate", rows, cols, rank);
-                let out = rt.exec(&name, &[p.as_ref().unwrap(), g2, &ml])?;
-                *p = Some(out.into_iter().next().unwrap());
-            }
+            stats.step_time += t0.elapsed();
         }
-        Ok(())
+        Slot::Conv { shape, ro, ri, po, pi, ps, st } => {
+            let g4 = grad;
+            let (o, ic) = (shape[0], shape[1]);
+            let tp = Instant::now();
+            if po.is_none() {
+                *po = Some(random_p(rng, o, *ro, ctx.kind != OptKind::Flora));
+                *pi = Some(random_p(rng, ic, *ri, ctx.kind != OptKind::Flora));
+            }
+            match ctx.action {
+                ProjAction::Keep => {}
+                ProjAction::Resample => {
+                    *po = Some(random_p(rng, o, *ro, false));
+                    *pi = Some(random_p(rng, ic, *ri, false));
+                }
+                ProjAction::Recalib | ProjAction::FullSvd => {
+                    let tpl = if ctx.action == ProjAction::Recalib {
+                        "conv_recalib"
+                    } else {
+                        "conv_svd"
+                    };
+                    for (side, pref) in [("o", &mut *po), ("i", &mut *pi)] {
+                        let name = names::conv(&format!("{tpl}_{side}"), shape, *ro, *ri);
+                        let inputs: Vec<&Tensor> = if ctx.action == ProjAction::Recalib {
+                            vec![pref.as_ref().unwrap(), g4]
+                        } else {
+                            vec![g4]
+                        };
+                        let out = rt.exec(&name, &inputs)?;
+                        *pref = Some(out.into_iter().next().unwrap());
+                    }
+                }
+                ProjAction::PUpdate => {
+                    // Full-Tucker moments have an incompatible
+                    // spatial shape; recalib-only there.
+                    if ps.is_none() {
+                        let m_proj = match st {
+                            States::Adam { m, .. } => m.loaded(),
+                            States::Factor { m, .. } => m.loaded(),
+                        };
+                        let po_t = po.clone().unwrap();
+                        let pi_t = pi.clone().unwrap();
+                        let name_o = names::conv("conv_pupdate_o", shape, *ro, *ri);
+                        let out = rt.exec(&name_o, &[&po_t, g4, &m_proj, &pi_t])?;
+                        *po = Some(out.into_iter().next().unwrap());
+                        let name_i = names::conv("conv_pupdate_i", shape, *ro, *ri);
+                        let out =
+                            rt.exec(&name_i, &[&pi_t, g4, &m_proj, po.as_ref().unwrap()])?;
+                        *pi = Some(out.into_iter().next().unwrap());
+                    }
+                }
+            }
+            stats.proj_time += tp.elapsed();
+
+            let t0 = Instant::now();
+            let pot = po.as_ref().unwrap();
+            let pit = pi.as_ref().unwrap();
+            let (ceu, new_w) = match (st, ps.as_ref()) {
+                (States::Adam { m, v }, None) => {
+                    let name = names::conv("coap_adam_conv_step", shape, *ro, *ri);
+                    let (ml, vl) = (m.loaded(), v.loaded());
+                    let out = rt.exec(
+                        &name,
+                        &[&*param, g4, &ml, &vl, pot, pit, &ctx.b1t, &ctx.b2t, &ctx.lr_t,
+                          &ctx.wd_t],
+                    )?;
+                    drop((ml, vl));
+                    let mut it = out.into_iter();
+                    let w = it.next().unwrap();
+                    m.store(&it.next().unwrap());
+                    v.store(&it.next().unwrap());
+                    (it.next().unwrap().scalar(), w)
+                }
+                (States::Adam { m, v }, Some(ps_t)) => {
+                    let name = names::conv_full(shape, *ro, *ri);
+                    let (ml, vl) = (m.loaded(), v.loaded());
+                    let out = rt.exec(
+                        &name,
+                        &[&*param, g4, &ml, &vl, pot, pit, ps_t, &ctx.b1t, &ctx.b2t,
+                          &ctx.lr_t, &ctx.wd_t],
+                    )?;
+                    drop((ml, vl));
+                    let mut it = out.into_iter();
+                    let w = it.next().unwrap();
+                    m.store(&it.next().unwrap());
+                    v.store(&it.next().unwrap());
+                    (it.next().unwrap().scalar(), w)
+                }
+                (States::Factor { m, rf, cf }, _) => {
+                    let name = names::conv("coap_adafactor_conv_step", shape, *ro, *ri);
+                    let (ml, rl, cl) = (m.loaded(), rf.loaded(), cf.loaded());
+                    let out = rt.exec(
+                        &name,
+                        &[&*param, g4, &ml, &rl, &cl, pot, pit, &ctx.t_t, &ctx.lr_t],
+                    )?;
+                    drop((ml, rl, cl));
+                    let mut it = out.into_iter();
+                    let w = it.next().unwrap();
+                    m.store(&it.next().unwrap());
+                    rf.store(&it.next().unwrap());
+                    cf.store(&it.next().unwrap());
+                    (it.next().unwrap().scalar(), w)
+                }
+            };
+            *param = new_w;
+            if ctx.track_ceu {
+                stats.ceu += ceu as f64;
+            }
+            stats.step_time += t0.elapsed();
+        }
     }
+    Ok(stats)
 }
 
 impl Optimizer for LowRank {
@@ -273,219 +478,66 @@ impl Optimizer for LowRank {
         lr: f32,
         grads: &[Tensor],
         params: &mut [Tensor],
-        rt: &Runtime,
+        rt: &dyn Backend,
     ) -> Result<StepStats> {
-        let mut stats = StepStats::default();
         let (b1t, b2t) = beta_powers(t);
-        let lr_t = Tensor::scalar_f32(lr);
-        let wd_t = Tensor::scalar_f32(self.weight_decay);
-        let t_t = Tensor::scalar_f32(t as f32);
-        let action = self.policy.action(t);
-        let mut rng = self.rng.clone();
-        let track_ceu = self.track_ceu;
-        let kind = self.kind;
+        let ctx = StepCtx {
+            kind: self.kind,
+            action: self.policy.action(t),
+            t,
+            lr,
+            track_ceu: self.track_ceu,
+            b1t,
+            b2t,
+            lr_t: Tensor::scalar_f32(lr),
+            wd_t: Tensor::scalar_f32(self.weight_decay),
+            t_t: Tensor::scalar_f32(t as f32),
+        };
+        // Per-(step, slot) RNG streams: identical results for any worker
+        // count, and no shared mutable state between slot jobs.
+        let step_rng = self.rng.fork(t as u64);
 
-        // Split borrow: we need &self for refresh_matrix while mutating
-        // slots — take the slots vector out for the loop.
         let mut slots = std::mem::take(&mut self.slots);
-        let result = (|| -> Result<()> {
-            for (i, slot) in slots.iter_mut().enumerate() {
-                match slot {
-                    Slot::Vector { m, v } => {
-                        let t0 = Instant::now();
-                        let w = params[i].f32s_mut();
-                        let ceu =
-                            refimpl::adamw_step_flat(w, grads[i].f32s(), m, v, t, lr, 0.0);
-                        if track_ceu {
-                            stats.ceu += ceu;
-                        }
-                        stats.step_time += t0.elapsed();
-                    }
-                    Slot::Matrix { rows, cols, rank, reshape: _, p, st } => {
-                        // exec() accepts layout-compatible shapes, so conv
-                        // weights flow through their mode-1 unfolding
-                        // graphs without reshape copies.
-                        let tp = Instant::now();
-                        self.refresh_matrix(
-                            &mut rng, action, *rows, *cols, *rank, p, st, &grads[i], rt,
-                        )?;
-                        stats.proj_time += tp.elapsed();
-
-                        let t0 = Instant::now();
-                        let pt = p.as_ref().unwrap();
-                        let orig_dims = params[i].dims().to_vec();
-                        let (ceu, new_w) = match st {
-                            States::Adam { m, v } => {
-                                let name =
-                                    names::matrix_proj("coap_adam_step", *rows, *cols, *rank);
-                                let (ml, vl) = (m.loaded(), v.loaded());
-                                let out = rt.exec(
-                                    &name,
-                                    &[&params[i], &grads[i], &ml, &vl, pt, &b1t, &b2t,
-                                      &lr_t, &wd_t],
-                                )?;
-                                drop((ml, vl));
-                                let mut it = out.into_iter();
-                                let w = it.next().unwrap();
-                                m.store(&it.next().unwrap());
-                                v.store(&it.next().unwrap());
-                                (it.next().unwrap().scalar(), w)
-                            }
-                            States::Factor { m, rf, cf } => {
-                                let name = names::matrix_proj(
-                                    "coap_adafactor_step",
-                                    *rows,
-                                    *cols,
-                                    *rank,
-                                );
-                                let (ml, rl, cl) = (m.loaded(), rf.loaded(), cf.loaded());
-                                let out = rt.exec(
-                                    &name,
-                                    &[&params[i], &grads[i], &ml, &rl, &cl, pt, &t_t, &lr_t],
-                                )?;
-                                drop((ml, rl, cl));
-                                let mut it = out.into_iter();
-                                let w = it.next().unwrap();
-                                m.store(&it.next().unwrap());
-                                rf.store(&it.next().unwrap());
-                                cf.store(&it.next().unwrap());
-                                (it.next().unwrap().scalar(), w)
-                            }
-                        };
-                        params[i] = new_w.reshaped(&orig_dims);
-                        if track_ceu {
-                            stats.ceu += ceu as f64;
-                        }
-                        stats.step_time += t0.elapsed();
-                    }
-                    Slot::Conv { shape, ro, ri, po, pi, ps, st } => {
-                        let g4 = &grads[i];
-                        let (o, ic) = (shape[0], shape[1]);
-                        let tp = Instant::now();
-                        if po.is_none() {
-                            *po = Some(Self::random_p(&mut rng, o, *ro, kind != OptKind::Flora));
-                            *pi = Some(Self::random_p(&mut rng, ic, *ri, kind != OptKind::Flora));
-                        }
-                        match action {
-                            ProjAction::Keep => {}
-                            ProjAction::Resample => {
-                                *po = Some(Self::random_p(&mut rng, o, *ro, false));
-                                *pi = Some(Self::random_p(&mut rng, ic, *ri, false));
-                            }
-                            ProjAction::Recalib | ProjAction::FullSvd => {
-                                let tpl = if action == ProjAction::Recalib {
-                                    "conv_recalib"
-                                } else {
-                                    "conv_svd"
-                                };
-                                for (side, pref) in [("o", &mut *po), ("i", &mut *pi)] {
-                                    let name = names::conv(
-                                        &format!("{tpl}_{side}"),
-                                        shape,
-                                        *ro,
-                                        *ri,
-                                    );
-                                    let inputs: Vec<&Tensor> =
-                                        if action == ProjAction::Recalib {
-                                            vec![pref.as_ref().unwrap(), g4]
-                                        } else {
-                                            vec![g4]
-                                        };
-                                    let out = rt.exec(&name, &inputs)?;
-                                    *pref = Some(out.into_iter().next().unwrap());
-                                }
-                            }
-                            ProjAction::PUpdate => {
-                                // Full-Tucker moments have an incompatible
-                                // spatial shape; recalib-only there.
-                                if ps.is_none() {
-                                    let m_proj = match st {
-                                        States::Adam { m, .. } => m.loaded(),
-                                        States::Factor { m, .. } => m.loaded(),
-                                    };
-                                    let po_t = po.clone().unwrap();
-                                    let pi_t = pi.clone().unwrap();
-                                    let name_o =
-                                        names::conv("conv_pupdate_o", shape, *ro, *ri);
-                                    let out = rt
-                                        .exec(&name_o, &[&po_t, g4, &m_proj, &pi_t])?;
-                                    *po = Some(out.into_iter().next().unwrap());
-                                    let name_i =
-                                        names::conv("conv_pupdate_i", shape, *ro, *ri);
-                                    let out = rt.exec(
-                                        &name_i,
-                                        &[&pi_t, g4, &m_proj, po.as_ref().unwrap()],
-                                    )?;
-                                    *pi = Some(out.into_iter().next().unwrap());
-                                }
-                            }
-                        }
-                        stats.proj_time += tp.elapsed();
-
-                        let t0 = Instant::now();
-                        let pot = po.as_ref().unwrap();
-                        let pit = pi.as_ref().unwrap();
-                        let (ceu, new_w) = match (st, ps.as_ref()) {
-                            (States::Adam { m, v }, None) => {
-                                let name = names::conv("coap_adam_conv_step", shape, *ro, *ri);
-                                let (ml, vl) = (m.loaded(), v.loaded());
-                                let out = rt.exec(
-                                    &name,
-                                    &[&params[i], g4, &ml, &vl, pot, pit, &b1t, &b2t,
-                                      &lr_t, &wd_t],
-                                )?;
-                                drop((ml, vl));
-                                let mut it = out.into_iter();
-                                let w = it.next().unwrap();
-                                m.store(&it.next().unwrap());
-                                v.store(&it.next().unwrap());
-                                (it.next().unwrap().scalar(), w)
-                            }
-                            (States::Adam { m, v }, Some(ps_t)) => {
-                                let name = names::conv_full(shape, *ro, *ri);
-                                let (ml, vl) = (m.loaded(), v.loaded());
-                                let out = rt.exec(
-                                    &name,
-                                    &[&params[i], g4, &ml, &vl, pot, pit, ps_t, &b1t,
-                                      &b2t, &lr_t, &wd_t],
-                                )?;
-                                drop((ml, vl));
-                                let mut it = out.into_iter();
-                                let w = it.next().unwrap();
-                                m.store(&it.next().unwrap());
-                                v.store(&it.next().unwrap());
-                                (it.next().unwrap().scalar(), w)
-                            }
-                            (States::Factor { m, rf, cf }, _) => {
-                                let name =
-                                    names::conv("coap_adafactor_conv_step", shape, *ro, *ri);
-                                let (ml, rl, cl) = (m.loaded(), rf.loaded(), cf.loaded());
-                                let out = rt.exec(
-                                    &name,
-                                    &[&params[i], g4, &ml, &rl, &cl, pot, pit, &t_t, &lr_t],
-                                )?;
-                                drop((ml, rl, cl));
-                                let mut it = out.into_iter();
-                                let w = it.next().unwrap();
-                                m.store(&it.next().unwrap());
-                                rf.store(&it.next().unwrap());
-                                cf.store(&it.next().unwrap());
-                                (it.next().unwrap().scalar(), w)
-                            }
-                        };
-                        params[i] = new_w;
-                        if track_ceu {
-                            stats.ceu += ceu as f64;
-                        }
-                        stats.step_time += t0.elapsed();
-                    }
-                }
-            }
-            Ok(())
-        })();
+        let ctx_ref = &ctx;
+        let jobs: Vec<Box<dyn FnOnce() -> Result<StepStats> + Send + '_>> = slots
+            .iter_mut()
+            .zip(params.iter_mut())
+            .zip(grads.iter())
+            .enumerate()
+            .map(|(i, ((slot, param), grad))| {
+                let mut rng = step_rng.fork(i as u64);
+                Box::new(move || step_slot(ctx_ref, &mut rng, slot, param, grad, rt))
+                    as Box<dyn FnOnce() -> Result<StepStats> + Send + '_>
+            })
+            .collect();
+        let t0 = Instant::now();
+        // Single worker: run inline and skip the boxed-job/channel
+        // round trip (also the determinism baseline path).
+        let results: Vec<Result<StepStats>> = if self.pool.workers() <= 1 {
+            jobs.into_iter().map(|job| job()).collect()
+        } else {
+            self.pool.run_all_scoped(jobs)
+        };
+        let fanout_wall = t0.elapsed();
         self.slots = slots;
-        self.rng = rng;
-        result?;
+
+        let mut stats = StepStats::default();
+        for r in results {
+            stats.merge(&r?);
+        }
+        // Per-slot durations were measured on concurrent workers, so
+        // their sum is CPU time, not elapsed time. Rescale the split to
+        // the fan-out's wall-clock interval so proj/step components
+        // compose with the trainer's (wall-clock) fwd/bwd timing and the
+        // paper's "+x% training time" columns stay thread-count-honest.
+        let cpu_total = stats.proj_time + stats.step_time;
+        if !cpu_total.is_zero() && cpu_total > fanout_wall {
+            let scale = fanout_wall.as_secs_f64() / cpu_total.as_secs_f64();
+            stats.proj_time =
+                std::time::Duration::from_secs_f64(stats.proj_time.as_secs_f64() * scale);
+            stats.step_time =
+                std::time::Duration::from_secs_f64(stats.step_time.as_secs_f64() * scale);
+        }
         Ok(stats)
     }
 

@@ -21,7 +21,7 @@ pub mod refimpl;
 pub mod scheduler;
 
 use crate::config::{OptKind, TrainConfig};
-use crate::runtime::{ModelInfo, Runtime};
+use crate::runtime::{Backend, ModelInfo};
 use crate::tensor::{quant, Precision, Tensor};
 use anyhow::Result;
 use std::time::Duration;
@@ -48,14 +48,15 @@ impl StepStats {
 
 pub trait Optimizer: Send {
     /// Apply one optimizer step. `t` is 1-based; `grads` and `params`
-    /// are in manifest census order.
+    /// are in manifest census order. The backend may be either engine —
+    /// optimizers only mint graph names and call `exec`.
     fn step(
         &mut self,
         t: usize,
         lr: f32,
         grads: &[Tensor],
         params: &mut [Tensor],
-        rt: &Runtime,
+        rt: &dyn Backend,
     ) -> Result<StepStats>;
 
     /// Exact bytes of optimizer state currently held (paper's

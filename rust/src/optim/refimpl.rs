@@ -48,6 +48,42 @@ pub fn adamw_step_flat(
     ceu
 }
 
+/// Adafactor-with-momentum moment update on an (rows, cols) matrix:
+/// updates `mom`, `r_fac` (rows), `c_fac` (cols) in place and returns
+/// the un-scaled step direction `mom * vhat` (paper Algorithm 2).
+pub fn adafactor_delta(
+    mom: &mut [f32],
+    r_fac: &mut [f32],
+    c_fac: &mut [f32],
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    t: usize,
+) -> Vec<f32> {
+    const DECAY: f32 = -0.8;
+    const AEPS: f32 = 1e-30;
+    let beta2t = 1.0 - (t as f32).powf(DECAY);
+    for i in 0..rows {
+        let sum: f32 = (0..cols).map(|j| g[i * cols + j].powi(2) + AEPS).sum();
+        r_fac[i] = beta2t * r_fac[i] + (1.0 - beta2t) * sum;
+    }
+    for j in 0..cols {
+        let sum: f32 = (0..rows).map(|i| g[i * cols + j].powi(2) + AEPS).sum();
+        c_fac[j] = beta2t * c_fac[j] + (1.0 - beta2t) * sum;
+    }
+    let rmean: f32 = r_fac.iter().sum::<f32>() / rows as f32;
+    let mut delta = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let idx = i * cols + j;
+            mom[idx] = BETA1 * mom[idx] + (1.0 - BETA1) * g[idx];
+            let vhat = (rmean / (r_fac[i] * c_fac[j] + AEPS)).sqrt();
+            delta[idx] = mom[idx] * vhat;
+        }
+    }
+    delta
+}
+
 /// Adafactor-with-momentum (paper Algorithm 2 semantics) on an (m, n)
 /// matrix. r_fac (m), c_fac (n) are the factored second-moment rows/cols.
 #[allow(clippy::too_many_arguments)]
@@ -62,28 +98,12 @@ pub fn adafactor_step(
     t: usize,
     lr: f32,
 ) -> f64 {
-    const DECAY: f32 = -0.8;
-    const AEPS: f32 = 1e-30;
-    let beta2t = 1.0 - (t as f32).powf(DECAY);
-    for i in 0..rows {
-        let sum: f32 = (0..cols).map(|j| g[i * cols + j].powi(2) + AEPS).sum();
-        r_fac[i] = beta2t * r_fac[i] + (1.0 - beta2t) * sum;
-    }
-    for j in 0..cols {
-        let sum: f32 = (0..rows).map(|i| g[i * cols + j].powi(2) + AEPS).sum();
-        c_fac[j] = beta2t * c_fac[j] + (1.0 - beta2t) * sum;
-    }
-    let rmean: f32 = r_fac.iter().sum::<f32>() / rows as f32;
+    let delta = adafactor_delta(mom, r_fac, c_fac, g, rows, cols, t);
     let mut ceu = 0.0f64;
-    for i in 0..rows {
-        for j in 0..cols {
-            let idx = i * cols + j;
-            mom[idx] = BETA1 * mom[idx] + (1.0 - BETA1) * g[idx];
-            let vhat = (rmean / (r_fac[i] * c_fac[j] + AEPS)).sqrt();
-            let step = lr * mom[idx] * vhat;
-            w[idx] -= step;
-            ceu += step.abs() as f64;
-        }
+    for (wi, di) in w.iter_mut().zip(&delta) {
+        let step = lr * di;
+        *wi -= step;
+        ceu += step.abs() as f64;
     }
     ceu
 }
@@ -337,6 +357,497 @@ pub fn pupdate_sgd(p: &Tensor, g: &Tensor, m_proj: &Tensor, iters: usize, lr: f3
         p = Tensor::from_f32(&[n, r], pn);
     }
     p
+}
+
+// ---------------------------------------------------------------------------
+// Native step kernels (mirror python/compile/optim.py exactly) — these
+// are what `runtime::NativeBackend` dispatches the minted graph names to.
+// Projection-frame convention (GaLore side rule): for W (m, n) the math
+// runs on Gn = G if m >= n else G^T, so P is (min(m,n), r) and moments
+// are (max(m,n), r).
+// ---------------------------------------------------------------------------
+
+/// Eqn-6 SGD hyper-parameters baked into the lowered graphs
+/// (python/compile/optim.py: 2 iterations at lr 0.1, 8 Jacobi sweeps).
+pub const PUPDATE_ITERS: usize = 2;
+pub const PUPDATE_LR: f32 = 0.1;
+pub const SVD_SWEEPS: usize = 8;
+
+/// Row-major transpose of an (m, n) slice.
+pub fn transpose_flat(x: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = x[i * n + j];
+        }
+    }
+    out
+}
+
+/// Normalized (GaLore side rule) view of the gradient: borrowed when
+/// already (max, min)-oriented, transposed copy otherwise — no clone on
+/// the common no-transpose hot path.
+fn normalize(g: &[f32], rows: usize, cols: usize) -> (std::borrow::Cow<'_, [f32]>, bool) {
+    if rows < cols {
+        (std::borrow::Cow::Owned(transpose_flat(g, rows, cols)), true)
+    } else {
+        (std::borrow::Cow::Borrowed(g), false)
+    }
+}
+
+/// a (m, k) @ b (k, n) -> (m, n), on raw slices (hot-path helper).
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// a (m, k) @ b (n, k)^T -> (m, n), on raw slices (the delta·P^T pattern).
+fn mm_abt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for x in 0..k {
+                acc += arow[x] * brow[x];
+            }
+            orow[j] = acc;
+        }
+    }
+    out
+}
+
+fn apply_update(w: &[f32], dw: &[f32], lr: f32, wd: f32) -> (Vec<f32>, f32) {
+    let mut w_new = vec![0.0f32; w.len()];
+    let mut ceu = 0.0f32;
+    for i in 0..w.len() {
+        let step = lr * (dw[i] + wd * w[i]);
+        w_new[i] = w[i] - step;
+        ceu += step.abs();
+    }
+    (w_new, ceu)
+}
+
+/// Projected Adam step (Algorithm 1 inner body; `coap_adam_step` graph).
+/// w, g: (rows, cols); m, v: (max, r); p: (min, r).
+/// Returns (w', m', v', ceu).
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adam_step_mat(
+    w: &[f32],
+    g: &[f32],
+    m_st: &[f32],
+    v_st: &[f32],
+    p: &[f32],
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let (mb, nb) = (rows.max(cols), rows.min(cols));
+    let (gn, transpose) = normalize(g, rows, cols);
+    let g_proj = mm(&gn, p, mb, nb, rank); // (mb, r)
+    let mut m_new = m_st.to_vec();
+    let mut v_new = v_st.to_vec();
+    let delta = adam_update(&mut m_new, &mut v_new, &g_proj, b1t, b2t);
+    let dw_n = mm_abt(&delta, p, mb, rank, nb); // (mb, nb)
+    let dw = if transpose { transpose_flat(&dw_n, mb, nb) } else { dw_n };
+    let (w_new, ceu) = apply_update(w, &dw, lr, wd);
+    (w_new, m_new, v_new, ceu)
+}
+
+/// Projected Adafactor-with-momentum step (`coap_adafactor_step` graph).
+/// m: (max, r); r_fac: (max,); c_fac: (r,); p: (min, r).
+/// Returns (w', m', r', c', ceu).
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adafactor_step_mat(
+    w: &[f32],
+    g: &[f32],
+    m_st: &[f32],
+    r_st: &[f32],
+    c_st: &[f32],
+    p: &[f32],
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    t: usize,
+    lr: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let (mb, nb) = (rows.max(cols), rows.min(cols));
+    let (gn, transpose) = normalize(g, rows, cols);
+    let g_proj = mm(&gn, p, mb, nb, rank); // (mb, r)
+    let mut m_new = m_st.to_vec();
+    let mut r_new = r_st.to_vec();
+    let mut c_new = c_st.to_vec();
+    let delta = adafactor_delta(&mut m_new, &mut r_new, &mut c_new, &g_proj, mb, rank, t);
+    let dw_n = mm_abt(&delta, p, mb, rank, nb); // (mb, nb)
+    let dw = if transpose { transpose_flat(&dw_n, mb, nb) } else { dw_n };
+    let (w_new, ceu) = apply_update(w, &dw, lr, 0.0);
+    (w_new, m_new, r_new, c_new, ceu)
+}
+
+/// Full-rank Adam(W) step with explicit beta powers (`adam_step` graph).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step_mat(
+    w: &[f32],
+    g: &[f32],
+    m_st: &[f32],
+    v_st: &[f32],
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let mut m_new = m_st.to_vec();
+    let mut v_new = v_st.to_vec();
+    let delta = adam_update(&mut m_new, &mut v_new, g, b1t, b2t);
+    let (w_new, ceu) = apply_update(w, &delta, lr, wd);
+    (w_new, m_new, v_new, ceu)
+}
+
+/// Full-rank Adafactor step (`adafactor_step` graph).
+#[allow(clippy::too_many_arguments)]
+pub fn adafactor_step_mat(
+    w: &[f32],
+    g: &[f32],
+    m_st: &[f32],
+    r_st: &[f32],
+    c_st: &[f32],
+    rows: usize,
+    cols: usize,
+    t: usize,
+    lr: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let mut m_new = m_st.to_vec();
+    let mut r_new = r_st.to_vec();
+    let mut c_new = c_st.to_vec();
+    let delta = adafactor_delta(&mut m_new, &mut r_new, &mut c_new, g, rows, cols, t);
+    let (w_new, ceu) = apply_update(w, &delta, lr, 0.0);
+    (w_new, m_new, r_new, c_new, ceu)
+}
+
+/// Optimizer-level LoRA step (`lora_adam_step` graph). a: (r, n),
+/// b: (m, r); effective weight w carries b·a.
+/// Returns (w', a', b', ma', va', mb', vb', ceu).
+#[allow(clippy::too_many_arguments)]
+pub fn lora_adam_step_mat(
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    g: &[f32],
+    ma: &[f32],
+    va: &[f32],
+    mb_st: &[f32],
+    vb_st: &[f32],
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let g_t = Tensor::from_f32(&[rows, cols], g.to_vec());
+    let a_t = Tensor::from_f32(&[rank, cols], a.to_vec());
+    let b_t = Tensor::from_f32(&[rows, rank], b.to_vec());
+    let da = b_t.transposed2d().matmul(&g_t); // (r, n)
+    let db = g_t.matmul(&a_t.transposed2d()); // (m, r)
+    let mut ma_new = ma.to_vec();
+    let mut va_new = va.to_vec();
+    let delta_a = adam_update(&mut ma_new, &mut va_new, da.f32s(), b1t, b2t);
+    let mut mb_new = mb_st.to_vec();
+    let mut vb_new = vb_st.to_vec();
+    let delta_b = adam_update(&mut mb_new, &mut vb_new, db.f32s(), b1t, b2t);
+    let a_new: Vec<f32> = a.iter().zip(&delta_a).map(|(x, d)| x - lr * d).collect();
+    let b_new: Vec<f32> = b.iter().zip(&delta_b).map(|(x, d)| x - lr * d).collect();
+    let ba_new = Tensor::from_f32(&[rows, rank], b_new.clone())
+        .matmul(&Tensor::from_f32(&[rank, cols], a_new.clone()));
+    let ba_old = b_t.matmul(&a_t);
+    let mut w_new = vec![0.0f32; w.len()];
+    let mut ceu = 0.0f32;
+    for i in 0..w.len() {
+        w_new[i] = w[i] + ba_new.f32s()[i] - ba_old.f32s()[i];
+        ceu += (w_new[i] - w[i]).abs();
+    }
+    (w_new, a_new, b_new, ma_new, va_new, mb_new, vb_new, ceu)
+}
+
+// --- Tucker-2 conv mode products (OIHW, row-major) --------------------------
+
+/// Mode-2 unfolding: (d0, d1, kk) -> (d1, d0*kk).
+pub fn unfold_dim1(t: &[f32], d0: usize, d1: usize, kk: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d0 * d1 * kk];
+    for a in 0..d0 {
+        for b in 0..d1 {
+            for k in 0..kk {
+                out[b * (d0 * kk) + a * kk + k] = t[(a * d1 + b) * kk + k];
+            }
+        }
+    }
+    out
+}
+
+/// G x1 PO^T: (o, i, kk) -> (ro, i, kk). po: (o, ro).
+pub fn conv_proj_o(g: &[f32], o: usize, i: usize, kk: usize, po: &[f32], ro: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; ro * i * kk];
+    for oo in 0..o {
+        let grow = &g[oo * i * kk..(oo + 1) * i * kk];
+        for r in 0..ro {
+            let c = po[oo * ro + r];
+            if c == 0.0 {
+                continue;
+            }
+            let orow = &mut out[r * i * kk..(r + 1) * i * kk];
+            for x in 0..i * kk {
+                orow[x] += c * grow[x];
+            }
+        }
+    }
+    out
+}
+
+/// T x2 PI^T: (x, i, kk) -> (x, ri, kk). pi: (i, ri).
+pub fn conv_proj_i(t: &[f32], x: usize, i: usize, kk: usize, pi: &[f32], ri: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x * ri * kk];
+    for xx in 0..x {
+        for ii in 0..i {
+            let trow = &t[(xx * i + ii) * kk..(xx * i + ii + 1) * kk];
+            for s in 0..ri {
+                let c = pi[ii * ri + s];
+                if c == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[(xx * ri + s) * kk..(xx * ri + s + 1) * kk];
+                for k in 0..kk {
+                    orow[k] += c * trow[k];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// T x1 PO: (ro, b, kk) -> (o, b, kk). po: (o, ro).
+pub fn conv_restore_o(t: &[f32], ro: usize, b: usize, kk: usize, po: &[f32], o: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; o * b * kk];
+    for oo in 0..o {
+        let orow = &mut out[oo * b * kk..(oo + 1) * b * kk];
+        for r in 0..ro {
+            let c = po[oo * ro + r];
+            if c == 0.0 {
+                continue;
+            }
+            let trow = &t[r * b * kk..(r + 1) * b * kk];
+            for x in 0..b * kk {
+                orow[x] += c * trow[x];
+            }
+        }
+    }
+    out
+}
+
+/// T x2 PI: (x, ri, kk) -> (x, i, kk). pi: (i, ri).
+pub fn conv_restore_i(t: &[f32], x: usize, ri: usize, kk: usize, pi: &[f32], i: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; x * i * kk];
+    for xx in 0..x {
+        for ii in 0..i {
+            let orow = &mut out[(xx * i + ii) * kk..(xx * i + ii + 1) * kk];
+            for s in 0..ri {
+                let c = pi[ii * ri + s];
+                if c == 0.0 {
+                    continue;
+                }
+                let trow = &t[(xx * ri + s) * kk..(xx * ri + s + 1) * kk];
+                for k in 0..kk {
+                    orow[k] += c * trow[k];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Tucker-2 projected Adam conv step (`coap_adam_conv_step` graph).
+/// shape: OIHW; m, v: (ro, ri, k1, k2). Returns (w', m', v', ceu).
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adam_conv_step(
+    w: &[f32],
+    g: &[f32],
+    m_st: &[f32],
+    v_st: &[f32],
+    po: &[f32],
+    pi: &[f32],
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+    let g_proj = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
+    let mut m_new = m_st.to_vec();
+    let mut v_new = v_st.to_vec();
+    let delta = adam_update(&mut m_new, &mut v_new, &g_proj, b1t, b2t);
+    let dw = conv_restore_i(&conv_restore_o(&delta, ro, ri, kk, po, o), o, ri, kk, pi, i);
+    let (w_new, ceu) = apply_update(w, &dw, lr, wd);
+    (w_new, m_new, v_new, ceu)
+}
+
+/// Tucker-2 projected Adafactor conv step (`coap_adafactor_conv_step`).
+/// m: (ro, ri, k1, k2); r_fac: (ro,); c_fac: (ri*k1*k2,).
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adafactor_conv_step(
+    w: &[f32],
+    g: &[f32],
+    m_st: &[f32],
+    r_st: &[f32],
+    c_st: &[f32],
+    po: &[f32],
+    pi: &[f32],
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    t: usize,
+    lr: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+    let g_proj = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
+    let mut m_new = m_st.to_vec();
+    let mut r_new = r_st.to_vec();
+    let mut c_new = c_st.to_vec();
+    let delta =
+        adafactor_delta(&mut m_new, &mut r_new, &mut c_new, &g_proj, ro, ri * kk, t);
+    let dw = conv_restore_i(&conv_restore_o(&delta, ro, ri, kk, po, o), o, ri, kk, pi, i);
+    let (w_new, ceu) = apply_update(w, &dw, lr, 0.0);
+    (w_new, m_new, r_new, c_new, ceu)
+}
+
+/// "Full Tucker" conv Adam step (`coap_adam_convfull_step`): Tucker-2
+/// plus a fixed spatial projection ps (k1*k2, rs). m, v: (ro, ri, rs).
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adam_convfull_step(
+    w: &[f32],
+    g: &[f32],
+    m_st: &[f32],
+    v_st: &[f32],
+    po: &[f32],
+    pi: &[f32],
+    ps: &[f32],
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    rs: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+    let g2 = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
+    // Spatial mode: (ro*ri, kk) @ ps -> (ro*ri, rs).
+    let mut g3 = vec![0.0f32; ro * ri * rs];
+    for xy in 0..ro * ri {
+        for s in 0..kk {
+            let c = g2[xy * kk + s];
+            for tt in 0..rs {
+                g3[xy * rs + tt] += c * ps[s * rs + tt];
+            }
+        }
+    }
+    let mut m_new = m_st.to_vec();
+    let mut v_new = v_st.to_vec();
+    let delta = adam_update(&mut m_new, &mut v_new, &g3, b1t, b2t);
+    // Restore spatial: (ro*ri, rs) @ ps^T -> (ro*ri, kk).
+    let mut dk = vec![0.0f32; ro * ri * kk];
+    for xy in 0..ro * ri {
+        for s in 0..kk {
+            let mut acc = 0.0f32;
+            for tt in 0..rs {
+                acc += delta[xy * rs + tt] * ps[s * rs + tt];
+            }
+            dk[xy * kk + s] = acc;
+        }
+    }
+    let dw = conv_restore_i(&conv_restore_o(&dk, ro, ri, kk, po, o), o, ri, kk, pi, i);
+    let (w_new, ceu) = apply_update(w, &dw, lr, wd);
+    (w_new, m_new, v_new, ceu)
+}
+
+/// Eqn-7 recalibration on a conv unfolding (`conv_recalib_{o,i}`).
+/// side_o: refresh PO (o, ro) from the mode-1 unfolding; else PI (i, ri)
+/// from the mode-2 unfolding.
+pub fn conv_recalib_side(p: &Tensor, g: &[f32], shape: &[usize], side_o: bool) -> Tensor {
+    let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+    let gn = if side_o {
+        Tensor::from_f32(&[i * kk, o], transpose_flat(g, o, i * kk))
+    } else {
+        let u2 = unfold_dim1(g, o, i, kk);
+        Tensor::from_f32(&[o * kk, i], transpose_flat(&u2, i, o * kk))
+    };
+    lowcost_recalib(&gn, p, SVD_SWEEPS)
+}
+
+/// GaLore-style full SVD on a conv unfolding (`conv_svd_{o,i}`).
+pub fn conv_svd_side(g: &[f32], shape: &[usize], side_o: bool, rank: usize) -> Tensor {
+    let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+    let gn = if side_o {
+        Tensor::from_f32(&[i * kk, o], transpose_flat(g, o, i * kk))
+    } else {
+        let u2 = unfold_dim1(g, o, i, kk);
+        Tensor::from_f32(&[o * kk, i], transpose_flat(&u2, i, o * kk))
+    };
+    svd_topk(&gn, rank, SVD_SWEEPS).0
+}
+
+/// Eqn-6 update for PO / PI of a conv layer (`conv_pupdate_{o,i}`).
+/// m_proj: the Tucker-2 projected moment (ro, ri, k1, k2); `other_p` is
+/// the projection of the *other* mode (PI when refreshing PO and vice
+/// versa), used to restore the moment along that mode first.
+pub fn conv_pupdate_side(
+    p: &Tensor,
+    g: &[f32],
+    m_proj: &[f32],
+    other_p: &[f32],
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    side_o: bool,
+) -> Tensor {
+    let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+    let (gn, mn) = if side_o {
+        let m_part = conv_restore_i(m_proj, ro, ri, kk, other_p, i); // (ro, i, kk)
+        (
+            Tensor::from_f32(&[i * kk, o], transpose_flat(g, o, i * kk)),
+            Tensor::from_f32(&[i * kk, ro], transpose_flat(&m_part, ro, i * kk)),
+        )
+    } else {
+        let m_part = conv_restore_o(m_proj, ro, ri, kk, other_p, o); // (o, ri, kk)
+        let gu = unfold_dim1(g, o, i, kk); // (i, o*kk)
+        let mu = unfold_dim1(&m_part, o, ri, kk); // (ri, o*kk)
+        (
+            Tensor::from_f32(&[o * kk, i], transpose_flat(&gu, i, o * kk)),
+            Tensor::from_f32(&[o * kk, ri], transpose_flat(&mu, ri, o * kk)),
+        )
+    };
+    pupdate_sgd(p, &gn, &mn, PUPDATE_ITERS, PUPDATE_LR)
 }
 
 #[cfg(test)]

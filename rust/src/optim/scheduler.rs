@@ -104,6 +104,55 @@ mod tests {
         assert_eq!(f.action(7), ProjAction::Resample);
     }
 
+    #[test]
+    fn interval_zero_refreshes_only_at_init() {
+        let g = IntervalSchedule { interval: 0, action: ProjAction::FullSvd };
+        assert_eq!(g.action(1), ProjAction::FullSvd);
+        for t in 2..100 {
+            assert_eq!(g.action(t), ProjAction::Keep, "t={t}");
+        }
+    }
+
+    /// λ = 1 means every T_u boundary is a recalibration — the Eqn-6
+    /// update never fires (Table 5's "λ=1" configuration).
+    #[test]
+    fn lambda_one_recalibrates_every_boundary() {
+        let s = CoapSchedule { t_update: 5, lambda: 1, use_pupdate: true, use_recalib: true };
+        for t in 2..60 {
+            let want = if t % 5 == 0 { ProjAction::Recalib } else { ProjAction::Keep };
+            assert_eq!(s.action(t), want, "t={t}");
+        }
+    }
+
+    /// t_update = 0 disables refreshes entirely (after init).
+    #[test]
+    fn zero_t_update_never_refreshes() {
+        let s = CoapSchedule { t_update: 0, lambda: 3, use_pupdate: true, use_recalib: true };
+        assert_eq!(s.action(1), ProjAction::Recalib); // init still runs
+        for t in 2..50 {
+            assert_eq!(s.action(t), ProjAction::Keep, "t={t}");
+        }
+    }
+
+    /// Refresh frequency over a horizon matches the paper's cadence
+    /// budget: T/T_u refreshes total, 1/λ of them recalibrations.
+    #[test]
+    fn refresh_counts_over_horizon() {
+        let (tu, lam, horizon) = (4usize, 5usize, 400usize);
+        let s = CoapSchedule { t_update: tu, lambda: lam, use_pupdate: true, use_recalib: true };
+        let mut pupdates = 0;
+        let mut recals = 0;
+        for t in 2..=horizon {
+            match s.action(t) {
+                ProjAction::PUpdate => pupdates += 1,
+                ProjAction::Recalib => recals += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(recals, horizon / (tu * lam));
+        assert_eq!(pupdates + recals, horizon / tu);
+    }
+
     /// Property: over any horizon, recalibrations are exactly the
     /// multiples of λ·T_u (plus init) and pupdates the other T_u marks.
     #[test]

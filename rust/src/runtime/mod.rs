@@ -1,181 +1,117 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
-//! `manifest.json`) and executes them on the CPU PJRT client.
+//! Execution backends.
 //!
-//! - [`Manifest`] parses the Python-emitted contract (graph I/O specs,
-//!   model parameter census, experiment list).
-//! - [`Runtime`] compiles executables lazily (one per graph name), caches
-//!   them, and bridges host [`Tensor`]s <-> XLA literals.
-//! - [`names`] mirrors the Python graph-naming scheme so callers ask for
-//!   e.g. `coap_adam_step` at a shape instead of hand-writing names.
+//! Everything above this layer (optimizers, trainer, benches) talks to a
+//! [`Backend`]: a named-graph executor plus the model census. Two
+//! implementations exist:
 //!
-//! Interchange is HLO *text* (jax >= 0.5 protos use 64-bit ids that
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! - [`native::NativeBackend`] (default): parses the graph names minted
+//!   in [`names`] and dispatches them to the pure-Rust kernels in
+//!   `optim::refimpl` plus the native model zoo (`model::zoo` /
+//!   `model::nativenet`). Fully hermetic — no Python artifacts, no
+//!   external deps.
+//! - `xla::Runtime` (behind `--features xla`): the original PJRT replay
+//!   engine over AOT artifacts (`artifacts/*.hlo.txt` + `manifest.json`)
+//!   emitted by `python/compile/aot.py`.
+//!
+//! Both mint/accept identical graph names, so every optimizer runs
+//! unchanged on either engine; `tests/native_vs_refimpl.rs` pins the
+//! native kernels to the refimpl oracles and (with `xla` on)
+//! `tests/refimpl_vs_hlo.rs` pins the HLO executables to the same
+//! oracles, closing the triangle.
 
 pub mod manifest;
 pub mod names;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod xla;
 
-pub use manifest::{GraphInfo, Manifest, ModelInfo, ParamInfo, TensorSpec};
+pub use manifest::{
+    DataInfo, ExperimentInfo, GraphInfo, Manifest, ModelInfo, ParamInfo, TensorSpec,
+};
+pub use native::NativeBackend;
+#[cfg(feature = "xla")]
+pub use xla::Runtime;
 
-use crate::tensor::{Storage, Tensor};
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use crate::config::{BackendKind, TrainConfig};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::sync::Arc;
 
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: std::path::PathBuf,
-    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
-    /// Cumulative executions per graph (perf accounting).
-    pub exec_counts: Mutex<HashMap<String, u64>>,
-}
-
-impl Runtime {
-    /// Open the artifacts directory and parse the manifest.
-    pub fn open(dir: &str) -> Result<Runtime> {
-        let dir = std::path::PathBuf::from(dir);
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
-        let manifest = Manifest::parse(&text)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            manifest,
-            dir,
-            cache: Mutex::new(HashMap::new()),
-            exec_counts: Mutex::new(HashMap::new()),
-        })
-    }
-
-    /// Get-or-compile the executable for `name`.
-    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(Arc::clone(exe));
-        }
-        let info = self
-            .manifest
-            .graphs
-            .get(name)
-            .ok_or_else(|| anyhow!("graph '{name}' not in manifest (re-run `make artifacts`?)"))?;
-        let path = self.dir.join(&info.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), Arc::clone(&exe));
-        Ok(exe)
-    }
-
-    pub fn is_compiled(&self, name: &str) -> bool {
-        self.cache.lock().unwrap().contains_key(name)
-    }
+/// A graph executor + model census. Object-safe so the trainer, the
+/// optimizers and the bench drivers can hold `Arc<dyn Backend>` / take
+/// `&dyn Backend` and stay engine-agnostic.
+pub trait Backend: Send + Sync {
+    /// Short engine tag ("native" | "xla") for logs and reports.
+    fn label(&self) -> &'static str;
 
     /// Execute graph `name` with host tensors; returns host tensors.
-    ///
-    /// Inputs are validated against the manifest by element count and
-    /// dtype; the literal is built with the *manifest* shape, so callers
-    /// may pass layout-compatible views (e.g. a conv weight for its
-    /// mode-1 unfolding) without a reshape copy — a deliberate hot-path
-    /// optimization (EXPERIMENTS.md §Perf).
-    pub fn exec(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let info = self
-            .manifest
-            .graphs
-            .get(name)
-            .ok_or_else(|| anyhow!("graph '{name}' not in manifest"))?;
-        if inputs.len() != info.inputs.len() {
-            bail!(
-                "graph '{name}': expected {} inputs, got {}",
-                info.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
-            if t.numel() != spec.numel() {
-                bail!(
-                    "graph '{name}' input {i}: shape {:?} incompatible with manifest {:?}",
-                    t.dims(),
-                    spec.shape
-                );
+    /// Inputs may be layout-compatible reshapes of the canonical graph
+    /// shapes (e.g. a 4-D conv weight for its mode-1 unfolding).
+    fn exec(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Model census entry by name.
+    fn model(&self, name: &str) -> Result<ModelInfo>;
+
+    /// All model names this backend can train.
+    fn model_names(&self) -> Vec<String>;
+
+    /// Whether `name` resolves to an executable graph.
+    fn has_graph(&self, name: &str) -> bool;
+
+    /// Paper tables/figures this backend knows how to regenerate.
+    fn experiments(&self) -> Vec<ExperimentInfo>;
+
+    /// Pre-compile executables (excluded from step timing). The native
+    /// backend has nothing to compile.
+    fn warmup(&self, _names: &[&str]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Cumulative graph executions (perf accounting).
+    fn total_execs(&self) -> u64;
+}
+
+/// Construct the backend the config asks for (`--backend native|xla`).
+pub fn open_backend(cfg: &TrainConfig) -> Result<Arc<dyn Backend>> {
+    match cfg.backend {
+        BackendKind::Native => Ok(Arc::new(NativeBackend::new())),
+        BackendKind::Xla => {
+            #[cfg(feature = "xla")]
+            {
+                Ok(Arc::new(Runtime::open(&cfg.artifacts_dir)?))
+            }
+            #[cfg(not(feature = "xla"))]
+            {
+                anyhow::bail!(
+                    "--backend xla requested but this binary was built without the \
+                     `xla` feature. Enabling it needs the xla-rs bindings vendored \
+                     at rust/vendor/xla plus the dependency wired in rust/Cargo.toml \
+                     (see rust/README.md §'Rebuilding the XLA artifacts'), then \
+                     `cargo build --features xla`; or use --backend native"
+                )
             }
         }
-        let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .zip(&info.inputs)
-            .map(|(t, spec)| tensor_to_literal_shaped(t, &spec.shape))
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
-        *self.exec_counts.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
-        parts
-            .into_iter()
-            .zip(&info.outputs)
-            .map(|(lit, spec)| literal_to_tensor(&lit, spec))
-            .collect()
-    }
-
-    /// Total executions across all graphs (perf accounting).
-    pub fn total_execs(&self) -> u64 {
-        self.exec_counts.lock().unwrap().values().sum()
     }
 }
 
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    tensor_to_literal_shaped(t, t.dims())
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-/// Build a literal with an explicit (element-count-compatible) shape —
-/// row-major data is layout-identical, so no host copy is needed for
-/// reshapes.
-pub fn tensor_to_literal_shaped(t: &Tensor, dims: &[usize]) -> Result<xla::Literal> {
-    let dims: Vec<usize> = dims.to_vec();
-    match t.storage() {
-        Storage::F32(v) => {
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            };
-            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, bytes)
-                .map_err(|e| anyhow!("literal f32 {:?}: {e:?}", dims))
-        }
-        Storage::I32(v) => {
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            };
-            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &dims, bytes)
-                .map_err(|e| anyhow!("literal i32 {:?}: {e:?}", dims))
-        }
+    #[test]
+    fn open_backend_native_by_default() {
+        let cfg = TrainConfig::default();
+        let be = open_backend(&cfg).unwrap();
+        assert_eq!(be.label(), "native");
+        assert!(be.model_names().iter().any(|m| m == "lm_tiny"));
     }
-}
 
-pub fn literal_to_tensor(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
-    match spec.dtype.as_str() {
-        "f32" => {
-            let v = lit
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("literal->f32: {e:?}"))?;
-            Ok(Tensor::from_f32(&spec.shape, v))
-        }
-        "i32" => {
-            let v = lit
-                .to_vec::<i32>()
-                .map_err(|e| anyhow!("literal->i32: {e:?}"))?;
-            Ok(Tensor::from_i32(&spec.shape, v))
-        }
-        d => bail!("unsupported dtype {d}"),
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_errors_without_feature() {
+        let mut cfg = TrainConfig::default();
+        cfg.backend = BackendKind::Xla;
+        let err = open_backend(&cfg).err().expect("should fail");
+        assert!(format!("{err:#}").contains("xla"));
     }
 }

@@ -7,18 +7,29 @@
 //! models:       train_step__{model}, eval_step__{model}
 //! ```
 
-/// Paper rank rule: r = min(m, n) / ratio (floored, min 4, clamped to
-/// the smaller dimension).
-pub fn rank_for(shape: &[usize], ratio: f64) -> usize {
-    let min = shape[0].min(shape[1]);
-    ((min as f64 / ratio) as usize).max(4).min(min)
+/// Divide a dimension by the rank ratio, guarding non-finite / non-
+/// positive ratios (treated as 1.0, i.e. full rank).
+fn ratio_rank(dim: usize, ratio: f64) -> usize {
+    if !ratio.is_finite() || ratio <= 0.0 {
+        return dim;
+    }
+    (dim as f64 / ratio) as usize
 }
 
-/// Tucker-2 ranks (r_O, r_I) for an OIHW conv shape, clamped to dims.
+/// Paper rank rule: r = min(m, n) / ratio (floored, min 4), clamped to
+/// [1, min(m, n)] so tiny shapes and extreme ratios always yield a
+/// usable rank (the native backend hits these shapes directly).
+pub fn rank_for(shape: &[usize], ratio: f64) -> usize {
+    let min = shape[0].min(shape[1]);
+    ratio_rank(min, ratio).max(4).min(min).max(1)
+}
+
+/// Tucker-2 ranks (r_O, r_I) for an OIHW conv shape: dim / ratio
+/// (floored, min 2), clamped to [1, dim] per mode — a 1-input-channel
+/// control conv gets r_I = 1.
 pub fn conv_ranks(shape: &[usize], ratio: f64) -> (usize, usize) {
-    let ro = ((shape[0] as f64 / ratio) as usize).max(2).min(shape[0]);
-    let ri = ((shape[1] as f64 / ratio) as usize).max(2).min(shape[1]);
-    (ro, ri)
+    let clamp = |dim: usize| ratio_rank(dim, ratio).max(2).min(dim).max(1);
+    (clamp(shape[0]), clamp(shape[1]))
 }
 
 pub fn matrix_proj(tpl: &str, m: usize, n: usize, r: usize) -> String {
@@ -78,5 +89,30 @@ mod tests {
         assert_eq!(rank_for(&[128, 10], 8.0), 4); // clamped to 4
         assert_eq!(conv_ranks(&[16, 3, 3, 3], 4.0), (4, 2));
         assert_eq!(conv_ranks(&[32, 16, 3, 3], 2.0), (16, 8));
+    }
+
+    /// Regression: tiny shapes and extreme ratios must yield usable
+    /// ranks in [1, dim] — the native backend executes these directly.
+    #[test]
+    fn rank_edge_cases_clamped() {
+        // min dim below the 4-floor: clamp to the dimension, never above.
+        assert_eq!(rank_for(&[3, 3], 1000.0), 3);
+        assert_eq!(rank_for(&[2, 512], 4.0), 2);
+        assert_eq!(rank_for(&[1, 64], 2.0), 1);
+        // Extreme / degenerate ratios never exceed the dimension...
+        assert_eq!(rank_for(&[8, 8], 0.25), 8);
+        assert_eq!(rank_for(&[8, 8], 0.0), 8);
+        assert_eq!(rank_for(&[8, 8], f64::NAN), 8);
+        // ...and never reach 0.
+        assert_eq!(rank_for(&[1, 1], 1e12), 1);
+        // Conv: the 1-input-channel ControlNet conv gets r_I = 1.
+        assert_eq!(conv_ranks(&[32, 1, 3, 3], 4.0), (8, 1));
+        assert_eq!(conv_ranks(&[1, 1, 3, 3], 4.0), (1, 1));
+        assert_eq!(conv_ranks(&[2, 2, 3, 3], 1e9), (2, 2));
+        assert_eq!(conv_ranks(&[16, 8, 3, 3], 0.0), (16, 8));
+        for (o, i, ratio) in [(5usize, 3usize, 7.7), (64, 2, 1.3), (2, 64, 9.0)] {
+            let (ro, ri) = conv_ranks(&[o, i, 3, 3], ratio);
+            assert!((1..=o).contains(&ro) && (1..=i).contains(&ri), "({o},{i},{ratio})");
+        }
     }
 }

@@ -1,0 +1,594 @@
+//! Native execution backend: a pure-Rust engine for every graph name the
+//! optimizers mint through [`super::names`] — no Python artifacts, no
+//! PJRT, no network.
+//!
+//! Graph names are parsed back into (template, shape, ranks) and
+//! dispatched to the `optim::refimpl` kernels (the same oracles the HLO
+//! executables are validated against) and to the native model zoo
+//! (`model::zoo` + `model::nativenet`) for `train_step__*` /
+//! `eval_step__*`. Because callers may pass layout-compatible views
+//! (e.g. a 4-D conv weight for its mode-1 unfolding), all kernels work
+//! off the *name's* shapes and validate inputs by element count, exactly
+//! like the XLA backend does.
+
+use super::{Backend, ExperimentInfo, ModelInfo};
+use crate::model::{nativenet, zoo};
+use crate::optim::refimpl;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+pub struct NativeBackend {
+    models: BTreeMap<String, ModelInfo>,
+    /// Cumulative executions per graph (perf accounting).
+    pub exec_counts: Mutex<HashMap<String, u64>>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend {
+            models: zoo::models().into_iter().map(|m| (m.name.clone(), m)).collect(),
+            exec_counts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn model_ref(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in the native zoo"))
+    }
+}
+
+/// Shape/ranks parsed from a minted graph name's spec suffix,
+/// e.g. `512x128_r32` or `16x3x3x3_rO4_rI2_rS4`.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+struct Spec {
+    dims: Vec<usize>,
+    r: Option<usize>,
+    ro: Option<usize>,
+    ri: Option<usize>,
+    rs: Option<usize>,
+}
+
+fn parse_spec(spec: &str) -> Option<Spec> {
+    let mut out = Spec::default();
+    let mut parts = spec.split('_');
+    let dims = parts.next()?;
+    for d in dims.split('x') {
+        out.dims.push(d.parse().ok()?);
+    }
+    if out.dims.is_empty() {
+        return None;
+    }
+    for tok in parts {
+        if let Some(v) = tok.strip_prefix("rO") {
+            out.ro = Some(v.parse().ok()?);
+        } else if let Some(v) = tok.strip_prefix("rI") {
+            out.ri = Some(v.parse().ok()?);
+        } else if let Some(v) = tok.strip_prefix("rS") {
+            out.rs = Some(v.parse().ok()?);
+        } else if let Some(v) = tok.strip_prefix('r') {
+            out.r = Some(v.parse().ok()?);
+        } else {
+            return None;
+        }
+    }
+    Some(out)
+}
+
+const KERNEL_TEMPLATES: &[&str] = &[
+    "adam_step",
+    "adafactor_step",
+    "coap_adam_step",
+    "coap_adafactor_step",
+    "lora_adam_step",
+    "recalib",
+    "pupdate",
+    "galore_svd",
+    "coap_adam_conv_step",
+    "coap_adafactor_conv_step",
+    "coap_adam_convfull_step",
+    "conv_recalib_o",
+    "conv_recalib_i",
+    "conv_svd_o",
+    "conv_svd_i",
+    "conv_pupdate_o",
+    "conv_pupdate_i",
+];
+
+fn expect_inputs(name: &str, inputs: &[&Tensor], n: usize) -> Result<()> {
+    if inputs.len() != n {
+        bail!("graph '{name}': expected {n} inputs, got {}", inputs.len());
+    }
+    Ok(())
+}
+
+fn expect_numel(name: &str, which: &str, t: &Tensor, numel: usize) -> Result<()> {
+    if t.numel() != numel {
+        bail!(
+            "graph '{name}' input {which}: shape {:?} has {} elements, expected {numel}",
+            t.dims(),
+            t.numel()
+        );
+    }
+    Ok(())
+}
+
+/// Matrix frame (GaLore side rule): moments live on (max, r), P on (min, r).
+fn frame(dims: &[usize]) -> (usize, usize, usize, usize) {
+    let (m, n) = (dims[0], dims[1]);
+    (m, n, m.max(n), m.min(n))
+}
+
+impl Backend for NativeBackend {
+    fn label(&self) -> &'static str {
+        "native"
+    }
+
+    fn exec(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let (tpl, spec_str) = name
+            .split_once("__")
+            .ok_or_else(|| anyhow!("'{name}' is not a minted graph name"))?;
+
+        let out = match tpl {
+            "train_step" => nativenet::train_step(self.model_ref(spec_str)?, inputs)?,
+            "eval_step" => nativenet::eval_step(self.model_ref(spec_str)?, inputs)?,
+            _ => {
+                let spec = parse_spec(spec_str)
+                    .ok_or_else(|| anyhow!("graph '{name}': unparseable shape spec"))?;
+                self.exec_kernel(name, tpl, &spec, inputs)?
+            }
+        };
+        *self
+            .exec_counts
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        Ok(out)
+    }
+
+    fn model(&self, name: &str) -> Result<ModelInfo> {
+        self.model_ref(name).map(|m| m.clone())
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    fn has_graph(&self, name: &str) -> bool {
+        match name.split_once("__") {
+            Some(("train_step", m)) | Some(("eval_step", m)) => self.models.contains_key(m),
+            Some((tpl, spec)) => {
+                KERNEL_TEMPLATES.contains(&tpl) && parse_spec(spec).is_some()
+            }
+            None => false,
+        }
+    }
+
+    fn experiments(&self) -> Vec<ExperimentInfo> {
+        zoo::experiments()
+    }
+
+    fn total_execs(&self) -> u64 {
+        self.exec_counts.lock().unwrap().values().sum()
+    }
+}
+
+impl NativeBackend {
+    #[allow(clippy::too_many_lines)]
+    fn exec_kernel(
+        &self,
+        name: &str,
+        tpl: &str,
+        spec: &Spec,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let dims = &spec.dims;
+        let is_matrix_tpl = matches!(
+            tpl,
+            "adam_step" | "adafactor_step" | "coap_adam_step" | "coap_adafactor_step"
+                | "lora_adam_step" | "recalib" | "pupdate" | "galore_svd"
+        );
+        if is_matrix_tpl && dims.len() != 2 {
+            bail!("graph '{name}': matrix template needs an MxN shape, got {dims:?}");
+        }
+        match tpl {
+            // --- full-rank matrix steps -----------------------------------
+            "adam_step" => {
+                expect_inputs(name, inputs, 8)?;
+                let (m, n, _, _) = frame(dims);
+                expect_numel(name, "w", inputs[0], m * n)?;
+                expect_numel(name, "m", inputs[2], m * n)?;
+                let (w, mn, vn, ceu) = refimpl::adam_step_mat(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    inputs[2].f32s(),
+                    inputs[3].f32s(),
+                    inputs[4].scalar(),
+                    inputs[5].scalar(),
+                    inputs[6].scalar(),
+                    inputs[7].scalar(),
+                );
+                Ok(vec![
+                    Tensor::from_f32(&[m, n], w),
+                    Tensor::from_f32(&[m, n], mn),
+                    Tensor::from_f32(&[m, n], vn),
+                    Tensor::scalar_f32(ceu),
+                ])
+            }
+            "adafactor_step" => {
+                expect_inputs(name, inputs, 7)?;
+                let (m, n, _, _) = frame(dims);
+                expect_numel(name, "w", inputs[0], m * n)?;
+                expect_numel(name, "r_fac", inputs[3], m)?;
+                expect_numel(name, "c_fac", inputs[4], n)?;
+                let t = (inputs[5].scalar().round() as usize).max(1);
+                let (w, mn, rf, cf, ceu) = refimpl::adafactor_step_mat(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    inputs[2].f32s(),
+                    inputs[3].f32s(),
+                    inputs[4].f32s(),
+                    m,
+                    n,
+                    t,
+                    inputs[6].scalar(),
+                );
+                Ok(vec![
+                    Tensor::from_f32(&[m, n], w),
+                    Tensor::from_f32(&[m, n], mn),
+                    Tensor::from_f32(&[m, 1], rf),
+                    Tensor::from_f32(&[1, n], cf),
+                    Tensor::scalar_f32(ceu),
+                ])
+            }
+            // --- projected matrix steps -----------------------------------
+            "coap_adam_step" => {
+                expect_inputs(name, inputs, 9)?;
+                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+                let (m, n, mb, nb) = frame(dims);
+                expect_numel(name, "w", inputs[0], m * n)?;
+                expect_numel(name, "m", inputs[2], mb * r)?;
+                expect_numel(name, "p", inputs[4], nb * r)?;
+                let (w, mn, vn, ceu) = refimpl::coap_adam_step_mat(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    inputs[2].f32s(),
+                    inputs[3].f32s(),
+                    inputs[4].f32s(),
+                    m,
+                    n,
+                    r,
+                    inputs[5].scalar(),
+                    inputs[6].scalar(),
+                    inputs[7].scalar(),
+                    inputs[8].scalar(),
+                );
+                Ok(vec![
+                    Tensor::from_f32(&[m, n], w),
+                    Tensor::from_f32(&[mb, r], mn),
+                    Tensor::from_f32(&[mb, r], vn),
+                    Tensor::scalar_f32(ceu),
+                ])
+            }
+            "coap_adafactor_step" => {
+                expect_inputs(name, inputs, 8)?;
+                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+                let (m, n, mb, nb) = frame(dims);
+                expect_numel(name, "w", inputs[0], m * n)?;
+                expect_numel(name, "m", inputs[2], mb * r)?;
+                expect_numel(name, "r_fac", inputs[3], mb)?;
+                expect_numel(name, "c_fac", inputs[4], r)?;
+                expect_numel(name, "p", inputs[5], nb * r)?;
+                let t = (inputs[6].scalar().round() as usize).max(1);
+                let (w, mn, rf, cf, ceu) = refimpl::coap_adafactor_step_mat(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    inputs[2].f32s(),
+                    inputs[3].f32s(),
+                    inputs[4].f32s(),
+                    inputs[5].f32s(),
+                    m,
+                    n,
+                    r,
+                    t,
+                    inputs[7].scalar(),
+                );
+                Ok(vec![
+                    Tensor::from_f32(&[m, n], w),
+                    Tensor::from_f32(&[mb, r], mn),
+                    Tensor::from_f32(&[mb, 1], rf),
+                    Tensor::from_f32(&[1, r], cf),
+                    Tensor::scalar_f32(ceu),
+                ])
+            }
+            "lora_adam_step" => {
+                expect_inputs(name, inputs, 11)?;
+                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+                let (m, n, _, _) = frame(dims);
+                expect_numel(name, "a", inputs[1], r * n)?;
+                expect_numel(name, "b", inputs[2], m * r)?;
+                let (w, a, b, ma, va, mb_, vb, ceu) = refimpl::lora_adam_step_mat(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    inputs[2].f32s(),
+                    inputs[3].f32s(),
+                    inputs[4].f32s(),
+                    inputs[5].f32s(),
+                    inputs[6].f32s(),
+                    inputs[7].f32s(),
+                    m,
+                    n,
+                    r,
+                    inputs[8].scalar(),
+                    inputs[9].scalar(),
+                    inputs[10].scalar(),
+                );
+                Ok(vec![
+                    Tensor::from_f32(&[m, n], w),
+                    Tensor::from_f32(&[r, n], a),
+                    Tensor::from_f32(&[m, r], b),
+                    Tensor::from_f32(&[r, n], ma),
+                    Tensor::from_f32(&[r, n], va),
+                    Tensor::from_f32(&[m, r], mb_),
+                    Tensor::from_f32(&[m, r], vb),
+                    Tensor::scalar_f32(ceu),
+                ])
+            }
+            // --- matrix projection refreshes ------------------------------
+            "recalib" | "pupdate" | "galore_svd" => {
+                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+                let (m, n, mb, nb) = frame(dims);
+                let g_idx = match tpl {
+                    "galore_svd" => {
+                        expect_inputs(name, inputs, 1)?;
+                        0
+                    }
+                    "recalib" => {
+                        expect_inputs(name, inputs, 2)?;
+                        1
+                    }
+                    _ => {
+                        expect_inputs(name, inputs, 3)?;
+                        1
+                    }
+                };
+                expect_numel(name, "g", inputs[g_idx], m * n)?;
+                // Normalized frame: (max, min) with P on the small side.
+                let gn = if m < n {
+                    Tensor::from_f32(&[mb, nb], refimpl::transpose_flat(inputs[g_idx].f32s(), m, n))
+                } else {
+                    Tensor::from_f32(&[m, n], inputs[g_idx].f32s().to_vec())
+                };
+                let p_new = match tpl {
+                    "recalib" => {
+                        expect_numel(name, "p", inputs[0], nb * r)?;
+                        let p = Tensor::from_f32(&[nb, r], inputs[0].f32s().to_vec());
+                        refimpl::lowcost_recalib(&gn, &p, refimpl::SVD_SWEEPS)
+                    }
+                    "pupdate" => {
+                        expect_numel(name, "p", inputs[0], nb * r)?;
+                        expect_numel(name, "m_proj", inputs[2], mb * r)?;
+                        let p = Tensor::from_f32(&[nb, r], inputs[0].f32s().to_vec());
+                        let mp = Tensor::from_f32(&[mb, r], inputs[2].f32s().to_vec());
+                        refimpl::pupdate_sgd(
+                            &p,
+                            &gn,
+                            &mp,
+                            refimpl::PUPDATE_ITERS,
+                            refimpl::PUPDATE_LR,
+                        )
+                    }
+                    _ => refimpl::svd_topk(&gn, r, refimpl::SVD_SWEEPS).0,
+                };
+                Ok(vec![p_new])
+            }
+            // --- Tucker-2 conv steps --------------------------------------
+            "coap_adam_conv_step" | "coap_adafactor_conv_step" | "coap_adam_convfull_step" => {
+                if dims.len() != 4 {
+                    bail!("graph '{name}': conv step needs a 4-D shape");
+                }
+                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+                let numel: usize = dims.iter().product();
+                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+                if inputs.len() < 2 {
+                    bail!("graph '{name}': expected at least w and g inputs");
+                }
+                expect_numel(name, "w", inputs[0], numel)?;
+                expect_numel(name, "g", inputs[1], numel)?;
+                match tpl {
+                    "coap_adam_conv_step" => {
+                        expect_inputs(name, inputs, 10)?;
+                        expect_numel(name, "m", inputs[2], ro * ri * kk)?;
+                        expect_numel(name, "po", inputs[4], o * ro)?;
+                        expect_numel(name, "pi", inputs[5], i * ri)?;
+                        let (w, mn, vn, ceu) = refimpl::coap_adam_conv_step(
+                            inputs[0].f32s(),
+                            inputs[1].f32s(),
+                            inputs[2].f32s(),
+                            inputs[3].f32s(),
+                            inputs[4].f32s(),
+                            inputs[5].f32s(),
+                            dims,
+                            ro,
+                            ri,
+                            inputs[6].scalar(),
+                            inputs[7].scalar(),
+                            inputs[8].scalar(),
+                            inputs[9].scalar(),
+                        );
+                        let mdims = [ro, ri, dims[2], dims[3]];
+                        Ok(vec![
+                            Tensor::from_f32(dims, w),
+                            Tensor::from_f32(&mdims, mn),
+                            Tensor::from_f32(&mdims, vn),
+                            Tensor::scalar_f32(ceu),
+                        ])
+                    }
+                    "coap_adafactor_conv_step" => {
+                        expect_inputs(name, inputs, 9)?;
+                        expect_numel(name, "m", inputs[2], ro * ri * kk)?;
+                        expect_numel(name, "r_fac", inputs[3], ro)?;
+                        expect_numel(name, "c_fac", inputs[4], ri * kk)?;
+                        let t = (inputs[7].scalar().round() as usize).max(1);
+                        let (w, mn, rf, cf, ceu) = refimpl::coap_adafactor_conv_step(
+                            inputs[0].f32s(),
+                            inputs[1].f32s(),
+                            inputs[2].f32s(),
+                            inputs[3].f32s(),
+                            inputs[4].f32s(),
+                            inputs[5].f32s(),
+                            inputs[6].f32s(),
+                            dims,
+                            ro,
+                            ri,
+                            t,
+                            inputs[8].scalar(),
+                        );
+                        let mdims = [ro, ri, dims[2], dims[3]];
+                        Ok(vec![
+                            Tensor::from_f32(dims, w),
+                            Tensor::from_f32(&mdims, mn),
+                            Tensor::from_f32(&[ro, 1], rf),
+                            Tensor::from_f32(&[1, ri * kk], cf),
+                            Tensor::scalar_f32(ceu),
+                        ])
+                    }
+                    _ => {
+                        expect_inputs(name, inputs, 11)?;
+                        let rs = spec.rs.ok_or_else(|| anyhow!("'{name}': missing rS"))?;
+                        expect_numel(name, "m", inputs[2], ro * ri * rs)?;
+                        expect_numel(name, "ps", inputs[6], kk * rs)?;
+                        let (w, mn, vn, ceu) = refimpl::coap_adam_convfull_step(
+                            inputs[0].f32s(),
+                            inputs[1].f32s(),
+                            inputs[2].f32s(),
+                            inputs[3].f32s(),
+                            inputs[4].f32s(),
+                            inputs[5].f32s(),
+                            inputs[6].f32s(),
+                            dims,
+                            ro,
+                            ri,
+                            rs,
+                            inputs[7].scalar(),
+                            inputs[8].scalar(),
+                            inputs[9].scalar(),
+                            inputs[10].scalar(),
+                        );
+                        let mdims = [ro, ri, rs];
+                        Ok(vec![
+                            Tensor::from_f32(dims, w),
+                            Tensor::from_f32(&mdims, mn),
+                            Tensor::from_f32(&mdims, vn),
+                            Tensor::scalar_f32(ceu),
+                        ])
+                    }
+                }
+            }
+            // --- conv projection refreshes --------------------------------
+            "conv_recalib_o" | "conv_recalib_i" | "conv_svd_o" | "conv_svd_i"
+            | "conv_pupdate_o" | "conv_pupdate_i" => {
+                if dims.len() != 4 {
+                    bail!("graph '{name}': conv refresh needs a 4-D shape");
+                }
+                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+                let numel = o * i * kk;
+                let side_o = tpl.ends_with("_o");
+                let (pn, pr) = if side_o { (o, ro) } else { (i, ri) };
+                match tpl {
+                    "conv_svd_o" | "conv_svd_i" => {
+                        expect_inputs(name, inputs, 1)?;
+                        expect_numel(name, "g", inputs[0], numel)?;
+                        Ok(vec![refimpl::conv_svd_side(inputs[0].f32s(), dims, side_o, pr)])
+                    }
+                    "conv_recalib_o" | "conv_recalib_i" => {
+                        expect_inputs(name, inputs, 2)?;
+                        expect_numel(name, "p", inputs[0], pn * pr)?;
+                        expect_numel(name, "g", inputs[1], numel)?;
+                        let p = Tensor::from_f32(&[pn, pr], inputs[0].f32s().to_vec());
+                        Ok(vec![refimpl::conv_recalib_side(&p, inputs[1].f32s(), dims, side_o)])
+                    }
+                    _ => {
+                        expect_inputs(name, inputs, 4)?;
+                        expect_numel(name, "p", inputs[0], pn * pr)?;
+                        expect_numel(name, "g", inputs[1], numel)?;
+                        expect_numel(name, "m_proj", inputs[2], ro * ri * kk)?;
+                        let (on, or) = if side_o { (i, ri) } else { (o, ro) };
+                        expect_numel(name, "other_p", inputs[3], on * or)?;
+                        let p = Tensor::from_f32(&[pn, pr], inputs[0].f32s().to_vec());
+                        Ok(vec![refimpl::conv_pupdate_side(
+                            &p,
+                            inputs[1].f32s(),
+                            inputs[2].f32s(),
+                            inputs[3].f32s(),
+                            dims,
+                            ro,
+                            ri,
+                            side_o,
+                        )])
+                    }
+                }
+            }
+            _ => bail!("graph '{name}': template '{tpl}' not implemented by the native backend"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::names;
+
+    #[test]
+    fn spec_parser_roundtrips_minted_names() {
+        let s = parse_spec("512x128_r32").unwrap();
+        assert_eq!(s.dims, vec![512, 128]);
+        assert_eq!(s.r, Some(32));
+        let s = parse_spec("16x3x3x3_rO4_rI2_rS4").unwrap();
+        assert_eq!(s.dims, vec![16, 3, 3, 3]);
+        assert_eq!((s.ro, s.ri, s.rs), (Some(4), Some(2), Some(4)));
+        assert_eq!(parse_spec("128x512").unwrap().r, None);
+        assert!(parse_spec("abc").is_none());
+        assert!(parse_spec("12x_r4").is_none());
+    }
+
+    #[test]
+    fn has_graph_covers_minted_names() {
+        let be = NativeBackend::new();
+        assert!(be.has_graph(&names::matrix_proj("coap_adam_step", 64, 32, 8)));
+        assert!(be.has_graph(&names::fullrank("adafactor_step", 8, 4)));
+        assert!(be.has_graph(&names::conv("conv_recalib_o", &[8, 4, 3, 3], 2, 2)));
+        assert!(be.has_graph(&names::conv_full(&[8, 4, 3, 3], 2, 2)));
+        assert!(be.has_graph("train_step__lm_tiny"));
+        assert!(!be.has_graph("train_step__nope"));
+        assert!(!be.has_graph("warp_step__8x8"));
+    }
+
+    #[test]
+    fn exec_counts_accumulate() {
+        let be = NativeBackend::new();
+        let w = Tensor::zeros(&[4, 2]);
+        let g = Tensor::from_f32(&[4, 2], vec![0.1; 8]);
+        let m = Tensor::zeros(&[4, 2]);
+        let v = Tensor::zeros(&[4, 2]);
+        let name = names::fullrank("adam_step", 4, 2);
+        let s = |x: f32| Tensor::scalar_f32(x);
+        for _ in 0..3 {
+            be.exec(&name, &[&w, &g, &m, &v, &s(0.9), &s(0.999), &s(0.01), &s(0.0)])
+                .unwrap();
+        }
+        assert_eq!(be.total_execs(), 3);
+    }
+}

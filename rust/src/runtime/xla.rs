@@ -1,0 +1,205 @@
+//! PJRT/XLA replay backend (behind `--features xla`): loads the AOT
+//! artifacts (`artifacts/*.hlo.txt` + `manifest.json`) and executes them
+//! on the CPU PJRT client.
+//!
+//! - [`Manifest`] parses the Python-emitted contract (graph I/O specs,
+//!   model parameter census, experiment list).
+//! - [`Runtime`] compiles executables lazily (one per graph name), caches
+//!   them, and bridges host [`Tensor`]s <-> XLA literals.
+//!
+//! Interchange is HLO *text* (jax >= 0.5 protos use 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//!
+//! Requires the vendored `xla` crate (see Cargo.toml / rust/README.md);
+//! the default build uses [`super::NativeBackend`] instead.
+
+use super::{Backend, ExperimentInfo, Manifest, ModelInfo, TensorSpec};
+use crate::tensor::{Storage, Tensor};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: std::path::PathBuf,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative executions per graph (perf accounting).
+    pub exec_counts: Mutex<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory and parse the manifest.
+    pub fn open(dir: &str) -> Result<Runtime> {
+        let dir = std::path::PathBuf::from(dir);
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+            exec_counts: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Get-or-compile the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        let info = self
+            .manifest
+            .graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("graph '{name}' not in manifest (re-run `make artifacts`?)"))?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    pub fn is_compiled(&self, name: &str) -> bool {
+        self.cache.lock().unwrap().contains_key(name)
+    }
+}
+
+impl Backend for Runtime {
+    fn label(&self) -> &'static str {
+        "xla"
+    }
+
+    /// Inputs are validated against the manifest by element count and
+    /// dtype; the literal is built with the *manifest* shape, so callers
+    /// may pass layout-compatible views (e.g. a conv weight for its
+    /// mode-1 unfolding) without a reshape copy — a deliberate hot-path
+    /// optimization (EXPERIMENTS.md §Perf).
+    fn exec(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let info = self
+            .manifest
+            .graphs
+            .get(name)
+            .ok_or_else(|| anyhow!("graph '{name}' not in manifest"))?;
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "graph '{name}': expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
+            if t.numel() != spec.numel() {
+                bail!(
+                    "graph '{name}' input {i}: shape {:?} incompatible with manifest {:?}",
+                    t.dims(),
+                    spec.shape
+                );
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&info.inputs)
+            .map(|(t, spec)| tensor_to_literal_shaped(t, &spec.shape))
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
+        *self.exec_counts.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
+        parts
+            .into_iter()
+            .zip(&info.outputs)
+            .map(|(lit, spec)| literal_to_tensor(&lit, spec))
+            .collect()
+    }
+
+    fn model(&self, name: &str) -> Result<ModelInfo> {
+        self.manifest.model(name).map(|m| m.clone())
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        self.manifest.models.keys().cloned().collect()
+    }
+
+    fn has_graph(&self, name: &str) -> bool {
+        self.manifest.graphs.contains_key(name)
+    }
+
+    fn experiments(&self) -> Vec<ExperimentInfo> {
+        self.manifest.experiments.clone()
+    }
+
+    fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    fn total_execs(&self) -> u64 {
+        self.exec_counts.lock().unwrap().values().sum()
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    tensor_to_literal_shaped(t, t.dims())
+}
+
+/// Build a literal with an explicit (element-count-compatible) shape —
+/// row-major data is layout-identical, so no host copy is needed for
+/// reshapes.
+pub fn tensor_to_literal_shaped(t: &Tensor, dims: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<usize> = dims.to_vec();
+    match t.storage() {
+        Storage::F32(v) => {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, bytes)
+                .map_err(|e| anyhow!("literal f32 {:?}: {e:?}", dims))
+        }
+        Storage::I32(v) => {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            };
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, &dims, bytes)
+                .map_err(|e| anyhow!("literal i32 {:?}: {e:?}", dims))
+        }
+    }
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    match spec.dtype.as_str() {
+        "f32" => {
+            let v = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("literal->f32: {e:?}"))?;
+            Ok(Tensor::from_f32(&spec.shape, v))
+        }
+        "i32" => {
+            let v = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow!("literal->i32: {e:?}"))?;
+            Ok(Tensor::from_i32(&spec.shape, v))
+        }
+        d => bail!("unsupported dtype {d}"),
+    }
+}

@@ -67,6 +67,42 @@ mod tests {
         assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
     }
 
+    /// Property: encode/decode round-trips a whole buffer idempotently
+    /// (decode(encode(x)) is a fixed point of the conversion).
+    #[test]
+    fn prop_buffer_roundtrip_idempotent() {
+        let mut r = Rng::new(31);
+        let src: Vec<f32> = (0..4096).map(|_| r.normal() * (10f32).powi(r.below(9) as i32 - 4)).collect();
+        let mut enc = Vec::new();
+        encode(&src, &mut enc);
+        let mut dec = vec![0.0f32; src.len()];
+        decode(&enc, &mut dec);
+        // Second pass is exact: bf16 values are representable in f32.
+        let mut enc2 = Vec::new();
+        encode(&dec, &mut enc2);
+        assert_eq!(enc, enc2);
+        let mut dec2 = vec![0.0f32; src.len()];
+        decode(&enc2, &mut dec2);
+        assert_eq!(dec, dec2);
+    }
+
+    /// Property: conversion preserves ordering (monotone) and sign.
+    #[test]
+    fn prop_monotone_and_sign_preserving() {
+        let mut r = Rng::new(37);
+        let mut vals: Vec<f32> = (0..2000).map(|_| r.normal() * 100.0).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = f32::NEG_INFINITY;
+        for &v in &vals {
+            let back = bf16_to_f32(f32_to_bf16(v));
+            assert!(back >= prev, "not monotone at {v}: {back} < {prev}");
+            if v != 0.0 {
+                assert!(back == 0.0 || back.signum() == v.signum());
+            }
+            prev = back;
+        }
+    }
+
     #[test]
     fn rounding_is_to_nearest() {
         // bf16 has 7 fraction bits: ulp(1.0) = 2^-7. Below half-ulp

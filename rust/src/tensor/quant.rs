@@ -185,6 +185,44 @@ mod tests {
         assert!(q.nbytes() * 4 <= 4096 * 4 + 16 * 4 * 4);
     }
 
+    /// Property: quantization is a projection — re-quantizing the
+    /// dequantized signal is exact (codes and scales are a fixed point).
+    #[test]
+    fn prop_requantize_is_identity() {
+        let mut r = Rng::new(23);
+        for _ in 0..20 {
+            let n = 1 + r.below(1500);
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * 0.05).collect();
+            let q1 = quantize(&src);
+            let back = dequantize_vec(&q1);
+            let q2 = quantize(&back);
+            assert_eq!(q1.scales, q2.scales);
+            assert_eq!(q1.data, q2.data);
+        }
+    }
+
+    /// Property: dequantization preserves signs and never exceeds the
+    /// block absmax (codebook maxes out at ±1 × scale).
+    #[test]
+    fn prop_sign_and_range_preserved() {
+        let mut r = Rng::new(29);
+        let src: Vec<f32> = (0..2048).map(|_| r.normal() * 3.0).collect();
+        let q = quantize(&src);
+        let back = dequantize_vec(&q);
+        for (bi, chunk) in src.chunks(BLOCK).enumerate() {
+            let absmax = chunk.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            for (&a, &b) in chunk.iter().zip(&back[bi * BLOCK..]) {
+                assert!(b.abs() <= absmax * (1.0 + 1e-6), "{b} exceeds absmax {absmax}");
+                if a.abs() > absmax * 2e-7 {
+                    assert!(
+                        a.signum() == b.signum() || b == 0.0,
+                        "sign flipped: {a} -> {b}"
+                    );
+                }
+            }
+        }
+    }
+
     /// Property sweep: random lengths/scales; error bounded by max(7%
     /// relative, absmax * 1e-7 absolute floor).
     #[test]

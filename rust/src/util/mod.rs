@@ -1,6 +1,7 @@
-//! Hand-rolled substrates. The build is fully offline (vendored crates:
-//! `xla`, `anyhow` only), so JSON, CLI parsing, the thread pool, and the
-//! bench harness are implemented here from scratch.
+//! Hand-rolled substrates. The build is fully offline (the only crate
+//! dependency is the vendored `anyhow` shim; `xla` is optional and
+//! feature-gated), so JSON, CLI parsing, the thread pool, and the bench
+//! harness are implemented here from scratch.
 
 pub mod bench;
 pub mod cli;

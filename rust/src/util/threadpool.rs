@@ -1,10 +1,13 @@
 //! Minimal scoped thread pool for per-layer optimizer dispatch.
 //!
-//! The coordinator fans per-layer state updates out to workers while the
-//! next batch's gradients are computed. On this single-core testbed the
-//! pool mostly provides *overlap* (XLA releases the GIL-free CPU between
-//! executions), but the code is written for multi-core boxes.
+//! [`ThreadPool::run_all_scoped`] is the hot-path API: `LowRank::step`
+//! fans per-slot updates (which borrow the optimizer's state and the
+//! parameter buffers) out to the workers and blocks until all complete,
+//! so jobs may safely capture non-`'static` borrows. Worker panics are
+//! caught per job and re-raised on the caller thread after the batch
+//! drains, so a poisoned slot can't wedge or kill the pool.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -39,6 +42,10 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers }
     }
 
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx.as_ref().unwrap().send(Box::new(f)).expect("pool closed");
     }
@@ -48,22 +55,49 @@ impl ThreadPool {
         &self,
         jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
     ) -> Vec<T> {
+        self.run_all_scoped(jobs)
+    }
+
+    /// Like [`Self::run_all`], but jobs may capture non-`'static` borrows
+    /// (e.g. `&mut` slices of the caller's buffers). Results come back in
+    /// job-index order regardless of completion order; if any job
+    /// panicked, the first panic (by index) is re-raised here after every
+    /// job of the batch has finished.
+    pub fn run_all_scoped<'scope, T: Send + 'scope>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'scope>>,
+    ) -> Vec<T> {
         let n = jobs.len();
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::channel::<(usize, thread::Result<T>)>();
         for (i, job) in jobs.into_iter().enumerate() {
             let tx = tx.clone();
-            self.submit(move || {
-                let out = job();
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                let out = catch_unwind(AssertUnwindSafe(job));
                 let _ = tx.send((i, out));
             });
+            // SAFETY: this function blocks below until all `n` results
+            // (including panics) have been received, so no job — and no
+            // borrow it captures — outlives this call. The transmute only
+            // erases the `'scope` lifetime; layout is identical.
+            let wrapped: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(wrapped)
+            };
+            self.tx.as_ref().unwrap().send(wrapped).expect("pool closed");
         }
         drop(tx);
-        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut slots: Vec<Option<thread::Result<T>>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
             let (i, out) = rx.recv().expect("worker died");
             slots[i] = Some(out);
         }
-        slots.into_iter().map(|s| s.unwrap()).collect()
+        let mut out = Vec::with_capacity(n);
+        for s in slots {
+            match s.expect("missing job result") {
+                Ok(v) => out.push(v),
+                Err(payload) => resume_unwind(payload),
+            }
+        }
+        out
     }
 }
 
@@ -104,5 +138,43 @@ mod tests {
             // Drop waits for workers to drain the queue.
         }
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn scoped_jobs_mutate_borrowed_buffers() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0usize; 16];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(4)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, c) in chunk.iter_mut().enumerate() {
+                        *c = i * 10 + j;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_all_scoped(jobs);
+        assert_eq!(data[5], 11);
+        assert_eq!(data[15], 33);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(2);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            vec![Box::new(|| 1), Box::new(|| panic!("boom")), Box::new(|| 3)];
+        pool.run_all(jobs);
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_batch() {
+        let pool = ThreadPool::new(2);
+        let bad: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![Box::new(|| panic!("x"))];
+        assert!(catch_unwind(AssertUnwindSafe(|| pool.run_all(bad))).is_err());
+        let good: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![Box::new(|| 7)];
+        assert_eq!(pool.run_all(good), vec![7]);
     }
 }

@@ -1,0 +1,337 @@
+//! Cross-engine validation for the hermetic build: every graph the
+//! native backend executes must agree with a *manual composition* of the
+//! refimpl oracles (projection → moment update → restore), including the
+//! transpose normalization (GaLore side rule) and the Tucker-2 conv mode
+//! products — the same contract `refimpl_vs_hlo.rs` pins on the XLA
+//! engine, closing the native/HLO/oracle triangle.
+
+use coap::optim::refimpl;
+use coap::rng::Rng;
+use coap::runtime::{names, Backend, NativeBackend};
+use coap::tensor::Tensor;
+
+fn randmat(rng: &mut Rng, dims: &[usize], scale: f32) -> Tensor {
+    let n = dims.iter().product();
+    Tensor::from_f32(dims, rng.normal_vec(n, scale))
+}
+
+fn s(x: f32) -> Tensor {
+    Tensor::scalar_f32(x)
+}
+
+#[test]
+fn native_adam_step_matches_refimpl() {
+    let be = NativeBackend::new();
+    let mut rng = Rng::new(1);
+    let (m, n) = (48usize, 32usize);
+    let w = randmat(&mut rng, &[m, n], 0.1);
+    let g = randmat(&mut rng, &[m, n], 0.02);
+    let mom = randmat(&mut rng, &[m, n], 0.01);
+    let vom = {
+        let mut v = randmat(&mut rng, &[m, n], 0.001);
+        for x in v.f32s_mut() {
+            *x = x.abs();
+        }
+        v
+    };
+    let t = 9usize;
+    let (lr, wd) = (0.01f32, 0.1f32);
+    let out = be
+        .exec(
+            &names::fullrank("adam_step", m, n),
+            &[
+                &w,
+                &g,
+                &mom,
+                &vom,
+                &s(0.9f32.powi(t as i32)),
+                &s(0.999f32.powi(t as i32)),
+                &s(lr),
+                &s(wd),
+            ],
+        )
+        .unwrap();
+    let mut w2 = w.f32s().to_vec();
+    let mut m2 = mom.f32s().to_vec();
+    let mut v2 = vom.f32s().to_vec();
+    let ceu = refimpl::adamw_step_flat(&mut w2, g.f32s(), &mut m2, &mut v2, t, lr, wd);
+    assert!(out[0].max_abs_diff(&Tensor::from_f32(&[m, n], w2)) < 1e-6, "w mismatch");
+    assert!(out[1].max_abs_diff(&Tensor::from_f32(&[m, n], m2)) < 1e-7);
+    assert!(out[2].max_abs_diff(&Tensor::from_f32(&[m, n], v2)) < 1e-8);
+    assert!((out[3].scalar() as f64 - ceu).abs() / ceu < 1e-3);
+}
+
+/// Acceptance criterion: native `coap_adam_step` matches the manual
+/// refimpl composition to <= 1e-5, in both orientations of the GaLore
+/// side rule (m >= n and m < n).
+#[test]
+fn native_coap_adam_step_matches_manual_projection_both_orientations() {
+    let be = NativeBackend::new();
+    for (seed, m, n, r) in [(5u64, 48usize, 32usize, 8usize), (6, 32, 48, 8)] {
+        let mut rng = Rng::new(seed);
+        let (mb, nb) = (m.max(n), m.min(n));
+        let w = randmat(&mut rng, &[m, n], 0.1);
+        let g = randmat(&mut rng, &[m, n], 0.02);
+        let p = refimpl::mgs_qr(&randmat(&mut rng, &[nb, r], 1.0));
+        let mom = randmat(&mut rng, &[mb, r], 0.01);
+        let vom = {
+            let mut v = randmat(&mut rng, &[mb, r], 0.001);
+            for x in v.f32s_mut() {
+                *x = x.abs();
+            }
+            v
+        };
+        let lr = 0.02f32;
+        let out = be
+            .exec(
+                &names::matrix_proj("coap_adam_step", m, n, r),
+                &[&w, &g, &mom, &vom, &p, &s(0.9), &s(0.999), &s(lr), &s(0.0)],
+            )
+            .unwrap();
+        // Manual: normalize, project, refimpl-Adam in low-rank, restore.
+        let gn = if m < n { g.transposed2d() } else { g.clone() };
+        let gp = gn.matmul(&p); // (mb, r)
+        let mut m2 = mom.f32s().to_vec();
+        let mut v2 = vom.f32s().to_vec();
+        let delta = refimpl::adam_update(&mut m2, &mut v2, gp.f32s(), 0.9, 0.999);
+        let dw_n = Tensor::from_f32(&[mb, r], delta).matmul(&p.transposed2d());
+        let dw = if m < n { dw_n.transposed2d() } else { dw_n };
+        let mut wref = w.f32s().to_vec();
+        for (wi, di) in wref.iter_mut().zip(dw.f32s()) {
+            *wi -= lr * di;
+        }
+        assert!(
+            out[0].max_abs_diff(&Tensor::from_f32(&[m, n], wref)) <= 1e-5,
+            "w mismatch ({m}x{n})"
+        );
+        assert!(out[1].max_abs_diff(&Tensor::from_f32(&[mb, r], m2)) < 1e-6);
+        assert!(out[2].max_abs_diff(&Tensor::from_f32(&[mb, r], v2)) < 1e-7);
+        assert_eq!(out[1].dims(), &[mb, r]);
+    }
+}
+
+#[test]
+fn native_coap_adafactor_step_matches_manual_composition() {
+    let be = NativeBackend::new();
+    let mut rng = Rng::new(7);
+    let (m, n, r) = (24usize, 40usize, 6usize); // transpose orientation
+    let (mb, nb) = (m.max(n), m.min(n));
+    let w = randmat(&mut rng, &[m, n], 0.1);
+    let g = randmat(&mut rng, &[m, n], 0.05);
+    let p = refimpl::mgs_qr(&randmat(&mut rng, &[nb, r], 1.0));
+    let mom = randmat(&mut rng, &[mb, r], 0.01);
+    let rf = Tensor::zeros(&[mb, 1]);
+    let cf = Tensor::zeros(&[1, r]);
+    let (t, lr) = (3usize, 0.01f32);
+    let out = be
+        .exec(
+            &names::matrix_proj("coap_adafactor_step", m, n, r),
+            &[&w, &g, &mom, &rf, &cf, &p, &s(t as f32), &s(lr)],
+        )
+        .unwrap();
+    let gn = g.transposed2d();
+    let gp = gn.matmul(&p);
+    let mut m2 = mom.f32s().to_vec();
+    let mut r2 = rf.f32s().to_vec();
+    let mut c2 = cf.f32s().to_vec();
+    let delta = refimpl::adafactor_delta(&mut m2, &mut r2, &mut c2, gp.f32s(), mb, r, t);
+    let dw = Tensor::from_f32(&[mb, r], delta).matmul(&p.transposed2d()).transposed2d();
+    let mut wref = w.f32s().to_vec();
+    for (wi, di) in wref.iter_mut().zip(dw.f32s()) {
+        *wi -= lr * di;
+    }
+    assert!(out[0].max_abs_diff(&Tensor::from_f32(&[m, n], wref)) <= 1e-5);
+    assert!(out[1].max_abs_diff(&Tensor::from_f32(&[mb, r], m2)) < 1e-6);
+    assert_eq!(out[2].dims(), &[mb, 1]);
+    assert_eq!(out[3].dims(), &[1, r]);
+}
+
+#[test]
+fn native_recalib_matches_refimpl_and_handles_transpose() {
+    let be = NativeBackend::new();
+    let mut rng = Rng::new(2);
+    for (m, n, r) in [(96usize, 40usize, 8usize), (40, 96, 8)] {
+        let nb = m.min(n);
+        // Low-rank-ish gradient so the top subspace is well defined.
+        let a = randmat(&mut rng, &[m, r], 1.0);
+        let b = randmat(&mut rng, &[r, n], 1.0);
+        let mut g = a.matmul(&b);
+        for v in g.f32s_mut() {
+            *v = *v * 0.01 + 0.0005 * rng.normal();
+        }
+        let p0 = refimpl::mgs_qr(&randmat(&mut rng, &[nb, r], 1.0));
+        let out = be
+            .exec(&names::matrix_proj("recalib", m, n, r), &[&p0, &g])
+            .unwrap();
+        let gn = if m < n { g.transposed2d() } else { g.clone() };
+        let oracle = refimpl::lowcost_recalib(&gn, &p0, refimpl::SVD_SWEEPS);
+        assert!(out[0].max_abs_diff(&oracle) < 1e-6, "recalib drift ({m}x{n})");
+        assert_eq!(out[0].dims(), &[nb, r]);
+    }
+}
+
+#[test]
+fn native_pupdate_matches_refimpl_and_descends_eqn6() {
+    let be = NativeBackend::new();
+    let mut rng = Rng::new(4);
+    let (m, n, r) = (96usize, 40usize, 8usize);
+    let g = randmat(&mut rng, &[m, n], 0.05);
+    let p0 = refimpl::mgs_qr(&randmat(&mut rng, &[n, r], 1.0));
+    let m_proj = g.matmul(&p0);
+    let out = be
+        .exec(&names::matrix_proj("pupdate", m, n, r), &[&p0, &g, &m_proj])
+        .unwrap();
+    let oracle =
+        refimpl::pupdate_sgd(&p0, &g, &m_proj, refimpl::PUPDATE_ITERS, refimpl::PUPDATE_LR);
+    assert!(out[0].max_abs_diff(&oracle) < 1e-6);
+    let before = refimpl::eqn6_objective(&p0, &g, &m_proj);
+    let after = refimpl::eqn6_objective(&out[0], &g, &m_proj);
+    assert!(after < before, "objective rose {before} -> {after}");
+}
+
+#[test]
+fn native_galore_svd_matches_refimpl() {
+    let be = NativeBackend::new();
+    let mut rng = Rng::new(3);
+    let (m, n, r) = (64usize, 48usize, 12usize);
+    let a = randmat(&mut rng, &[m, r], 1.0);
+    let b = randmat(&mut rng, &[r, n], 1.0);
+    let g = a.matmul(&b);
+    let out = be
+        .exec(&names::matrix_proj("galore_svd", m, n, r), &[&g])
+        .unwrap();
+    let (oracle, _) = refimpl::svd_topk(&g, r, refimpl::SVD_SWEEPS);
+    assert!(out[0].max_abs_diff(&oracle) < 1e-6);
+}
+
+/// Independent dense reference for the Tucker-2 conv Adam step: naive
+/// einsum loops, no shared helpers with the production kernels.
+#[test]
+fn native_conv_step_matches_naive_einsum_reference() {
+    let be = NativeBackend::new();
+    let mut rng = Rng::new(8);
+    let shape = [10usize, 6, 3, 3];
+    let (o, i, k1, k2) = (shape[0], shape[1], shape[2], shape[3]);
+    let (ro, ri) = (4usize, 3usize);
+    let kk = k1 * k2;
+    let w = randmat(&mut rng, &shape, 0.1);
+    let g = randmat(&mut rng, &shape, 0.05);
+    let po = refimpl::mgs_qr(&randmat(&mut rng, &[o, ro], 1.0));
+    let pi = refimpl::mgs_qr(&randmat(&mut rng, &[i, ri], 1.0));
+    let mom = Tensor::zeros(&[ro, ri, k1, k2]);
+    let vom = Tensor::zeros(&[ro, ri, k1, k2]);
+    let (lr, wd) = (0.02f32, 0.0f32);
+    let name = names::conv("coap_adam_conv_step", &shape, ro, ri);
+    let out = be
+        .exec(
+            &name,
+            &[&w, &g, &mom, &vom, &po, &pi, &s(0.9), &s(0.999), &s(lr), &s(wd)],
+        )
+        .unwrap();
+
+    // Naive: g_proj[r,si,k] = sum_{oo,ii} po[oo,r] pi[ii,si] g[oo,ii,k]
+    let (gs, pos, pis) = (g.f32s(), po.f32s(), pi.f32s());
+    let mut gproj = vec![0.0f32; ro * ri * kk];
+    for r in 0..ro {
+        for si in 0..ri {
+            for k in 0..kk {
+                let mut acc = 0.0f32;
+                for oo in 0..o {
+                    for ii in 0..i {
+                        acc += pos[oo * ro + r] * pis[ii * ri + si] * gs[(oo * i + ii) * kk + k];
+                    }
+                }
+                gproj[(r * ri + si) * kk + k] = acc;
+            }
+        }
+    }
+    let mut m2 = vec![0.0f32; ro * ri * kk];
+    let mut v2 = vec![0.0f32; ro * ri * kk];
+    let delta = refimpl::adam_update(&mut m2, &mut v2, &gproj, 0.9, 0.999);
+    // dw[oo,ii,k] = sum_{r,si} po[oo,r] pi[ii,si] delta[r,si,k]
+    let mut wref = w.f32s().to_vec();
+    for oo in 0..o {
+        for ii in 0..i {
+            for k in 0..kk {
+                let mut acc = 0.0f32;
+                for r in 0..ro {
+                    for si in 0..ri {
+                        acc += pos[oo * ro + r] * pis[ii * ri + si] * delta[(r * ri + si) * kk + k];
+                    }
+                }
+                wref[(oo * i + ii) * kk + k] -= lr * acc;
+            }
+        }
+    }
+    assert!(
+        out[0].max_abs_diff(&Tensor::from_f32(&shape, wref)) <= 1e-5,
+        "conv w mismatch"
+    );
+    assert!(out[1].max_abs_diff(&Tensor::from_f32(&[ro, ri, k1, k2], m2)) < 1e-6);
+    assert_eq!(out[1].dims(), &[ro, ri, k1, k2]);
+}
+
+#[test]
+fn native_conv_refreshes_return_wellformed_projections() {
+    let be = NativeBackend::new();
+    let mut rng = Rng::new(9);
+    let shape = [12usize, 8, 3, 3];
+    let (o, i) = (shape[0], shape[1]);
+    let (ro, ri) = (4usize, 3usize);
+    let g = randmat(&mut rng, &shape, 0.1);
+    // SVD sides.
+    let po = be
+        .exec(&names::conv("conv_svd_o", &shape, ro, ri), &[&g])
+        .unwrap();
+    assert_eq!(po[0].dims(), &[o, ro]);
+    let pi = be
+        .exec(&names::conv("conv_svd_i", &shape, ro, ri), &[&g])
+        .unwrap();
+    assert_eq!(pi[0].dims(), &[i, ri]);
+    // Recalib keeps shapes and returns ~unit columns.
+    let p0 = refimpl::mgs_qr(&randmat(&mut rng, &[o, ro], 1.0));
+    let rec = be
+        .exec(&names::conv("conv_recalib_o", &shape, ro, ri), &[&p0, &g])
+        .unwrap();
+    assert_eq!(rec[0].dims(), &[o, ro]);
+    for j in 0..ro {
+        let col_norm: f32 = (0..o).map(|x| rec[0].f32s()[x * ro + j].powi(2)).sum::<f32>().sqrt();
+        assert!((col_norm - 1.0).abs() < 0.05, "recalib col {j} norm {col_norm}");
+    }
+    // PUpdate runs and returns finite values with the right shape.
+    let m_proj = randmat(&mut rng, &[ro, ri, 3, 3], 0.01);
+    let pup = be
+        .exec(
+            &names::conv("conv_pupdate_o", &shape, ro, ri),
+            &[&p0, &g, &m_proj, &pi[0]],
+        )
+        .unwrap();
+    assert_eq!(pup[0].dims(), &[o, ro]);
+    assert!(pup[0].f32s().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn native_exec_is_deterministic() {
+    let be = NativeBackend::new();
+    let mut rng = Rng::new(11);
+    let (m, n, r) = (32usize, 20usize, 4usize);
+    let g = randmat(&mut rng, &[m, n], 0.1);
+    let a = be.exec(&names::matrix_proj("galore_svd", m, n, r), &[&g]).unwrap();
+    let b = be.exec(&names::matrix_proj("galore_svd", m, n, r), &[&g]).unwrap();
+    assert_eq!(a[0].f32s(), b[0].f32s());
+}
+
+#[test]
+fn native_rejects_malformed_calls() {
+    let be = NativeBackend::new();
+    let g = Tensor::zeros(&[4, 4]);
+    // Wrong input count.
+    assert!(be.exec("galore_svd__4x4_r2", &[&g, &g]).is_err());
+    // Unknown template.
+    assert!(be.exec("warp_step__4x4", &[&g]).is_err());
+    // Shape mismatch.
+    let p = Tensor::zeros(&[3, 2]);
+    assert!(be.exec("recalib__4x4_r2", &[&p, &g]).is_err());
+    // Unknown model.
+    assert!(be.exec("train_step__nope", &[]).is_err());
+}

@@ -1,15 +1,14 @@
-//! Optimizer state-machine integration over real artifacts: schedules,
-//! ablation flags, conv Tucker-2 paths, adafactor bases, LoRA/ReLoRA,
-//! and the memory-accounting contracts the tables rely on.
+//! Optimizer state-machine integration on the native backend: schedules,
+//! ablation flags, conv Tucker-1/2/full paths, adafactor bases,
+//! LoRA/ReLoRA, and the memory-accounting contracts the tables rely on.
 
 use coap::config::{ConvFormat, MomentBase, OptKind, TrainConfig};
-use coap::config::default_artifacts_dir;
 use coap::coordinator::Trainer;
-use coap::runtime::Runtime;
+use coap::runtime::{Backend, NativeBackend};
 use std::sync::Arc;
 
-fn runtime() -> Arc<Runtime> {
-    Arc::new(Runtime::open(&default_artifacts_dir()).expect("make artifacts first"))
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
 }
 
 fn cfg(model: &str, opt: OptKind, steps: usize) -> TrainConfig {
@@ -25,7 +24,7 @@ fn cfg(model: &str, opt: OptKind, steps: usize) -> TrainConfig {
     c
 }
 
-fn run(c: TrainConfig, rt: &Arc<Runtime>) -> coap::coordinator::TrainReport {
+fn run(c: TrainConfig, rt: &Arc<dyn Backend>) -> coap::coordinator::TrainReport {
     let mut tr = Trainer::new(c, Arc::clone(rt)).unwrap();
     tr.quiet = true;
     tr.run().unwrap()
@@ -33,7 +32,7 @@ fn run(c: TrainConfig, rt: &Arc<Runtime>) -> coap::coordinator::TrainReport {
 
 #[test]
 fn conv_model_trains_under_every_lowrank_policy() {
-    let rt = runtime();
+    let rt = backend();
     for opt in [OptKind::Coap, OptKind::Galore, OptKind::Flora, OptKind::CoapAdafactor] {
         let rep = run(cfg("cnn_tiny", opt, 10), &rt);
         assert!(
@@ -46,10 +45,41 @@ fn conv_model_trains_under_every_lowrank_policy() {
     }
 }
 
+/// Acceptance matrix: every projection policy × both moment bases
+/// completes a multi-step training loop on matrix (lm), Tucker-1 and
+/// Tucker-2 conv slots, entirely on the native backend.
+#[test]
+fn policy_base_matrix_covers_all_slot_kinds() {
+    let rt = backend();
+    for policy in [OptKind::Coap, OptKind::Galore, OptKind::Flora] {
+        for base in [MomentBase::Adam, MomentBase::Adafactor] {
+            for (model, fmt) in [
+                ("lm_micro", ConvFormat::Tucker2),
+                ("cnn_micro", ConvFormat::Tucker1),
+                ("cnn_micro", ConvFormat::Tucker2),
+            ] {
+                let mut c = cfg(model, policy, 9);
+                c.lowrank_base = base;
+                c.conv_format = fmt;
+                c.t_update = 3;
+                c.lambda = 2;
+                let rep = run(c, &rt);
+                assert!(
+                    rep.final_train_loss.is_finite()
+                        && rep.final_train_loss < rep.train_losses[0].1,
+                    "{policy:?}/{base:?}/{model}/{fmt:?}: {} -> {}",
+                    rep.train_losses[0].1,
+                    rep.final_train_loss
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn controlnet_model_reports_keypoint_proxy() {
-    let rt = runtime();
-    let mut c = cfg("ctrl_small", OptKind::CoapAdafactor, 8);
+    let rt = backend();
+    let mut c = cfg("ctrl_micro", OptKind::CoapAdafactor, 8);
     c.eval_every = 8;
     c.eval_batches = 1;
     let rep = run(c, &rt);
@@ -58,7 +88,7 @@ fn controlnet_model_reports_keypoint_proxy() {
 
 #[test]
 fn adafactor_base_uses_less_memory_than_adam_base() {
-    let rt = runtime();
+    let rt = backend();
     let mut a = cfg("lm_tiny", OptKind::Coap, 4);
     a.track_ceu = false;
     let mut b = cfg("lm_tiny", OptKind::CoapAdafactor, 4);
@@ -76,7 +106,7 @@ fn adafactor_base_uses_less_memory_than_adam_base() {
 
 #[test]
 fn rank_ratio_controls_memory_monotonically() {
-    let rt = runtime();
+    let rt = backend();
     let mut bytes = Vec::new();
     for ratio in [2.0, 4.0, 8.0] {
         let mut c = cfg("lm_tiny", OptKind::Coap, 2);
@@ -88,7 +118,7 @@ fn rank_ratio_controls_memory_monotonically() {
 
 #[test]
 fn ablation_flags_change_projection_work() {
-    let rt = runtime();
+    let rt = backend();
     // Disabling both Eqn-6 and Eqn-7 leaves P fixed at its random init:
     // proj time collapses to (almost) only the init cost.
     let mut on = cfg("lm_tiny", OptKind::Coap, 12);
@@ -111,7 +141,7 @@ fn ablation_flags_change_projection_work() {
 
 #[test]
 fn relora_merges_do_not_break_training() {
-    let rt = runtime();
+    let rt = backend();
     let mut c = cfg("lm_tiny", OptKind::Relora, 12);
     c.relora_merge_every = 4;
     let rep = run(c, &rt);
@@ -121,7 +151,7 @@ fn relora_merges_do_not_break_training() {
 
 #[test]
 fn lora_uses_adapter_memory_not_full_moments() {
-    let rt = runtime();
+    let rt = backend();
     let lora = run(cfg("lm_tiny", OptKind::Lora, 4), &rt);
     let adam = run(cfg("lm_tiny", OptKind::AdamW, 4), &rt);
     assert!(lora.optimizer_bytes < adam.optimizer_bytes);
@@ -129,7 +159,7 @@ fn lora_uses_adapter_memory_not_full_moments() {
 
 #[test]
 fn tucker_formats_all_train_on_conv() {
-    let rt = runtime();
+    let rt = backend();
     for fmt in [ConvFormat::Tucker1, ConvFormat::Tucker2, ConvFormat::Full] {
         let mut c = cfg("cnn_tiny", OptKind::Coap, 8);
         c.conv_format = fmt;
@@ -144,7 +174,7 @@ fn tucker_formats_all_train_on_conv() {
 
 #[test]
 fn galore_under_adafactor_base_trains() {
-    let rt = runtime();
+    let rt = backend();
     let mut c = cfg("lm_tiny", OptKind::Galore, 8);
     c.lowrank_base = MomentBase::Adafactor;
     let rep = run(c, &rt);
@@ -153,7 +183,7 @@ fn galore_under_adafactor_base_trains() {
 
 #[test]
 fn galore_pays_more_projection_time_than_coap() {
-    let rt = runtime();
+    let rt = backend();
     // Same refresh cadence: GaLore full SVD vs COAP recalib+pupdate.
     let mut g = cfg("lm_tiny", OptKind::Galore, 10);
     g.t_update = 4;

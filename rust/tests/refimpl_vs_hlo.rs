@@ -2,11 +2,16 @@
 //! the pure-Rust reference implementations (which were themselves
 //! validated against numpy on the Python side). Any drift between the
 //! three implementations of the paper's math fails here.
+//!
+//! Requires the `xla` feature plus `make artifacts`; the hermetic
+//! default build validates the native backend against the same oracles
+//! in `native_vs_refimpl.rs` instead.
+#![cfg(feature = "xla")]
 
 use coap::config::default_artifacts_dir;
 use coap::optim::refimpl;
 use coap::rng::Rng;
-use coap::runtime::{names, Runtime};
+use coap::runtime::{names, Backend, Runtime};
 use coap::tensor::Tensor;
 
 fn runtime() -> Runtime {
