@@ -1,0 +1,100 @@
+//! Kernel-layer receipt for ROADMAP item #1: the blocked/SIMD GEMM core
+//! (`tensor::linalg`) vs the pre-refactor naive loop, on weight shapes
+//! drawn from the model zoo census (`model/zoo.rs`) plus the 1024^3
+//! acceptance case. Rows land in the bench-JSON trajectory
+//! (`target/bench-json/gemm.jsonl`) so the speedup is recorded per run.
+
+use coap::rng::Rng;
+use coap::tensor::linalg;
+use coap::util::bench::{append_json, print_table, Bench};
+use coap::util::threadpool::ThreadPool;
+use std::time::Duration;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let bench = Bench { warmup: 1, iters: 3, max_total: Duration::from_secs(15) };
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let pool = ThreadPool::new(workers);
+    let mut rows = Vec::new();
+
+    // (m, k, n): lm_small blk.w1 batch GEMM (seq*batch=1024 tokens,
+    // 256 -> 1024), lm_base blk.w1 (1024 tokens, 512 -> 2048), lm_base
+    // head (1024 tokens, 512 -> 4096 vocab), llava_small projector
+    // (batch 16, 512 -> 256), and the 1024^3 acceptance case.
+    let shapes: &[(usize, usize, usize, &str)] = &[
+        (1024, 256, 1024, "lm_small blk.w1"),
+        (1024, 512, 2048, "lm_base blk.w1"),
+        (1024, 512, 4096, "lm_base head"),
+        (16, 512, 256, "llava projector"),
+        (1024, 1024, 1024, "1024^3 NN"),
+    ];
+    for &(m, k, n, label) in shapes {
+        let a = rng.normal_vec(m * k, 0.5);
+        let b = rng.normal_vec(k * n, 0.5);
+        let mut out = vec![0.0f32; m * n];
+        let s_naive = bench.run(&format!("naive {m}x{k}x{n}"), || {
+            std::hint::black_box(linalg::naive_matmul(&a, &b, m, k, n));
+        });
+        let s_nn = bench.run(&format!("gemm_nn {m}x{k}x{n}"), || {
+            linalg::gemm_nn_into(None, std::hint::black_box(&mut out), &a, &b, m, k, n);
+        });
+        let s_par = bench.run(&format!("gemm_nn pool{workers} {m}x{k}x{n}"), || {
+            linalg::gemm_nn_into(Some(&pool), std::hint::black_box(&mut out), &a, &b, m, k, n);
+        });
+        // Same geometry through the transpose variants (operands laid
+        // out so the product matches the NN case).
+        let at = linalg::transpose(&a, m, k); // (k, m)
+        let s_tn = bench.run(&format!("gemm_tn {m}x{k}x{n}"), || {
+            linalg::gemm_tn_into(None, std::hint::black_box(&mut out), &at, &b, k, m, n);
+        });
+        let bt = linalg::transpose(&b, k, n); // (n, k)
+        let s_nt = bench.run(&format!("gemm_nt {m}x{k}x{n}"), || {
+            linalg::gemm_nt_into(None, std::hint::black_box(&mut out), &a, &bt, m, k, n);
+        });
+        let speedup = s_naive.mean_ms() / s_nn.mean_ms();
+        let speedup_par = s_naive.mean_ms() / s_par.mean_ms();
+        rows.push(vec![
+            label.to_string(),
+            format!("{m}x{k}x{n}"),
+            format!("{:.2}", s_naive.mean_ms()),
+            format!("{:.2}", s_nn.mean_ms()),
+            format!("{speedup:.2}x"),
+            format!("{:.2}", s_par.mean_ms()),
+            format!("{speedup_par:.2}x"),
+            format!("{:.2}", s_tn.mean_ms()),
+            format!("{:.2}", s_nt.mean_ms()),
+        ]);
+        append_json(
+            "gemm",
+            &[
+                ("case", label.to_string()),
+                ("m", m.to_string()),
+                ("k", k.to_string()),
+                ("n", n.to_string()),
+                ("naive_ms", format!("{:.4}", s_naive.mean_ms())),
+                ("gemm_nn_ms", format!("{:.4}", s_nn.mean_ms())),
+                ("speedup_vs_naive", format!("{speedup:.3}")),
+                ("gemm_nn_pool_ms", format!("{:.4}", s_par.mean_ms())),
+                ("pool_workers", workers.to_string()),
+                ("speedup_pool_vs_naive", format!("{speedup_par:.3}")),
+                ("gemm_tn_ms", format!("{:.4}", s_tn.mean_ms())),
+                ("gemm_nt_ms", format!("{:.4}", s_nt.mean_ms())),
+            ],
+        );
+    }
+    print_table(
+        "Blocked/SIMD GEMM core vs pre-refactor naive loop (tensor::linalg)",
+        &[
+            "case",
+            "shape",
+            "naive (ms)",
+            "blocked (ms)",
+            "speedup",
+            "pool (ms)",
+            "pool speedup",
+            "TN (ms)",
+            "NT (ms)",
+        ],
+        &rows,
+    );
+}

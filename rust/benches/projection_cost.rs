@@ -7,7 +7,7 @@ use coap::config::TrainConfig;
 use coap::rng::Rng;
 use coap::runtime::{names, open_backend, Backend};
 use coap::tensor::Tensor;
-use coap::util::bench::{print_table, Bench};
+use coap::util::bench::{append_json, print_table, Bench};
 
 fn main() -> anyhow::Result<()> {
     let rt = open_backend(&TrainConfig::default())?;
@@ -53,6 +53,20 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1}x", s_svd.mean_ms() / s_rec.mean_ms()),
             format!("{:.1}x", s_svd.mean_ms() / s_pup.mean_ms()),
         ]);
+        // Record the trajectory so before/after kernel-layer speedups
+        // are preserved across runs (target/bench-json/).
+        append_json(
+            "projection_cost",
+            &[
+                ("case", format!("{m}x{n} r={r}")),
+                ("backend", rt.label().to_string()),
+                ("galore_svd_ms", format!("{:.4}", s_svd.mean_ms())),
+                ("recalib_ms", format!("{:.4}", s_rec.mean_ms())),
+                ("pupdate_ms", format!("{:.4}", s_pup.mean_ms())),
+                ("svd_over_recalib", format!("{:.3}", s_svd.mean_ms() / s_rec.mean_ms())),
+                ("svd_over_pupdate", format!("{:.3}", s_svd.mean_ms() / s_pup.mean_ms())),
+            ],
+        );
     }
     print_table(
         "Projection refresh cost (paper §3.3: low-cost SVD ~20x cheaper than full SVD)",

@@ -149,7 +149,8 @@ train flags (also JSON-settable via --config file.json):
   --rank-ratio C          r = min(m,n)/C            (default 4)
   --t-update N --lambda K Eqn-6 every N, Eqn-7 every K*N steps
   --precision P           f32|bf16|int8 state storage
-  --threads N             per-layer optimizer-step parallelism
+  --threads N             per-layer optimizer-step + fwd/bwd GEMM parallelism
+                          (bit-identical results for any N)
   --steps N --lr F --wd F --seed S
   --track-ceu true        record the CEU metric (Fig 3)
   --save-checkpoint PATH  write params after training

@@ -16,69 +16,16 @@
 //! in `tests` (and was cross-checked in numpy before transcription).
 
 use crate::runtime::ModelInfo;
-use crate::tensor::Tensor;
+use crate::tensor::{linalg, Tensor};
+use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 
-// ---------------------------------------------------------------------------
-// Flat matmul helpers (row-major)
-// ---------------------------------------------------------------------------
-
-/// a (m, k) @ b (k, n) -> (m, n)
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            let aik = a[i * k + kk];
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += aik * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// a (rows, m)^T @ b (rows, n) -> (m, n)  — the dW = X^T·dY pattern.
-fn matmul_at_b(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for r in 0..rows {
-        let arow = &a[r * m..(r + 1) * m];
-        let brow = &b[r * n..(r + 1) * n];
-        for i in 0..m {
-            let ai = arow[i];
-            if ai == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += ai * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// a (m, k) @ b (n, k)^T -> (m, n)  — the dX = dY·W^T pattern.
-fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for x in 0..k {
-                acc += arow[x] * brow[x];
-            }
-            orow[j] = acc;
-        }
-    }
-    out
-}
+// Every matmul below runs on the shared blocked/SIMD kernel layer
+// (`tensor::linalg`): NN for forward projections, TN for the
+// `dW = Xᵀ·dY` pattern, NT for `dX = dY·Wᵀ`. The optional pool enables
+// row-block parallelism with bit-identical results for any worker
+// count; parameter-gradient GEMMs write straight into the census-shaped
+// grad buffers via the `*_into` variants.
 
 #[inline]
 fn sigmoid(x: f32) -> f32 {
@@ -107,6 +54,7 @@ struct Trunk<'a> {
     base: usize,
     layers: usize,
     d: usize,
+    pool: Option<&'a ThreadPool>,
 }
 
 impl<'a> Trunk<'a> {
@@ -127,13 +75,13 @@ impl<'a> Trunk<'a> {
                     h1[r * d + j] = x[r * d + j] * ln1[j];
                 }
             }
-            let q = matmul(&h1, wq, n, d, d);
-            let k = matmul(&h1, wk, n, d, d);
-            let v = matmul(&h1, wv, n, d, d);
+            let q = linalg::gemm_nn(self.pool, &h1, wq, n, d, d);
+            let k = linalg::gemm_nn(self.pool, &h1, wk, n, d, d);
+            let v = linalg::gemm_nn(self.pool, &h1, wv, n, d, d);
             let tq: Vec<f32> = q.iter().map(|&z| z.tanh()).collect();
             let sk: Vec<f32> = k.iter().map(|&z| sigmoid(z)).collect();
             let a: Vec<f32> = (0..n * d).map(|i| tq[i] * sk[i] * v[i]).collect();
-            let o = matmul(&a, wo, n, d, d);
+            let o = linalg::gemm_nn(self.pool, &a, wo, n, d, d);
             let x2: Vec<f32> = (0..n * d).map(|i| x[i] + o[i]).collect();
             let mut h2 = vec![0.0f32; n * d];
             for r in 0..n {
@@ -141,9 +89,9 @@ impl<'a> Trunk<'a> {
                     h2[r * d + j] = x2[r * d + j] * ln2[j];
                 }
             }
-            let z = matmul(&h2, w1, n, d, 4 * d);
+            let z = linalg::gemm_nn(self.pool, &h2, w1, n, d, 4 * d);
             let u: Vec<f32> = z.iter().map(|&y| y.tanh()).collect();
-            let f = matmul(&u, w2, n, 4 * d, d);
+            let f = linalg::gemm_nn(self.pool, &u, w2, n, 4 * d, d);
             let x3: Vec<f32> = (0..n * d).map(|i| x2[i] + f[i]).collect();
             caches.push(BlockCache { x, h1, tq, sk, v, a, x2, h2, u });
             x = x3;
@@ -168,11 +116,11 @@ impl<'a> Trunk<'a> {
             let gbase = self.base + blk * 8;
 
             // MLP branch: x3 = x2 + tanh(h2 W1) W2
-            let dw2 = matmul_at_b(&c.u, &dx3, n, 4 * d, d);
-            let du = matmul_a_bt(&dx3, w2, n, d, 4 * d);
+            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 7], &c.u, &dx3, n, 4 * d, d);
+            let du = linalg::gemm_nt(self.pool, &dx3, w2, n, d, 4 * d);
             let dz: Vec<f32> = (0..n * 4 * d).map(|i| du[i] * (1.0 - c.u[i] * c.u[i])).collect();
-            let dw1 = matmul_at_b(&c.h2, &dz, n, d, 4 * d);
-            let dh2 = matmul_a_bt(&dz, w1, n, 4 * d, d);
+            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 6], &c.h2, &dz, n, d, 4 * d);
+            let dh2 = linalg::gemm_nt(self.pool, &dz, w1, n, 4 * d, d);
             let mut dln2 = vec![0.0f32; d];
             let mut dx2 = dx3.clone();
             for r in 0..n {
@@ -184,8 +132,8 @@ impl<'a> Trunk<'a> {
             }
 
             // Gated-mix branch: x2 = x + (tq ⊙ sk ⊙ v) Wo
-            let dwo = matmul_at_b(&c.a, &dx2, n, d, d);
-            let da = matmul_a_bt(&dx2, wo, n, d, d);
+            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 4], &c.a, &dx2, n, d, d);
+            let da = linalg::gemm_nt(self.pool, &dx2, wo, n, d, d);
             let mut dq = vec![0.0f32; n * d];
             let mut dk = vec![0.0f32; n * d];
             let mut dv = vec![0.0f32; n * d];
@@ -195,12 +143,12 @@ impl<'a> Trunk<'a> {
                 dk[i] = da[i] * tq * v * sk * (1.0 - sk);
                 dv[i] = da[i] * tq * sk;
             }
-            let dwq = matmul_at_b(&c.h1, &dq, n, d, d);
-            let dwk = matmul_at_b(&c.h1, &dk, n, d, d);
-            let dwv = matmul_at_b(&c.h1, &dv, n, d, d);
-            let mut dh1 = matmul_a_bt(&dq, wq, n, d, d);
-            let dh1k = matmul_a_bt(&dk, wk, n, d, d);
-            let dh1v = matmul_a_bt(&dv, wv, n, d, d);
+            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 1], &c.h1, &dq, n, d, d);
+            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 2], &c.h1, &dk, n, d, d);
+            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 3], &c.h1, &dv, n, d, d);
+            let mut dh1 = linalg::gemm_nt(self.pool, &dq, wq, n, d, d);
+            let dh1k = linalg::gemm_nt(self.pool, &dk, wk, n, d, d);
+            let dh1v = linalg::gemm_nt(self.pool, &dv, wv, n, d, d);
             for i in 0..n * d {
                 dh1[i] += dh1k[i] + dh1v[i];
             }
@@ -214,14 +162,10 @@ impl<'a> Trunk<'a> {
                 }
             }
 
+            // Matrix grads were written in place by the `*_into` GEMMs;
+            // only the layer-norm vectors remain.
             grads[gbase] = dln1;
-            grads[gbase + 1] = dwq;
-            grads[gbase + 2] = dwk;
-            grads[gbase + 3] = dwv;
-            grads[gbase + 4] = dwo;
             grads[gbase + 5] = dln2;
-            grads[gbase + 6] = dw1;
-            grads[gbase + 7] = dw2;
             dx3 = dx;
         }
         dx3
@@ -233,14 +177,22 @@ impl<'a> Trunk<'a> {
 // ---------------------------------------------------------------------------
 
 /// y = x ⊙ lnf; logits = y @ whead (d, c). Returns (logits, y).
-fn head_fwd(x: &[f32], n: usize, d: usize, lnf: &[f32], whead: &[f32], c: usize) -> (Vec<f32>, Vec<f32>) {
+fn head_fwd(
+    x: &[f32],
+    n: usize,
+    d: usize,
+    lnf: &[f32],
+    whead: &[f32],
+    c: usize,
+    pool: Option<&ThreadPool>,
+) -> (Vec<f32>, Vec<f32>) {
     let mut y = vec![0.0f32; n * d];
     for r in 0..n {
         for j in 0..d {
             y[r * d + j] = x[r * d + j] * lnf[j];
         }
     }
-    let logits = matmul(&y, whead, n, d, c);
+    let logits = linalg::gemm_nn(pool, &y, whead, n, d, c);
     (logits, y)
 }
 
@@ -255,9 +207,10 @@ fn head_bwd(
     n: usize,
     d: usize,
     c: usize,
+    pool: Option<&ThreadPool>,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let dwhead = matmul_at_b(y, dlogits, n, d, c);
-    let dy = matmul_a_bt(dlogits, whead, n, c, d);
+    let dwhead = linalg::gemm_tn(pool, y, dlogits, n, d, c);
+    let dy = linalg::gemm_nt(pool, dlogits, whead, n, c, d);
     let mut dlnf = vec![0.0f32; d];
     let mut dx = vec![0.0f32; n * d];
     for r in 0..n {
@@ -416,11 +369,12 @@ fn conv_fwd(
     cout: usize,
     k: usize,
     bias: &[f32],
+    pool: Option<&ThreadPool>,
 ) -> (Vec<f32>, Vec<f32>) {
     let cols = im2col(x, b, cin, h, k);
     let bhw = b * h * h;
     let ckk = cin * k * k;
-    let y2 = matmul_a_bt(&cols, w, bhw, ckk, cout); // (BHH, O)
+    let y2 = linalg::gemm_nt(pool, &cols, w, bhw, ckk, cout); // (BHH, O)
     let mut y = vec![0.0f32; b * cout * h * h];
     for bb in 0..b {
         for o in 0..cout {
@@ -447,6 +401,7 @@ fn conv_bwd(
     h: usize,
     cout: usize,
     k: usize,
+    pool: Option<&ThreadPool>,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let bhw = b * h * h;
     let ckk = cin * k * k;
@@ -463,8 +418,8 @@ fn conv_bwd(
             }
         }
     }
-    let dw = matmul_at_b(&dy2, cols, bhw, cout, ckk); // (O, CKK)
-    let dcols = matmul(&dy2, w, bhw, cout, ckk); // (BHH, CKK)
+    let dw = linalg::gemm_tn(pool, &dy2, cols, bhw, cout, ckk); // (O, CKK)
+    let dcols = linalg::gemm_nn(pool, &dy2, w, bhw, cout, ckk); // (BHH, CKK)
     let dx = col2im(&dcols, b, cin, h, k);
     (dx, dw, dbias)
 }
@@ -515,7 +470,7 @@ struct LmRun {
     grads: Option<Vec<Vec<f32>>>,
 }
 
-fn lm_run(info: &ModelInfo, s: &Split, train: bool) -> LmRun {
+fn lm_run(info: &ModelInfo, s: &Split, train: bool, pool: Option<&ThreadPool>) -> LmRun {
     let d = info.cfg_usize("d");
     let layers = info.cfg_usize("layers");
     let vocab = info.cfg_usize("vocab");
@@ -523,7 +478,7 @@ fn lm_run(info: &ModelInfo, s: &Split, train: bool) -> LmRun {
     let targets = s.data[1].i32s();
     let n = tokens.len();
     let embed = s.params[0].f32s();
-    let trunk = Trunk { params: s.params, base: 1, layers, d };
+    let trunk = Trunk { params: s.params, base: 1, layers, d, pool };
     let lnf_i = 1 + layers * 8;
 
     let mut x = vec![0.0f32; n * d];
@@ -533,7 +488,7 @@ fn lm_run(info: &ModelInfo, s: &Split, train: bool) -> LmRun {
     }
     let (h, caches) = trunk.forward(x, n);
     let (logits, y) =
-        head_fwd(&h, n, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), vocab);
+        head_fwd(&h, n, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), vocab, pool);
     let (loss, dlogits, _) = ce_loss(&logits, n, vocab, targets);
     if !train {
         return LmRun { loss, grads: None };
@@ -548,6 +503,7 @@ fn lm_run(info: &ModelInfo, s: &Split, train: bool) -> LmRun {
         n,
         d,
         vocab,
+        pool,
     );
     grads[lnf_i] = dlnf;
     grads[lnf_i + 1] = dwhead;
@@ -564,7 +520,12 @@ fn lm_run(info: &ModelInfo, s: &Split, train: bool) -> LmRun {
 
 // --- vit --------------------------------------------------------------------
 
-fn vit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Vec<Vec<f32>>>) {
+fn vit_run(
+    info: &ModelInfo,
+    s: &Split,
+    train: bool,
+    pool: Option<&ThreadPool>,
+) -> (f32, usize, Option<Vec<Vec<f32>>>) {
     let d = info.cfg_usize("d");
     let layers = info.cfg_usize("layers");
     let img = info.cfg_usize("img");
@@ -580,7 +541,7 @@ fn vit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Vec<
     let patches = extract_patches(s.data[0].f32s(), b, chans, img, patch);
     let pe = s.params[0].f32s();
     let pos = s.params[1].f32s();
-    let mut x = matmul(&patches, pe, n, pd, d);
+    let mut x = linalg::gemm_nn(pool, &patches, pe, n, pd, d);
     for bb in 0..b {
         for tt in 0..t {
             for j in 0..d {
@@ -588,7 +549,7 @@ fn vit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Vec<
             }
         }
     }
-    let trunk = Trunk { params: s.params, base: 2, layers, d };
+    let trunk = Trunk { params: s.params, base: 2, layers, d, pool };
     let (h, caches) = trunk.forward(x, n);
     // Mean-pool tokens per image.
     let mut pooled = vec![0.0f32; b * d];
@@ -600,8 +561,15 @@ fn vit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Vec<
         }
     }
     let lnf_i = 2 + layers * 8;
-    let (logits, y) =
-        head_fwd(&pooled, b, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), classes);
+    let (logits, y) = head_fwd(
+        &pooled,
+        b,
+        d,
+        s.params[lnf_i].f32s(),
+        s.params[lnf_i + 1].f32s(),
+        classes,
+        pool,
+    );
     let labels = s.data[1].i32s();
     let (loss, dlogits, correct) = ce_loss(&logits, b, classes, labels);
     if !train {
@@ -617,6 +585,7 @@ fn vit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Vec<
         b,
         d,
         classes,
+        pool,
     );
     grads[lnf_i] = dlnf;
     grads[lnf_i + 1] = dwhead;
@@ -629,7 +598,7 @@ fn vit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Vec<
         }
     }
     let dx = trunk.backward(dh, n, &caches, &mut grads);
-    grads[0] = matmul_at_b(&patches, &dx, n, pd, d);
+    linalg::gemm_tn_into(pool, &mut grads[0], &patches, &dx, n, pd, d);
     let dpos = &mut grads[1];
     for bb in 0..b {
         for tt in 0..t {
@@ -643,7 +612,12 @@ fn vit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Vec<
 
 // --- sit --------------------------------------------------------------------
 
-fn sit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, Option<Vec<Vec<f32>>>) {
+fn sit_run(
+    info: &ModelInfo,
+    s: &Split,
+    train: bool,
+    pool: Option<&ThreadPool>,
+) -> (f32, Option<Vec<Vec<f32>>>) {
     let d = info.cfg_usize("d");
     let layers = info.cfg_usize("layers");
     let img = info.cfg_usize("img");
@@ -675,7 +649,7 @@ fn sit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, Option<Vec<Vec<f32
     let pe = s.params[0].f32s();
     let pos = s.params[1].f32s();
     let time = s.params[2].f32s();
-    let mut x = matmul(&patches, pe, n, pd, d);
+    let mut x = linalg::gemm_nn(pool, &patches, pe, n, pd, d);
     for bb in 0..b {
         let tv = tvals[bb];
         for tt in 0..t {
@@ -684,11 +658,11 @@ fn sit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, Option<Vec<Vec<f32
             }
         }
     }
-    let trunk = Trunk { params: s.params, base: 3, layers, d };
+    let trunk = Trunk { params: s.params, base: 3, layers, d, pool };
     let (h, caches) = trunk.forward(x, n);
     let lnf_i = 3 + layers * 8;
     let (out, y) =
-        head_fwd(&h, n, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), pd);
+        head_fwd(&h, n, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), pd, pool);
     let (loss, dout) = mse_loss(&out, &vpatch);
     if !train {
         return (loss, None);
@@ -703,11 +677,12 @@ fn sit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, Option<Vec<Vec<f32
         n,
         d,
         pd,
+        pool,
     );
     grads[lnf_i] = dlnf;
     grads[lnf_i + 1] = dwhead;
     let dx = trunk.backward(dh, n, &caches, &mut grads);
-    grads[0] = matmul_at_b(&patches, &dx, n, pd, d);
+    linalg::gemm_tn_into(pool, &mut grads[0], &patches, &dx, n, pd, d);
     {
         let dpos = &mut grads[1];
         for bb in 0..b {
@@ -734,7 +709,12 @@ fn sit_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, Option<Vec<Vec<f32
 
 // --- llava ------------------------------------------------------------------
 
-fn llava_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Vec<Vec<f32>>>) {
+fn llava_run(
+    info: &ModelInfo,
+    s: &Split,
+    train: bool,
+    pool: Option<&ThreadPool>,
+) -> (f32, usize, Option<Vec<Vec<f32>>>) {
     let d = info.cfg_usize("d");
     let layers = info.cfg_usize("layers");
     let feat = info.cfg_usize("feat");
@@ -748,7 +728,7 @@ fn llava_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Ve
     let labels = s.data[2].i32s();
     let projector = s.params[0].f32s();
     let embed = s.params[1].f32s();
-    let mut x = matmul(feats, projector, b, feat, d); // image token
+    let mut x = linalg::gemm_nn(pool, feats, projector, b, feat, d); // image token
     for bb in 0..b {
         for ss in 0..seq {
             let ti = (tokens[bb * seq + ss].max(0) as usize).min(vocab - 1);
@@ -757,11 +737,11 @@ fn llava_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Ve
             }
         }
     }
-    let trunk = Trunk { params: s.params, base: 2, layers, d };
+    let trunk = Trunk { params: s.params, base: 2, layers, d, pool };
     let (h, caches) = trunk.forward(x, b);
     let lnf_i = 2 + layers * 8;
     let (logits, y) =
-        head_fwd(&h, b, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), answers);
+        head_fwd(&h, b, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), answers, pool);
     let (loss, dlogits, correct) = ce_loss(&logits, b, answers, labels);
     if !train {
         return (loss, correct, None);
@@ -776,11 +756,12 @@ fn llava_run(info: &ModelInfo, s: &Split, train: bool) -> (f32, usize, Option<Ve
         b,
         d,
         answers,
+        pool,
     );
     grads[lnf_i] = dlnf;
     grads[lnf_i + 1] = dwhead;
     let dx = trunk.backward(dh, b, &caches, &mut grads);
-    grads[0] = matmul_at_b(feats, &dx, b, feat, d);
+    linalg::gemm_tn_into(pool, &mut grads[0], feats, &dx, b, feat, d);
     let dembed = &mut grads[1];
     for bb in 0..b {
         for ss in 0..seq {
@@ -799,6 +780,7 @@ fn cnn_run(
     info: &ModelInfo,
     s: &Split,
     train: bool,
+    pool: Option<&ThreadPool>,
 ) -> (f32, Option<Vec<f32>>, Option<Vec<Vec<f32>>>) {
     let img = info.cfg_usize("img");
     let chans = info.cfg_usize("chans");
@@ -832,9 +814,9 @@ fn cnn_run(
         let cw1 = wp(s, out_w + 4);
         let cb1 = wp(s, out_w + 5);
         let cmap = s.data[2].f32s();
-        let (c0p, c0cols) = conv_fwd(cmap, b, 1, img, cw0, widths[0], k, cb0);
+        let (c0p, c0cols) = conv_fwd(cmap, b, 1, img, cw0, widths[0], k, cb0, pool);
         let c0: Vec<f32> = c0p.iter().map(|&z| z.tanh()).collect();
-        let (cm, c1cols) = conv_fwd(&c0, b, widths[0], img, cw1, widths[mid_idx], k, cb1);
+        let (cm, c1cols) = conv_fwd(&c0, b, widths[0], img, cw1, widths[mid_idx], k, cb1, pool);
         ctrl_cache = Some((c0cols, c0, c1cols, c0p));
         cmid = Some(cm);
     }
@@ -844,7 +826,8 @@ fn cnn_run(
     let mut cin = chans;
     let mut caches: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(nw); // (cols, post-act)
     for (li, &wout) in widths.iter().enumerate() {
-        let (mut z, cols) = conv_fwd(&h, b, cin, img, wp(s, 2 * li), wout, k, wp(s, 2 * li + 1));
+        let (mut z, cols) =
+            conv_fwd(&h, b, cin, img, wp(s, 2 * li), wout, k, wp(s, 2 * li + 1), pool);
         if control && li == mid_idx {
             for (zi, ci) in z.iter_mut().zip(cmid.as_ref().unwrap()) {
                 *zi += ci;
@@ -855,7 +838,8 @@ fn cnn_run(
         h = act;
         cin = wout;
     }
-    let (out, out_cols) = conv_fwd(&h, b, cin, img, wp(s, out_w), chans, k, wp(s, out_w + 1));
+    let (out, out_cols) =
+        conv_fwd(&h, b, cin, img, wp(s, out_w), chans, k, wp(s, out_w + 1), pool);
     let (loss, dout) = mse_loss(&out, clean);
     if !train {
         return (loss, Some(out), None);
@@ -863,7 +847,7 @@ fn cnn_run(
 
     let mut grads = zero_grads(info);
     let (mut dh, dwo, dbo) =
-        conv_bwd(&dout, &out_cols, wp(s, out_w), b, cin, img, chans, k);
+        conv_bwd(&dout, &out_cols, wp(s, out_w), b, cin, img, chans, k, pool);
     grads[out_w] = dwo;
     grads[out_w + 1] = dbo;
     let mut dcmid: Option<Vec<f32>> = None;
@@ -875,7 +859,7 @@ fn cnn_run(
         if control && li == mid_idx {
             dcmid = Some(dz.clone());
         }
-        let (dx, dw, db) = conv_bwd(&dz, cols, wp(s, 2 * li), b, lin, img, widths[li], k);
+        let (dx, dw, db) = conv_bwd(&dz, cols, wp(s, 2 * li), b, lin, img, widths[li], k, pool);
         grads[2 * li] = dw;
         grads[2 * li + 1] = db;
         dh = dx;
@@ -883,12 +867,12 @@ fn cnn_run(
     if let (Some(dcm), Some((c0cols, c0, c1cols, _c0p))) = (dcmid, ctrl_cache) {
         let cw1 = wp(s, out_w + 4);
         let (dc0, dcw1, dcb1) =
-            conv_bwd(&dcm, &c1cols, cw1, b, widths[0], img, widths[mid_idx], k);
+            conv_bwd(&dcm, &c1cols, cw1, b, widths[0], img, widths[mid_idx], k, pool);
         grads[out_w + 4] = dcw1;
         grads[out_w + 5] = dcb1;
         let dc0p: Vec<f32> = dc0.iter().zip(&c0).map(|(&g, &a)| g * (1.0 - a * a)).collect();
         let (_, dcw0, dcb0) =
-            conv_bwd(&dc0p, &c0cols, wp(s, out_w + 2), b, 1, img, widths[0], k);
+            conv_bwd(&dc0p, &c0cols, wp(s, out_w + 2), b, 1, img, widths[0], k, pool);
         grads[out_w + 2] = dcw0;
         grads[out_w + 3] = dcb0;
     }
@@ -900,27 +884,33 @@ fn cnn_run(
 // ---------------------------------------------------------------------------
 
 /// `train_step__<model>`: [loss, grads... (census order/shapes)].
-pub fn train_step(info: &ModelInfo, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+/// `pool` enables row-block GEMM parallelism (bit-identical results for
+/// any worker count); `None` runs serial.
+pub fn train_step(
+    info: &ModelInfo,
+    inputs: &[&Tensor],
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<Tensor>> {
     let s = split_inputs(info, inputs)?;
     let (loss, grads) = match info.family.as_str() {
         "lm" => {
-            let r = lm_run(info, &s, true);
+            let r = lm_run(info, &s, true, pool);
             (r.loss, r.grads.unwrap())
         }
         "vit" => {
-            let (loss, _, g) = vit_run(info, &s, true);
+            let (loss, _, g) = vit_run(info, &s, true, pool);
             (loss, g.unwrap())
         }
         "sit" => {
-            let (loss, g) = sit_run(info, &s, true);
+            let (loss, g) = sit_run(info, &s, true, pool);
             (loss, g.unwrap())
         }
         "llava" => {
-            let (loss, _, g) = llava_run(info, &s, true);
+            let (loss, _, g) = llava_run(info, &s, true, pool);
             (loss, g.unwrap())
         }
         "cnn" => {
-            let (loss, _, g) = cnn_run(info, &s, true);
+            let (loss, _, g) = cnn_run(info, &s, true, pool);
             (loss, g.unwrap())
         }
         f => bail!("native backend: unknown model family '{f}'"),
@@ -929,24 +919,28 @@ pub fn train_step(info: &ModelInfo, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
 }
 
 /// `eval_step__<model>`: [loss, ...] per `info.eval_outputs`.
-pub fn eval_step(info: &ModelInfo, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+pub fn eval_step(
+    info: &ModelInfo,
+    inputs: &[&Tensor],
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<Tensor>> {
     let s = split_inputs(info, inputs)?;
     let mut out = Vec::new();
     match info.family.as_str() {
-        "lm" => out.push(Tensor::scalar_f32(lm_run(info, &s, false).loss)),
+        "lm" => out.push(Tensor::scalar_f32(lm_run(info, &s, false, pool).loss)),
         "vit" => {
-            let (loss, correct, _) = vit_run(info, &s, false);
+            let (loss, correct, _) = vit_run(info, &s, false, pool);
             out.push(Tensor::scalar_f32(loss));
             out.push(Tensor::scalar_f32(correct as f32));
         }
-        "sit" => out.push(Tensor::scalar_f32(sit_run(info, &s, false).0)),
+        "sit" => out.push(Tensor::scalar_f32(sit_run(info, &s, false, pool).0)),
         "llava" => {
-            let (loss, correct, _) = llava_run(info, &s, false);
+            let (loss, correct, _) = llava_run(info, &s, false, pool);
             out.push(Tensor::scalar_f32(loss));
             out.push(Tensor::scalar_f32(correct as f32));
         }
         "cnn" => {
-            let (loss, pred, _) = cnn_run(info, &s, false);
+            let (loss, pred, _) = cnn_run(info, &s, false, pool);
             out.push(Tensor::scalar_f32(loss));
             if info.eval_outputs.iter().any(|o| o == "pred") {
                 let img = info.cfg_usize("img");
@@ -1001,7 +995,7 @@ mod tests {
 
     fn loss_of(info: &ModelInfo, inputs: &[Tensor]) -> f32 {
         let refs: Vec<&Tensor> = inputs.iter().collect();
-        train_step(info, &refs).unwrap()[0].scalar()
+        train_step(info, &refs, None).unwrap()[0].scalar()
     }
 
     /// Finite-difference check of a few entries of a few params — the
@@ -1010,7 +1004,7 @@ mod tests {
         let info = zoo::models().into_iter().find(|m| m.name == model).unwrap();
         let mut inputs = build_inputs(&info, 7);
         let refs: Vec<&Tensor> = inputs.iter().collect();
-        let out = train_step(&info, &refs).unwrap();
+        let out = train_step(&info, &refs, None).unwrap();
         assert_eq!(out.len(), 1 + info.params.len());
         let analytic: Vec<Tensor> = out[1..].to_vec();
         let mut rng = Rng::new(99);
@@ -1067,13 +1061,35 @@ mod tests {
         gradcheck("ctrl_micro", 0.08);
     }
 
+    /// The kernel layer's row-block fan-out must not change a single
+    /// bit of the loss or any gradient, for any worker count. Uses
+    /// lm_tiny (512 tokens, d=128): its trunk GEMMs are well above
+    /// `linalg`'s parallel-dispatch threshold, so the pool path really
+    /// runs (lm_micro's GEMMs would all fall back to serial).
+    #[test]
+    fn train_step_is_bit_identical_under_gemm_parallelism() {
+        use crate::util::threadpool::ThreadPool;
+        let info = zoo::models().into_iter().find(|m| m.name == "lm_tiny").unwrap();
+        let inputs = build_inputs(&info, 5);
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let serial = train_step(&info, &refs, None).unwrap();
+        for workers in [2usize, 8] {
+            let pool = ThreadPool::new(workers);
+            let par = train_step(&info, &refs, Some(&pool)).unwrap();
+            assert_eq!(serial.len(), par.len());
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.f32s(), b.f32s(), "drift with {workers} workers");
+            }
+        }
+    }
+
     #[test]
     fn eval_outputs_match_contract() {
         for name in ["vit_micro", "ctrl_micro", "lm_micro"] {
             let info = zoo::models().into_iter().find(|m| m.name == name).unwrap();
             let inputs = build_inputs(&info, 3);
             let refs: Vec<&Tensor> = inputs.iter().collect();
-            let out = eval_step(&info, &refs).unwrap();
+            let out = eval_step(&info, &refs, None).unwrap();
             assert_eq!(out.len(), info.eval_outputs.len(), "{name}");
             assert!(out[0].scalar().is_finite());
         }

@@ -397,15 +397,26 @@ fn step_slot(
                             States::Adam { m, .. } => m.loaded(),
                             States::Factor { m, .. } => m.loaded(),
                         };
-                        let po_t = po.clone().unwrap();
-                        let pi_t = pi.clone().unwrap();
+                        // Sequenced so the O-side refresh sees the old
+                        // PI and the I-side sees the fresh PO — no
+                        // projection clones needed.
                         let name_o = names::conv("conv_pupdate_o", shape, *ro, *ri);
-                        let out = rt.exec(&name_o, &[&po_t, g4, &m_proj, &pi_t])?;
-                        *po = Some(out.into_iter().next().unwrap());
+                        let new_po = rt
+                            .exec(
+                                &name_o,
+                                &[po.as_ref().unwrap(), g4, &m_proj, pi.as_ref().unwrap()],
+                            )?
+                            .into_iter()
+                            .next()
+                            .unwrap();
                         let name_i = names::conv("conv_pupdate_i", shape, *ro, *ri);
-                        let out =
-                            rt.exec(&name_i, &[&pi_t, g4, &m_proj, po.as_ref().unwrap()])?;
-                        *pi = Some(out.into_iter().next().unwrap());
+                        let new_pi = rt
+                            .exec(&name_i, &[pi.as_ref().unwrap(), g4, &m_proj, &new_po])?
+                            .into_iter()
+                            .next()
+                            .unwrap();
+                        *po = Some(new_po);
+                        *pi = Some(new_pi);
                     }
                 }
             }
@@ -420,8 +431,10 @@ fn step_slot(
                     let (ml, vl) = (m.loaded(), v.loaded());
                     let out = rt.exec(
                         &name,
-                        &[&*param, g4, &ml, &vl, pot, pit, &ctx.b1t, &ctx.b2t, &ctx.lr_t,
-                          &ctx.wd_t],
+                        &[
+                            &*param, g4, &ml, &vl, pot, pit, &ctx.b1t, &ctx.b2t, &ctx.lr_t,
+                            &ctx.wd_t,
+                        ],
                     )?;
                     drop((ml, vl));
                     let mut it = out.into_iter();
@@ -435,8 +448,10 @@ fn step_slot(
                     let (ml, vl) = (m.loaded(), v.loaded());
                     let out = rt.exec(
                         &name,
-                        &[&*param, g4, &ml, &vl, pot, pit, ps_t, &ctx.b1t, &ctx.b2t,
-                          &ctx.lr_t, &ctx.wd_t],
+                        &[
+                            &*param, g4, &ml, &vl, pot, pit, ps_t, &ctx.b1t, &ctx.b2t,
+                            &ctx.lr_t, &ctx.wd_t,
+                        ],
                     )?;
                     drop((ml, vl));
                     let mut it = out.into_iter();

@@ -7,7 +7,7 @@
 //!    PJRT round trip costs more than the math);
 //! 3. a mock runtime for unit tests that must not depend on artifacts.
 
-use crate::tensor::Tensor;
+use crate::tensor::{linalg, Tensor};
 
 pub const BETA1: f32 = 0.9;
 pub const BETA2: f32 = 0.999;
@@ -113,39 +113,59 @@ pub fn adafactor_step(
 // ---------------------------------------------------------------------------
 
 /// Two-pass modified Gram-Schmidt reduced QR: returns Q (m, r).
+///
+/// Works on a column-contiguous copy so the projections are plain
+/// `linalg::dot`/`linalg::axpy` sweeps over contiguous vectors.
 pub fn mgs_qr(x: &Tensor) -> Tensor {
     let (m, r) = (x.dims()[0], x.dims()[1]);
-    let xs = x.f32s();
-    let mut q = vec![0.0f32; m * r];
+    // Row j of `xt`/`qt` is column j of x/Q.
+    let xt = linalg::transpose(x.f32s(), m, r);
+    let mut qt = vec![0.0f32; r * m];
     for j in 0..r {
-        let mut v: Vec<f32> = (0..m).map(|i| xs[i * r + j]).collect();
+        let mut v = xt[j * m..(j + 1) * m].to_vec();
         for _pass in 0..2 {
             for k in 0..j {
-                let dot: f32 = (0..m).map(|i| q[i * r + k] * v[i]).sum();
-                for i in 0..m {
-                    v[i] -= dot * q[i * r + k];
-                }
+                let qk = &qt[k * m..(k + 1) * m];
+                let proj = linalg::dot(qk, &v);
+                linalg::axpy(&mut v, -proj, qk);
             }
         }
-        let norm = v.iter().map(|a| a * a).sum::<f32>().sqrt() + 1e-12;
-        for i in 0..m {
-            q[i * r + j] = v[i] / norm;
+        let norm = linalg::dot(&v, &v).sqrt() + 1e-12;
+        for (qi, vi) in qt[j * m..(j + 1) * m].iter_mut().zip(&v) {
+            *qi = vi / norm;
         }
     }
-    Tensor::from_f32(&[m, r], q)
+    Tensor::from_f32(&[m, r], linalg::transpose(&qt, r, m))
+}
+
+/// Disjoint mutable rows `a` and `b` (each `len` wide) of a row-major
+/// buffer — the rotation targets of the Jacobi sweep.
+fn row_pair(buf: &mut [f32], len: usize, a: usize, b: usize) -> (&mut [f32], &mut [f32]) {
+    debug_assert_ne!(a, b);
+    if a < b {
+        let (lo, hi) = buf.split_at_mut(b * len);
+        (&mut lo[a * len..(a + 1) * len], &mut hi[..len])
+    } else {
+        let (lo, hi) = buf.split_at_mut(a * len);
+        (&mut hi[..len], &mut lo[b * len..(b + 1) * len])
+    }
 }
 
 /// One-sided Jacobi column orthogonalization (round-robin pairing).
 /// Returns (X·V, V if requested). Mirrors `linalg.onesided_jacobi`.
+///
+/// Works column-contiguous (row j of the working set is column j of X)
+/// so the moment reductions are `linalg::dot_f64` over dense slices and
+/// each rotation is one `linalg::rot` over a pair of them.
 pub fn onesided_jacobi(x: &Tensor, sweeps: usize, compute_v: bool) -> (Tensor, Option<Tensor>) {
     let (m, n0) = (x.dims()[0], x.dims()[1]);
     let padded = n0 % 2 == 1;
     let n = if padded { n0 + 1 } else { n0 };
-    let mut xs = vec![0.0f32; m * n];
-    for i in 0..m {
-        xs[i * n..i * n + n0].copy_from_slice(&x.f32s()[i * n0..(i + 1) * n0]);
-    }
-    let mut vs = if compute_v {
+    // Column-major working set; the padding column stays all-zero and is
+    // skipped by the gamma cutoff exactly like the row-major original.
+    let mut xt = vec![0.0f32; n * m];
+    linalg::transpose_into(&mut xt[..n0 * m], x.f32s(), m, n0);
+    let mut vt = if compute_v {
         let mut v = vec![0.0f32; n * n];
         for i in 0..n {
             v[i * n + i] = 1.0;
@@ -161,14 +181,11 @@ pub fn onesided_jacobi(x: &Tensor, sweeps: usize, compute_v: bool) -> (Tensor, O
             for i in 0..half {
                 let a = if i == 0 { nm1 } else { (k + i) % nm1 };
                 let b = if i == 0 { k % nm1 } else { (k + nm1 - i) % nm1 };
-                let (mut alpha, mut beta, mut gamma) = (0.0f64, 0.0f64, 0.0f64);
-                for row in 0..m {
-                    let xa = xs[row * n + a] as f64;
-                    let xb = xs[row * n + b] as f64;
-                    alpha += xa * xa;
-                    beta += xb * xb;
-                    gamma += xa * xb;
-                }
+                let (alpha, beta, gamma) = {
+                    let ca = &xt[a * m..(a + 1) * m];
+                    let cb = &xt[b * m..(b + 1) * m];
+                    (linalg::dot_f64(ca, ca), linalg::dot_f64(cb, cb), linalg::dot_f64(ca, cb))
+                };
                 if gamma.abs() <= 1e-20 {
                     continue;
                 }
@@ -177,43 +194,27 @@ pub fn onesided_jacobi(x: &Tensor, sweeps: usize, compute_v: bool) -> (Tensor, O
                 let t = sz / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
                 let c = 1.0 / (1.0 + t * t).sqrt();
                 let s = c * t;
-                for row in 0..m {
-                    let xa = xs[row * n + a];
-                    let xb = xs[row * n + b];
-                    xs[row * n + a] = (c as f32) * xa - (s as f32) * xb;
-                    xs[row * n + b] = (s as f32) * xa + (c as f32) * xb;
-                }
-                if let Some(v) = vs.as_mut() {
-                    for row in 0..n {
-                        let va = v[row * n + a];
-                        let vb = v[row * n + b];
-                        v[row * n + a] = (c as f32) * va - (s as f32) * vb;
-                        v[row * n + b] = (s as f32) * va + (c as f32) * vb;
-                    }
+                let (ca, cb) = row_pair(&mut xt, m, a, b);
+                linalg::rot(ca, cb, c as f32, s as f32);
+                if let Some(v) = vt.as_mut() {
+                    let (va, vb) = row_pair(v, n, a, b);
+                    linalg::rot(va, vb, c as f32, s as f32);
                 }
             }
         }
     }
-    // Strip padding.
-    let y = if padded {
-        let mut out = vec![0.0f32; m * n0];
-        for i in 0..m {
-            out[i * n0..(i + 1) * n0].copy_from_slice(&xs[i * n..i * n + n0]);
-        }
-        Tensor::from_f32(&[m, n0], out)
-    } else {
-        Tensor::from_f32(&[m, n], xs)
-    };
-    let v = vs.map(|v| {
-        if padded {
-            let mut out = vec![0.0f32; n0 * n0];
+    // Back to row-major, dropping the padding column.
+    let mut y = vec![0.0f32; m * n0];
+    linalg::transpose_into(&mut y, &xt[..n0 * m], n0, m);
+    let y = Tensor::from_f32(&[m, n0], y);
+    let v = vt.map(|v| {
+        let mut out = vec![0.0f32; n0 * n0];
+        for j in 0..n0 {
             for i in 0..n0 {
-                out[i * n0..(i + 1) * n0].copy_from_slice(&v[i * n..i * n + n0]);
+                out[i * n0 + j] = v[j * n + i];
             }
-            Tensor::from_f32(&[n0, n0], out)
-        } else {
-            Tensor::from_f32(&[n, n], v)
         }
+        Tensor::from_f32(&[n0, n0], out)
     });
     (y, v)
 }
@@ -258,9 +259,12 @@ pub fn svd_topk(g: &Tensor, rank: usize, sweeps: usize) -> (Tensor, Vec<f32>) {
 
 /// Eqn-7 low-cost recalibration oracle.
 pub fn lowcost_recalib(g: &Tensor, p_prev: &Tensor, sweeps: usize) -> Tensor {
-    let q = mgs_qr(&g.matmul(p_prev)); // (m, r)
-    let b = q.transposed2d().matmul(g); // (r, n)
-    let (y, _) = onesided_jacobi(&b.transposed2d(), sweeps, false); // (n, r)
+    let (m, n) = (g.dims()[0], g.dims()[1]);
+    let r = p_prev.dims()[1];
+    let gp = linalg::gemm_nn(None, g.f32s(), p_prev.f32s(), m, n, r);
+    let q = mgs_qr(&Tensor::from_f32(&[m, r], gp)); // (m, r)
+    let bt = linalg::gemm_tn(None, g.f32s(), q.f32s(), m, n, r); // gᵀ·q = (qᵀ·g)ᵀ (n, r)
+    let (y, _) = onesided_jacobi(&Tensor::from_f32(&[n, r], bt), sweeps, false); // (n, r)
     let (sorted, norms, _) = sort_cols_desc(&y, None);
     let (n, r) = (sorted.dims()[0], sorted.dims()[1]);
     let ss = sorted.f32s();
@@ -301,34 +305,36 @@ pub fn eqn6_objective(p: &Tensor, g: &Tensor, m_proj: &Tensor) -> f64 {
 }
 
 /// Eqn-6 SGD P-update oracle (mirrors linalg.pupdate_sgd).
+///
+/// All contractions run on the shared GEMM core's TN/NT variants, so no
+/// explicit transposes (or their copies) are materialized per iteration.
 pub fn pupdate_sgd(p: &Tensor, g: &Tensor, m_proj: &Tensor, iters: usize, lr: f32) -> Tensor {
     let (m, n) = (g.dims()[0], g.dims()[1]);
-    let mut p = p.clone();
+    let r = p.dims()[1];
+    let gs = g.f32s();
+    let mp = m_proj.f32s(); // (m, r)
+    let mut pn = p.f32s().to_vec(); // (n, r)
     for _ in 0..iters {
-        let gp = g.matmul(&p); // (m, r)
-        let ghat = gp.matmul(&p.transposed2d()); // (m, n)
-        let gs = g.f32s();
-        let hs = ghat.f32s();
+        let gp = linalg::gemm_nn(None, gs, &pn, m, n, r); // G·P (m, r)
+        let ghat = linalg::gemm_nt(None, &gp, &pn, m, r, n); // G·P·Pᵀ (m, n)
         let mse: f64 = gs
             .iter()
-            .zip(hs)
+            .zip(&ghat)
             .map(|(a, b)| ((b - a) as f64).powi(2))
             .sum::<f64>()
             / (m * n) as f64;
         // dMSE = 2/(mn) (Ghat^T G P - 2 G^T G P + G^T Ghat P)
-        let gt = g.transposed2d();
-        let ghat_t = ghat.transposed2d();
-        let term1 = ghat_t.matmul(&gp);
-        let term2 = gt.matmul(&gp);
-        let term3 = gt.matmul(&ghat.matmul(&p));
+        let term1 = linalg::gemm_tn(None, &ghat, &gp, m, n, r);
+        let term2 = linalg::gemm_tn(None, gs, &gp, m, n, r);
+        let ghp = linalg::gemm_nn(None, &ghat, &pn, m, n, r); // Ghat·P (m, r)
+        let term3 = linalg::gemm_tn(None, gs, &ghp, m, n, r);
         // CosSim pieces (row-wise)
-        let mhat = m_proj.matmul(&p.transposed2d()); // (m, n)
-        let ms = mhat.f32s();
+        let mhat = linalg::gemm_nt(None, mp, &pn, m, r, n); // M·Pᵀ (m, n)
         let mut a = vec![0.0f32; m * n];
         let mut cos_sum = 0.0f64;
         const CEPS: f32 = 1e-8; // matches kernels/ref.py COS_EPS
         for i in 0..m {
-            let rm = &ms[i * n..(i + 1) * n];
+            let rm = &mhat[i * n..(i + 1) * n];
             let rg = &gs[i * n..(i + 1) * n];
             let dot: f32 = rm.iter().zip(rg).map(|(x, y)| x * y).sum();
             let nm = rm.iter().map(|x| x * x).sum::<f32>().sqrt();
@@ -340,23 +346,15 @@ pub fn pupdate_sgd(p: &Tensor, g: &Tensor, m_proj: &Tensor, iters: usize, lr: f3
             }
         }
         let cos = cos_sum / m as f64;
-        let a_t = Tensor::from_f32(&[m, n], a).transposed2d();
-        let dcos = a_t.matmul(m_proj); // (n, r)
+        let dcos = linalg::gemm_tn(None, &a, mp, m, n, r); // Aᵀ·M (n, r)
         let scale_mse = 2.0 / (m * n) as f32;
-        let r = p.dims()[1];
-        let mut pn = p.f32s().to_vec();
-        let t1 = term1.f32s();
-        let t2 = term2.f32s();
-        let t3 = term3.f32s();
-        let dc = dcos.f32s();
         for i in 0..n * r {
-            let dmse = scale_mse * (t1[i] - 2.0 * t2[i] + t3[i]);
-            let grad = dmse * (1.0 - cos as f32) - dc[i] / m as f32 * mse as f32;
+            let dmse = scale_mse * (term1[i] - 2.0 * term2[i] + term3[i]);
+            let grad = dmse * (1.0 - cos as f32) - dcos[i] / m as f32 * mse as f32;
             pn[i] -= lr * grad;
         }
-        p = Tensor::from_f32(&[n, r], pn);
     }
-    p
+    Tensor::from_f32(&[n, r], pn)
 }
 
 // ---------------------------------------------------------------------------
@@ -373,63 +371,15 @@ pub const PUPDATE_ITERS: usize = 2;
 pub const PUPDATE_LR: f32 = 0.1;
 pub const SVD_SWEEPS: usize = 8;
 
-/// Row-major transpose of an (m, n) slice.
-pub fn transpose_flat(x: &[f32], m: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            out[j * m + i] = x[i * n + j];
-        }
-    }
-    out
-}
-
 /// Normalized (GaLore side rule) view of the gradient: borrowed when
 /// already (max, min)-oriented, transposed copy otherwise — no clone on
 /// the common no-transpose hot path.
 fn normalize(g: &[f32], rows: usize, cols: usize) -> (std::borrow::Cow<'_, [f32]>, bool) {
     if rows < cols {
-        (std::borrow::Cow::Owned(transpose_flat(g, rows, cols)), true)
+        (std::borrow::Cow::Owned(linalg::transpose(g, rows, cols)), true)
     } else {
         (std::borrow::Cow::Borrowed(g), false)
     }
-}
-
-/// a (m, k) @ b (k, n) -> (m, n), on raw slices (hot-path helper).
-fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for kk in 0..k {
-            let aik = a[i * k + kk];
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += aik * brow[j];
-            }
-        }
-    }
-    out
-}
-
-/// a (m, k) @ b (n, k)^T -> (m, n), on raw slices (the delta·P^T pattern).
-fn mm_abt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for x in 0..k {
-                acc += arow[x] * brow[x];
-            }
-            orow[j] = acc;
-        }
-    }
-    out
 }
 
 fn apply_update(w: &[f32], dw: &[f32], lr: f32, wd: f32) -> (Vec<f32>, f32) {
@@ -463,12 +413,12 @@ pub fn coap_adam_step_mat(
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
     let (mb, nb) = (rows.max(cols), rows.min(cols));
     let (gn, transpose) = normalize(g, rows, cols);
-    let g_proj = mm(&gn, p, mb, nb, rank); // (mb, r)
+    let g_proj = linalg::gemm_nn(None, &gn, p, mb, nb, rank); // (mb, r)
     let mut m_new = m_st.to_vec();
     let mut v_new = v_st.to_vec();
     let delta = adam_update(&mut m_new, &mut v_new, &g_proj, b1t, b2t);
-    let dw_n = mm_abt(&delta, p, mb, rank, nb); // (mb, nb)
-    let dw = if transpose { transpose_flat(&dw_n, mb, nb) } else { dw_n };
+    let dw_n = linalg::gemm_nt(None, &delta, p, mb, rank, nb); // delta·Pᵀ (mb, nb)
+    let dw = if transpose { linalg::transpose(&dw_n, mb, nb) } else { dw_n };
     let (w_new, ceu) = apply_update(w, &dw, lr, wd);
     (w_new, m_new, v_new, ceu)
 }
@@ -492,13 +442,13 @@ pub fn coap_adafactor_step_mat(
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
     let (mb, nb) = (rows.max(cols), rows.min(cols));
     let (gn, transpose) = normalize(g, rows, cols);
-    let g_proj = mm(&gn, p, mb, nb, rank); // (mb, r)
+    let g_proj = linalg::gemm_nn(None, &gn, p, mb, nb, rank); // (mb, r)
     let mut m_new = m_st.to_vec();
     let mut r_new = r_st.to_vec();
     let mut c_new = c_st.to_vec();
     let delta = adafactor_delta(&mut m_new, &mut r_new, &mut c_new, &g_proj, mb, rank, t);
-    let dw_n = mm_abt(&delta, p, mb, rank, nb); // (mb, nb)
-    let dw = if transpose { transpose_flat(&dw_n, mb, nb) } else { dw_n };
+    let dw_n = linalg::gemm_nt(None, &delta, p, mb, rank, nb); // delta·Pᵀ (mb, nb)
+    let dw = if transpose { linalg::transpose(&dw_n, mb, nb) } else { dw_n };
     let (w_new, ceu) = apply_update(w, &dw, lr, 0.0);
     (w_new, m_new, r_new, c_new, ceu)
 }
@@ -563,26 +513,22 @@ pub fn lora_adam_step_mat(
     b2t: f32,
     lr: f32,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, f32) {
-    let g_t = Tensor::from_f32(&[rows, cols], g.to_vec());
-    let a_t = Tensor::from_f32(&[rank, cols], a.to_vec());
-    let b_t = Tensor::from_f32(&[rows, rank], b.to_vec());
-    let da = b_t.transposed2d().matmul(&g_t); // (r, n)
-    let db = g_t.matmul(&a_t.transposed2d()); // (m, r)
+    let da = linalg::gemm_tn(None, b, g, rows, rank, cols); // Bᵀ·G (r, n)
+    let db = linalg::gemm_nt(None, g, a, rows, cols, rank); // G·Aᵀ (m, r)
     let mut ma_new = ma.to_vec();
     let mut va_new = va.to_vec();
-    let delta_a = adam_update(&mut ma_new, &mut va_new, da.f32s(), b1t, b2t);
+    let delta_a = adam_update(&mut ma_new, &mut va_new, &da, b1t, b2t);
     let mut mb_new = mb_st.to_vec();
     let mut vb_new = vb_st.to_vec();
-    let delta_b = adam_update(&mut mb_new, &mut vb_new, db.f32s(), b1t, b2t);
+    let delta_b = adam_update(&mut mb_new, &mut vb_new, &db, b1t, b2t);
     let a_new: Vec<f32> = a.iter().zip(&delta_a).map(|(x, d)| x - lr * d).collect();
     let b_new: Vec<f32> = b.iter().zip(&delta_b).map(|(x, d)| x - lr * d).collect();
-    let ba_new = Tensor::from_f32(&[rows, rank], b_new.clone())
-        .matmul(&Tensor::from_f32(&[rank, cols], a_new.clone()));
-    let ba_old = b_t.matmul(&a_t);
+    let ba_new = linalg::gemm_nn(None, &b_new, &a_new, rows, rank, cols);
+    let ba_old = linalg::gemm_nn(None, b, a, rows, rank, cols);
     let mut w_new = vec![0.0f32; w.len()];
     let mut ceu = 0.0f32;
     for i in 0..w.len() {
-        w_new[i] = w[i] + ba_new.f32s()[i] - ba_old.f32s()[i];
+        w_new[i] = w[i] + ba_new[i] - ba_old[i];
         ceu += (w_new[i] - w[i]).abs();
     }
     (w_new, a_new, b_new, ma_new, va_new, mb_new, vb_new, ceu)
@@ -590,95 +536,56 @@ pub fn lora_adam_step_mat(
 
 // --- Tucker-2 conv mode products (OIHW, row-major) --------------------------
 
-/// Mode-2 unfolding: (d0, d1, kk) -> (d1, d0*kk).
+/// Mode-2 unfolding: (d0, d1, kk) -> (d1, d0*kk) — a block transpose on
+/// the shared kernel layer.
 pub fn unfold_dim1(t: &[f32], d0: usize, d1: usize, kk: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; d0 * d1 * kk];
-    for a in 0..d0 {
-        for b in 0..d1 {
-            for k in 0..kk {
-                out[b * (d0 * kk) + a * kk + k] = t[(a * d1 + b) * kk + k];
-            }
-        }
-    }
-    out
+    linalg::transpose_blocks(t, d0, d1, kk)
 }
 
 /// G x1 PO^T: (o, i, kk) -> (ro, i, kk). po: (o, ro).
+/// One TN GEMM: out = POᵀ · G with G viewed as (o, i·kk).
 pub fn conv_proj_o(g: &[f32], o: usize, i: usize, kk: usize, po: &[f32], ro: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; ro * i * kk];
-    for oo in 0..o {
-        let grow = &g[oo * i * kk..(oo + 1) * i * kk];
-        for r in 0..ro {
-            let c = po[oo * ro + r];
-            if c == 0.0 {
-                continue;
-            }
-            let orow = &mut out[r * i * kk..(r + 1) * i * kk];
-            for x in 0..i * kk {
-                orow[x] += c * grow[x];
-            }
-        }
-    }
-    out
+    linalg::gemm_tn(None, po, g, o, ro, i * kk)
 }
 
 /// T x2 PI^T: (x, i, kk) -> (x, ri, kk). pi: (i, ri).
+/// Per leading slice: out_x = PIᵀ · T_x with T_x viewed as (i, kk).
 pub fn conv_proj_i(t: &[f32], x: usize, i: usize, kk: usize, pi: &[f32], ri: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; x * ri * kk];
     for xx in 0..x {
-        for ii in 0..i {
-            let trow = &t[(xx * i + ii) * kk..(xx * i + ii + 1) * kk];
-            for s in 0..ri {
-                let c = pi[ii * ri + s];
-                if c == 0.0 {
-                    continue;
-                }
-                let orow = &mut out[(xx * ri + s) * kk..(xx * ri + s + 1) * kk];
-                for k in 0..kk {
-                    orow[k] += c * trow[k];
-                }
-            }
-        }
+        linalg::gemm_tn_into(
+            None,
+            &mut out[xx * ri * kk..(xx + 1) * ri * kk],
+            pi,
+            &t[xx * i * kk..(xx + 1) * i * kk],
+            i,
+            ri,
+            kk,
+        );
     }
     out
 }
 
 /// T x1 PO: (ro, b, kk) -> (o, b, kk). po: (o, ro).
+/// One NN GEMM: out = PO · T with T viewed as (ro, b·kk).
 pub fn conv_restore_o(t: &[f32], ro: usize, b: usize, kk: usize, po: &[f32], o: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; o * b * kk];
-    for oo in 0..o {
-        let orow = &mut out[oo * b * kk..(oo + 1) * b * kk];
-        for r in 0..ro {
-            let c = po[oo * ro + r];
-            if c == 0.0 {
-                continue;
-            }
-            let trow = &t[r * b * kk..(r + 1) * b * kk];
-            for x in 0..b * kk {
-                orow[x] += c * trow[x];
-            }
-        }
-    }
-    out
+    linalg::gemm_nn(None, po, t, o, ro, b * kk)
 }
 
 /// T x2 PI: (x, ri, kk) -> (x, i, kk). pi: (i, ri).
+/// Per leading slice: out_x = PI · T_x with T_x viewed as (ri, kk).
 pub fn conv_restore_i(t: &[f32], x: usize, ri: usize, kk: usize, pi: &[f32], i: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; x * i * kk];
     for xx in 0..x {
-        for ii in 0..i {
-            let orow = &mut out[(xx * i + ii) * kk..(xx * i + ii + 1) * kk];
-            for s in 0..ri {
-                let c = pi[ii * ri + s];
-                if c == 0.0 {
-                    continue;
-                }
-                let trow = &t[(xx * ri + s) * kk..(xx * ri + s + 1) * kk];
-                for k in 0..kk {
-                    orow[k] += c * trow[k];
-                }
-            }
-        }
+        linalg::gemm_nn_into(
+            None,
+            &mut out[xx * i * kk..(xx + 1) * i * kk],
+            pi,
+            &t[xx * ri * kk..(xx + 1) * ri * kk],
+            i,
+            ri,
+            kk,
+        );
     }
     out
 }
@@ -763,29 +670,12 @@ pub fn coap_adam_convfull_step(
     let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
     let g2 = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
     // Spatial mode: (ro*ri, kk) @ ps -> (ro*ri, rs).
-    let mut g3 = vec![0.0f32; ro * ri * rs];
-    for xy in 0..ro * ri {
-        for s in 0..kk {
-            let c = g2[xy * kk + s];
-            for tt in 0..rs {
-                g3[xy * rs + tt] += c * ps[s * rs + tt];
-            }
-        }
-    }
+    let g3 = linalg::gemm_nn(None, &g2, ps, ro * ri, kk, rs);
     let mut m_new = m_st.to_vec();
     let mut v_new = v_st.to_vec();
     let delta = adam_update(&mut m_new, &mut v_new, &g3, b1t, b2t);
     // Restore spatial: (ro*ri, rs) @ ps^T -> (ro*ri, kk).
-    let mut dk = vec![0.0f32; ro * ri * kk];
-    for xy in 0..ro * ri {
-        for s in 0..kk {
-            let mut acc = 0.0f32;
-            for tt in 0..rs {
-                acc += delta[xy * rs + tt] * ps[s * rs + tt];
-            }
-            dk[xy * kk + s] = acc;
-        }
-    }
+    let dk = linalg::gemm_nt(None, &delta, ps, ro * ri, rs, kk);
     let dw = conv_restore_i(&conv_restore_o(&dk, ro, ri, kk, po, o), o, ri, kk, pi, i);
     let (w_new, ceu) = apply_update(w, &dw, lr, wd);
     (w_new, m_new, v_new, ceu)
@@ -797,10 +687,10 @@ pub fn coap_adam_convfull_step(
 pub fn conv_recalib_side(p: &Tensor, g: &[f32], shape: &[usize], side_o: bool) -> Tensor {
     let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
     let gn = if side_o {
-        Tensor::from_f32(&[i * kk, o], transpose_flat(g, o, i * kk))
+        Tensor::from_f32(&[i * kk, o], linalg::transpose(g, o, i * kk))
     } else {
         let u2 = unfold_dim1(g, o, i, kk);
-        Tensor::from_f32(&[o * kk, i], transpose_flat(&u2, i, o * kk))
+        Tensor::from_f32(&[o * kk, i], linalg::transpose(&u2, i, o * kk))
     };
     lowcost_recalib(&gn, p, SVD_SWEEPS)
 }
@@ -809,10 +699,10 @@ pub fn conv_recalib_side(p: &Tensor, g: &[f32], shape: &[usize], side_o: bool) -
 pub fn conv_svd_side(g: &[f32], shape: &[usize], side_o: bool, rank: usize) -> Tensor {
     let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
     let gn = if side_o {
-        Tensor::from_f32(&[i * kk, o], transpose_flat(g, o, i * kk))
+        Tensor::from_f32(&[i * kk, o], linalg::transpose(g, o, i * kk))
     } else {
         let u2 = unfold_dim1(g, o, i, kk);
-        Tensor::from_f32(&[o * kk, i], transpose_flat(&u2, i, o * kk))
+        Tensor::from_f32(&[o * kk, i], linalg::transpose(&u2, i, o * kk))
     };
     svd_topk(&gn, rank, SVD_SWEEPS).0
 }
@@ -835,16 +725,16 @@ pub fn conv_pupdate_side(
     let (gn, mn) = if side_o {
         let m_part = conv_restore_i(m_proj, ro, ri, kk, other_p, i); // (ro, i, kk)
         (
-            Tensor::from_f32(&[i * kk, o], transpose_flat(g, o, i * kk)),
-            Tensor::from_f32(&[i * kk, ro], transpose_flat(&m_part, ro, i * kk)),
+            Tensor::from_f32(&[i * kk, o], linalg::transpose(g, o, i * kk)),
+            Tensor::from_f32(&[i * kk, ro], linalg::transpose(&m_part, ro, i * kk)),
         )
     } else {
         let m_part = conv_restore_o(m_proj, ro, ri, kk, other_p, o); // (o, ri, kk)
         let gu = unfold_dim1(g, o, i, kk); // (i, o*kk)
         let mu = unfold_dim1(&m_part, o, ri, kk); // (ri, o*kk)
         (
-            Tensor::from_f32(&[o * kk, i], transpose_flat(&gu, i, o * kk)),
-            Tensor::from_f32(&[o * kk, ri], transpose_flat(&mu, ri, o * kk)),
+            Tensor::from_f32(&[o * kk, i], linalg::transpose(&gu, i, o * kk)),
+            Tensor::from_f32(&[o * kk, ri], linalg::transpose(&mu, ri, o * kk)),
         )
     };
     pupdate_sgd(p, &gn, &mn, PUPDATE_ITERS, PUPDATE_LR)

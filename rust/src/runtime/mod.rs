@@ -74,7 +74,10 @@ pub trait Backend: Send + Sync {
 /// Construct the backend the config asks for (`--backend native|xla`).
 pub fn open_backend(cfg: &TrainConfig) -> Result<Arc<dyn Backend>> {
     match cfg.backend {
-        BackendKind::Native => Ok(Arc::new(NativeBackend::new())),
+        // `--threads N` feeds both the per-slot optimizer fan-out and
+        // the kernel layer's row-block GEMM parallelism inside model
+        // fwd/bwd; results are bit-identical for any N.
+        BackendKind::Native => Ok(Arc::new(NativeBackend::with_threads(cfg.threads))),
         BackendKind::Xla => {
             #[cfg(feature = "xla")]
             {

@@ -14,7 +14,8 @@
 use super::{Backend, ExperimentInfo, ModelInfo};
 use crate::model::{nativenet, zoo};
 use crate::optim::refimpl;
-use crate::tensor::Tensor;
+use crate::tensor::{linalg, Tensor};
+use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
@@ -23,6 +24,14 @@ pub struct NativeBackend {
     models: BTreeMap<String, ModelInfo>,
     /// Cumulative executions per graph (perf accounting).
     pub exec_counts: Mutex<HashMap<String, u64>>,
+    /// Row-block GEMM parallelism for model fwd/bwd (`train_step__*` /
+    /// `eval_step__*`). `None` => serial (the [`NativeBackend::new`]
+    /// default, and what every pre-existing test constructs). The
+    /// kernel layer's split-then-merge accumulation is bit-identical
+    /// for any worker count, so this is a pure throughput knob.
+    /// (The `Mutex` only exists to keep the backend `Sync`; the trainer
+    /// drives fwd/bwd from a single thread.)
+    pool: Option<Mutex<ThreadPool>>,
 }
 
 impl Default for NativeBackend {
@@ -33,9 +42,18 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
+        NativeBackend::with_threads(1)
+    }
+
+    /// Backend with `threads`-way GEMM parallelism inside model
+    /// forward/backward (`--threads N` reuses the same knob the
+    /// per-slot optimizer fan-out does; the phases are sequential, so
+    /// the pools never compete).
+    pub fn with_threads(threads: usize) -> NativeBackend {
         NativeBackend {
             models: zoo::models().into_iter().map(|m| (m.name.clone(), m)).collect(),
             exec_counts: Mutex::new(HashMap::new()),
+            pool: if threads > 1 { Some(Mutex::new(ThreadPool::new(threads))) } else { None },
         }
     }
 
@@ -137,9 +155,16 @@ impl Backend for NativeBackend {
             .split_once("__")
             .ok_or_else(|| anyhow!("'{name}' is not a minted graph name"))?;
 
+        let pool_guard = match tpl {
+            "train_step" | "eval_step" => {
+                self.pool.as_ref().map(|p| p.lock().expect("gemm pool poisoned"))
+            }
+            _ => None,
+        };
+        let pool = pool_guard.as_deref();
         let out = match tpl {
-            "train_step" => nativenet::train_step(self.model_ref(spec_str)?, inputs)?,
-            "eval_step" => nativenet::eval_step(self.model_ref(spec_str)?, inputs)?,
+            "train_step" => nativenet::train_step(self.model_ref(spec_str)?, inputs, pool)?,
+            "eval_step" => nativenet::eval_step(self.model_ref(spec_str)?, inputs, pool)?,
             _ => {
                 let spec = parse_spec(spec_str)
                     .ok_or_else(|| anyhow!("graph '{name}': unparseable shape spec"))?;
@@ -364,7 +389,7 @@ impl NativeBackend {
                 expect_numel(name, "g", inputs[g_idx], m * n)?;
                 // Normalized frame: (max, min) with P on the small side.
                 let gn = if m < n {
-                    Tensor::from_f32(&[mb, nb], refimpl::transpose_flat(inputs[g_idx].f32s(), m, n))
+                    Tensor::from_f32(&[mb, nb], linalg::transpose(inputs[g_idx].f32s(), m, n))
                 } else {
                     Tensor::from_f32(&[m, n], inputs[g_idx].f32s().to_vec())
                 };

@@ -1,0 +1,573 @@
+//! The crate's single f32 GEMM core — cache-blocked, register-tiled,
+//! autovectorization-friendly, optionally parallel over the scoped
+//! threadpool.
+//!
+//! Every matmul in the crate funnels through [`gemm_nn_into`]:
+//!
+//! - `NN`  `C = A·B`     — [`gemm_nn`] / [`gemm_nn_into`]
+//! - `TN`  `C = Aᵀ·B`    — [`gemm_tn`] (the `dW = Xᵀ·dY` pattern)
+//! - `NT`  `C = A·Bᵀ`    — [`gemm_nt`] (the `dX = dY·Wᵀ` pattern)
+//!
+//! The TN/NT variants pack the transposed operand once (into a
+//! thread-local scratch buffer) and run the same NN core, so there is
+//! exactly one inner kernel to optimize; `*_into` variants write into
+//! caller-owned buffers to kill per-call allocations on hot paths.
+//!
+//! Blocking scheme (BLIS-style, safe Rust only):
+//!
+//! - `NC`×`KC` panels of B and `MC`×`KC` blocks of A are packed into
+//!   thread-local scratch (contiguous, L1/L2-resident);
+//! - the microkernel computes an `MR`×`NR` tile with a fixed-size
+//!   `[[f32; NR]; MR]` accumulator — fixed trip counts on the inner
+//!   loops so LLVM autovectorizes them into full-width f32 lanes (no
+//!   unstable SIMD features needed).
+//!
+//! Determinism: each output element is accumulated in ascending-`k`
+//! order, grouped by `KC` block — an order that does not depend on how
+//! rows are split across workers. [`gemm_nn_into`] therefore returns
+//! bit-identical results for any thread count (row slabs are multiples
+//! of `MR`, so strip alignment is invariant too); the PR-1
+//! thread-count-invariance contract extends through the kernel layer.
+
+use crate::util::threadpool::ThreadPool;
+use std::cell::RefCell;
+
+/// Microkernel rows (register-tile height).
+pub const MR: usize = 4;
+/// Microkernel columns (register-tile width, in f32 lanes).
+pub const NR: usize = 16;
+/// Rows of A packed per block (multiple of `MR`).
+const MC: usize = 64;
+/// Shared (`k`) dimension per packed block.
+const KC: usize = 128;
+/// Columns of B packed per panel (multiple of `NR`).
+const NC: usize = 512;
+/// Minimum FLOP count (2·m·k·n) before fanning out to the pool.
+const PAR_MIN_FLOPS: usize = 1 << 21;
+
+#[derive(Default)]
+struct PackBufs {
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+thread_local! {
+    /// Per-thread packing scratch (workers each get their own copy).
+    static PACK: RefCell<PackBufs> = RefCell::new(PackBufs::default());
+    /// Per-thread scratch for the transposed operand of TN/NT calls.
+    static TSCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+// ---------------------------------------------------------------------------
+// Core: blocked NN on a row slab
+// ---------------------------------------------------------------------------
+
+/// `MR`×`NR` tile at (`row0`, `col0`) of the slab's `out` (width `n`):
+/// `acc += astrip · bpack[.., jr..jr+nr]` over `kc` depth, then
+/// `out += acc`. `astrip` is kk-major with stride `MR` (zero-padded
+/// rows), `bpack` is the packed `kc`×`nc` panel.
+#[inline]
+fn microkernel(
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    astrip: &[f32],
+    bpack: &[f32],
+    kc: usize,
+    nc: usize,
+    jr: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    if mr == MR && nr == NR {
+        // Full tile: fixed trip counts -> full-width f32 lanes.
+        for kk in 0..kc {
+            let av = &astrip[kk * MR..kk * MR + MR];
+            let bv = &bpack[kk * nc + jr..kk * nc + jr + NR];
+            for r in 0..MR {
+                let ar = av[r];
+                for j in 0..NR {
+                    acc[r][j] += ar * bv[j];
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let o0 = (row0 + r) * n + col0;
+            let orow = &mut out[o0..o0 + NR];
+            for j in 0..NR {
+                orow[j] += accr[j];
+            }
+        }
+    } else {
+        // Edge tile (right/bottom rim): dynamic bounds, same k-order.
+        for kk in 0..kc {
+            let av = &astrip[kk * MR..kk * MR + MR];
+            let bv = &bpack[kk * nc + jr..kk * nc + jr + nr];
+            for r in 0..mr {
+                let ar = av[r];
+                for (j, &bj) in bv.iter().enumerate() {
+                    acc[r][j] += ar * bj;
+                }
+            }
+        }
+        for r in 0..mr {
+            let o0 = (row0 + r) * n + col0;
+            let orow = &mut out[o0..o0 + nr];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o += acc[r][j];
+            }
+        }
+    }
+}
+
+/// Blocked `out += a·b` on one row slab (`a`, `out` hold `m` rows; `b`
+/// is the full `k`×`n` operand). `out` must be zeroed by the caller.
+fn gemm_slab(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bufs: &mut PackBufs,
+) {
+    bufs.a.resize(MC * KC, 0.0);
+    bufs.b.resize(KC * NC, 0.0);
+    let apack = &mut bufs.a;
+    let bpack = &mut bufs.b;
+
+    let mut jc = 0;
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            // Pack the B panel: bpack[kk * nc + j] = b[pc+kk][jc+j].
+            for kk in 0..kc {
+                let src = &b[(pc + kk) * n + jc..(pc + kk) * n + jc + nc];
+                bpack[kk * nc..kk * nc + nc].copy_from_slice(src);
+            }
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                let strips = mc.div_ceil(MR);
+                // Pack the A block in MR-row strips, kk-major, rows
+                // zero-padded to MR (padding multiplies into accumulator
+                // rows that are never written back).
+                for s in 0..strips {
+                    let r0 = ic + s * MR;
+                    let mr = MR.min(ic + mc - r0);
+                    let dst = &mut apack[s * MR * kc..(s + 1) * MR * kc];
+                    for kk in 0..kc {
+                        for r in 0..MR {
+                            dst[kk * MR + r] =
+                                if r < mr { a[(r0 + r) * k + pc + kk] } else { 0.0 };
+                        }
+                    }
+                }
+                // jr outer / strip inner: the kc×NR B chunk stays hot in
+                // L1 while the packed A block streams past it.
+                let mut jr = 0;
+                while jr < nc {
+                    let nr = NR.min(nc - jr);
+                    for s in 0..strips {
+                        let r0 = ic + s * MR;
+                        let mr = MR.min(ic + mc - r0);
+                        let astrip = &apack[s * MR * kc..(s + 1) * MR * kc];
+                        microkernel(out, n, r0, jc + jr, astrip, bpack, kc, nc, jr, mr, nr);
+                    }
+                    jr += NR;
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public GEMM entry points
+// ---------------------------------------------------------------------------
+
+/// `out = a·b`; `a` is (m, k), `b` is (k, n), `out` is (m, n), all
+/// row-major. `out` is fully overwritten. With a pool (and a matmul big
+/// enough to amortize fan-out), rows are split across workers in
+/// `MR`-aligned slabs — results are bit-identical for any worker count.
+pub fn gemm_nn_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "gemm_nn: lhs is not {m}x{k}");
+    assert_eq!(b.len(), k * n, "gemm_nn: rhs is not {k}x{n}");
+    assert_eq!(out.len(), m * n, "gemm_nn: out is not {m}x{n}");
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if let Some(pool) = pool {
+        let workers = pool.workers();
+        if workers > 1 && 2 * m * k * n >= PAR_MIN_FLOPS && m >= 2 * MR {
+            let chunk = round_up(m.div_ceil(workers), MR);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(chunk * n)
+                .zip(a.chunks(chunk * k))
+                .map(|(oc, ac)| {
+                    let rows = ac.len() / k;
+                    Box::new(move || {
+                        PACK.with(|p| gemm_slab(oc, ac, b, rows, k, n, &mut p.borrow_mut()));
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_all_scoped(jobs);
+            return;
+        }
+    }
+    PACK.with(|p| gemm_slab(out, a, b, m, k, n, &mut p.borrow_mut()));
+}
+
+/// `a·b` with a fresh output buffer (see [`gemm_nn_into`]).
+pub fn gemm_nn(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gemm_nn_into(pool, &mut out, a, b, m, k, n);
+    out
+}
+
+/// `out = aᵀ·b`; `a` is (rows, m), `b` is (rows, n), `out` is (m, n) —
+/// the `dW = Xᵀ·dY` pattern. Packs `aᵀ` into thread-local scratch and
+/// runs the NN core.
+pub fn gemm_tn_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    m: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), rows * m, "gemm_tn: lhs is not {rows}x{m}");
+    TSCRATCH.with(|t| {
+        let t = &mut *t.borrow_mut();
+        t.resize(rows * m, 0.0);
+        transpose_into(t, a, rows, m);
+        gemm_nn_into(pool, out, t, b, m, rows, n);
+    });
+}
+
+/// `aᵀ·b` with a fresh output buffer (see [`gemm_tn_into`]).
+pub fn gemm_tn(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gemm_tn_into(pool, &mut out, a, b, rows, m, n);
+    out
+}
+
+/// `out = a·bᵀ`; `a` is (m, k), `b` is (n, k), `out` is (m, n) — the
+/// `dX = dY·Wᵀ` pattern. Packs `bᵀ` into thread-local scratch and runs
+/// the NN core.
+pub fn gemm_nt_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(b.len(), n * k, "gemm_nt: rhs is not {n}x{k}");
+    TSCRATCH.with(|t| {
+        let t = &mut *t.borrow_mut();
+        t.resize(k * n, 0.0);
+        transpose_into(t, b, n, k);
+        gemm_nn_into(pool, out, a, t, m, k, n);
+    });
+}
+
+/// `a·bᵀ` with a fresh output buffer (see [`gemm_nt_into`]).
+pub fn gemm_nt(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gemm_nt_into(pool, &mut out, a, b, m, k, n);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Transpose (the crate's one copy — Tensor::transposed2d and the conv
+// unfoldings are wrappers over these)
+// ---------------------------------------------------------------------------
+
+/// Tiled out-of-place transpose: `x` is (m, n) row-major, `out` becomes
+/// (n, m) row-major.
+pub fn transpose_into(out: &mut [f32], x: &[f32], m: usize, n: usize) {
+    const TB: usize = 32;
+    assert_eq!(x.len(), m * n, "transpose: input is not {m}x{n}");
+    assert_eq!(out.len(), m * n, "transpose: out size");
+    for i0 in (0..m).step_by(TB) {
+        let i1 = (i0 + TB).min(m);
+        for j0 in (0..n).step_by(TB) {
+            let j1 = (j0 + TB).min(n);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    out[j * m + i] = x[i * n + j];
+                }
+            }
+        }
+    }
+}
+
+/// Transpose with a fresh output buffer (see [`transpose_into`]).
+pub fn transpose(x: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    transpose_into(&mut out, x, m, n);
+    out
+}
+
+/// Block transpose: view `x` as a (d0, d1) matrix of contiguous
+/// `blk`-element cells and transpose the cell grid — the mode-2 tensor
+/// unfolding `(d0, d1, blk) -> (d1, d0, blk)`. `blk == 1` degenerates to
+/// a plain transpose.
+pub fn transpose_blocks_into(out: &mut [f32], x: &[f32], d0: usize, d1: usize, blk: usize) {
+    assert_eq!(x.len(), d0 * d1 * blk, "transpose_blocks: input size");
+    assert_eq!(out.len(), d0 * d1 * blk, "transpose_blocks: out size");
+    for a in 0..d0 {
+        for b in 0..d1 {
+            let src = &x[(a * d1 + b) * blk..(a * d1 + b + 1) * blk];
+            out[(b * d0 + a) * blk..(b * d0 + a + 1) * blk].copy_from_slice(src);
+        }
+    }
+}
+
+/// Block transpose with a fresh output buffer (see
+/// [`transpose_blocks_into`]).
+pub fn transpose_blocks(x: &[f32], d0: usize, d1: usize, blk: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d0 * d1 * blk];
+    transpose_blocks_into(&mut out, x, d0, d1, blk);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Level-1 helpers (QR / Jacobi inner products)
+// ---------------------------------------------------------------------------
+
+/// Lane width for the chunked level-1 reductions.
+const LANES: usize = 8;
+
+/// Lane-chunked f32 dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    let mut lanes = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for c in 0..chunks {
+        let av = &a[c * LANES..c * LANES + LANES];
+        let bv = &b[c * LANES..c * LANES + LANES];
+        for j in 0..LANES {
+            lanes[j] += av[j] * bv[j];
+        }
+    }
+    let mut s = 0.0f32;
+    for &l in &lanes {
+        s += l;
+    }
+    for i in chunks * LANES..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Lane-chunked dot product with f64 accumulation (the Jacobi
+/// column-moment reductions need the extra headroom).
+pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot_f64: length mismatch");
+    let mut lanes = [0.0f64; LANES];
+    let chunks = a.len() / LANES;
+    for c in 0..chunks {
+        let av = &a[c * LANES..c * LANES + LANES];
+        let bv = &b[c * LANES..c * LANES + LANES];
+        for j in 0..LANES {
+            lanes[j] += av[j] as f64 * bv[j] as f64;
+        }
+    }
+    let mut s = 0.0f64;
+    for &l in &lanes {
+        s += l;
+    }
+    for i in chunks * LANES..a.len() {
+        s += a[i] as f64 * b[i] as f64;
+    }
+    s
+}
+
+/// `y += alpha * x`.
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "axpy: length mismatch");
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// In-place Givens-style plane rotation of two vectors:
+/// `xa' = c·xa - s·xb`, `xb' = s·xa + c·xb`.
+pub fn rot(xa: &mut [f32], xb: &mut [f32], c: f32, s: f32) {
+    assert_eq!(xa.len(), xb.len(), "rot: length mismatch");
+    for (ai, bi) in xa.iter_mut().zip(xb.iter_mut()) {
+        let (a, b) = (*ai, *bi);
+        *ai = c * a - s * b;
+        *bi = s * a + c * b;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Naive oracle
+// ---------------------------------------------------------------------------
+
+/// The pre-refactor naive matmul (row-major `i/kk/j` loop with a
+/// zero-skip) — kept ONLY as the parity oracle for `tests/gemm_parity.rs`
+/// and the baseline for `benches/gemm.rs`. Never called on a hot path;
+/// this is the one permitted triple-nested matmul loop outside the
+/// blocked core.
+pub fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
+    }
+
+    #[test]
+    fn nn_matches_naive_on_odd_shapes() {
+        let mut rng = Rng::new(42);
+        for &(m, k, n) in
+            &[(1usize, 1usize, 1usize), (3, 5, 2), (7, 13, 11), (65, 129, 67), (130, 40, 96)]
+        {
+            let a = rng.normal_vec(m * k, 0.5);
+            let b = rng.normal_vec(k * n, 0.5);
+            let want = naive_matmul(&a, &b, m, k, n);
+            let got = gemm_nn(None, &a, &b, m, k, n);
+            assert!(close(&got, &want, 1e-3), "nn mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_transposed_naive() {
+        let mut rng = Rng::new(43);
+        let (rows, m, n) = (37usize, 19usize, 23usize);
+        let a = rng.normal_vec(rows * m, 0.5);
+        let b = rng.normal_vec(rows * n, 0.5);
+        let at = transpose(&a, rows, m);
+        let want = naive_matmul(&at, &b, m, rows, n);
+        assert!(close(&gemm_tn(None, &a, &b, rows, m, n), &want, 1e-3));
+
+        let (m2, k2, n2) = (11usize, 29usize, 17usize);
+        let x = rng.normal_vec(m2 * k2, 0.5);
+        let y = rng.normal_vec(n2 * k2, 0.5);
+        let yt = transpose(&y, n2, k2);
+        let want = naive_matmul(&x, &yt, m2, k2, n2);
+        assert!(close(&gemm_nt(None, &x, &y, m2, k2, n2), &want, 1e-3));
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_contents() {
+        let mut rng = Rng::new(44);
+        let (m, k, n) = (9usize, 6usize, 5usize);
+        let a = rng.normal_vec(m * k, 0.5);
+        let b = rng.normal_vec(k * n, 0.5);
+        let mut out = vec![7.5f32; m * n];
+        gemm_nn_into(None, &mut out, &a, &b, m, k, n);
+        assert!(close(&out, &naive_matmul(&a, &b, m, k, n), 1e-4));
+    }
+
+    #[test]
+    fn transpose_roundtrips_and_blocks_unfold() {
+        let x: Vec<f32> = (0..24).map(|v| v as f32).collect();
+        let t = transpose(&x, 4, 6);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 6.0); // (1,0) of x
+        assert_eq!(transpose(&t, 6, 4), x);
+        // (2, 3, 2) cell grid -> (3, 2, 2): cell (a,b) lands at (b,a).
+        let u = transpose_blocks(&x[..12], 2, 3, 2);
+        assert_eq!(&u[..4], &[0.0, 1.0, 6.0, 7.0]);
+        assert_eq!(transpose_blocks(&u, 3, 2, 2), &x[..12]);
+    }
+
+    #[test]
+    fn dot_axpy_rot_basics() {
+        let a: Vec<f32> = (0..19).map(|v| v as f32).collect();
+        let b = vec![2.0f32; 19];
+        let want: f32 = (0..19).map(|v| 2.0 * v as f32).sum();
+        assert!((dot(&a, &b) - want).abs() < 1e-4);
+        assert!((dot_f64(&a, &b) - want as f64).abs() < 1e-6);
+        let mut y = vec![1.0f32; 19];
+        axpy(&mut y, 0.5, &a);
+        assert!((y[4] - 3.0).abs() < 1e-6);
+        let mut xa = vec![1.0f32, 0.0];
+        let mut xb = vec![0.0f32, 1.0];
+        rot(&mut xa, &mut xb, 0.0, 1.0);
+        assert_eq!(xa, vec![0.0, -1.0]);
+        assert_eq!(xb, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn pool_split_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(45);
+        let (m, k, n) = (130usize, 70usize, 90usize);
+        let a = rng.normal_vec(m * k, 0.5);
+        let b = rng.normal_vec(k * n, 0.5);
+        let serial = gemm_nn(None, &a, &b, m, k, n);
+        for workers in [1usize, 2, 3, 8] {
+            let pool = ThreadPool::new(workers);
+            let par = gemm_nn(Some(&pool), &a, &b, m, k, n);
+            assert_eq!(serial, par, "workers={workers} drifted");
+        }
+    }
+}

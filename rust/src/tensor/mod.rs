@@ -3,9 +3,12 @@
 //!
 //! Deliberately small: dense row-major storage, f32 or i32, plus the
 //! precision machinery the paper's memory story needs — bf16 storage
-//! ([`bf16`]) and block-wise 8-bit quantization ([`quant`]).
+//! ([`bf16`]) and block-wise 8-bit quantization ([`quant`]) — and the
+//! shared blocked/SIMD GEMM core ([`linalg`]) that every matmul in the
+//! crate (model fwd/bwd, optimizer kernels, runtime dispatch) runs on.
 
 pub mod bf16;
+pub mod linalg;
 pub mod quant;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -89,18 +92,11 @@ impl Tensor {
         self
     }
 
-    /// 2-D transpose (copy).
+    /// 2-D transpose (copy) — thin wrapper over [`linalg::transpose`].
     pub fn transposed2d(&self) -> Tensor {
         assert_eq!(self.dims.len(), 2);
         let (m, n) = (self.dims[0], self.dims[1]);
-        let src = self.f32s();
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                out[j * m + i] = src[i * n + j];
-            }
-        }
-        Tensor::from_f32(&[n, m], out)
+        Tensor::from_f32(&[n, m], linalg::transpose(self.f32s(), m, n))
     }
 
     pub fn l1_norm(&self) -> f64 {
@@ -133,31 +129,16 @@ impl Tensor {
         }
     }
 
-    /// Naive host matmul — reference implementation for tests and the
-    /// pure-Rust optimizer oracles (never on the training hot path).
+    /// Host matmul — thin wrapper over the shared blocked/SIMD core
+    /// ([`linalg::gemm_nn`]); every call site in the crate funnels into
+    /// the same kernel.
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.dims.len(), 2);
         assert_eq!(other.dims.len(), 2);
         let (m, k) = (self.dims[0], self.dims[1]);
         let (k2, n) = (other.dims[0], other.dims[1]);
         assert_eq!(k, k2, "matmul inner dims");
-        let a = self.f32s();
-        let b = other.f32s();
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for kk in 0..k {
-                let aik = a[i * k + kk];
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..(kk + 1) * n];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += aik * brow[j];
-                }
-            }
-        }
-        Tensor::from_f32(&[m, n], out)
+        Tensor::from_f32(&[m, n], linalg::gemm_nn(None, self.f32s(), other.f32s(), m, k, n))
     }
 }
 

@@ -4,7 +4,13 @@
 //! [`Bench::run`] per case and [`report`] helpers to print paper-style
 //! table rows. Timing: wall-clock warmup + fixed-iteration measurement
 //! with mean / p50 / p95 over per-iteration samples.
+//!
+//! [`append_json`] additionally records rows as JSONL under
+//! `target/bench-json/<bench>.jsonl` (override the directory with
+//! `COAP_BENCH_JSON_DIR`), so successive runs build a machine-readable
+//! trajectory of before/after numbers.
 
+use std::io::Write;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -79,6 +85,45 @@ impl Bench {
     }
 }
 
+/// Append one record per call to `target/bench-json/<bench>.jsonl`
+/// (directory overridable via `COAP_BENCH_JSON_DIR`), as a single JSON
+/// object of string keys -> number-or-string values. Values that parse
+/// as finite numbers are written unquoted so downstream tooling can plot
+/// the trajectory directly. Errors are reported to stderr, never fatal —
+/// benches must not fail because a disk is read-only.
+pub fn append_json(bench: &str, fields: &[(&str, String)]) {
+    let dir = std::env::var("COAP_BENCH_JSON_DIR")
+        .unwrap_or_else(|_| "target/bench-json".to_string());
+    append_json_to(&dir, bench, fields);
+}
+
+/// [`append_json`] with an explicit directory (no env lookup).
+pub fn append_json_to(dir: &str, bench: &str, fields: &[(&str, String)]) {
+    let path = format!("{dir}/{bench}.jsonl");
+    let mut line = String::from("{");
+    for (i, (key, val)) in fields.iter().enumerate() {
+        if i > 0 {
+            line.push(',');
+        }
+        let numeric = val.parse::<f64>().map(|v| v.is_finite()).unwrap_or(false);
+        if numeric {
+            line.push_str(&format!("\"{key}\":{val}"));
+        } else {
+            let escaped = val.replace('\\', "\\\\").replace('"', "\\\"");
+            line.push_str(&format!("\"{key}\":\"{escaped}\""));
+        }
+    }
+    line.push('}');
+    let write = || -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        writeln!(f, "{line}")
+    };
+    if let Err(e) = write() {
+        eprintln!("  (bench-json: could not append to {path}: {e})");
+    }
+}
+
 /// Print a paper-style table: header row then aligned data rows.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n== {title} ==");
@@ -108,6 +153,18 @@ pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn append_json_writes_typed_jsonl() {
+        // Path-explicit variant: no process-global env mutation (racy
+        // under the parallel test harness).
+        let dir = std::env::temp_dir().join("coap-bench-json-test");
+        let dir_s = dir.to_str().unwrap();
+        append_json_to(dir_s, "unit", &[("case", "nn 1024".into()), ("mean_ms", "1.5".into())]);
+        let content = std::fs::read_to_string(dir.join("unit.jsonl")).unwrap();
+        assert!(content.contains("\"case\":\"nn 1024\""), "{content}");
+        assert!(content.contains("\"mean_ms\":1.5"), "{content}");
+    }
 
     #[test]
     fn stats_are_sane() {

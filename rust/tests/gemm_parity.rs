@@ -1,0 +1,174 @@
+//! Property suite for the shared kernel layer (`tensor::linalg`): the
+//! blocked/SIMD NN/TN/NT GEMMs must agree with the naive triple-loop
+//! oracle across adversarial shapes (1x1, primes, m >> n, n >> m), the
+//! `*_into` variants must fully overwrite stale buffers, and the
+//! pool-parallel path must be bit-identical to serial for any worker
+//! count — the kernel-layer extension of PR 1's thread-count-invariance
+//! contract.
+
+use coap::rng::Rng;
+use coap::tensor::linalg;
+use coap::util::threadpool::ThreadPool;
+
+/// |got - want| <= tol elementwise (FP-order drift between the blocked
+/// core and the oracle is ~1e-5 at these depths; 1e-3 has wide margin).
+fn assert_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() <= tol, "{ctx}: idx {i}: got {g}, want {w}");
+    }
+}
+
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 7, 1),
+    (3, 1, 5),
+    (2, 2, 2),
+    (5, 3, 2),
+    (7, 13, 11),
+    (17, 17, 17),
+    (31, 63, 33),
+    (64, 64, 64),
+    (65, 129, 67),
+    (128, 40, 96),
+    (200, 3, 1),    // m >> n
+    (1, 5, 190),    // n >> m
+    (150, 257, 5),  // k spanning two KC blocks
+    (3, 300, 3),    // deep and skinny
+];
+
+#[test]
+fn gemm_nn_matches_naive_oracle() {
+    let mut rng = Rng::new(101);
+    for &(m, k, n) in SHAPES {
+        let a = rng.normal_vec(m * k, 0.5);
+        let b = rng.normal_vec(k * n, 0.5);
+        let want = linalg::naive_matmul(&a, &b, m, k, n);
+        let got = linalg::gemm_nn(None, &a, &b, m, k, n);
+        assert_close(&got, &want, 1e-3, &format!("nn {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn gemm_tn_matches_transposed_oracle() {
+    let mut rng = Rng::new(102);
+    for &(m, k, n) in SHAPES {
+        // a stored (k, m): gemm_tn computes aᵀ·b = (m, k)·(k, n).
+        let a = rng.normal_vec(k * m, 0.5);
+        let b = rng.normal_vec(k * n, 0.5);
+        let at = linalg::transpose(&a, k, m);
+        let want = linalg::naive_matmul(&at, &b, m, k, n);
+        let got = linalg::gemm_tn(None, &a, &b, k, m, n);
+        assert_close(&got, &want, 1e-3, &format!("tn {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn gemm_nt_matches_transposed_oracle() {
+    let mut rng = Rng::new(103);
+    for &(m, k, n) in SHAPES {
+        // b stored (n, k): gemm_nt computes a·bᵀ = (m, k)·(k, n).
+        let a = rng.normal_vec(m * k, 0.5);
+        let b = rng.normal_vec(n * k, 0.5);
+        let bt = linalg::transpose(&b, n, k);
+        let want = linalg::naive_matmul(&a, &bt, m, k, n);
+        let got = linalg::gemm_nt(None, &a, &b, m, k, n);
+        assert_close(&got, &want, 1e-3, &format!("nt {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn into_variants_overwrite_stale_buffers() {
+    let mut rng = Rng::new(104);
+    let (m, k, n) = (33usize, 29usize, 41usize);
+    let a = rng.normal_vec(m * k, 0.5);
+    let b = rng.normal_vec(k * n, 0.5);
+    let want = linalg::naive_matmul(&a, &b, m, k, n);
+
+    let mut out = vec![123.0f32; m * n];
+    linalg::gemm_nn_into(None, &mut out, &a, &b, m, k, n);
+    assert_close(&out, &want, 1e-3, "nn_into");
+
+    let at = linalg::transpose(&a, m, k); // (k, m)
+    out.fill(-55.0);
+    linalg::gemm_tn_into(None, &mut out, &at, &b, k, m, n);
+    assert_close(&out, &want, 1e-3, "tn_into");
+
+    let bt = linalg::transpose(&b, k, n); // (n, k)
+    out.fill(9e9);
+    linalg::gemm_nt_into(None, &mut out, &a, &bt, m, k, n);
+    assert_close(&out, &want, 1e-3, "nt_into");
+}
+
+/// The acceptance-criterion determinism property: bit-identical results
+/// for 1/2/8 workers (and serial), across all three transpose variants,
+/// on a matmul large enough to cross the parallel-dispatch threshold.
+#[test]
+fn pool_results_bit_identical_for_1_2_8_workers() {
+    let mut rng = Rng::new(105);
+    let (m, k, n) = (139usize, 128usize, 131usize);
+    let a = rng.normal_vec(m * k, 0.5);
+    let b = rng.normal_vec(k * n, 0.5);
+    let a_t = rng.normal_vec(k * m, 0.5); // (k, m) operand for TN
+    let b_t = rng.normal_vec(n * k, 0.5); // (n, k) operand for NT
+
+    let nn = linalg::gemm_nn(None, &a, &b, m, k, n);
+    let tn = linalg::gemm_tn(None, &a_t, &b, k, m, n);
+    let nt = linalg::gemm_nt(None, &a, &b_t, m, k, n);
+    for workers in [1usize, 2, 8] {
+        let pool = ThreadPool::new(workers);
+        assert_eq!(nn, linalg::gemm_nn(Some(&pool), &a, &b, m, k, n), "nn w={workers}");
+        assert_eq!(tn, linalg::gemm_tn(Some(&pool), &a_t, &b, k, m, n), "tn w={workers}");
+        assert_eq!(nt, linalg::gemm_nt(Some(&pool), &a, &b_t, m, k, n), "nt w={workers}");
+    }
+}
+
+/// A large parallel GEMM must also be bit-stable across *repeated* runs
+/// on the same pool (no scheduling-order dependence).
+#[test]
+fn pool_results_stable_across_runs() {
+    let mut rng = Rng::new(106);
+    let (m, k, n) = (256usize, 256usize, 256usize);
+    let a = rng.normal_vec(m * k, 0.1);
+    let b = rng.normal_vec(k * n, 0.1);
+    let pool = ThreadPool::new(4);
+    let first = linalg::gemm_nn(Some(&pool), &a, &b, m, k, n);
+    for _ in 0..3 {
+        assert_eq!(first, linalg::gemm_nn(Some(&pool), &a, &b, m, k, n));
+    }
+    assert_eq!(first, linalg::gemm_nn(None, &a, &b, m, k, n), "parallel != serial");
+}
+
+#[test]
+fn transpose_and_blocks_match_reference() {
+    let mut rng = Rng::new(107);
+    for &(m, n) in &[(1usize, 1usize), (2, 7), (13, 5), (64, 33), (100, 100)] {
+        let x = rng.normal_vec(m * n, 1.0);
+        let t = linalg::transpose(&x, m, n);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(t[j * m + i], x[i * n + j], "transpose {m}x{n} at ({i},{j})");
+            }
+        }
+        assert_eq!(linalg::transpose(&t, n, m), x, "roundtrip {m}x{n}");
+    }
+    // Block transpose == the mode-2 unfolding semantics.
+    let (d0, d1, kk) = (4usize, 3usize, 5usize);
+    let x = rng.normal_vec(d0 * d1 * kk, 1.0);
+    let u = linalg::transpose_blocks(&x, d0, d1, kk);
+    for a in 0..d0 {
+        for b in 0..d1 {
+            for k in 0..kk {
+                assert_eq!(u[b * (d0 * kk) + a * kk + k], x[(a * d1 + b) * kk + k]);
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_sized_operands_are_safe() {
+    // k = 0: the product is all zeros; stale buffers still cleared.
+    let mut out = vec![3.0f32; 6];
+    linalg::gemm_nn_into(None, &mut out, &[], &[], 2, 0, 3);
+    assert_eq!(out, vec![0.0; 6]);
+}
