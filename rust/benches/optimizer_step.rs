@@ -1,12 +1,15 @@
 //! Per-layer optimizer-step latency: full-rank Adam/Adafactor vs the
 //! projected COAP step, across weight shapes — the microscopic source
-//! of the tables' "training time" column.
+//! of the tables' "training time" column. Also times the 8-bit COAP
+//! step both ways (fused block-streaming vs pre-fusion round trip) and
+//! records every row into `target/bench-json/optimizer_step.jsonl`.
 
 use coap::config::TrainConfig;
+use coap::optim::StateBuf;
 use coap::rng::Rng;
 use coap::runtime::{names, open_backend, Backend};
-use coap::tensor::Tensor;
-use coap::util::bench::{print_table, Bench};
+use coap::tensor::{Precision, Tensor};
+use coap::util::bench::{append_json, print_table, Bench};
 
 fn main() -> anyhow::Result<()> {
     let rt = open_backend(&TrainConfig::default())?;
@@ -51,17 +54,74 @@ fn main() -> anyhow::Result<()> {
             )
             .unwrap();
         });
+
+        // 8-bit moments: fused block-streaming vs pre-fusion round trip.
+        let coap_inputs = [&w, &g, &p, &scalars[0], &scalars[1], &scalars[2], &scalars[3]];
+        let seed_m = Tensor::from_f32(&[mb, r], rng.normal_vec(mb * r, 0.01));
+        let seed_v = Tensor::from_f32(
+            &[mb, r],
+            rng.normal_vec(mb * r, 0.001).iter().map(|x| x.abs()).collect(),
+        );
+        let mut ms = StateBuf::zeros(&[mb, r], Precision::Int8);
+        let mut vs = StateBuf::zeros(&[mb, r], Precision::Int8);
+        ms.store(&seed_m);
+        vs.store(&seed_v);
+        let s_fused = bench.run(&format!("{coap} int8-fused"), || {
+            let mut views = [ms.view(), vs.view()];
+            rt.exec_with_state(&coap, &coap_inputs, &mut views).unwrap();
+        });
+        ms.store(&seed_m);
+        vs.store(&seed_v);
+        let s_rt = bench.run(&format!("{coap} int8-roundtrip"), || {
+            let mut views = [ms.view(), vs.view()];
+            rt.exec_with_state_roundtrip(&coap, &coap_inputs, &mut views)
+                .unwrap();
+        });
+
+        append_json(
+            "optimizer_step",
+            &[
+                ("case", format!("{m}x{n} r{r}")),
+                ("adam_ms", format!("{:.4}", s_adam.mean_ms())),
+                ("adafactor_ms", format!("{:.4}", s_af.mean_ms())),
+                ("coap_ms", format!("{:.4}", s_coap.mean_ms())),
+                ("coap_int8_fused_ms", format!("{:.4}", s_fused.mean_ms())),
+                ("coap_int8_roundtrip_ms", format!("{:.4}", s_rt.mean_ms())),
+                (
+                    "int8_fused_speedup",
+                    format!("{:.3}", s_rt.mean_ms() / s_fused.mean_ms()),
+                ),
+                (
+                    "int8_fused_transient_bytes",
+                    format!("{}", ms.transient_bytes(true) + vs.transient_bytes(true)),
+                ),
+                (
+                    "int8_roundtrip_transient_bytes",
+                    format!("{}", ms.transient_bytes(false) + vs.transient_bytes(false)),
+                ),
+            ],
+        );
         rows.push(vec![
             format!("{m}x{n} r={r}"),
             format!("{:.2}", s_adam.mean_ms()),
             format!("{:.2}", s_af.mean_ms()),
             format!("{:.2}", s_coap.mean_ms()),
             format!("{:.2}x", s_coap.mean_ms() / s_adam.mean_ms()),
+            format!("{:.2}", s_fused.mean_ms()),
+            format!("{:.2}", s_rt.mean_ms()),
         ]);
     }
     print_table(
         "Optimizer step latency per layer",
-        &["shape", "Adam (ms)", "Adafactor (ms)", "COAP proj step (ms)", "COAP/Adam"],
+        &[
+            "shape",
+            "Adam (ms)",
+            "Adafactor (ms)",
+            "COAP proj step (ms)",
+            "COAP/Adam",
+            "COAP int8 fused (ms)",
+            "COAP int8 roundtrip (ms)",
+        ],
         &rows,
     );
     Ok(())

@@ -1,10 +1,16 @@
 //! 8-bit state store throughput: dynamic block-wise quantize/dequantize
-//! bandwidth plus bf16 encode/decode — the per-step cost the 8-bit rows
-//! of Tables 3/5/6 pay to cut optimizer memory.
+//! bandwidth plus bf16 encode/decode — and, since the fused state path,
+//! the end-to-end projected-step comparison the ROADMAP asked for:
+//! fused block-streaming `exec_with_state` vs the pre-fusion round trip
+//! (dequantize-all → step → requantize-all), with step-time and
+//! peak-transient-bytes deltas recorded into the bench-JSON trajectory
+//! (`target/bench-json/quant_throughput.jsonl`).
 
+use coap::optim::StateBuf;
 use coap::rng::Rng;
-use coap::tensor::{bf16, quant};
-use coap::util::bench::{print_table, Bench};
+use coap::runtime::{names, Backend, NativeBackend};
+use coap::tensor::{bf16, quant, Precision, Tensor};
+use coap::util::bench::{append_json, print_table, Bench};
 
 fn main() {
     let mut rng = Rng::new(2);
@@ -28,6 +34,15 @@ fn main() {
             bf16::encode(&src, &mut h);
             std::hint::black_box(&h);
         });
+        append_json(
+            "quant_throughput",
+            &[
+                ("case", format!("codec {n}")),
+                ("quantize_mb_s", format!("{:.1}", mb / s_q.mean.as_secs_f64())),
+                ("dequantize_mb_s", format!("{:.1}", mb / s_dq.mean.as_secs_f64())),
+                ("bf16_encode_mb_s", format!("{:.1}", mb / s_bf.mean.as_secs_f64())),
+            ],
+        );
         rows.push(vec![
             format!("{:.1} MB", mb),
             format!("{:.0} MB/s", mb / s_q.mean.as_secs_f64()),
@@ -39,5 +54,86 @@ fn main() {
         "State-precision store throughput",
         &["buffer", "int8 quantize", "int8 dequantize", "bf16 encode"],
         &rows,
+    );
+
+    // --- Fused vs round-trip 8-bit projected Adam step ---------------------
+    let be = NativeBackend::new();
+    let mut step_rows = Vec::new();
+    for (m, n, r) in [(1024usize, 256usize, 64usize), (4096, 512, 128)] {
+        let (mb, nb) = (m.max(n), m.min(n));
+        let w = Tensor::from_f32(&[m, n], rng.normal_vec(m * n, 0.02));
+        let g = Tensor::from_f32(&[m, n], rng.normal_vec(m * n, 0.02));
+        let p = Tensor::from_f32(&[nb, r], rng.normal_vec(nb * r, 0.1));
+        let scalars = [
+            Tensor::scalar_f32(0.9),
+            Tensor::scalar_f32(0.999),
+            Tensor::scalar_f32(1e-3),
+            Tensor::scalar_f32(0.0),
+        ];
+        let inputs = [
+            &w,
+            &g,
+            &p,
+            &scalars[0],
+            &scalars[1],
+            &scalars[2],
+            &scalars[3],
+        ];
+        let name = names::matrix_proj("coap_adam_step", m, n, r);
+        let seed_m = Tensor::from_f32(&[mb, r], rng.normal_vec(mb * r, 0.01));
+        let seed_v = Tensor::from_f32(
+            &[mb, r],
+            rng.normal_vec(mb * r, 0.001).iter().map(|x| x.abs()).collect(),
+        );
+        let mut ms = StateBuf::zeros(&[mb, r], Precision::Int8);
+        let mut vs = StateBuf::zeros(&[mb, r], Precision::Int8);
+        ms.store(&seed_m);
+        vs.store(&seed_v);
+
+        let s_fused = bench.run(&format!("fused int8 step {m}x{n} r{r}"), || {
+            let mut views = [ms.view(), vs.view()];
+            be.exec_with_state(&name, &inputs, &mut views).unwrap();
+        });
+        ms.store(&seed_m);
+        vs.store(&seed_v);
+        let s_rt = bench.run(&format!("roundtrip int8 step {m}x{n} r{r}"), || {
+            let mut views = [ms.view(), vs.view()];
+            be.exec_with_state_roundtrip(&name, &inputs, &mut views).unwrap();
+        });
+
+        // Single source of truth for the accounting rule.
+        let fused_transient = ms.transient_bytes(true) + vs.transient_bytes(true);
+        let rt_transient = ms.transient_bytes(false) + vs.transient_bytes(false);
+        append_json(
+            "quant_throughput",
+            &[
+                ("case", format!("int8 step {m}x{n} r{r}")),
+                ("fused_ms", format!("{:.4}", s_fused.mean_ms())),
+                ("roundtrip_ms", format!("{:.4}", s_rt.mean_ms())),
+                ("speedup", format!("{:.3}", s_rt.mean_ms() / s_fused.mean_ms())),
+                ("fused_transient_bytes", format!("{fused_transient}")),
+                ("roundtrip_transient_bytes", format!("{rt_transient}")),
+            ],
+        );
+        step_rows.push(vec![
+            format!("{m}x{n} r={r}"),
+            format!("{:.3}", s_fused.mean_ms()),
+            format!("{:.3}", s_rt.mean_ms()),
+            format!("{:.2}x", s_rt.mean_ms() / s_fused.mean_ms()),
+            format!("{fused_transient} B"),
+            format!("{rt_transient} B"),
+        ]);
+    }
+    print_table(
+        "Fused vs round-trip 8-bit projected Adam step",
+        &[
+            "shape",
+            "fused (ms)",
+            "roundtrip (ms)",
+            "roundtrip/fused",
+            "fused transient",
+            "roundtrip transient",
+        ],
+        &step_rows,
     );
 }

@@ -5,6 +5,13 @@
 //! our substitute is an accounting statement over the same categories
 //! with the same composition toggles: activation checkpointing (AC),
 //! LOMO (fused backward, no full gradient buffer), and 8-bit states.
+//!
+//! Optimizer state counts at its **real stored size** (8-bit slots are
+//! codes + one f32 scale per 256-element block — ~0.25x of f32, the
+//! paper's 81%-cut rows), and [`MemoryBreakdown::opt_transient`]
+//! reports the step-time spike on top of steady state: since the fused
+//! state path, the native backend's spike is block scratch instead of a
+//! full f32 copy per compressed slot.
 
 use crate::runtime::ModelInfo;
 
@@ -14,11 +21,23 @@ pub struct MemoryBreakdown {
     pub grads: usize,
     pub optimizer: usize,
     pub activations: usize,
+    /// Peak transient state bytes one optimizer step materializes on
+    /// top of `optimizer` (`Optimizer::state_transient_bytes`). Not
+    /// part of [`MemoryBreakdown::total`] (steady state); see
+    /// [`MemoryBreakdown::peak`].
+    pub opt_transient: usize,
 }
 
 impl MemoryBreakdown {
+    /// Steady-state footprint between steps.
     pub fn total(&self) -> usize {
         self.params + self.grads + self.optimizer + self.activations
+    }
+
+    /// Peak footprint during an optimizer step (steady state plus the
+    /// transient state copies/scratch the step path materializes).
+    pub fn peak(&self) -> usize {
+        self.total() + self.opt_transient
     }
 }
 
@@ -77,11 +96,13 @@ impl MemoryAccountant {
     }
 
     /// Full breakdown for a run: exact params/state bytes + analytic
-    /// activations.
+    /// activations. `optimizer_transient` is the step-time spike from
+    /// `Optimizer::state_transient_bytes` (pass 0 when not relevant).
     pub fn breakdown(
         info: &ModelInfo,
         param_bytes: usize,
         optimizer_bytes: usize,
+        optimizer_transient: usize,
         toggles: MemoryToggles,
     ) -> MemoryBreakdown {
         let grads = if toggles.lomo {
@@ -96,6 +117,7 @@ impl MemoryAccountant {
             grads,
             optimizer: optimizer_bytes,
             activations: Self::activation_bytes(info, toggles.activation_checkpointing),
+            opt_transient: optimizer_transient,
         }
     }
 }
@@ -143,13 +165,93 @@ mod tests {
         let info = lm_info();
         let pbytes = (64 * 64 + 64 * 256) * 4;
         let no = MemoryAccountant::breakdown(
-            &info, pbytes, 0,
+            &info, pbytes, 0, 0,
             MemoryToggles { activation_checkpointing: false, lomo: false });
         let yes = MemoryAccountant::breakdown(
-            &info, pbytes, 0,
+            &info, pbytes, 0, 0,
             MemoryToggles { activation_checkpointing: false, lomo: true });
         assert_eq!(no.grads, pbytes);
         assert_eq!(yes.grads, 64 * 256 * 4);
         assert!(yes.total() < no.total());
+    }
+
+    /// Regression for the 8-bit accounting contract: `SlotState` Int8
+    /// buffers count codes + per-block scales, so a zoo micro model's
+    /// reported 8-bit optimizer memory lands in the paper's ballpark
+    /// (~0.25x of the f32 states, plus the block-scale overhead and the
+    /// few vector states that stay f32).
+    #[test]
+    fn int8_state_bytes_are_quarter_of_f32_on_zoo_micro_model() {
+        use crate::config::{OptKind, TrainConfig};
+        use crate::model::zoo;
+        use crate::optim;
+        use crate::tensor::Precision;
+        let info = zoo::models()
+            .into_iter()
+            .find(|m| m.name == "lm_micro")
+            .expect("lm_micro in the zoo");
+        let bytes_at = |prec| {
+            let mut c = TrainConfig::default();
+            c.optimizer = OptKind::AdamW;
+            c.state_precision = prec;
+            c.threads = 1;
+            optim::build(&c, &info).unwrap().state_bytes()
+        };
+        let f32b = bytes_at(Precision::F32);
+        let i8b = bytes_at(Precision::Int8);
+        let ratio = i8b as f64 / f32b as f64;
+        assert!(
+            ratio > 0.25 && ratio < 0.30,
+            "int8/f32 optimizer-memory ratio {ratio:.4} outside the paper's ballpark \
+             ({i8b} vs {f32b} bytes)"
+        );
+    }
+
+    /// The fused state path's memory claim: stepping 8-bit state costs
+    /// block scratch, not a full f32 copy per slot — and the breakdown's
+    /// peak reflects the difference.
+    #[test]
+    fn fused_path_shrinks_transient_state_bytes() {
+        use crate::config::{OptKind, TrainConfig};
+        use crate::model::zoo;
+        use crate::optim;
+        use crate::tensor::{quant, Precision};
+        let info = zoo::models()
+            .into_iter()
+            .find(|m| m.name == "lm_micro")
+            .expect("lm_micro in the zoo");
+        let mut c = TrainConfig::default();
+        c.optimizer = OptKind::Coap;
+        c.state_precision = Precision::Int8;
+        c.threads = 1;
+        // Recalib-only schedule: the Eqn-6 P-update reads the moment via
+        // `loaded()` (a full materialization), which would dominate the
+        // per-step peak; disable it to isolate the step-kernel path.
+        c.ablation.use_pupdate = false;
+        let opt = optim::build(&c, &info).unwrap();
+        let fused = opt.state_transient_bytes(true);
+        let roundtrip = opt.state_transient_bytes(false);
+        // Fused: one scratch block per streamed moment (m and v).
+        assert_eq!(fused, 2 * quant::BLOCK * 4, "fused transient");
+        assert!(
+            roundtrip > fused,
+            "round trip ({roundtrip}) must materialize more than fused ({fused})"
+        );
+        // With the Eqn-6 P-update on, the refresh path's full moment
+        // materialization is charged to the peak even when fused.
+        let mut c_pu = c.clone();
+        c_pu.ablation.use_pupdate = true;
+        let opt_pu = optim::build(&c_pu, &info).unwrap();
+        assert!(
+            opt_pu.state_transient_bytes(true) > fused,
+            "pupdate refresh spike must be accounted"
+        );
+        let toggles = MemoryToggles { activation_checkpointing: false, lomo: false };
+        let pb = info.params.iter().map(|p| p.numel() * 4).sum::<usize>();
+        let ob = opt.state_bytes();
+        let rt_bd = MemoryAccountant::breakdown(&info, pb, ob, roundtrip, toggles);
+        let fu_bd = MemoryAccountant::breakdown(&info, pb, ob, fused, toggles);
+        assert_eq!(rt_bd.total(), fu_bd.total(), "steady state is unchanged");
+        assert!(fu_bd.peak() < rt_bd.peak(), "fused peak must drop");
     }
 }

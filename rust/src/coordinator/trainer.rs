@@ -39,6 +39,10 @@ pub struct TrainReport {
     pub opt_step_time: Duration,
     pub proj_time: Duration,
     pub optimizer_bytes: usize,
+    /// Peak transient bytes a step materializes for state access on top
+    /// of `optimizer_bytes` (zero-ish on fused-state backends; a full
+    /// f32 copy per compressed slot on round-trip backends).
+    pub opt_transient_bytes: usize,
     pub param_bytes: usize,
     pub ceu_total: f64,
     pub train_losses: Vec<(usize, f64)>,
@@ -157,6 +161,7 @@ impl Trainer {
             opt_step_time: opt_step,
             proj_time: proj,
             optimizer_bytes: self.opt.state_bytes(),
+            opt_transient_bytes: self.opt.state_transient_bytes(self.rt.fuses_states()),
             param_bytes: self.store.param_bytes(),
             ceu_total: self.metrics.ceu_total,
             train_losses: self.metrics.train_losses.clone(),

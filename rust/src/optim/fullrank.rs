@@ -107,37 +107,33 @@ impl Optimizer for FullRank {
                 Slot::MatrixAdam { rows, cols, m, v } => {
                     // exec() builds literals with the manifest shape, so
                     // conv params pass through as their mode-1 unfolding
-                    // without a reshape copy.
+                    // without a reshape copy. Moments ride as StateViews
+                    // and update in place (fused state contract).
                     let name = names::fullrank("adam_step", *rows, *cols);
-                    let (ml, vl) = (m.loaded(), v.loaded());
-                    let out = rt.exec(
+                    let mut views = [m.view(), v.view()];
+                    let out = rt.exec_with_state(
                         &name,
-                        &[&params[i], &grads[i], &ml, &vl, &b1t, &b2t, &lr_t, &wd_t],
+                        &[&params[i], &grads[i], &b1t, &b2t, &lr_t, &wd_t],
+                        &mut views,
                     )?;
-                    drop((ml, vl));
                     let orig = params[i].dims().to_vec();
                     let mut it = out.into_iter();
                     params[i] = it.next().unwrap().reshaped(&orig);
-                    m.store(&it.next().unwrap());
-                    v.store(&it.next().unwrap());
                     if self.track_ceu {
                         stats.ceu += it.next().unwrap().scalar() as f64;
                     }
                 }
                 Slot::MatrixFactor { rows, cols, m, r, c } => {
                     let name = names::fullrank("adafactor_step", *rows, *cols);
-                    let (ml, rl, cl) = (m.loaded(), r.loaded(), c.loaded());
-                    let out = rt.exec(
+                    let mut views = [m.view(), r.view(), c.view()];
+                    let out = rt.exec_with_state(
                         &name,
-                        &[&params[i], &grads[i], &ml, &rl, &cl, &t_t, &lr_t],
+                        &[&params[i], &grads[i], &t_t, &lr_t],
+                        &mut views,
                     )?;
-                    drop((ml, rl, cl));
                     let orig = params[i].dims().to_vec();
                     let mut it = out.into_iter();
                     params[i] = it.next().unwrap().reshaped(&orig);
-                    m.store(&it.next().unwrap());
-                    r.store(&it.next().unwrap());
-                    c.store(&it.next().unwrap());
                     if self.track_ceu {
                         stats.ceu += it.next().unwrap().scalar() as f64;
                     }
@@ -157,6 +153,25 @@ impl Optimizer for FullRank {
                 Slot::MatrixFactor { m, r, c, .. } => m.nbytes() + r.nbytes() + c.nbytes(),
             })
             .sum()
+    }
+
+    fn state_transient_bytes(&self, fused: bool) -> usize {
+        // Slots step serially, so the peak is the worst single slot.
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Vector { .. } => 0,
+                Slot::MatrixAdam { m, v, .. } => {
+                    m.transient_bytes(fused) + v.transient_bytes(fused)
+                }
+                Slot::MatrixFactor { m, r, c, .. } => {
+                    m.transient_bytes(fused)
+                        + r.transient_bytes(fused)
+                        + c.transient_bytes(fused)
+                }
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     fn label(&self) -> String {

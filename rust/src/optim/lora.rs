@@ -122,17 +122,15 @@ impl Optimizer for Lora {
                 }
                 Slot::FullAdam { rows, cols, reshape, m, v } => {
                     let name = names::fullrank("adam_step", *rows, *cols);
-                    let (ml, vl) = (m.loaded(), v.loaded());
-                    let out = rt.exec(
+                    let mut views = [m.view(), v.view()];
+                    let out = rt.exec_with_state(
                         &name,
-                        &[&params[i], &grads[i], &ml, &vl, &b1t, &b2t, &lr_t, &wd_t],
+                        &[&params[i], &grads[i], &b1t, &b2t, &lr_t, &wd_t],
+                        &mut views,
                     )?;
-                    drop((ml, vl));
                     let orig = reshape.clone().unwrap_or_else(|| vec![*rows, *cols]);
                     let mut it = out.into_iter();
                     params[i] = it.next().unwrap().reshaped(&orig);
-                    m.store(&it.next().unwrap());
-                    v.store(&it.next().unwrap());
                     if self.track_ceu {
                         stats.ceu += it.next().unwrap().scalar() as f64;
                     }
@@ -189,6 +187,28 @@ impl Optimizer for Lora {
                 }
             })
             .sum()
+    }
+
+    fn state_transient_bytes(&self, fused: bool) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Vector { .. } => 0,
+                Slot::FullAdam { m, v, .. } => {
+                    m.transient_bytes(fused) + v.transient_bytes(fused)
+                }
+                // Adapter states still ride the round-trip contract: the
+                // lora_adam_step graph interleaves its four moment
+                // operands differently from the step-template layout.
+                Slot::Adapters { ma, va, mb, vb, .. } => {
+                    ma.transient_bytes(false)
+                        + va.transient_bytes(false)
+                        + mb.transient_bytes(false)
+                        + vb.transient_bytes(false)
+                }
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     fn label(&self) -> String {

@@ -53,6 +53,26 @@ impl States {
             States::Factor { m, rf, cf } => m.nbytes() + rf.nbytes() + cf.nbytes(),
         }
     }
+
+    fn transient_bytes(&self, fused: bool) -> usize {
+        match self {
+            States::Adam { m, v } => m.transient_bytes(fused) + v.transient_bytes(fused),
+            States::Factor { m, rf, cf } => {
+                m.transient_bytes(fused)
+                    + rf.transient_bytes(fused)
+                    + cf.transient_bytes(fused)
+            }
+        }
+    }
+
+    /// Bytes `loaded()`-materializing the first moment costs (the
+    /// projection-refresh read path) — zero for f32, full f32 copy for
+    /// compressed storage.
+    fn moment_transient_bytes(&self) -> usize {
+        match self {
+            States::Adam { m, .. } | States::Factor { m, .. } => m.transient_bytes(false),
+        }
+    }
 }
 
 enum Slot {
@@ -321,34 +341,32 @@ fn step_slot(
             let t0 = Instant::now();
             let pt = p.as_ref().unwrap();
             let orig_dims = param.dims().to_vec();
+            // Fused state contract: moments ride as StateViews and are
+            // updated in place (block-streamed when bf16/8-bit) — see
+            // `Backend::exec_with_state`.
             let (ceu, new_w) = match st {
                 States::Adam { m, v } => {
                     let name = names::matrix_proj("coap_adam_step", *rows, *cols, *rank);
-                    let (ml, vl) = (m.loaded(), v.loaded());
-                    let out = rt.exec(
+                    let mut views = [m.view(), v.view()];
+                    let out = rt.exec_with_state(
                         &name,
-                        &[&*param, grad, &ml, &vl, pt, &ctx.b1t, &ctx.b2t, &ctx.lr_t, &ctx.wd_t],
+                        &[&*param, grad, pt, &ctx.b1t, &ctx.b2t, &ctx.lr_t, &ctx.wd_t],
+                        &mut views,
                     )?;
-                    drop((ml, vl));
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
-                    m.store(&it.next().unwrap());
-                    v.store(&it.next().unwrap());
                     (it.next().unwrap().scalar(), w)
                 }
                 States::Factor { m, rf, cf } => {
                     let name = names::matrix_proj("coap_adafactor_step", *rows, *cols, *rank);
-                    let (ml, rl, cl) = (m.loaded(), rf.loaded(), cf.loaded());
-                    let out = rt.exec(
+                    let mut views = [m.view(), rf.view(), cf.view()];
+                    let out = rt.exec_with_state(
                         &name,
-                        &[&*param, grad, &ml, &rl, &cl, pt, &ctx.t_t, &ctx.lr_t],
+                        &[&*param, grad, pt, &ctx.t_t, &ctx.lr_t],
+                        &mut views,
                     )?;
-                    drop((ml, rl, cl));
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
-                    m.store(&it.next().unwrap());
-                    rf.store(&it.next().unwrap());
-                    cf.store(&it.next().unwrap());
                     (it.next().unwrap().scalar(), w)
                 }
             };
@@ -428,51 +446,41 @@ fn step_slot(
             let (ceu, new_w) = match (st, ps.as_ref()) {
                 (States::Adam { m, v }, None) => {
                     let name = names::conv("coap_adam_conv_step", shape, *ro, *ri);
-                    let (ml, vl) = (m.loaded(), v.loaded());
-                    let out = rt.exec(
+                    let mut views = [m.view(), v.view()];
+                    let out = rt.exec_with_state(
                         &name,
-                        &[
-                            &*param, g4, &ml, &vl, pot, pit, &ctx.b1t, &ctx.b2t, &ctx.lr_t,
-                            &ctx.wd_t,
-                        ],
+                        &[&*param, g4, pot, pit, &ctx.b1t, &ctx.b2t, &ctx.lr_t, &ctx.wd_t],
+                        &mut views,
                     )?;
-                    drop((ml, vl));
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
-                    m.store(&it.next().unwrap());
-                    v.store(&it.next().unwrap());
                     (it.next().unwrap().scalar(), w)
                 }
                 (States::Adam { m, v }, Some(ps_t)) => {
                     let name = names::conv_full(shape, *ro, *ri);
-                    let (ml, vl) = (m.loaded(), v.loaded());
-                    let out = rt.exec(
+                    let mut views = [m.view(), v.view()];
+                    let out = rt.exec_with_state(
                         &name,
                         &[
-                            &*param, g4, &ml, &vl, pot, pit, ps_t, &ctx.b1t, &ctx.b2t,
-                            &ctx.lr_t, &ctx.wd_t,
+                            &*param, g4, pot, pit, ps_t, &ctx.b1t, &ctx.b2t, &ctx.lr_t,
+                            &ctx.wd_t,
                         ],
+                        &mut views,
                     )?;
-                    drop((ml, vl));
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
-                    m.store(&it.next().unwrap());
-                    v.store(&it.next().unwrap());
                     (it.next().unwrap().scalar(), w)
                 }
                 (States::Factor { m, rf, cf }, _) => {
                     let name = names::conv("coap_adafactor_conv_step", shape, *ro, *ri);
-                    let (ml, rl, cl) = (m.loaded(), rf.loaded(), cf.loaded());
-                    let out = rt.exec(
+                    let mut views = [m.view(), rf.view(), cf.view()];
+                    let out = rt.exec_with_state(
                         &name,
-                        &[&*param, g4, &ml, &rl, &cl, pot, pit, &ctx.t_t, &ctx.lr_t],
+                        &[&*param, g4, pot, pit, &ctx.t_t, &ctx.lr_t],
+                        &mut views,
                     )?;
-                    drop((ml, rl, cl));
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
-                    m.store(&it.next().unwrap());
-                    rf.store(&it.next().unwrap());
-                    cf.store(&it.next().unwrap());
                     (it.next().unwrap().scalar(), w)
                 }
             };
@@ -572,6 +580,36 @@ impl Optimizer for LowRank {
                 }
             })
             .sum()
+    }
+
+    fn state_transient_bytes(&self, fused: bool) -> usize {
+        // COAP's Eqn-6 refresh feeds the first moment into the P-update
+        // graph via `loaded()` — a full materialization of compressed m
+        // on refresh steps, regardless of step-kernel fusion. The peak
+        // is the max over both step kinds (upper bound: full-Tucker conv
+        // slots skip the P-update but are counted as if they didn't).
+        let refresh_reads_moment =
+            matches!(self.policy, Policy::Coap(s) if s.use_pupdate);
+        let worst = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Vector { .. } => 0,
+                Slot::Matrix { st, .. } | Slot::Conv { st, .. } => {
+                    let step = st.transient_bytes(fused);
+                    let refresh = if refresh_reads_moment {
+                        st.moment_transient_bytes()
+                    } else {
+                        0
+                    };
+                    step.max(refresh)
+                }
+            })
+            .max()
+            .unwrap_or(0);
+        // Slots step concurrently across the pool, so up to `workers`
+        // per-slot transients are live at once.
+        worst * self.pool.workers().min(self.slots.len()).max(1)
     }
 
     fn label(&self) -> String {

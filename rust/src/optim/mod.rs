@@ -22,6 +22,7 @@ pub mod scheduler;
 
 use crate::config::{OptKind, TrainConfig};
 use crate::runtime::{Backend, ModelInfo};
+use crate::tensor::state::StateView;
 use crate::tensor::{quant, Precision, Tensor};
 use anyhow::Result;
 use std::time::Duration;
@@ -60,8 +61,21 @@ pub trait Optimizer: Send {
     ) -> Result<StepStats>;
 
     /// Exact bytes of optimizer state currently held (paper's
-    /// "Optimizer Mem." columns).
+    /// "Optimizer Mem." columns). Compressed slots count at their real
+    /// stored size (bf16 words; 8-bit codes + per-block scales).
     fn state_bytes(&self) -> usize;
+
+    /// Peak transient bytes one step materializes for state access, on
+    /// top of [`Optimizer::state_bytes`]. `fused` is the backend's
+    /// [`Backend::fuses_states`]: the fused path touches only
+    /// block-sized scratch per compressed state, while the round-trip
+    /// path materializes a full f32 copy of every compressed slot it
+    /// steps — the delta the 8-bit rows of the paper's memory tables
+    /// care about.
+    fn state_transient_bytes(&self, fused: bool) -> usize {
+        let _ = fused;
+        0
+    }
 
     fn label(&self) -> String;
 }
@@ -84,9 +98,14 @@ pub fn build(cfg: &TrainConfig, info: &ModelInfo) -> Result<Box<dyn Optimizer>> 
 // ---------------------------------------------------------------------------
 
 /// One optimizer-state buffer stored at the configured precision.
-/// Dequantized to f32 right before an HLO step and re-quantized after —
-/// only the *storage between steps* is compressed (the 8-bit optimizer
-/// contract of Dettmers et al.).
+///
+/// Step kernels consume it through [`StateBuf::view`] +
+/// [`Backend::exec_with_state`]: f32 state updates in place, bf16/8-bit
+/// state streams block-by-block through dequant → update → requant in
+/// the kernel itself — no transient f32 copy. [`StateBuf::load`] /
+/// [`StateBuf::store`] remain for the read-only paths (projection
+/// refreshes that feed the moment into a GEMM) and for the round-trip
+/// reference semantics.
 #[derive(Debug, Clone)]
 pub enum StateBuf {
     F32(Tensor),
@@ -154,6 +173,40 @@ impl StateBuf {
             StateBuf::Int8 { q, .. } => q.nbytes(),
         }
     }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            StateBuf::F32(t) => t.numel(),
+            StateBuf::Bf16 { data, .. } => data.len(),
+            StateBuf::Int8 { q, .. } => q.len,
+        }
+    }
+
+    /// Mutable view at storage precision — what the fused step kernels
+    /// consume through [`Backend::exec_with_state`].
+    pub fn view(&mut self) -> StateView<'_> {
+        match self {
+            StateBuf::F32(t) => StateView::F32(t.f32s_mut()),
+            StateBuf::Bf16 { data, .. } => StateView::Bf16(&mut data[..]),
+            StateBuf::Int8 { q, .. } => StateView::Int8(q),
+        }
+    }
+
+    /// Transient bytes one step's access to this buffer materializes:
+    /// zero for f32 (in-place), block scratch when the backend fuses,
+    /// a full f32 copy when it round-trips.
+    pub fn transient_bytes(&self, fused: bool) -> usize {
+        match self {
+            StateBuf::F32(_) => 0,
+            _ => {
+                if fused {
+                    quant::BLOCK.min(self.numel()) * 4
+                } else {
+                    self.numel() * 4
+                }
+            }
+        }
+    }
 }
 
 /// Borrowed-or-owned state tensor (see [`StateBuf::loaded`]).
@@ -210,6 +263,28 @@ mod tests {
         assert_eq!(f, 4096);
         assert_eq!(b, 2048);
         assert!(i < b && i >= 1024);
+    }
+
+    #[test]
+    fn statebuf_view_matches_load_and_counts_transients() {
+        let vals: Vec<f32> = (0..600).map(|i| (i as f32 - 300.0) * 1e-3).collect();
+        let t = Tensor::from_f32(&[600], vals);
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let mut b = StateBuf::zeros(&[600], prec);
+            b.store(&t);
+            let loaded = b.load();
+            let via_view = b.view().materialize();
+            assert_eq!(loaded.f32s(), &via_view[..], "{prec:?} view drifted from load");
+            let (fused, roundtrip) =
+                (b.transient_bytes(true), b.transient_bytes(false));
+            match prec {
+                Precision::F32 => assert_eq!((fused, roundtrip), (0, 0)),
+                _ => {
+                    assert_eq!(fused, quant::BLOCK * 4, "{prec:?}");
+                    assert_eq!(roundtrip, 600 * 4, "{prec:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -7,11 +7,17 @@
 //!    PJRT round trip costs more than the math);
 //! 3. a mock runtime for unit tests that must not depend on artifacts.
 
+use crate::tensor::state::{self, StateView};
 use crate::tensor::{linalg, Tensor};
 
 pub const BETA1: f32 = 0.9;
 pub const BETA2: f32 = 0.999;
 pub const EPS: f32 = 1e-8;
+/// Adafactor second-moment decay exponent (Algorithm 2) — shared by the
+/// slice oracle and the fused state-view kernel so they cannot drift.
+pub const AF_DECAY: f32 = -0.8;
+/// Adafactor numerical floor.
+pub const AF_EPS: f32 = 1e-30;
 
 /// Fused Adam moment update; returns the bias-corrected step direction.
 pub fn adam_update(m: &mut [f32], v: &mut [f32], g: &[f32], b1t: f32, b2t: f32) -> Vec<f32> {
@@ -60,15 +66,13 @@ pub fn adafactor_delta(
     cols: usize,
     t: usize,
 ) -> Vec<f32> {
-    const DECAY: f32 = -0.8;
-    const AEPS: f32 = 1e-30;
-    let beta2t = 1.0 - (t as f32).powf(DECAY);
+    let beta2t = 1.0 - (t as f32).powf(AF_DECAY);
     for i in 0..rows {
-        let sum: f32 = (0..cols).map(|j| g[i * cols + j].powi(2) + AEPS).sum();
+        let sum: f32 = (0..cols).map(|j| g[i * cols + j].powi(2) + AF_EPS).sum();
         r_fac[i] = beta2t * r_fac[i] + (1.0 - beta2t) * sum;
     }
     for j in 0..cols {
-        let sum: f32 = (0..rows).map(|i| g[i * cols + j].powi(2) + AEPS).sum();
+        let sum: f32 = (0..rows).map(|i| g[i * cols + j].powi(2) + AF_EPS).sum();
         c_fac[j] = beta2t * c_fac[j] + (1.0 - beta2t) * sum;
     }
     let rmean: f32 = r_fac.iter().sum::<f32>() / rows as f32;
@@ -77,7 +81,7 @@ pub fn adafactor_delta(
         for j in 0..cols {
             let idx = i * cols + j;
             mom[idx] = BETA1 * mom[idx] + (1.0 - BETA1) * g[idx];
-            let vhat = (rmean / (r_fac[i] * c_fac[j] + AEPS)).sqrt();
+            let vhat = (rmean / (r_fac[i] * c_fac[j] + AF_EPS)).sqrt();
             delta[idx] = mom[idx] * vhat;
         }
     }
@@ -534,6 +538,246 @@ pub fn lora_adam_step_mat(
     (w_new, a_new, b_new, ma_new, va_new, mb_new, vb_new, ceu)
 }
 
+// ---------------------------------------------------------------------------
+// Fused state-view kernels (the quantized optimizer-state path)
+//
+// Same update rules as the slice oracles above, but the moments arrive
+// as `tensor::state::StateView`s: f32 states are mutated in place (no
+// copy at all), bf16/8-bit states stream through `state::stream1/2` —
+// dequant → update → requant per 256-element block in thread-local
+// scratch. Every arithmetic expression is written identically to its
+// slice twin, and the streaming drivers guarantee block-local codecs,
+// so `*_state` is bit-identical to materialize-all → slice kernel →
+// re-store for every storage precision (`tests/quant_fused_parity.rs`).
+// ---------------------------------------------------------------------------
+
+/// Fused Adam moment update: updates `m`/`v` through their views and
+/// returns the bias-corrected step direction (the dense GEMM operand).
+pub fn adam_update_view(
+    m: &mut StateView,
+    v: &mut StateView,
+    g: &[f32],
+    b1t: f32,
+    b2t: f32,
+) -> Vec<f32> {
+    assert_eq!(m.len(), g.len(), "adam_update_view: m/g length mismatch");
+    let mut delta = vec![0.0f32; g.len()];
+    state::stream2(m, v, |off, mb, vb| {
+        let gb = &g[off..off + mb.len()];
+        let db = &mut delta[off..off + mb.len()];
+        for i in 0..gb.len() {
+            mb[i] = BETA1 * mb[i] + (1.0 - BETA1) * gb[i];
+            vb[i] = BETA2 * vb[i] + (1.0 - BETA2) * gb[i] * gb[i];
+            let mh = mb[i] / (1.0 - b1t);
+            let vh = vb[i] / (1.0 - b2t);
+            db[i] = mh / (vh.sqrt() + EPS);
+        }
+    });
+    delta
+}
+
+/// Fused Adafactor-with-momentum update: factored rows/cols update as
+/// dense f32 (they are O(m+n) and depend only on `g`), then the moment
+/// streams block-by-block. Returns the un-scaled step direction.
+pub fn adafactor_delta_view(
+    mom: &mut StateView,
+    r_fac: &mut [f32],
+    c_fac: &mut [f32],
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    t: usize,
+) -> Vec<f32> {
+    assert_eq!(mom.len(), rows * cols, "adafactor_delta_view: mom length mismatch");
+    let beta2t = 1.0 - (t as f32).powf(AF_DECAY);
+    for i in 0..rows {
+        let sum: f32 = (0..cols).map(|j| g[i * cols + j].powi(2) + AF_EPS).sum();
+        r_fac[i] = beta2t * r_fac[i] + (1.0 - beta2t) * sum;
+    }
+    for j in 0..cols {
+        let sum: f32 = (0..rows).map(|i| g[i * cols + j].powi(2) + AF_EPS).sum();
+        c_fac[j] = beta2t * c_fac[j] + (1.0 - beta2t) * sum;
+    }
+    let rmean: f32 = r_fac.iter().sum::<f32>() / rows as f32;
+    let mut delta = vec![0.0f32; rows * cols];
+    state::stream1(mom, |off, mb| {
+        // Track (i, j) incrementally — one div/mod per block, not per
+        // element (same values, bit-identical to the slice twin).
+        let (mut i, mut j) = (off / cols, off % cols);
+        for (k, m_el) in mb.iter_mut().enumerate() {
+            let idx = off + k;
+            *m_el = BETA1 * *m_el + (1.0 - BETA1) * g[idx];
+            let vhat = (rmean / (r_fac[i] * c_fac[j] + AF_EPS)).sqrt();
+            delta[idx] = *m_el * vhat;
+            j += 1;
+            if j == cols {
+                j = 0;
+                i += 1;
+            }
+        }
+    });
+    delta
+}
+
+/// Fused full-rank Adam(W) step (`adam_step` graph). Returns (w', ceu);
+/// m/v update in place through their views.
+pub fn adam_step_state(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    v: &mut StateView,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, f32) {
+    let delta = adam_update_view(m, v, g, b1t, b2t);
+    apply_update(w, &delta, lr, wd)
+}
+
+/// Fused full-rank Adafactor step (`adafactor_step` graph).
+pub fn adafactor_step_state(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    rf: &mut StateView,
+    cf: &mut StateView,
+    rows: usize,
+    cols: usize,
+    t: usize,
+    lr: f32,
+) -> (Vec<f32>, f32) {
+    let delta = rf.with_f32(|r_s| {
+        cf.with_f32(|c_s| adafactor_delta_view(m, r_s, c_s, g, rows, cols, t))
+    });
+    apply_update(w, &delta, lr, 0.0)
+}
+
+/// Fused projected Adam step (`coap_adam_step` graph): project the
+/// gradient, stream the low-rank moments, restore the update.
+pub fn coap_adam_step_state(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    v: &mut StateView,
+    p: &[f32],
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, f32) {
+    let (mb, nb) = (rows.max(cols), rows.min(cols));
+    let (gn, transpose) = normalize(g, rows, cols);
+    let g_proj = linalg::gemm_nn(None, &gn, p, mb, nb, rank); // (mb, r)
+    let delta = adam_update_view(m, v, &g_proj, b1t, b2t);
+    let dw_n = linalg::gemm_nt(None, &delta, p, mb, rank, nb); // delta·Pᵀ
+    let dw = if transpose { linalg::transpose(&dw_n, mb, nb) } else { dw_n };
+    apply_update(w, &dw, lr, wd)
+}
+
+/// Fused projected Adafactor step (`coap_adafactor_step` graph).
+pub fn coap_adafactor_step_state(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    rf: &mut StateView,
+    cf: &mut StateView,
+    p: &[f32],
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    t: usize,
+    lr: f32,
+) -> (Vec<f32>, f32) {
+    let (mb, nb) = (rows.max(cols), rows.min(cols));
+    let (gn, transpose) = normalize(g, rows, cols);
+    let g_proj = linalg::gemm_nn(None, &gn, p, mb, nb, rank); // (mb, r)
+    let delta = rf.with_f32(|r_s| {
+        cf.with_f32(|c_s| adafactor_delta_view(m, r_s, c_s, &g_proj, mb, rank, t))
+    });
+    let dw_n = linalg::gemm_nt(None, &delta, p, mb, rank, nb); // delta·Pᵀ
+    let dw = if transpose { linalg::transpose(&dw_n, mb, nb) } else { dw_n };
+    apply_update(w, &dw, lr, 0.0)
+}
+
+/// Fused Tucker-2 projected Adam conv step (`coap_adam_conv_step`).
+pub fn coap_adam_conv_step_state(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    v: &mut StateView,
+    po: &[f32],
+    pi: &[f32],
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, f32) {
+    let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+    let g_proj = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
+    let delta = adam_update_view(m, v, &g_proj, b1t, b2t);
+    let dw = conv_restore_i(&conv_restore_o(&delta, ro, ri, kk, po, o), o, ri, kk, pi, i);
+    apply_update(w, &dw, lr, wd)
+}
+
+/// Fused Tucker-2 projected Adafactor conv step
+/// (`coap_adafactor_conv_step`).
+pub fn coap_adafactor_conv_step_state(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    rf: &mut StateView,
+    cf: &mut StateView,
+    po: &[f32],
+    pi: &[f32],
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    t: usize,
+    lr: f32,
+) -> (Vec<f32>, f32) {
+    let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+    let g_proj = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
+    let delta = rf.with_f32(|r_s| {
+        cf.with_f32(|c_s| adafactor_delta_view(m, r_s, c_s, &g_proj, ro, ri * kk, t))
+    });
+    let dw = conv_restore_i(&conv_restore_o(&delta, ro, ri, kk, po, o), o, ri, kk, pi, i);
+    apply_update(w, &dw, lr, 0.0)
+}
+
+/// Fused "full Tucker" conv Adam step (`coap_adam_convfull_step`).
+pub fn coap_adam_convfull_step_state(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    v: &mut StateView,
+    po: &[f32],
+    pi: &[f32],
+    ps: &[f32],
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    rs: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, f32) {
+    let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+    let g2 = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
+    let g3 = linalg::gemm_nn(None, &g2, ps, ro * ri, kk, rs);
+    let delta = adam_update_view(m, v, &g3, b1t, b2t);
+    let dk = linalg::gemm_nt(None, &delta, ps, ro * ri, rs, kk);
+    let dw = conv_restore_i(&conv_restore_o(&dk, ro, ri, kk, po, o), o, ri, kk, pi, i);
+    apply_update(w, &dw, lr, wd)
+}
+
 // --- Tucker-2 conv mode products (OIHW, row-major) --------------------------
 
 /// Mode-2 unfolding: (d0, d1, kk) -> (d1, d0*kk) — a block transpose on
@@ -838,6 +1082,56 @@ mod tests {
         let p1 = pupdate_sgd(&p0, &g, &m_proj, 4, 0.1);
         let after = eqn6_objective(&p1, &g, &m_proj);
         assert!(after < before, "objective rose: {before} -> {after}");
+    }
+
+    /// Kernel-level pin of the fused contract: streaming 8-bit moments
+    /// through `coap_adam_step_state` leaves w, ceu and the re-quantized
+    /// states bit-identical to dequantize-all → slice oracle → requantize.
+    #[test]
+    fn fused_state_kernel_matches_slice_oracle_bitwise() {
+        use crate::tensor::quant;
+        let mut rng = Rng::new(12);
+        let (m, n, r) = (40usize, 28usize, 6usize);
+        let (mb, nb) = (m.max(n), m.min(n));
+        let w = rng.normal_vec(m * n, 0.1);
+        let g = rng.normal_vec(m * n, 0.02);
+        let p = mgs_qr(&randmat(&mut rng, nb, r));
+        let m0 = rng.normal_vec(mb * r, 0.01);
+        let v0: Vec<f32> = rng.normal_vec(mb * r, 0.001).iter().map(|x| x.abs()).collect();
+        let mut qm = quant::quantize(&m0);
+        let mut qv = quant::quantize(&v0);
+        let (w_ref, m_ref, v_ref, ceu_ref) = coap_adam_step_mat(
+            &w,
+            &g,
+            &quant::dequantize_vec(&qm),
+            &quant::dequantize_vec(&qv),
+            p.f32s(),
+            m,
+            n,
+            r,
+            0.9,
+            0.999,
+            0.01,
+            0.0,
+        );
+        let (w_fused, ceu_fused) = coap_adam_step_state(
+            &w,
+            &g,
+            &mut StateView::Int8(&mut qm),
+            &mut StateView::Int8(&mut qv),
+            p.f32s(),
+            m,
+            n,
+            r,
+            0.9,
+            0.999,
+            0.01,
+            0.0,
+        );
+        assert_eq!(w_ref, w_fused, "fused w drifted from the slice oracle");
+        assert_eq!(ceu_ref, ceu_fused);
+        assert_eq!(qm, quant::quantize(&m_ref), "fused m requant drifted");
+        assert_eq!(qv, quant::quantize(&v_ref), "fused v requant drifted");
     }
 
     #[test]

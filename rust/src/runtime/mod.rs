@@ -33,8 +33,9 @@ pub use native::NativeBackend;
 pub use xla::Runtime;
 
 use crate::config::{BackendKind, TrainConfig};
+use crate::tensor::state::StateView;
 use crate::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// A graph executor + model census. Object-safe so the trainer, the
@@ -48,6 +49,76 @@ pub trait Backend: Send + Sync {
     /// Inputs may be layout-compatible reshapes of the canonical graph
     /// shapes (e.g. a 4-D conv weight for its mode-1 unfolding).
     fn exec(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute a *step* graph whose optimizer-state operands are passed
+    /// as mutable [`StateView`]s and updated **in place** instead of
+    /// being round-tripped through f32 tensors.
+    ///
+    /// Contract (every step template mints operands in this layout):
+    /// the graph's full input list is `inputs[..2]` (w, g), then the
+    /// states in order, then `inputs[2..]` (projections and scalars);
+    /// its outputs are `[w', states'…, ceu]`. Callers therefore pass
+    /// `inputs` *without* the state operands and get back only the
+    /// non-state outputs `[w', ceu]` — the states' new values land in
+    /// the views.
+    ///
+    /// The default implementation is the pre-fusion round trip
+    /// ([`Backend::exec_with_state_roundtrip`]); engines that can update
+    /// compressed state block-by-block (the native backend) override it
+    /// with a fused path that is bit-identical to the round trip
+    /// (`tests/quant_fused_parity.rs`).
+    fn exec_with_state(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        states: &mut [StateView],
+    ) -> Result<Vec<Tensor>> {
+        self.exec_with_state_roundtrip(name, inputs, states)
+    }
+
+    /// The reference path for [`Backend::exec_with_state`]: materialize
+    /// every state to f32, splice it into the operand list, run
+    /// [`Backend::exec`], and re-store the state outputs through the
+    /// views. Kept as a provided method (not overridden by any engine)
+    /// so the parity suite and benches can always compare the fused
+    /// path against the exact pre-fusion behaviour.
+    fn exec_with_state_roundtrip(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        states: &mut [StateView],
+    ) -> Result<Vec<Tensor>> {
+        if inputs.len() < 2 {
+            bail!("graph '{name}': step graphs take at least (w, g) inputs");
+        }
+        let mats: Vec<Tensor> = states
+            .iter()
+            .map(|s| Tensor::from_f32(&[s.len()], s.materialize()))
+            .collect();
+        let mut full: Vec<&Tensor> = Vec::with_capacity(inputs.len() + mats.len());
+        full.extend_from_slice(&inputs[..2]);
+        full.extend(mats.iter());
+        full.extend_from_slice(&inputs[2..]);
+        let out = self.exec(name, &full)?;
+        let k = states.len();
+        if out.len() < 1 + k {
+            bail!("graph '{name}': returned {} outputs, need at least {}", out.len(), 1 + k);
+        }
+        for (i, s) in states.iter_mut().enumerate() {
+            s.store_all(out[1 + i].f32s());
+        }
+        let mut it = out.into_iter();
+        let mut kept = vec![it.next().unwrap()];
+        kept.extend(it.skip(k));
+        Ok(kept)
+    }
+
+    /// Whether [`Backend::exec_with_state`] streams compressed states in
+    /// place (no full f32 materialization). Feeds the transient-memory
+    /// accounting (`Optimizer::state_transient_bytes`).
+    fn fuses_states(&self) -> bool {
+        false
+    }
 
     /// Model census entry by name.
     fn model(&self, name: &str) -> Result<ModelInfo>;

@@ -14,6 +14,7 @@
 use super::{Backend, ExperimentInfo, ModelInfo};
 use crate::model::{nativenet, zoo};
 use crate::optim::refimpl;
+use crate::tensor::state::StateView;
 use crate::tensor::{linalg, Tensor};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, bail, Result};
@@ -101,6 +102,19 @@ fn parse_spec(spec: &str) -> Option<Spec> {
     Some(out)
 }
 
+/// Step templates that honour the `exec_with_state` operand contract
+/// (inputs `[w, g, states…, rest…]`, outputs `[w', states'…, ceu]`) and
+/// have a fused dequant→update→requant implementation.
+const STEP_TEMPLATES: &[&str] = &[
+    "adam_step",
+    "adafactor_step",
+    "coap_adam_step",
+    "coap_adafactor_step",
+    "coap_adam_conv_step",
+    "coap_adafactor_conv_step",
+    "coap_adam_convfull_step",
+];
+
 const KERNEL_TEMPLATES: &[&str] = &[
     "adam_step",
     "adafactor_step",
@@ -180,6 +194,37 @@ impl Backend for NativeBackend {
         Ok(out)
     }
 
+    /// Fused path: step graphs update their state views in place, block
+    /// by block — no f32 materialization of bf16/8-bit states. Falls
+    /// back to the round trip for any non-step graph.
+    fn exec_with_state(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        states: &mut [StateView],
+    ) -> Result<Vec<Tensor>> {
+        let Some((tpl, spec_str)) = name.split_once("__") else {
+            bail!("'{name}' is not a minted graph name");
+        };
+        if !STEP_TEMPLATES.contains(&tpl) {
+            return self.exec_with_state_roundtrip(name, inputs, states);
+        }
+        let spec = parse_spec(spec_str)
+            .ok_or_else(|| anyhow!("graph '{name}': unparseable shape spec"))?;
+        let out = self.exec_step_fused(name, tpl, &spec, inputs, states)?;
+        *self
+            .exec_counts
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        Ok(out)
+    }
+
+    fn fuses_states(&self) -> bool {
+        true
+    }
+
     fn model(&self, name: &str) -> Result<ModelInfo> {
         self.model_ref(name).map(|m| m.clone())
     }
@@ -207,7 +252,236 @@ impl Backend for NativeBackend {
     }
 }
 
+fn expect_state_len(name: &str, which: &str, s: &StateView, len: usize) -> Result<()> {
+    if s.len() != len {
+        bail!("graph '{name}' state {which}: {} elements, expected {len}", s.len());
+    }
+    Ok(())
+}
+
 impl NativeBackend {
+    /// Dispatch one step template to its fused `refimpl::*_state` kernel.
+    /// `inputs` excludes the state operands (see the trait contract);
+    /// returns `[w', ceu]` with the states updated through their views.
+    #[allow(clippy::too_many_lines)]
+    fn exec_step_fused(
+        &self,
+        name: &str,
+        tpl: &str,
+        spec: &Spec,
+        inputs: &[&Tensor],
+        states: &mut [StateView],
+    ) -> Result<Vec<Tensor>> {
+        let dims = &spec.dims;
+        let is_conv = tpl.contains("conv");
+        if is_conv && dims.len() != 4 {
+            bail!("graph '{name}': conv step needs a 4-D shape");
+        }
+        if !is_conv && dims.len() != 2 {
+            bail!("graph '{name}': matrix template needs an MxN shape, got {dims:?}");
+        }
+        let n_states = states.len();
+        match tpl {
+            "adam_step" => {
+                expect_inputs(name, inputs, 6)?;
+                let (m, n, _, _) = frame(dims);
+                expect_numel(name, "w", inputs[0], m * n)?;
+                expect_numel(name, "g", inputs[1], m * n)?;
+                let [ms, vs] = states else {
+                    bail!("graph '{name}': expected 2 state views, got {n_states}");
+                };
+                expect_state_len(name, "m", ms, m * n)?;
+                expect_state_len(name, "v", vs, m * n)?;
+                let (w, ceu) = refimpl::adam_step_state(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    ms,
+                    vs,
+                    inputs[2].scalar(),
+                    inputs[3].scalar(),
+                    inputs[4].scalar(),
+                    inputs[5].scalar(),
+                );
+                Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
+            }
+            "adafactor_step" => {
+                expect_inputs(name, inputs, 4)?;
+                let (m, n, _, _) = frame(dims);
+                expect_numel(name, "w", inputs[0], m * n)?;
+                let [ms, rs, cs] = states else {
+                    bail!("graph '{name}': expected 3 state views, got {n_states}");
+                };
+                expect_state_len(name, "m", ms, m * n)?;
+                expect_state_len(name, "r_fac", rs, m)?;
+                expect_state_len(name, "c_fac", cs, n)?;
+                let t = (inputs[2].scalar().round() as usize).max(1);
+                let (w, ceu) = refimpl::adafactor_step_state(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    ms,
+                    rs,
+                    cs,
+                    m,
+                    n,
+                    t,
+                    inputs[3].scalar(),
+                );
+                Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
+            }
+            "coap_adam_step" => {
+                expect_inputs(name, inputs, 7)?;
+                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+                let (m, n, mb, nb) = frame(dims);
+                expect_numel(name, "w", inputs[0], m * n)?;
+                expect_numel(name, "p", inputs[2], nb * r)?;
+                let [ms, vs] = states else {
+                    bail!("graph '{name}': expected 2 state views, got {n_states}");
+                };
+                expect_state_len(name, "m", ms, mb * r)?;
+                expect_state_len(name, "v", vs, mb * r)?;
+                let (w, ceu) = refimpl::coap_adam_step_state(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    ms,
+                    vs,
+                    inputs[2].f32s(),
+                    m,
+                    n,
+                    r,
+                    inputs[3].scalar(),
+                    inputs[4].scalar(),
+                    inputs[5].scalar(),
+                    inputs[6].scalar(),
+                );
+                Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
+            }
+            "coap_adafactor_step" => {
+                expect_inputs(name, inputs, 5)?;
+                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+                let (m, n, mb, nb) = frame(dims);
+                expect_numel(name, "w", inputs[0], m * n)?;
+                expect_numel(name, "p", inputs[2], nb * r)?;
+                let [ms, rs, cs] = states else {
+                    bail!("graph '{name}': expected 3 state views, got {n_states}");
+                };
+                expect_state_len(name, "m", ms, mb * r)?;
+                expect_state_len(name, "r_fac", rs, mb)?;
+                expect_state_len(name, "c_fac", cs, r)?;
+                let t = (inputs[3].scalar().round() as usize).max(1);
+                let (w, ceu) = refimpl::coap_adafactor_step_state(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    ms,
+                    rs,
+                    cs,
+                    inputs[2].f32s(),
+                    m,
+                    n,
+                    r,
+                    t,
+                    inputs[4].scalar(),
+                );
+                Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
+            }
+            "coap_adam_conv_step" => {
+                expect_inputs(name, inputs, 8)?;
+                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+                expect_numel(name, "w", inputs[0], o * i * kk)?;
+                expect_numel(name, "po", inputs[2], o * ro)?;
+                expect_numel(name, "pi", inputs[3], i * ri)?;
+                let [ms, vs] = states else {
+                    bail!("graph '{name}': expected 2 state views, got {n_states}");
+                };
+                expect_state_len(name, "m", ms, ro * ri * kk)?;
+                expect_state_len(name, "v", vs, ro * ri * kk)?;
+                let (w, ceu) = refimpl::coap_adam_conv_step_state(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    ms,
+                    vs,
+                    inputs[2].f32s(),
+                    inputs[3].f32s(),
+                    dims,
+                    ro,
+                    ri,
+                    inputs[4].scalar(),
+                    inputs[5].scalar(),
+                    inputs[6].scalar(),
+                    inputs[7].scalar(),
+                );
+                Ok(vec![Tensor::from_f32(dims, w), Tensor::scalar_f32(ceu)])
+            }
+            "coap_adafactor_conv_step" => {
+                expect_inputs(name, inputs, 6)?;
+                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+                expect_numel(name, "w", inputs[0], o * i * kk)?;
+                expect_numel(name, "po", inputs[2], o * ro)?;
+                expect_numel(name, "pi", inputs[3], i * ri)?;
+                let [ms, rs, cs] = states else {
+                    bail!("graph '{name}': expected 3 state views, got {n_states}");
+                };
+                expect_state_len(name, "m", ms, ro * ri * kk)?;
+                expect_state_len(name, "r_fac", rs, ro)?;
+                expect_state_len(name, "c_fac", cs, ri * kk)?;
+                let t = (inputs[4].scalar().round() as usize).max(1);
+                let (w, ceu) = refimpl::coap_adafactor_conv_step_state(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    ms,
+                    rs,
+                    cs,
+                    inputs[2].f32s(),
+                    inputs[3].f32s(),
+                    dims,
+                    ro,
+                    ri,
+                    t,
+                    inputs[5].scalar(),
+                );
+                Ok(vec![Tensor::from_f32(dims, w), Tensor::scalar_f32(ceu)])
+            }
+            "coap_adam_convfull_step" => {
+                expect_inputs(name, inputs, 9)?;
+                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+                let rs_rank = spec.rs.ok_or_else(|| anyhow!("'{name}': missing rS"))?;
+                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+                expect_numel(name, "w", inputs[0], o * i * kk)?;
+                expect_numel(name, "po", inputs[2], o * ro)?;
+                expect_numel(name, "pi", inputs[3], i * ri)?;
+                expect_numel(name, "ps", inputs[4], kk * rs_rank)?;
+                let [ms, vs] = states else {
+                    bail!("graph '{name}': expected 2 state views, got {n_states}");
+                };
+                expect_state_len(name, "m", ms, ro * ri * rs_rank)?;
+                expect_state_len(name, "v", vs, ro * ri * rs_rank)?;
+                let (w, ceu) = refimpl::coap_adam_convfull_step_state(
+                    inputs[0].f32s(),
+                    inputs[1].f32s(),
+                    ms,
+                    vs,
+                    inputs[2].f32s(),
+                    inputs[3].f32s(),
+                    inputs[4].f32s(),
+                    dims,
+                    ro,
+                    ri,
+                    rs_rank,
+                    inputs[5].scalar(),
+                    inputs[6].scalar(),
+                    inputs[7].scalar(),
+                    inputs[8].scalar(),
+                );
+                Ok(vec![Tensor::from_f32(dims, w), Tensor::scalar_f32(ceu)])
+            }
+            _ => bail!("graph '{name}': template '{tpl}' has no fused state path"),
+        }
+    }
+
     #[allow(clippy::too_many_lines)]
     fn exec_kernel(
         &self,
@@ -599,6 +873,43 @@ mod tests {
         assert!(be.has_graph("train_step__lm_tiny"));
         assert!(!be.has_graph("train_step__nope"));
         assert!(!be.has_graph("warp_step__8x8"));
+    }
+
+    #[test]
+    fn exec_with_state_updates_in_place_and_validates() {
+        let be = NativeBackend::new();
+        let w = Tensor::zeros(&[4, 2]);
+        let g = Tensor::from_f32(&[4, 2], vec![0.1; 8]);
+        let s = |x: f32| Tensor::scalar_f32(x);
+        let name = names::fullrank("adam_step", 4, 2);
+        let mut m = vec![0.0f32; 8];
+        let mut v = vec![0.0f32; 8];
+        {
+            let mut views = [StateView::F32(&mut m[..]), StateView::F32(&mut v[..])];
+            let out = be
+                .exec_with_state(
+                    &name,
+                    &[&w, &g, &s(0.9), &s(0.999), &s(0.01), &s(0.0)],
+                    &mut views,
+                )
+                .unwrap();
+            assert_eq!(out.len(), 2, "fused path returns [w', ceu]");
+            assert_eq!(out[0].dims(), &[4, 2]);
+            assert!(out[1].scalar() > 0.0);
+        }
+        assert!(m.iter().all(|&x| x != 0.0), "moment not updated in place");
+        let mut lone = [StateView::F32(&mut m[..])];
+        assert!(
+            be.exec_with_state(
+                &name,
+                &[&w, &g, &s(0.9), &s(0.999), &s(0.01), &s(0.0)],
+                &mut lone,
+            )
+            .is_err(),
+            "wrong state count must error"
+        );
+        assert!(be.fuses_states());
+        assert_eq!(be.total_execs(), 1);
     }
 
     #[test]

@@ -25,6 +25,17 @@ pub fn encode(src: &[f32], dst: &mut Vec<u16>) {
     dst.extend(src.iter().map(|&v| f32_to_bf16(v)));
 }
 
+/// Encode into a pre-sized slice — the fused state path's block writer
+/// (`tensor::state` streams moments one block at a time instead of
+/// re-encoding the whole buffer). Same per-element conversion as
+/// [`encode`], so block-wise and whole-buffer encoding are bit-identical.
+pub fn encode_into(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &v) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16(v);
+    }
+}
+
 pub fn decode(src: &[u16], dst: &mut [f32]) {
     assert_eq!(src.len(), dst.len());
     for (d, &s) in dst.iter_mut().zip(src) {
@@ -101,6 +112,19 @@ mod tests {
             }
             prev = back;
         }
+    }
+
+    #[test]
+    fn encode_into_matches_vec_encode_blockwise() {
+        let mut r = Rng::new(43);
+        let src: Vec<f32> = (0..700).map(|_| r.normal() * 3.0).collect();
+        let mut whole = Vec::new();
+        encode(&src, &mut whole);
+        let mut blocked = vec![0u16; src.len()];
+        for (chunk, out) in src.chunks(256).zip(blocked.chunks_mut(256)) {
+            encode_into(chunk, out);
+        }
+        assert_eq!(whole, blocked);
     }
 
     #[test]

@@ -62,6 +62,23 @@ fn round_up(x: usize, to: usize) -> usize {
     x.div_ceil(to) * to
 }
 
+/// Borrow this thread's GEMM packing buffers for non-GEMM block work.
+/// The quantized-state streaming path (`tensor::state`) reuses them as
+/// dequant scratch between GEMM calls instead of allocating its own —
+/// on a pool worker that's the same warm memory the packed A/B panels
+/// just ran through.
+///
+/// The buffers live in one thread-local `RefCell`, so the closure MUST
+/// NOT call back into `gemm_*` (or this function): that would be a
+/// re-entrant borrow and panics. The fused step kernels only run
+/// element-wise math inside it.
+pub fn with_pack_scratch<R>(f: impl FnOnce(&mut Vec<f32>, &mut Vec<f32>) -> R) -> R {
+    PACK.with(|p| {
+        let bufs = &mut *p.borrow_mut();
+        f(&mut bufs.a, &mut bufs.b)
+    })
+}
+
 // ---------------------------------------------------------------------------
 // Core: blocked NN on a row slab
 // ---------------------------------------------------------------------------

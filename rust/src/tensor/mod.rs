@@ -3,13 +3,16 @@
 //!
 //! Deliberately small: dense row-major storage, f32 or i32, plus the
 //! precision machinery the paper's memory story needs — bf16 storage
-//! ([`bf16`]) and block-wise 8-bit quantization ([`quant`]) — and the
-//! shared blocked/SIMD GEMM core ([`linalg`]) that every matmul in the
-//! crate (model fwd/bwd, optimizer kernels, runtime dispatch) runs on.
+//! ([`bf16`]), block-wise 8-bit quantization ([`quant`]), and the
+//! [`state`] views that let step kernels update compressed optimizer
+//! state in place, block by block — and the shared blocked/SIMD GEMM
+//! core ([`linalg`]) that every matmul in the crate (model fwd/bwd,
+//! optimizer kernels, runtime dispatch) runs on.
 
 pub mod bf16;
 pub mod linalg;
 pub mod quant;
+pub mod state;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Storage {

@@ -10,9 +10,15 @@
 //! map keeps ~6.6% relative error across seven decades, matching the
 //! bitsandbytes behaviour the paper builds on.
 //!
-//! Optimizer state is dequantized to f32 right before the HLO step
-//! executes and re-quantized right after, so only the *storage* between
-//! steps is 8-bit — exactly the bitsandbytes contract.
+//! Storage between steps is 8-bit — exactly the bitsandbytes contract.
+//! Since the fused state path (PR 3), step kernels no longer materialize
+//! a full f32 copy: they stream one [`BLOCK`]-element block at a time
+//! through [`QuantizedBuf::dequantize_block_into`] /
+//! [`QuantizedBuf::requantize_block`] (see `tensor::state`). Because
+//! every block owns its scale and codes, a sweep of `requantize_block`
+//! over all blocks is bit-identical to one [`quantize`] of the whole
+//! buffer — `quantize`/`dequantize` are literally implemented as that
+//! sweep, so the fused and round-trip paths cannot drift.
 
 use std::sync::OnceLock;
 
@@ -39,7 +45,22 @@ fn codebook() -> &'static [f32; 256] {
     })
 }
 
-fn nearest_code(x: f32) -> u8 {
+/// Nearest codebook index for `x` (an absmax-normalized value).
+///
+/// Deterministic edge policy, shared by the full quantizer and the fused
+/// block-streaming requantizer so the two paths agree bit-for-bit on
+/// degenerate inputs:
+/// - NaN maps to the zero code 127 (a NaN moment entry must not turn
+///   into ±scale);
+/// - ±inf — and any |x| beyond the codebook — clamps to the extreme
+///   codes 0 / 255;
+/// - an exact midpoint between two codes rounds toward the
+///   smaller-magnitude code (toward zero), so the tie rule is
+///   odd-symmetric instead of index-biased.
+pub fn nearest_code(x: f32) -> u8 {
+    if x.is_nan() {
+        return 127; // code 127 == 0.0
+    }
     let codes = codebook();
     // Binary search for the insertion point, then pick the closer side.
     let mut lo = 0usize;
@@ -58,7 +79,15 @@ fn nearest_code(x: f32) -> u8 {
     if lo >= codes.len() {
         return 255;
     }
-    if (x - codes[lo - 1]).abs() <= (codes[lo] - x).abs() {
+    let down = x - codes[lo - 1]; // >= 0
+    let up = codes[lo] - x; // >= 0
+    if down < up {
+        (lo - 1) as u8
+    } else if up < down {
+        lo as u8
+    } else if codes[lo - 1].abs() <= codes[lo].abs() {
+        // Exact midpoint: round toward zero (codes are strictly
+        // ascending, so exactly one side has the smaller magnitude).
         (lo - 1) as u8
     } else {
         lo as u8
@@ -76,38 +105,72 @@ impl QuantizedBuf {
     pub fn nbytes(&self) -> usize {
         self.data.len() + self.scales.len() * 4
     }
+
+    /// Number of [`BLOCK`]-element blocks (the last one may be short).
+    pub fn nblocks(&self) -> usize {
+        self.scales.len()
+    }
+
+    /// Element range `[start, end)` covered by block `bi`.
+    pub fn block_range(&self, bi: usize) -> (usize, usize) {
+        let start = bi * BLOCK;
+        (start, (start + BLOCK).min(self.len))
+    }
+
+    /// Dequantize block `bi` into `dst` (exactly the block's length) —
+    /// the fused step kernels' read cursor.
+    pub fn dequantize_block_into(&self, bi: usize, dst: &mut [f32]) {
+        let (start, end) = self.block_range(bi);
+        assert_eq!(dst.len(), end - start, "block {bi} holds {} elements", end - start);
+        let codes = codebook();
+        let scale = self.scales[bi];
+        for (d, &s) in dst.iter_mut().zip(&self.data[start..end]) {
+            *d = codes[s as usize] * scale;
+        }
+    }
+
+    /// Re-quantize block `bi` from `src` (exactly the block's length) —
+    /// the fused step kernels' write cursor. Applies exactly the math
+    /// [`quantize`] applies per chunk (which is implemented as a sweep
+    /// of this method), so streaming blocks is bit-identical to
+    /// re-quantizing the whole buffer.
+    pub fn requantize_block(&mut self, bi: usize, src: &[f32]) {
+        let (start, end) = self.block_range(bi);
+        assert_eq!(src.len(), end - start, "block {bi} holds {} elements", end - start);
+        let out = &mut self.data[start..end];
+        // f32::max ignores NaN, so a NaN entry never becomes the scale.
+        let absmax = src.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        if absmax == 0.0 || !absmax.is_finite() {
+            self.scales[bi] = if absmax.is_finite() { 0.0 } else { f32::NAN };
+            out.fill(127); // code 127 == 0.0
+            return;
+        }
+        self.scales[bi] = absmax;
+        for (o, &v) in out.iter_mut().zip(src) {
+            *o = nearest_code(v / absmax);
+        }
+    }
 }
 
 /// Quantize `src` block-wise with the dynamic codebook.
 pub fn quantize(src: &[f32]) -> QuantizedBuf {
     let nblocks = src.len().div_ceil(BLOCK);
-    let mut data = vec![127u8; src.len()]; // code 127 == 0.0
-    let mut scales = vec![0f32; nblocks];
+    let mut q = QuantizedBuf {
+        data: vec![127u8; src.len()], // code 127 == 0.0
+        scales: vec![0f32; nblocks],
+        len: src.len(),
+    };
     for (bi, chunk) in src.chunks(BLOCK).enumerate() {
-        let absmax = chunk.iter().fold(0f32, |m, &v| m.max(v.abs()));
-        if absmax == 0.0 || !absmax.is_finite() {
-            scales[bi] = if absmax.is_finite() { 0.0 } else { f32::NAN };
-            continue;
-        }
-        scales[bi] = absmax;
-        let out = &mut data[bi * BLOCK..(bi * BLOCK + chunk.len())];
-        for (o, &v) in out.iter_mut().zip(chunk) {
-            *o = nearest_code(v / absmax);
-        }
+        q.requantize_block(bi, chunk);
     }
-    QuantizedBuf { data, scales, len: src.len() }
+    q
 }
 
 /// Dequantize into `dst` (must be `len` long).
 pub fn dequantize(q: &QuantizedBuf, dst: &mut [f32]) {
     assert_eq!(dst.len(), q.len);
-    let codes = codebook();
     for (bi, chunk) in dst.chunks_mut(BLOCK).enumerate() {
-        let scale = q.scales[bi];
-        let src = &q.data[bi * BLOCK..(bi * BLOCK + chunk.len())];
-        for (d, &s) in chunk.iter_mut().zip(src) {
-            *d = codes[s as usize] * scale;
-        }
+        q.dequantize_block_into(bi, chunk);
     }
 }
 
@@ -220,6 +283,82 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn nearest_code_edge_cases() {
+        // NaN must land on the zero code, never ±scale.
+        assert_eq!(nearest_code(f32::NAN), 127);
+        // ±inf and out-of-range values clamp to the extreme codes.
+        assert_eq!(nearest_code(f32::INFINITY), 255);
+        assert_eq!(nearest_code(f32::NEG_INFINITY), 0);
+        assert_eq!(nearest_code(1.5), 255);
+        assert_eq!(nearest_code(-7.0), 0);
+        // Exact zeros stay on the zero code.
+        assert_eq!(nearest_code(0.0), 127);
+        assert_eq!(nearest_code(-0.0), 127);
+        // Below the 1e-7 codebook floor: closer to zero rounds to zero,
+        // past the midpoint rounds to the smallest positive magnitude.
+        assert_eq!(nearest_code(4.9e-8), 127);
+        assert_eq!(nearest_code(9.9e-8), 128);
+    }
+
+    #[test]
+    fn nearest_code_midpoints_round_toward_zero() {
+        let c = codebook();
+        // c[128] is the smallest positive magnitude; its exact half is
+        // representable (binary halving), equidistant from 0 and c[128].
+        assert_eq!(nearest_code(c[128] * 0.5), 127);
+        // The mirrored negative tie must also round toward zero — the
+        // old `<=` tie-break picked the lower *index* (larger negative
+        // magnitude) here, breaking odd symmetry.
+        assert_eq!(nearest_code(c[126] * 0.5), 127);
+    }
+
+    #[test]
+    fn nan_entries_quantize_to_zero_not_negative_scale() {
+        let mut src = vec![0.5f32; 300];
+        src[7] = f32::NAN;
+        src[290] = f32::NAN;
+        let q = quantize(&src);
+        let back = dequantize_vec(&q);
+        assert_eq!(back[7], 0.0, "NaN entry must decode to 0, got {}", back[7]);
+        assert_eq!(back[290], 0.0);
+        // Scales stay finite: NaN never becomes the block absmax.
+        assert!(q.scales.iter().all(|s| s.is_finite()), "{:?}", q.scales);
+    }
+
+    /// The fused-path contract: a sweep of `requantize_block` over a
+    /// reused buffer is bit-identical to a fresh `quantize`, and
+    /// `dequantize_block_into` agrees with the full `dequantize` —
+    /// including degenerate blocks (all-zero, huge, tiny, short tail).
+    #[test]
+    fn block_cursor_matches_full_roundtrip() {
+        let mut r = Rng::new(41);
+        for n in [1usize, 200, 256, 257, 1000, 1024] {
+            let mut src: Vec<f32> = (0..n).map(|_| r.normal() * 0.01).collect();
+            if n > 300 {
+                for v in src[256..300].iter_mut() {
+                    *v = 0.0; // an all-zero block boundary region
+                }
+                src[300] = 1e6;
+                src[301] = 1e-8;
+            }
+            let fresh = quantize(&src);
+            // Reused buffer with stale contents: every block rewritten.
+            let mut reused = quantize(&vec![3.0f32; n]);
+            for bi in 0..reused.nblocks() {
+                let (s, e) = reused.block_range(bi);
+                reused.requantize_block(bi, &src[s..e]);
+            }
+            assert_eq!(fresh, reused, "n={n}: block requant drifted from quantize");
+            let mut by_block = vec![0.0f32; n];
+            for bi in 0..fresh.nblocks() {
+                let (s, e) = fresh.block_range(bi);
+                fresh.dequantize_block_into(bi, &mut by_block[s..e]);
+            }
+            assert_eq!(by_block, dequantize_vec(&fresh), "n={n}: block dequant drifted");
         }
     }
 

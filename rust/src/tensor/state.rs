@@ -1,0 +1,326 @@
+//! Mutable views over optimizer-state storage — the fused quantized
+//! state path's core abstraction (ROADMAP: "8-bit quantized state path
+//! end-to-end").
+//!
+//! A [`StateView`] is either a borrowed f32 slice (updated in place,
+//! zero copies) or a block cursor over compressed storage (bf16 words or
+//! a block-quantized [`QuantizedBuf`]). The streaming drivers
+//! ([`stream1`] / [`stream2`]) walk views in lockstep over
+//! [`quant::BLOCK`]-element blocks: each compressed block is dequantized
+//! into thread-local scratch (reusing the GEMM layer's packing buffers
+//! via [`linalg::with_pack_scratch`]), handed to an element-wise update
+//! closure, and re-quantized in place — one pass, no full-size f32
+//! materialization.
+//!
+//! **Bit-identity contract.** Block dequant/requant applies exactly the
+//! math the whole-buffer codecs apply per chunk (`quant::quantize` and
+//! `bf16::encode` are per-element/per-block local), and the update
+//! closures the step kernels pass in are element-wise. Streaming is
+//! therefore bit-identical to the pre-fusion round trip (materialize all
+//! → update → re-store all) for every storage precision — the contract
+//! `tests/quant_fused_parity.rs` pins. Blocks are walked in ascending
+//! order on the calling thread, so results are also independent of the
+//! optimizer's per-slot worker fan-out.
+
+use super::bf16;
+use super::linalg;
+use super::quant::{self, QuantizedBuf};
+
+/// A mutable borrow of one optimizer-state buffer at its storage
+/// precision. Created by `optim::StateBuf::view` and consumed by the
+/// fused refimpl kernels through `Backend::exec_with_state`.
+pub enum StateView<'a> {
+    /// Full-precision state: kernels mutate it in place.
+    F32(&'a mut [f32]),
+    /// bf16 words, streamed through block scratch.
+    Bf16(&'a mut [u16]),
+    /// Block-quantized 8-bit codes + per-block scales, streamed through
+    /// block scratch.
+    Int8(&'a mut QuantizedBuf),
+}
+
+impl StateView<'_> {
+    /// Logical element count (f32 elements of the decoded state).
+    pub fn len(&self) -> usize {
+        match self {
+            StateView::F32(s) => s.len(),
+            StateView::Bf16(h) => h.len(),
+            StateView::Int8(q) => q.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether blocks round-trip through scratch (compressed storage).
+    pub fn is_streamed(&self) -> bool {
+        !matches!(self, StateView::F32(_))
+    }
+
+    /// Full f32 copy — the pre-fusion round-trip reference path
+    /// (`Backend::exec_with_state_roundtrip`).
+    pub fn materialize(&self) -> Vec<f32> {
+        match self {
+            StateView::F32(s) => s.to_vec(),
+            StateView::Bf16(h) => {
+                let mut out = vec![0.0f32; h.len()];
+                bf16::decode(h, &mut out);
+                out
+            }
+            StateView::Int8(q) => quant::dequantize_vec(q),
+        }
+    }
+
+    /// Overwrite the whole state from f32 — the round-trip write-back.
+    pub fn store_all(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.len(), "store_all: length mismatch");
+        match self {
+            StateView::F32(s) => s.copy_from_slice(src),
+            StateView::Bf16(h) => bf16::encode_into(src, h),
+            StateView::Int8(q) => {
+                for bi in 0..q.nblocks() {
+                    let (s, e) = q.block_range(bi);
+                    q.requantize_block(bi, &src[s..e]);
+                }
+            }
+        }
+    }
+
+    /// Run `f` over the whole state as one f32 slice. F32 borrows in
+    /// place; compressed states materialize and re-store. Meant for the
+    /// small factored row/col states of Adafactor (O(m+n) elements) —
+    /// the big moments go through [`stream1`]/[`stream2`] instead.
+    pub fn with_f32<R>(&mut self, f: impl FnOnce(&mut [f32]) -> R) -> R {
+        match self {
+            StateView::F32(s) => f(s),
+            _ => {
+                let mut buf = self.materialize();
+                let r = f(&mut buf);
+                self.store_all(&buf);
+                r
+            }
+        }
+    }
+}
+
+fn load_block(v: &StateView, off: usize, bi: usize, len: usize, scratch: &mut [f32]) {
+    match v {
+        StateView::F32(_) => {}
+        StateView::Bf16(h) => bf16::decode(&h[off..off + len], &mut scratch[..len]),
+        StateView::Int8(q) => q.dequantize_block_into(bi, &mut scratch[..len]),
+    }
+}
+
+fn store_block(v: &mut StateView, off: usize, bi: usize, len: usize, scratch: &[f32]) {
+    match v {
+        StateView::F32(_) => {}
+        StateView::Bf16(h) => bf16::encode_into(&scratch[..len], &mut h[off..off + len]),
+        StateView::Int8(q) => q.requantize_block(bi, &scratch[..len]),
+    }
+}
+
+/// Stream one state view block-by-block through
+/// `f(offset, state_block)`: dequant → update → requant in thread-local
+/// scratch. `f` must be element-wise (each element's new value depends
+/// only on values at the same index) for the bit-identity contract to
+/// hold — every fused kernel satisfies this.
+pub fn stream1<F>(a: &mut StateView, mut f: F)
+where
+    F: FnMut(usize, &mut [f32]),
+{
+    let n = a.len();
+    linalg::with_pack_scratch(|sa, _sb| {
+        if sa.len() < quant::BLOCK {
+            sa.resize(quant::BLOCK, 0.0);
+        }
+        let mut off = 0;
+        let mut bi = 0;
+        while off < n {
+            let len = quant::BLOCK.min(n - off);
+            load_block(a, off, bi, len, sa);
+            {
+                let ab: &mut [f32] = match a {
+                    StateView::F32(s) => &mut s[off..off + len],
+                    _ => &mut sa[..len],
+                };
+                f(off, ab);
+            }
+            store_block(a, off, bi, len, sa);
+            off += len;
+            bi += 1;
+        }
+    });
+}
+
+/// Stream two equal-length state views in lockstep (Adam's m and v)
+/// through `f(offset, a_block, b_block)` — see [`stream1`].
+pub fn stream2<F>(a: &mut StateView, b: &mut StateView, mut f: F)
+where
+    F: FnMut(usize, &mut [f32], &mut [f32]),
+{
+    let n = a.len();
+    assert_eq!(n, b.len(), "stream2: length mismatch");
+    linalg::with_pack_scratch(|sa, sb| {
+        if sa.len() < quant::BLOCK {
+            sa.resize(quant::BLOCK, 0.0);
+        }
+        if sb.len() < quant::BLOCK {
+            sb.resize(quant::BLOCK, 0.0);
+        }
+        let mut off = 0;
+        let mut bi = 0;
+        while off < n {
+            let len = quant::BLOCK.min(n - off);
+            load_block(a, off, bi, len, sa);
+            load_block(b, off, bi, len, sb);
+            {
+                let ab: &mut [f32] = match a {
+                    StateView::F32(s) => &mut s[off..off + len],
+                    _ => &mut sa[..len],
+                };
+                let bb: &mut [f32] = match b {
+                    StateView::F32(s) => &mut s[off..off + len],
+                    _ => &mut sb[..len],
+                };
+                f(off, ab, bb);
+            }
+            store_block(a, off, bi, len, sa);
+            store_block(b, off, bi, len, sb);
+            off += len;
+            bi += 1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sample(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v: Vec<f32> = (0..n).map(|_| rng.normal() * 0.02).collect();
+        if n > 300 {
+            // Degenerate regions: an all-zero block span, huge and tiny
+            // entries — the inputs where quantization edge policy bites.
+            for x in v[256..300].iter_mut() {
+                *x = 0.0;
+            }
+            v[300] = 1e5;
+            v[301] = 1e-9;
+        }
+        v
+    }
+
+    /// The reference semantics: materialize → closure over the full
+    /// buffer → store_all. Streaming must match it bit-for-bit.
+    fn reference_update(view: &mut StateView, f: impl Fn(usize, &mut f32)) {
+        let mut buf = view.materialize();
+        for (i, x) in buf.iter_mut().enumerate() {
+            f(i, x);
+        }
+        view.store_all(&buf);
+    }
+
+    #[test]
+    fn stream1_matches_materialize_roundtrip_for_all_precisions() {
+        let mut rng = Rng::new(51);
+        for n in [1usize, 255, 256, 257, 900] {
+            let src = sample(&mut rng, n);
+            let upd = |i: usize, x: &mut f32| *x = 0.9 * *x + 0.1 * (i as f32 * 1e-3);
+
+            // f32
+            let mut a = src.clone();
+            let mut b = src.clone();
+            stream1(&mut StateView::F32(&mut a[..]), |off, blk| {
+                for (k, x) in blk.iter_mut().enumerate() {
+                    upd(off + k, x);
+                }
+            });
+            reference_update(&mut StateView::F32(&mut b[..]), upd);
+            assert_eq!(a, b, "f32 n={n}");
+
+            // bf16
+            let mut ha = vec![0u16; n];
+            bf16::encode_into(&src, &mut ha);
+            let mut hb = ha.clone();
+            stream1(&mut StateView::Bf16(&mut ha[..]), |off, blk| {
+                for (k, x) in blk.iter_mut().enumerate() {
+                    upd(off + k, x);
+                }
+            });
+            reference_update(&mut StateView::Bf16(&mut hb[..]), upd);
+            assert_eq!(ha, hb, "bf16 n={n}");
+
+            // int8
+            let mut qa = quant::quantize(&src);
+            let mut qb = qa.clone();
+            stream1(&mut StateView::Int8(&mut qa), |off, blk| {
+                for (k, x) in blk.iter_mut().enumerate() {
+                    upd(off + k, x);
+                }
+            });
+            reference_update(&mut StateView::Int8(&mut qb), upd);
+            assert_eq!(qa, qb, "int8 n={n}");
+        }
+    }
+
+    #[test]
+    fn stream2_mixed_precisions_stay_in_lockstep() {
+        let mut rng = Rng::new(52);
+        let n = 700usize;
+        let src_m = sample(&mut rng, n);
+        let src_v: Vec<f32> = src_m.iter().map(|v| v * v).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal() * 0.01).collect();
+
+        // Fused: f32 m alongside int8 v.
+        let mut m_f = src_m.clone();
+        let mut v_q = quant::quantize(&src_v);
+        stream2(
+            &mut StateView::F32(&mut m_f[..]),
+            &mut StateView::Int8(&mut v_q),
+            |off, mb, vb| {
+                for k in 0..mb.len() {
+                    let gi = g[off + k];
+                    mb[k] = 0.9 * mb[k] + 0.1 * gi;
+                    vb[k] = 0.999 * vb[k] + 0.001 * gi * gi;
+                }
+            },
+        );
+
+        // Reference: full materialize + the same update + re-store.
+        let mut m_ref = src_m.clone();
+        let mut v_ref = quant::quantize(&src_v);
+        let mut vbuf = StateView::Int8(&mut v_ref).materialize();
+        for k in 0..n {
+            let gi = g[k];
+            m_ref[k] = 0.9 * m_ref[k] + 0.1 * gi;
+            vbuf[k] = 0.999 * vbuf[k] + 0.001 * gi * gi;
+        }
+        StateView::Int8(&mut v_ref).store_all(&vbuf);
+
+        assert_eq!(m_f, m_ref);
+        assert_eq!(v_q, v_ref);
+    }
+
+    #[test]
+    fn with_f32_roundtrips_every_precision() {
+        let mut data = vec![1.0f32; 40];
+        let mut view = StateView::F32(&mut data[..]);
+        assert_eq!(view.len(), 40);
+        assert!(!view.is_streamed());
+        view.with_f32(|s| s[3] = 7.0);
+        assert_eq!(data[3], 7.0);
+
+        let mut q = quant::quantize(&[0.25f32; 40]);
+        let mut view = StateView::Int8(&mut q);
+        assert!(view.is_streamed());
+        view.with_f32(|s| {
+            for x in s.iter_mut() {
+                *x *= 2.0;
+            }
+        });
+        let back = StateView::Int8(&mut q).materialize();
+        assert!((back[0] - 0.5).abs() < 0.04, "got {}", back[0]);
+    }
+}

@@ -124,6 +124,31 @@ pub fn append_json_to(dir: &str, bench: &str, fields: &[(&str, String)]) {
     }
 }
 
+/// Validate one bench-JSONL record against the trajectory schema every
+/// [`append_json`] writer must honour: a single flat JSON object with
+/// string keys and number-or-string scalar values (finite numbers only,
+/// so downstream plotting never chokes). Returns a description of the
+/// first violation.
+pub fn validate_jsonl_line(line: &str) -> Result<(), String> {
+    use crate::util::json::Json;
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let obj = match &j {
+        Json::Obj(m) => m,
+        _ => return Err("record is not a JSON object".into()),
+    };
+    if obj.is_empty() {
+        return Err("record is empty".into());
+    }
+    for (k, v) in obj {
+        match v {
+            Json::Num(x) if x.is_finite() => {}
+            Json::Str(_) => {}
+            _ => return Err(format!("key '{k}' is not a finite number or string")),
+        }
+    }
+    Ok(())
+}
+
 /// Print a paper-style table: header row then aligned data rows.
 pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
     println!("\n== {title} ==");
@@ -164,6 +189,37 @@ mod tests {
         let content = std::fs::read_to_string(dir.join("unit.jsonl")).unwrap();
         assert!(content.contains("\"case\":\"nn 1024\""), "{content}");
         assert!(content.contains("\"mean_ms\":1.5"), "{content}");
+    }
+
+    /// Every record `append_json_to` emits must pass the schema check
+    /// the trajectory tooling relies on — including escaping and the
+    /// numeric/string value split.
+    #[test]
+    fn appended_records_satisfy_jsonl_schema() {
+        let dir = std::env::temp_dir().join("coap-bench-json-schema-test");
+        let dir_s = dir.to_str().unwrap();
+        let _ = std::fs::remove_file(dir.join("schema.jsonl"));
+        append_json_to(
+            dir_s,
+            "schema",
+            &[
+                ("case", "int8 step 4096x512 r128".into()),
+                ("fused_ms", "1.25".into()),
+                ("speedup", "3.7".into()),
+                ("note", "quote\" and back\\slash".into()),
+            ],
+        );
+        append_json_to(dir_s, "schema", &[("case", "codec".into()), ("mb_s", "812".into())]);
+        let content = std::fs::read_to_string(dir.join("schema.jsonl")).unwrap();
+        let lines: Vec<&str> = content.lines().filter(|l| !l.is_empty()).collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            validate_jsonl_line(line).unwrap_or_else(|e| panic!("bad record {line}: {e}"));
+        }
+        assert!(validate_jsonl_line("[1,2]").is_err());
+        assert!(validate_jsonl_line("{}").is_err());
+        assert!(validate_jsonl_line(r#"{"a":null}"#).is_err());
+        assert!(validate_jsonl_line(r#"{"a":1.5,"b":"x"}"#).is_ok());
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Acceptance suite for the fused quantized-state path: the block-
+//! streaming `exec_with_state` implementation must be **bit-identical**
+//! to the pre-refactor round trip (dequantize-all → slice kernel →
+//! requantize-all) for every projection policy × slot kind × storage
+//! precision, and invariant under the per-slot worker fan-out
+//! (`--threads 1/2/8`).
+//!
+//! The round-trip reference is `Backend::exec_with_state_roundtrip` — a
+//! provided trait method no engine overrides — exposed as a full
+//! backend via the [`RoundTrip`] adapter so entire training runs can be
+//! replayed under the old semantics.
+
+use coap::config::{ConvFormat, MomentBase, OptKind, TrainConfig};
+use coap::coordinator::Trainer;
+use coap::optim::StateBuf;
+use coap::runtime::{names, Backend, ExperimentInfo, ModelInfo, NativeBackend};
+use coap::tensor::state::StateView;
+use coap::tensor::{Precision, Tensor};
+use std::sync::Arc;
+
+/// Backend adapter that pins the pre-fusion semantics: every
+/// `exec_with_state` call takes the materialize → exec → re-store path.
+struct RoundTrip(NativeBackend);
+
+impl Backend for RoundTrip {
+    fn label(&self) -> &'static str {
+        "native-roundtrip"
+    }
+
+    fn exec(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.0.exec(name, inputs)
+    }
+
+    fn exec_with_state(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        states: &mut [StateView],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        self.0.exec_with_state_roundtrip(name, inputs, states)
+    }
+
+    fn model(&self, name: &str) -> anyhow::Result<ModelInfo> {
+        self.0.model(name)
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        self.0.model_names()
+    }
+
+    fn has_graph(&self, name: &str) -> bool {
+        self.0.has_graph(name)
+    }
+
+    fn experiments(&self) -> Vec<ExperimentInfo> {
+        self.0.experiments()
+    }
+
+    fn total_execs(&self) -> u64 {
+        self.0.total_execs()
+    }
+}
+
+fn cfg(
+    model: &str,
+    opt: OptKind,
+    base: MomentBase,
+    fmt: ConvFormat,
+    prec: Precision,
+    threads: usize,
+) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = model.into();
+    c.optimizer = opt;
+    c.lowrank_base = base;
+    c.conv_format = fmt;
+    c.state_precision = prec;
+    c.threads = threads;
+    c.steps = 6;
+    c.t_update = 2;
+    c.lambda = 2;
+    c.lr = 2e-3;
+    c.eval_every = 0;
+    c.log_every = 0;
+    c
+}
+
+/// Run a full training loop and return every parameter as raw f32 bits.
+fn run_bits(c: TrainConfig, rt: Arc<dyn Backend>) -> Vec<Vec<u32>> {
+    let mut tr = Trainer::new(c, rt).unwrap();
+    tr.quiet = true;
+    tr.run().unwrap();
+    tr.store
+        .params
+        .iter()
+        .map(|t| t.f32s().iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// The acceptance matrix: fused runs (any worker count) must equal the
+/// single-threaded round-trip replay bit-for-bit.
+fn assert_parity(model: &str, opt: OptKind, base: MomentBase, fmt: ConvFormat, prec: Precision) {
+    let reference = run_bits(
+        cfg(model, opt, base, fmt, prec, 1),
+        Arc::new(RoundTrip(NativeBackend::new())),
+    );
+    for threads in [1usize, 2, 8] {
+        let fused = run_bits(
+            cfg(model, opt, base, fmt, prec, threads),
+            Arc::new(NativeBackend::new()),
+        );
+        assert_eq!(
+            reference, fused,
+            "fused path drifted: {opt:?}/{base:?}/{model}/{fmt:?}/{prec:?} threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn coap_matrix_int8_parity() {
+    assert_parity(
+        "lm_micro",
+        OptKind::Coap,
+        MomentBase::Adam,
+        ConvFormat::Tucker2,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn galore_matrix_int8_parity() {
+    assert_parity(
+        "lm_micro",
+        OptKind::Galore,
+        MomentBase::Adam,
+        ConvFormat::Tucker2,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn flora_matrix_int8_parity() {
+    assert_parity(
+        "lm_micro",
+        OptKind::Flora,
+        MomentBase::Adam,
+        ConvFormat::Tucker2,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn coap_conv_tucker2_int8_parity() {
+    assert_parity(
+        "cnn_micro",
+        OptKind::Coap,
+        MomentBase::Adam,
+        ConvFormat::Tucker2,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn coap_conv_tucker1_int8_parity() {
+    assert_parity(
+        "cnn_micro",
+        OptKind::Coap,
+        MomentBase::Adam,
+        ConvFormat::Tucker1,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn coap_conv_full_tucker_int8_parity() {
+    assert_parity(
+        "cnn_micro",
+        OptKind::Coap,
+        MomentBase::Adam,
+        ConvFormat::Full,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn galore_conv_adafactor_int8_parity() {
+    assert_parity(
+        "cnn_micro",
+        OptKind::Galore,
+        MomentBase::Adafactor,
+        ConvFormat::Tucker2,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn flora_adafactor_matrix_int8_parity() {
+    assert_parity(
+        "lm_micro",
+        OptKind::Flora,
+        MomentBase::Adafactor,
+        ConvFormat::Tucker2,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn fullrank_adamw_int8_parity() {
+    assert_parity(
+        "lm_micro",
+        OptKind::AdamW,
+        MomentBase::Adam,
+        ConvFormat::Tucker2,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn fullrank_adafactor_int8_parity() {
+    assert_parity(
+        "cnn_micro",
+        OptKind::Adafactor,
+        MomentBase::Adam,
+        ConvFormat::Tucker2,
+        Precision::Int8,
+    );
+}
+
+#[test]
+fn coap_matrix_bf16_parity() {
+    assert_parity(
+        "lm_micro",
+        OptKind::Coap,
+        MomentBase::Adam,
+        ConvFormat::Tucker2,
+        Precision::Bf16,
+    );
+}
+
+#[test]
+fn coap_matrix_f32_parity() {
+    assert_parity(
+        "lm_micro",
+        OptKind::Coap,
+        MomentBase::Adam,
+        ConvFormat::Tucker2,
+        Precision::F32,
+    );
+}
+
+/// Kernel-level degenerate inputs: all-zero blocks, a huge outlier, a
+/// sub-floor value and a NaN-free tiny tail must round-trip identically
+/// through the fused and reference paths (the `nearest_code` edge
+/// policy is shared, so the quantized states must match byte-for-byte).
+#[test]
+fn degenerate_state_blocks_agree_bitwise() {
+    let be = NativeBackend::new();
+    let (m, n, r) = (40usize, 32usize, 4usize);
+    let (mb, nb) = (m.max(n), m.min(n));
+    let name = names::matrix_proj("coap_adam_step", m, n, r);
+    let w = Tensor::from_f32(&[m, n], (0..m * n).map(|i| (i as f32).sin() * 0.1).collect());
+    let g = Tensor::from_f32(&[m, n], (0..m * n).map(|i| (i as f32).cos() * 0.02).collect());
+    let p = Tensor::from_f32(&[nb, r], (0..nb * r).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect());
+    let mut mvals = vec![0.0f32; mb * r];
+    let mut vvals = vec![1e-4f32; mb * r];
+    for i in 0..mb * r {
+        mvals[i] = match i % 5 {
+            0 => 0.0,
+            1 => 1e5,
+            2 => 1e-9,
+            3 => -2.5e-3,
+            _ => 0.03,
+        };
+    }
+    vvals[0] = 0.0;
+    vvals[1] = 1e8;
+    vvals[2] = 1e-12;
+    let seed_m = Tensor::from_f32(&[mb, r], mvals);
+    let seed_v = Tensor::from_f32(&[mb, r], vvals);
+    let scalars = [
+        Tensor::scalar_f32(0.9),
+        Tensor::scalar_f32(0.999),
+        Tensor::scalar_f32(0.01),
+        Tensor::scalar_f32(0.1),
+    ];
+    let inputs = [
+        &w,
+        &g,
+        &p,
+        &scalars[0],
+        &scalars[1],
+        &scalars[2],
+        &scalars[3],
+    ];
+
+    let mut m_fused = StateBuf::zeros(&[mb, r], Precision::Int8);
+    let mut v_fused = StateBuf::zeros(&[mb, r], Precision::Int8);
+    m_fused.store(&seed_m);
+    v_fused.store(&seed_v);
+    let mut m_ref = m_fused.clone();
+    let mut v_ref = v_fused.clone();
+
+    let mut fused_views = [m_fused.view(), v_fused.view()];
+    let out_fused = be.exec_with_state(&name, &inputs, &mut fused_views).unwrap();
+    drop(fused_views);
+    let mut ref_views = [m_ref.view(), v_ref.view()];
+    let out_ref = be
+        .exec_with_state_roundtrip(&name, &inputs, &mut ref_views)
+        .unwrap();
+    drop(ref_views);
+
+    assert_eq!(out_fused[0].f32s(), out_ref[0].f32s(), "w' drifted");
+    assert_eq!(out_fused[1].scalar(), out_ref[1].scalar(), "ceu drifted");
+    let codes = |b: &StateBuf| match b {
+        StateBuf::Int8 { q, .. } => (q.data.clone(), q.scales.clone()),
+        _ => unreachable!(),
+    };
+    assert_eq!(codes(&m_fused), codes(&m_ref), "m codes/scales drifted");
+    assert_eq!(codes(&v_fused), codes(&v_ref), "v codes/scales drifted");
+}
