@@ -5,28 +5,23 @@
 //!   --ddpm     App. Table 2 substitute — DDPM two sizes
 //!
 //!     cargo run --release --example controlnet_sweep -- --steps 120
+//!
+//! All paths run through the sharded sweep API (--workers N).
 
-use coap::benchlib::{self, print_report_table, run_spec};
+use coap::benchlib;
 use coap::config::TrainConfig;
-use coap::coordinator::Trainer;
-use coap::runtime::open_backend;
+use coap::coordinator::sweep::print_report_table;
 use coap::util::bench::print_table;
 use coap::util::cli::Args;
-use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let cfg = TrainConfig::from_args(&args)?;
-    let rt = open_backend(&cfg)?;
     let steps = args.usize_or("steps", benchlib::bench_steps(100));
+    let env = benchlib::shard_env(&args, TrainConfig::from_args(&args)?)?;
+    let run_specs = |specs: Vec<benchlib::RunSpec>| env.run(specs);
 
     if args.has("table1") {
-        let specs = benchlib::table1_specs(steps);
-        let mut reports = Vec::new();
-        for s in &specs {
-            eprintln!("-- table1: {}", s.label);
-            reports.push(run_spec(&rt, s)?);
-        }
+        let reports = run_specs(benchlib::table1_specs(steps))?;
         print_report_table(
             &format!("Table 1 substitute — LDM/conv denoiser ({steps} steps)"),
             "cnn_tiny",
@@ -38,12 +33,7 @@ fn main() -> anyhow::Result<()> {
 
     if args.has("ddpm") {
         for celeb in [false, true] {
-            let specs = benchlib::ddpm_specs(steps, celeb);
-            let mut reports = Vec::new();
-            for s in &specs {
-                eprintln!("-- ddpm {}: {}", if celeb { "celeba" } else { "cifar" }, s.label);
-                reports.push(run_spec(&rt, s)?);
-            }
+            let reports = run_specs(benchlib::ddpm_specs(steps, celeb))?;
             print_report_table(
                 &format!(
                     "App. Table 2 substitute — DDPM {} ({steps} steps)",
@@ -60,39 +50,39 @@ fn main() -> anyhow::Result<()> {
     // Table 3: rank-ratio sweep with mAP-proxy at 25/50/100% of training
     // (the paper's 20K/40K/80K checkpoints).
     let ratios: Vec<f64> = vec![2.0, 4.0, 8.0];
-    let specs = benchlib::table3_specs(steps, &ratios);
-    let mut rows = Vec::new();
-    for s in &specs {
-        eprintln!("-- table3: {} ({} steps)", s.label, steps);
-        let mut c = s.cfg.clone();
-        c.eval_every = (steps / 4).max(1); // checkpointed quality
-        let mut tr = Trainer::new(c, Arc::clone(&rt))?;
-        tr.quiet = true;
-        let rep = tr.run()?;
-        let at = |q: f64| -> String {
-            let evs = &rep.evals;
-            if evs.is_empty() {
-                return "-".into();
-            }
-            let idx = (((evs.len() - 1) as f64) * q) as usize;
-            evs[idx].aux.map(|a| format!("{a:.1}")).unwrap_or("-".into())
-        };
-        let converged = rep
-            .final_eval
-            .aux
-            .map(|a| if a > 60.0 { "yes" } else { "no" })
-            .unwrap_or("-");
-        rows.push(vec![
-            s.label.clone(),
-            format!("{:.2} MB", rep.optimizer_bytes as f64 / 1048576.0),
-            at(0.25),
-            at(0.5),
-            at(1.0),
-            converged.to_string(),
-            format!("{:.1}s", rep.wall.as_secs_f64()),
-            format!("{:.0}%", 100.0 * rep.opt_overhead_frac()),
-        ]);
+    let mut specs = benchlib::table3_specs(steps, &ratios);
+    for s in &mut specs {
+        s.cfg.eval_every = (steps / 4).max(1); // checkpointed quality
     }
+    let reports = run_specs(specs)?;
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|rep| {
+            let at = |q: f64| -> String {
+                let evs = &rep.evals;
+                if evs.is_empty() {
+                    return "-".into();
+                }
+                let idx = (((evs.len() - 1) as f64) * q) as usize;
+                evs[idx].aux.map(|a| format!("{a:.1}")).unwrap_or("-".into())
+            };
+            let converged = rep
+                .final_eval
+                .aux
+                .map(|a| if a > 60.0 { "yes" } else { "no" })
+                .unwrap_or("-");
+            vec![
+                rep.label.clone(),
+                format!("{:.2} MB", rep.optimizer_bytes as f64 / 1048576.0),
+                at(0.25),
+                at(0.5),
+                at(1.0),
+                converged.to_string(),
+                format!("{:.1}s", rep.wall.as_secs_f64()),
+                format!("{:.0}%", 100.0 * rep.opt_overhead_frac()),
+            ]
+        })
+        .collect();
     print_table(
         &format!("Table 3 substitute — ControlNet rank sweep ({steps} steps)"),
         &[

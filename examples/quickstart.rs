@@ -3,16 +3,15 @@
 //!
 //!     cargo run --release --example quickstart
 
-use coap::benchlib::{print_report_table, run_spec, RunSpec};
+use coap::benchlib;
 use coap::config::{OptKind, TrainConfig};
-use coap::runtime::open_backend;
+use coap::coordinator::sweep::{print_report_table, RunSpec};
 use coap::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let steps = args.usize_or("steps", 60);
-    let cfg = TrainConfig::from_args(&args)?;
-    let rt = open_backend(&cfg)?;
+    let env = benchlib::shard_env(&args, TrainConfig::from_args(&args)?)?;
 
     let mut base = TrainConfig::default();
     base.model = args.str_or("model", "lm_tiny");
@@ -29,10 +28,13 @@ fn main() -> anyhow::Result<()> {
     coap_cfg.optimizer = OptKind::Coap;
 
     eprintln!("training {} for {steps} steps with AdamW, then COAP...", base.model);
-    let r_adam = run_spec(&rt, &RunSpec::new("AdamW", adamw))?;
-    let r_coap = run_spec(&rt, &RunSpec::new("COAP", coap_cfg))?;
+    let reports = env.run(vec![
+        RunSpec::new("AdamW", adamw),
+        RunSpec::new("COAP", coap_cfg),
+    ])?;
+    let (r_adam, r_coap) = (&reports[0], &reports[1]);
 
-    print_report_table("quickstart: COAP vs AdamW", &base.model, false, &[r_adam.clone(), r_coap.clone()]);
+    print_report_table("quickstart: COAP vs AdamW", &base.model, false, &reports);
     let saved = 100.0 * (1.0 - r_coap.optimizer_bytes as f64 / r_adam.optimizer_bytes as f64);
     println!(
         "\nCOAP cut optimizer memory by {saved:.0}% with eval PPL {:.2} vs AdamW {:.2}",

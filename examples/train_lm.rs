@@ -3,13 +3,14 @@
 //! optionally run the full Table-5 method comparison.
 //!
 //!     cargo run --release --example train_lm -- --steps 300 --model lm_small
-//!     cargo run --release --example train_lm -- --table5 [--large]
+//!     cargo run --release --example train_lm -- --table5 [--large] [--workers 2]
 //!
 //! Results are appended to runs/train_lm.json and recorded in
 //! EXPERIMENTS.md.
 
-use coap::benchlib::{self, print_report_table, run_spec, RunSpec};
+use coap::benchlib;
 use coap::config::TrainConfig;
+use coap::coordinator::sweep::print_report_table;
 use coap::coordinator::Trainer;
 use coap::runtime::{open_backend, Backend};
 use coap::util::cli::Args;
@@ -20,21 +21,17 @@ use std::sync::Arc;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let mut cfg = TrainConfig::from_args(&args)?;
-    let rt = open_backend(&cfg)?;
 
     if args.has("table5") {
         let steps = args.usize_or("steps", benchlib::bench_steps(120));
         let large = args.has("large");
         let specs = benchlib::table5_specs(steps, large);
-        let mut reports = Vec::new();
-        for s in &specs {
-            eprintln!("-- running {} ({steps} steps on {})", s.label, s.cfg.model);
-            reports.push(run_spec(&rt, s)?);
-        }
-        let model = &specs[0].cfg.model;
+        let model = specs[0].cfg.model.clone();
+        eprintln!("-- running table5 ({} rows, {steps} steps on {model})", specs.len());
+        let reports = benchlib::shard_env(&args, cfg)?.run(specs)?;
         print_report_table(
             &format!("Table 5 substitute — {} ({} steps)", model, steps),
-            model,
+            &model,
             false,
             &reports,
         );
@@ -42,6 +39,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // Single end-to-end run with the loss curve logged.
+    let rt = open_backend(&cfg)?;
     if !args.has("model") {
         cfg.model = "lm_small".into();
     }
@@ -62,7 +60,8 @@ fn main() -> anyhow::Result<()> {
         cfg.optimizer.label(),
         cfg.steps
     );
-    let mut tr = Trainer::new(cfg.clone(), Arc::clone(&rt))?;
+    // Default events sink = the classic stderr step/eval log.
+    let mut tr = Trainer::builder(cfg.clone()).backend(Arc::clone(&rt)).build()?;
     let rep = tr.run()?;
 
     println!("\nloss curve (step, train loss):");
@@ -102,10 +101,4 @@ fn main() -> anyhow::Result<()> {
     std::fs::write("runs/train_lm.json", Json::Obj(obj).to_string())?;
     eprintln!("wrote runs/train_lm.json");
     Ok(())
-}
-
-// (RunSpec import is used by the table5 path.)
-#[allow(unused)]
-fn _spec_type_check(s: RunSpec) -> String {
-    s.label
 }

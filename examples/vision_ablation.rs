@@ -5,32 +5,31 @@
 //!   --tucker  conv projection format comparison (paper App. Fig 1)
 //!
 //!     cargo run --release --example vision_ablation -- --fig3 --steps 120
+//!
+//! All paths run through the sharded sweep API: pass --workers N to run
+//! rows concurrently (reports stay bit-identical and in spec order).
 
-use coap::benchlib::{self, print_report_table, quality, run_spec};
+use coap::benchlib;
 use coap::config::TrainConfig;
-use coap::runtime::open_backend;
+use coap::coordinator::sweep::{print_report_table, quality};
 use coap::util::bench::print_table;
 use coap::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
-    let cfg = TrainConfig::from_args(&args)?;
-    let rt = open_backend(&cfg)?;
     let steps = args.usize_or("steps", benchlib::bench_steps(100));
+    let env = benchlib::shard_env(&args, TrainConfig::from_args(&args)?)?;
+    let run_specs = |specs: Vec<benchlib::RunSpec>| env.run(specs);
     let mut ran = false;
 
     if args.has("fig3") {
         ran = true;
-        let specs = benchlib::fig3_specs(steps);
+        let reports = run_specs(benchlib::fig3_specs(steps))?;
         let mut rows = Vec::new();
-        let mut curves = Vec::new();
-        for s in &specs {
-            eprintln!("-- fig3: {} ({steps} steps)", s.label);
-            let rep = run_spec(&rt, s)?;
-            curves.push((s.label.clone(), rep.ceu_curve.clone()));
-            let (_, acc) = quality("vit_tiny", false, &rep);
+        for rep in &reports {
+            let (_, acc) = quality("vit_tiny", false, rep);
             rows.push(vec![
-                s.label.clone(),
+                rep.label.clone(),
                 format!("{:.1}", rep.ceu_total),
                 acc,
             ]);
@@ -39,7 +38,8 @@ fn main() -> anyhow::Result<()> {
             if !c.is_empty() {
                 let pick = |q: f64| c[((c.len() - 1) as f64 * q) as usize].1;
                 eprintln!(
-                    "   CEU @25/50/75/100%: {:.1} / {:.1} / {:.1} / {:.1}",
+                    "   {} CEU @25/50/75/100%: {:.1} / {:.1} / {:.1} / {:.1}",
+                    rep.label,
                     pick(0.25),
                     pick(0.5),
                     pick(0.75),
@@ -56,14 +56,14 @@ fn main() -> anyhow::Result<()> {
 
     if args.has("fig4") {
         ran = true;
-        let specs = benchlib::fig4_specs(steps);
-        let mut rows = Vec::new();
-        for s in &specs {
-            eprintln!("-- fig4: {}", s.label);
-            let rep = run_spec(&rt, s)?;
-            let (_, acc) = quality("vit_tiny", false, &rep);
-            rows.push(vec![s.label.clone(), acc, format!("{:.3}", rep.final_train_loss)]);
-        }
+        let reports = run_specs(benchlib::fig4_specs(steps))?;
+        let rows: Vec<Vec<String>> = reports
+            .iter()
+            .map(|rep| {
+                let (_, acc) = quality("vit_tiny", false, rep);
+                vec![rep.label.clone(), acc, format!("{:.3}", rep.final_train_loss)]
+            })
+            .collect();
         print_table(
             &format!("Fig 4 substitute — hyper-parameter grid ({steps} steps)"),
             &["Config", "Acc(%)", "Train loss"],
@@ -74,12 +74,7 @@ fn main() -> anyhow::Result<()> {
     if args.has("table7") {
         ran = true;
         for (regime, pretrain) in [("fine-tuning", false), ("pre-training", true)] {
-            let specs = benchlib::table7_specs(steps, pretrain);
-            let mut reports = Vec::new();
-            for s in &specs {
-                eprintln!("-- table7 ({regime}): {}", s.label);
-                reports.push(run_spec(&rt, s)?);
-            }
+            let reports = run_specs(benchlib::table7_specs(steps, pretrain))?;
             print_report_table(
                 &format!("Table 7 substitute — {regime} ({steps} steps)"),
                 "vit_tiny",
@@ -91,12 +86,7 @@ fn main() -> anyhow::Result<()> {
 
     if args.has("tucker") {
         ran = true;
-        let specs = benchlib::tucker_specs(steps);
-        let mut reports = Vec::new();
-        for s in &specs {
-            eprintln!("-- tucker: {}", s.label);
-            reports.push(run_spec(&rt, s)?);
-        }
+        let reports = run_specs(benchlib::tucker_specs(steps))?;
         print_report_table(
             &format!("App. Fig 1 substitute — conv formats ({steps} steps)"),
             "cnn_tiny",

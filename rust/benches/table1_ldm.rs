@@ -1,25 +1,16 @@
 //! Table 1 bench — LDM pre-training substitute (conv denoiser):
 //! AdamW / GaLore / COAP and the Adafactor branch at rank ratio 2.
-//! Short runs by default; COAP_BENCH_STEPS=N lengthens them.
+//! Short runs by default; COAP_BENCH_STEPS=N lengthens them and
+//! COAP_BENCH_WORKERS=N shards rows across the sweep worker pool.
 
-use coap::benchlib::{self, print_report_table, run_spec};
-use coap::config::TrainConfig;
-use coap::runtime::open_backend;
+use coap::benchlib;
+use coap::coordinator::sweep::print_report_table;
 
 fn main() -> anyhow::Result<()> {
-    let rt = open_backend(&TrainConfig::default())?;
-    let steps = benchlib::bench_steps(16);
-    let specs = benchlib::table1_specs(steps);
-    let mut reports = Vec::new();
-    for s in &specs {
-        eprintln!("-- {}", s.label);
-        reports.push(run_spec(&rt, s)?);
-    }
-    print_report_table(
-        &format!("Table 1 — LDM substitute (cnn_tiny, {steps} steps)"),
-        "cnn_tiny",
-        false,
-        &reports,
-    );
+    // Steps/title/model defaults live once, in the named-sweep registry
+    // (`COAP_BENCH_STEPS` still overrides the step count).
+    let named = benchlib::named_sweep("table1", None)?;
+    let reports = benchlib::bench_env()?.run(named.specs)?;
+    print_report_table(&named.title, named.model, named.control, &reports);
     Ok(())
 }

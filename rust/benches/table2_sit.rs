@@ -1,24 +1,15 @@
 //! Table 2 bench — SiT-XL/2 + REPA substitute: AdamW branch
-//! (GaLore/LoRA/ReLoRA/COAP) and Adafactor branch (GaLore/Flora/COAP).
+//! (GaLore/LoRA/ReLoRA/COAP) and Adafactor branch (GaLore/Flora/COAP),
+//! sharded across the sweep worker pool (COAP_BENCH_WORKERS).
 
-use coap::benchlib::{self, print_report_table, run_spec};
-use coap::config::TrainConfig;
-use coap::runtime::open_backend;
+use coap::benchlib;
+use coap::coordinator::sweep::print_report_table;
 
 fn main() -> anyhow::Result<()> {
-    let rt = open_backend(&TrainConfig::default())?;
-    let steps = benchlib::bench_steps(16);
-    let specs = benchlib::table2_specs(steps);
-    let mut reports = Vec::new();
-    for s in &specs {
-        eprintln!("-- {}", s.label);
-        reports.push(run_spec(&rt, s)?);
-    }
-    print_report_table(
-        &format!("Table 2 — SiT substitute (sit_small, {steps} steps)"),
-        "sit_small",
-        false,
-        &reports,
-    );
+    // Steps/title/model defaults live once, in the named-sweep registry
+    // (`COAP_BENCH_STEPS` still overrides the step count).
+    let named = benchlib::named_sweep("table2", None)?;
+    let reports = benchlib::bench_env()?.run(named.specs)?;
+    print_report_table(&named.title, named.model, named.control, &reports);
     Ok(())
 }

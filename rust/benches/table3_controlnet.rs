@@ -2,24 +2,14 @@
 //! with 8-bit variants (quality checkpoints live in the longer
 //! examples/controlnet_sweep run; this bench reports memory + time).
 
-use coap::benchlib::{self, print_report_table, run_spec};
-use coap::config::TrainConfig;
-use coap::runtime::open_backend;
+use coap::benchlib;
+use coap::coordinator::sweep::print_report_table;
 
 fn main() -> anyhow::Result<()> {
-    let rt = open_backend(&TrainConfig::default())?;
-    let steps = benchlib::bench_steps(8);
-    let specs = benchlib::table3_specs(steps, &[2.0, 4.0, 8.0]);
-    let mut reports = Vec::new();
-    for s in &specs {
-        eprintln!("-- {}", s.label);
-        reports.push(run_spec(&rt, s)?);
-    }
-    print_report_table(
-        &format!("Table 3 — ControlNet substitute (ctrl_small, {steps} steps)"),
-        "ctrl_small",
-        true,
-        &reports,
-    );
+    // Steps/title/model defaults live once, in the named-sweep registry
+    // (`COAP_BENCH_STEPS` still overrides the step count).
+    let named = benchlib::named_sweep("table3", None)?;
+    let reports = benchlib::bench_env()?.run(named.specs)?;
+    print_report_table(&named.title, named.model, named.control, &reports);
     Ok(())
 }

@@ -1,25 +1,15 @@
 //! Table 5 bench — LLaMA-1B substitute (lm_small): AdamW / GaLore /
-//! LoRA / ReLoRA / COAP. The 8-bit "7B" branch runs with --large via
-//! examples/train_lm --table5 --large (lm_base is slow on 1 core).
+//! LoRA / ReLoRA / COAP. The 8-bit "7B" branch runs via
+//! `coap sweep table5-large` (lm_base is slow on 1 core).
 
-use coap::benchlib::{self, print_report_table, run_spec};
-use coap::config::TrainConfig;
-use coap::runtime::open_backend;
+use coap::benchlib;
+use coap::coordinator::sweep::print_report_table;
 
 fn main() -> anyhow::Result<()> {
-    let rt = open_backend(&TrainConfig::default())?;
-    let steps = benchlib::bench_steps(16);
-    let specs = benchlib::table5_specs(steps, false);
-    let mut reports = Vec::new();
-    for s in &specs {
-        eprintln!("-- {}", s.label);
-        reports.push(run_spec(&rt, s)?);
-    }
-    print_report_table(
-        &format!("Table 5 — LLaMA-1B substitute (lm_small, {steps} steps)"),
-        "lm_small",
-        false,
-        &reports,
-    );
+    // Steps/title/model defaults live once, in the named-sweep registry
+    // (`COAP_BENCH_STEPS` still overrides the step count).
+    let named = benchlib::named_sweep("table5", None)?;
+    let reports = benchlib::bench_env()?.run(named.specs)?;
+    print_report_table(&named.title, named.model, named.control, &reports);
     Ok(())
 }

@@ -2,24 +2,14 @@
 //! pretrained-init regime): DeepSpeed-offload is N/A on this substrate;
 //! AdamW plays the full-rank baseline role.
 
-use coap::benchlib::{self, print_report_table, run_spec};
-use coap::config::TrainConfig;
-use coap::runtime::open_backend;
+use coap::benchlib;
+use coap::coordinator::sweep::print_report_table;
 
 fn main() -> anyhow::Result<()> {
-    let rt = open_backend(&TrainConfig::default())?;
-    let steps = benchlib::bench_steps(16);
-    let specs = benchlib::table6_specs(steps);
-    let mut reports = Vec::new();
-    for s in &specs {
-        eprintln!("-- {}", s.label);
-        reports.push(run_spec(&rt, s)?);
-    }
-    print_report_table(
-        &format!("Table 6 — LLaVA fine-tune substitute (llava_small, {steps} steps)"),
-        "llava_small",
-        false,
-        &reports,
-    );
+    // Steps/title/model defaults live once, in the named-sweep registry
+    // (`COAP_BENCH_STEPS` still overrides the step count).
+    let named = benchlib::named_sweep("table6", None)?;
+    let reports = benchlib::bench_env()?.run(named.specs)?;
+    print_report_table(&named.title, named.model, named.control, &reports);
     Ok(())
 }

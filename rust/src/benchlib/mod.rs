@@ -1,32 +1,27 @@
-//! Shared workload builders for every paper table/figure — used by both
-//! the `examples/` quality drivers and the `cargo bench` targets so the
-//! row definitions exist exactly once.
+//! Pure spec builders for every paper table/figure — the row definitions
+//! exist exactly once, shared by the `cargo bench` targets, the
+//! `examples/` quality drivers and the `coap sweep` CLI subcommand.
+//!
+//! Execution lives in [`coordinator::sweep`](crate::coordinator::sweep):
+//! `Sweep::new(table5_specs(steps)).workers(n).run(&rt)?` shards the
+//! rows across a worker pool and returns reports in spec order.
 //!
 //! Step counts: quality runs need hundreds of steps (examples, recorded
 //! in EXPERIMENTS.md); bench targets default to short runs sized for a
 //! single-core box. Override with env `COAP_BENCH_STEPS` or per-binary
-//! `--steps`.
+//! `--steps`; shard with `COAP_BENCH_WORKERS` / `--workers`.
 
 use crate::config::{ConvFormat, MomentBase, OptKind, TrainConfig};
-use crate::coordinator::{memory, TrainReport, Trainer};
-use crate::runtime::Backend;
+use crate::coordinator::events::ProgressSink;
+use crate::coordinator::sweep::Sweep;
+use crate::coordinator::TrainReport;
+use crate::runtime::{open_backend, Backend};
 use crate::tensor::Precision;
-use crate::util::bench::print_table;
-use anyhow::Result;
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
 use std::sync::Arc;
 
-/// One labelled table row to run.
-#[derive(Clone)]
-pub struct RunSpec {
-    pub label: String,
-    pub cfg: TrainConfig,
-}
-
-impl RunSpec {
-    pub fn new(label: &str, cfg: TrainConfig) -> RunSpec {
-        RunSpec { label: label.into(), cfg }
-    }
-}
+pub use crate::coordinator::sweep::RunSpec;
 
 pub fn bench_steps(default: usize) -> usize {
     std::env::var("COAP_BENCH_STEPS")
@@ -35,59 +30,83 @@ pub fn bench_steps(default: usize) -> usize {
         .unwrap_or(default)
 }
 
-pub fn run_spec(rt: &Arc<dyn Backend>, spec: &RunSpec) -> Result<TrainReport> {
-    let mut tr = Trainer::new(spec.cfg.clone(), Arc::clone(rt))?;
-    tr.quiet = true;
-    let mut rep = tr.run()?;
-    rep.label = spec.label.clone();
-    Ok(rep)
+/// Sweep worker-pool width for the bench binaries (`COAP_BENCH_WORKERS`,
+/// default 1 so per-row wall-clock numbers stay uncontended).
+pub fn bench_workers() -> usize {
+    std::env::var("COAP_BENCH_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+        .max(1)
 }
 
-/// Quality (name, value) per model family — the paper's last column.
-pub fn quality(model: &str, control: bool, rep: &TrainReport) -> (String, String) {
-    let ev = &rep.final_eval;
-    if model.starts_with("lm") {
-        ("PPL↓".into(), format!("{:.2}", ev.ppl))
-    } else if model.starts_with("vit") || model.starts_with("llava") {
-        (
-            "Acc(%)↑".into(),
-            ev.accuracy.map(|a| format!("{:.1}", a * 100.0)).unwrap_or("-".into()),
-        )
-    } else if control {
-        (
-            "mAP-proxy↑".into(),
-            ev.aux.map(|a| format!("{:.1}", a)).unwrap_or("-".into()),
-        )
+/// The sharded-run threads policy: with more than one sweep worker,
+/// rows run single-threaded unless the user explicitly pinned
+/// `--threads` — sharded rows already saturate the cores, a pooled-GEMM
+/// backend would serialize every row's fwd/bwd behind its shared pool
+/// mutex, and per-row optimizer pools would oversubscribe. Apply the
+/// result to **both** the backend config and every spec's `cfg.threads`
+/// (the per-trainer slot pools size themselves from the row's config).
+pub fn shard_threads(requested: usize, workers: usize, explicit: bool) -> usize {
+    if workers > 1 && !explicit {
+        1
     } else {
-        // denoising / diffusion substitutes: scaled eval MSE
-        ("FID-proxy↓".into(), format!("{:.2}", ev.loss * 100.0))
+        requested.max(1)
     }
 }
 
-/// Print a paper-style table; row 0 is the full-rank baseline for the
-/// Δmem% / Δtime% columns.
-pub fn print_report_table(title: &str, model: &str, control: bool, reports: &[TrainReport]) {
-    let base = &reports[0];
-    let (qname, _) = quality(model, control, base);
-    let header: Vec<&str> = vec![
-        "Method", "Optim Mem↓", "ΔMem", "Wall(s)", "Opt+Proj oh.", &qname,
-    ];
-    let rows: Vec<Vec<String>> = reports
-        .iter()
-        .map(|r| {
-            let dmem = 100.0 * (r.optimizer_bytes as f64 / base.optimizer_bytes as f64 - 1.0);
-            let (_, qval) = quality(model, control, r);
-            vec![
-                r.label.clone(),
-                memory::fmt_mb(r.optimizer_bytes),
-                format!("{dmem:+.0}%"),
-                format!("{:.1}", r.wall.as_secs_f64()),
-                format!("{:.0}%", 100.0 * r.opt_overhead_frac()),
-                qval,
-            ]
-        })
-        .collect();
-    print_table(title, &header, &rows);
+/// Whether the user explicitly pinned the thread count: a `--threads`
+/// CLI flag or a `--config` key (both recorded by `TrainConfig::set` as
+/// `cfg.threads_explicit`, even when the pinned value equals the
+/// machine default), or any mutation that moved `cfg.threads` off the
+/// built-in default.
+pub fn threads_explicit(args: &Args, cfg: &TrainConfig) -> bool {
+    args.has("threads")
+        || cfg.threads_explicit
+        || cfg.threads != TrainConfig::default().threads
+}
+
+/// The resolved sharding environment every sweep driver runs in: one
+/// backend, the worker-pool width, and the per-row thread count, all
+/// resolved once through [`shard_threads`]. Built from CLI flags
+/// ([`shard_env`]) or the bench env vars ([`bench_env`]).
+pub struct ShardEnv {
+    pub rt: Arc<dyn Backend>,
+    pub workers: usize,
+    pub row_threads: usize,
+}
+
+impl ShardEnv {
+    /// Stamp `specs` with the resolved row thread count and run them as
+    /// a sharded sweep with a progress line per row, returning reports
+    /// in spec order.
+    pub fn run(&self, mut specs: Vec<RunSpec>) -> Result<Vec<TrainReport>> {
+        for s in &mut specs {
+            s.cfg.threads = self.row_threads;
+        }
+        Sweep::new(specs)
+            .workers(self.workers)
+            .events(Arc::new(ProgressSink))
+            .run(&self.rt)
+    }
+}
+
+/// Resolve a [`ShardEnv`] from CLI flags (`--workers`, `--threads`,
+/// `--backend`, `--config`) — the `coap sweep` subcommand and the
+/// example drivers.
+pub fn shard_env(args: &Args, mut cfg: TrainConfig) -> Result<ShardEnv> {
+    let workers = args.usize_or("workers", 1).max(1);
+    cfg.threads = shard_threads(cfg.threads, workers, threads_explicit(args, &cfg));
+    Ok(ShardEnv { rt: open_backend(&cfg)?, workers, row_threads: cfg.threads })
+}
+
+/// Resolve a [`ShardEnv`] from the bench env vars (`COAP_BENCH_WORKERS`)
+/// over the default config — the `cargo bench` table binaries.
+pub fn bench_env() -> Result<ShardEnv> {
+    let workers = bench_workers();
+    let mut cfg = TrainConfig::default();
+    cfg.threads = shard_threads(cfg.threads, workers, false);
+    Ok(ShardEnv { rt: open_backend(&cfg)?, workers, row_threads: cfg.threads })
 }
 
 fn base_cfg(model: &str, steps: usize, lr: f32) -> TrainConfig {
@@ -139,7 +158,9 @@ pub fn table2_specs(steps: usize) -> Vec<RunSpec> {
         RunSpec::new("LoRA", with(b(), |c| c.optimizer = OptKind::Lora)),
         RunSpec::new("ReLoRA", with(b(), |c| {
             c.optimizer = OptKind::Relora;
-            c.relora_merge_every = steps / 3;
+            // Clamped like table5: steps < 3 must not yield a merge
+            // period of 0 (a zero period means "merge every 0 steps").
+            c.relora_merge_every = (steps / 3).max(1);
         })),
         RunSpec::new("COAP", with(b(), |c| c.optimizer = OptKind::Coap)),
         RunSpec::new("Adafactor", with(b(), |c| c.optimizer = OptKind::Adafactor)),
@@ -378,4 +399,163 @@ pub fn tucker_specs(steps: usize) -> Vec<RunSpec> {
         RunSpec::new("Tucker-2", b(ConvFormat::Tucker2)),
         RunSpec::new("Tucker (full)", b(ConvFormat::Full)),
     ]
+}
+
+// ---------------------------------------------------------------------------
+// Named sweeps (the `coap sweep <name>` registry)
+// ---------------------------------------------------------------------------
+
+/// Every sweep name `coap sweep` accepts.
+pub const SWEEP_NAMES: &[&str] = &[
+    "table1",
+    "table2",
+    "table3",
+    "table5",
+    "table5-large",
+    "table6",
+    "table7",
+    "table7-pretrain",
+    "fig3",
+    "fig4",
+    "ddpm",
+    "ddpm-celeb",
+    "tucker",
+];
+
+/// A resolved named sweep: the specs plus the presentation metadata the
+/// report table needs.
+pub struct NamedSweep {
+    pub name: String,
+    pub title: String,
+    pub model: &'static str,
+    pub control: bool,
+    pub steps: usize,
+    pub specs: Vec<RunSpec>,
+}
+
+/// Resolve one of [`SWEEP_NAMES`] into its specs. `steps_override`
+/// (e.g. from `--steps`) wins over `COAP_BENCH_STEPS` wins over the
+/// per-sweep bench default.
+pub fn named_sweep(name: &str, steps_override: Option<usize>) -> Result<NamedSweep> {
+    let (model, control, default_steps, what): (&'static str, bool, usize, &str) = match name {
+        "table1" => ("cnn_tiny", false, 16, "Table 1 — LDM substitute"),
+        "table2" => ("sit_small", false, 16, "Table 2 — SiT substitute"),
+        "table3" => ("ctrl_small", true, 8, "Table 3 — ControlNet substitute"),
+        "table5" => ("lm_small", false, 16, "Table 5 — LLaMA-1B substitute"),
+        "table5-large" => ("lm_base", false, 8, "Table 5 — LLaMA-7B substitute (8-bit)"),
+        "table6" => ("llava_small", false, 16, "Table 6 — LLaVA fine-tune substitute"),
+        "table7" => ("vit_tiny", false, 16, "Table 7 — ablation (fine-tuning)"),
+        "table7-pretrain" => ("vit_tiny", false, 16, "Table 7 — ablation (pre-training)"),
+        "fig3" => ("vit_tiny", false, 16, "Fig 3 — CEU + accuracy trajectories"),
+        "fig4" => ("vit_tiny", false, 8, "Fig 4 — hyper-parameter grid"),
+        "ddpm" => ("cnn_small", false, 16, "App. Table 2 — DDPM CIFAR-sub"),
+        "ddpm-celeb" => ("cnn_celeb", false, 8, "App. Table 2 — DDPM CelebA-HQ-sub"),
+        "tucker" => ("cnn_tiny", false, 16, "App. Fig 1 — conv projection formats"),
+        _ => bail!("unknown sweep '{name}' (one of: {})", SWEEP_NAMES.join("|")),
+    };
+    let steps = steps_override.unwrap_or_else(|| bench_steps(default_steps));
+    let specs = match name {
+        "table1" => table1_specs(steps),
+        "table2" => table2_specs(steps),
+        "table3" => table3_specs(steps, &[2.0, 4.0, 8.0]),
+        "table5" => table5_specs(steps, false),
+        "table5-large" => table5_specs(steps, true),
+        "table6" => table6_specs(steps),
+        "table7" => table7_specs(steps, false),
+        "table7-pretrain" => table7_specs(steps, true),
+        "fig3" => fig3_specs(steps),
+        "fig4" => fig4_specs(steps),
+        "ddpm" => ddpm_specs(steps, false),
+        "ddpm-celeb" => ddpm_specs(steps, true),
+        "tucker" => tucker_specs(steps),
+        _ => unreachable!("name validated above"),
+    };
+    Ok(NamedSweep {
+        name: name.into(),
+        title: format!("{what} ({model}, {steps} steps)"),
+        model,
+        control,
+        steps,
+        specs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression for the ReLoRA merge period: `steps / 3` without the
+    /// clamp gave a merge period of 0 for steps < 3 (table5 already
+    /// clamped; table2 did not).
+    #[test]
+    fn relora_merge_period_is_clamped_in_every_table() {
+        for steps in [1usize, 2, 3, 16] {
+            for specs in [table2_specs(steps), table5_specs(steps, false)] {
+                let relora = specs
+                    .iter()
+                    .find(|s| s.label == "ReLoRA")
+                    .expect("ReLoRA row present");
+                assert!(
+                    relora.cfg.relora_merge_every >= 1,
+                    "steps={steps}: merge period {}",
+                    relora.cfg.relora_merge_every
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_named_sweep_resolves() {
+        for name in SWEEP_NAMES {
+            let ns = named_sweep(name, Some(2)).unwrap();
+            assert_eq!(ns.steps, 2, "{name}");
+            assert!(!ns.specs.is_empty(), "{name}");
+            assert!(ns.title.contains(ns.model), "{name}: {}", ns.title);
+            for spec in &ns.specs {
+                assert_eq!(spec.cfg.steps, 2, "{name}/{}", spec.label);
+            }
+        }
+        assert!(named_sweep("table9", None).is_err());
+    }
+
+    #[test]
+    fn steps_override_beats_default() {
+        let ns = named_sweep("table1", None).unwrap();
+        assert!(ns.steps >= 1);
+        let ns2 = named_sweep("table1", Some(5)).unwrap();
+        assert_eq!(ns2.steps, 5);
+    }
+
+    /// Sharded rows default to single-threaded (backend pool + per-row
+    /// optimizer pools) unless the user explicitly pinned --threads.
+    #[test]
+    fn shard_threads_policy() {
+        assert_eq!(shard_threads(8, 1, false), 8);
+        assert_eq!(shard_threads(8, 2, false), 1);
+        assert_eq!(shard_threads(8, 2, true), 8);
+        assert_eq!(shard_threads(0, 1, false), 1);
+
+        let cli = Args::parse(["--threads", "4"].iter().map(|s| s.to_string()));
+        let cfg = TrainConfig::from_args(&cli).unwrap();
+        assert!(threads_explicit(&cli, &cfg));
+        let none = Args::parse(Vec::<String>::new());
+        assert!(!threads_explicit(&none, &TrainConfig::default()));
+        // A --config JSON that moved threads off the default counts too.
+        let mut jcfg = TrainConfig::default();
+        jcfg.threads += 1;
+        assert!(threads_explicit(&none, &jcfg));
+        // ...as does a config that pins threads AT the machine default
+        // (the value alone can't reveal intent; the key's presence does).
+        let dir = std::env::temp_dir().join(format!("coap_cfgexp_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(&path, format!("{{\"threads\":{}}}", TrainConfig::default().threads))
+            .unwrap();
+        let cargs = Args::parse(
+            ["--config", path.to_str().unwrap()].iter().map(|s| s.to_string()),
+        );
+        let ccfg = TrainConfig::from_args(&cargs).unwrap();
+        assert!(threads_explicit(&cargs, &ccfg));
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

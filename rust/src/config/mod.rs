@@ -136,6 +136,11 @@ pub struct TrainConfig {
     pub log_every: usize,
     pub track_ceu: bool,
     pub threads: usize,
+    /// Whether `threads` was pinned explicitly (CLI flag or config-file
+    /// key) rather than left at the machine default — even when the
+    /// pinned value equals that default. Drives the sweep sharding
+    /// policy (`benchlib::shard_threads`).
+    pub threads_explicit: bool,
     pub artifacts_dir: String,
     pub ablation: CoapAblation,
     /// ReLoRA merge interval (steps).
@@ -217,6 +222,7 @@ impl Default for TrainConfig {
             log_every: 10,
             track_ceu: false,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            threads_explicit: false,
             artifacts_dir: default_artifacts_dir(),
             ablation: CoapAblation::default(),
             relora_merge_every: 200,
@@ -275,7 +281,10 @@ impl TrainConfig {
             "eval-batches" | "eval_batches" => self.eval_batches = val.parse()?,
             "log-every" | "log_every" => self.log_every = val.parse()?,
             "track-ceu" | "track_ceu" => self.track_ceu = val.parse()?,
-            "threads" => self.threads = val.parse()?,
+            "threads" => {
+                self.threads = val.parse()?;
+                self.threads_explicit = true;
+            }
             "artifacts" | "artifacts-dir" => self.artifacts_dir = val.into(),
             "no-recalib" => self.ablation.use_recalib = !val.parse::<bool>()?,
             "no-pupdate" => self.ablation.use_pupdate = !val.parse::<bool>()?,

@@ -1,0 +1,248 @@
+//! Training events: the pluggable progress/reporting surface.
+//!
+//! Everything a run used to print inline (`eprintln!` behind a
+//! `quiet: bool`) is now a [`TrainEvent`] delivered to an [`EventSink`]
+//! chosen at construction time (`Trainer::builder(..).events(sink)`), so
+//! the same training loop can drive a terminal log ([`StderrSink`]), a
+//! sweep progress line ([`ProgressSink`]), a test recorder
+//! ([`CollectSink`]) or nothing at all ([`NullSink`]) — and a sharded
+//! sweep can merge many concurrent runs into one sink (events carry the
+//! spec index in `run`).
+//!
+//! Sinks must be `Send + Sync`: `coordinator::sweep` shares one sink
+//! across its worker pool.
+
+use super::metrics::EvalPoint;
+use std::sync::{Arc, Mutex};
+
+/// One observable moment of a training run. `run` is the spec index the
+/// run occupies inside a sweep (0 for standalone runs); `label` is the
+/// row label (optimizer label unless overridden by the builder) —
+/// shared as `Arc<str>` so per-step events cost a refcount bump, not a
+/// heap clone, inside the timed training loop.
+#[derive(Debug, Clone)]
+pub enum TrainEvent {
+    /// Emitted once, before backend warmup and the first step.
+    RunStarted { run: usize, label: Arc<str>, model: String, steps: usize },
+    /// One optimizer step completed. `ms_per_step` is the running mean
+    /// wall-clock per step so far.
+    Step { run: usize, label: Arc<str>, step: usize, loss: f64, ema: f64, ms_per_step: f64 },
+    /// The step's optimizer dispatch included projection-refresh work
+    /// (Eqn-6 P-update, Eqn-7 recalibration, GaLore SVD or a Flora
+    /// resample); `ms` is the time that refresh cost.
+    ProjRefresh { run: usize, label: Arc<str>, step: usize, ms: f64 },
+    /// A held-out evaluation completed.
+    Eval { run: usize, label: Arc<str>, eval: EvalPoint },
+    /// Emitted once, after the report is assembled.
+    RunFinished { run: usize, label: Arc<str>, steps: usize, final_train_loss: f64, wall_s: f64 },
+    /// Terminal event when the run errors after `RunStarted` — every
+    /// started run ends in exactly one of `RunFinished` / `RunFailed`.
+    /// `step` is the last fully-completed step of this run (the same
+    /// local scale the `Step` events use).
+    RunFailed { run: usize, label: Arc<str>, step: usize, error: String },
+}
+
+impl TrainEvent {
+    /// The sweep spec index this event belongs to.
+    pub fn run(&self) -> usize {
+        match self {
+            TrainEvent::RunStarted { run, .. }
+            | TrainEvent::Step { run, .. }
+            | TrainEvent::ProjRefresh { run, .. }
+            | TrainEvent::Eval { run, .. }
+            | TrainEvent::RunFinished { run, .. }
+            | TrainEvent::RunFailed { run, .. } => *run,
+        }
+    }
+
+    /// The row label this event belongs to.
+    pub fn label(&self) -> &str {
+        match self {
+            TrainEvent::RunStarted { label, .. }
+            | TrainEvent::Step { label, .. }
+            | TrainEvent::ProjRefresh { label, .. }
+            | TrainEvent::Eval { label, .. }
+            | TrainEvent::RunFinished { label, .. }
+            | TrainEvent::RunFailed { label, .. } => label,
+        }
+    }
+}
+
+/// Where [`TrainEvent`]s go. Implementations must tolerate interleaved
+/// events from concurrent runs (disambiguate via [`TrainEvent::run`]).
+pub trait EventSink: Send + Sync {
+    fn event(&self, ev: &TrainEvent);
+}
+
+/// Drops every event (the old `quiet: bool` behaviour).
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn event(&self, _ev: &TrainEvent) {}
+}
+
+/// The classic terminal log: step lines every `log_every` steps plus
+/// every eval — byte-compatible with the pre-event-sink `eprintln!`s.
+pub struct StderrSink {
+    log_every: usize,
+}
+
+impl StderrSink {
+    pub fn new(log_every: usize) -> StderrSink {
+        StderrSink { log_every }
+    }
+
+    fn step_due(&self, step: usize) -> bool {
+        self.log_every > 0 && step % self.log_every == 0
+    }
+}
+
+impl EventSink for StderrSink {
+    fn event(&self, ev: &TrainEvent) {
+        match ev {
+            TrainEvent::Step { label, step, loss, ema, ms_per_step, .. } => {
+                if self.step_due(*step) {
+                    eprintln!(
+                        "[{label}] step {step:>5}  loss {loss:.4}  ema {ema:.4}  \
+                         {ms_per_step:.0} ms/step"
+                    );
+                }
+            }
+            TrainEvent::Eval { label, eval, .. } => {
+                eprintln!(
+                    "[{label}] eval @ {}: loss {:.4} ppl {:.2}{}",
+                    eval.step,
+                    eval.loss,
+                    eval.ppl,
+                    eval.accuracy
+                        .map(|a| format!(" acc {:.1}%", a * 100.0))
+                        .unwrap_or_default(),
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Sweep progress: one `-- <label>` line as each row starts (what the
+/// bench drivers used to print by hand before each `run_spec`).
+#[derive(Default)]
+pub struct ProgressSink;
+
+impl EventSink for ProgressSink {
+    fn event(&self, ev: &TrainEvent) {
+        if let TrainEvent::RunStarted { label, .. } = ev {
+            eprintln!("-- {label}");
+        }
+    }
+}
+
+/// Records every event in arrival order (tests, report post-processing).
+#[derive(Default)]
+pub struct CollectSink(Mutex<Vec<TrainEvent>>);
+
+impl CollectSink {
+    /// Drain the recorded events.
+    pub fn take(&self) -> Vec<TrainEvent> {
+        std::mem::take(&mut self.0.lock().unwrap())
+    }
+
+    /// Copy of the events recorded so far.
+    pub fn snapshot(&self) -> Vec<TrainEvent> {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+impl EventSink for CollectSink {
+    fn event(&self, ev: &TrainEvent) {
+        self.0.lock().unwrap().push(ev.clone());
+    }
+}
+
+/// Duplicates every event to each inner sink, in order (e.g. a progress
+/// line on stderr plus a recorder).
+pub struct Fanout(pub Vec<Arc<dyn EventSink>>);
+
+impl EventSink for Fanout {
+    fn event(&self, ev: &TrainEvent) {
+        for sink in &self.0 {
+            sink.event(ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step_ev(run: usize, step: usize) -> TrainEvent {
+        TrainEvent::Step {
+            run,
+            label: "t".into(),
+            step,
+            loss: 1.0,
+            ema: 1.0,
+            ms_per_step: 0.0,
+        }
+    }
+
+    #[test]
+    fn collect_sink_records_in_order() {
+        let sink = CollectSink::default();
+        sink.event(&step_ev(0, 1));
+        sink.event(&step_ev(1, 1));
+        sink.event(&step_ev(0, 2));
+        let evs = sink.snapshot();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs.iter().map(TrainEvent::run).collect::<Vec<_>>(), vec![0, 1, 0]);
+        assert_eq!(sink.take().len(), 3);
+        assert!(sink.take().is_empty());
+    }
+
+    #[test]
+    fn fanout_duplicates_events() {
+        let a = Arc::new(CollectSink::default());
+        let b = Arc::new(CollectSink::default());
+        let tee = Fanout(vec![a.clone(), b.clone()]);
+        tee.event(&step_ev(0, 1));
+        assert_eq!(a.snapshot().len(), 1);
+        assert_eq!(b.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn stderr_sink_step_cadence() {
+        assert!(StderrSink::new(10).step_due(10));
+        assert!(StderrSink::new(10).step_due(20));
+        assert!(!StderrSink::new(10).step_due(5));
+        // log_every == 0 means no step lines at all (the old contract).
+        assert!(!StderrSink::new(0).step_due(0));
+        assert!(!StderrSink::new(0).step_due(7));
+    }
+
+    #[test]
+    fn event_accessors_cover_all_variants() {
+        let evs = [
+            TrainEvent::RunStarted { run: 3, label: "a".into(), model: "m".into(), steps: 2 },
+            step_ev(3, 1),
+            TrainEvent::ProjRefresh { run: 3, label: "a".into(), step: 1, ms: 0.5 },
+            TrainEvent::Eval { run: 3, label: "a".into(), eval: EvalPoint::default() },
+            TrainEvent::RunFinished {
+                run: 3,
+                label: "a".into(),
+                steps: 2,
+                final_train_loss: 0.1,
+                wall_s: 0.2,
+            },
+            TrainEvent::RunFailed {
+                run: 3,
+                label: "a".into(),
+                step: 1,
+                error: "boom".into(),
+            },
+        ];
+        for ev in &evs {
+            assert_eq!(ev.run(), 3);
+        }
+        assert!(evs[1..].iter().all(|e| e.label() == "a" || e.label() == "t"));
+    }
+}

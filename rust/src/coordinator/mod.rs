@@ -1,11 +1,16 @@
 //! The training coordinator (L3 leader): the loop, metrics, memory
-//! accounting and checkpointing around the pure HLO compute graphs.
+//! accounting, checkpointing, the event surface and the sharded sweep
+//! orchestrator around the pure HLO compute graphs.
 
 pub mod checkpoint;
+pub mod events;
 pub mod memory;
 pub mod metrics;
+pub mod sweep;
 pub mod trainer;
 
+pub use events::{CollectSink, EventSink, Fanout, NullSink, ProgressSink, StderrSink, TrainEvent};
 pub use memory::MemoryAccountant;
 pub use metrics::{EvalPoint, Metrics};
-pub use trainer::{TrainReport, Trainer};
+pub use sweep::{RunSpec, Sweep};
+pub use trainer::{TrainReport, Trainer, TrainerBuilder};

@@ -1,0 +1,317 @@
+//! `coordinator::sweep` — sharded multi-run sessions.
+//!
+//! A paper table is a list of [`RunSpec`]s; [`Sweep`] executes them
+//! across a pool of scoped worker threads
+//! (`Sweep::new(specs).workers(n).run(&rt)?`), streaming every run's
+//! [`TrainEvent`](super::events::TrainEvent)s through one merged sink
+//! and returning [`TrainReport`]s **in spec order**.
+//!
+//! Determinism: each run owns its trainer, parameter store, optimizer
+//! state and RNG streams (all seeded from its own `TrainConfig::seed`),
+//! and shares only the `Arc<dyn Backend>` — whose kernels are
+//! bit-identical for any worker count (PR 1/2 contract). Sharding
+//! therefore changes wall-clock only: `workers ∈ {1, 2, 8}` return
+//! bit-identical rows (`tests/sweep_parity.rs`), the same guarantee
+//! `--threads` gives inside a single run.
+
+use super::events::{EventSink, NullSink};
+use super::trainer::{TrainReport, Trainer};
+use crate::config::TrainConfig;
+use crate::coordinator::memory;
+use crate::runtime::Backend;
+use crate::util::bench::print_table;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One labelled table row to run.
+#[derive(Clone)]
+pub struct RunSpec {
+    pub label: String,
+    pub cfg: TrainConfig,
+}
+
+impl RunSpec {
+    pub fn new(label: &str, cfg: TrainConfig) -> RunSpec {
+        RunSpec { label: label.into(), cfg }
+    }
+}
+
+/// A sharded multi-run session over a list of [`RunSpec`]s.
+pub struct Sweep {
+    specs: Vec<RunSpec>,
+    workers: usize,
+    events: Arc<dyn EventSink>,
+}
+
+impl Sweep {
+    pub fn new(specs: Vec<RunSpec>) -> Sweep {
+        Sweep { specs, workers: 1, events: Arc::new(NullSink) }
+    }
+
+    /// Worker-pool width. Clamped to at least 1; more workers than specs
+    /// just idle. Any value returns bit-identical reports.
+    pub fn workers(mut self, n: usize) -> Sweep {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// The merged sink every run's events stream through (shared across
+    /// workers; events carry the spec index). Default: [`NullSink`].
+    pub fn events(mut self, sink: Arc<dyn EventSink>) -> Sweep {
+        self.events = sink;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Run every spec and return the reports in spec order. Workers pull
+    /// the next un-run spec from a shared cursor, so long rows don't
+    /// serialize behind short ones. On a row failure, workers stop
+    /// pulling new rows (in-flight rows drain) and the first error by
+    /// spec index is returned.
+    pub fn run(self, rt: &Arc<dyn Backend>) -> Result<Vec<TrainReport>> {
+        let n = self.specs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.workers.min(n);
+        let specs = &self.specs;
+        let sink = &self.events;
+        let cursor = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        let slots: Vec<Mutex<Option<Result<TrainReport>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    if failed.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let i = cursor.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    let out = run_row(rt, &specs[i], i, Arc::clone(sink));
+                    if out.is_err() {
+                        failed.store(true, Ordering::SeqCst);
+                    }
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        let mut reports = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            let row = || format!("sweep row {i} ('{}')", self.specs[i].label);
+            match slot.into_inner().expect("sweep slot poisoned") {
+                Some(Ok(rep)) => reports.push(rep),
+                Some(Err(e)) => return Err(e).with_context(row),
+                // Unreached when a lower-index error exists (the cursor
+                // is monotonic), but never panic on a skipped slot.
+                None => bail!("{} skipped after an earlier row failed", row()),
+            }
+        }
+        Ok(reports)
+    }
+}
+
+/// Build and run one row's trainer: per-run RNG isolation comes from the
+/// trainer owning its stores (seeded by `cfg.seed`), the shared pieces
+/// are only the backend and the merged sink.
+fn run_row(
+    rt: &Arc<dyn Backend>,
+    spec: &RunSpec,
+    index: usize,
+    sink: Arc<dyn EventSink>,
+) -> Result<TrainReport> {
+    let mut tr = Trainer::builder(spec.cfg.clone())
+        .backend(Arc::clone(rt))
+        .label(&spec.label)
+        .run_index(index)
+        .events(sink)
+        .build()?;
+    tr.run()
+}
+
+// ---------------------------------------------------------------------------
+// Report presentation (the sweep-level glue the bench binaries shared)
+// ---------------------------------------------------------------------------
+
+/// Quality (name, value) per model family — the paper's last column.
+pub fn quality(model: &str, control: bool, rep: &TrainReport) -> (String, String) {
+    let ev = &rep.final_eval;
+    if model.starts_with("lm") {
+        ("PPL↓".into(), format!("{:.2}", ev.ppl))
+    } else if model.starts_with("vit") || model.starts_with("llava") {
+        (
+            "Acc(%)↑".into(),
+            ev.accuracy.map(|a| format!("{:.1}", a * 100.0)).unwrap_or("-".into()),
+        )
+    } else if control {
+        (
+            "mAP-proxy↑".into(),
+            ev.aux.map(|a| format!("{:.1}", a)).unwrap_or("-".into()),
+        )
+    } else {
+        // denoising / diffusion substitutes: scaled eval MSE
+        ("FID-proxy↓".into(), format!("{:.2}", ev.loss * 100.0))
+    }
+}
+
+/// The ΔMem column against the baseline row. A zero-byte baseline (e.g.
+/// a stateless-optimizer row pinned first) yields `-` instead of the
+/// NaN/inf percentage the old formatter produced.
+pub fn delta_mem_cell(bytes: usize, base_bytes: usize) -> String {
+    if base_bytes == 0 {
+        return "-".into();
+    }
+    format!("{:+.0}%", 100.0 * (bytes as f64 / base_bytes as f64 - 1.0))
+}
+
+/// Print a paper-style table; row 0 is the full-rank baseline for the
+/// ΔMem% column. No-op on an empty report list.
+pub fn print_report_table(title: &str, model: &str, control: bool, reports: &[TrainReport]) {
+    let Some(base) = reports.first() else {
+        return;
+    };
+    let (qname, _) = quality(model, control, base);
+    let header: Vec<&str> = vec![
+        "Method", "Optim Mem↓", "ΔMem", "Wall(s)", "Opt+Proj oh.", &qname,
+    ];
+    let rows: Vec<Vec<String>> = reports
+        .iter()
+        .map(|r| {
+            let (_, qval) = quality(model, control, r);
+            vec![
+                r.label.clone(),
+                memory::fmt_mb(r.optimizer_bytes),
+                delta_mem_cell(r.optimizer_bytes, base.optimizer_bytes),
+                format!("{:.1}", r.wall.as_secs_f64()),
+                format!("{:.0}%", 100.0 * r.opt_overhead_frac()),
+                qval,
+            ]
+        })
+        .collect();
+    print_table(title, &header, &rows);
+}
+
+/// Flatten one report into bench-JSONL fields (see
+/// `util::bench::jsonl_line` / `validate_jsonl_line`): flat string keys,
+/// finite numbers stay numeric, non-finite values degrade to strings so
+/// the trajectory schema never breaks. `step_ms` is the per-row mean
+/// wall-clock per step — the number the sweep trajectory tracks.
+pub fn report_jsonl_fields(rep: &TrainReport) -> Vec<(&'static str, String)> {
+    fn num(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            format!("{v:?}")
+        }
+    }
+    let mut fields = vec![
+        ("label", rep.label.clone()),
+        ("model", rep.model.clone()),
+        ("steps", rep.steps.to_string()),
+        ("final_train_loss", num(rep.final_train_loss)),
+        ("final_eval_loss", num(rep.final_eval.loss)),
+        ("final_eval_ppl", num(rep.final_eval.ppl)),
+        ("ceu_total", num(rep.ceu_total)),
+        ("param_bytes", rep.param_bytes.to_string()),
+        ("optimizer_bytes", rep.optimizer_bytes.to_string()),
+        ("opt_transient_bytes", rep.opt_transient_bytes.to_string()),
+        ("wall_s", num(rep.wall.as_secs_f64())),
+        ("fwdbwd_s", num(rep.fwdbwd_time.as_secs_f64())),
+        ("opt_step_s", num(rep.opt_step_time.as_secs_f64())),
+        ("proj_s", num(rep.proj_time.as_secs_f64())),
+        (
+            "step_ms",
+            num(rep.wall.as_secs_f64() * 1e3 / rep.steps.max(1) as f64),
+        ),
+    ];
+    if let Some(acc) = rep.final_eval.accuracy {
+        fields.push(("eval_accuracy", num(acc)));
+    }
+    if let Some(aux) = rep.final_eval.aux {
+        fields.push(("eval_aux", num(aux)));
+    }
+    fields
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::EvalPoint;
+    use crate::util::bench::{jsonl_line, validate_jsonl_line};
+    use std::time::Duration;
+
+    fn report(label: &str, opt_bytes: usize) -> TrainReport {
+        TrainReport {
+            label: label.into(),
+            model: "lm_micro".into(),
+            steps: 4,
+            final_train_loss: 1.25,
+            final_eval: EvalPoint {
+                step: 4,
+                loss: 1.0,
+                ppl: 1.0f64.exp(),
+                accuracy: Some(0.5),
+                aux: None,
+            },
+            wall: Duration::from_millis(20),
+            fwdbwd_time: Duration::from_millis(12),
+            opt_step_time: Duration::from_millis(4),
+            proj_time: Duration::from_millis(1),
+            optimizer_bytes: opt_bytes,
+            opt_transient_bytes: 0,
+            param_bytes: 4096,
+            ceu_total: 2.0,
+            train_losses: vec![(1, 2.0), (4, 1.25)],
+            ceu_curve: vec![],
+            evals: vec![],
+        }
+    }
+
+    #[test]
+    fn delta_mem_guards_zero_byte_baseline() {
+        assert_eq!(delta_mem_cell(0, 0), "-");
+        assert_eq!(delta_mem_cell(512, 0), "-");
+        assert_eq!(delta_mem_cell(50, 100), "-50%");
+        assert_eq!(delta_mem_cell(100, 100), "+0%");
+    }
+
+    /// The old formatter divided by the baseline row unconditionally; a
+    /// zero-byte baseline must render, not produce NaN/inf cells.
+    #[test]
+    fn report_table_tolerates_zero_byte_baseline() {
+        let reports = vec![report("base", 0), report("coap", 1024)];
+        print_report_table("zero-base", "lm_micro", false, &reports);
+        print_report_table("empty", "lm_micro", false, &[]);
+    }
+
+    #[test]
+    fn report_jsonl_fields_pass_trajectory_schema() {
+        let rep = report("COAP", 1024);
+        let line = jsonl_line(&report_jsonl_fields(&rep));
+        validate_jsonl_line(&line).unwrap_or_else(|e| panic!("bad line {line}: {e}"));
+        assert!(line.contains("\"label\":\"COAP\""), "{line}");
+        assert!(line.contains("\"optimizer_bytes\":1024"), "{line}");
+        assert!(line.contains("\"step_ms\":5"), "{line}");
+    }
+
+    /// Non-finite metrics (a diverged row) must degrade to strings, not
+    /// emit bare `NaN`/`inf` tokens that break the JSONL schema.
+    #[test]
+    fn report_jsonl_fields_survive_nonfinite_metrics() {
+        let mut rep = report("diverged", 8);
+        rep.final_train_loss = f64::NAN;
+        rep.final_eval.ppl = f64::INFINITY;
+        let line = jsonl_line(&report_jsonl_fields(&rep));
+        validate_jsonl_line(&line).unwrap_or_else(|e| panic!("bad line {line}: {e}"));
+    }
+}

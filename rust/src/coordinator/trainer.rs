@@ -3,27 +3,167 @@
 //! driven from the optimizer's policy. Engine-agnostic: everything runs
 //! through the [`Backend`] trait (native Rust by default, XLA replay
 //! behind `--features xla`).
+//!
+//! Construction goes through [`Trainer::builder`]:
+//!
+//! ```ignore
+//! let mut tr = Trainer::builder(cfg)
+//!     .backend(rt)                 // default: open_backend(&cfg)
+//!     .resume("model.ckpt")        // optional checkpoint restore
+//!     .events(sink)                // default: StderrSink(cfg.log_every)
+//!     .build()?;
+//! let report = tr.run()?;
+//! ```
+//!
+//! The trainer's internals (parameter store, optimizer, data source) are
+//! encapsulated; progress goes out as [`TrainEvent`]s and checkpoints in
+//! and out through `resume()` / [`Trainer::save_checkpoint`].
 
+use super::checkpoint::Checkpoint;
+use super::events::{EventSink, StderrSink, TrainEvent};
 use super::metrics::{EvalPoint, Metrics};
 use crate::config::TrainConfig;
 use crate::data::{self, vision, DataSource};
 use crate::model::ParamStore;
 use crate::optim::{self, Optimizer};
-use crate::runtime::{Backend, ModelInfo};
+use crate::runtime::{open_backend, Backend, ModelInfo};
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 pub struct Trainer {
-    pub cfg: TrainConfig,
-    pub rt: Arc<dyn Backend>,
-    pub model: ModelInfo,
-    pub store: ParamStore,
-    pub opt: Box<dyn Optimizer>,
-    pub data: Box<dyn DataSource>,
-    pub metrics: Metrics,
-    pub quiet: bool,
+    cfg: TrainConfig,
+    rt: Arc<dyn Backend>,
+    model: ModelInfo,
+    store: ParamStore,
+    opt: Box<dyn Optimizer>,
+    data: Box<dyn DataSource>,
+    metrics: Metrics,
+    events: Arc<dyn EventSink>,
+    label: Arc<str>,
+    run_index: usize,
+    resumed: Option<(String, u64)>,
+    done_steps: usize,
+}
+
+/// Builder for [`Trainer`] — the only way to construct one.
+pub struct TrainerBuilder {
+    cfg: TrainConfig,
+    backend: Option<Arc<dyn Backend>>,
+    events: Option<Arc<dyn EventSink>>,
+    label: Option<String>,
+    run_index: usize,
+    resume_path: Option<String>,
+    resume_ckpt: Option<Checkpoint>,
+}
+
+impl TrainerBuilder {
+    /// Execution backend. Default: `open_backend(&cfg)` (honours
+    /// `cfg.backend` / `cfg.threads`).
+    pub fn backend(mut self, rt: Arc<dyn Backend>) -> TrainerBuilder {
+        self.backend = Some(rt);
+        self
+    }
+
+    /// Where [`TrainEvent`]s go. Default: [`StderrSink`] at the config's
+    /// `log_every` cadence (the classic terminal log).
+    pub fn events(mut self, sink: Arc<dyn EventSink>) -> TrainerBuilder {
+        self.events = Some(sink);
+        self
+    }
+
+    /// Silence the run entirely (sugar for a [`NullSink`] events sink —
+    /// the old `trainer.quiet = true`).
+    ///
+    /// [`NullSink`]: super::events::NullSink
+    pub fn quiet(self) -> TrainerBuilder {
+        self.events(Arc::new(super::events::NullSink))
+    }
+
+    /// Report/row label. Default: the optimizer's label.
+    pub fn label(mut self, label: &str) -> TrainerBuilder {
+        self.label = Some(label.into());
+        self
+    }
+
+    /// Spec index carried by every event this run emits (used by sweeps
+    /// to demultiplex a merged sink). Default: 0.
+    pub fn run_index(mut self, index: usize) -> TrainerBuilder {
+        self.run_index = index;
+        self
+    }
+
+    /// Resume parameters from a checkpoint file before training
+    /// (optimizer moments warm-restart, as in the paper's fine-tuning
+    /// runs). Validated against the model census at build time.
+    pub fn resume(mut self, path: &str) -> TrainerBuilder {
+        self.resume_path = Some(path.into());
+        self
+    }
+
+    /// Resume from an in-memory [`Checkpoint`] (takes precedence over
+    /// [`TrainerBuilder::resume`]).
+    pub fn resume_checkpoint(mut self, ck: Checkpoint) -> TrainerBuilder {
+        self.resume_ckpt = Some(ck);
+        self
+    }
+
+    pub fn build(self) -> Result<Trainer> {
+        let cfg = self.cfg;
+        let rt = match self.backend {
+            Some(rt) => rt,
+            None => open_backend(&cfg)?,
+        };
+        let model = rt.model(&cfg.model)?;
+        let ck = match (self.resume_ckpt, self.resume_path) {
+            (Some(ck), _) => Some(("<in-memory checkpoint>".to_string(), ck)),
+            (None, Some(path)) => {
+                let ck = Checkpoint::load(&path)
+                    .with_context(|| format!("resuming from {path}"))?;
+                Some((path, ck))
+            }
+            (None, None) => None,
+        };
+        // Resumed params replace every tensor, so skip the seeded init
+        // (its RNG stream is per-store and unobservable elsewhere).
+        let (store, resumed) = match ck {
+            Some((source, ck)) => {
+                let step = ck.step;
+                let params = ck
+                    .into_params_for(&model)
+                    .with_context(|| format!("resuming from {source}"))?;
+                (ParamStore { info: model.clone(), params }, Some((source, step)))
+            }
+            None => (ParamStore::init(&model, cfg.seed, cfg.finetune), None),
+        };
+        let opt = optim::build(&cfg, &model)?;
+        let data = data::for_model(&model, cfg.seed);
+        let label: Arc<str> = match self.label {
+            Some(l) => Arc::from(l),
+            None => Arc::from(opt.label()),
+        };
+        let events = self
+            .events
+            .unwrap_or_else(|| Arc::new(StderrSink::new(cfg.log_every)));
+        // Checkpoint steps are cumulative: resuming from step N and
+        // training M more saves step N + M, not M.
+        let done_steps = resumed.as_ref().map(|(_, step)| *step as usize).unwrap_or(0);
+        Ok(Trainer {
+            cfg,
+            rt,
+            model,
+            store,
+            opt,
+            data,
+            metrics: Metrics::default(),
+            events,
+            label,
+            run_index: self.run_index,
+            resumed,
+            done_steps,
+        })
+    }
 }
 
 /// Everything a bench/table needs from one finished run.
@@ -61,21 +201,67 @@ impl TrainReport {
 }
 
 impl Trainer {
-    pub fn new(cfg: TrainConfig, rt: Arc<dyn Backend>) -> Result<Trainer> {
-        let model = rt.model(&cfg.model)?;
-        let store = ParamStore::init(&model, cfg.seed, cfg.finetune);
-        let opt = optim::build(&cfg, &model)?;
-        let data = data::for_model(&model, cfg.seed);
-        Ok(Trainer {
+    /// Start building a trainer for `cfg`.
+    pub fn builder(cfg: TrainConfig) -> TrainerBuilder {
+        TrainerBuilder {
             cfg,
-            rt,
-            model,
-            store,
-            opt,
-            data,
-            metrics: Metrics::default(),
-            quiet: false,
-        })
+            backend: None,
+            events: None,
+            label: None,
+            run_index: 0,
+            resume_path: None,
+            resume_ckpt: None,
+        }
+    }
+
+    pub fn cfg(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        &*self.rt
+    }
+
+    pub fn model(&self) -> &ModelInfo {
+        &self.model
+    }
+
+    /// Current parameter tensors, in census order.
+    pub fn params(&self) -> &[Tensor] {
+        &self.store.params
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// `(source, step)` of the checkpoint this trainer resumed from.
+    pub fn resume_info(&self) -> Option<(&str, u64)> {
+        self.resumed.as_ref().map(|(s, step)| (s.as_str(), *step))
+    }
+
+    /// Snapshot the current parameters as a [`Checkpoint`]. `step` is
+    /// cumulative: the resumed checkpoint's step (if any) plus every
+    /// step [`Trainer::run`] actually completed (counted per step, so a
+    /// mid-run failure still stamps the true progress) — save→resume→
+    /// save chains keep counting up instead of resetting.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            model: self.model.name.clone(),
+            step: self.done_steps as u64,
+            params: self
+                .model
+                .params
+                .iter()
+                .map(|p| p.name.clone())
+                .zip(self.store.params.iter().cloned())
+                .collect(),
+        }
+    }
+
+    /// [`Trainer::checkpoint`] straight to disk.
+    pub fn save_checkpoint(&self, path: &str) -> Result<()> {
+        self.checkpoint().save(path)
     }
 
     /// Pre-compile the train/eval executables (excluded from step
@@ -84,7 +270,41 @@ impl Trainer {
         self.rt.warmup(&[&self.model.train_step, &self.model.eval_step])
     }
 
+    fn emit(&self, ev: TrainEvent) {
+        self.events.event(&ev);
+    }
+
+    /// Train for `cfg.steps` steps. Every run emits `RunStarted` and
+    /// ends in exactly one terminal event: `RunFinished` on success,
+    /// `RunFailed` (with the last completed step and the error chain)
+    /// when any step, eval or warmup errors.
     pub fn run(&mut self) -> Result<TrainReport> {
+        // Local-scale origin for this run's step numbers: whatever was
+        // already done (resume base + earlier run() calls).
+        let base = self.done_steps;
+        self.emit(TrainEvent::RunStarted {
+            run: self.run_index,
+            label: Arc::clone(&self.label),
+            model: self.model.name.clone(),
+            steps: self.cfg.steps,
+        });
+        let result = self.run_inner();
+        if let Err(e) = &result {
+            self.emit(TrainEvent::RunFailed {
+                run: self.run_index,
+                label: Arc::clone(&self.label),
+                step: self.done_steps.saturating_sub(base),
+                error: format!("{e:#}"),
+            });
+        }
+        result
+    }
+
+    fn run_inner(&mut self) -> Result<TrainReport> {
+        // Fresh metrics per run: calling run() again continues training
+        // from the current params (done_steps keeps accumulating) but
+        // reports only that run's curves.
+        self.metrics = Metrics::default();
         self.warmup()?;
         let wall0 = Instant::now();
         let mut fwdbwd = Duration::ZERO;
@@ -115,32 +335,35 @@ impl Trainer {
             proj += stats.proj_time;
 
             self.metrics.record_train(t, loss);
+            self.done_steps += 1;
             if self.cfg.track_ceu {
                 self.metrics.record_ceu(t, stats.ceu);
             }
-            if !self.quiet && self.cfg.log_every > 0 && t % self.cfg.log_every == 0 {
-                eprintln!(
-                    "[{}] step {t:>5}  loss {loss:.4}  ema {:.4}  {:.0} ms/step",
-                    self.opt.label(),
-                    self.metrics.ema(),
-                    wall0.elapsed().as_secs_f64() * 1e3 / t as f64,
-                );
+            self.emit(TrainEvent::Step {
+                run: self.run_index,
+                label: Arc::clone(&self.label),
+                step: t,
+                loss,
+                ema: self.metrics.ema(),
+                ms_per_step: wall0.elapsed().as_secs_f64() * 1e3 / t as f64,
+            });
+            if stats.proj_time > Duration::ZERO {
+                self.emit(TrainEvent::ProjRefresh {
+                    run: self.run_index,
+                    label: Arc::clone(&self.label),
+                    step: t,
+                    ms: stats.proj_time.as_secs_f64() * 1e3,
+                });
             }
             if self.cfg.eval_every > 0
                 && (t % self.cfg.eval_every == 0 || t == self.cfg.steps)
             {
                 let ev = self.eval(t)?;
-                if !self.quiet {
-                    eprintln!(
-                        "[{}] eval @ {t}: loss {:.4} ppl {:.2}{}",
-                        self.opt.label(),
-                        ev.loss,
-                        ev.ppl,
-                        ev.accuracy
-                            .map(|a| format!(" acc {:.1}%", a * 100.0))
-                            .unwrap_or_default(),
-                    );
-                }
+                self.emit(TrainEvent::Eval {
+                    run: self.run_index,
+                    label: Arc::clone(&self.label),
+                    eval: ev.clone(),
+                });
                 self.metrics.record_eval(ev);
             }
         }
@@ -150,8 +373,8 @@ impl Trainer {
             .final_eval()
             .cloned()
             .unwrap_or_default();
-        Ok(TrainReport {
-            label: self.opt.label(),
+        let report = TrainReport {
+            label: self.label.to_string(),
             model: self.model.name.clone(),
             steps: self.cfg.steps,
             final_train_loss: self.metrics.tail_loss(10),
@@ -167,7 +390,15 @@ impl Trainer {
             train_losses: self.metrics.train_losses.clone(),
             ceu_curve: self.metrics.ceu_curve.clone(),
             evals: self.metrics.evals.clone(),
-        })
+        };
+        self.emit(TrainEvent::RunFinished {
+            run: self.run_index,
+            label: Arc::clone(&self.label),
+            steps: report.steps,
+            final_train_loss: report.final_train_loss,
+            wall_s: report.wall.as_secs_f64(),
+        });
+        Ok(report)
     }
 
     /// Held-out evaluation: loss (+ accuracy / keypoint-mAP-proxy where

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train       run one training job per config/CLI flags
+//!   sweep       run a named paper table/figure sharded across workers
 //!   info        summarize the backend's model census
 //!   experiments list the paper tables/figures and how to regenerate them
 //!
@@ -9,14 +10,20 @@
 //!   coap train --model lm_small --optimizer coap --steps 300 --lr 2e-3
 //!   coap train --model ctrl_small --optimizer coap-adafactor \
 //!        --rank-ratio 8 --precision int8 --steps 200
+//!   coap sweep table1 --workers 2 --json out.jsonl
 //!   coap train --backend xla --model lm_tiny   # needs --features xla
 //!   coap info
 
 use anyhow::Result;
+use coap::benchlib;
 use coap::config::TrainConfig;
-use coap::coordinator::{checkpoint::Checkpoint, memory, Trainer};
+use coap::coordinator::sweep::{print_report_table, report_jsonl_fields};
+use coap::coordinator::{memory, Trainer};
 use coap::runtime::open_backend;
+use coap::util::bench::{append_json, jsonl_line};
 use coap::util::cli::Args;
+use std::io::Write;
+use std::time::Instant;
 
 fn main() {
     if let Err(e) = run() {
@@ -30,6 +37,7 @@ fn run() -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => train(&args),
+        "sweep" => sweep(&args),
         "info" => info(&args),
         "experiments" => experiments(&args),
         _ => {
@@ -41,10 +49,9 @@ fn run() -> Result<()> {
 
 fn train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
-    let rt = open_backend(&cfg)?;
     eprintln!(
         "backend={} model={} optimizer={} rank-ratio={} Tu={} λ={} precision={} steps={}",
-        rt.label(),
+        cfg.backend.label(),
         cfg.model,
         cfg.optimizer.label(),
         cfg.rank_ratio,
@@ -54,12 +61,13 @@ fn train(args: &Args) -> Result<()> {
         cfg.steps
     );
     let save_ckpt = args.get("save-checkpoint").map(String::from);
-    let mut trainer = Trainer::new(cfg, rt)?;
+    let mut builder = Trainer::builder(cfg);
     if let Some(path) = args.get("load-checkpoint") {
-        let ck = Checkpoint::load(path)?;
-        let step = ck.step;
-        trainer.store.params = ck.into_params_for(&trainer.model)?;
-        eprintln!("resumed params from {path} (saved at step {step})");
+        builder = builder.resume(path);
+    }
+    let mut trainer = builder.build()?;
+    if let Some((source, step)) = trainer.resume_info() {
+        eprintln!("resumed params from {source} (saved at step {step})");
     }
     let report = trainer.run()?;
     println!("\n== run report ==");
@@ -85,19 +93,100 @@ fn train(args: &Args) -> Result<()> {
         report.proj_time.as_secs_f64()
     );
     if let Some(path) = save_ckpt {
-        let ck = Checkpoint {
-            model: report.model.clone(),
-            step: report.steps as u64,
-            params: trainer
-                .model
-                .params
-                .iter()
-                .map(|p| p.name.clone())
-                .zip(trainer.store.params.iter().cloned())
-                .collect(),
-        };
-        ck.save(&path)?;
+        trainer.save_checkpoint(&path)?;
         eprintln!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+/// `coap sweep <name> [--workers N] [--steps N] [--json out.jsonl]` —
+/// run one named paper table/figure sharded across a worker pool,
+/// print the paper-style report table, append the sweep wall-clock +
+/// per-row step-time to the bench-JSON trajectory, and optionally write
+/// the full per-row reports as JSONL.
+fn sweep(args: &Args) -> Result<()> {
+    let name = args.positional.get(1).map(|s| s.as_str());
+    if args.has("help") || name == Some("help") || name.is_none() {
+        eprintln!("usage: coap sweep <name> [--workers N] [--steps N] [--json out.jsonl]");
+        eprintln!("names: {}", benchlib::SWEEP_NAMES.join(" "));
+        if name.is_none() && !args.has("help") {
+            anyhow::bail!("missing sweep name");
+        }
+        return Ok(());
+    }
+    let name = name.expect("checked above");
+    // Rows are defined by the registry; train-level overrides would be
+    // silently ignored, so say so instead of recording wrong numbers.
+    const SWEEP_KEYS: &[&str] = &["workers", "steps", "json", "threads", "backend"];
+    for key in args.seen_keys() {
+        if SWEEP_KEYS.contains(&key.as_str()) {
+            continue;
+        }
+        if key == "config" {
+            eprintln!(
+                "note: --config is honored only for backend/threads by `coap sweep` \
+                 (rows are defined by the '{name}' registry; use `coap train` for \
+                 custom configs)"
+            );
+        } else {
+            eprintln!(
+                "note: --{key} is ignored by `coap sweep` (rows are defined by the \
+                 '{name}' registry in benchlib; use `coap train` for custom configs)"
+            );
+        }
+    }
+    let cfg = TrainConfig::from_args(args)?;
+    let steps = args.get("steps").map(|v| v.parse()).transpose()?;
+    let named = benchlib::named_sweep(name, steps)?;
+    // Sharded rows default to single-threaded — backend pool AND each
+    // row's optimizer pools — so the sweep workers parallelize freely
+    // instead of contending; explicit --threads (CLI or --config) wins.
+    let env = benchlib::shard_env(args, cfg)?;
+    let workers = env.workers;
+    eprintln!(
+        "sweep {name}: {} rows × {} steps on {} ({} workers, backend={})",
+        named.specs.len(),
+        named.steps,
+        named.model,
+        workers,
+        env.rt.label()
+    );
+    let t0 = Instant::now();
+    let reports = env.run(named.specs)?;
+    let sweep_wall = t0.elapsed();
+    print_report_table(&named.title, named.model, named.control, &reports);
+    println!(
+        "\nsweep wall-clock {:.1}s over {} rows ({} workers)",
+        sweep_wall.as_secs_f64(),
+        reports.len(),
+        workers
+    );
+    // Bench-JSON trajectory (target/bench-json/sweep.jsonl): one record
+    // per row, stamped with the sweep-level wall-clock so successive
+    // runs track the sharding win next to the per-row step times.
+    for rep in &reports {
+        let mut fields: Vec<(&str, String)> = vec![
+            ("sweep", named.name.clone()),
+            ("workers", workers.to_string()),
+            ("sweep_wall_s", format!("{}", sweep_wall.as_secs_f64())),
+        ];
+        fields.extend(report_jsonl_fields(rep));
+        append_json("sweep", &fields);
+    }
+    if let Some(path) = args.get("json") {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).ok();
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .map(std::io::BufWriter::new)
+            .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?;
+        for rep in &reports {
+            writeln!(f, "{}", jsonl_line(&report_jsonl_fields(rep)))?;
+        }
+        f.flush()?;
+        eprintln!("wrote {} report rows to {path}", reports.len());
     }
     Ok(())
 }
@@ -130,6 +219,12 @@ fn experiments(args: &Args) -> Result<()> {
             e.id, e.model, e.ratios, e.note
         );
     }
+    println!(
+        "\nregenerate any table/figure with the sharded sweep runner:\n  \
+         coap sweep <name> [--workers N] [--steps N] [--json out.jsonl]\n  \
+         names: {}",
+        benchlib::SWEEP_NAMES.join(" ")
+    );
     Ok(())
 }
 
@@ -137,7 +232,7 @@ fn print_help() {
     println!(
         "coap — COAP (correlation-aware gradient projection) training coordinator
 
-USAGE: coap <train|info|experiments> [--flags]
+USAGE: coap <train|sweep|info|experiments> [--flags]
 
 train flags (also JSON-settable via --config file.json):
   --backend B             native (default, hermetic pure-Rust) | xla
@@ -156,6 +251,19 @@ train flags (also JSON-settable via --config file.json):
   --save-checkpoint PATH  write params after training
   --load-checkpoint PATH  resume params before training (moments restart)
 
-see also: examples/ (quality drivers) and `cargo bench` (paper tables)."
+sweep — run a paper table/figure as a sharded multi-run session:
+  coap sweep <{names}>
+  --workers N             shard rows across N worker threads (reports are
+                          bit-identical to serial execution in spec order;
+                          rows default to --threads 1 when N > 1 so the
+                          workers parallelize freely)
+  --steps N               steps per row (default: the bench default,
+                          env-overridable via COAP_BENCH_STEPS)
+  --json out.jsonl        write one schema-checked JSONL record per row
+  (the sweep also appends wall-clock + per-row step-time records to
+   target/bench-json/sweep.jsonl; see util::bench::append_json)
+
+see also: examples/ (quality drivers) and `cargo bench` (paper tables).",
+        names = benchlib::SWEEP_NAMES.join("|")
     );
 }

@@ -97,9 +97,12 @@ pub fn append_json(bench: &str, fields: &[(&str, String)]) {
     append_json_to(&dir, bench, fields);
 }
 
-/// [`append_json`] with an explicit directory (no env lookup).
-pub fn append_json_to(dir: &str, bench: &str, fields: &[(&str, String)]) {
-    let path = format!("{dir}/{bench}.jsonl");
+/// Render one trajectory record as a JSONL line: a flat object of
+/// string keys; values that parse as finite numbers are written
+/// unquoted, everything else as an escaped string. Every line this
+/// produces satisfies [`validate_jsonl_line`]. Shared by the bench
+/// recorders ([`append_json`]) and the `coap sweep --json` writer.
+pub fn jsonl_line(fields: &[(&str, String)]) -> String {
     let mut line = String::from("{");
     for (i, (key, val)) in fields.iter().enumerate() {
         if i > 0 {
@@ -114,6 +117,13 @@ pub fn append_json_to(dir: &str, bench: &str, fields: &[(&str, String)]) {
         }
     }
     line.push('}');
+    line
+}
+
+/// [`append_json`] with an explicit directory (no env lookup).
+pub fn append_json_to(dir: &str, bench: &str, fields: &[(&str, String)]) {
+    let path = format!("{dir}/{bench}.jsonl");
+    let line = jsonl_line(fields);
     let write = || -> std::io::Result<()> {
         std::fs::create_dir_all(dir)?;
         let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;

@@ -25,8 +25,7 @@ fn cfg(model: &str, opt: OptKind, steps: usize) -> TrainConfig {
 }
 
 fn run(c: TrainConfig, rt: &Arc<dyn Backend>) -> coap::coordinator::TrainReport {
-    let mut tr = Trainer::new(c, Arc::clone(rt)).unwrap();
-    tr.quiet = true;
+    let mut tr = Trainer::builder(c).backend(Arc::clone(rt)).quiet().build().unwrap();
     tr.run().unwrap()
 }
 

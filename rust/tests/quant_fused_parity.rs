@@ -87,11 +87,9 @@ fn cfg(
 
 /// Run a full training loop and return every parameter as raw f32 bits.
 fn run_bits(c: TrainConfig, rt: Arc<dyn Backend>) -> Vec<Vec<u32>> {
-    let mut tr = Trainer::new(c, rt).unwrap();
-    tr.quiet = true;
+    let mut tr = Trainer::builder(c).backend(rt).quiet().build().unwrap();
     tr.run().unwrap();
-    tr.store
-        .params
+    tr.params()
         .iter()
         .map(|t| t.f32s().iter().map(|v| v.to_bits()).collect())
         .collect()

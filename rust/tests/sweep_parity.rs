@@ -1,0 +1,197 @@
+//! Acceptance suite for the sharded sweep orchestrator: `Sweep::run`
+//! with any worker count must return `TrainReport` rows **bit-identical**
+//! to serial execution, in spec order, and the merged event stream must
+//! pair every run's `RunStarted`/`RunFinished` correctly around its
+//! steps — the determinism contract PR 1–3 established for `--threads`,
+//! lifted to whole runs.
+
+use coap::config::{OptKind, TrainConfig};
+use coap::coordinator::{CollectSink, RunSpec, Sweep, TrainEvent, TrainReport, Trainer};
+use coap::runtime::{Backend, NativeBackend};
+use std::sync::Arc;
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
+}
+
+/// A spread of models × optimizer families over the `*_micro` census —
+/// small enough that the 1/2/8-worker matrix stays fast, wide enough to
+/// cover matrix, conv and vector slots plus eval + CEU recording.
+fn micro_specs(steps: usize) -> Vec<RunSpec> {
+    let mk = |label: &str, model: &str, opt: OptKind| {
+        let mut c = TrainConfig::default();
+        c.model = model.into();
+        c.optimizer = opt;
+        c.steps = steps;
+        c.lr = 3e-3;
+        c.t_update = 3;
+        c.lambda = 2;
+        c.eval_every = steps;
+        c.eval_batches = 1;
+        c.log_every = 0;
+        c.track_ceu = true;
+        RunSpec::new(label, c)
+    };
+    vec![
+        mk("coap/lm", "lm_micro", OptKind::Coap),
+        mk("galore/vit", "vit_micro", OptKind::Galore),
+        mk("adamw/lm", "lm_micro", OptKind::AdamW),
+        mk("flora/cnn", "cnn_micro", OptKind::Flora),
+        mk("coap-af/ctrl", "ctrl_micro", OptKind::CoapAdafactor),
+    ]
+}
+
+/// Everything deterministic in a report, with floats as raw bits.
+type RowKey = (String, Vec<(usize, u64)>, Vec<(usize, u64)>, Vec<u64>, usize, usize);
+
+fn row_key(r: &TrainReport) -> RowKey {
+    (
+        r.label.clone(),
+        r.train_losses.iter().map(|(s, l)| (*s, l.to_bits())).collect(),
+        r.ceu_curve.iter().map(|(s, c)| (*s, c.to_bits())).collect(),
+        r.evals.iter().map(|e| e.loss.to_bits()).collect(),
+        r.optimizer_bytes,
+        r.param_bytes,
+    )
+}
+
+/// Sharded execution (workers = 1, 2, 8) must be bit-identical, row for
+/// row and in spec order, to running each spec serially by hand.
+#[test]
+fn sharded_sweep_matches_serial_bitwise() {
+    let rt = backend();
+    let serial: Vec<RowKey> = micro_specs(6)
+        .into_iter()
+        .map(|spec| {
+            let mut tr = Trainer::builder(spec.cfg)
+                .backend(Arc::clone(&rt))
+                .label(&spec.label)
+                .quiet()
+                .build()
+                .unwrap();
+            row_key(&tr.run().unwrap())
+        })
+        .collect();
+    for workers in [1usize, 2, 8] {
+        let reports = Sweep::new(micro_specs(6))
+            .workers(workers)
+            .run(&rt)
+            .unwrap();
+        let sharded: Vec<RowKey> = reports.iter().map(row_key).collect();
+        assert_eq!(serial, sharded, "sweep drifted from serial at workers={workers}");
+    }
+}
+
+/// The merged event stream: every run gets exactly one
+/// `RunStarted`/`RunFinished` pair, its steps land between them in
+/// ascending order, and reports come back in spec order regardless of
+/// which worker ran what.
+#[test]
+fn event_stream_pairs_and_orders_each_run() {
+    let rt = backend();
+    let steps = 4usize;
+    let specs = micro_specs(steps);
+    let labels: Vec<String> = specs.iter().map(|s| s.label.clone()).collect();
+    let n = specs.len();
+    let sink = Arc::new(CollectSink::default());
+    let reports = Sweep::new(specs)
+        .workers(2)
+        .events(sink.clone())
+        .run(&rt)
+        .unwrap();
+
+    assert_eq!(
+        reports.iter().map(|r| r.label.clone()).collect::<Vec<_>>(),
+        labels,
+        "reports not in spec order"
+    );
+
+    let events = sink.take();
+    for run in 0..n {
+        let mine: Vec<&TrainEvent> = events.iter().filter(|e| e.run() == run).collect();
+        let started: Vec<usize> = mine
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| matches!(e, TrainEvent::RunStarted { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        let finished: Vec<usize> = mine
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| matches!(e, TrainEvent::RunFinished { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(started, vec![0], "run {run}: RunStarted not first/unique");
+        assert_eq!(
+            finished,
+            vec![mine.len() - 1],
+            "run {run}: RunFinished not last/unique"
+        );
+        let step_nos: Vec<usize> = mine
+            .iter()
+            .filter_map(|e| match e {
+                TrainEvent::Step { step, .. } => Some(*step),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(step_nos, (1..=steps).collect::<Vec<_>>(), "run {run}: step order");
+        for e in &mine {
+            assert_eq!(e.label(), labels[run], "run {run}: label mismatch");
+        }
+    }
+}
+
+/// More workers than specs, and an empty sweep, are fine.
+#[test]
+fn degenerate_worker_counts() {
+    let rt = backend();
+    let reports = Sweep::new(micro_specs(2).into_iter().take(2).collect())
+        .workers(16)
+        .run(&rt)
+        .unwrap();
+    assert_eq!(reports.len(), 2);
+    let empty = Sweep::new(Vec::new()).workers(4).run(&rt).unwrap();
+    assert!(empty.is_empty());
+}
+
+/// A failing row (unknown model) surfaces as an error naming the row,
+/// after the other rows drain — no panic, no hang.
+#[test]
+fn row_failure_is_reported_with_spec_context() {
+    let rt = backend();
+    let mut specs = micro_specs(2);
+    let mut bad = TrainConfig::default();
+    bad.model = "no_such_model".into();
+    bad.steps = 2;
+    specs.insert(1, RunSpec::new("broken-row", bad));
+    let err = Sweep::new(specs).workers(2).run(&rt).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("broken-row"), "error lacks spec context: {msg}");
+}
+
+/// Sweep-level sharding composes with in-run `--threads` parallelism:
+/// 4 sweep workers over a pooled-GEMM backend, each trainer fanning its
+/// optimizer slots across 4 threads, stays bit-identical to the fully
+/// serial configuration (serial backend, 1-thread trainers, 1 worker).
+#[test]
+fn sharding_composes_with_per_run_threads() {
+    let with_threads = |threads: usize| -> Vec<RunSpec> {
+        micro_specs(4)
+            .into_iter()
+            .map(|mut s| {
+                s.cfg.threads = threads;
+                s
+            })
+            .collect()
+    };
+    let serial_rt: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let serial = Sweep::new(with_threads(1)).workers(1).run(&serial_rt).unwrap();
+    // cfg.threads drives each trainer's per-slot optimizer pool; the
+    // backend's GEMM pool must be pooled explicitly (the builder only
+    // opens its own backend when none is supplied).
+    let pooled_rt: Arc<dyn Backend> = Arc::new(NativeBackend::with_threads(4));
+    let sharded = Sweep::new(with_threads(4)).workers(4).run(&pooled_rt).unwrap();
+    let a: Vec<RowKey> = serial.iter().map(row_key).collect();
+    let b: Vec<RowKey> = sharded.iter().map(row_key).collect();
+    assert_eq!(a, b);
+}

@@ -5,6 +5,7 @@
 //! with `--features xla` the xla-gated tests cover that engine.)
 
 use coap::config::{OptKind, TrainConfig};
+use coap::coordinator::checkpoint::Checkpoint;
 use coap::coordinator::Trainer;
 use coap::runtime::{Backend, NativeBackend};
 use coap::tensor::Precision;
@@ -29,8 +30,7 @@ fn cfg(opt: OptKind, steps: usize) -> TrainConfig {
 }
 
 fn run(c: TrainConfig, rt: Arc<dyn Backend>) -> coap::coordinator::TrainReport {
-    let mut tr = Trainer::new(c, rt).unwrap();
-    tr.quiet = true;
+    let mut tr = Trainer::builder(c).backend(rt).quiet().build().unwrap();
     tr.run().unwrap()
 }
 
@@ -150,6 +150,60 @@ fn deterministic_across_thread_counts() {
     let fa = run(f1, Arc::clone(&rt));
     let fb = run(fnn, rt);
     assert_eq!(fa.train_losses, fb.train_losses);
+}
+
+/// Checkpoint round-trip through the builder `resume()` path: the
+/// restored parameters must be bit-identical both to the trained
+/// parameters and to the manual `Checkpoint::into_params_for` injection
+/// (the old `main.rs` field-poking path the builder replaced).
+#[test]
+fn builder_resume_matches_manual_param_injection() {
+    let rt = backend();
+    let c = cfg(OptKind::Coap, 6);
+    let mut tr = Trainer::builder(c.clone())
+        .backend(Arc::clone(&rt))
+        .quiet()
+        .build()
+        .unwrap();
+    tr.run().unwrap();
+
+    let dir = std::env::temp_dir().join(format!("coap_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.ckpt");
+    let path = path.to_str().unwrap();
+    tr.save_checkpoint(path).unwrap();
+
+    let mut tr2 = Trainer::builder(c)
+        .backend(Arc::clone(&rt))
+        .quiet()
+        .resume(path)
+        .build()
+        .unwrap();
+    assert_eq!(tr2.resume_info().map(|(_, step)| step), Some(6));
+
+    let ck = Checkpoint::load(path).unwrap();
+    assert_eq!(ck.step, 6);
+    let manual = ck.into_params_for(tr2.model()).unwrap();
+    assert_eq!(tr2.params().len(), manual.len());
+    for (i, (a, b)) in tr2.params().iter().zip(manual.iter()).enumerate() {
+        let (ab, bb): (Vec<u32>, Vec<u32>) = (
+            a.f32s().iter().map(|v| v.to_bits()).collect(),
+            b.f32s().iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(ab, bb, "param {i} drifted vs manual injection");
+    }
+    for (i, (a, b)) in tr2.params().iter().zip(tr.params().iter()).enumerate() {
+        assert_eq!(a.f32s(), b.f32s(), "param {i} drifted vs trained state");
+    }
+
+    // Checkpoint steps accumulate across resume chains: 6 resumed + 6
+    // trained saves step 12, not a reset to 6.
+    tr2.run().unwrap();
+    let path2 = dir.join("resume2.ckpt");
+    let path2 = path2.to_str().unwrap();
+    tr2.save_checkpoint(path2).unwrap();
+    assert_eq!(Checkpoint::load(path2).unwrap().step, 12);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
