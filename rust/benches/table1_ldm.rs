@@ -1,7 +1,9 @@
 //! Table 1 bench — LDM pre-training substitute (conv denoiser):
 //! AdamW / GaLore / COAP and the Adafactor branch at rank ratio 2.
-//! Short runs by default; COAP_BENCH_STEPS=N lengthens them and
-//! COAP_BENCH_WORKERS=N shards rows across the sweep worker pool.
+//! Short runs by default; COAP_BENCH_STEPS=N lengthens them,
+//! COAP_BENCH_WORKERS=N shards rows across the sweep worker pool, and
+//! COAP_BENCH_PROCS=N shards them across `coap worker` subprocesses
+//! instead (same reports, bit for bit — see benchlib::bench_env).
 
 use coap::benchlib;
 use coap::coordinator::sweep::print_report_table;

@@ -1,6 +1,7 @@
 //! Table 2 bench — SiT-XL/2 + REPA substitute: AdamW branch
 //! (GaLore/LoRA/ReLoRA/COAP) and Adafactor branch (GaLore/Flora/COAP),
-//! sharded across the sweep worker pool (COAP_BENCH_WORKERS).
+//! sharded across the sweep worker pool (COAP_BENCH_WORKERS, or
+//! COAP_BENCH_PROCS for `coap worker` subprocess sharding).
 
 use coap::benchlib;
 use coap::coordinator::sweep::print_report_table;

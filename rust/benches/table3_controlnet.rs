@@ -1,6 +1,8 @@
 //! Table 3 bench — ControlNet-SDXL substitute: rank-ratio sweep {2,4,8}
 //! with 8-bit variants (quality checkpoints live in the longer
 //! examples/controlnet_sweep run; this bench reports memory + time).
+//! Shard rows with COAP_BENCH_WORKERS (threads) or COAP_BENCH_PROCS
+//! (`coap worker` subprocesses) — reports are bit-identical either way.
 
 use coap::benchlib;
 use coap::coordinator::sweep::print_report_table;

@@ -1,6 +1,7 @@
 //! Table 5 bench — LLaMA-1B substitute (lm_small): AdamW / GaLore /
 //! LoRA / ReLoRA / COAP. The 8-bit "7B" branch runs via
-//! `coap sweep table5-large` (lm_base is slow on 1 core).
+//! `coap sweep table5-large` (lm_base is slow on 1 core). Shard rows
+//! with COAP_BENCH_WORKERS (threads) or COAP_BENCH_PROCS (subprocesses).
 
 use coap::benchlib;
 use coap::coordinator::sweep::print_report_table;

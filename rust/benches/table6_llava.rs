@@ -1,6 +1,7 @@
 //! Table 6 bench — LLaVA-v1.5-7B fine-tuning substitute (llava_small,
 //! pretrained-init regime): DeepSpeed-offload is N/A on this substrate;
-//! AdamW plays the full-rank baseline role.
+//! AdamW plays the full-rank baseline role. Shard rows with
+//! COAP_BENCH_WORKERS (threads) or COAP_BENCH_PROCS (subprocesses).
 
 use coap::benchlib;
 use coap::coordinator::sweep::print_report_table;

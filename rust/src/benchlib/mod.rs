@@ -9,7 +9,9 @@
 //! Step counts: quality runs need hundreds of steps (examples, recorded
 //! in EXPERIMENTS.md); bench targets default to short runs sized for a
 //! single-core box. Override with env `COAP_BENCH_STEPS` or per-binary
-//! `--steps`; shard with `COAP_BENCH_WORKERS` / `--workers`.
+//! `--steps`; shard with `COAP_BENCH_WORKERS` / `--workers` (thread
+//! workers) or `COAP_BENCH_PROCS` / `--procs` (`coap worker`
+//! subprocesses).
 
 use crate::config::{ConvFormat, MomentBase, OptKind, TrainConfig};
 use crate::coordinator::events::ProgressSink;
@@ -21,7 +23,7 @@ use crate::util::cli::Args;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
-pub use crate::coordinator::sweep::RunSpec;
+pub use crate::coordinator::sweep::{ExecMode, RunSpec};
 
 pub fn bench_steps(default: usize) -> usize {
     std::env::var("COAP_BENCH_STEPS")
@@ -38,6 +40,27 @@ pub fn bench_workers() -> usize {
         .and_then(|v| v.parse().ok())
         .unwrap_or(1)
         .max(1)
+}
+
+/// Subprocess-pool width for the bench binaries (`COAP_BENCH_PROCS`,
+/// default 0 = stay in-process). Nonzero wins over `COAP_BENCH_WORKERS`
+/// and shards rows across `coap worker` children instead of threads.
+pub fn bench_procs() -> usize {
+    std::env::var("COAP_BENCH_PROCS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+/// The procs↔workers half of the sharding policy: subprocesses, when
+/// requested, win over thread workers (a row can only run in one
+/// place), and either pool width is clamped to at least 1.
+pub fn shard_mode(workers: usize, procs: usize) -> ExecMode {
+    if procs > 0 {
+        ExecMode::Process { max_procs: procs }
+    } else {
+        ExecMode::Threads { workers: workers.max(1) }
+    }
 }
 
 /// The sharded-run threads policy: with more than one sweep worker,
@@ -67,46 +90,69 @@ pub fn threads_explicit(args: &Args, cfg: &TrainConfig) -> bool {
 }
 
 /// The resolved sharding environment every sweep driver runs in: one
-/// backend, the worker-pool width, and the per-row thread count, all
-/// resolved once through [`shard_threads`]. Built from CLI flags
+/// backend, the execution mode (thread workers or `coap worker`
+/// subprocesses), and the per-row thread count, all resolved once
+/// through [`shard_mode`] + [`shard_threads`]. Built from CLI flags
 /// ([`shard_env`]) or the bench env vars ([`bench_env`]).
 pub struct ShardEnv {
     pub rt: Arc<dyn Backend>,
-    pub workers: usize,
+    pub mode: ExecMode,
     pub row_threads: usize,
 }
 
 impl ShardEnv {
+    /// Pool width (thread workers or concurrent subprocesses).
+    pub fn width(&self) -> usize {
+        self.mode.width()
+    }
+
+    /// `"N workers"` / `"N procs"` for env banners and table footers.
+    pub fn pool_label(&self) -> String {
+        match self.mode {
+            ExecMode::Threads { workers } => format!("{workers} workers"),
+            ExecMode::Process { max_procs } => format!("{max_procs} procs"),
+        }
+    }
+
     /// Stamp `specs` with the resolved row thread count and run them as
     /// a sharded sweep with a progress line per row, returning reports
-    /// in spec order.
+    /// in spec order (bit-identical across execution modes).
     pub fn run(&self, mut specs: Vec<RunSpec>) -> Result<Vec<TrainReport>> {
         for s in &mut specs {
             s.cfg.threads = self.row_threads;
         }
         Sweep::new(specs)
-            .workers(self.workers)
+            .mode(self.mode)
             .events(Arc::new(ProgressSink))
             .run(&self.rt)
     }
 }
 
-/// Resolve a [`ShardEnv`] from CLI flags (`--workers`, `--threads`,
-/// `--backend`, `--config`) — the `coap sweep` subcommand and the
-/// example drivers.
+/// Resolve a [`ShardEnv`] from CLI flags (`--workers`, `--procs`,
+/// `--threads`, `--backend`, `--config`) — the `coap sweep` subcommand
+/// and the example drivers. `--workers` and `--procs` are mutually
+/// exclusive: a row runs either on an in-process thread or in a
+/// subprocess, never both.
 pub fn shard_env(args: &Args, mut cfg: TrainConfig) -> Result<ShardEnv> {
-    let workers = args.usize_or("workers", 1).max(1);
-    cfg.threads = shard_threads(cfg.threads, workers, threads_explicit(args, &cfg));
-    Ok(ShardEnv { rt: open_backend(&cfg)?, workers, row_threads: cfg.threads })
+    if args.has("workers") && args.has("procs") {
+        bail!(
+            "--workers (thread sharding) and --procs (subprocess sharding) \
+             are mutually exclusive"
+        );
+    }
+    let mode = shard_mode(args.usize_or("workers", 1), args.usize_or("procs", 0));
+    cfg.threads = shard_threads(cfg.threads, mode.width(), threads_explicit(args, &cfg));
+    Ok(ShardEnv { rt: open_backend(&cfg)?, mode, row_threads: cfg.threads })
 }
 
-/// Resolve a [`ShardEnv`] from the bench env vars (`COAP_BENCH_WORKERS`)
-/// over the default config — the `cargo bench` table binaries.
+/// Resolve a [`ShardEnv`] from the bench env vars (`COAP_BENCH_WORKERS`
+/// / `COAP_BENCH_PROCS`) over the default config — the `cargo bench`
+/// table binaries.
 pub fn bench_env() -> Result<ShardEnv> {
-    let workers = bench_workers();
+    let mode = shard_mode(bench_workers(), bench_procs());
     let mut cfg = TrainConfig::default();
-    cfg.threads = shard_threads(cfg.threads, workers, false);
-    Ok(ShardEnv { rt: open_backend(&cfg)?, workers, row_threads: cfg.threads })
+    cfg.threads = shard_threads(cfg.threads, mode.width(), false);
+    Ok(ShardEnv { rt: open_backend(&cfg)?, mode, row_threads: cfg.threads })
 }
 
 fn base_cfg(model: &str, steps: usize, lr: f32) -> TrainConfig {
@@ -524,6 +570,30 @@ mod tests {
         assert!(ns.steps >= 1);
         let ns2 = named_sweep("table1", Some(5)).unwrap();
         assert_eq!(ns2.steps, 5);
+    }
+
+    /// The procs↔workers policy: --procs wins when set, widths clamp
+    /// to 1, and a multi-proc pool defaults rows to single-threaded
+    /// exactly like a multi-worker pool does.
+    #[test]
+    fn shard_mode_policy() {
+        assert_eq!(shard_mode(4, 0), ExecMode::Threads { workers: 4 });
+        assert_eq!(shard_mode(0, 0), ExecMode::Threads { workers: 1 });
+        assert_eq!(shard_mode(4, 2), ExecMode::Process { max_procs: 2 });
+        assert_eq!(ExecMode::Threads { workers: 3 }.width(), 3);
+        assert_eq!(ExecMode::Process { max_procs: 5 }.width(), 5);
+        assert_eq!(ExecMode::Process { max_procs: 5 }.label(), "procs");
+        assert_eq!(shard_threads(8, shard_mode(1, 2).width(), false), 1);
+
+        // --workers and --procs together is a config error, not a guess.
+        let both = Args::parse(["--workers", "2", "--procs", "2"].iter().map(|s| s.to_string()));
+        assert!(shard_env(&both, TrainConfig::default()).is_err());
+        let procs = Args::parse(["--procs", "2"].iter().map(|s| s.to_string()));
+        let env = shard_env(&procs, TrainConfig::default()).unwrap();
+        assert_eq!(env.mode, ExecMode::Process { max_procs: 2 });
+        assert_eq!(env.row_threads, 1);
+        assert_eq!(env.pool_label(), "2 procs");
+        assert_eq!(env.width(), 2);
     }
 
     /// Sharded rows default to single-threaded (backend pool + per-row

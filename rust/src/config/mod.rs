@@ -3,8 +3,9 @@
 
 use crate::tensor::Precision;
 use crate::util::cli::Args;
-use crate::util::json::Json;
+use crate::util::json::{num_wire, u64_unwire, u64_wire, Json};
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 
 /// Which execution engine runs the compute graphs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -175,6 +176,13 @@ impl MomentBase {
             _ => anyhow::bail!("unknown base '{s}' (adam|adafactor)"),
         })
     }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MomentBase::Adam => "adam",
+            MomentBase::Adafactor => "adafactor",
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -299,6 +307,104 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// Exact wire encoding of the full config — every field, ablation
+    /// term toggles included — for the sweep worker wire
+    /// (`coordinator::wire`). Unlike the `--config` surface
+    /// ([`TrainConfig::apply_json`], flat CLI-flag keys over defaults),
+    /// this round-trips bit-exactly: `from_json(&to_json(c)) == c`,
+    /// with f64/f32 fields surviving NaN/±inf (`util::json::num_wire`)
+    /// and the u64 seed carried as a decimal string
+    /// (`util::json::u64_wire`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        let mut put = |k: &str, v: Json| m.insert(k.to_string(), v);
+        put("model", Json::Str(self.model.clone()));
+        put("backend", Json::Str(self.backend.label().into()));
+        put("optimizer", Json::Str(self.optimizer.label().into()));
+        put("rank_ratio", num_wire(self.rank_ratio));
+        put("t_update", Json::Num(self.t_update as f64));
+        put("lambda", Json::Num(self.lambda as f64));
+        put("lr", num_wire(f64::from(self.lr)));
+        put("weight_decay", num_wire(f64::from(self.weight_decay)));
+        put("steps", Json::Num(self.steps as f64));
+        put("seed", u64_wire(self.seed));
+        put("state_precision", Json::Str(self.state_precision.label().into()));
+        put("eval_every", Json::Num(self.eval_every as f64));
+        put("eval_batches", Json::Num(self.eval_batches as f64));
+        put("log_every", Json::Num(self.log_every as f64));
+        put("track_ceu", Json::Bool(self.track_ceu));
+        put("threads", Json::Num(self.threads as f64));
+        put("threads_explicit", Json::Bool(self.threads_explicit));
+        put("artifacts_dir", Json::Str(self.artifacts_dir.clone()));
+        let mut ab = BTreeMap::new();
+        ab.insert("use_recalib".to_string(), Json::Bool(self.ablation.use_recalib));
+        ab.insert("use_pupdate".to_string(), Json::Bool(self.ablation.use_pupdate));
+        ab.insert("mse_term".to_string(), Json::Bool(self.ablation.mse_term));
+        ab.insert("cos_term".to_string(), Json::Bool(self.ablation.cos_term));
+        put("ablation", Json::Obj(ab));
+        put("relora_merge_every", Json::Num(self.relora_merge_every as f64));
+        put("finetune", Json::Bool(self.finetune));
+        put("galore_interval", Json::Num(self.galore_interval as f64));
+        put("flora_interval", Json::Num(self.flora_interval as f64));
+        put("conv_format", Json::Str(self.conv_format.label().into()));
+        put("lowrank_base", Json::Str(self.lowrank_base.label().into()));
+        Json::Obj(m)
+    }
+
+    /// Decode a [`TrainConfig::to_json`] wire object. Strict: every
+    /// field must be present with the right type (a frame from a
+    /// different build that added or dropped a field fails loudly
+    /// instead of silently defaulting). Never panics on arbitrary
+    /// input.
+    pub fn from_json(j: &Json) -> Result<TrainConfig> {
+        use crate::util::json::{
+            wire_bool as boolean, wire_f64 as float, wire_field as field, wire_str as string,
+            wire_uint as uint,
+        };
+        let precision = match string(j, "state_precision")?.as_str() {
+            // Precision::parse panics on unknown input; the wire must
+            // error instead.
+            "f32" => Precision::F32,
+            "bf16" => Precision::Bf16,
+            "int8" => Precision::Int8,
+            other => anyhow::bail!("config wire: unknown state_precision '{other}'"),
+        };
+        let ab = field(j, "ablation")?;
+        Ok(TrainConfig {
+            model: string(j, "model")?,
+            backend: BackendKind::parse(&string(j, "backend")?)?,
+            optimizer: OptKind::parse(&string(j, "optimizer")?)?,
+            rank_ratio: float(j, "rank_ratio")?,
+            t_update: uint(j, "t_update")?,
+            lambda: uint(j, "lambda")?,
+            lr: float(j, "lr")? as f32,
+            weight_decay: float(j, "weight_decay")? as f32,
+            steps: uint(j, "steps")?,
+            seed: u64_unwire(field(j, "seed")?)
+                .context("config wire key 'seed' must be a u64 string")?,
+            state_precision: precision,
+            eval_every: uint(j, "eval_every")?,
+            eval_batches: uint(j, "eval_batches")?,
+            log_every: uint(j, "log_every")?,
+            track_ceu: boolean(j, "track_ceu")?,
+            threads: uint(j, "threads")?,
+            threads_explicit: boolean(j, "threads_explicit")?,
+            artifacts_dir: string(j, "artifacts_dir")?,
+            ablation: CoapAblation {
+                use_recalib: boolean(ab, "use_recalib")?,
+                use_pupdate: boolean(ab, "use_pupdate")?,
+                mse_term: boolean(ab, "mse_term")?,
+                cos_term: boolean(ab, "cos_term")?,
+            },
+            relora_merge_every: uint(j, "relora_merge_every")?,
+            finetune: boolean(j, "finetune")?,
+            galore_interval: uint(j, "galore_interval")?,
+            flora_interval: uint(j, "flora_interval")?,
+            conv_format: ConvFormat::parse(&string(j, "conv_format")?)?,
+            lowrank_base: MomentBase::parse(&string(j, "lowrank_base")?)?,
+        })
+    }
+
     /// Defaults -> (optional) --config file -> CLI flags.
     pub fn from_args(args: &Args) -> Result<TrainConfig> {
         let mut cfg = TrainConfig::default();
@@ -356,6 +462,63 @@ mod tests {
         assert!(OptKind::parse("sgd").is_err());
         assert!(OptKind::parse("coap").unwrap().is_low_rank());
         assert!(!OptKind::parse("adamw").unwrap().is_low_rank());
+    }
+
+    /// The wire encoding must round-trip every field exactly —
+    /// including the ablation toggles apply_json cannot reach, the
+    /// full-range u64 seed, and non-finite floats.
+    #[test]
+    fn wire_roundtrip_is_exact() {
+        let mut cfg = TrainConfig::default();
+        cfg.model = "ctrl_micro".into();
+        cfg.optimizer = OptKind::CoapAdafactor;
+        cfg.rank_ratio = 8.5;
+        cfg.lr = 2.5e-3;
+        cfg.seed = u64::MAX - 7; // not representable as f64
+        cfg.state_precision = Precision::Int8;
+        cfg.threads = 3;
+        cfg.threads_explicit = true;
+        cfg.ablation.mse_term = false;
+        cfg.ablation.use_pupdate = false;
+        cfg.conv_format = ConvFormat::Full;
+        cfg.lowrank_base = MomentBase::Adafactor;
+        let wire = cfg.to_json().to_string();
+        let back = TrainConfig::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        // Encoding is injective over the field set, so encode-equality
+        // is field-equality (TrainConfig has no PartialEq).
+        assert_eq!(back.to_json().to_string(), wire);
+        assert_eq!(back.seed, cfg.seed);
+        assert!(!back.ablation.mse_term && !back.ablation.use_pupdate);
+        assert_eq!(back.state_precision, Precision::Int8);
+
+        // Non-finite floats survive (JSON has no literal for them).
+        cfg.rank_ratio = f64::INFINITY;
+        cfg.lr = f32::NAN;
+        let wire = cfg.to_json().to_string();
+        let back = TrainConfig::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert!(back.rank_ratio.is_infinite() && back.lr.is_nan());
+    }
+
+    /// Strictness: a frame missing a field, or carrying a wrong type,
+    /// errors by key name instead of silently defaulting.
+    #[test]
+    fn wire_decode_is_strict() {
+        let full = TrainConfig::default().to_json();
+        assert!(TrainConfig::from_json(&full).is_ok());
+        let obj = full.as_obj().unwrap();
+        for key in obj.keys() {
+            let mut pruned = obj.clone();
+            pruned.remove(key);
+            let err = TrainConfig::from_json(&Json::Obj(pruned)).unwrap_err();
+            assert!(format!("{err:#}").contains(key.as_str()), "{key}: {err:#}");
+        }
+        let mut bad = obj.clone();
+        bad.insert("steps".into(), Json::Str("twelve".into()));
+        assert!(TrainConfig::from_json(&Json::Obj(bad)).is_err());
+        let mut bad = obj.clone();
+        bad.insert("state_precision".into(), Json::Str("fp4".into()));
+        assert!(TrainConfig::from_json(&Json::Obj(bad)).is_err());
+        assert!(TrainConfig::from_json(&Json::Arr(vec![])).is_err());
     }
 
     #[test]

@@ -8,9 +8,10 @@ pub mod memory;
 pub mod metrics;
 pub mod sweep;
 pub mod trainer;
+pub mod wire;
 
 pub use events::{CollectSink, EventSink, Fanout, NullSink, ProgressSink, StderrSink, TrainEvent};
 pub use memory::MemoryAccountant;
 pub use metrics::{EvalPoint, Metrics};
-pub use sweep::{RunSpec, Sweep};
+pub use sweep::{ExecMode, RunSpec, Sweep};
 pub use trainer::{TrainReport, Trainer, TrainerBuilder};

@@ -1,26 +1,31 @@
 //! `coordinator::sweep` — sharded multi-run sessions.
 //!
 //! A paper table is a list of [`RunSpec`]s; [`Sweep`] executes them
-//! across a pool of scoped worker threads
-//! (`Sweep::new(specs).workers(n).run(&rt)?`), streaming every run's
-//! [`TrainEvent`](super::events::TrainEvent)s through one merged sink
-//! and returning [`TrainReport`]s **in spec order**.
+//! across a pool of workers — in-process threads
+//! (`Sweep::new(specs).workers(n).run(&rt)?`) or `coap worker`
+//! subprocesses ([`ExecMode::Process`], one child per row over the
+//! [`coordinator::wire`](super::wire) event wire) — streaming every
+//! run's [`TrainEvent`](super::events::TrainEvent)s through one merged
+//! sink and returning [`TrainReport`]s **in spec order**.
 //!
 //! Determinism: each run owns its trainer, parameter store, optimizer
 //! state and RNG streams (all seeded from its own `TrainConfig::seed`),
 //! and shares only the `Arc<dyn Backend>` — whose kernels are
 //! bit-identical for any worker count (PR 1/2 contract). Sharding
-//! therefore changes wall-clock only: `workers ∈ {1, 2, 8}` return
-//! bit-identical rows (`tests/sweep_parity.rs`), the same guarantee
-//! `--threads` gives inside a single run.
+//! therefore changes wall-clock only: serial, `workers ∈ {1, 2, 8}`
+//! and `procs ∈ {2}` all return bit-identical rows
+//! (`tests/sweep_parity.rs`, `tests/sweep_process_parity.rs`), the
+//! same guarantee `--threads` gives inside a single run.
 
 use super::events::{EventSink, NullSink};
 use super::trainer::{TrainReport, Trainer};
+use super::wire;
 use crate::config::TrainConfig;
 use crate::coordinator::memory;
 use crate::runtime::Backend;
 use crate::util::bench::print_table;
 use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -37,22 +42,81 @@ impl RunSpec {
     }
 }
 
+/// How a [`Sweep`] executes its rows. Every mode returns bit-identical
+/// reports in spec order; the choice is an execution-layout decision,
+/// not a semantic one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Rows on a pool of in-process scoped threads sharing the
+    /// `Arc<dyn Backend>`. `workers == 1` is serial execution.
+    Threads { workers: usize },
+    /// One `coap worker` subprocess per row, at most `max_procs` alive
+    /// at once, each opening its own backend and streaming
+    /// events/report back over the [`wire`](super::wire). The process
+    /// boundary is what later lets rows land on heterogeneous backends
+    /// or other machines.
+    Process { max_procs: usize },
+}
+
+impl ExecMode {
+    /// Pool width: thread workers, or max concurrent subprocesses —
+    /// what the sharding policies count as "workers" in either mode.
+    pub fn width(&self) -> usize {
+        match self {
+            ExecMode::Threads { workers } => *workers,
+            ExecMode::Process { max_procs } => *max_procs,
+        }
+    }
+
+    /// Short tag for banners and trajectory records.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::Threads { .. } => "threads",
+            ExecMode::Process { .. } => "procs",
+        }
+    }
+}
+
 /// A sharded multi-run session over a list of [`RunSpec`]s.
 pub struct Sweep {
     specs: Vec<RunSpec>,
-    workers: usize,
+    mode: ExecMode,
     events: Arc<dyn EventSink>,
+    worker_exe: Option<PathBuf>,
 }
 
 impl Sweep {
     pub fn new(specs: Vec<RunSpec>) -> Sweep {
-        Sweep { specs, workers: 1, events: Arc::new(NullSink) }
+        Sweep {
+            specs,
+            mode: ExecMode::Threads { workers: 1 },
+            events: Arc::new(NullSink),
+            worker_exe: None,
+        }
     }
 
-    /// Worker-pool width. Clamped to at least 1; more workers than specs
-    /// just idle. Any value returns bit-identical reports.
-    pub fn workers(mut self, n: usize) -> Sweep {
-        self.workers = n.max(1);
+    /// Execution mode. Pool widths are clamped to at least 1; wider
+    /// pools than specs just idle. Any mode returns bit-identical
+    /// reports.
+    pub fn mode(mut self, mode: ExecMode) -> Sweep {
+        self.mode = match mode {
+            ExecMode::Threads { workers } => ExecMode::Threads { workers: workers.max(1) },
+            ExecMode::Process { max_procs } => ExecMode::Process { max_procs: max_procs.max(1) },
+        };
+        self
+    }
+
+    /// Thread-pool width (sugar for [`ExecMode::Threads`]).
+    pub fn workers(self, n: usize) -> Sweep {
+        self.mode(ExecMode::Threads { workers: n })
+    }
+
+    /// The binary to spawn for [`ExecMode::Process`] rows (must speak
+    /// the `coap worker` wire). Default: the running `coap` binary, or
+    /// a sibling `coap` next to a test/bench binary
+    /// ([`wire::default_worker_exe`]).
+    pub fn worker_exe(mut self, path: impl Into<PathBuf>) -> Sweep {
+        self.worker_exe = Some(path.into());
         self
     }
 
@@ -71,54 +135,83 @@ impl Sweep {
         self.specs.is_empty()
     }
 
-    /// Run every spec and return the reports in spec order. Workers pull
-    /// the next un-run spec from a shared cursor, so long rows don't
+    /// Run every spec and return the reports in spec order. Workers
+    /// (threads or subprocess managers, per [`Sweep::mode`]) pull the
+    /// next un-run spec from a shared cursor, so long rows don't
     /// serialize behind short ones. On a row failure, workers stop
     /// pulling new rows (in-flight rows drain) and the first error by
     /// spec index is returned.
     pub fn run(self, rt: &Arc<dyn Backend>) -> Result<Vec<TrainReport>> {
-        let n = self.specs.len();
-        if n == 0 {
+        // Before any pool, exe resolution or spawn machinery: an empty
+        // sweep is a no-op (regression: empty_sweep_skips_the_pool).
+        if self.specs.is_empty() {
             return Ok(Vec::new());
         }
-        let workers = self.workers.min(n);
-        let specs = &self.specs;
-        let sink = &self.events;
-        let cursor = AtomicUsize::new(0);
-        let failed = AtomicBool::new(false);
-        let slots: Vec<Mutex<Option<Result<TrainReport>>>> =
-            (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    if failed.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let i = cursor.fetch_add(1, Ordering::SeqCst);
-                    if i >= n {
-                        break;
-                    }
-                    let out = run_row(rt, &specs[i], i, Arc::clone(sink));
-                    if out.is_err() {
-                        failed.store(true, Ordering::SeqCst);
-                    }
-                    *slots[i].lock().unwrap() = Some(out);
-                });
+        match self.mode {
+            ExecMode::Threads { workers } => {
+                let width = workers.min(self.specs.len());
+                run_pool(&self.specs, width, |i, spec| {
+                    run_row(rt, spec, i, Arc::clone(&self.events))
+                })
             }
-        });
-        let mut reports = Vec::with_capacity(n);
-        for (i, slot) in slots.into_iter().enumerate() {
-            let row = || format!("sweep row {i} ('{}')", self.specs[i].label);
-            match slot.into_inner().expect("sweep slot poisoned") {
-                Some(Ok(rep)) => reports.push(rep),
-                Some(Err(e)) => return Err(e).with_context(row),
-                // Unreached when a lower-index error exists (the cursor
-                // is monotonic), but never panic on a skipped slot.
-                None => bail!("{} skipped after an earlier row failed", row()),
+            ExecMode::Process { max_procs } => {
+                let exe = match &self.worker_exe {
+                    Some(p) => p.clone(),
+                    None => wire::default_worker_exe()?,
+                };
+                let width = max_procs.min(self.specs.len());
+                run_pool(&self.specs, width, |i, spec| {
+                    wire::run_worker(&exe, spec, i, self.events.as_ref())
+                })
             }
         }
-        Ok(reports)
     }
+}
+
+/// The shared-cursor worker pool both execution modes run on: `width`
+/// scoped threads pull spec indices until the list drains or a row
+/// fails, `row` executes one spec (in-process trainer, or subprocess
+/// spawn + wire demultiplex), and the slots collapse into in-spec-order
+/// reports with first-error-by-spec-index semantics.
+fn run_pool<F>(specs: &[RunSpec], width: usize, row: F) -> Result<Vec<TrainReport>>
+where
+    F: Fn(usize, &RunSpec) -> Result<TrainReport> + Sync,
+{
+    let n = specs.len();
+    let cursor = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<Result<TrainReport>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..width {
+            scope.spawn(|| loop {
+                if failed.load(Ordering::SeqCst) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let out = row(i, &specs[i]);
+                if out.is_err() {
+                    failed.store(true, Ordering::SeqCst);
+                }
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    let mut reports = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        let row_ctx = || format!("sweep row {i} ('{}')", specs[i].label);
+        match slot.into_inner().expect("sweep slot poisoned") {
+            Some(Ok(rep)) => reports.push(rep),
+            Some(Err(e)) => return Err(e).with_context(row_ctx),
+            // Unreached when a lower-index error exists (the cursor
+            // is monotonic), but never panic on a skipped slot.
+            None => bail!("{} skipped after an earlier row failed", row_ctx()),
+        }
+    }
+    Ok(reports)
 }
 
 /// Build and run one row's trainer: per-run RNG isolation comes from the
@@ -275,6 +368,41 @@ mod tests {
             ceu_curve: vec![],
             evals: vec![],
         }
+    }
+
+    /// Regression: the empty-spec early return must fire before any
+    /// pool, worker-exe resolution or spawn machinery — Process mode
+    /// pointed at a nonexistent worker binary must still return
+    /// `Ok(vec![])`, and an empty thread sweep must not spin up a pool.
+    #[test]
+    fn empty_sweep_skips_the_pool() {
+        let rt: Arc<dyn crate::runtime::Backend> =
+            Arc::new(crate::runtime::NativeBackend::new());
+        assert!(Sweep::new(Vec::new()).workers(8).run(&rt).unwrap().is_empty());
+        let out = Sweep::new(Vec::new())
+            .mode(ExecMode::Process { max_procs: 4 })
+            .worker_exe("/nonexistent/coap-worker-binary")
+            .run(&rt)
+            .unwrap();
+        assert!(out.is_empty());
+    }
+
+    /// Mode builders clamp pool widths to at least 1.
+    #[test]
+    fn mode_builders_clamp_widths() {
+        let probe = |s: Sweep| s.mode;
+        assert_eq!(
+            probe(Sweep::new(Vec::new()).workers(0)),
+            ExecMode::Threads { workers: 1 }
+        );
+        assert_eq!(
+            probe(Sweep::new(Vec::new()).mode(ExecMode::Process { max_procs: 0 })),
+            ExecMode::Process { max_procs: 1 }
+        );
+        assert_eq!(
+            probe(Sweep::new(Vec::new())),
+            ExecMode::Threads { workers: 1 }
+        );
     }
 
     #[test]

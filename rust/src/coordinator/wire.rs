@@ -1,0 +1,668 @@
+//! `coordinator::wire` — the serialized event wire between a process
+//! sweep parent and its `coap worker` children.
+//!
+//! The format is **internal and unstable**: it exists so `coap sweep
+//! --procs N` can shard rows across subprocesses, not as a public API.
+//! Both ends must come from the same build; every frame carries
+//! [`WIRE_VERSION`] and a version mismatch is a decode error, never a
+//! guess.
+//!
+//! One frame per line, each a single JSON object (`util::json`; no
+//! serde offline):
+//!
+//! ```text
+//! parent -> child stdin:
+//!   {"v":1,"frame":"spec","spec":{"index":3,"label":"COAP","cfg":{...}}}
+//! child -> parent stdout (in order):
+//!   {"v":1,"frame":"event","event":{"type":"run_started",...}}   (0+)
+//!   {"v":1,"frame":"report","report":{...}}                       (1, last on success)
+//!   {"v":1,"frame":"error","error":"..."}                         (1, last on failure)
+//! ```
+//!
+//! Scalar encodings are exact: non-finite floats go through
+//! `util::json::num_wire` (`"NaN"`/`"inf"`/`"-inf"` — JSON has no
+//! literals for them), u64 seeds through `util::json::u64_wire`
+//! (decimal strings — f64 holds integers exactly only to 2^53), and
+//! durations as `[secs, subsec_nanos]` integer pairs. That is what lets
+//! `tests/sweep_process_parity.rs` hold process sharding to the same
+//! **bit-identical** contract as thread sharding.
+
+use super::events::{EventSink, TrainEvent};
+use super::metrics::EvalPoint;
+use super::sweep::RunSpec;
+use super::trainer::{TrainReport, Trainer};
+use crate::config::TrainConfig;
+use crate::util::json::{
+    num_unwire, num_wire, wire_f64 as float, wire_field as field, wire_str as string,
+    wire_uint as uint, Json, MAX_SAFE_INT,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Version stamped on (and required of) every frame.
+pub const WIRE_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Field helpers (the strict wire_* accessors live in util::json, shared
+// with TrainConfig::from_json so the decoders cannot drift apart)
+// ---------------------------------------------------------------------------
+
+fn opt_float(j: &Json, k: &str) -> Result<Option<f64>> {
+    match j.get(k) {
+        None => Ok(None),
+        Some(v) => num_unwire(v)
+            .map(Some)
+            .with_context(|| format!("wire key '{k}' must be a number")),
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+// ---------------------------------------------------------------------------
+// Payload serde: EvalPoint / Duration / curves / TrainEvent / TrainReport
+// ---------------------------------------------------------------------------
+
+fn eval_to_json(e: &EvalPoint) -> Json {
+    let mut pairs = vec![
+        ("step", Json::Num(e.step as f64)),
+        ("loss", num_wire(e.loss)),
+        ("ppl", num_wire(e.ppl)),
+    ];
+    if let Some(a) = e.accuracy {
+        pairs.push(("accuracy", num_wire(a)));
+    }
+    if let Some(a) = e.aux {
+        pairs.push(("aux", num_wire(a)));
+    }
+    obj(pairs)
+}
+
+fn eval_from_json(j: &Json) -> Result<EvalPoint> {
+    Ok(EvalPoint {
+        step: uint(j, "step")?,
+        loss: float(j, "loss")?,
+        ppl: float(j, "ppl")?,
+        accuracy: opt_float(j, "accuracy")?,
+        aux: opt_float(j, "aux")?,
+    })
+}
+
+/// `[secs, subsec_nanos]` — both exact integers in f64 range.
+fn dur_to_json(d: Duration) -> Json {
+    Json::Arr(vec![
+        Json::Num(d.as_secs() as f64),
+        Json::Num(f64::from(d.subsec_nanos())),
+    ])
+}
+
+fn dur_from_json(j: &Json) -> Result<Duration> {
+    let arr = j.as_arr().context("wire duration must be [secs, nanos]")?;
+    if arr.len() != 2 {
+        bail!("wire duration must be [secs, nanos]");
+    }
+    let secs = arr[0].as_f64().context("wire duration secs must be a number")?;
+    let nanos = arr[1].as_f64().context("wire duration nanos must be a number")?;
+    if secs.fract() != 0.0
+        || !(0.0..MAX_SAFE_INT).contains(&secs)
+        || nanos.fract() != 0.0
+        || !(0.0..1e9).contains(&nanos)
+    {
+        bail!("wire duration out of range: [{secs}, {nanos}]");
+    }
+    Ok(Duration::new(secs as u64, nanos as u32))
+}
+
+/// `[[step, value], ...]` for the loss/CEU curves.
+fn curve_to_json(c: &[(usize, f64)]) -> Json {
+    Json::Arr(
+        c.iter()
+            .map(|(s, v)| Json::Arr(vec![Json::Num(*s as f64), num_wire(*v)]))
+            .collect(),
+    )
+}
+
+fn curve_from_json(j: &Json) -> Result<Vec<(usize, f64)>> {
+    j.as_arr()
+        .context("wire curve must be an array")?
+        .iter()
+        .map(|p| {
+            let pair = p.as_arr().context("wire curve entry must be [step, value]")?;
+            if pair.len() != 2 {
+                bail!("wire curve entry must be [step, value]");
+            }
+            let step = pair[0].as_f64().context("wire curve step must be a number")?;
+            if step.fract() != 0.0 || !(0.0..MAX_SAFE_INT).contains(&step) {
+                bail!("wire curve step must be a non-negative integer, got {step}");
+            }
+            let v = num_unwire(&pair[1]).context("wire curve value must be a number")?;
+            Ok((step as usize, v))
+        })
+        .collect()
+}
+
+/// Tagged-object encoding of one [`TrainEvent`].
+pub fn event_to_json(ev: &TrainEvent) -> Json {
+    match ev {
+        TrainEvent::RunStarted { run, label, model, steps } => obj(vec![
+            ("type", Json::Str("run_started".into())),
+            ("run", Json::Num(*run as f64)),
+            ("label", Json::Str(label.to_string())),
+            ("model", Json::Str(model.clone())),
+            ("steps", Json::Num(*steps as f64)),
+        ]),
+        TrainEvent::Step { run, label, step, loss, ema, ms_per_step } => obj(vec![
+            ("type", Json::Str("step".into())),
+            ("run", Json::Num(*run as f64)),
+            ("label", Json::Str(label.to_string())),
+            ("step", Json::Num(*step as f64)),
+            ("loss", num_wire(*loss)),
+            ("ema", num_wire(*ema)),
+            ("ms_per_step", num_wire(*ms_per_step)),
+        ]),
+        TrainEvent::ProjRefresh { run, label, step, ms } => obj(vec![
+            ("type", Json::Str("proj_refresh".into())),
+            ("run", Json::Num(*run as f64)),
+            ("label", Json::Str(label.to_string())),
+            ("step", Json::Num(*step as f64)),
+            ("ms", num_wire(*ms)),
+        ]),
+        TrainEvent::Eval { run, label, eval } => obj(vec![
+            ("type", Json::Str("eval".into())),
+            ("run", Json::Num(*run as f64)),
+            ("label", Json::Str(label.to_string())),
+            ("eval", eval_to_json(eval)),
+        ]),
+        TrainEvent::RunFinished { run, label, steps, final_train_loss, wall_s } => obj(vec![
+            ("type", Json::Str("run_finished".into())),
+            ("run", Json::Num(*run as f64)),
+            ("label", Json::Str(label.to_string())),
+            ("steps", Json::Num(*steps as f64)),
+            ("final_train_loss", num_wire(*final_train_loss)),
+            ("wall_s", num_wire(*wall_s)),
+        ]),
+        TrainEvent::RunFailed { run, label, step, error } => obj(vec![
+            ("type", Json::Str("run_failed".into())),
+            ("run", Json::Num(*run as f64)),
+            ("label", Json::Str(label.to_string())),
+            ("step", Json::Num(*step as f64)),
+            ("error", Json::Str(error.clone())),
+        ]),
+    }
+}
+
+pub fn event_from_json(j: &Json) -> Result<TrainEvent> {
+    let run = uint(j, "run")?;
+    let label: Arc<str> = Arc::from(string(j, "label")?);
+    Ok(match string(j, "type")?.as_str() {
+        "run_started" => TrainEvent::RunStarted {
+            run,
+            label,
+            model: string(j, "model")?,
+            steps: uint(j, "steps")?,
+        },
+        "step" => TrainEvent::Step {
+            run,
+            label,
+            step: uint(j, "step")?,
+            loss: float(j, "loss")?,
+            ema: float(j, "ema")?,
+            ms_per_step: float(j, "ms_per_step")?,
+        },
+        "proj_refresh" => TrainEvent::ProjRefresh {
+            run,
+            label,
+            step: uint(j, "step")?,
+            ms: float(j, "ms")?,
+        },
+        "eval" => TrainEvent::Eval {
+            run,
+            label,
+            eval: eval_from_json(field(j, "eval")?)?,
+        },
+        "run_finished" => TrainEvent::RunFinished {
+            run,
+            label,
+            steps: uint(j, "steps")?,
+            final_train_loss: float(j, "final_train_loss")?,
+            wall_s: float(j, "wall_s")?,
+        },
+        "run_failed" => TrainEvent::RunFailed {
+            run,
+            label,
+            step: uint(j, "step")?,
+            error: string(j, "error")?,
+        },
+        other => bail!("unknown event type '{other}'"),
+    })
+}
+
+pub fn report_to_json(r: &TrainReport) -> Json {
+    obj(vec![
+        ("label", Json::Str(r.label.clone())),
+        ("model", Json::Str(r.model.clone())),
+        ("steps", Json::Num(r.steps as f64)),
+        ("final_train_loss", num_wire(r.final_train_loss)),
+        ("final_eval", eval_to_json(&r.final_eval)),
+        ("wall", dur_to_json(r.wall)),
+        ("fwdbwd_time", dur_to_json(r.fwdbwd_time)),
+        ("opt_step_time", dur_to_json(r.opt_step_time)),
+        ("proj_time", dur_to_json(r.proj_time)),
+        ("optimizer_bytes", Json::Num(r.optimizer_bytes as f64)),
+        ("opt_transient_bytes", Json::Num(r.opt_transient_bytes as f64)),
+        ("param_bytes", Json::Num(r.param_bytes as f64)),
+        ("ceu_total", num_wire(r.ceu_total)),
+        ("train_losses", curve_to_json(&r.train_losses)),
+        ("ceu_curve", curve_to_json(&r.ceu_curve)),
+        (
+            "evals",
+            Json::Arr(r.evals.iter().map(eval_to_json).collect()),
+        ),
+    ])
+}
+
+pub fn report_from_json(j: &Json) -> Result<TrainReport> {
+    Ok(TrainReport {
+        label: string(j, "label")?,
+        model: string(j, "model")?,
+        steps: uint(j, "steps")?,
+        final_train_loss: float(j, "final_train_loss")?,
+        final_eval: eval_from_json(field(j, "final_eval")?)?,
+        wall: dur_from_json(field(j, "wall")?)?,
+        fwdbwd_time: dur_from_json(field(j, "fwdbwd_time")?)?,
+        opt_step_time: dur_from_json(field(j, "opt_step_time")?)?,
+        proj_time: dur_from_json(field(j, "proj_time")?)?,
+        optimizer_bytes: uint(j, "optimizer_bytes")?,
+        opt_transient_bytes: uint(j, "opt_transient_bytes")?,
+        param_bytes: uint(j, "param_bytes")?,
+        ceu_total: float(j, "ceu_total")?,
+        train_losses: curve_from_json(field(j, "train_losses")?)?,
+        ceu_curve: curve_from_json(field(j, "ceu_curve")?)?,
+        evals: field(j, "evals")?
+            .as_arr()
+            .context("wire key 'evals' must be an array")?
+            .iter()
+            .map(eval_from_json)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+/// One child->parent frame.
+pub enum Frame {
+    Event(TrainEvent),
+    Report(Box<TrainReport>),
+    Error(String),
+}
+
+fn frame_line(kind: &str, key: &str, payload: Json) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(WIRE_VERSION as f64));
+    m.insert("frame".to_string(), Json::Str(kind.to_string()));
+    m.insert(key.to_string(), payload);
+    Json::Obj(m).to_string()
+}
+
+pub fn encode_event(ev: &TrainEvent) -> String {
+    frame_line("event", "event", event_to_json(ev))
+}
+
+pub fn encode_report(r: &TrainReport) -> String {
+    frame_line("report", "report", report_to_json(r))
+}
+
+pub fn encode_error(msg: &str) -> String {
+    frame_line("error", "error", Json::Str(msg.to_string()))
+}
+
+pub fn encode_spec(index: usize, spec: &RunSpec) -> String {
+    frame_line(
+        "spec",
+        "spec",
+        obj(vec![
+            ("index", Json::Num(index as f64)),
+            ("label", Json::Str(spec.label.clone())),
+            ("cfg", spec.cfg.to_json()),
+        ]),
+    )
+}
+
+/// Parse the envelope: version check first, then the frame kind.
+fn open_frame(line: &str) -> Result<(String, Json)> {
+    let j = Json::parse(line).map_err(|e| anyhow!("{e}"))?;
+    let v = field(&j, "v")?
+        .as_f64()
+        .context("wire key 'v' must be a number")?;
+    if v != WIRE_VERSION as f64 {
+        bail!("wire version mismatch: frame is v{v}, this build speaks v{WIRE_VERSION}");
+    }
+    let kind = string(&j, "frame")?;
+    Ok((kind, j))
+}
+
+/// Decode one child->parent line. Schema-checked: any missing key,
+/// wrong type, unknown tag or version mismatch is an `Err` (and the
+/// parent maps it into the failing row's error) — never a panic, the
+/// bytes crossed a process boundary.
+pub fn decode_frame(line: &str) -> Result<Frame> {
+    let (kind, j) = open_frame(line)?;
+    Ok(match kind.as_str() {
+        "event" => Frame::Event(event_from_json(field(&j, "event")?)?),
+        "report" => Frame::Report(Box::new(report_from_json(field(&j, "report")?)?)),
+        "error" => Frame::Error(string(&j, "error")?),
+        other => bail!("unknown frame kind '{other}'"),
+    })
+}
+
+/// Decode the parent->child spec frame.
+pub fn decode_spec(line: &str) -> Result<(usize, RunSpec)> {
+    let (kind, j) = open_frame(line)?;
+    if kind != "spec" {
+        bail!("expected a spec frame, got '{kind}'");
+    }
+    let p = field(&j, "spec")?;
+    Ok((
+        uint(p, "index")?,
+        RunSpec {
+            label: string(p, "label")?,
+            cfg: TrainConfig::from_json(field(p, "cfg")?)?,
+        },
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Child side: `coap worker`
+// ---------------------------------------------------------------------------
+
+/// Every event straight to stdout as a wire frame. Rust's stdout is a
+/// `LineWriter`, so each frame flushes on its newline and the parent
+/// sees events live, in emission order.
+pub struct StdoutWireSink;
+
+impl EventSink for StdoutWireSink {
+    fn event(&self, ev: &TrainEvent) {
+        println!("{}", encode_event(ev));
+    }
+}
+
+/// The hidden `coap worker` subcommand: read one spec frame from stdin,
+/// run it through the ordinary [`Trainer`], stream events + the final
+/// report (or an error frame) back over stdout. Exit status is nonzero
+/// on any failure, so a parent that lost the stream still sees it.
+pub fn worker_main() -> Result<()> {
+    let mut line = String::new();
+    std::io::stdin()
+        .read_line(&mut line)
+        .context("reading the spec frame from stdin")?;
+    let (index, spec) = decode_spec(line.trim_end()).context(
+        "decoding the spec frame (the `coap worker` wire is internal; \
+         drive it through `coap sweep --procs N`)",
+    )?;
+    let run = || -> Result<TrainReport> {
+        let mut tr = Trainer::builder(spec.cfg)
+            .label(&spec.label)
+            .run_index(index)
+            .events(Arc::new(StdoutWireSink))
+            .build()?;
+        tr.run()
+    };
+    match run() {
+        Ok(rep) => {
+            println!("{}", encode_report(&rep));
+            Ok(())
+        }
+        Err(e) => {
+            println!("{}", encode_error(&format!("{e:#}")));
+            Err(e)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parent side: spawn + demultiplex one worker
+// ---------------------------------------------------------------------------
+
+/// Locate the `coap` binary to spawn workers from. The CLI is itself
+/// that binary (`current_exe`); test and bench binaries live in
+/// `target/<profile>/deps/` and examples in `target/<profile>/examples/`,
+/// with the bin one directory up.
+pub fn default_worker_exe() -> Result<PathBuf> {
+    let exe = std::env::current_exe().context("locating current executable")?;
+    if exe.file_stem().is_some_and(|s| s == "coap") {
+        return Ok(exe);
+    }
+    let bin = format!("coap{}", std::env::consts::EXE_SUFFIX);
+    let mut cands = Vec::new();
+    if let Some(dir) = exe.parent() {
+        cands.push(dir.join(&bin));
+        if dir.file_name().is_some_and(|n| n == "deps" || n == "examples") {
+            if let Some(up) = dir.parent() {
+                cands.push(up.join(&bin));
+            }
+        }
+    }
+    for c in &cands {
+        if c.is_file() {
+            return Ok(c.clone());
+        }
+    }
+    bail!(
+        "cannot locate the `coap` worker binary near {} — build it \
+         (`cargo build`) or pin one with Sweep::worker_exe(..)",
+        exe.display()
+    )
+}
+
+/// Run one row in a `coap worker` subprocess: send the spec frame,
+/// forward every event frame to `sink` as it arrives, and return the
+/// final report. Child failure surfaces as, in order of specificity:
+/// its error frame, a malformed/truncated stream, a nonzero exit, or a
+/// clean exit with no report frame.
+pub fn run_worker(
+    exe: &Path,
+    spec: &RunSpec,
+    index: usize,
+    sink: &dyn EventSink,
+) -> Result<TrainReport> {
+    let mut child = Command::new(exe)
+        .arg("worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| format!("spawning worker {}", exe.display()))?;
+    // Send the one spec frame; dropping the handle closes stdin. A dead
+    // child makes this EPIPE — the stream/status checks below own that
+    // diagnosis, so the send result is only consulted as a last resort.
+    let spec_line = encode_spec(index, spec);
+    let send = child
+        .stdin
+        .take()
+        .map(|mut si| writeln!(si, "{spec_line}"));
+    let stdout = child.stdout.take().context("worker stdout not captured")?;
+    let mut report: Option<TrainReport> = None;
+    let mut failure: Option<anyhow::Error> = None;
+    for line in BufReader::new(stdout).lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                failure = Some(anyhow!("reading worker stream: {e}"));
+                break;
+            }
+        };
+        if line.is_empty() {
+            continue;
+        }
+        match decode_frame(&line) {
+            Ok(Frame::Event(ev)) => sink.event(&ev),
+            Ok(Frame::Report(r)) => report = Some(*r),
+            Ok(Frame::Error(msg)) => {
+                failure = Some(anyhow!("worker failed: {msg}"));
+                break;
+            }
+            Err(e) => {
+                failure = Some(anyhow!("malformed frame from worker: {e:#}"));
+                break;
+            }
+        }
+    }
+    if failure.is_some() {
+        // Stop a child we quit listening to; harmless if it already exited.
+        let _ = child.kill();
+    }
+    let status = child.wait().context("waiting for worker")?;
+    if let Some(e) = failure {
+        return Err(e);
+    }
+    if !status.success() {
+        bail!("worker exited with {status} before finishing its row");
+    }
+    if let (None, Some(Err(e))) = (&report, &send) {
+        bail!("worker refused the spec frame: {e}");
+    }
+    report.context("worker stream ended without a report frame (was it killed?)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn ev_step(run: usize) -> TrainEvent {
+        TrainEvent::Step {
+            run,
+            label: "row".into(),
+            step: 3,
+            loss: 1.25,
+            ema: f64::NAN,
+            ms_per_step: 0.5,
+        }
+    }
+
+    fn report() -> TrainReport {
+        TrainReport {
+            label: "COAP".into(),
+            model: "lm_micro".into(),
+            steps: 4,
+            final_train_loss: 1.5,
+            final_eval: EvalPoint {
+                step: 4,
+                loss: 1.0,
+                ppl: std::f64::consts::E,
+                accuracy: Some(0.5),
+                aux: None,
+            },
+            wall: Duration::new(1, 500),
+            fwdbwd_time: Duration::from_millis(12),
+            opt_step_time: Duration::from_micros(7),
+            proj_time: Duration::ZERO,
+            optimizer_bytes: 4096,
+            opt_transient_bytes: 0,
+            param_bytes: 1 << 20,
+            ceu_total: f64::INFINITY,
+            train_losses: vec![(1, 2.0), (4, f64::NAN)],
+            ceu_curve: vec![],
+            evals: vec![EvalPoint::default()],
+        }
+    }
+
+    /// Encoding is injective over the field set, so encode-equality is
+    /// value-equality (events and reports have no PartialEq).
+    #[test]
+    fn event_frames_roundtrip_every_variant() {
+        let evs = [
+            TrainEvent::RunStarted { run: 1, label: "".into(), model: "m".into(), steps: 2 },
+            ev_step(1),
+            TrainEvent::ProjRefresh { run: 0, label: "a".into(), step: 9, ms: 0.25 },
+            TrainEvent::Eval {
+                run: 2,
+                label: "b".into(),
+                eval: EvalPoint { step: 1, loss: 0.5, ppl: 1.6, accuracy: None, aux: Some(3.0) },
+            },
+            TrainEvent::RunFinished {
+                run: 0,
+                label: "c".into(),
+                steps: 2,
+                final_train_loss: f64::NEG_INFINITY,
+                wall_s: 0.125,
+            },
+            TrainEvent::RunFailed {
+                run: 3,
+                label: "d\n\"e".into(),
+                step: 1,
+                error: "boom: at step 1".into(),
+            },
+        ];
+        for ev in &evs {
+            let line = encode_event(ev);
+            match decode_frame(&line).unwrap() {
+                Frame::Event(back) => assert_eq!(encode_event(&back), line, "{line}"),
+                _ => panic!("not an event frame: {line}"),
+            }
+        }
+    }
+
+    #[test]
+    fn report_frame_roundtrips_exactly() {
+        let rep = report();
+        let line = encode_report(&rep);
+        match decode_frame(&line).unwrap() {
+            Frame::Report(back) => {
+                assert_eq!(encode_report(&back), line, "{line}");
+                assert_eq!(back.wall, rep.wall);
+                assert!(back.train_losses[1].1.is_nan());
+                assert!(back.ceu_total.is_infinite());
+            }
+            _ => panic!("not a report frame: {line}"),
+        }
+    }
+
+    #[test]
+    fn spec_frame_roundtrips() {
+        let spec = RunSpec::new("row label", TrainConfig::default());
+        let line = encode_spec(7, &spec);
+        let (index, back) = decode_spec(&line).unwrap();
+        assert_eq!(index, 7);
+        assert_eq!(back.label, "row label");
+        assert_eq!(back.cfg.to_json().to_string(), spec.cfg.to_json().to_string());
+    }
+
+    #[test]
+    fn error_frame_roundtrips() {
+        let line = encode_error("model 'x' not found: try `coap info`");
+        match decode_frame(&line).unwrap() {
+            Frame::Error(msg) => assert!(msg.contains("not found"), "{msg}"),
+            _ => panic!("not an error frame"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_and_malformed_frames_are_rejected() {
+        let good = encode_event(&ev_step(0));
+        // Version bumped: rejected with a version message.
+        let bumped = good.replacen("\"v\":1", "\"v\":2", 1);
+        let err = decode_frame(&bumped).unwrap_err();
+        assert!(format!("{err:#}").contains("version mismatch"), "{err:#}");
+        // Unknown kind / missing envelope keys / not JSON / truncation.
+        assert!(decode_frame(&good.replacen("\"frame\":\"event\"", "\"frame\":\"evnt\"", 1))
+            .is_err());
+        assert!(decode_frame("{\"frame\":\"event\"}").is_err());
+        assert!(decode_frame("not json at all").is_err());
+        for cut in 0..good.len() {
+            assert!(decode_frame(&good[..cut]).is_err(), "cut at {cut} decoded");
+        }
+        // A spec frame is not a child->parent frame.
+        let spec = encode_spec(0, &RunSpec::new("r", TrainConfig::default()));
+        assert!(decode_frame(&spec).is_err());
+        assert!(decode_spec(&good).is_err());
+    }
+}

@@ -3,14 +3,18 @@
 //! Subcommands:
 //!   train       run one training job per config/CLI flags
 //!   sweep       run a named paper table/figure sharded across workers
+//!               (thread workers via --workers, subprocesses via --procs)
 //!   info        summarize the backend's model census
 //!   experiments list the paper tables/figures and how to regenerate them
+//!   worker      (hidden, internal) one sweep row over the stdin/stdout
+//!               wire — spawned by `sweep --procs`, not for direct use
 //!
 //! Examples:
 //!   coap train --model lm_small --optimizer coap --steps 300 --lr 2e-3
 //!   coap train --model ctrl_small --optimizer coap-adafactor \
 //!        --rank-ratio 8 --precision int8 --steps 200
 //!   coap sweep table1 --workers 2 --json out.jsonl
+//!   coap sweep table1 --procs 2
 //!   coap train --backend xla --model lm_tiny   # needs --features xla
 //!   coap info
 
@@ -38,6 +42,9 @@ fn run() -> Result<()> {
     match cmd {
         "train" => train(&args),
         "sweep" => sweep(&args),
+        // Hidden: one sweep row over the coordinator::wire stdin/stdout
+        // protocol. Spawned by `coap sweep --procs N`; internal/unstable.
+        "worker" => coap::coordinator::wire::worker_main(),
         "info" => info(&args),
         "experiments" => experiments(&args),
         _ => {
@@ -99,15 +106,19 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `coap sweep <name> [--workers N] [--steps N] [--json out.jsonl]` —
-/// run one named paper table/figure sharded across a worker pool,
+/// `coap sweep <name> [--workers N | --procs N] [--steps N]
+/// [--json out.jsonl]` — run one named paper table/figure sharded
+/// across a worker pool (in-process threads, or `coap worker`
+/// subprocesses with `--procs`; reports are bit-identical either way),
 /// print the paper-style report table, append the sweep wall-clock +
 /// per-row step-time to the bench-JSON trajectory, and optionally write
 /// the full per-row reports as JSONL.
 fn sweep(args: &Args) -> Result<()> {
     let name = args.positional.get(1).map(|s| s.as_str());
     if args.has("help") || name == Some("help") || name.is_none() {
-        eprintln!("usage: coap sweep <name> [--workers N] [--steps N] [--json out.jsonl]");
+        eprintln!(
+            "usage: coap sweep <name> [--workers N | --procs N] [--steps N] [--json out.jsonl]"
+        );
         eprintln!("names: {}", benchlib::SWEEP_NAMES.join(" "));
         if name.is_none() && !args.has("help") {
             anyhow::bail!("missing sweep name");
@@ -117,7 +128,7 @@ fn sweep(args: &Args) -> Result<()> {
     let name = name.expect("checked above");
     // Rows are defined by the registry; train-level overrides would be
     // silently ignored, so say so instead of recording wrong numbers.
-    const SWEEP_KEYS: &[&str] = &["workers", "steps", "json", "threads", "backend"];
+    const SWEEP_KEYS: &[&str] = &["workers", "procs", "steps", "json", "threads", "backend"];
     for key in args.seen_keys() {
         if SWEEP_KEYS.contains(&key.as_str()) {
             continue;
@@ -142,13 +153,13 @@ fn sweep(args: &Args) -> Result<()> {
     // row's optimizer pools — so the sweep workers parallelize freely
     // instead of contending; explicit --threads (CLI or --config) wins.
     let env = benchlib::shard_env(args, cfg)?;
-    let workers = env.workers;
+    let pool = env.pool_label();
     eprintln!(
-        "sweep {name}: {} rows × {} steps on {} ({} workers, backend={})",
+        "sweep {name}: {} rows × {} steps on {} ({}, backend={})",
         named.specs.len(),
         named.steps,
         named.model,
-        workers,
+        pool,
         env.rt.label()
     );
     let t0 = Instant::now();
@@ -156,10 +167,10 @@ fn sweep(args: &Args) -> Result<()> {
     let sweep_wall = t0.elapsed();
     print_report_table(&named.title, named.model, named.control, &reports);
     println!(
-        "\nsweep wall-clock {:.1}s over {} rows ({} workers)",
+        "\nsweep wall-clock {:.1}s over {} rows ({})",
         sweep_wall.as_secs_f64(),
         reports.len(),
-        workers
+        pool
     );
     // Bench-JSON trajectory (target/bench-json/sweep.jsonl): one record
     // per row, stamped with the sweep-level wall-clock so successive
@@ -167,7 +178,8 @@ fn sweep(args: &Args) -> Result<()> {
     for rep in &reports {
         let mut fields: Vec<(&str, String)> = vec![
             ("sweep", named.name.clone()),
-            ("workers", workers.to_string()),
+            ("workers", env.width().to_string()),
+            ("mode", env.mode.label().to_string()),
             ("sweep_wall_s", format!("{}", sweep_wall.as_secs_f64())),
         ];
         fields.extend(report_jsonl_fields(rep));
@@ -257,11 +269,17 @@ sweep — run a paper table/figure as a sharded multi-run session:
                           bit-identical to serial execution in spec order;
                           rows default to --threads 1 when N > 1 so the
                           workers parallelize freely)
+  --procs N               shard rows across `coap worker` subprocesses
+                          instead (at most N alive at once, each row its
+                          own process + backend; reports bit-identical to
+                          serial and to --workers; same --threads 1 row
+                          default; mutually exclusive with --workers)
   --steps N               steps per row (default: the bench default,
                           env-overridable via COAP_BENCH_STEPS)
   --json out.jsonl        write one schema-checked JSONL record per row
   (the sweep also appends wall-clock + per-row step-time records to
-   target/bench-json/sweep.jsonl; see util::bench::append_json)
+   target/bench-json/sweep.jsonl; see util::bench::append_json. the
+   worker wire is internal/unstable — see rust/README.md)
 
 see also: examples/ (quality drivers) and `cargo bench` (paper tables).",
         names = benchlib::SWEEP_NAMES.join("|")

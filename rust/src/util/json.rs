@@ -1,11 +1,30 @@
 //! Minimal JSON parser + writer (RFC 8259 subset sufficient for the
-//! artifact manifest and metrics dumps; no serde offline).
+//! artifact manifest, metrics dumps and the sweep worker wire; no serde
+//! offline).
 //!
 //! Numbers are stored as f64 — the manifest only carries shapes, ranks
-//! and hyper-parameters, all exactly representable.
+//! and hyper-parameters, all exactly representable. JSON itself has no
+//! non-finite literals, so wire payloads route f64 fields through
+//! [`num_wire`]/[`num_unwire`] (NaN/±inf degrade to tagged strings) and
+//! u64 fields through [`u64_wire`]/[`u64_unwire`] (decimal strings —
+//! f64 can only hold integers exactly up to 2^53).
+//!
+//! The parser is hardened against arbitrary bytes (the worker wire
+//! crosses a process boundary): it returns `Err`, never panics, on any
+//! input — nesting deeper than [`MAX_DEPTH`] is rejected instead of
+//! overflowing the stack, duplicate object keys are rejected instead of
+//! silently last-winning, numeric overflow (`1e999`) is rejected
+//! instead of materializing an unserializable `inf`, and `\u` surrogate
+//! pairs combine while lone surrogates decode to U+FFFD.
 
+use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum array/object nesting the parser accepts. Deep enough for any
+/// of our writers (the wire frames nest 4 levels), shallow enough that
+/// recursive descent cannot overflow the stack on adversarial input.
+pub const MAX_DEPTH: usize = 128;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -33,7 +52,7 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -103,7 +122,10 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // The integer fast path would erase the sign of -0.0
+                // (`-0.0 as i64 == 0`), breaking bit-exact round trips
+                // on the wire; `{}` prints "-0" which parses back.
+                if n.fract() == 0.0 && n.abs() < 1e15 && !(*n == 0.0 && n.is_sign_negative()) {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{}", n));
@@ -152,9 +174,101 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+// ---------------------------------------------------------------------------
+// Wire helpers: exact scalar encodings for cross-process payloads
+// ---------------------------------------------------------------------------
+
+/// Encode one f64 for the wire: finite values stay numeric (the writer
+/// prints the shortest round-tripping decimal), non-finite values —
+/// which JSON has no literal for — become the tagged strings `"NaN"`,
+/// `"inf"`, `"-inf"`. Inverse: [`num_unwire`].
+pub fn num_wire(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Str(format!("{v}"))
+    }
+}
+
+/// Decode a [`num_wire`]-encoded f64. NaN decodes to the canonical
+/// `f64::NAN` bit pattern.
+pub fn num_unwire(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Some(f64::NAN),
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Encode one u64 for the wire as a decimal string: `Json::Num` is an
+/// f64, which holds integers exactly only up to 2^53 — not enough for a
+/// full-range seed. Inverse: [`u64_unwire`].
+pub fn u64_wire(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Decode a [`u64_wire`]-encoded u64. Small exact `Json::Num` integers
+/// are accepted too (hand-written configs).
+pub fn u64_unwire(j: &Json) -> Option<u64> {
+    match j {
+        Json::Str(s) => s.parse().ok(),
+        Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 9.007_199_254_740_992e15 => {
+            Some(*n as u64)
+        }
+        _ => None,
+    }
+}
+
+/// Largest integer f64 represents exactly (2^53) — the bound every
+/// wire integer decoder checks against.
+pub const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0;
+
+// Strict field accessors shared by every wire decoder (config, events,
+// reports — see coordinator::wire), so their semantics cannot drift
+// apart: a missing key or wrong type is an error naming the key, never
+// a default and never a panic.
+
+pub fn wire_field<'a>(j: &'a Json, k: &str) -> Result<&'a Json> {
+    j.get(k).with_context(|| format!("wire frame missing key '{k}'"))
+}
+
+pub fn wire_str(j: &Json, k: &str) -> Result<String> {
+    wire_field(j, k)?
+        .as_str()
+        .map(String::from)
+        .with_context(|| format!("wire key '{k}' must be a string"))
+}
+
+pub fn wire_f64(j: &Json, k: &str) -> Result<f64> {
+    num_unwire(wire_field(j, k)?).with_context(|| format!("wire key '{k}' must be a number"))
+}
+
+pub fn wire_uint(j: &Json, k: &str) -> Result<usize> {
+    let v = wire_field(j, k)?
+        .as_f64()
+        .with_context(|| format!("wire key '{k}' must be an integer"))?;
+    if v.fract() != 0.0 || !(0.0..MAX_SAFE_INT).contains(&v) {
+        bail!("wire key '{k}' must be a non-negative integer, got {v}");
+    }
+    Ok(v as usize)
+}
+
+pub fn wire_bool(j: &Json, k: &str) -> Result<bool> {
+    wire_field(j, k)?
+        .as_bool()
+        .with_context(|| format!("wire key '{k}' must be a bool"))
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current array/object nesting (bounded by [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -214,10 +328,29 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
-        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
-        s.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("bad number"))
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| self.err("bad number"))?;
+        let n: f64 = s.parse().map_err(|_| self.err("bad number"))?;
+        // "1e999" parses to inf — an unserializable value JSON has no
+        // literal for; reject overflow instead of materializing it.
+        if !n.is_finite() {
+            return Err(self.err("number overflows f64"));
+        }
+        Ok(Json::Num(n))
+    }
+
+    /// Read the 4 hex digits of a `\uXXXX` escape. On entry `self.i`
+    /// sits on the `u`; on exit it sits on the last hex digit (the
+    /// string loop's trailing advance steps past it).
+    fn hex_escape(&mut self) -> Result<u32, JsonError> {
+        if self.i + 4 >= self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.i += 4;
+        Ok(cp)
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -242,17 +375,33 @@ impl<'a> Parser<'a> {
                         Some(b'b') => out.push('\u{8}'),
                         Some(b'f') => out.push('\u{c}'),
                         Some(b'u') => {
-                            if self.i + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs unsupported (unused by our writers).
+                            let hi = self.hex_escape()?;
+                            let cp = if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: combine with a
+                                // following \uXXXX low surrogate; a lone
+                                // surrogate decodes to U+FFFD (our
+                                // writers never emit either).
+                                if self.b.get(self.i + 1) == Some(&b'\\')
+                                    && self.b.get(self.i + 2) == Some(&b'u')
+                                {
+                                    let save = self.i;
+                                    self.i += 2;
+                                    let lo = self.hex_escape()?;
+                                    if (0xDC00..0xE000).contains(&lo) {
+                                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                                    } else {
+                                        // Not a pair: rewind so the
+                                        // second escape reparses alone.
+                                        self.i = save;
+                                        0xFFFD
+                                    }
+                                } else {
+                                    0xFFFD
+                                }
+                            } else {
+                                hi
+                            };
                             out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -270,12 +419,25 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Bump the nesting depth on entry to an array/object; recursive
+    /// descent would otherwise overflow the stack (abort, not even a
+    /// catchable panic) on adversarial input like `"[".repeat(100_000)`.
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting deeper than MAX_DEPTH"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -286,6 +448,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -295,10 +458,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -308,12 +473,18 @@ impl<'a> Parser<'a> {
             self.expect(b':')?;
             self.ws();
             let v = self.value()?;
+            // Last-wins would let a hostile wire frame smuggle a second
+            // value past a schema check that saw the first; reject.
+            if m.contains_key(&k) {
+                return Err(self.err(&format!("duplicate key '{k}'")));
+            }
             m.insert(k, v);
             self.ws();
             match self.peek() {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -357,6 +528,134 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let back = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, back);
+    }
+
+    /// Nesting past MAX_DEPTH must return Err — the recursive-descent
+    /// parser would otherwise overflow the stack (an abort, not a
+    /// catchable panic) on arbitrary wire bytes.
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        for open in ["[", "{\"k\":"] {
+            let deep = open.repeat(100_000);
+            let err = Json::parse(&deep).unwrap_err();
+            assert!(err.msg.contains("MAX_DEPTH"), "{err}");
+        }
+        // Exactly at the limit still parses.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&over).is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_are_rejected() {
+        let err = Json::parse(r#"{"a":1,"a":2}"#).unwrap_err();
+        assert!(err.msg.contains("duplicate key 'a'"), "{err}");
+        // Same key at different depths is fine.
+        assert!(Json::parse(r#"{"a":{"a":1}}"#).is_ok());
+    }
+
+    #[test]
+    fn numeric_overflow_is_rejected() {
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        assert!(Json::parse("[1, 1e999]").is_err());
+        // Large-but-finite still parses.
+        assert_eq!(Json::parse("1e308").unwrap(), Json::Num(1e308));
+    }
+
+    #[test]
+    fn surrogate_escapes() {
+        // A valid pair combines into one scalar value (U+1F600).
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1f600}".into())
+        );
+        // Lone high / lone low surrogates decode to U+FFFD, no panic.
+        assert_eq!(Json::parse(r#""\ud800""#).unwrap(), Json::Str("\u{fffd}".into()));
+        assert_eq!(Json::parse(r#""\udc00x""#).unwrap(), Json::Str("\u{fffd}x".into()));
+        // High surrogate followed by a non-surrogate escape: the second
+        // escape survives as its own character.
+        assert_eq!(
+            Json::parse(r#""\ud800A""#).unwrap(),
+            Json::Str("\u{fffd}A".into())
+        );
+        // Truncated escapes error.
+        assert!(Json::parse(r#""\u12"#).is_err());
+        assert!(Json::parse(r#""\ud83d\u"#).is_err());
+    }
+
+    /// The parser must return Err, never panic, on arbitrary bytes —
+    /// a fuzz-ish sweep over truncations and mutations of valid input.
+    #[test]
+    fn arbitrary_bytes_never_panic() {
+        let src = r#"{"a":[1,-2.5e3,"sA😀"],"b":{"n":null,"t":true}}"#;
+        for cut in 0..src.len() {
+            let _ = Json::parse(&src[..cut]);
+        }
+        let mut state = 0x1234_5678_9abc_def0u64;
+        for _ in 0..2000 {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let mut bytes = src.as_bytes().to_vec();
+            let pos = (state as usize) % bytes.len();
+            bytes[pos] = (state >> 32) as u8;
+            if let Ok(s) = std::str::from_utf8(&bytes) {
+                let _ = Json::parse(s);
+            }
+        }
+    }
+
+    #[test]
+    fn negative_zero_survives_write_parse() {
+        let v = Json::Num(-0.0);
+        assert_eq!(v.to_string(), "-0");
+        let back = Json::parse(&v.to_string()).unwrap();
+        match back {
+            Json::Num(n) => assert_eq!(n.to_bits(), (-0.0f64).to_bits()),
+            _ => panic!("not a number"),
+        }
+        // Positive zero keeps the integer fast path.
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+    }
+
+    #[test]
+    fn wire_scalar_helpers_roundtrip() {
+        for v in [0.0, -0.0, 1.5, -1e300, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = num_wire(v);
+            let back = num_unwire(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v}");
+        }
+        assert!(num_unwire(&Json::Str("garbage".into())).is_none());
+        assert!(num_unwire(&Json::Null).is_none());
+        for v in [0u64, 1, u64::MAX, 1 << 53, (1 << 53) + 1] {
+            let j = u64_wire(v);
+            let back = u64_unwire(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(back, v);
+        }
+        assert_eq!(u64_unwire(&Json::Num(42.0)), Some(42));
+        assert!(u64_unwire(&Json::Num(0.5)).is_none());
+        assert!(u64_unwire(&Json::Num(-1.0)).is_none());
+        assert!(u64_unwire(&Json::Str("not a number".into())).is_none());
+    }
+
+    /// The strict wire accessors error by key name on missing keys and
+    /// wrong types, and wire_uint enforces the exact-integer range.
+    #[test]
+    fn wire_accessors_are_strict() {
+        let j = Json::parse(r#"{"s":"x","n":4,"b":true,"f":1.5,"big":9007199254740992}"#)
+            .unwrap();
+        assert_eq!(wire_str(&j, "s").unwrap(), "x");
+        assert_eq!(wire_uint(&j, "n").unwrap(), 4);
+        assert!(wire_bool(&j, "b").unwrap());
+        assert_eq!(wire_f64(&j, "f").unwrap(), 1.5);
+        assert!(wire_str(&j, "n").is_err());
+        assert!(wire_uint(&j, "f").is_err()); // fractional
+        assert!(wire_uint(&j, "big").is_err()); // >= 2^53
+        assert!(wire_bool(&j, "s").is_err());
+        let msg = format!("{:#}", wire_uint(&j, "absent").unwrap_err());
+        assert!(msg.contains("absent"), "{msg}");
     }
 
     /// Property: random JSON trees survive a write->parse round trip.

@@ -1,0 +1,350 @@
+//! Acceptance suite for process-mode sweep execution: for every named
+//! micro sweep, `ExecMode::Process` (subprocess `coap worker` children
+//! over the `coordinator::wire`) must return `TrainReport` rows
+//! **bit-identical** to serial and to thread-sharded execution, with
+//! identical ordered per-run event sequences — the PR-4 thread-sharding
+//! determinism contract lifted across a process boundary. Plus the
+//! failure surface: a child that dies (clean error frame, nonzero exit,
+//! or a truncated stream) becomes the failed spec's error by index,
+//! after in-flight rows drain.
+//!
+//! The worker binary is the real `coap` CLI (CARGO_BIN_EXE_coap), so
+//! this suite also pins the hidden `coap worker` subcommand end to end.
+
+use coap::config::{OptKind, TrainConfig};
+use coap::coordinator::wire::{self, Frame};
+use coap::coordinator::{CollectSink, ExecMode, RunSpec, Sweep, TrainEvent, TrainReport};
+use coap::runtime::{Backend, NativeBackend};
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+
+/// The `coap` binary cargo built for this test run.
+const WORKER_EXE: &str = env!("CARGO_BIN_EXE_coap");
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
+}
+
+fn mk(label: &str, model: &str, opt: OptKind, steps: usize) -> RunSpec {
+    let mut c = TrainConfig::default();
+    c.model = model.into();
+    c.optimizer = opt;
+    c.steps = steps;
+    c.lr = 3e-3;
+    c.t_update = 3;
+    c.lambda = 2;
+    c.eval_every = steps;
+    c.eval_batches = 1;
+    c.log_every = 0;
+    c.track_ceu = true;
+    RunSpec::new(label, c)
+}
+
+/// The named micro sweeps: a spread of models × optimizer families over
+/// the `*_micro` census, grouped the way the mode matrix iterates them.
+/// Covers matrix, conv and vector slots, eval + CEU recording, and both
+/// moment bases.
+fn named_micro_sweeps(steps: usize) -> Vec<(&'static str, Vec<RunSpec>)> {
+    vec![
+        (
+            "lm-micro",
+            vec![
+                mk("coap/lm", "lm_micro", OptKind::Coap, steps),
+                mk("adamw/lm", "lm_micro", OptKind::AdamW, steps),
+            ],
+        ),
+        (
+            "vision-micro",
+            vec![
+                mk("galore/vit", "vit_micro", OptKind::Galore, steps),
+                mk("flora/cnn", "cnn_micro", OptKind::Flora, steps),
+            ],
+        ),
+        (
+            "ctrl-micro",
+            vec![mk("coap-af/ctrl", "ctrl_micro", OptKind::CoapAdafactor, steps)],
+        ),
+    ]
+}
+
+fn micro_sweep(name: &str, steps: usize) -> Vec<RunSpec> {
+    named_micro_sweeps(steps)
+        .into_iter()
+        .find(|(n, _)| *n == name)
+        .expect("known micro sweep")
+        .1
+}
+
+/// Everything deterministic in a report, with floats as raw bits.
+type RowKey = (String, Vec<(usize, u64)>, Vec<(usize, u64)>, Vec<u64>, usize, usize);
+
+fn row_key(r: &TrainReport) -> RowKey {
+    (
+        r.label.clone(),
+        r.train_losses.iter().map(|(s, l)| (*s, l.to_bits())).collect(),
+        r.ceu_curve.iter().map(|(s, c)| (*s, c.to_bits())).collect(),
+        r.evals.iter().map(|e| e.loss.to_bits()).collect(),
+        r.optimizer_bytes,
+        r.param_bytes,
+    )
+}
+
+/// Everything deterministic in an event (wall-clock ms fields excluded),
+/// with floats as raw bits.
+fn event_key(ev: &TrainEvent) -> String {
+    match ev {
+        TrainEvent::RunStarted { run, label, model, steps } => {
+            format!("started {run} '{label}' {model} {steps}")
+        }
+        TrainEvent::Step { run, label, step, loss, ema, .. } => {
+            format!("step {run} '{label}' {step} {:x} {:x}", loss.to_bits(), ema.to_bits())
+        }
+        TrainEvent::ProjRefresh { run, label, step, .. } => {
+            format!("proj {run} '{label}' {step}")
+        }
+        TrainEvent::Eval { run, label, eval } => format!(
+            "eval {run} '{label}' {} {:x} {:x} {:?} {:?}",
+            eval.step,
+            eval.loss.to_bits(),
+            eval.ppl.to_bits(),
+            eval.accuracy.map(f64::to_bits),
+            eval.aux.map(f64::to_bits),
+        ),
+        TrainEvent::RunFinished { run, label, steps, final_train_loss, .. } => {
+            format!("finished {run} '{label}' {steps} {:x}", final_train_loss.to_bits())
+        }
+        TrainEvent::RunFailed { run, label, step, .. } => {
+            format!("failed {run} '{label}' {step}")
+        }
+    }
+}
+
+fn run_mode(name: &str, steps: usize, mode: ExecMode) -> (Vec<TrainReport>, Vec<TrainEvent>) {
+    let rt = backend();
+    let sink = Arc::new(CollectSink::default());
+    let reports = Sweep::new(micro_sweep(name, steps))
+        .mode(mode)
+        .worker_exe(WORKER_EXE)
+        .events(sink.clone())
+        .run(&rt)
+        .unwrap_or_else(|e| panic!("{name} under {mode:?}: {e:#}"));
+    (reports, sink.take())
+}
+
+/// The tentpole contract: for every named micro sweep, process-sharded
+/// execution returns reports bit-identical to serial and to
+/// thread-sharded execution, in spec order, and each run's ordered
+/// event sequence is identical (timing fields aside) across the modes.
+#[test]
+fn process_sweep_matches_serial_and_threads_bitwise() {
+    let steps = 5;
+    for (name, specs) in named_micro_sweeps(steps) {
+        let n = specs.len();
+        let (serial_reports, serial_events) =
+            run_mode(name, steps, ExecMode::Threads { workers: 1 });
+        assert_eq!(serial_reports.len(), n, "{name}");
+        let serial_keys: Vec<RowKey> = serial_reports.iter().map(row_key).collect();
+        let serial_seq: Vec<Vec<String>> = (0..n)
+            .map(|run| {
+                serial_events
+                    .iter()
+                    .filter(|e| e.run() == run)
+                    .map(event_key)
+                    .collect()
+            })
+            .collect();
+        // Sanity: the serial per-run sequence is nonempty and bracketed.
+        for (run, seq) in serial_seq.iter().enumerate() {
+            assert!(seq.len() >= 2, "{name} run {run}: {seq:?}");
+            assert!(seq[0].starts_with("started"), "{name} run {run}");
+            assert!(seq[seq.len() - 1].starts_with("finished"), "{name} run {run}");
+        }
+
+        for mode in [
+            ExecMode::Threads { workers: 2 },
+            ExecMode::Threads { workers: 8 },
+            ExecMode::Process { max_procs: 2 },
+        ] {
+            let (reports, events) = run_mode(name, steps, mode);
+            let keys: Vec<RowKey> = reports.iter().map(row_key).collect();
+            assert_eq!(serial_keys, keys, "{name}: reports drifted under {mode:?}");
+            for run in 0..n {
+                let seq: Vec<String> =
+                    events.iter().filter(|e| e.run() == run).map(event_key).collect();
+                assert_eq!(
+                    serial_seq[run], seq,
+                    "{name} run {run}: event sequence drifted under {mode:?}"
+                );
+            }
+        }
+    }
+}
+
+/// A failing child (unknown model -> clean error frame + nonzero exit)
+/// surfaces as the failed spec's error by index and label, while the
+/// in-flight lower-index row drains to completion.
+#[test]
+fn child_failure_is_spec_indexed_and_inflight_rows_drain() {
+    let rt = backend();
+    let mut specs = micro_sweep("lm-micro", 3);
+    let mut bad = TrainConfig::default();
+    bad.model = "no_such_model".into();
+    bad.steps = 3;
+    specs.insert(1, RunSpec::new("broken-row", bad));
+    let sink = Arc::new(CollectSink::default());
+    let err = Sweep::new(specs)
+        .mode(ExecMode::Process { max_procs: 2 })
+        .worker_exe(WORKER_EXE)
+        .events(sink.clone())
+        .run(&rt)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("sweep row 1"), "error lacks spec index: {msg}");
+    assert!(msg.contains("broken-row"), "error lacks spec label: {msg}");
+
+    // Row 0 was pulled before row 1 (the cursor is monotonic), so it
+    // was in flight when row 1 failed — it must drain: exactly one
+    // RunStarted and one terminal RunFinished, all its steps between.
+    let events = sink.take();
+    let row0: Vec<&TrainEvent> = events.iter().filter(|e| e.run() == 0).collect();
+    assert!(
+        matches!(row0.first(), Some(TrainEvent::RunStarted { .. })),
+        "row 0 did not start: {row0:?}"
+    );
+    assert!(
+        matches!(row0.last(), Some(TrainEvent::RunFinished { .. })),
+        "row 0 did not drain to completion: {row0:?}"
+    );
+    // Every started run reached exactly one terminal event (drained or
+    // failed) — nothing was abandoned mid-flight.
+    let runs: Vec<usize> = events
+        .iter()
+        .filter(|e| matches!(e, TrainEvent::RunStarted { .. }))
+        .map(TrainEvent::run)
+        .collect();
+    for run in runs {
+        let terminals = events
+            .iter()
+            .filter(|e| {
+                e.run() == run
+                    && matches!(
+                        e,
+                        TrainEvent::RunFinished { .. } | TrainEvent::RunFailed { .. }
+                    )
+            })
+            .count();
+        assert_eq!(terminals, 1, "run {run} has {terminals} terminal events");
+    }
+}
+
+/// A child killed before it produces its report frame — simulated by
+/// worker binaries that exit without speaking the wire — surfaces as
+/// the failed spec's error, not a hang, panic or silent success.
+#[test]
+fn killed_child_stream_is_a_spec_indexed_error() {
+    // Exits 0 without a report: the truncated-stream path.
+    let rt = backend();
+    let err = Sweep::new(micro_sweep("lm-micro", 2))
+        .mode(ExecMode::Process { max_procs: 1 })
+        .worker_exe("true")
+        .run(&rt)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("sweep row 0"), "{msg}");
+    assert!(msg.contains("coap/lm"), "{msg}");
+
+    // Exits nonzero without a report: the exit-status path (what a
+    // SIGKILL'd worker reports through wait()).
+    let err = Sweep::new(micro_sweep("lm-micro", 2))
+        .mode(ExecMode::Process { max_procs: 1 })
+        .worker_exe("false")
+        .run(&rt)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("sweep row 0"), "{msg}");
+
+    // A worker binary that doesn't exist: the spawn path.
+    let err = Sweep::new(micro_sweep("lm-micro", 2))
+        .mode(ExecMode::Process { max_procs: 1 })
+        .worker_exe("/nonexistent/coap-worker-binary")
+        .run(&rt)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("sweep row 0") && msg.contains("spawning worker"), "{msg}");
+}
+
+/// Drive `coap worker` by hand: every stdout line must be a
+/// schema-checked wire frame, events first (bracketed Started ->
+/// Finished), the report last, exit status zero.
+#[test]
+fn worker_stdout_is_schema_checked_jsonl() {
+    let spec = mk("coap/lm", "lm_micro", OptKind::Coap, 3);
+    let mut child = Command::new(WORKER_EXE)
+        .arg("worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn coap worker");
+    {
+        let mut si = child.stdin.take().unwrap();
+        writeln!(si, "{}", wire::encode_spec(4, &spec)).unwrap();
+    }
+    let mut frames = Vec::new();
+    for line in BufReader::new(child.stdout.take().unwrap()).lines() {
+        let line = line.unwrap();
+        if line.is_empty() {
+            continue;
+        }
+        frames.push(
+            wire::decode_frame(&line)
+                .unwrap_or_else(|e| panic!("unschematic worker line: {line}: {e:#}")),
+        );
+    }
+    assert!(child.wait().unwrap().success());
+    assert!(frames.len() >= 3, "expected started/finished/report at least");
+    match &frames[0] {
+        Frame::Event(TrainEvent::RunStarted { run, label, .. }) => {
+            assert_eq!(*run, 4, "spec index must ride every event");
+            assert_eq!(&**label, "coap/lm");
+        }
+        _ => panic!("first frame is not RunStarted"),
+    }
+    match &frames[frames.len() - 2] {
+        Frame::Event(TrainEvent::RunFinished { .. }) => {}
+        _ => panic!("penultimate frame is not RunFinished"),
+    }
+    match frames.last().unwrap() {
+        Frame::Report(rep) => assert_eq!(rep.label, "coap/lm"),
+        _ => panic!("last frame is not the report"),
+    }
+}
+
+/// Garbage or version-skewed stdin makes the worker exit nonzero
+/// without emitting a report frame.
+#[test]
+fn worker_rejects_garbage_and_version_skew() {
+    for bad in ["definitely not a frame", "{\"v\":999,\"frame\":\"spec\",\"spec\":{}}"] {
+        let mut child = Command::new(WORKER_EXE)
+            .arg("worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn coap worker");
+        {
+            let mut si = child.stdin.take().unwrap();
+            writeln!(si, "{bad}").unwrap();
+        }
+        let mut out = String::new();
+        use std::io::Read;
+        child.stdout.take().unwrap().read_to_string(&mut out).unwrap();
+        let status = child.wait().unwrap();
+        assert!(!status.success(), "worker accepted: {bad}");
+        assert!(
+            !out.contains("\"frame\":\"report\""),
+            "worker reported on garbage: {out}"
+        );
+    }
+}

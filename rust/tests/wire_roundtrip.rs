@@ -1,0 +1,324 @@
+//! Property suite for the sweep worker wire (`coordinator::wire` +
+//! `TrainConfig::to_json`/`from_json`): generator-driven
+//! `TrainConfig`/`TrainEvent`/`TrainReport` values must survive
+//! encode -> JSONL -> parse -> decode **exactly** — including NaN/±inf
+//! float fields, -0.0, full-range u64 seeds, empty labels, very long
+//! strings and labels full of quotes/newlines/control characters —
+//! plus reject-tests for truncated and version-mismatched frames.
+//!
+//! Equality trick: the encoders are injective over the struct fields
+//! and deterministic (BTreeMap key order, shortest-round-trip float
+//! printing), so `encode(decode(encode(x))) == encode(x)` string
+//! equality IS field-for-field equality — no PartialEq needed on types
+//! that deliberately don't derive it.
+
+use coap::config::{BackendKind, ConvFormat, MomentBase, OptKind, TrainConfig};
+use coap::coordinator::wire::{self, Frame};
+use coap::coordinator::{EvalPoint, RunSpec, TrainEvent, TrainReport};
+use coap::rng::Rng;
+use coap::tensor::Precision;
+use coap::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Generators (seeded coap::rng — the suite is exactly reproducible)
+// ---------------------------------------------------------------------------
+
+fn gen_label(r: &mut Rng) -> String {
+    match r.below(8) {
+        0 => String::new(), // empty labels are legal rows
+        1 => "x".repeat(8192), // max-length-ish stress
+        2 => "quote\" back\\slash / fwd".into(),
+        3 => "newline\n tab\t carriage\r nul\u{0} bell\u{7}".into(),
+        4 => "unicode 😀 λ µ 中文 \u{fffd}".into(),
+        5 => "\"]}{[,:".into(), // JSON metacharacters
+        _ => format!("row-{}", r.below(100_000)),
+    }
+}
+
+fn gen_f64(r: &mut Rng) -> f64 {
+    match r.below(10) {
+        0 => f64::NAN,
+        1 => f64::INFINITY,
+        2 => f64::NEG_INFINITY,
+        3 => 0.0,
+        4 => -0.0,
+        5 => 1e300,
+        6 => (r.next_u64() % 1_000_000) as f64 / 997.0,
+        7 => -((r.next_u64() % 1_000_000) as f64) * 1e12,
+        _ => (r.next_u64() as i64 as f64) * 1e-18,
+    }
+}
+
+fn gen_dur(r: &mut Rng) -> Duration {
+    Duration::new(r.next_u64() % (1 << 40), (r.next_u64() % 1_000_000_000) as u32)
+}
+
+fn gen_eval(r: &mut Rng) -> EvalPoint {
+    EvalPoint {
+        step: r.below(100_000),
+        loss: gen_f64(r),
+        ppl: gen_f64(r),
+        accuracy: if r.below(2) == 0 { Some(gen_f64(r)) } else { None },
+        aux: if r.below(2) == 0 { Some(gen_f64(r)) } else { None },
+    }
+}
+
+fn gen_config(r: &mut Rng) -> TrainConfig {
+    const OPTS: [OptKind; 8] = [
+        OptKind::AdamW,
+        OptKind::Adafactor,
+        OptKind::Coap,
+        OptKind::CoapAdafactor,
+        OptKind::Galore,
+        OptKind::Flora,
+        OptKind::Lora,
+        OptKind::Relora,
+    ];
+    const PRECS: [Precision; 3] = [Precision::F32, Precision::Bf16, Precision::Int8];
+    const FMTS: [ConvFormat; 3] = [ConvFormat::Tucker1, ConvFormat::Tucker2, ConvFormat::Full];
+    let mut c = TrainConfig::default();
+    c.model = gen_label(r);
+    c.backend = if r.below(2) == 0 { BackendKind::Native } else { BackendKind::Xla };
+    c.optimizer = OPTS[r.below(OPTS.len())];
+    c.rank_ratio = gen_f64(r);
+    c.t_update = r.below(1000);
+    c.lambda = r.below(1000);
+    c.lr = gen_f64(r) as f32;
+    c.weight_decay = gen_f64(r) as f32;
+    c.steps = r.below(1_000_000);
+    c.seed = r.next_u64(); // full range: not representable as f64
+    c.state_precision = PRECS[r.below(PRECS.len())];
+    c.eval_every = r.below(10_000);
+    c.eval_batches = r.below(64);
+    c.log_every = r.below(1000);
+    c.track_ceu = r.below(2) == 0;
+    c.threads = r.below(128);
+    c.threads_explicit = r.below(2) == 0;
+    c.artifacts_dir = gen_label(r);
+    c.ablation.use_recalib = r.below(2) == 0;
+    c.ablation.use_pupdate = r.below(2) == 0;
+    c.ablation.mse_term = r.below(2) == 0;
+    c.ablation.cos_term = r.below(2) == 0;
+    c.relora_merge_every = r.below(10_000);
+    c.finetune = r.below(2) == 0;
+    c.galore_interval = r.below(10_000);
+    c.flora_interval = r.below(10_000);
+    c.conv_format = FMTS[r.below(FMTS.len())];
+    c.lowrank_base =
+        if r.below(2) == 0 { MomentBase::Adam } else { MomentBase::Adafactor };
+    c
+}
+
+fn gen_event(r: &mut Rng) -> TrainEvent {
+    let run = r.below(64);
+    let label: Arc<str> = Arc::from(gen_label(r));
+    match r.below(6) {
+        0 => TrainEvent::RunStarted {
+            run,
+            label,
+            model: gen_label(r),
+            steps: r.below(100_000),
+        },
+        1 => TrainEvent::Step {
+            run,
+            label,
+            step: r.below(100_000),
+            loss: gen_f64(r),
+            ema: gen_f64(r),
+            ms_per_step: gen_f64(r),
+        },
+        2 => TrainEvent::ProjRefresh {
+            run,
+            label,
+            step: r.below(100_000),
+            ms: gen_f64(r),
+        },
+        3 => TrainEvent::Eval { run, label, eval: gen_eval(r) },
+        4 => TrainEvent::RunFinished {
+            run,
+            label,
+            steps: r.below(100_000),
+            final_train_loss: gen_f64(r),
+            wall_s: gen_f64(r),
+        },
+        _ => TrainEvent::RunFailed {
+            run,
+            label,
+            step: r.below(100_000),
+            error: gen_label(r),
+        },
+    }
+}
+
+fn gen_report(r: &mut Rng) -> TrainReport {
+    let curve = |r: &mut Rng| -> Vec<(usize, f64)> {
+        (0..r.below(20)).map(|_| (r.below(100_000), gen_f64(r))).collect()
+    };
+    TrainReport {
+        label: gen_label(r),
+        model: gen_label(r),
+        steps: r.below(1_000_000),
+        final_train_loss: gen_f64(r),
+        final_eval: gen_eval(r),
+        wall: gen_dur(r),
+        fwdbwd_time: gen_dur(r),
+        opt_step_time: gen_dur(r),
+        proj_time: gen_dur(r),
+        optimizer_bytes: r.below(1 << 40),
+        opt_transient_bytes: r.below(1 << 30),
+        param_bytes: r.below(1 << 40),
+        ceu_total: gen_f64(r),
+        train_losses: curve(r),
+        ceu_curve: curve(r),
+        evals: (0..r.below(6)).map(|_| gen_eval(r)).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Round trips (~1k generated cases)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_config_wire_roundtrips_exactly() {
+    let mut r = Rng::new(0xC0AF_0001);
+    for case in 0..400 {
+        let cfg = gen_config(&mut r);
+        let wire_text = cfg.to_json().to_string();
+        let parsed = Json::parse(&wire_text)
+            .unwrap_or_else(|e| panic!("case {case}: unparseable {wire_text}: {e}"));
+        let back = TrainConfig::from_json(&parsed)
+            .unwrap_or_else(|e| panic!("case {case}: undecodable {wire_text}: {e:#}"));
+        assert_eq!(back.to_json().to_string(), wire_text, "case {case}");
+        // Spot-check the two encodings with sharp edges.
+        assert_eq!(back.seed, cfg.seed, "case {case}");
+        assert_eq!(back.lr.to_bits(), cfg.lr.to_bits(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_event_frames_roundtrip_exactly() {
+    let mut r = Rng::new(0xC0AF_0002);
+    for case in 0..400 {
+        let ev = gen_event(&mut r);
+        let line = wire::encode_event(&ev);
+        assert!(!line.contains('\n'), "case {case}: frame spans lines: {line}");
+        match wire::decode_frame(&line) {
+            Ok(Frame::Event(back)) => {
+                assert_eq!(wire::encode_event(&back), line, "case {case}")
+            }
+            other => panic!(
+                "case {case}: not an event frame ({}): {line}",
+                match other {
+                    Ok(_) => "wrong kind".to_string(),
+                    Err(e) => format!("{e:#}"),
+                }
+            ),
+        }
+    }
+}
+
+#[test]
+fn prop_report_and_spec_frames_roundtrip_exactly() {
+    let mut r = Rng::new(0xC0AF_0003);
+    for case in 0..200 {
+        let rep = gen_report(&mut r);
+        let line = wire::encode_report(&rep);
+        assert!(!line.contains('\n'), "case {case}: frame spans lines");
+        match wire::decode_frame(&line) {
+            Ok(Frame::Report(back)) => {
+                assert_eq!(wire::encode_report(&back), line, "case {case}");
+                assert_eq!(back.wall, rep.wall, "case {case}");
+            }
+            _ => panic!("case {case}: not a report frame: {line}"),
+        }
+
+        let spec = RunSpec { label: gen_label(&mut r), cfg: gen_config(&mut r) };
+        let index = r.below(4096);
+        let (bi, bspec) = wire::decode_spec(&wire::encode_spec(index, &spec))
+            .unwrap_or_else(|e| panic!("case {case}: spec undecodable: {e:#}"));
+        assert_eq!(bi, index, "case {case}");
+        assert_eq!(bspec.label, spec.label, "case {case}");
+        assert_eq!(
+            bspec.cfg.to_json().to_string(),
+            spec.cfg.to_json().to_string(),
+            "case {case}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reject tests: truncation, version skew, cross-kind confusion
+// ---------------------------------------------------------------------------
+
+/// Every strict prefix of a frame must decode to Err — never Ok, never
+/// a panic (a killed child truncates its last line exactly like this).
+#[test]
+fn truncated_frames_are_rejected() {
+    let mut r = Rng::new(0xC0AF_0004);
+    let lines = [
+        wire::encode_event(&gen_event(&mut r)),
+        wire::encode_report(&gen_report(&mut r)),
+        wire::encode_error("boom at step 3"),
+    ];
+    for line in &lines {
+        for cut in 0..line.len() {
+            if !line.is_char_boundary(cut) {
+                continue;
+            }
+            assert!(
+                wire::decode_frame(&line[..cut]).is_err(),
+                "prefix of len {cut} decoded: {}",
+                &line[..cut]
+            );
+        }
+    }
+    let spec_line = wire::encode_spec(0, &RunSpec::new("r", TrainConfig::default()));
+    for cut in 0..spec_line.len() {
+        if !spec_line.is_char_boundary(cut) {
+            continue;
+        }
+        assert!(wire::decode_spec(&spec_line[..cut]).is_err(), "cut {cut}");
+    }
+}
+
+#[test]
+fn version_mismatched_frames_are_rejected() {
+    let ev = TrainEvent::Step {
+        run: 0,
+        label: "r".into(),
+        step: 1,
+        loss: 1.0,
+        ema: 1.0,
+        ms_per_step: 1.0,
+    };
+    let good = wire::encode_event(&ev);
+    assert!(wire::decode_frame(&good).is_ok());
+    for v in ["0", "2", "999", "\"1\"", "null"] {
+        let skewed = good.replacen("\"v\":1", &format!("\"v\":{v}"), 1);
+        assert_ne!(skewed, good, "replacement failed for v={v}");
+        let err = wire::decode_frame(&skewed).unwrap_err();
+        let msg = format!("{err:#}");
+        // A number that isn't WIRE_VERSION names the mismatch; a
+        // non-number fails the envelope type check.
+        assert!(
+            msg.contains("version mismatch") || msg.contains("'v'"),
+            "v={v}: {msg}"
+        );
+    }
+}
+
+#[test]
+fn cross_kind_frames_are_rejected() {
+    let spec_line = wire::encode_spec(3, &RunSpec::new("r", TrainConfig::default()));
+    // A spec frame is parent->child only.
+    assert!(wire::decode_frame(&spec_line).is_err());
+    // Child->parent frames are not specs.
+    let err_line = wire::encode_error("x");
+    assert!(wire::decode_spec(&err_line).is_err());
+    // Unknown kinds and non-object lines fail.
+    assert!(wire::decode_frame("{\"v\":1,\"frame\":\"telemetry\"}").is_err());
+    assert!(wire::decode_frame("[1,2,3]").is_err());
+    assert!(wire::decode_frame("").is_err());
+}
