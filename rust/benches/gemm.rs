@@ -2,10 +2,14 @@
 //! (`tensor::linalg`) vs the pre-refactor naive loop, on weight shapes
 //! drawn from the model zoo census (`model/zoo.rs`) plus the 1024^3
 //! acceptance case. Rows land in the bench-JSON trajectory
-//! (`target/bench-json/gemm.jsonl`) so the speedup is recorded per run.
+//! (`target/bench-json/gemm.jsonl`) so the speedup is recorded per run;
+//! every row tags the dispatched microkernel set (`kernel_isa`) and the
+//! B-operand storage (`operand_dtype`), and the 1024^3 case additionally
+//! emits bf16- and int8-operand rows through the fused low-precision
+//! panel packers.
 
 use coap::rng::Rng;
-use coap::tensor::linalg;
+use coap::tensor::{bf16, linalg, quant};
 use coap::util::bench::{append_json, print_table, Bench};
 use coap::util::threadpool::ThreadPool;
 use std::time::Duration;
@@ -71,6 +75,8 @@ fn main() {
                 ("m", m.to_string()),
                 ("k", k.to_string()),
                 ("n", n.to_string()),
+                ("kernel_isa", linalg::kernel_isa().to_string()),
+                ("operand_dtype", "f32".to_string()),
                 ("naive_ms", format!("{:.4}", s_naive.mean_ms())),
                 ("gemm_nn_ms", format!("{:.4}", s_nn.mean_ms())),
                 ("speedup_vs_naive", format!("{speedup:.3}")),
@@ -81,6 +87,66 @@ fn main() {
                 ("gemm_nt_ms", format!("{:.4}", s_nt.mean_ms())),
             ],
         );
+        // Acceptance case also runs with low-precision B operands: the
+        // bf16/int8 panels dequantize inside `pack_b` — no full-size f32
+        // materialization of B — so the rows measure the fused path.
+        if (m, k, n) == (1024, 1024, 1024) {
+            let mut b16 = vec![0u16; b.len()];
+            bf16::encode(&b, &mut b16);
+            let s_bf16 = bench.run(&format!("gemm_nn_bf16 {m}x{k}x{n}"), || {
+                linalg::gemm_nn_bf16_into(
+                    None,
+                    std::hint::black_box(&mut out),
+                    &a,
+                    &b16,
+                    m,
+                    k,
+                    n,
+                );
+            });
+            let bq = quant::quantize(&b);
+            let s_q8 = bench.run(&format!("gemm_nn_q8 {m}x{k}x{n}"), || {
+                linalg::gemm_nn_q8_into(
+                    None,
+                    std::hint::black_box(&mut out),
+                    &a,
+                    &bq,
+                    m,
+                    k,
+                    n,
+                );
+            });
+            for (dtype, stat) in [("bf16", &s_bf16), ("int8", &s_q8)] {
+                rows.push(vec![
+                    format!("{label} B={dtype}"),
+                    format!("{m}x{k}x{n}"),
+                    format!("{:.2}", s_naive.mean_ms()),
+                    format!("{:.2}", stat.mean_ms()),
+                    format!("{:.2}x", s_naive.mean_ms() / stat.mean_ms()),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ]);
+                append_json(
+                    "gemm",
+                    &[
+                        ("case", format!("{label} B={dtype}")),
+                        ("m", m.to_string()),
+                        ("k", k.to_string()),
+                        ("n", n.to_string()),
+                        ("kernel_isa", linalg::kernel_isa().to_string()),
+                        ("operand_dtype", dtype.to_string()),
+                        ("naive_ms", format!("{:.4}", s_naive.mean_ms())),
+                        ("gemm_nn_ms", format!("{:.4}", stat.mean_ms())),
+                        (
+                            "speedup_vs_naive",
+                            format!("{:.3}", s_naive.mean_ms() / stat.mean_ms()),
+                        ),
+                    ],
+                );
+            }
+        }
     }
     print_table(
         "Blocked/SIMD GEMM core vs pre-refactor naive loop (tensor::linalg)",

@@ -1,12 +1,16 @@
 //! §3.3 claim: COAP's occasional low-cost SVD (Eqn 7) is ~20x cheaper
 //! than GaLore's full SVD, and the Eqn-6 SGD update is cheaper still.
 //! Benchmarks the three projection-refresh executables across the real
-//! weight shapes of the LM models.
+//! weight shapes of the LM models, plus the Eqn-6 update with the first
+//! moment held at bf16/int8 storage precision (`Backend::exec_pupdate`
+//! feeding compressed panels straight into the mixed-precision GEMMs).
+//! Every bench-JSONL row tags `kernel_isa` and `operand_dtype`.
 
 use coap::config::TrainConfig;
+use coap::optim::StateBuf;
 use coap::rng::Rng;
 use coap::runtime::{names, open_backend, Backend};
-use coap::tensor::Tensor;
+use coap::tensor::{linalg, Precision, Tensor};
 use coap::util::bench::{append_json, print_table, Bench};
 
 fn main() -> anyhow::Result<()> {
@@ -45,34 +49,54 @@ fn main() -> anyhow::Result<()> {
         let s_pup = bench.run(&pup_name, || {
             rt.exec(&pup_name, &[&p, &g, &mom]).unwrap();
         });
+        // Eqn-6 with the moment at storage precision: the compressed
+        // operand is dequantized panel-by-panel inside GEMM packing.
+        let bench_compressed = |prec: Precision, tag: &str| {
+            let mut st = StateBuf::zeros(&[mb, r], prec);
+            st.store(&mom);
+            bench.run(&format!("{pup_name} m={tag}"), || {
+                rt.exec_pupdate(&pup_name, &p, &g, st.as_mat(), (mb, r)).unwrap();
+            })
+        };
+        let s_pup_bf16 = bench_compressed(Precision::Bf16, "bf16");
+        let s_pup_q8 = bench_compressed(Precision::Int8, "int8");
         rows.push(vec![
             format!("{m}x{n} r={r}"),
             format!("{:.2}", s_svd.mean_ms()),
             format!("{:.2}", s_rec.mean_ms()),
             format!("{:.2}", s_pup.mean_ms()),
+            format!("{:.2}", s_pup_bf16.mean_ms()),
+            format!("{:.2}", s_pup_q8.mean_ms()),
             format!("{:.1}x", s_svd.mean_ms() / s_rec.mean_ms()),
             format!("{:.1}x", s_svd.mean_ms() / s_pup.mean_ms()),
         ]);
         // Record the trajectory so before/after kernel-layer speedups
-        // are preserved across runs (target/bench-json/).
-        append_json(
-            "projection_cost",
-            &[
-                ("case", format!("{m}x{n} r={r}")),
-                ("backend", rt.label().to_string()),
-                ("galore_svd_ms", format!("{:.4}", s_svd.mean_ms())),
-                ("recalib_ms", format!("{:.4}", s_rec.mean_ms())),
-                ("pupdate_ms", format!("{:.4}", s_pup.mean_ms())),
-                ("svd_over_recalib", format!("{:.3}", s_svd.mean_ms() / s_rec.mean_ms())),
-                ("svd_over_pupdate", format!("{:.3}", s_svd.mean_ms() / s_pup.mean_ms())),
-            ],
-        );
+        // are preserved across runs (target/bench-json/). One row per
+        // moment dtype, all tagged with the dispatched microkernel set.
+        for (dtype, stat) in
+            [("f32", &s_pup), ("bf16", &s_pup_bf16), ("int8", &s_pup_q8)]
+        {
+            append_json(
+                "projection_cost",
+                &[
+                    ("case", format!("{m}x{n} r={r}")),
+                    ("backend", rt.label().to_string()),
+                    ("kernel_isa", linalg::kernel_isa().to_string()),
+                    ("operand_dtype", dtype.to_string()),
+                    ("galore_svd_ms", format!("{:.4}", s_svd.mean_ms())),
+                    ("recalib_ms", format!("{:.4}", s_rec.mean_ms())),
+                    ("pupdate_ms", format!("{:.4}", stat.mean_ms())),
+                    ("svd_over_recalib", format!("{:.3}", s_svd.mean_ms() / s_rec.mean_ms())),
+                    ("svd_over_pupdate", format!("{:.3}", s_svd.mean_ms() / stat.mean_ms())),
+                ],
+            );
+        }
     }
     print_table(
         "Projection refresh cost (paper §3.3: low-cost SVD ~20x cheaper than full SVD)",
         &[
             "shape", "GaLore SVD (ms)", "Eqn7 recalib (ms)", "Eqn6 update (ms)",
-            "SVD/recalib", "SVD/Eqn6",
+            "Eqn6 m=bf16 (ms)", "Eqn6 m=int8 (ms)", "SVD/recalib", "SVD/Eqn6",
         ],
         &rows,
     );

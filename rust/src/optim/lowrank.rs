@@ -65,9 +65,11 @@ impl States {
         }
     }
 
-    /// Bytes `loaded()`-materializing the first moment costs (the
-    /// projection-refresh read path) — zero for f32, full f32 copy for
-    /// compressed storage.
+    /// Bytes `loaded()`-materializing the first moment costs — zero for
+    /// f32, full f32 copy for compressed storage. Only the conv Tucker-2
+    /// refresh and the non-fused (round-trip) matrix refresh still pay
+    /// this; the fused matrix P-update reads the moment at storage
+    /// precision through [`crate::runtime::Backend::exec_pupdate`].
     fn moment_transient_bytes(&self) -> usize {
         match self {
             States::Adam { m, .. } | States::Factor { m, .. } => m.transient_bytes(false),
@@ -297,12 +299,17 @@ fn refresh_matrix(
             *p = Some(out.into_iter().next().unwrap());
         }
         ProjAction::PUpdate => {
+            // The moment feeds the Eqn-6 GEMMs read-only at storage
+            // precision: no f32 materialization here (the kernel-layer
+            // packers dequantize panel-by-panel) and no write-back (a
+            // requantize of unchanged int8 state is not idempotent).
             let ml = match st {
-                States::Adam { m, .. } => m.loaded(),
-                States::Factor { m, .. } => m.loaded(),
+                States::Adam { m, .. } => m.as_mat(),
+                States::Factor { m, .. } => m.as_mat(),
             };
             let name = names::matrix_proj("pupdate", rows, cols, rank);
-            let out = rt.exec(&name, &[p.as_ref().unwrap(), g2, &ml])?;
+            let mdims = (rows.max(cols), rank);
+            let out = rt.exec_pupdate(&name, p.as_ref().unwrap(), g2, ml, mdims)?;
             *p = Some(out.into_iter().next().unwrap());
         }
     }
@@ -584,10 +591,12 @@ impl Optimizer for LowRank {
 
     fn state_transient_bytes(&self, fused: bool) -> usize {
         // COAP's Eqn-6 refresh feeds the first moment into the P-update
-        // graph via `loaded()` — a full materialization of compressed m
-        // on refresh steps, regardless of step-kernel fusion. The peak
-        // is the max over both step kinds (upper bound: full-Tucker conv
-        // slots skip the P-update but are counted as if they didn't).
+        // graph. On fused backends the matrix path hands the moment to
+        // the kernel layer at storage precision ([`Backend::exec_pupdate`]
+        // dequantizes panel-by-panel inside GEMM packing), so the refresh
+        // adds no transient there; the round-trip path and the conv
+        // Tucker-2 refresh still `loaded()`-materialize a full f32 copy.
+        // The peak is the max over both step kinds.
         let refresh_reads_moment =
             matches!(self.policy, Policy::Coap(s) if s.use_pupdate);
         let worst = self
@@ -595,7 +604,16 @@ impl Optimizer for LowRank {
             .iter()
             .map(|s| match s {
                 Slot::Vector { .. } => 0,
-                Slot::Matrix { st, .. } | Slot::Conv { st, .. } => {
+                Slot::Matrix { st, .. } => {
+                    let step = st.transient_bytes(fused);
+                    let refresh = if refresh_reads_moment && !fused {
+                        st.moment_transient_bytes()
+                    } else {
+                        0
+                    };
+                    step.max(refresh)
+                }
+                Slot::Conv { st, .. } => {
                     let step = st.transient_bytes(fused);
                     let refresh = if refresh_reads_moment {
                         st.moment_transient_bytes()

@@ -23,7 +23,7 @@ pub mod scheduler;
 use crate::config::{OptKind, TrainConfig};
 use crate::runtime::{Backend, ModelInfo};
 use crate::tensor::state::StateView;
-use crate::tensor::{quant, Precision, Tensor};
+use crate::tensor::{linalg, quant, Precision, Tensor};
 use anyhow::Result;
 use std::time::Duration;
 
@@ -179,6 +179,19 @@ impl StateBuf {
             StateBuf::F32(t) => t.numel(),
             StateBuf::Bf16 { data, .. } => data.len(),
             StateBuf::Int8 { q, .. } => q.len,
+        }
+    }
+
+    /// Read-only GEMM operand view at storage precision. The projection
+    /// refreshes feed the stored moment straight into the kernel
+    /// layer's mixed-precision GEMMs (via [`Backend::exec_pupdate`]) —
+    /// compressed state is dequantized panel-by-panel inside the GEMM
+    /// packers instead of materializing a full f32 copy here.
+    pub fn as_mat(&self) -> linalg::MatRef<'_> {
+        match self {
+            StateBuf::F32(t) => linalg::MatRef::F32(t.f32s()),
+            StateBuf::Bf16 { data, .. } => linalg::MatRef::Bf16(data),
+            StateBuf::Int8 { q, .. } => linalg::MatRef::Q8(q),
         }
     }
 

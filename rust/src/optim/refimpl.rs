@@ -310,13 +310,33 @@ pub fn eqn6_objective(p: &Tensor, g: &Tensor, m_proj: &Tensor) -> f64 {
 
 /// Eqn-6 SGD P-update oracle (mirrors linalg.pupdate_sgd).
 ///
+/// Thin wrapper over [`pupdate_sgd_mat`] for an f32 moment tensor — the
+/// form the graph-input path (`Backend::exec`) and the oracle tests use.
+pub fn pupdate_sgd(p: &Tensor, g: &Tensor, m_proj: &Tensor, iters: usize, lr: f32) -> Tensor {
+    pupdate_sgd_mat(p, g, linalg::MatRef::F32(m_proj.f32s()), iters, lr)
+}
+
+/// Eqn-6 SGD P-update core with the first moment as a read-only
+/// mixed-precision GEMM operand (`mp` is (m, r) row-major at any
+/// storage precision). The moment appears only inside two contractions
+/// (`M·Pᵀ` and `Aᵀ·M`), so a bf16/int8-stored moment is dequantized
+/// panel-by-panel inside the GEMM packers — never materialized to a
+/// full f32 buffer. Bit-identical to dequantize-then-[`pupdate_sgd`]
+/// (the kernel layer's packing-decode contract).
+///
 /// All contractions run on the shared GEMM core's TN/NT variants, so no
 /// explicit transposes (or their copies) are materialized per iteration.
-pub fn pupdate_sgd(p: &Tensor, g: &Tensor, m_proj: &Tensor, iters: usize, lr: f32) -> Tensor {
+pub fn pupdate_sgd_mat(
+    p: &Tensor,
+    g: &Tensor,
+    mp: linalg::MatRef<'_>,
+    iters: usize,
+    lr: f32,
+) -> Tensor {
     let (m, n) = (g.dims()[0], g.dims()[1]);
     let r = p.dims()[1];
     let gs = g.f32s();
-    let mp = m_proj.f32s(); // (m, r)
+    assert_eq!(mp.len(), m * r, "pupdate: moment is not {m}x{r}");
     let mut pn = p.f32s().to_vec(); // (n, r)
     for _ in 0..iters {
         let gp = linalg::gemm_nn(None, gs, &pn, m, n, r); // G·P (m, r)
@@ -333,7 +353,9 @@ pub fn pupdate_sgd(p: &Tensor, g: &Tensor, m_proj: &Tensor, iters: usize, lr: f3
         let ghp = linalg::gemm_nn(None, &ghat, &pn, m, n, r); // Ghat·P (m, r)
         let term3 = linalg::gemm_tn(None, gs, &ghp, m, n, r);
         // CosSim pieces (row-wise)
-        let mhat = linalg::gemm_nt(None, mp, &pn, m, r, n); // M·Pᵀ (m, n)
+        // M·Pᵀ (m, n) — mixed-precision A operand, transposed f32 B.
+        let mhat =
+            linalg::gemm_mixed(None, mp, false, linalg::MatRef::F32(&pn), true, m, r, n);
         let mut a = vec![0.0f32; m * n];
         let mut cos_sum = 0.0f64;
         const CEPS: f32 = 1e-8; // matches kernels/ref.py COS_EPS
@@ -350,7 +372,8 @@ pub fn pupdate_sgd(p: &Tensor, g: &Tensor, m_proj: &Tensor, iters: usize, lr: f3
             }
         }
         let cos = cos_sum / m as f64;
-        let dcos = linalg::gemm_tn(None, &a, mp, m, n, r); // Aᵀ·M (n, r)
+        // Aᵀ·M (n, r) — mixed-precision B operand.
+        let dcos = linalg::gemm_mixed(None, linalg::MatRef::F32(&a), true, mp, false, n, m, r);
         let scale_mse = 2.0 / (m * n) as f32;
         for i in 0..n * r {
             let dmse = scale_mse * (term1[i] - 2.0 * term2[i] + term3[i]);

@@ -33,6 +33,7 @@ pub use native::NativeBackend;
 pub use xla::Runtime;
 
 use crate::config::{BackendKind, TrainConfig};
+use crate::tensor::linalg::MatRef;
 use crate::tensor::state::StateView;
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
@@ -118,6 +119,31 @@ pub trait Backend: Send + Sync {
     /// accounting (`Optimizer::state_transient_bytes`).
     fn fuses_states(&self) -> bool {
         false
+    }
+
+    /// Execute the Eqn-6 P-update graph `name` with the first moment
+    /// passed **read-only at storage precision** (`moment` is `mdims.0 ×
+    /// mdims.1` row-major). Unlike [`Backend::exec_with_state`], the
+    /// moment is an input-only GEMM operand here — it must NOT be
+    /// written back, because a requantize of an unchanged int8 state is
+    /// not bit-idempotent (the scale is recomputed from decoded values).
+    ///
+    /// The default materializes the moment to f32 and runs
+    /// [`Backend::exec`] — exactly the pre-refactor behaviour. The
+    /// native backend overrides it to feed the compressed moment
+    /// straight into the kernel layer's mixed-precision GEMMs
+    /// (dequantized panel-by-panel inside packing, no full f32 copy).
+    /// Returns the graph's single output `[p']`.
+    fn exec_pupdate(
+        &self,
+        name: &str,
+        p: &Tensor,
+        g2: &Tensor,
+        moment: MatRef<'_>,
+        mdims: (usize, usize),
+    ) -> Result<Vec<Tensor>> {
+        let ml = Tensor::from_f32(&[mdims.0, mdims.1], moment.to_f32_vec());
+        self.exec(name, &[p, g2, &ml])
     }
 
     /// Model census entry by name.

@@ -14,6 +14,7 @@
 use super::{Backend, ExperimentInfo, ModelInfo};
 use crate::model::{nativenet, zoo};
 use crate::optim::refimpl;
+use crate::tensor::linalg::MatRef;
 use crate::tensor::state::StateView;
 use crate::tensor::{linalg, Tensor};
 use crate::util::threadpool::ThreadPool;
@@ -223,6 +224,58 @@ impl Backend for NativeBackend {
 
     fn fuses_states(&self) -> bool {
         true
+    }
+
+    /// Mixed-precision Eqn-6 P-update: the moment stays at storage
+    /// precision and feeds the kernel layer's GEMMs directly (the
+    /// packers dequantize it panel-by-panel). Read-only by contract —
+    /// no write-back, so a compressed moment is never re-quantized.
+    /// Bit-identical to the default (materialize + [`Backend::exec`])
+    /// because packing-decode applies the exact dequantization math.
+    fn exec_pupdate(
+        &self,
+        name: &str,
+        p: &Tensor,
+        g2: &Tensor,
+        moment: MatRef<'_>,
+        mdims: (usize, usize),
+    ) -> Result<Vec<Tensor>> {
+        let Some((tpl, spec_str)) = name.split_once("__") else {
+            bail!("'{name}' is not a minted graph name");
+        };
+        if tpl != "pupdate" {
+            bail!("graph '{name}': exec_pupdate only accepts pupdate graphs");
+        }
+        let spec = parse_spec(spec_str)
+            .ok_or_else(|| anyhow!("graph '{name}': unparseable shape spec"))?;
+        let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+        let (m, n, mb, nb) = frame(&spec.dims);
+        expect_numel(name, "g", g2, m * n)?;
+        expect_numel(name, "p", p, nb * r)?;
+        if mdims != (mb, r) || moment.len() != mb * r {
+            bail!(
+                "graph '{name}' input m_proj: {} elements as {}x{}, expected {mb}x{r}",
+                moment.len(),
+                mdims.0,
+                mdims.1
+            );
+        }
+        // Normalized frame: (max, min) with P on the small side.
+        let gn = if m < n {
+            Tensor::from_f32(&[mb, nb], linalg::transpose(g2.f32s(), m, n))
+        } else {
+            Tensor::from_f32(&[m, n], g2.f32s().to_vec())
+        };
+        let pt = Tensor::from_f32(&[nb, r], p.f32s().to_vec());
+        let p_new =
+            refimpl::pupdate_sgd_mat(&pt, &gn, moment, refimpl::PUPDATE_ITERS, refimpl::PUPDATE_LR);
+        *self
+            .exec_counts
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        Ok(vec![p_new])
     }
 
     fn model(&self, name: &str) -> Result<ModelInfo> {

@@ -1,49 +1,268 @@
-//! The crate's single f32 GEMM core — cache-blocked, register-tiled,
-//! autovectorization-friendly, optionally parallel over the scoped
+//! The crate's single GEMM core — cache-blocked, register-tiled,
+//! multi-ISA, multi-precision, optionally parallel over the scoped
 //! threadpool.
 //!
-//! Every matmul in the crate funnels through [`gemm_nn_into`]:
+//! Every matmul in the crate funnels through [`gemm_mixed_into`]:
 //!
 //! - `NN`  `C = A·B`     — [`gemm_nn`] / [`gemm_nn_into`]
 //! - `TN`  `C = Aᵀ·B`    — [`gemm_tn`] (the `dW = Xᵀ·dY` pattern)
 //! - `NT`  `C = A·Bᵀ`    — [`gemm_nt`] (the `dX = dY·Wᵀ` pattern)
 //!
-//! The TN/NT variants pack the transposed operand once (into a
-//! thread-local scratch buffer) and run the same NN core, so there is
-//! exactly one inner kernel to optimize; `*_into` variants write into
-//! caller-owned buffers to kill per-call allocations on hot paths.
+//! with `_bf16` / `_q8` variants whose second operand is stored as bf16
+//! words / block-quantized int8 ([`crate::tensor::quant::QuantizedBuf`]).
+//! Transposed and compressed operands are decoded *inside the panel
+//! packers*: a TN/NT call gathers the transposed operand strip-by-strip
+//! and a bf16/int8 call dequantizes one `KC`×`NC` panel at a time into
+//! the same thread-local pack scratch the f32 path uses. No entry point
+//! ever materializes a full-size f32 copy of a transposed or compressed
+//! operand.
 //!
-//! Blocking scheme (BLIS-style, safe Rust only):
+//! ## ISA dispatch
 //!
-//! - `NC`×`KC` panels of B and `MC`×`KC` blocks of A are packed into
-//!   thread-local scratch (contiguous, L1/L2-resident);
-//! - the microkernel computes an `MR`×`NR` tile with a fixed-size
-//!   `[[f32; NR]; MR]` accumulator — fixed trip counts on the inner
-//!   loops so LLVM autovectorizes them into full-width f32 lanes (no
-//!   unstable SIMD features needed).
+//! The microkernel, packers, and level-1 kernels live behind a
+//! [`KernelSet`] of fn pointers selected once at startup:
 //!
-//! Determinism: each output element is accumulated in ascending-`k`
-//! order, grouped by `KC` block — an order that does not depend on how
-//! rows are split across workers. [`gemm_nn_into`] therefore returns
-//! bit-identical results for any thread count (row slabs are multiples
-//! of `MR`, so strip alignment is invariant too); the PR-1
-//! thread-count-invariance contract extends through the kernel layer.
+//! | arch     | detection                          | set      | tile    |
+//! |----------|------------------------------------|----------|---------|
+//! | x86_64   | `is_x86_feature_detected!("avx2")` (+fma) | `avx2` | 4×24 |
+//! | aarch64  | NEON (baseline)                    | `neon`   | 4×24    |
+//! | anything | always available                   | `scalar` | 4×16    |
+//!
+//! `COAP_FORCE_SCALAR=1` (read once) or [`force_scalar`] pins the scalar
+//! set — the CI scalar leg and the parity tests use it to prove the
+//! fallback never rots. [`kernel_isa`] reports the active set for
+//! bench-JSONL rows.
+//!
+//! ## Determinism
+//!
+//! Each output element is accumulated in ascending-`k` order, grouped by
+//! `KC` block, in one f32 accumulator — an order that depends on neither
+//! the register-tile width nor how rows are split across workers. The
+//! SIMD kernels use *unfused* multiply-then-add (no FMA contraction), so
+//! every kernel set produces bit-identical results: scalar vs AVX2 vs
+//! NEON, serial vs any pool worker count — the PR-1
+//! thread-count-invariance contract extends through the ISA layer.
+//!
+//! ## Scratch
+//!
+//! Pack buffers are thread-local and capped: after each GEMM (and each
+//! [`with_pack_scratch`] borrow) capacities above
+//! [`SCRATCH_RETAIN_BYTES`] are released back to the allocator, and the
+//! high-water mark is tracked in [`peak_scratch_bytes`] for
+//! `MemoryBreakdown::opt_transient`.
 
+use crate::tensor::bf16::bf16_to_f32;
+use crate::tensor::quant::QuantizedBuf;
 use crate::util::threadpool::ThreadPool;
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// Microkernel rows (register-tile height).
 pub const MR: usize = 4;
-/// Microkernel columns (register-tile width, in f32 lanes).
+/// Scalar microkernel columns (register-tile width, in f32 lanes).
 pub const NR: usize = 16;
+/// Widened register-tile width used by the SIMD microkernels (3×8 f32
+/// lanes on AVX2, 6×4 on NEON) — also the edge-tile accumulator width,
+/// so it bounds every kernel set's `nr`.
+const SIMD_NR: usize = 24;
 /// Rows of A packed per block (multiple of `MR`).
 const MC: usize = 64;
 /// Shared (`k`) dimension per packed block.
 const KC: usize = 128;
-/// Columns of B packed per panel (multiple of `NR`).
-const NC: usize = 512;
+/// Columns of B packed per panel (multiple of every kernel set's `nr`:
+/// 528 = 33·16 = 22·24).
+const NC: usize = 528;
 /// Minimum FLOP count (2·m·k·n) before fanning out to the pool.
 const PAR_MIN_FLOPS: usize = 1 << 21;
+/// Pack-scratch bytes a thread may retain between GEMM calls; anything
+/// above this is released back to the allocator (the high-water mark
+/// stays visible via [`peak_scratch_bytes`]).
+pub const SCRATCH_RETAIN_BYTES: usize = 4 << 20;
+
+// ---------------------------------------------------------------------------
+// Mixed-precision operand view
+// ---------------------------------------------------------------------------
+
+/// A borrowed matrix operand in any of the crate's storage precisions.
+/// Decoding happens element-wise inside the panel packers — a
+/// compressed operand is never expanded to a full f32 buffer by the
+/// GEMM layer.
+#[derive(Clone, Copy)]
+pub enum MatRef<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    Q8(&'a QuantizedBuf),
+}
+
+impl MatRef<'_> {
+    pub fn len(&self) -> usize {
+        match self {
+            MatRef::F32(s) => s.len(),
+            MatRef::Bf16(s) => s.len(),
+            MatRef::Q8(q) => q.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage-precision label for bench-JSONL `operand_dtype` fields.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            MatRef::F32(_) => "f32",
+            MatRef::Bf16(_) => "bf16",
+            MatRef::Q8(_) => "int8",
+        }
+    }
+
+    /// Decode one element to f32. Exact for f32 and bf16; int8 applies
+    /// the same codebook×scale math as
+    /// [`QuantizedBuf::dequantize_block_into`], so packing via `get` is
+    /// bit-identical to dequantize-then-pack.
+    #[inline]
+    pub fn get(&self, idx: usize) -> f32 {
+        match self {
+            MatRef::F32(s) => s[idx],
+            MatRef::Bf16(s) => bf16_to_f32(s[idx]),
+            MatRef::Q8(q) => q.decode_at(idx),
+        }
+    }
+
+    /// Full f32 materialization — ONLY for fallback paths that hand the
+    /// operand to a non-kernel consumer (e.g. the default
+    /// `Backend::exec_pupdate`); the GEMM entry points never call this.
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernel sets + ISA dispatch
+// ---------------------------------------------------------------------------
+
+type MicroFn =
+    fn(&mut [f32], usize, usize, usize, &[f32], &[f32], usize, usize, usize, usize, usize);
+type PackFn = fn(&mut [f32], MatRef<'_>, usize, bool, usize, usize, usize, usize);
+type DotFn = fn(&[f32], &[f32]) -> f32;
+type AxpyFn = fn(&mut [f32], f32, &[f32]);
+type RotFn = fn(&mut [f32], &mut [f32], f32, f32);
+
+/// One ISA's kernel suite: the `MR`×`nr` microkernel, the panel
+/// packers, and the level-1 kernels, all behind fn pointers so dispatch
+/// is one indirect call per tile (decided once at startup).
+pub struct KernelSet {
+    /// ISA label for bench rows ("scalar" / "avx2" / "neon").
+    pub name: &'static str,
+    /// Register-tile width this set's microkernel computes.
+    pub nr: usize,
+    microkernel: MicroFn,
+    pack_a: PackFn,
+    pack_b: PackFn,
+    dot: DotFn,
+    axpy: AxpyFn,
+    rot: RotFn,
+}
+
+static SCALAR: KernelSet = KernelSet {
+    name: "scalar",
+    nr: NR,
+    microkernel: microkernel_scalar,
+    pack_a: pack_a_generic,
+    pack_b: pack_b_generic,
+    dot: dot_scalar,
+    axpy: axpy_scalar,
+    rot: rot_scalar,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: KernelSet = KernelSet {
+    name: "avx2",
+    nr: SIMD_NR,
+    microkernel: microkernel_avx2,
+    pack_a: pack_a_generic,
+    pack_b: pack_b_generic,
+    dot: dot_avx2,
+    axpy: axpy_avx2,
+    rot: rot_avx2,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: KernelSet = KernelSet {
+    name: "neon",
+    nr: SIMD_NR,
+    microkernel: microkernel_neon,
+    pack_a: pack_a_generic,
+    pack_b: pack_b_generic,
+    dot: dot_neon,
+    axpy: axpy_neon,
+    rot: rot_neon,
+};
+
+/// `true` while the scalar set is pinned (env override or
+/// [`force_scalar`]).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+static DETECTED: OnceLock<&'static KernelSet> = OnceLock::new();
+
+/// Runtime feature detection, once per process. Also settles the
+/// `COAP_FORCE_SCALAR` env override into [`FORCE_SCALAR`].
+fn detected() -> &'static KernelSet {
+    *DETECTED.get_or_init(|| {
+        if std::env::var("COAP_FORCE_SCALAR").is_ok_and(|v| v == "1") {
+            FORCE_SCALAR.store(true, Ordering::Relaxed);
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return &AVX2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return &NEON;
+            }
+        }
+        &SCALAR
+    })
+}
+
+/// The active kernel set (detected ISA, unless scalar is forced).
+/// Toggling mid-flight is safe: every set is bit-identical.
+pub fn kernels() -> &'static KernelSet {
+    let det = detected();
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        &SCALAR
+    } else {
+        det
+    }
+}
+
+/// Programmatic equivalent of `COAP_FORCE_SCALAR=1` (tests use this to
+/// exercise the fallback without re-execing). Touches detection first so
+/// a later first-use of [`kernels`] cannot overwrite the setting with
+/// the env default.
+pub fn force_scalar(on: bool) {
+    let _ = detected();
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Is the scalar fallback currently pinned?
+pub fn scalar_forced() -> bool {
+    let _ = detected();
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Label of the active kernel set ("scalar" / "avx2" / "neon") — the
+/// bench-JSONL `kernel_isa` field.
+pub fn kernel_isa() -> &'static str {
+    kernels().name
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local pack scratch (capped retention + peak tracking)
+// ---------------------------------------------------------------------------
 
 #[derive(Default)]
 struct PackBufs {
@@ -54,12 +273,49 @@ struct PackBufs {
 thread_local! {
     /// Per-thread packing scratch (workers each get their own copy).
     static PACK: RefCell<PackBufs> = RefCell::new(PackBufs::default());
-    /// Per-thread scratch for the transposed operand of TN/NT calls.
-    static TSCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
+
+/// Process-wide high-water mark of per-thread pack-scratch capacity, in
+/// bytes (summed over the two buffers of whichever thread peaked).
+static PEAK_SCRATCH: AtomicUsize = AtomicUsize::new(0);
 
 fn round_up(x: usize, to: usize) -> usize {
     x.div_ceil(to) * to
+}
+
+/// Record the current thread's scratch high-water mark, then release
+/// anything above the retention cap back to the allocator. Called after
+/// every GEMM slab and every [`with_pack_scratch`] borrow, so a huge
+/// one-off resize cannot pin memory forever.
+fn release_scratch() {
+    PACK.with(|p| {
+        let bufs = &mut *p.borrow_mut();
+        let bytes = (bufs.a.capacity() + bufs.b.capacity()) * std::mem::size_of::<f32>();
+        PEAK_SCRATCH.fetch_max(bytes, Ordering::Relaxed);
+        let cap = SCRATCH_RETAIN_BYTES / (2 * std::mem::size_of::<f32>());
+        for buf in [&mut bufs.a, &mut bufs.b] {
+            if buf.capacity() > cap {
+                buf.truncate(cap);
+                buf.shrink_to(cap);
+            }
+        }
+    });
+}
+
+/// Highest pack-scratch footprint any thread has reached (bytes) — the
+/// kernel layer's contribution to `MemoryBreakdown::opt_transient`.
+pub fn peak_scratch_bytes() -> usize {
+    PEAK_SCRATCH.load(Ordering::Relaxed)
+}
+
+/// Currently retained pack-scratch capacity of THIS thread (bytes).
+/// Test hook: the parity suite asserts a low-precision GEMM leaves no
+/// full-operand f32 materialization behind.
+pub fn scratch_capacity_bytes() -> usize {
+    PACK.with(|p| {
+        let bufs = p.borrow();
+        (bufs.a.capacity() + bufs.b.capacity()) * std::mem::size_of::<f32>()
+    })
 }
 
 /// Borrow this thread's GEMM packing buffers for non-GEMM block work.
@@ -71,24 +327,107 @@ fn round_up(x: usize, to: usize) -> usize {
 /// The buffers live in one thread-local `RefCell`, so the closure MUST
 /// NOT call back into `gemm_*` (or this function): that would be a
 /// re-entrant borrow and panics. The fused step kernels only run
-/// element-wise math inside it.
+/// element-wise math inside it. On exit the retention cap is enforced
+/// (see [`SCRATCH_RETAIN_BYTES`]).
 pub fn with_pack_scratch<R>(f: impl FnOnce(&mut Vec<f32>, &mut Vec<f32>) -> R) -> R {
-    PACK.with(|p| {
+    let r = PACK.with(|p| {
         let bufs = &mut *p.borrow_mut();
         f(&mut bufs.a, &mut bufs.b)
-    })
+    });
+    release_scratch();
+    r
 }
 
 // ---------------------------------------------------------------------------
-// Core: blocked NN on a row slab
+// Panel packers (shared by every kernel set)
 // ---------------------------------------------------------------------------
 
-/// `MR`×`NR` tile at (`row0`, `col0`) of the slab's `out` (width `n`):
-/// `acc += astrip · bpack[.., jr..jr+nr]` over `kc` depth, then
-/// `out += acc`. `astrip` is kk-major with stride `MR` (zero-padded
-/// rows), `bpack` is the packed `kc`×`nc` panel.
+/// Pack the `mc`×`kc` A block at (`row0`, `pc`) of the logical (m, k)
+/// operand into `MR`-row strips, kk-major, rows zero-padded to `MR`
+/// (padding multiplies into accumulator rows that are never written
+/// back). `trans` means the operand is *stored* (k, m) row-major with
+/// leading dimension `ld` — the transposed gather replaces the old
+/// transpose-into-scratch step, and `MatRef` decoding makes the same
+/// loop serve bf16/int8 operands.
+fn pack_a_generic(
+    dst: &mut [f32],
+    a: MatRef<'_>,
+    ld: usize,
+    trans: bool,
+    pc: usize,
+    kc: usize,
+    row0: usize,
+    mc: usize,
+) {
+    let strips = mc.div_ceil(MR);
+    for s in 0..strips {
+        let r0 = row0 + s * MR;
+        let mr = MR.min(row0 + mc - r0);
+        let d = &mut dst[s * MR * kc..(s + 1) * MR * kc];
+        for kk in 0..kc {
+            for r in 0..MR {
+                d[kk * MR + r] = if r < mr {
+                    let idx = if trans {
+                        (pc + kk) * ld + r0 + r
+                    } else {
+                        (r0 + r) * ld + pc + kk
+                    };
+                    a.get(idx)
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+}
+
+/// Pack the `kc`×`nc` B panel at (`pc`, `jc`) of the logical (k, n)
+/// operand: `dst[kk*nc + j] = B[pc+kk][jc+j]`. `trans` means the
+/// operand is stored (n, k) row-major with leading dimension `ld`.
+/// Compressed operands are decoded element-wise here — this is the one
+/// place bf16 words / int8 codes become f32, and it only ever holds one
+/// panel.
+fn pack_b_generic(
+    dst: &mut [f32],
+    b: MatRef<'_>,
+    ld: usize,
+    trans: bool,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+) {
+    if let (MatRef::F32(src), false) = (b, trans) {
+        // f32 row-major rows are contiguous: straight memcpy per row.
+        for kk in 0..kc {
+            let s = &src[(pc + kk) * ld + jc..(pc + kk) * ld + jc + nc];
+            dst[kk * nc..kk * nc + nc].copy_from_slice(s);
+        }
+        return;
+    }
+    for kk in 0..kc {
+        let row = &mut dst[kk * nc..kk * nc + nc];
+        if trans {
+            for (j, d) in row.iter_mut().enumerate() {
+                *d = b.get((jc + j) * ld + pc + kk);
+            }
+        } else {
+            for (j, d) in row.iter_mut().enumerate() {
+                *d = b.get((pc + kk) * ld + jc + j);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microkernels
+// ---------------------------------------------------------------------------
+
+/// Rim tile with dynamic bounds, shared by every kernel set (`nr` <
+/// `SIMD_NR` or short `mr`). Same per-element ascending-`k` order as
+/// the full-tile kernels, so edges agree bit-for-bit across sets.
 #[inline]
-fn microkernel(
+fn edge_tile(
     out: &mut [f32],
     n: usize,
     row0: usize,
@@ -101,55 +440,219 @@ fn microkernel(
     mr: usize,
     nr: usize,
 ) {
-    let mut acc = [[0.0f32; NR]; MR];
-    if mr == MR && nr == NR {
-        // Full tile: fixed trip counts -> full-width f32 lanes.
-        for kk in 0..kc {
-            let av = &astrip[kk * MR..kk * MR + MR];
-            let bv = &bpack[kk * nc + jr..kk * nc + jr + NR];
-            for r in 0..MR {
-                let ar = av[r];
-                for j in 0..NR {
-                    acc[r][j] += ar * bv[j];
-                }
-            }
-        }
-        for (r, accr) in acc.iter().enumerate() {
-            let o0 = (row0 + r) * n + col0;
-            let orow = &mut out[o0..o0 + NR];
-            for j in 0..NR {
-                orow[j] += accr[j];
-            }
-        }
-    } else {
-        // Edge tile (right/bottom rim): dynamic bounds, same k-order.
-        for kk in 0..kc {
-            let av = &astrip[kk * MR..kk * MR + MR];
-            let bv = &bpack[kk * nc + jr..kk * nc + jr + nr];
-            for r in 0..mr {
-                let ar = av[r];
-                for (j, &bj) in bv.iter().enumerate() {
-                    acc[r][j] += ar * bj;
-                }
-            }
-        }
+    let mut acc = [[0.0f32; SIMD_NR]; MR];
+    for kk in 0..kc {
+        let av = &astrip[kk * MR..kk * MR + MR];
+        let bv = &bpack[kk * nc + jr..kk * nc + jr + nr];
         for r in 0..mr {
-            let o0 = (row0 + r) * n + col0;
-            let orow = &mut out[o0..o0 + nr];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o += acc[r][j];
+            let ar = av[r];
+            for (j, &bj) in bv.iter().enumerate() {
+                acc[r][j] += ar * bj;
             }
+        }
+    }
+    for r in 0..mr {
+        let o0 = (row0 + r) * n + col0;
+        let orow = &mut out[o0..o0 + nr];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += acc[r][j];
         }
     }
 }
 
-/// Blocked `out += a·b` on one row slab (`a`, `out` hold `m` rows; `b`
-/// is the full `k`×`n` operand). `out` must be zeroed by the caller.
-fn gemm_slab(
+/// Scalar `MR`×`NR` tile at (`row0`, `col0`) of the slab's `out` (width
+/// `n`): `acc += astrip · bpack[.., jr..jr+nr]` over `kc` depth, then
+/// `out += acc`. `astrip` is kk-major with stride `MR` (zero-padded
+/// rows), `bpack` is the packed `kc`×`nc` panel. Fixed trip counts on
+/// the full-tile path so LLVM autovectorizes into full-width f32 lanes.
+fn microkernel_scalar(
     out: &mut [f32],
-    a: &[f32],
-    b: &[f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    astrip: &[f32],
+    bpack: &[f32],
+    kc: usize,
+    nc: usize,
+    jr: usize,
+    mr: usize,
+    nr: usize,
+) {
+    if mr != MR || nr != NR {
+        return edge_tile(out, n, row0, col0, astrip, bpack, kc, nc, jr, mr, nr);
+    }
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kc {
+        let av = &astrip[kk * MR..kk * MR + MR];
+        let bv = &bpack[kk * nc + jr..kk * nc + jr + NR];
+        for r in 0..MR {
+            let ar = av[r];
+            for j in 0..NR {
+                acc[r][j] += ar * bv[j];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let o0 = (row0 + r) * n + col0;
+        let orow = &mut out[o0..o0 + NR];
+        for j in 0..NR {
+            orow[j] += accr[j];
+        }
+    }
+}
+
+/// AVX2 4×24 tile: 12 ymm accumulators, 3 B loads, 1 A broadcast.
+/// Deliberately *unfused* multiply-then-add (`_mm256_mul_ps` +
+/// `_mm256_add_ps`, never `fmadd`) so results stay bit-identical to the
+/// scalar kernel — the FMA feature is only a dispatch precondition, not
+/// used for arithmetic.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_avx2_impl(
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    astrip: &[f32],
+    bpack: &[f32],
+    kc: usize,
+    nc: usize,
+    jr: usize,
+) {
+    use std::arch::x86_64::*;
+    let mut acc = [[_mm256_setzero_ps(); 3]; MR];
+    for kk in 0..kc {
+        let bp = bpack.as_ptr().add(kk * nc + jr);
+        let b0 = _mm256_loadu_ps(bp);
+        let b1 = _mm256_loadu_ps(bp.add(8));
+        let b2 = _mm256_loadu_ps(bp.add(16));
+        let av = astrip.as_ptr().add(kk * MR);
+        for r in 0..MR {
+            let ar = _mm256_set1_ps(*av.add(r));
+            acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(ar, b0));
+            acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(ar, b1));
+            acc[r][2] = _mm256_add_ps(acc[r][2], _mm256_mul_ps(ar, b2));
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let o = out.as_mut_ptr().add((row0 + r) * n + col0);
+        _mm256_storeu_ps(o, _mm256_add_ps(_mm256_loadu_ps(o), accr[0]));
+        _mm256_storeu_ps(o.add(8), _mm256_add_ps(_mm256_loadu_ps(o.add(8)), accr[1]));
+        _mm256_storeu_ps(o.add(16), _mm256_add_ps(_mm256_loadu_ps(o.add(16)), accr[2]));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn microkernel_avx2(
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    astrip: &[f32],
+    bpack: &[f32],
+    kc: usize,
+    nc: usize,
+    jr: usize,
+    mr: usize,
+    nr: usize,
+) {
+    if mr == MR && nr == SIMD_NR {
+        // SAFETY: this set is only selected after runtime AVX2+FMA
+        // detection; slice bounds are guaranteed by the full-tile
+        // condition (astrip holds kc*MR, jr+SIMD_NR <= nc, col0+SIMD_NR
+        // <= n, row0+MR <= slab rows).
+        unsafe { microkernel_avx2_impl(out, n, row0, col0, astrip, bpack, kc, nc, jr) }
+    } else {
+        edge_tile(out, n, row0, col0, astrip, bpack, kc, nc, jr, mr, nr);
+    }
+}
+
+/// NEON 4×24 tile: 24 q accumulators, 6 B loads, 1 A broadcast —
+/// unfused `vmulq`/`vaddq` (never `vfmaq`) for scalar bit-identity.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_neon_impl(
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    astrip: &[f32],
+    bpack: &[f32],
+    kc: usize,
+    nc: usize,
+    jr: usize,
+) {
+    use std::arch::aarch64::*;
+    let mut acc = [[vdupq_n_f32(0.0); 6]; MR];
+    for kk in 0..kc {
+        let bp = bpack.as_ptr().add(kk * nc + jr);
+        let b = [
+            vld1q_f32(bp),
+            vld1q_f32(bp.add(4)),
+            vld1q_f32(bp.add(8)),
+            vld1q_f32(bp.add(12)),
+            vld1q_f32(bp.add(16)),
+            vld1q_f32(bp.add(20)),
+        ];
+        let av = astrip.as_ptr().add(kk * MR);
+        for r in 0..MR {
+            let ar = vdupq_n_f32(*av.add(r));
+            for q in 0..6 {
+                acc[r][q] = vaddq_f32(acc[r][q], vmulq_f32(ar, b[q]));
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let o = out.as_mut_ptr().add((row0 + r) * n + col0);
+        for (q, accq) in accr.iter().enumerate() {
+            vst1q_f32(o.add(4 * q), vaddq_f32(vld1q_f32(o.add(4 * q)), *accq));
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn microkernel_neon(
+    out: &mut [f32],
+    n: usize,
+    row0: usize,
+    col0: usize,
+    astrip: &[f32],
+    bpack: &[f32],
+    kc: usize,
+    nc: usize,
+    jr: usize,
+    mr: usize,
+    nr: usize,
+) {
+    if mr == MR && nr == SIMD_NR {
+        // SAFETY: NEON detected at dispatch; bounds as in the AVX2 path.
+        unsafe { microkernel_neon_impl(out, n, row0, col0, astrip, bpack, kc, nc, jr) }
+    } else {
+        edge_tile(out, n, row0, col0, astrip, bpack, kc, nc, jr, mr, nr);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Core: blocked GEMM on a row slab
+// ---------------------------------------------------------------------------
+
+/// Blocked `out += op(a)·op(b)` on one row slab: `out` holds the `m`
+/// local rows starting at absolute row `row0` of the logical (M, k)
+/// operand `a`; `b` is the full logical (k, n) operand. `out` must be
+/// zeroed by the caller. `ta`/`tb` mark operands stored transposed
+/// (leading dimensions `a_ld`/`b_ld`).
+#[allow(clippy::too_many_arguments)]
+fn gemm_slab(
+    ks: &KernelSet,
+    out: &mut [f32],
+    a: MatRef<'_>,
+    ta: bool,
+    a_ld: usize,
+    row0: usize,
     m: usize,
+    b: MatRef<'_>,
+    tb: bool,
+    b_ld: usize,
     k: usize,
     n: usize,
     bufs: &mut PackBufs,
@@ -165,41 +668,24 @@ fn gemm_slab(
         let mut pc = 0;
         while pc < k {
             let kc = KC.min(k - pc);
-            // Pack the B panel: bpack[kk * nc + j] = b[pc+kk][jc+j].
-            for kk in 0..kc {
-                let src = &b[(pc + kk) * n + jc..(pc + kk) * n + jc + nc];
-                bpack[kk * nc..kk * nc + nc].copy_from_slice(src);
-            }
+            (ks.pack_b)(bpack, b, b_ld, tb, pc, kc, jc, nc);
             let mut ic = 0;
             while ic < m {
                 let mc = MC.min(m - ic);
+                (ks.pack_a)(apack, a, a_ld, ta, pc, kc, row0 + ic, mc);
                 let strips = mc.div_ceil(MR);
-                // Pack the A block in MR-row strips, kk-major, rows
-                // zero-padded to MR (padding multiplies into accumulator
-                // rows that are never written back).
-                for s in 0..strips {
-                    let r0 = ic + s * MR;
-                    let mr = MR.min(ic + mc - r0);
-                    let dst = &mut apack[s * MR * kc..(s + 1) * MR * kc];
-                    for kk in 0..kc {
-                        for r in 0..MR {
-                            dst[kk * MR + r] =
-                                if r < mr { a[(r0 + r) * k + pc + kk] } else { 0.0 };
-                        }
-                    }
-                }
-                // jr outer / strip inner: the kc×NR B chunk stays hot in
+                // jr outer / strip inner: the kc×nr B chunk stays hot in
                 // L1 while the packed A block streams past it.
                 let mut jr = 0;
                 while jr < nc {
-                    let nr = NR.min(nc - jr);
+                    let nr = ks.nr.min(nc - jr);
                     for s in 0..strips {
                         let r0 = ic + s * MR;
                         let mr = MR.min(ic + mc - r0);
                         let astrip = &apack[s * MR * kc..(s + 1) * MR * kc];
-                        microkernel(out, n, r0, jc + jr, astrip, bpack, kc, nc, jr, mr, nr);
+                        (ks.microkernel)(out, n, r0, jc + jr, astrip, bpack, kc, nc, jr, mr, nr);
                     }
-                    jr += NR;
+                    jr += ks.nr;
                 }
                 ic += MC;
             }
@@ -213,10 +699,93 @@ fn gemm_slab(
 // Public GEMM entry points
 // ---------------------------------------------------------------------------
 
-/// `out = a·b`; `a` is (m, k), `b` is (k, n), `out` is (m, n), all
-/// row-major. `out` is fully overwritten. With a pool (and a matmul big
-/// enough to amortize fan-out), rows are split across workers in
-/// `MR`-aligned slabs — results are bit-identical for any worker count.
+/// The one GEMM core every entry point funnels into:
+/// `out = op(a)·op(b)` where `op` is transpose iff `ta`/`tb`, with the
+/// logical product (m, k)·(k, n); `a` is stored (m, k) or — if `ta` —
+/// (k, m), `b` is stored (k, n) or — if `tb` — (n, k), all row-major,
+/// any precision. `out` is fully overwritten. With a pool (and a matmul
+/// big enough to amortize fan-out), rows are split across workers in
+/// `MR`-aligned slabs — results are bit-identical for any worker count
+/// and any kernel set.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_mixed_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: MatRef<'_>,
+    ta: bool,
+    b: MatRef<'_>,
+    tb: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "gemm: lhs is not {m}x{k}");
+    assert_eq!(b.len(), k * n, "gemm: rhs is not {k}x{n}");
+    assert_eq!(out.len(), m * n, "gemm: out is not {m}x{n}");
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let ks = kernels();
+    let a_ld = if ta { m } else { k };
+    let b_ld = if tb { k } else { n };
+    if let Some(pool) = pool {
+        let workers = pool.workers();
+        if workers > 1 && 2 * m * k * n >= PAR_MIN_FLOPS && m >= 2 * MR {
+            let chunk = round_up(m.div_ceil(workers), MR);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(chunk * n)
+                .enumerate()
+                .map(|(ci, oc)| {
+                    let row0 = ci * chunk;
+                    let rows = oc.len() / n;
+                    Box::new(move || {
+                        PACK.with(|p| {
+                            gemm_slab(
+                                ks,
+                                oc,
+                                a,
+                                ta,
+                                a_ld,
+                                row0,
+                                rows,
+                                b,
+                                tb,
+                                b_ld,
+                                k,
+                                n,
+                                &mut p.borrow_mut(),
+                            );
+                        });
+                        release_scratch();
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_all_scoped(jobs);
+            return;
+        }
+    }
+    PACK.with(|p| gemm_slab(ks, out, a, ta, a_ld, 0, m, b, tb, b_ld, k, n, &mut p.borrow_mut()));
+    release_scratch();
+}
+
+/// [`gemm_mixed_into`] with a fresh output buffer.
+pub fn gemm_mixed(
+    pool: Option<&ThreadPool>,
+    a: MatRef<'_>,
+    ta: bool,
+    b: MatRef<'_>,
+    tb: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gemm_mixed_into(pool, &mut out, a, ta, b, tb, m, k, n);
+    out
+}
+
+/// `out = a·b`; `a` is (m, k), `b` is (k, n), `out` is (m, n).
 pub fn gemm_nn_into(
     pool: Option<&ThreadPool>,
     out: &mut [f32],
@@ -226,32 +795,7 @@ pub fn gemm_nn_into(
     k: usize,
     n: usize,
 ) {
-    assert_eq!(a.len(), m * k, "gemm_nn: lhs is not {m}x{k}");
-    assert_eq!(b.len(), k * n, "gemm_nn: rhs is not {k}x{n}");
-    assert_eq!(out.len(), m * n, "gemm_nn: out is not {m}x{n}");
-    out.fill(0.0);
-    if m == 0 || n == 0 || k == 0 {
-        return;
-    }
-    if let Some(pool) = pool {
-        let workers = pool.workers();
-        if workers > 1 && 2 * m * k * n >= PAR_MIN_FLOPS && m >= 2 * MR {
-            let chunk = round_up(m.div_ceil(workers), MR);
-            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
-                .chunks_mut(chunk * n)
-                .zip(a.chunks(chunk * k))
-                .map(|(oc, ac)| {
-                    let rows = ac.len() / k;
-                    Box::new(move || {
-                        PACK.with(|p| gemm_slab(oc, ac, b, rows, k, n, &mut p.borrow_mut()));
-                    }) as Box<dyn FnOnce() + Send + '_>
-                })
-                .collect();
-            pool.run_all_scoped(jobs);
-            return;
-        }
-    }
-    PACK.with(|p| gemm_slab(out, a, b, m, k, n, &mut p.borrow_mut()));
+    gemm_mixed_into(pool, out, MatRef::F32(a), false, MatRef::F32(b), false, m, k, n);
 }
 
 /// `a·b` with a fresh output buffer (see [`gemm_nn_into`]).
@@ -263,14 +807,12 @@ pub fn gemm_nn(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    gemm_nn_into(pool, &mut out, a, b, m, k, n);
-    out
+    gemm_mixed(pool, MatRef::F32(a), false, MatRef::F32(b), false, m, k, n)
 }
 
 /// `out = aᵀ·b`; `a` is (rows, m), `b` is (rows, n), `out` is (m, n) —
-/// the `dW = Xᵀ·dY` pattern. Packs `aᵀ` into thread-local scratch and
-/// runs the NN core.
+/// the `dW = Xᵀ·dY` pattern. The pack-A gather reads `a` transposed in
+/// place; no transpose scratch is materialized.
 pub fn gemm_tn_into(
     pool: Option<&ThreadPool>,
     out: &mut [f32],
@@ -280,13 +822,7 @@ pub fn gemm_tn_into(
     m: usize,
     n: usize,
 ) {
-    assert_eq!(a.len(), rows * m, "gemm_tn: lhs is not {rows}x{m}");
-    TSCRATCH.with(|t| {
-        let t = &mut *t.borrow_mut();
-        t.resize(rows * m, 0.0);
-        transpose_into(t, a, rows, m);
-        gemm_nn_into(pool, out, t, b, m, rows, n);
-    });
+    gemm_mixed_into(pool, out, MatRef::F32(a), true, MatRef::F32(b), false, m, rows, n);
 }
 
 /// `aᵀ·b` with a fresh output buffer (see [`gemm_tn_into`]).
@@ -298,14 +834,12 @@ pub fn gemm_tn(
     m: usize,
     n: usize,
 ) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    gemm_tn_into(pool, &mut out, a, b, rows, m, n);
-    out
+    gemm_mixed(pool, MatRef::F32(a), true, MatRef::F32(b), false, m, rows, n)
 }
 
 /// `out = a·bᵀ`; `a` is (m, k), `b` is (n, k), `out` is (m, n) — the
-/// `dX = dY·Wᵀ` pattern. Packs `bᵀ` into thread-local scratch and runs
-/// the NN core.
+/// `dX = dY·Wᵀ` pattern. The pack-B gather reads `b` transposed in
+/// place; no transpose scratch is materialized.
 pub fn gemm_nt_into(
     pool: Option<&ThreadPool>,
     out: &mut [f32],
@@ -315,13 +849,7 @@ pub fn gemm_nt_into(
     k: usize,
     n: usize,
 ) {
-    assert_eq!(b.len(), n * k, "gemm_nt: rhs is not {n}x{k}");
-    TSCRATCH.with(|t| {
-        let t = &mut *t.borrow_mut();
-        t.resize(k * n, 0.0);
-        transpose_into(t, b, n, k);
-        gemm_nn_into(pool, out, a, t, m, k, n);
-    });
+    gemm_mixed_into(pool, out, MatRef::F32(a), false, MatRef::F32(b), true, m, k, n);
 }
 
 /// `a·bᵀ` with a fresh output buffer (see [`gemm_nt_into`]).
@@ -333,9 +861,164 @@ pub fn gemm_nt(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    gemm_nt_into(pool, &mut out, a, b, m, k, n);
-    out
+    gemm_mixed(pool, MatRef::F32(a), false, MatRef::F32(b), true, m, k, n)
+}
+
+// --- bf16 second operand -----------------------------------------------
+
+/// [`gemm_nn_into`] with `b` stored as bf16 words; dequantized one
+/// `KC`×`NC` panel at a time inside pack-B.
+pub fn gemm_nn_bf16_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_mixed_into(pool, out, MatRef::F32(a), false, MatRef::Bf16(b), false, m, k, n);
+}
+
+/// [`gemm_nn_bf16_into`] with a fresh output buffer.
+pub fn gemm_nn_bf16(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    b: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    gemm_mixed(pool, MatRef::F32(a), false, MatRef::Bf16(b), false, m, k, n)
+}
+
+/// [`gemm_tn_into`] with `b` stored as bf16 words.
+pub fn gemm_tn_bf16_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[u16],
+    rows: usize,
+    m: usize,
+    n: usize,
+) {
+    gemm_mixed_into(pool, out, MatRef::F32(a), true, MatRef::Bf16(b), false, m, rows, n);
+}
+
+/// [`gemm_tn_bf16_into`] with a fresh output buffer.
+pub fn gemm_tn_bf16(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    b: &[u16],
+    rows: usize,
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    gemm_mixed(pool, MatRef::F32(a), true, MatRef::Bf16(b), false, m, rows, n)
+}
+
+/// [`gemm_nt_into`] with `b` stored as bf16 words ((n, k) layout).
+pub fn gemm_nt_bf16_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_mixed_into(pool, out, MatRef::F32(a), false, MatRef::Bf16(b), true, m, k, n);
+}
+
+/// [`gemm_nt_bf16_into`] with a fresh output buffer.
+pub fn gemm_nt_bf16(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    b: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    gemm_mixed(pool, MatRef::F32(a), false, MatRef::Bf16(b), true, m, k, n)
+}
+
+// --- int8 (block-quantized) second operand ------------------------------
+
+/// [`gemm_nn_into`] with `b` block-quantized int8; codes are decoded
+/// one `KC`×`NC` panel at a time inside pack-B — the full operand is
+/// never expanded to f32.
+pub fn gemm_nn_q8_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &QuantizedBuf,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_mixed_into(pool, out, MatRef::F32(a), false, MatRef::Q8(b), false, m, k, n);
+}
+
+/// [`gemm_nn_q8_into`] with a fresh output buffer.
+pub fn gemm_nn_q8(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    b: &QuantizedBuf,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    gemm_mixed(pool, MatRef::F32(a), false, MatRef::Q8(b), false, m, k, n)
+}
+
+/// [`gemm_tn_into`] with `b` block-quantized int8.
+pub fn gemm_tn_q8_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &QuantizedBuf,
+    rows: usize,
+    m: usize,
+    n: usize,
+) {
+    gemm_mixed_into(pool, out, MatRef::F32(a), true, MatRef::Q8(b), false, m, rows, n);
+}
+
+/// [`gemm_tn_q8_into`] with a fresh output buffer.
+pub fn gemm_tn_q8(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    b: &QuantizedBuf,
+    rows: usize,
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    gemm_mixed(pool, MatRef::F32(a), true, MatRef::Q8(b), false, m, rows, n)
+}
+
+/// [`gemm_nt_into`] with `b` block-quantized int8 ((n, k) layout).
+pub fn gemm_nt_q8_into(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &QuantizedBuf,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    gemm_mixed_into(pool, out, MatRef::F32(a), false, MatRef::Q8(b), true, m, k, n);
+}
+
+/// [`gemm_nt_q8_into`] with a fresh output buffer.
+pub fn gemm_nt_q8(
+    pool: Option<&ThreadPool>,
+    a: &[f32],
+    b: &QuantizedBuf,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    gemm_mixed(pool, MatRef::F32(a), false, MatRef::Q8(b), true, m, k, n)
 }
 
 // ---------------------------------------------------------------------------
@@ -393,15 +1076,22 @@ pub fn transpose_blocks(x: &[f32], d0: usize, d1: usize, blk: usize) -> Vec<f32>
 }
 
 // ---------------------------------------------------------------------------
-// Level-1 helpers (QR / Jacobi inner products)
+// Level-1 kernels (QR / Jacobi inner products) — ISA-dispatched
 // ---------------------------------------------------------------------------
 
 /// Lane width for the chunked level-1 reductions.
 const LANES: usize = 8;
 
-/// Lane-chunked f32 dot product.
+/// Lane-chunked f32 dot product. The SIMD paths keep the scalar path's
+/// exact reduction shape (lane `j` accumulates elements `c*8+j` in
+/// ascending `c`, lanes summed in index order, then the scalar tail),
+/// so all kernel sets agree bit-for-bit.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    (kernels().dot)(a, b)
+}
+
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     let mut lanes = [0.0f32; LANES];
     let chunks = a.len() / LANES;
     for c in 0..chunks {
@@ -421,8 +1111,72 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2_impl(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let chunks = a.len() / LANES;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let av = _mm256_loadu_ps(a.as_ptr().add(c * LANES));
+        let bv = _mm256_loadu_ps(b.as_ptr().add(c * LANES));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(av, bv));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut s = 0.0f32;
+    for &l in &lanes {
+        s += l;
+    }
+    for i in chunks * LANES..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: selected only after runtime AVX2 detection; lengths are
+    // pre-checked by the public wrapper.
+    unsafe { dot_avx2_impl(a, b) }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon_impl(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::aarch64::*;
+    let chunks = a.len() / LANES;
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let ap = a.as_ptr().add(c * LANES);
+        let bp = b.as_ptr().add(c * LANES);
+        acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(ap), vld1q_f32(bp)));
+        acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(ap.add(4)), vld1q_f32(bp.add(4))));
+    }
+    let mut lanes = [0.0f32; LANES];
+    vst1q_f32(lanes.as_mut_ptr(), acc0);
+    vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+    let mut s = 0.0f32;
+    for &l in &lanes {
+        s += l;
+    }
+    for i in chunks * LANES..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(target_arch = "aarch64")]
+fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: NEON detected at dispatch; lengths pre-checked.
+    unsafe { dot_neon_impl(a, b) }
+}
+
 /// Lane-chunked dot product with f64 accumulation (the Jacobi
-/// column-moment reductions need the extra headroom).
+/// column-moment reductions need the extra headroom). Stays scalar on
+/// every ISA: widening f32→f64 SIMD gains little and the f64 lane
+/// order is the determinism contract here.
 pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len(), "dot_f64: length mismatch");
     let mut lanes = [0.0f64; LANES];
@@ -444,23 +1198,141 @@ pub fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
     s
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` (element-wise; unfused mul+add on every ISA).
 pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
     assert_eq!(y.len(), x.len(), "axpy: length mismatch");
+    (kernels().axpy)(y, alpha, x);
+}
+
+fn axpy_scalar(y: &mut [f32], alpha: f32, x: &[f32]) {
     for (yi, &xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
     }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2_impl(y: &mut [f32], alpha: f32, x: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = y.len();
+    let chunks = n / LANES;
+    let al = _mm256_set1_ps(alpha);
+    for c in 0..chunks {
+        let yp = y.as_mut_ptr().add(c * LANES);
+        let xv = _mm256_loadu_ps(x.as_ptr().add(c * LANES));
+        _mm256_storeu_ps(yp, _mm256_add_ps(_mm256_loadu_ps(yp), _mm256_mul_ps(al, xv)));
+    }
+    for i in chunks * LANES..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn axpy_avx2(y: &mut [f32], alpha: f32, x: &[f32]) {
+    // SAFETY: selected only after runtime AVX2 detection.
+    unsafe { axpy_avx2_impl(y, alpha, x) }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon_impl(y: &mut [f32], alpha: f32, x: &[f32]) {
+    use std::arch::aarch64::*;
+    let n = y.len();
+    let chunks = n / LANES;
+    let al = vdupq_n_f32(alpha);
+    for c in 0..chunks {
+        let yp = y.as_mut_ptr().add(c * LANES);
+        let xp = x.as_ptr().add(c * LANES);
+        vst1q_f32(yp, vaddq_f32(vld1q_f32(yp), vmulq_f32(al, vld1q_f32(xp))));
+        vst1q_f32(
+            yp.add(4),
+            vaddq_f32(vld1q_f32(yp.add(4)), vmulq_f32(al, vld1q_f32(xp.add(4)))),
+        );
+    }
+    for i in chunks * LANES..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn axpy_neon(y: &mut [f32], alpha: f32, x: &[f32]) {
+    // SAFETY: NEON detected at dispatch.
+    unsafe { axpy_neon_impl(y, alpha, x) }
 }
 
 /// In-place Givens-style plane rotation of two vectors:
 /// `xa' = c·xa - s·xb`, `xb' = s·xa + c·xb`.
 pub fn rot(xa: &mut [f32], xb: &mut [f32], c: f32, s: f32) {
     assert_eq!(xa.len(), xb.len(), "rot: length mismatch");
+    (kernels().rot)(xa, xb, c, s);
+}
+
+fn rot_scalar(xa: &mut [f32], xb: &mut [f32], c: f32, s: f32) {
     for (ai, bi) in xa.iter_mut().zip(xb.iter_mut()) {
         let (a, b) = (*ai, *bi);
         *ai = c * a - s * b;
         *bi = s * a + c * b;
     }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn rot_avx2_impl(xa: &mut [f32], xb: &mut [f32], c: f32, s: f32) {
+    use std::arch::x86_64::*;
+    let n = xa.len();
+    let chunks = n / LANES;
+    let cv = _mm256_set1_ps(c);
+    let sv = _mm256_set1_ps(s);
+    for ch in 0..chunks {
+        let ap = xa.as_mut_ptr().add(ch * LANES);
+        let bp = xb.as_mut_ptr().add(ch * LANES);
+        let av = _mm256_loadu_ps(ap);
+        let bv = _mm256_loadu_ps(bp);
+        _mm256_storeu_ps(ap, _mm256_sub_ps(_mm256_mul_ps(cv, av), _mm256_mul_ps(sv, bv)));
+        _mm256_storeu_ps(bp, _mm256_add_ps(_mm256_mul_ps(sv, av), _mm256_mul_ps(cv, bv)));
+    }
+    for i in chunks * LANES..n {
+        let (a, b) = (xa[i], xb[i]);
+        xa[i] = c * a - s * b;
+        xb[i] = s * a + c * b;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn rot_avx2(xa: &mut [f32], xb: &mut [f32], c: f32, s: f32) {
+    // SAFETY: selected only after runtime AVX2 detection.
+    unsafe { rot_avx2_impl(xa, xb, c, s) }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn rot_neon_impl(xa: &mut [f32], xb: &mut [f32], c: f32, s: f32) {
+    use std::arch::aarch64::*;
+    let n = xa.len();
+    let chunks = n / LANES;
+    let cv = vdupq_n_f32(c);
+    let sv = vdupq_n_f32(s);
+    for ch in 0..chunks {
+        for half in 0..2 {
+            let ap = xa.as_mut_ptr().add(ch * LANES + 4 * half);
+            let bp = xb.as_mut_ptr().add(ch * LANES + 4 * half);
+            let av = vld1q_f32(ap);
+            let bv = vld1q_f32(bp);
+            vst1q_f32(ap, vsubq_f32(vmulq_f32(cv, av), vmulq_f32(sv, bv)));
+            vst1q_f32(bp, vaddq_f32(vmulq_f32(sv, av), vmulq_f32(cv, bv)));
+        }
+    }
+    for i in chunks * LANES..n {
+        let (a, b) = (xa[i], xb[i]);
+        xa[i] = c * a - s * b;
+        xb[i] = s * a + c * b;
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn rot_neon(xa: &mut [f32], xb: &mut [f32], c: f32, s: f32) {
+    // SAFETY: NEON detected at dispatch.
+    unsafe { rot_neon_impl(xa, xb, c, s) }
 }
 
 // ---------------------------------------------------------------------------
@@ -496,6 +1368,7 @@ pub fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f
 mod tests {
     use super::*;
     use crate::rng::Rng;
+    use crate::tensor::{bf16, quant};
 
     fn close(a: &[f32], b: &[f32], tol: f32) -> bool {
         a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
@@ -542,6 +1415,77 @@ mod tests {
         let mut out = vec![7.5f32; m * n];
         gemm_nn_into(None, &mut out, &a, &b, m, k, n);
         assert!(close(&out, &naive_matmul(&a, &b, m, k, n), 1e-4));
+    }
+
+    /// The low-precision contract: packing decodes with exactly the
+    /// same math as a full dequantize, so compressed-operand GEMM is
+    /// bit-identical to decode-then-f32-GEMM.
+    #[test]
+    fn low_precision_gemm_bit_matches_decode_then_f32() {
+        let mut rng = Rng::new(46);
+        for &(m, k, n) in &[(5usize, 7usize, 9usize), (33, 70, 41), (65, 129, 67)] {
+            let a = rng.normal_vec(m * k, 0.5);
+            let bsrc = rng.normal_vec(k * n, 0.5);
+
+            let mut bh = Vec::new();
+            bf16::encode(&bsrc, &mut bh);
+            let mut bdec = vec![0.0f32; bsrc.len()];
+            bf16::decode(&bh, &mut bdec);
+            assert_eq!(
+                gemm_nn_bf16(None, &a, &bh, m, k, n),
+                gemm_nn(None, &a, &bdec, m, k, n),
+                "bf16 nn {m}x{k}x{n}"
+            );
+
+            let q = quant::quantize(&bsrc);
+            let qdec = quant::dequantize_vec(&q);
+            assert_eq!(
+                gemm_nn_q8(None, &a, &q, m, k, n),
+                gemm_nn(None, &a, &qdec, m, k, n),
+                "q8 nn {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_isa_reports_a_known_set() {
+        assert!(
+            ["scalar", "avx2", "neon"].contains(&kernel_isa()),
+            "unexpected isa {}",
+            kernel_isa()
+        );
+        // The dispatch accessor agrees with the label source.
+        assert_eq!(kernels().name, kernel_isa());
+        assert!(kernels().nr == NR || kernels().nr == SIMD_NR);
+    }
+
+    /// Satellite regression: a huge one-off scratch borrow must not pin
+    /// peak capacity forever, and the high-water mark must be recorded.
+    #[test]
+    fn scratch_retention_is_capped_after_release() {
+        let big = 2 * SCRATCH_RETAIN_BYTES / std::mem::size_of::<f32>(); // 2M f32 = 8 MiB
+        with_pack_scratch(|a, _b| {
+            a.resize(big, 0.0);
+        });
+        assert!(
+            scratch_capacity_bytes() <= SCRATCH_RETAIN_BYTES,
+            "scratch retained {} bytes (cap {})",
+            scratch_capacity_bytes(),
+            SCRATCH_RETAIN_BYTES
+        );
+        assert!(
+            peak_scratch_bytes() >= big * std::mem::size_of::<f32>(),
+            "peak {} never saw the 8 MiB borrow",
+            peak_scratch_bytes()
+        );
+        // A GEMM after the shrink still works and stays under the cap.
+        let mut rng = Rng::new(47);
+        let (m, k, n) = (65usize, 40usize, 33usize);
+        let a = rng.normal_vec(m * k, 0.5);
+        let b = rng.normal_vec(k * n, 0.5);
+        let got = gemm_nn(None, &a, &b, m, k, n);
+        assert!(close(&got, &naive_matmul(&a, &b, m, k, n), 1e-3));
+        assert!(scratch_capacity_bytes() <= SCRATCH_RETAIN_BYTES);
     }
 
     #[test]

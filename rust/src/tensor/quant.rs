@@ -129,6 +129,16 @@ impl QuantizedBuf {
         }
     }
 
+    /// Decode a single element — the GEMM panel packers' read primitive
+    /// (`linalg::MatRef::get`). Applies exactly the per-element math of
+    /// [`Self::dequantize_block_into`] (`codebook[code] * block_scale`),
+    /// so packing a panel element-wise is bit-identical to dequantizing
+    /// the whole buffer and packing f32.
+    #[inline]
+    pub fn decode_at(&self, idx: usize) -> f32 {
+        codebook()[self.data[idx] as usize] * self.scales[idx / BLOCK]
+    }
+
     /// Re-quantize block `bi` from `src` (exactly the block's length) —
     /// the fused step kernels' write cursor. Applies exactly the math
     /// [`quantize`] applies per chunk (which is implemented as a sweep
@@ -359,6 +369,22 @@ mod tests {
                 fresh.dequantize_block_into(bi, &mut by_block[s..e]);
             }
             assert_eq!(by_block, dequantize_vec(&fresh), "n={n}: block dequant drifted");
+        }
+    }
+
+    /// `decode_at` (the GEMM packers' read primitive) must agree
+    /// bit-for-bit with the block-wise dequantizer on every element,
+    /// including the short tail block.
+    #[test]
+    fn decode_at_matches_full_dequantize() {
+        let mut r = Rng::new(53);
+        for n in [1usize, 255, 256, 257, 700] {
+            let src: Vec<f32> = (0..n).map(|_| r.normal() * 0.3).collect();
+            let q = quantize(&src);
+            let full = dequantize_vec(&q);
+            for (i, &want) in full.iter().enumerate() {
+                assert_eq!(q.decode_at(i), want, "n={n} idx={i}");
+            }
         }
     }
 

@@ -58,6 +58,19 @@ impl StateView<'_> {
         !matches!(self, StateView::F32(_))
     }
 
+    /// Read-only GEMM operand view at storage precision — the zero-copy
+    /// bridge into the kernel layer's mixed-precision entry points
+    /// ([`linalg::gemm_mixed_into`] and friends). Panel packers decode
+    /// blocks in place, so a compressed state can feed a matmul without
+    /// a full f32 materialization.
+    pub fn as_mat(&self) -> linalg::MatRef<'_> {
+        match self {
+            StateView::F32(s) => linalg::MatRef::F32(s),
+            StateView::Bf16(h) => linalg::MatRef::Bf16(h),
+            StateView::Int8(q) => linalg::MatRef::Q8(q),
+        }
+    }
+
     /// Full f32 copy — the pre-fusion round-trip reference path
     /// (`Backend::exec_with_state_roundtrip`).
     pub fn materialize(&self) -> Vec<f32> {
@@ -301,6 +314,40 @@ mod tests {
 
         assert_eq!(m_f, m_ref);
         assert_eq!(v_q, v_ref);
+    }
+
+    /// `as_mat` must expose exactly the decoded state: element-wise it
+    /// agrees bit-for-bit with `materialize` at every precision.
+    #[test]
+    fn as_mat_decodes_identically_to_materialize() {
+        let mut rng = Rng::new(54);
+        let src = sample(&mut rng, 400);
+
+        let mut f = src.clone();
+        let view = StateView::F32(&mut f[..]);
+        let (mat, full) = (view.as_mat(), view.materialize());
+        assert_eq!(mat.dtype(), "f32");
+        for (i, &w) in full.iter().enumerate() {
+            assert_eq!(mat.get(i), w);
+        }
+
+        let mut h = vec![0u16; src.len()];
+        bf16::encode_into(&src, &mut h);
+        let view = StateView::Bf16(&mut h[..]);
+        let (mat, full) = (view.as_mat(), view.materialize());
+        assert_eq!(mat.dtype(), "bf16");
+        for (i, &w) in full.iter().enumerate() {
+            assert_eq!(mat.get(i), w);
+        }
+
+        let mut q = quant::quantize(&src);
+        let view = StateView::Int8(&mut q);
+        let (mat, full) = (view.as_mat(), view.materialize());
+        assert_eq!(mat.dtype(), "int8");
+        assert_eq!(mat.len(), full.len());
+        for (i, &w) in full.iter().enumerate() {
+            assert_eq!(mat.get(i), w);
+        }
     }
 
     #[test]

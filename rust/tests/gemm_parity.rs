@@ -5,10 +5,40 @@
 //! pool-parallel path must be bit-identical to serial for any worker
 //! count — the kernel-layer extension of PR 1's thread-count-invariance
 //! contract.
+//!
+//! The ISA-dispatch matrix below additionally pins every public GEMM
+//! entry point (f32/bf16/int8 × NN/TN/NT × `*_into`) to be bit-identical
+//! between the detected SIMD kernel set and the forced scalar fallback
+//! (`COAP_FORCE_SCALAR=1` / `linalg::force_scalar`), the low-precision
+//! variants to the dequantize-then-f32-GEMM oracle, the level-1 kernels
+//! (dot/axpy/rot) to scalar on all small/misaligned lengths, and the
+//! fused low-precision packing to its no-full-materialization claim via
+//! the pack-scratch byte counters.
 
 use coap::rng::Rng;
-use coap::tensor::linalg;
+use coap::tensor::{bf16, linalg, quant};
 use coap::util::threadpool::ThreadPool;
+use std::sync::Mutex;
+
+/// Serializes tests that flip the process-global scalar-fallback pin.
+/// (Other tests in this binary may observe the scalar set while one of
+/// these runs — harmless, since scalar/SIMD bit-identity is exactly the
+/// contract under test.)
+static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` twice under the ISA lock — once on the detected kernel set,
+/// once with the scalar fallback pinned — restoring the previous pin,
+/// and return both results for a bit-identity comparison.
+fn dispatched_and_scalar<R>(f: impl Fn() -> R) -> (R, R) {
+    let _g = ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = linalg::scalar_forced();
+    linalg::force_scalar(false);
+    let dispatched = f();
+    linalg::force_scalar(true);
+    let scalar = f();
+    linalg::force_scalar(prev);
+    (dispatched, scalar)
+}
 
 /// |got - want| <= tol elementwise (FP-order drift between the blocked
 /// core and the oracle is ~1e-5 at these depths; 1e-3 has wide margin).
@@ -171,4 +201,228 @@ fn zero_sized_operands_are_safe() {
     let mut out = vec![3.0f32; 6];
     linalg::gemm_nn_into(None, &mut out, &[], &[], 2, 0, 3);
     assert_eq!(out, vec![0.0; 6]);
+}
+
+/// The ISA-dispatch acceptance matrix: every public GEMM entry point —
+/// f32/bf16/int8 × NN/TN/NT, Vec and `*_into` forms — serial and on
+/// 1/2/8-worker pools, is bit-identical between the detected kernel set
+/// and the forced scalar fallback. One odd shape exercises the edge
+/// tiles; one crosses the KC block and the parallel-dispatch threshold.
+#[test]
+fn all_entry_points_bit_identical_scalar_vs_dispatched() {
+    let mut rng = Rng::new(201);
+    let pools: Vec<ThreadPool> = [1usize, 2, 8].iter().map(|&w| ThreadPool::new(w)).collect();
+    for &(m, k, n) in &[(5usize, 7usize, 9usize), (139, 128, 131)] {
+        let a = rng.normal_vec(m * k, 0.5);
+        let b = rng.normal_vec(k * n, 0.5);
+        let a_t = linalg::transpose(&a, m, k); // (k, m) operand for TN
+        let b_t = linalg::transpose(&b, k, n); // (n, k) operand for NT
+        let mut b16 = vec![0u16; b.len()];
+        bf16::encode(&b, &mut b16);
+        let mut bt16 = vec![0u16; b_t.len()];
+        bf16::encode(&b_t, &mut bt16);
+        let bq = quant::quantize(&b);
+        let btq = quant::quantize(&b_t);
+
+        // All nine products at one dispatch state; each `*_into` form is
+        // checked against its Vec form along the way.
+        let run_all = |pool: Option<&ThreadPool>| -> Vec<Vec<f32>> {
+            let mut outs: Vec<Vec<f32>> = Vec::with_capacity(9);
+            {
+                let mut push = |vecform: Vec<f32>, into: &dyn Fn(&mut [f32]), tag: &str| {
+                    let mut out = vec![f32::NAN; vecform.len()];
+                    into(&mut out);
+                    assert_eq!(vecform, out, "{tag} {m}x{k}x{n}: _into drifted from Vec form");
+                    outs.push(vecform);
+                };
+                push(
+                    linalg::gemm_nn(pool, &a, &b, m, k, n),
+                    &|o| linalg::gemm_nn_into(pool, o, &a, &b, m, k, n),
+                    "nn f32",
+                );
+                push(
+                    linalg::gemm_tn(pool, &a_t, &b, k, m, n),
+                    &|o| linalg::gemm_tn_into(pool, o, &a_t, &b, k, m, n),
+                    "tn f32",
+                );
+                push(
+                    linalg::gemm_nt(pool, &a, &b_t, m, k, n),
+                    &|o| linalg::gemm_nt_into(pool, o, &a, &b_t, m, k, n),
+                    "nt f32",
+                );
+                push(
+                    linalg::gemm_nn_bf16(pool, &a, &b16, m, k, n),
+                    &|o| linalg::gemm_nn_bf16_into(pool, o, &a, &b16, m, k, n),
+                    "nn bf16",
+                );
+                push(
+                    linalg::gemm_tn_bf16(pool, &a_t, &b16, k, m, n),
+                    &|o| linalg::gemm_tn_bf16_into(pool, o, &a_t, &b16, k, m, n),
+                    "tn bf16",
+                );
+                push(
+                    linalg::gemm_nt_bf16(pool, &a, &bt16, m, k, n),
+                    &|o| linalg::gemm_nt_bf16_into(pool, o, &a, &bt16, m, k, n),
+                    "nt bf16",
+                );
+                push(
+                    linalg::gemm_nn_q8(pool, &a, &bq, m, k, n),
+                    &|o| linalg::gemm_nn_q8_into(pool, o, &a, &bq, m, k, n),
+                    "nn q8",
+                );
+                push(
+                    linalg::gemm_tn_q8(pool, &a_t, &bq, k, m, n),
+                    &|o| linalg::gemm_tn_q8_into(pool, o, &a_t, &bq, k, m, n),
+                    "tn q8",
+                );
+                push(
+                    linalg::gemm_nt_q8(pool, &a, &btq, m, k, n),
+                    &|o| linalg::gemm_nt_q8_into(pool, o, &a, &btq, m, k, n),
+                    "nt q8",
+                );
+            }
+            outs
+        };
+        let (disp, scal) = dispatched_and_scalar(|| {
+            let mut all = run_all(None);
+            for p in &pools {
+                all.extend(run_all(Some(p)));
+            }
+            all
+        });
+        assert_eq!(disp, scal, "{m}x{k}x{n}: dispatched vs forced-scalar");
+    }
+}
+
+/// Low-precision entry points against the dequantize-then-f32-GEMM
+/// oracle: decoding B up front and running the f32 path must give the
+/// exact same bits as the fused packer that decodes panel-by-panel —
+/// and both stay within tolerance of the naive triple loop.
+#[test]
+fn low_precision_entry_points_match_dequantize_oracle() {
+    let mut rng = Rng::new(202);
+    for &(m, k, n) in &[(5usize, 7usize, 9usize), (33, 70, 41), (65, 129, 67)] {
+        let a = rng.normal_vec(m * k, 0.5);
+        let b = rng.normal_vec(k * n, 0.5);
+        let a_t = linalg::transpose(&a, m, k); // (k, m)
+        let b_t = linalg::transpose(&b, k, n); // (n, k)
+
+        let mut b16 = vec![0u16; b.len()];
+        bf16::encode(&b, &mut b16);
+        let mut bdec = vec![0.0f32; b.len()];
+        bf16::decode(&b16, &mut bdec);
+        let mut bt16 = vec![0u16; b_t.len()];
+        bf16::encode(&b_t, &mut bt16);
+        let mut btdec = vec![0.0f32; b_t.len()];
+        bf16::decode(&bt16, &mut btdec);
+        let ctx = format!("{m}x{k}x{n}");
+        assert_eq!(
+            linalg::gemm_nn_bf16(None, &a, &b16, m, k, n),
+            linalg::gemm_nn(None, &a, &bdec, m, k, n),
+            "nn bf16 {ctx}"
+        );
+        assert_eq!(
+            linalg::gemm_tn_bf16(None, &a_t, &b16, k, m, n),
+            linalg::gemm_tn(None, &a_t, &bdec, k, m, n),
+            "tn bf16 {ctx}"
+        );
+        assert_eq!(
+            linalg::gemm_nt_bf16(None, &a, &bt16, m, k, n),
+            linalg::gemm_nt(None, &a, &btdec, m, k, n),
+            "nt bf16 {ctx}"
+        );
+        assert_close(
+            &linalg::gemm_nn_bf16(None, &a, &b16, m, k, n),
+            &linalg::naive_matmul(&a, &bdec, m, k, n),
+            1e-3,
+            &format!("nn bf16 vs naive {ctx}"),
+        );
+
+        let bq = quant::quantize(&b);
+        let bqdec = quant::dequantize_vec(&bq);
+        let btq = quant::quantize(&b_t);
+        let btqdec = quant::dequantize_vec(&btq);
+        assert_eq!(
+            linalg::gemm_nn_q8(None, &a, &bq, m, k, n),
+            linalg::gemm_nn(None, &a, &bqdec, m, k, n),
+            "nn q8 {ctx}"
+        );
+        assert_eq!(
+            linalg::gemm_tn_q8(None, &a_t, &bq, k, m, n),
+            linalg::gemm_tn(None, &a_t, &bqdec, k, m, n),
+            "tn q8 {ctx}"
+        );
+        assert_eq!(
+            linalg::gemm_nt_q8(None, &a, &btq, m, k, n),
+            linalg::gemm_nt(None, &a, &btqdec, m, k, n),
+            "nt q8 {ctx}"
+        );
+        assert_close(
+            &linalg::gemm_nn_q8(None, &a, &bq, m, k, n),
+            &linalg::naive_matmul(&a, &bqdec, m, k, n),
+            1e-3,
+            &format!("nn q8 vs naive {ctx}"),
+        );
+    }
+}
+
+/// The no-materialization acceptance claim: a quantized-B GEMM whose B
+/// would be 2 MiB as f32 must never stage a full f32 copy of it — the
+/// per-thread pack scratch only ever grows to panel size (KC×NC + MC×KC
+/// floats ≈ 0.3 MiB). Each `#[test]` runs on its own thread, so this
+/// thread's scratch high-water is exactly this GEMM's footprint.
+#[test]
+fn q8_gemm_packs_panels_without_full_materialization() {
+    let mut rng = Rng::new(203);
+    let (m, k, n) = (64usize, 512usize, 1024usize);
+    let a = rng.normal_vec(m * k, 0.5);
+    let bq = quant::quantize(&rng.normal_vec(k * n, 0.5));
+    let out = linalg::gemm_nn_q8(None, &a, &bq, m, k, n);
+    assert_eq!(out.len(), m * n);
+    let cap = linalg::scratch_capacity_bytes();
+    let b_bytes = k * n * 4;
+    assert!(
+        cap < b_bytes,
+        "pack scratch ({cap} B) held a full f32 copy of B ({b_bytes} B)"
+    );
+    assert!(
+        cap <= linalg::SCRATCH_RETAIN_BYTES,
+        "retention cap violated: {cap} B"
+    );
+    assert!(linalg::peak_scratch_bytes() >= cap, "peak counter missed this thread");
+}
+
+/// Level-1 kernels (dot/axpy/rot): SIMD vs forced scalar must be
+/// bit-identical on every length from empty through two SIMD widths
+/// plus a tail, including misaligned (`&v[1..]`) slices.
+#[test]
+fn level1_kernels_bit_match_scalar_on_all_small_lengths() {
+    let mut rng = Rng::new(204);
+    let max = 19usize; // two 8-lane widths + tail
+    let xs = rng.normal_vec(max + 1, 1.0);
+    let ys = rng.normal_vec(max + 1, 1.0);
+    for len in 0..=max {
+        for offset in [0usize, 1] {
+            let x = &xs[offset..offset + len];
+            let y = &ys[offset..offset + len];
+            let (d_disp, d_scal) = dispatched_and_scalar(|| linalg::dot(x, y));
+            assert_eq!(
+                d_disp.to_bits(),
+                d_scal.to_bits(),
+                "dot len={len} off={offset}: {d_disp} vs {d_scal}"
+            );
+            let (a_disp, a_scal) = dispatched_and_scalar(|| {
+                let mut yv = y.to_vec();
+                linalg::axpy(&mut yv, 0.37, x);
+                yv
+            });
+            assert_eq!(a_disp, a_scal, "axpy len={len} off={offset}");
+            let (r_disp, r_scal) = dispatched_and_scalar(|| {
+                let (mut av, mut bv) = (x.to_vec(), y.to_vec());
+                linalg::rot(&mut av, &mut bv, 0.8, 0.6);
+                (av, bv)
+            });
+            assert_eq!(r_disp, r_scal, "rot len={len} off={offset}");
+        }
+    }
 }
