@@ -71,7 +71,14 @@ fn main() -> anyhow::Result<()> {
         cfg.state_precision = c.precision;
         cfg.rank_ratio = 4.0;
         let opt = optim::build(&cfg, &info)?;
-        let bd = MemoryAccountant::breakdown(&info, param_bytes, opt.state_bytes(), c.toggles);
+        let bd = MemoryAccountant::breakdown(
+            &info,
+            param_bytes,
+            opt.state_bytes(),
+            opt.state_transient_bytes(rt.fuses_states()),
+            opt.pack_cache_bytes(),
+            c.toggles,
+        );
         if baseline_total == 0 {
             baseline_total = bd.total();
         }

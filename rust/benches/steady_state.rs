@@ -1,0 +1,155 @@
+//! Steady-state step-path receipt: the fused COAP step through the
+//! native backend with both caches hot (interned plan + pre-packed
+//! projection panels) vs the pre-caching path (graph name minted every
+//! step, projection re-packed every step). Shapes are paper slots: an
+//! lm trunk matrix, the llava projector, and a ControlNet-style conv.
+//!
+//! Rows land in `target/bench-json/steady_state.jsonl`; every record is
+//! tagged with `packed_cache` / `plan_cache` so the trajectory keeps
+//! cached and uncached timings apart, and each line is checked against
+//! the bench-JSONL schema (`util::bench::validate_jsonl_line`) before it
+//! is appended — the CI smoke step relies on that.
+
+use coap::optim::refimpl::{ConvPanels, MatrixPanels, ProjPack};
+use coap::rng::Rng;
+use coap::runtime::{names, Backend, NativeBackend};
+use coap::tensor::state::StateView;
+use coap::tensor::{linalg, Tensor};
+use coap::util::bench::{append_json, jsonl_line, print_table, validate_jsonl_line, Bench};
+use std::time::Duration;
+
+/// Validate against the trajectory schema, then append.
+fn record(fields: &[(&str, String)]) {
+    let line = jsonl_line(fields);
+    validate_jsonl_line(&line)
+        .unwrap_or_else(|e| panic!("steady_state bench row violates the JSONL schema: {e}"));
+    append_json("steady_state", fields);
+}
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let bench = Bench { warmup: 2, iters: 20, max_total: Duration::from_secs(20) };
+    let isa = linalg::kernel_isa().to_string();
+    let mut rows = Vec::new();
+
+    // -- matrix slots: fused projected Adam (coap_adam_step) ---------------
+    let mat_cases: &[(&str, usize, usize, usize)] = &[
+        ("lm_base blk.w1", 512, 2048, 128),
+        ("llava projector", 512, 256, 64),
+    ];
+    for &(label, m, n, r) in mat_cases {
+        let (mb, nb) = (m.max(n), m.min(n));
+        let w = Tensor::from_f32(&[m, n], rng.normal_vec(m * n, 0.5));
+        let g = Tensor::from_f32(&[m, n], rng.normal_vec(m * n, 0.5));
+        let p = Tensor::from_f32(&[nb, r], rng.normal_vec(nb * r, 0.5));
+        let (b1t, b2t) = (Tensor::scalar_f32(0.9), Tensor::scalar_f32(0.99));
+        let (lr, wd) = (Tensor::scalar_f32(1e-3), Tensor::scalar_f32(0.0));
+        let inputs = [&w, &g, &p, &b1t, &b2t, &lr, &wd];
+        let mut ms = vec![0.0f32; mb * r];
+        let mut vs = vec![0.0f32; mb * r];
+        let be = NativeBackend::new();
+        let name = names::matrix_proj("coap_adam_step", m, n, r);
+        let pack = ProjPack::Matrix(MatrixPanels::build(p.f32s(), nb, r));
+
+        // Pre-caching path: the graph name is minted on every step and
+        // the projection is re-packed inside the kernel on every step.
+        let s_cold = bench.run(&format!("uncached {label} {m}x{n} r{r}"), || {
+            let name = names::matrix_proj("coap_adam_step", m, n, r);
+            let mut views = [StateView::F32(&mut ms), StateView::F32(&mut vs)];
+            std::hint::black_box(
+                be.exec_with_state_packed(&name, &inputs, &mut views, None).unwrap(),
+            );
+        });
+        // Steady state: interned plan + cached panels.
+        let s_hot = bench.run(&format!("cached   {label} {m}x{n} r{r}"), || {
+            let mut views = [StateView::F32(&mut ms), StateView::F32(&mut vs)];
+            std::hint::black_box(
+                be.exec_with_state_packed(&name, &inputs, &mut views, Some(&pack)).unwrap(),
+            );
+        });
+        let speedup = s_cold.mean_ms() / s_hot.mean_ms();
+        rows.push(vec![
+            label.to_string(),
+            format!("{m}x{n} r{r}"),
+            format!("{:.3}", s_cold.mean_ms()),
+            format!("{:.3}", s_hot.mean_ms()),
+            format!("{speedup:.2}x"),
+            format!("{:.1}", pack.nbytes() as f64 / 1024.0),
+        ]);
+        for (stat, cached) in [(&s_cold, false), (&s_hot, true)] {
+            record(&[
+                ("case", label.to_string()),
+                ("tpl", "coap_adam_step".to_string()),
+                ("shape", format!("{m}x{n}")),
+                ("rank", r.to_string()),
+                ("kernel_isa", isa.clone()),
+                ("packed_cache", cached.to_string()),
+                ("plan_cache", cached.to_string()),
+                ("step_ms", format!("{:.5}", stat.mean_ms())),
+                ("pack_nbytes", (if cached { pack.nbytes() } else { 0 }).to_string()),
+                ("speedup_vs_uncached", format!("{:.3}", if cached { speedup } else { 1.0 })),
+            ]);
+        }
+    }
+
+    // -- conv slot: fused Tucker-2 Adam (coap_adam_conv_step) --------------
+    let (label, shape, ro, ri) = ("controlnet mid conv", [256usize, 128, 3, 3], 64usize, 32usize);
+    {
+        let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+        let w = Tensor::from_f32(&shape, rng.normal_vec(o * i * kk, 0.5));
+        let g = Tensor::from_f32(&shape, rng.normal_vec(o * i * kk, 0.5));
+        let po = Tensor::from_f32(&[o, ro], rng.normal_vec(o * ro, 0.5));
+        let pi = Tensor::from_f32(&[i, ri], rng.normal_vec(i * ri, 0.5));
+        let (b1t, b2t) = (Tensor::scalar_f32(0.9), Tensor::scalar_f32(0.99));
+        let (lr, wd) = (Tensor::scalar_f32(1e-3), Tensor::scalar_f32(0.0));
+        let inputs = [&w, &g, &po, &pi, &b1t, &b2t, &lr, &wd];
+        let mut ms = vec![0.0f32; ro * ri * kk];
+        let mut vs = vec![0.0f32; ro * ri * kk];
+        let be = NativeBackend::new();
+        let name = names::conv("coap_adam_conv_step", &shape, ro, ri);
+        let pack = ProjPack::Conv(ConvPanels::build(po.f32s(), o, ro, pi.f32s(), i, ri, None));
+
+        let s_cold = bench.run(&format!("uncached {label} rO{ro} rI{ri}"), || {
+            let name = names::conv("coap_adam_conv_step", &shape, ro, ri);
+            let mut views = [StateView::F32(&mut ms), StateView::F32(&mut vs)];
+            std::hint::black_box(
+                be.exec_with_state_packed(&name, &inputs, &mut views, None).unwrap(),
+            );
+        });
+        let s_hot = bench.run(&format!("cached   {label} rO{ro} rI{ri}"), || {
+            let mut views = [StateView::F32(&mut ms), StateView::F32(&mut vs)];
+            std::hint::black_box(
+                be.exec_with_state_packed(&name, &inputs, &mut views, Some(&pack)).unwrap(),
+            );
+        });
+        let speedup = s_cold.mean_ms() / s_hot.mean_ms();
+        rows.push(vec![
+            label.to_string(),
+            format!("{}x{}x{}x{} rO{ro} rI{ri}", shape[0], shape[1], shape[2], shape[3]),
+            format!("{:.3}", s_cold.mean_ms()),
+            format!("{:.3}", s_hot.mean_ms()),
+            format!("{speedup:.2}x"),
+            format!("{:.1}", pack.nbytes() as f64 / 1024.0),
+        ]);
+        for (stat, cached) in [(&s_cold, false), (&s_hot, true)] {
+            record(&[
+                ("case", label.to_string()),
+                ("tpl", "coap_adam_conv_step".to_string()),
+                ("shape", format!("{}x{}x{}x{}", shape[0], shape[1], shape[2], shape[3])),
+                ("rank", format!("rO{ro}_rI{ri}")),
+                ("kernel_isa", isa.clone()),
+                ("packed_cache", cached.to_string()),
+                ("plan_cache", cached.to_string()),
+                ("step_ms", format!("{:.5}", stat.mean_ms())),
+                ("pack_nbytes", (if cached { pack.nbytes() } else { 0 }).to_string()),
+                ("speedup_vs_uncached", format!("{:.3}", if cached { speedup } else { 1.0 })),
+            ]);
+        }
+    }
+
+    print_table(
+        "Steady-state fused COAP step: cached (plan + packed panels) vs uncached",
+        &["case", "shape", "uncached (ms)", "cached (ms)", "speedup", "pack cache (KiB)"],
+        &rows,
+    );
+}

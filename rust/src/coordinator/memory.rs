@@ -23,6 +23,14 @@ pub struct MemoryBreakdown {
     pub grads: usize,
     pub optimizer: usize,
     pub activations: usize,
+    /// Pre-packed projection panels the optimizer retains across steps
+    /// (`Optimizer::pack_cache_bytes`). Steady-state resident — part of
+    /// [`MemoryBreakdown::total`]. Distinct from the kernel layer's
+    /// retained pack *scratch* (counted in `opt_transient` via
+    /// `linalg::peak_scratch_bytes`): cached panels are packed into
+    /// their own buffers, bypassing that scratch, so the two never
+    /// double-count the same bytes.
+    pub pack_cache: usize,
     /// Peak transient state bytes one optimizer step materializes on
     /// top of `optimizer` (`Optimizer::state_transient_bytes`). Not
     /// part of [`MemoryBreakdown::total`] (steady state); see
@@ -33,7 +41,7 @@ pub struct MemoryBreakdown {
 impl MemoryBreakdown {
     /// Steady-state footprint between steps.
     pub fn total(&self) -> usize {
-        self.params + self.grads + self.optimizer + self.activations
+        self.params + self.grads + self.optimizer + self.activations + self.pack_cache
     }
 
     /// Peak footprint during an optimizer step (steady state plus the
@@ -103,11 +111,14 @@ impl MemoryAccountant {
     /// the kernel layer's observed peak GEMM pack scratch
     /// ([`crate::tensor::linalg::peak_scratch_bytes`]) is added on top,
     /// since those buffers are live during the same step window.
+    /// `pack_cache` is the steady-state panel cache from
+    /// `Optimizer::pack_cache_bytes` (0 when the optimizer keeps none).
     pub fn breakdown(
         info: &ModelInfo,
         param_bytes: usize,
         optimizer_bytes: usize,
         optimizer_transient: usize,
+        pack_cache: usize,
         toggles: MemoryToggles,
     ) -> MemoryBreakdown {
         let grads = if toggles.lomo {
@@ -122,6 +133,7 @@ impl MemoryAccountant {
             grads,
             optimizer: optimizer_bytes,
             activations: Self::activation_bytes(info, toggles.activation_checkpointing),
+            pack_cache,
             opt_transient: optimizer_transient
                 + crate::tensor::linalg::peak_scratch_bytes(),
         }
@@ -171,10 +183,10 @@ mod tests {
         let info = lm_info();
         let pbytes = (64 * 64 + 64 * 256) * 4;
         let no = MemoryAccountant::breakdown(
-            &info, pbytes, 0, 0,
+            &info, pbytes, 0, 0, 0,
             MemoryToggles { activation_checkpointing: false, lomo: false });
         let yes = MemoryAccountant::breakdown(
-            &info, pbytes, 0, 0,
+            &info, pbytes, 0, 0, 0,
             MemoryToggles { activation_checkpointing: false, lomo: true });
         assert_eq!(no.grads, pbytes);
         assert_eq!(yes.grads, 64 * 256 * 4);
@@ -263,9 +275,25 @@ mod tests {
         // fu_bd first: `peak_scratch_bytes` is monotone, so sampling the
         // fused breakdown before the round-trip one keeps the peak
         // comparison robust against concurrent GEMMs in other tests.
-        let fu_bd = MemoryAccountant::breakdown(&info, pb, ob, fused, toggles);
-        let rt_bd = MemoryAccountant::breakdown(&info, pb, ob, roundtrip, toggles);
+        let fu_bd = MemoryAccountant::breakdown(&info, pb, ob, fused, 0, toggles);
+        let rt_bd = MemoryAccountant::breakdown(&info, pb, ob, roundtrip, 0, toggles);
         assert_eq!(rt_bd.total(), fu_bd.total(), "steady state is unchanged");
         assert!(fu_bd.peak() < rt_bd.peak(), "fused peak must drop");
+    }
+
+    /// The panel cache is steady-state resident memory: it raises
+    /// `total()` (and `peak()` with it) by exactly its own size, and is
+    /// never folded into the optimizer or transient numbers.
+    #[test]
+    fn pack_cache_counts_toward_steady_state() {
+        let info = lm_info();
+        let toggles = MemoryToggles { activation_checkpointing: false, lomo: false };
+        let without = MemoryAccountant::breakdown(&info, 1000, 500, 64, 0, toggles);
+        let with = MemoryAccountant::breakdown(&info, 1000, 500, 64, 4096, toggles);
+        assert_eq!(with.pack_cache, 4096);
+        assert_eq!(with.total(), without.total() + 4096);
+        assert_eq!(with.peak(), without.peak() + 4096);
+        assert_eq!(with.optimizer, without.optimizer, "not folded into state bytes");
+        assert_eq!(with.opt_transient, without.opt_transient, "not a transient");
     }
 }

@@ -16,7 +16,7 @@
 //! in `tests` (and was cross-checked in numpy before transcription).
 
 use crate::runtime::ModelInfo;
-use crate::tensor::{linalg, Tensor};
+use crate::tensor::{arena, linalg, Tensor};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 
@@ -134,9 +134,11 @@ impl<'a> Trunk<'a> {
             // Gated-mix branch: x2 = x + (tq ⊙ sk ⊙ v) Wo
             linalg::gemm_tn_into(self.pool, &mut grads[gbase + 4], &c.a, &dx2, n, d, d);
             let da = linalg::gemm_nt(self.pool, &dx2, wo, n, d, d);
-            let mut dq = vec![0.0f32; n * d];
-            let mut dk = vec![0.0f32; n * d];
-            let mut dv = vec![0.0f32; n * d];
+            // Gate transients never leave this block — recycled through
+            // the step arena so steady-state backward stops allocating.
+            let mut dq = arena::take(n * d);
+            let mut dk = arena::take(n * d);
+            let mut dv = arena::take(n * d);
             for i in 0..n * d {
                 let (tq, sk, v) = (c.tq[i], c.sk[i], c.v[i]);
                 dq[i] = da[i] * sk * v * (1.0 - tq * tq);
@@ -149,6 +151,9 @@ impl<'a> Trunk<'a> {
             let mut dh1 = linalg::gemm_nt(self.pool, &dq, wq, n, d, d);
             let dh1k = linalg::gemm_nt(self.pool, &dk, wk, n, d, d);
             let dh1v = linalg::gemm_nt(self.pool, &dv, wv, n, d, d);
+            arena::give(dq);
+            arena::give(dk);
+            arena::give(dv);
             for i in 0..n * d {
                 dh1[i] += dh1k[i] + dh1v[i];
             }
@@ -405,7 +410,8 @@ fn conv_bwd(
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let bhw = b * h * h;
     let ckk = cin * k * k;
-    let mut dy2 = vec![0.0f32; bhw * cout];
+    // Layout-shuffled gradient never leaves this function — arena-backed.
+    let mut dy2 = arena::take(bhw * cout);
     let mut dbias = vec![0.0f32; cout];
     for bb in 0..b {
         for o in 0..cout {
@@ -420,6 +426,7 @@ fn conv_bwd(
     }
     let dw = linalg::gemm_tn(pool, &dy2, cols, bhw, cout, ckk); // (O, CKK)
     let dcols = linalg::gemm_nn(pool, &dy2, w, bhw, cout, ckk); // (BHH, CKK)
+    arena::give(dy2);
     let dx = col2im(&dcols, b, cin, h, k);
     (dx, dw, dbias)
 }

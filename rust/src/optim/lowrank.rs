@@ -85,7 +85,15 @@ enum Slot {
         rank: usize,
         /// Set when the underlying param is conv reshaped to 2-D.
         reshape: Option<Vec<usize>>,
+        /// Step graph name, minted once at construction so the
+        /// steady-state step skips both the `format!` and (via the
+        /// backend's plan cache) the name parse.
+        step_name: String,
         p: Option<Tensor>,
+        /// Cached pre-packed P panels for the step GEMMs; rebuilt when
+        /// the projection refreshes (see `step_slot`), charged to
+        /// [`Optimizer::pack_cache_bytes`].
+        panels: Option<refimpl::ProjPack>,
         st: States,
     },
     /// 4-D conv weight under Tucker-2 (optionally + spatial mode).
@@ -93,10 +101,14 @@ enum Slot {
         shape: Vec<usize>,
         ro: usize,
         ri: usize,
+        /// Step graph name, minted once at construction.
+        step_name: String,
         po: Option<Tensor>,
         pi: Option<Tensor>,
         /// `Some` => "full Tucker" variant with fixed spatial projection.
         ps: Option<Tensor>,
+        /// Cached pre-packed PO/PI(/PS) panels, rebuilt on refresh.
+        panels: Option<refimpl::ProjPack>,
         st: States,
     },
     Vector { m: Vec<f32>, v: Vec<f32> },
@@ -166,6 +178,12 @@ impl LowRank {
                 cf: StateBuf::zeros(&[1, fac_cols], Precision::F32),
             },
         };
+        // Step templates are fixed by the moment base, so every slot's
+        // step graph name can be minted exactly once here.
+        let step_tpl = match base {
+            MomentBase::Adam => "coap_adam_step",
+            MomentBase::Adafactor => "coap_adafactor_step",
+        };
         let mut slots = Vec::new();
         for p in &info.params {
             let slot = match p.kind.as_str() {
@@ -179,7 +197,9 @@ impl LowRank {
                         cols: n,
                         rank,
                         reshape: None,
+                        step_name: names::matrix_proj(step_tpl, m, n, rank),
                         p: None,
+                        panels: None,
                         st: mk_states(&[mb, rank], mb, rank),
                     }
                 }
@@ -197,7 +217,9 @@ impl LowRank {
                             cols: rest,
                             rank,
                             reshape: Some(p.shape.clone()),
+                            step_name: names::matrix_proj(step_tpl, o, rest, rank),
                             p: None,
+                            panels: None,
                             st: mk_states(&[mb, rank], mb, rank),
                         }
                     }
@@ -211,13 +233,24 @@ impl LowRank {
                         } else {
                             vec![ro, ri, k1, k2]
                         };
+                        let step_name = match (base, full) {
+                            (MomentBase::Adafactor, _) => {
+                                names::conv("coap_adafactor_conv_step", &p.shape, ro, ri)
+                            }
+                            (MomentBase::Adam, true) => names::conv_full(&p.shape, ro, ri),
+                            (MomentBase::Adam, false) => {
+                                names::conv("coap_adam_conv_step", &p.shape, ro, ri)
+                            }
+                        };
                         Slot::Conv {
                             shape: p.shape.clone(),
                             ro,
                             ri,
+                            step_name,
                             po: None,
                             pi: None,
                             ps: if full { Some(Tensor::zeros(&[k1 * k2, rs])) } else { None },
+                            panels: None,
                             st: mk_states(&proj_dims, ro, ri * k1 * k2),
                         }
                     }
@@ -337,40 +370,58 @@ fn step_slot(
             }
             stats.step_time += t0.elapsed();
         }
-        Slot::Matrix { rows, cols, rank, reshape: _, p, st } => {
+        Slot::Matrix { rows, cols, rank, reshape: _, step_name, p, panels, st } => {
             // exec() accepts layout-compatible shapes, so conv
             // weights flow through their mode-1 unfolding
             // graphs without reshape copies.
             let tp = Instant::now();
             refresh_matrix(ctx.kind, ctx.action, rng, *rows, *cols, *rank, p, st, grad, rt)?;
+            let pt = p.as_ref().unwrap();
+            // Rebuild the cached pack when the projection changed (any
+            // non-Keep action touches P on some policy) or the resolved
+            // kernel ISA moved under it (COAP_FORCE_SCALAR toggles).
+            // On Keep steps this is a no-op — the refresh-invalidation
+            // tests pin both directions.
+            let stale = match panels.as_ref() {
+                Some(pp) => ctx.action != ProjAction::Keep || !pp.is_current(),
+                None => true,
+            };
+            if stale {
+                let nb = (*rows).min(*cols);
+                *panels = Some(refimpl::ProjPack::Matrix(refimpl::MatrixPanels::build(
+                    pt.f32s(),
+                    nb,
+                    *rank,
+                )));
+            }
             stats.proj_time += tp.elapsed();
 
             let t0 = Instant::now();
-            let pt = p.as_ref().unwrap();
             let orig_dims = param.dims().to_vec();
             // Fused state contract: moments ride as StateViews and are
             // updated in place (block-streamed when bf16/8-bit) — see
-            // `Backend::exec_with_state`.
+            // `Backend::exec_with_state`. The cached panels ride along
+            // (bit-identical with or without them).
             let (ceu, new_w) = match st {
                 States::Adam { m, v } => {
-                    let name = names::matrix_proj("coap_adam_step", *rows, *cols, *rank);
                     let mut views = [m.view(), v.view()];
-                    let out = rt.exec_with_state(
-                        &name,
+                    let out = rt.exec_with_state_packed(
+                        step_name,
                         &[&*param, grad, pt, &ctx.b1t, &ctx.b2t, &ctx.lr_t, &ctx.wd_t],
                         &mut views,
+                        panels.as_ref(),
                     )?;
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
                     (it.next().unwrap().scalar(), w)
                 }
                 States::Factor { m, rf, cf } => {
-                    let name = names::matrix_proj("coap_adafactor_step", *rows, *cols, *rank);
                     let mut views = [m.view(), rf.view(), cf.view()];
-                    let out = rt.exec_with_state(
-                        &name,
+                    let out = rt.exec_with_state_packed(
+                        step_name,
                         &[&*param, grad, pt, &ctx.t_t, &ctx.lr_t],
                         &mut views,
+                        panels.as_ref(),
                     )?;
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
@@ -383,7 +434,7 @@ fn step_slot(
             }
             stats.step_time += t0.elapsed();
         }
-        Slot::Conv { shape, ro, ri, po, pi, ps, st } => {
+        Slot::Conv { shape, ro, ri, step_name, po, pi, ps, panels, st } => {
             let g4 = grad;
             let (o, ic) = (shape[0], shape[1]);
             let tp = Instant::now();
@@ -445,46 +496,65 @@ fn step_slot(
                     }
                 }
             }
+            let pot = po.as_ref().unwrap();
+            let pit = pi.as_ref().unwrap();
+            // Same invalidation rule as the matrix slot: rebuild the
+            // cached pack after any refresh action or an ISA change.
+            let stale = match panels.as_ref() {
+                Some(pp) => ctx.action != ProjAction::Keep || !pp.is_current(),
+                None => true,
+            };
+            if stale {
+                let kk = shape[2] * shape[3];
+                let sp = ps.as_ref().map(|t| (t.f32s(), kk, t.dims()[1]));
+                *panels = Some(refimpl::ProjPack::Conv(refimpl::ConvPanels::build(
+                    pot.f32s(),
+                    o,
+                    *ro,
+                    pit.f32s(),
+                    ic,
+                    *ri,
+                    sp,
+                )));
+            }
             stats.proj_time += tp.elapsed();
 
             let t0 = Instant::now();
-            let pot = po.as_ref().unwrap();
-            let pit = pi.as_ref().unwrap();
             let (ceu, new_w) = match (st, ps.as_ref()) {
                 (States::Adam { m, v }, None) => {
-                    let name = names::conv("coap_adam_conv_step", shape, *ro, *ri);
                     let mut views = [m.view(), v.view()];
-                    let out = rt.exec_with_state(
-                        &name,
+                    let out = rt.exec_with_state_packed(
+                        step_name,
                         &[&*param, g4, pot, pit, &ctx.b1t, &ctx.b2t, &ctx.lr_t, &ctx.wd_t],
                         &mut views,
+                        panels.as_ref(),
                     )?;
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
                     (it.next().unwrap().scalar(), w)
                 }
                 (States::Adam { m, v }, Some(ps_t)) => {
-                    let name = names::conv_full(shape, *ro, *ri);
                     let mut views = [m.view(), v.view()];
-                    let out = rt.exec_with_state(
-                        &name,
+                    let out = rt.exec_with_state_packed(
+                        step_name,
                         &[
                             &*param, g4, pot, pit, ps_t, &ctx.b1t, &ctx.b2t, &ctx.lr_t,
                             &ctx.wd_t,
                         ],
                         &mut views,
+                        panels.as_ref(),
                     )?;
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
                     (it.next().unwrap().scalar(), w)
                 }
                 (States::Factor { m, rf, cf }, _) => {
-                    let name = names::conv("coap_adafactor_conv_step", shape, *ro, *ri);
                     let mut views = [m.view(), rf.view(), cf.view()];
-                    let out = rt.exec_with_state(
-                        &name,
+                    let out = rt.exec_with_state_packed(
+                        step_name,
                         &[&*param, g4, pot, pit, &ctx.t_t, &ctx.lr_t],
                         &mut views,
+                        panels.as_ref(),
                     )?;
                     let mut it = out.into_iter();
                     let w = it.next().unwrap();
@@ -529,15 +599,14 @@ impl Optimizer for LowRank {
 
         let mut slots = std::mem::take(&mut self.slots);
         let ctx_ref = &ctx;
-        let jobs: Vec<Box<dyn FnOnce() -> Result<StepStats> + Send + '_>> = slots
+        let jobs: Vec<_> = slots
             .iter_mut()
             .zip(params.iter_mut())
             .zip(grads.iter())
             .enumerate()
             .map(|(i, ((slot, param), grad))| {
                 let mut rng = step_rng.fork(i as u64);
-                Box::new(move || step_slot(ctx_ref, &mut rng, slot, param, grad, rt))
-                    as Box<dyn FnOnce() -> Result<StepStats> + Send + '_>
+                move || step_slot(ctx_ref, &mut rng, slot, param, grad, rt)
             })
             .collect();
         let t0 = Instant::now();
@@ -585,6 +654,18 @@ impl Optimizer for LowRank {
                         + pi.as_ref().map_or(0, |p| p.numel() * 4)
                         + ps.as_ref().map_or(0, |p| p.numel() * 4)
                 }
+            })
+            .sum()
+    }
+
+    fn pack_cache_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Matrix { panels, .. } | Slot::Conv { panels, .. } => {
+                    panels.as_ref().map_or(0, |p| p.nbytes())
+                }
+                Slot::Vector { .. } => 0,
             })
             .sum()
     }

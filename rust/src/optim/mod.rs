@@ -77,6 +77,15 @@ pub trait Optimizer: Send {
         0
     }
 
+    /// Bytes of pre-packed GEMM panels this optimizer retains across
+    /// steps (the projected optimizers cache each slot's projection
+    /// pack; see `refimpl::ProjPack`). Steady-state resident memory,
+    /// reported as its own [`crate::coordinator::memory`] component so
+    /// it never hides inside the state or transient numbers.
+    fn pack_cache_bytes(&self) -> usize {
+        0
+    }
+
     fn label(&self) -> String;
 }
 

@@ -8,7 +8,7 @@
 //! 3. a mock runtime for unit tests that must not depend on artifacts.
 
 use crate::tensor::state::{self, StateView};
-use crate::tensor::{linalg, Tensor};
+use crate::tensor::{arena, linalg, Tensor};
 
 pub const BETA1: f32 = 0.9;
 pub const BETA2: f32 = 0.999;
@@ -562,6 +562,130 @@ pub fn lora_adam_step_mat(
 }
 
 // ---------------------------------------------------------------------------
+// Pre-packed projection panels (the steady-state pack cache)
+//
+// Between refreshes a slot's projections are fixed operators, so every
+// GEMM they appear in can replay pack-once `linalg::PackedMat` panels
+// instead of re-packing per step. One struct per slot kind bundles the
+// panels for every position the projection takes in that slot's step
+// kernel; `optim::lowrank` builds them after each refresh and the
+// `*_state_packed` kernels below consume them. Packed and unpacked
+// paths are bit-identical (the PackedMat contract), so a `None` panel
+// set is always a correct fallback.
+// ---------------------------------------------------------------------------
+
+/// Cached panels for a matrix slot's projection P (stored (nb, rank)):
+/// the forward `G_n·P` (NN, B side) and the restore `delta·Pᵀ` (NT, B
+/// side).
+pub struct MatrixPanels {
+    fwd: linalg::PackedMat,
+    bwd: linalg::PackedMat,
+}
+
+impl MatrixPanels {
+    pub fn build(p: &[f32], nb: usize, rank: usize) -> MatrixPanels {
+        let p = linalg::MatRef::F32(p);
+        MatrixPanels {
+            fwd: linalg::PackedMat::pack_b(p, false, nb, rank),
+            bwd: linalg::PackedMat::pack_b(p, true, rank, nb),
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.fwd.nbytes() + self.bwd.nbytes()
+    }
+
+    pub fn is_current(&self) -> bool {
+        self.fwd.is_current() && self.bwd.is_current()
+    }
+}
+
+/// Cached panels for a conv slot's Tucker projections PO (o, ro),
+/// PI (i, ri) and — full-Tucker only — PS (kk, rs), one per GEMM
+/// position in the conv step kernels (project and restore sides each).
+pub struct ConvPanels {
+    po_proj: linalg::PackedMat,
+    po_rest: linalg::PackedMat,
+    pi_proj: linalg::PackedMat,
+    pi_rest: linalg::PackedMat,
+    ps_fwd: Option<linalg::PackedMat>,
+    ps_bwd: Option<linalg::PackedMat>,
+}
+
+impl ConvPanels {
+    /// `ps` carries the spatial projection as (data, kk, rs) when the
+    /// slot is full-Tucker.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        po: &[f32],
+        o: usize,
+        ro: usize,
+        pi: &[f32],
+        i: usize,
+        ri: usize,
+        ps: Option<(&[f32], usize, usize)>,
+    ) -> ConvPanels {
+        let pom = linalg::MatRef::F32(po);
+        let pim = linalg::MatRef::F32(pi);
+        ConvPanels {
+            po_proj: linalg::PackedMat::pack_a(pom, true, ro, o),
+            po_rest: linalg::PackedMat::pack_a(pom, false, o, ro),
+            pi_proj: linalg::PackedMat::pack_a(pim, true, ri, i),
+            pi_rest: linalg::PackedMat::pack_a(pim, false, i, ri),
+            ps_fwd: ps.map(|(s, kk, rs)| {
+                linalg::PackedMat::pack_b(linalg::MatRef::F32(s), false, kk, rs)
+            }),
+            ps_bwd: ps.map(|(s, kk, rs)| {
+                linalg::PackedMat::pack_b(linalg::MatRef::F32(s), true, rs, kk)
+            }),
+        }
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.po_proj.nbytes()
+            + self.po_rest.nbytes()
+            + self.pi_proj.nbytes()
+            + self.pi_rest.nbytes()
+            + self.ps_fwd.as_ref().map_or(0, |p| p.nbytes())
+            + self.ps_bwd.as_ref().map_or(0, |p| p.nbytes())
+    }
+
+    pub fn is_current(&self) -> bool {
+        self.po_proj.is_current()
+            && self.po_rest.is_current()
+            && self.pi_proj.is_current()
+            && self.pi_rest.is_current()
+            && self.ps_fwd.as_ref().is_none_or(|p| p.is_current())
+            && self.ps_bwd.as_ref().is_none_or(|p| p.is_current())
+    }
+}
+
+/// One slot's cached projection panels, threaded from `optim::lowrank`
+/// through `Backend::exec_with_state_packed` into the fused kernels.
+pub enum ProjPack {
+    Matrix(MatrixPanels),
+    Conv(ConvPanels),
+}
+
+impl ProjPack {
+    /// Retained cache bytes (the `MemoryBreakdown::pack_cache` unit).
+    pub fn nbytes(&self) -> usize {
+        match self {
+            ProjPack::Matrix(p) => p.nbytes(),
+            ProjPack::Conv(p) => p.nbytes(),
+        }
+    }
+
+    /// Were all panels built under the currently dispatched kernel set?
+    pub fn is_current(&self) -> bool {
+        match self {
+            ProjPack::Matrix(p) => p.is_current(),
+            ProjPack::Conv(p) => p.is_current(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Fused state-view kernels (the quantized optimizer-state path)
 //
 // Same update rules as the slice oracles above, but the moments arrive
@@ -583,8 +707,23 @@ pub fn adam_update_view(
     b1t: f32,
     b2t: f32,
 ) -> Vec<f32> {
-    assert_eq!(m.len(), g.len(), "adam_update_view: m/g length mismatch");
     let mut delta = vec![0.0f32; g.len()];
+    adam_update_view_into(m, v, g, b1t, b2t, &mut delta);
+    delta
+}
+
+/// [`adam_update_view`] writing into a caller-provided buffer (the step
+/// arena reuses it across steps); every element of `delta` is written.
+pub fn adam_update_view_into(
+    m: &mut StateView,
+    v: &mut StateView,
+    g: &[f32],
+    b1t: f32,
+    b2t: f32,
+    delta: &mut [f32],
+) {
+    assert_eq!(m.len(), g.len(), "adam_update_view: m/g length mismatch");
+    assert_eq!(delta.len(), g.len(), "adam_update_view: delta/g length mismatch");
     state::stream2(m, v, |off, mb, vb| {
         let gb = &g[off..off + mb.len()];
         let db = &mut delta[off..off + mb.len()];
@@ -596,7 +735,6 @@ pub fn adam_update_view(
             db[i] = mh / (vh.sqrt() + EPS);
         }
     });
-    delta
 }
 
 /// Fused Adafactor-with-momentum update: factored rows/cols update as
@@ -611,7 +749,27 @@ pub fn adafactor_delta_view(
     cols: usize,
     t: usize,
 ) -> Vec<f32> {
+    let mut delta = vec![0.0f32; rows * cols];
+    adafactor_delta_view_into(mom, r_fac, c_fac, g, rows, cols, t, &mut delta);
+    delta
+}
+
+/// [`adafactor_delta_view`] writing into a caller-provided buffer (the
+/// step arena reuses it across steps); every element of `delta` is
+/// written.
+#[allow(clippy::too_many_arguments)]
+pub fn adafactor_delta_view_into(
+    mom: &mut StateView,
+    r_fac: &mut [f32],
+    c_fac: &mut [f32],
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    t: usize,
+    delta: &mut [f32],
+) {
     assert_eq!(mom.len(), rows * cols, "adafactor_delta_view: mom length mismatch");
+    assert_eq!(delta.len(), rows * cols, "adafactor_delta_view: delta length mismatch");
     let beta2t = 1.0 - (t as f32).powf(AF_DECAY);
     for i in 0..rows {
         let sum: f32 = (0..cols).map(|j| g[i * cols + j].powi(2) + AF_EPS).sum();
@@ -622,7 +780,6 @@ pub fn adafactor_delta_view(
         c_fac[j] = beta2t * c_fac[j] + (1.0 - beta2t) * sum;
     }
     let rmean: f32 = r_fac.iter().sum::<f32>() / rows as f32;
-    let mut delta = vec![0.0f32; rows * cols];
     state::stream1(mom, |off, mb| {
         // Track (i, j) incrementally — one div/mod per block, not per
         // element (same values, bit-identical to the slice twin).
@@ -639,7 +796,6 @@ pub fn adafactor_delta_view(
             }
         }
     });
-    delta
 }
 
 /// Fused full-rank Adam(W) step (`adam_step` graph). Returns (w', ceu);
@@ -654,8 +810,11 @@ pub fn adam_step_state(
     lr: f32,
     wd: f32,
 ) -> (Vec<f32>, f32) {
-    let delta = adam_update_view(m, v, g, b1t, b2t);
-    apply_update(w, &delta, lr, wd)
+    let mut delta = arena::take(g.len());
+    adam_update_view_into(m, v, g, b1t, b2t, &mut delta);
+    let out = apply_update(w, &delta, lr, wd);
+    arena::give(delta);
+    out
 }
 
 /// Fused full-rank Adafactor step (`adafactor_step` graph).
@@ -670,14 +829,18 @@ pub fn adafactor_step_state(
     t: usize,
     lr: f32,
 ) -> (Vec<f32>, f32) {
-    let delta = rf.with_f32(|r_s| {
-        cf.with_f32(|c_s| adafactor_delta_view(m, r_s, c_s, g, rows, cols, t))
+    let mut delta = arena::take(rows * cols);
+    rf.with_f32(|r_s| {
+        cf.with_f32(|c_s| adafactor_delta_view_into(m, r_s, c_s, g, rows, cols, t, &mut delta))
     });
-    apply_update(w, &delta, lr, 0.0)
+    let out = apply_update(w, &delta, lr, 0.0);
+    arena::give(delta);
+    out
 }
 
 /// Fused projected Adam step (`coap_adam_step` graph): project the
 /// gradient, stream the low-rank moments, restore the update.
+#[allow(clippy::too_many_arguments)]
 pub fn coap_adam_step_state(
     w: &[f32],
     g: &[f32],
@@ -692,16 +855,60 @@ pub fn coap_adam_step_state(
     lr: f32,
     wd: f32,
 ) -> (Vec<f32>, f32) {
+    coap_adam_step_state_packed(w, g, m, v, p, None, rows, cols, rank, b1t, b2t, lr, wd)
+}
+
+/// [`coap_adam_step_state`] with optional pre-packed projection panels:
+/// `Some(panels)` replays the cached P panels (bit-identical, skips the
+/// per-step pack phase), `None` packs from `p` as before. Transients
+/// come from the step arena.
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adam_step_state_packed(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    v: &mut StateView,
+    p: &[f32],
+    panels: Option<&MatrixPanels>,
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, f32) {
     let (mb, nb) = (rows.max(cols), rows.min(cols));
     let (gn, transpose) = normalize(g, rows, cols);
-    let g_proj = linalg::gemm_nn(None, &gn, p, mb, nb, rank); // (mb, r)
-    let delta = adam_update_view(m, v, &g_proj, b1t, b2t);
-    let dw_n = linalg::gemm_nt(None, &delta, p, mb, rank, nb); // delta·Pᵀ
-    let dw = if transpose { linalg::transpose(&dw_n, mb, nb) } else { dw_n };
-    apply_update(w, &dw, lr, wd)
+    let mut g_proj = arena::take(mb * rank); // (mb, r)
+    match panels {
+        Some(pp) => linalg::gemm_nn_packed_into(&mut g_proj, &gn, &pp.fwd, mb, nb, rank),
+        None => linalg::gemm_nn_into(None, &mut g_proj, &gn, p, mb, nb, rank),
+    }
+    let mut delta = arena::take(mb * rank);
+    adam_update_view_into(m, v, &g_proj, b1t, b2t, &mut delta);
+    arena::give(g_proj);
+    let mut dw_n = arena::take(mb * nb); // delta·Pᵀ
+    match panels {
+        Some(pp) => linalg::gemm_nt_packed_into(&mut dw_n, &delta, &pp.bwd, mb, rank, nb),
+        None => linalg::gemm_nt_into(None, &mut dw_n, &delta, p, mb, rank, nb),
+    }
+    arena::give(delta);
+    let out = if transpose {
+        let mut dw = arena::take(mb * nb);
+        linalg::transpose_into(&mut dw, &dw_n, mb, nb);
+        let out = apply_update(w, &dw, lr, wd);
+        arena::give(dw);
+        out
+    } else {
+        apply_update(w, &dw_n, lr, wd)
+    };
+    arena::give(dw_n);
+    out
 }
 
 /// Fused projected Adafactor step (`coap_adafactor_step` graph).
+#[allow(clippy::too_many_arguments)]
 pub fn coap_adafactor_step_state(
     w: &[f32],
     g: &[f32],
@@ -715,18 +922,122 @@ pub fn coap_adafactor_step_state(
     t: usize,
     lr: f32,
 ) -> (Vec<f32>, f32) {
+    coap_adafactor_step_state_packed(w, g, m, rf, cf, p, None, rows, cols, rank, t, lr)
+}
+
+/// [`coap_adafactor_step_state`] with optional pre-packed P panels.
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adafactor_step_state_packed(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    rf: &mut StateView,
+    cf: &mut StateView,
+    p: &[f32],
+    panels: Option<&MatrixPanels>,
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    t: usize,
+    lr: f32,
+) -> (Vec<f32>, f32) {
     let (mb, nb) = (rows.max(cols), rows.min(cols));
     let (gn, transpose) = normalize(g, rows, cols);
-    let g_proj = linalg::gemm_nn(None, &gn, p, mb, nb, rank); // (mb, r)
-    let delta = rf.with_f32(|r_s| {
-        cf.with_f32(|c_s| adafactor_delta_view(m, r_s, c_s, &g_proj, mb, rank, t))
+    let mut g_proj = arena::take(mb * rank); // (mb, r)
+    match panels {
+        Some(pp) => linalg::gemm_nn_packed_into(&mut g_proj, &gn, &pp.fwd, mb, nb, rank),
+        None => linalg::gemm_nn_into(None, &mut g_proj, &gn, p, mb, nb, rank),
+    }
+    let mut delta = arena::take(mb * rank);
+    rf.with_f32(|r_s| {
+        cf.with_f32(|c_s| adafactor_delta_view_into(m, r_s, c_s, &g_proj, mb, rank, t, &mut delta))
     });
-    let dw_n = linalg::gemm_nt(None, &delta, p, mb, rank, nb); // delta·Pᵀ
-    let dw = if transpose { linalg::transpose(&dw_n, mb, nb) } else { dw_n };
-    apply_update(w, &dw, lr, 0.0)
+    arena::give(g_proj);
+    let mut dw_n = arena::take(mb * nb); // delta·Pᵀ
+    match panels {
+        Some(pp) => linalg::gemm_nt_packed_into(&mut dw_n, &delta, &pp.bwd, mb, rank, nb),
+        None => linalg::gemm_nt_into(None, &mut dw_n, &delta, p, mb, rank, nb),
+    }
+    arena::give(delta);
+    let out = if transpose {
+        let mut dw = arena::take(mb * nb);
+        linalg::transpose_into(&mut dw, &dw_n, mb, nb);
+        let out = apply_update(w, &dw, lr, 0.0);
+        arena::give(dw);
+        out
+    } else {
+        apply_update(w, &dw_n, lr, 0.0)
+    };
+    arena::give(dw_n);
+    out
+}
+
+/// `conv_proj_i(conv_proj_o(g))` with optional cached PO/PI panels and
+/// arena transients; returns an arena buffer (caller `give`s it back).
+#[allow(clippy::too_many_arguments)]
+fn conv_project_arena(
+    g: &[f32],
+    o: usize,
+    i: usize,
+    kk: usize,
+    po: &[f32],
+    pi: &[f32],
+    ro: usize,
+    ri: usize,
+    panels: Option<&ConvPanels>,
+) -> Vec<f32> {
+    let mut t1 = arena::take(ro * i * kk);
+    match panels {
+        Some(pp) => linalg::gemm_tn_packed_into(&mut t1, &pp.po_proj, g, o, ro, i * kk),
+        None => linalg::gemm_tn_into(None, &mut t1, po, g, o, ro, i * kk),
+    }
+    let mut out = arena::take(ro * ri * kk);
+    for xx in 0..ro {
+        let dst = &mut out[xx * ri * kk..(xx + 1) * ri * kk];
+        let src = &t1[xx * i * kk..(xx + 1) * i * kk];
+        match panels {
+            Some(pp) => linalg::gemm_tn_packed_into(dst, &pp.pi_proj, src, i, ri, kk),
+            None => linalg::gemm_tn_into(None, dst, pi, src, i, ri, kk),
+        }
+    }
+    arena::give(t1);
+    out
+}
+
+/// `conv_restore_i(conv_restore_o(delta))` with optional cached PO/PI
+/// panels; returns an arena buffer (caller `give`s it back).
+#[allow(clippy::too_many_arguments)]
+fn conv_restore_arena(
+    delta: &[f32],
+    o: usize,
+    i: usize,
+    kk: usize,
+    po: &[f32],
+    pi: &[f32],
+    ro: usize,
+    ri: usize,
+    panels: Option<&ConvPanels>,
+) -> Vec<f32> {
+    let mut r1 = arena::take(o * ri * kk);
+    match panels {
+        Some(pp) => linalg::gemm_nn_packed_a_into(&mut r1, &pp.po_rest, delta, o, ro, ri * kk),
+        None => linalg::gemm_nn_into(None, &mut r1, po, delta, o, ro, ri * kk),
+    }
+    let mut out = arena::take(o * i * kk);
+    for xx in 0..o {
+        let dst = &mut out[xx * i * kk..(xx + 1) * i * kk];
+        let src = &r1[xx * ri * kk..(xx + 1) * ri * kk];
+        match panels {
+            Some(pp) => linalg::gemm_nn_packed_a_into(dst, &pp.pi_rest, src, i, ri, kk),
+            None => linalg::gemm_nn_into(None, dst, pi, src, i, ri, kk),
+        }
+    }
+    arena::give(r1);
+    out
 }
 
 /// Fused Tucker-2 projected Adam conv step (`coap_adam_conv_step`).
+#[allow(clippy::too_many_arguments)]
 pub fn coap_adam_conv_step_state(
     w: &[f32],
     g: &[f32],
@@ -742,15 +1053,42 @@ pub fn coap_adam_conv_step_state(
     lr: f32,
     wd: f32,
 ) -> (Vec<f32>, f32) {
+    coap_adam_conv_step_state_packed(w, g, m, v, po, pi, None, shape, ro, ri, b1t, b2t, lr, wd)
+}
+
+/// [`coap_adam_conv_step_state`] with optional pre-packed PO/PI panels.
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adam_conv_step_state_packed(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    v: &mut StateView,
+    po: &[f32],
+    pi: &[f32],
+    panels: Option<&ConvPanels>,
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, f32) {
     let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
-    let g_proj = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
-    let delta = adam_update_view(m, v, &g_proj, b1t, b2t);
-    let dw = conv_restore_i(&conv_restore_o(&delta, ro, ri, kk, po, o), o, ri, kk, pi, i);
-    apply_update(w, &dw, lr, wd)
+    let g_proj = conv_project_arena(g, o, i, kk, po, pi, ro, ri, panels);
+    let mut delta = arena::take(ro * ri * kk);
+    adam_update_view_into(m, v, &g_proj, b1t, b2t, &mut delta);
+    arena::give(g_proj);
+    let dw = conv_restore_arena(&delta, o, i, kk, po, pi, ro, ri, panels);
+    arena::give(delta);
+    let out = apply_update(w, &dw, lr, wd);
+    arena::give(dw);
+    out
 }
 
 /// Fused Tucker-2 projected Adafactor conv step
 /// (`coap_adafactor_conv_step`).
+#[allow(clippy::too_many_arguments)]
 pub fn coap_adafactor_conv_step_state(
     w: &[f32],
     g: &[f32],
@@ -765,16 +1103,44 @@ pub fn coap_adafactor_conv_step_state(
     t: usize,
     lr: f32,
 ) -> (Vec<f32>, f32) {
+    coap_adafactor_conv_step_state_packed(w, g, m, rf, cf, po, pi, None, shape, ro, ri, t, lr)
+}
+
+/// [`coap_adafactor_conv_step_state`] with optional pre-packed panels.
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adafactor_conv_step_state_packed(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    rf: &mut StateView,
+    cf: &mut StateView,
+    po: &[f32],
+    pi: &[f32],
+    panels: Option<&ConvPanels>,
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    t: usize,
+    lr: f32,
+) -> (Vec<f32>, f32) {
     let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
-    let g_proj = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
-    let delta = rf.with_f32(|r_s| {
-        cf.with_f32(|c_s| adafactor_delta_view(m, r_s, c_s, &g_proj, ro, ri * kk, t))
+    let g_proj = conv_project_arena(g, o, i, kk, po, pi, ro, ri, panels);
+    let mut delta = arena::take(ro * ri * kk);
+    rf.with_f32(|r_s| {
+        cf.with_f32(|c_s| {
+            adafactor_delta_view_into(m, r_s, c_s, &g_proj, ro, ri * kk, t, &mut delta)
+        })
     });
-    let dw = conv_restore_i(&conv_restore_o(&delta, ro, ri, kk, po, o), o, ri, kk, pi, i);
-    apply_update(w, &dw, lr, 0.0)
+    arena::give(g_proj);
+    let dw = conv_restore_arena(&delta, o, i, kk, po, pi, ro, ri, panels);
+    arena::give(delta);
+    let out = apply_update(w, &dw, lr, 0.0);
+    arena::give(dw);
+    out
 }
 
 /// Fused "full Tucker" conv Adam step (`coap_adam_convfull_step`).
+#[allow(clippy::too_many_arguments)]
 pub fn coap_adam_convfull_step_state(
     w: &[f32],
     g: &[f32],
@@ -792,13 +1158,69 @@ pub fn coap_adam_convfull_step_state(
     lr: f32,
     wd: f32,
 ) -> (Vec<f32>, f32) {
+    coap_adam_convfull_step_state_packed(
+        w,
+        g,
+        m,
+        v,
+        po,
+        pi,
+        ps,
+        None,
+        shape,
+        ro,
+        ri,
+        rs,
+        b1t,
+        b2t,
+        lr,
+        wd,
+    )
+}
+
+/// [`coap_adam_convfull_step_state`] with optional pre-packed panels
+/// (PO/PI A-side plus the PS spatial B-side pair).
+#[allow(clippy::too_many_arguments)]
+pub fn coap_adam_convfull_step_state_packed(
+    w: &[f32],
+    g: &[f32],
+    m: &mut StateView,
+    v: &mut StateView,
+    po: &[f32],
+    pi: &[f32],
+    ps: &[f32],
+    panels: Option<&ConvPanels>,
+    shape: &[usize],
+    ro: usize,
+    ri: usize,
+    rs: usize,
+    b1t: f32,
+    b2t: f32,
+    lr: f32,
+    wd: f32,
+) -> (Vec<f32>, f32) {
     let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
-    let g2 = conv_proj_i(&conv_proj_o(g, o, i, kk, po, ro), ro, i, kk, pi, ri);
-    let g3 = linalg::gemm_nn(None, &g2, ps, ro * ri, kk, rs);
-    let delta = adam_update_view(m, v, &g3, b1t, b2t);
-    let dk = linalg::gemm_nt(None, &delta, ps, ro * ri, rs, kk);
-    let dw = conv_restore_i(&conv_restore_o(&dk, ro, ri, kk, po, o), o, ri, kk, pi, i);
-    apply_update(w, &dw, lr, wd)
+    let g2 = conv_project_arena(g, o, i, kk, po, pi, ro, ri, panels);
+    let mut g3 = arena::take(ro * ri * rs);
+    match panels.and_then(|pp| pp.ps_fwd.as_ref()) {
+        Some(pf) => linalg::gemm_nn_packed_into(&mut g3, &g2, pf, ro * ri, kk, rs),
+        None => linalg::gemm_nn_into(None, &mut g3, &g2, ps, ro * ri, kk, rs),
+    }
+    arena::give(g2);
+    let mut delta = arena::take(ro * ri * rs);
+    adam_update_view_into(m, v, &g3, b1t, b2t, &mut delta);
+    arena::give(g3);
+    let mut dk = arena::take(ro * ri * kk);
+    match panels.and_then(|pp| pp.ps_bwd.as_ref()) {
+        Some(pb) => linalg::gemm_nt_packed_into(&mut dk, &delta, pb, ro * ri, rs, kk),
+        None => linalg::gemm_nt_into(None, &mut dk, &delta, ps, ro * ri, rs, kk),
+    }
+    arena::give(delta);
+    let dw = conv_restore_arena(&dk, o, i, kk, po, pi, ro, ri, panels);
+    arena::give(dk);
+    let out = apply_update(w, &dw, lr, wd);
+    arena::give(dw);
+    out
 }
 
 // --- Tucker-2 conv mode products (OIHW, row-major) --------------------------
@@ -1155,6 +1577,189 @@ mod tests {
         assert_eq!(ceu_ref, ceu_fused);
         assert_eq!(qm, quant::quantize(&m_ref), "fused m requant drifted");
         assert_eq!(qv, quant::quantize(&v_ref), "fused v requant drifted");
+    }
+
+    /// Panel-cache pin: every `*_state_packed` kernel with `Some(panels)`
+    /// is bit-identical to its unpacked twin — weights, ceu and the
+    /// updated moments (the PackedMat replay contract, end to end).
+    #[test]
+    fn packed_fused_kernels_bit_match_unpacked() {
+        let mut rng = Rng::new(21);
+        // Matrix slot (Adam + Adafactor), f32 states.
+        let (m, n, r) = (33usize, 20usize, 5usize);
+        let (mb, nb) = (m.max(n), m.min(n));
+        let w = rng.normal_vec(m * n, 0.1);
+        let g = rng.normal_vec(m * n, 0.02);
+        let p = mgs_qr(&randmat(&mut rng, nb, r));
+        let panels = MatrixPanels::build(p.f32s(), nb, r);
+        assert!(panels.nbytes() > 0 && panels.is_current());
+        let m0 = rng.normal_vec(mb * r, 0.01);
+        let v0: Vec<f32> = rng.normal_vec(mb * r, 0.001).iter().map(|x| x.abs()).collect();
+        let (mut ma, mut va) = (m0.clone(), v0.clone());
+        let (mut mp, mut vp) = (m0.clone(), v0.clone());
+        let plain = coap_adam_step_state(
+            &w,
+            &g,
+            &mut StateView::F32(&mut ma),
+            &mut StateView::F32(&mut va),
+            p.f32s(),
+            m,
+            n,
+            r,
+            0.9,
+            0.999,
+            0.01,
+            0.1,
+        );
+        let packed = coap_adam_step_state_packed(
+            &w,
+            &g,
+            &mut StateView::F32(&mut mp),
+            &mut StateView::F32(&mut vp),
+            p.f32s(),
+            Some(&panels),
+            m,
+            n,
+            r,
+            0.9,
+            0.999,
+            0.01,
+            0.1,
+        );
+        assert_eq!(plain, packed, "packed matrix adam step drifted");
+        assert_eq!(ma, mp);
+        assert_eq!(va, vp);
+
+        let (mut moma, mut ra, mut ca) = (m0.clone(), vec![0.0f32; mb], vec![0.0f32; r]);
+        let (mut momp, mut rp, mut cp) = (m0.clone(), vec![0.0f32; mb], vec![0.0f32; r]);
+        let plain = coap_adafactor_step_state(
+            &w,
+            &g,
+            &mut StateView::F32(&mut moma),
+            &mut StateView::F32(&mut ra),
+            &mut StateView::F32(&mut ca),
+            p.f32s(),
+            m,
+            n,
+            r,
+            3,
+            0.01,
+        );
+        let packed = coap_adafactor_step_state_packed(
+            &w,
+            &g,
+            &mut StateView::F32(&mut momp),
+            &mut StateView::F32(&mut rp),
+            &mut StateView::F32(&mut cp),
+            p.f32s(),
+            Some(&panels),
+            m,
+            n,
+            r,
+            3,
+            0.01,
+        );
+        assert_eq!(plain, packed, "packed matrix adafactor step drifted");
+        assert_eq!((moma, ra, ca), (momp, rp, cp));
+
+        // Conv slot (Tucker-2 and full Tucker).
+        let shape = [6usize, 5, 3, 3];
+        let (o, i, kk) = (shape[0], shape[1], shape[2] * shape[3]);
+        let (ro, ri, rs) = (3usize, 2usize, 4usize);
+        let wc = rng.normal_vec(o * i * kk, 0.1);
+        let gc = rng.normal_vec(o * i * kk, 0.02);
+        let po = mgs_qr(&randmat(&mut rng, o, ro));
+        let pi = mgs_qr(&randmat(&mut rng, i, ri));
+        let ps = mgs_qr(&randmat(&mut rng, kk, rs));
+        let cpanels = ConvPanels::build(
+            po.f32s(),
+            o,
+            ro,
+            pi.f32s(),
+            i,
+            ri,
+            Some((ps.f32s(), kk, rs)),
+        );
+        assert!(cpanels.is_current());
+        let mc0 = rng.normal_vec(ro * ri * kk, 0.01);
+        let vc0: Vec<f32> = rng.normal_vec(ro * ri * kk, 0.001).iter().map(|x| x.abs()).collect();
+        let (mut ma, mut va) = (mc0.clone(), vc0.clone());
+        let (mut mp, mut vp) = (mc0.clone(), vc0.clone());
+        let plain = coap_adam_conv_step_state(
+            &wc,
+            &gc,
+            &mut StateView::F32(&mut ma),
+            &mut StateView::F32(&mut va),
+            po.f32s(),
+            pi.f32s(),
+            &shape,
+            ro,
+            ri,
+            0.9,
+            0.999,
+            0.01,
+            0.0,
+        );
+        let packed = coap_adam_conv_step_state_packed(
+            &wc,
+            &gc,
+            &mut StateView::F32(&mut mp),
+            &mut StateView::F32(&mut vp),
+            po.f32s(),
+            pi.f32s(),
+            Some(&cpanels),
+            &shape,
+            ro,
+            ri,
+            0.9,
+            0.999,
+            0.01,
+            0.0,
+        );
+        assert_eq!(plain, packed, "packed conv adam step drifted");
+        assert_eq!((ma, va), (mp, vp));
+
+        let ms0 = rng.normal_vec(ro * ri * rs, 0.01);
+        let vs0: Vec<f32> = rng.normal_vec(ro * ri * rs, 0.001).iter().map(|x| x.abs()).collect();
+        let (mut ma, mut va) = (ms0.clone(), vs0.clone());
+        let (mut mp, mut vp) = (ms0.clone(), vs0.clone());
+        let plain = coap_adam_convfull_step_state(
+            &wc,
+            &gc,
+            &mut StateView::F32(&mut ma),
+            &mut StateView::F32(&mut va),
+            po.f32s(),
+            pi.f32s(),
+            ps.f32s(),
+            &shape,
+            ro,
+            ri,
+            rs,
+            0.9,
+            0.999,
+            0.01,
+            0.0,
+        );
+        let packed = coap_adam_convfull_step_state_packed(
+            &wc,
+            &gc,
+            &mut StateView::F32(&mut mp),
+            &mut StateView::F32(&mut vp),
+            po.f32s(),
+            pi.f32s(),
+            ps.f32s(),
+            Some(&cpanels),
+            &shape,
+            ro,
+            ri,
+            rs,
+            0.9,
+            0.999,
+            0.01,
+            0.0,
+        );
+        assert_eq!(plain, packed, "packed convfull adam step drifted");
+        assert_eq!((ma, va), (mp, vp));
     }
 
     #[test]

@@ -114,6 +114,24 @@ pub trait Backend: Send + Sync {
         Ok(kept)
     }
 
+    /// [`Backend::exec_with_state`] plus an optional set of pre-packed
+    /// projection panels (`optim::refimpl::ProjPack`) cached by the
+    /// caller across steps. Engines that run the fused native kernels
+    /// (the native backend) thread the panels into the GEMM layer so the
+    /// steady-state step skips the per-operand pack phase; the result is
+    /// bit-identical with or without panels (the `PackedMat` replay
+    /// contract), so the default simply ignores them.
+    fn exec_with_state_packed(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        states: &mut [StateView],
+        pack: Option<&crate::optim::refimpl::ProjPack>,
+    ) -> Result<Vec<Tensor>> {
+        let _ = pack;
+        self.exec_with_state(name, inputs, states)
+    }
+
     /// Whether [`Backend::exec_with_state`] streams compressed states in
     /// place (no full f32 materialization). Feeds the transient-memory
     /// accounting (`Optimizer::state_transient_bytes`).

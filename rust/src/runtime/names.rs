@@ -7,6 +7,25 @@
 //! models:       train_step__{model}, eval_step__{model}
 //! ```
 
+/// A minted graph name interned by an engine's plan cache: an opaque
+/// dense index into that engine's compiled-plan table. Minting and
+/// parsing still speak strings (the cross-engine contract above); the
+/// id only exists so the steady-state exec path can swap repeated
+/// `format!` + parse for one hash lookup. Ids are engine-local — never
+/// compare ids from different backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GraphId(usize);
+
+impl GraphId {
+    pub fn new(index: usize) -> GraphId {
+        GraphId(index)
+    }
+
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
 /// Divide a dimension by the rank ratio, guarding non-finite / non-
 /// positive ratios (treated as 1.0, i.e. full rank).
 fn ratio_rank(dim: usize, ratio: f64) -> usize {
@@ -71,6 +90,14 @@ pub fn normalized(m: usize, n: usize) -> (usize, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn graph_id_is_a_dense_index() {
+        let id = GraphId::new(7);
+        assert_eq!(id.index(), 7);
+        assert_eq!(id, GraphId::new(7));
+        assert_ne!(id, GraphId::new(8));
+    }
 
     #[test]
     fn names_match_python_convention() {

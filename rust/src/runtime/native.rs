@@ -11,7 +11,7 @@
 //! off the *name's* shapes and validate inputs by element count, exactly
 //! like the XLA backend does.
 
-use super::{Backend, ExperimentInfo, ModelInfo};
+use super::{names, Backend, ExperimentInfo, ModelInfo};
 use crate::model::{nativenet, zoo};
 use crate::optim::refimpl;
 use crate::tensor::linalg::MatRef;
@@ -20,12 +20,20 @@ use crate::tensor::{linalg, Tensor};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, HashMap};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 pub struct NativeBackend {
     models: BTreeMap<String, ModelInfo>,
-    /// Cumulative executions per graph (perf accounting).
-    pub exec_counts: Mutex<HashMap<String, u64>>,
+    /// Compiled-plan cache: graph name → interned [`names::GraphId`] →
+    /// [`ExecPlan`]. A name is parsed (template + spec + kernel handler)
+    /// exactly once; the steady-state exec path is one read-locked hash
+    /// lookup plus an atomic counter bump.
+    plans: RwLock<PlanTable>,
+    /// Number of plans compiled since construction. Flat across
+    /// steady-state steps — the zero-reparsing proof the steady-state
+    /// suite asserts on.
+    plan_builds: AtomicU64,
     /// Row-block GEMM parallelism for model fwd/bwd (`train_step__*` /
     /// `eval_step__*`). `None` => serial (the [`NativeBackend::new`]
     /// default, and what every pre-existing test constructs). The
@@ -34,6 +42,34 @@ pub struct NativeBackend {
     /// (The `Mutex` only exists to keep the backend `Sync`; the trainer
     /// drives fwd/bwd from a single thread.)
     pool: Option<Mutex<ThreadPool>>,
+}
+
+#[derive(Default)]
+struct PlanTable {
+    by_name: HashMap<String, names::GraphId>,
+    plans: Vec<Arc<ExecPlan>>,
+}
+
+/// One kernel-group dispatcher, resolved at plan-build time so the
+/// per-step path never re-matches the template string.
+type KernelFn = fn(&str, &'static str, &Spec, &[&Tensor]) -> Result<Vec<Tensor>>;
+
+/// A graph name compiled once: template interned into a `&'static str`
+/// from the template tables, spec parsed, model census entry / kernel
+/// handler resolved, and a lock-free execution counter.
+struct ExecPlan {
+    kind: PlanKind,
+    count: AtomicU64,
+}
+
+enum PlanKind {
+    /// `train_step__<model>` with the census entry resolved at build.
+    TrainStep(ModelInfo),
+    /// `eval_step__<model>` with the census entry resolved at build.
+    EvalStep(ModelInfo),
+    /// A minted kernel graph. `step` records whether the template
+    /// honours the fused `exec_with_state` operand contract.
+    Kernel { tpl: &'static str, spec: Spec, step: bool, kernel: KernelFn },
 }
 
 impl Default for NativeBackend {
@@ -54,7 +90,8 @@ impl NativeBackend {
     pub fn with_threads(threads: usize) -> NativeBackend {
         NativeBackend {
             models: zoo::models().into_iter().map(|m| (m.name.clone(), m)).collect(),
-            exec_counts: Mutex::new(HashMap::new()),
+            plans: RwLock::new(PlanTable::default()),
+            plan_builds: AtomicU64::new(0),
             pool: if threads > 1 { Some(Mutex::new(ThreadPool::new(threads))) } else { None },
         }
     }
@@ -63,6 +100,76 @@ impl NativeBackend {
         self.models
             .get(name)
             .ok_or_else(|| anyhow!("model '{name}' not in the native zoo"))
+    }
+
+    /// Look up (or compile and intern) the plan for `name`. Failures are
+    /// not cached, so a bad name errors identically on every call.
+    fn plan(&self, name: &str) -> Result<Arc<ExecPlan>> {
+        let hit = {
+            let t = self.plans.read().expect("plan table poisoned");
+            t.by_name.get(name).map(|id| t.plans[id.index()].clone())
+        };
+        if let Some(p) = hit {
+            return Ok(p);
+        }
+        let plan = Arc::new(self.build_plan(name)?);
+        let mut t = self.plans.write().expect("plan table poisoned");
+        if let Some(id) = t.by_name.get(name) {
+            // Raced with another thread compiling the same name: keep
+            // the interned plan so counters stay unified.
+            return Ok(t.plans[id.index()].clone());
+        }
+        self.plan_builds.fetch_add(1, Ordering::Relaxed);
+        let id = names::GraphId::new(t.plans.len());
+        t.plans.push(plan.clone());
+        t.by_name.insert(name.to_string(), id);
+        Ok(plan)
+    }
+
+    fn build_plan(&self, name: &str) -> Result<ExecPlan> {
+        let (tpl, spec_str) = name
+            .split_once("__")
+            .ok_or_else(|| anyhow!("'{name}' is not a minted graph name"))?;
+        let kind = match tpl {
+            "train_step" => PlanKind::TrainStep(self.model_ref(spec_str)?.clone()),
+            "eval_step" => PlanKind::EvalStep(self.model_ref(spec_str)?.clone()),
+            _ => {
+                let Some(itpl) = KERNEL_TEMPLATES.iter().copied().find(|t| *t == tpl) else {
+                    bail!(
+                        "graph '{name}': template '{tpl}' not implemented by the native backend"
+                    );
+                };
+                let spec = parse_spec(spec_str)
+                    .ok_or_else(|| anyhow!("graph '{name}': unparseable shape spec"))?;
+                PlanKind::Kernel {
+                    tpl: itpl,
+                    spec,
+                    step: STEP_TEMPLATES.contains(&itpl),
+                    kernel: kernel_handler(itpl),
+                }
+            }
+        };
+        Ok(ExecPlan { kind, count: AtomicU64::new(0) })
+    }
+
+    /// Cumulative executions per graph — the same map shape the old
+    /// `Mutex<HashMap>` field exposed (only executed graphs appear),
+    /// rebuilt from the per-plan atomic counters.
+    pub fn exec_counts(&self) -> HashMap<String, u64> {
+        let t = self.plans.read().expect("plan table poisoned");
+        t.by_name
+            .iter()
+            .filter_map(|(name, id)| {
+                let c = t.plans[id.index()].count.load(Ordering::Relaxed);
+                (c > 0).then(|| (name.clone(), c))
+            })
+            .collect()
+    }
+
+    /// Plans compiled (graph names parsed + resolved) since
+    /// construction. See [`names::GraphId`].
+    pub fn plan_builds(&self) -> u64 {
+        self.plan_builds.load(Ordering::Relaxed)
     }
 }
 
@@ -166,32 +273,19 @@ impl Backend for NativeBackend {
     }
 
     fn exec(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let (tpl, spec_str) = name
-            .split_once("__")
-            .ok_or_else(|| anyhow!("'{name}' is not a minted graph name"))?;
-
-        let pool_guard = match tpl {
-            "train_step" | "eval_step" => {
-                self.pool.as_ref().map(|p| p.lock().expect("gemm pool poisoned"))
+        let plan = self.plan(name)?;
+        let out = match &plan.kind {
+            PlanKind::TrainStep(mi) => {
+                let guard = self.pool.as_ref().map(|p| p.lock().expect("gemm pool poisoned"));
+                nativenet::train_step(mi, inputs, guard.as_deref())?
             }
-            _ => None,
-        };
-        let pool = pool_guard.as_deref();
-        let out = match tpl {
-            "train_step" => nativenet::train_step(self.model_ref(spec_str)?, inputs, pool)?,
-            "eval_step" => nativenet::eval_step(self.model_ref(spec_str)?, inputs, pool)?,
-            _ => {
-                let spec = parse_spec(spec_str)
-                    .ok_or_else(|| anyhow!("graph '{name}': unparseable shape spec"))?;
-                self.exec_kernel(name, tpl, &spec, inputs)?
+            PlanKind::EvalStep(mi) => {
+                let guard = self.pool.as_ref().map(|p| p.lock().expect("gemm pool poisoned"));
+                nativenet::eval_step(mi, inputs, guard.as_deref())?
             }
+            PlanKind::Kernel { tpl, spec, kernel, .. } => kernel(name, tpl, spec, inputs)?,
         };
-        *self
-            .exec_counts
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_insert(0) += 1;
+        plan.count.fetch_add(1, Ordering::Relaxed);
         Ok(out)
     }
 
@@ -204,22 +298,29 @@ impl Backend for NativeBackend {
         inputs: &[&Tensor],
         states: &mut [StateView],
     ) -> Result<Vec<Tensor>> {
-        let Some((tpl, spec_str)) = name.split_once("__") else {
-            bail!("'{name}' is not a minted graph name");
-        };
-        if !STEP_TEMPLATES.contains(&tpl) {
-            return self.exec_with_state_roundtrip(name, inputs, states);
+        self.exec_with_state_packed(name, inputs, states, None)
+    }
+
+    /// Fused path with optional cached projection panels threaded into
+    /// the kernel layer (bit-identical with or without them).
+    fn exec_with_state_packed(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        states: &mut [StateView],
+        pack: Option<&refimpl::ProjPack>,
+    ) -> Result<Vec<Tensor>> {
+        let plan = self.plan(name)?;
+        match &plan.kind {
+            PlanKind::Kernel { tpl, spec, step: true, .. } => {
+                let out = exec_step_fused(name, tpl, spec, inputs, states, pack)?;
+                plan.count.fetch_add(1, Ordering::Relaxed);
+                Ok(out)
+            }
+            // Non-step graphs take the round trip (which counts through
+            // `exec`).
+            _ => self.exec_with_state_roundtrip(name, inputs, states),
         }
-        let spec = parse_spec(spec_str)
-            .ok_or_else(|| anyhow!("graph '{name}': unparseable shape spec"))?;
-        let out = self.exec_step_fused(name, tpl, &spec, inputs, states)?;
-        *self
-            .exec_counts
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_insert(0) += 1;
-        Ok(out)
     }
 
     fn fuses_states(&self) -> bool {
@@ -240,14 +341,11 @@ impl Backend for NativeBackend {
         moment: MatRef<'_>,
         mdims: (usize, usize),
     ) -> Result<Vec<Tensor>> {
-        let Some((tpl, spec_str)) = name.split_once("__") else {
-            bail!("'{name}' is not a minted graph name");
+        let plan = self.plan(name)?;
+        let spec = match &plan.kind {
+            PlanKind::Kernel { tpl, spec, .. } if *tpl == "pupdate" => spec,
+            _ => bail!("graph '{name}': exec_pupdate only accepts pupdate graphs"),
         };
-        if tpl != "pupdate" {
-            bail!("graph '{name}': exec_pupdate only accepts pupdate graphs");
-        }
-        let spec = parse_spec(spec_str)
-            .ok_or_else(|| anyhow!("graph '{name}': unparseable shape spec"))?;
         let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
         let (m, n, mb, nb) = frame(&spec.dims);
         expect_numel(name, "g", g2, m * n)?;
@@ -269,12 +367,7 @@ impl Backend for NativeBackend {
         let pt = Tensor::from_f32(&[nb, r], p.f32s().to_vec());
         let p_new =
             refimpl::pupdate_sgd_mat(&pt, &gn, moment, refimpl::PUPDATE_ITERS, refimpl::PUPDATE_LR);
-        *self
-            .exec_counts
-            .lock()
-            .unwrap()
-            .entry(name.to_string())
-            .or_insert(0) += 1;
+        plan.count.fetch_add(1, Ordering::Relaxed);
         Ok(vec![p_new])
     }
 
@@ -301,7 +394,8 @@ impl Backend for NativeBackend {
     }
 
     fn total_execs(&self) -> u64 {
-        self.exec_counts.lock().unwrap().values().sum()
+        let t = self.plans.read().expect("plan table poisoned");
+        t.plans.iter().map(|p| p.count.load(Ordering::Relaxed)).sum()
     }
 }
 
@@ -312,588 +406,648 @@ fn expect_state_len(name: &str, which: &str, s: &StateView, len: usize) -> Resul
     Ok(())
 }
 
-impl NativeBackend {
-    /// Dispatch one step template to its fused `refimpl::*_state` kernel.
-    /// `inputs` excludes the state operands (see the trait contract);
-    /// returns `[w', ceu]` with the states updated through their views.
-    #[allow(clippy::too_many_lines)]
-    fn exec_step_fused(
-        &self,
-        name: &str,
-        tpl: &str,
-        spec: &Spec,
-        inputs: &[&Tensor],
-        states: &mut [StateView],
-    ) -> Result<Vec<Tensor>> {
-        let dims = &spec.dims;
-        let is_conv = tpl.contains("conv");
-        if is_conv && dims.len() != 4 {
-            bail!("graph '{name}': conv step needs a 4-D shape");
+/// Dispatch one step template to its fused `refimpl::*_state` kernel.
+/// `inputs` excludes the state operands (see the trait contract);
+/// returns `[w', ceu]` with the states updated through their views.
+/// `pack` optionally carries the slot's cached projection panels; a
+/// kind-mismatched pack is ignored (the unpacked path is always
+/// bit-identical).
+#[allow(clippy::too_many_lines)]
+fn exec_step_fused(
+    name: &str,
+    tpl: &str,
+    spec: &Spec,
+    inputs: &[&Tensor],
+    states: &mut [StateView],
+    pack: Option<&refimpl::ProjPack>,
+) -> Result<Vec<Tensor>> {
+    let dims = &spec.dims;
+    let is_conv = tpl.contains("conv");
+    if is_conv && dims.len() != 4 {
+        bail!("graph '{name}': conv step needs a 4-D shape");
+    }
+    if !is_conv && dims.len() != 2 {
+        bail!("graph '{name}': matrix template needs an MxN shape, got {dims:?}");
+    }
+    let mat_panels = match pack {
+        Some(refimpl::ProjPack::Matrix(p)) => Some(p),
+        _ => None,
+    };
+    let conv_panels = match pack {
+        Some(refimpl::ProjPack::Conv(p)) => Some(p),
+        _ => None,
+    };
+    let n_states = states.len();
+    match tpl {
+        "adam_step" => {
+            expect_inputs(name, inputs, 6)?;
+            let (m, n, _, _) = frame(dims);
+            expect_numel(name, "w", inputs[0], m * n)?;
+            expect_numel(name, "g", inputs[1], m * n)?;
+            let [ms, vs] = states else {
+                bail!("graph '{name}': expected 2 state views, got {n_states}");
+            };
+            expect_state_len(name, "m", ms, m * n)?;
+            expect_state_len(name, "v", vs, m * n)?;
+            let (w, ceu) = refimpl::adam_step_state(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                ms,
+                vs,
+                inputs[2].scalar(),
+                inputs[3].scalar(),
+                inputs[4].scalar(),
+                inputs[5].scalar(),
+            );
+            Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
         }
-        if !is_conv && dims.len() != 2 {
-            bail!("graph '{name}': matrix template needs an MxN shape, got {dims:?}");
+        "adafactor_step" => {
+            expect_inputs(name, inputs, 4)?;
+            let (m, n, _, _) = frame(dims);
+            expect_numel(name, "w", inputs[0], m * n)?;
+            let [ms, rs, cs] = states else {
+                bail!("graph '{name}': expected 3 state views, got {n_states}");
+            };
+            expect_state_len(name, "m", ms, m * n)?;
+            expect_state_len(name, "r_fac", rs, m)?;
+            expect_state_len(name, "c_fac", cs, n)?;
+            let t = (inputs[2].scalar().round() as usize).max(1);
+            let (w, ceu) = refimpl::adafactor_step_state(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                ms,
+                rs,
+                cs,
+                m,
+                n,
+                t,
+                inputs[3].scalar(),
+            );
+            Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
         }
-        let n_states = states.len();
-        match tpl {
-            "adam_step" => {
-                expect_inputs(name, inputs, 6)?;
-                let (m, n, _, _) = frame(dims);
-                expect_numel(name, "w", inputs[0], m * n)?;
-                expect_numel(name, "g", inputs[1], m * n)?;
-                let [ms, vs] = states else {
-                    bail!("graph '{name}': expected 2 state views, got {n_states}");
-                };
-                expect_state_len(name, "m", ms, m * n)?;
-                expect_state_len(name, "v", vs, m * n)?;
-                let (w, ceu) = refimpl::adam_step_state(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    ms,
-                    vs,
-                    inputs[2].scalar(),
-                    inputs[3].scalar(),
-                    inputs[4].scalar(),
-                    inputs[5].scalar(),
-                );
-                Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
-            }
-            "adafactor_step" => {
-                expect_inputs(name, inputs, 4)?;
-                let (m, n, _, _) = frame(dims);
-                expect_numel(name, "w", inputs[0], m * n)?;
-                let [ms, rs, cs] = states else {
-                    bail!("graph '{name}': expected 3 state views, got {n_states}");
-                };
-                expect_state_len(name, "m", ms, m * n)?;
-                expect_state_len(name, "r_fac", rs, m)?;
-                expect_state_len(name, "c_fac", cs, n)?;
-                let t = (inputs[2].scalar().round() as usize).max(1);
-                let (w, ceu) = refimpl::adafactor_step_state(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    ms,
-                    rs,
-                    cs,
-                    m,
-                    n,
-                    t,
-                    inputs[3].scalar(),
-                );
-                Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
-            }
-            "coap_adam_step" => {
-                expect_inputs(name, inputs, 7)?;
-                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
-                let (m, n, mb, nb) = frame(dims);
-                expect_numel(name, "w", inputs[0], m * n)?;
-                expect_numel(name, "p", inputs[2], nb * r)?;
-                let [ms, vs] = states else {
-                    bail!("graph '{name}': expected 2 state views, got {n_states}");
-                };
-                expect_state_len(name, "m", ms, mb * r)?;
-                expect_state_len(name, "v", vs, mb * r)?;
-                let (w, ceu) = refimpl::coap_adam_step_state(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    ms,
-                    vs,
-                    inputs[2].f32s(),
-                    m,
-                    n,
-                    r,
-                    inputs[3].scalar(),
-                    inputs[4].scalar(),
-                    inputs[5].scalar(),
-                    inputs[6].scalar(),
-                );
-                Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
-            }
-            "coap_adafactor_step" => {
-                expect_inputs(name, inputs, 5)?;
-                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
-                let (m, n, mb, nb) = frame(dims);
-                expect_numel(name, "w", inputs[0], m * n)?;
-                expect_numel(name, "p", inputs[2], nb * r)?;
-                let [ms, rs, cs] = states else {
-                    bail!("graph '{name}': expected 3 state views, got {n_states}");
-                };
-                expect_state_len(name, "m", ms, mb * r)?;
-                expect_state_len(name, "r_fac", rs, mb)?;
-                expect_state_len(name, "c_fac", cs, r)?;
-                let t = (inputs[3].scalar().round() as usize).max(1);
-                let (w, ceu) = refimpl::coap_adafactor_step_state(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    ms,
-                    rs,
-                    cs,
-                    inputs[2].f32s(),
-                    m,
-                    n,
-                    r,
-                    t,
-                    inputs[4].scalar(),
-                );
-                Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
-            }
-            "coap_adam_conv_step" => {
-                expect_inputs(name, inputs, 8)?;
-                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
-                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
-                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
-                expect_numel(name, "w", inputs[0], o * i * kk)?;
-                expect_numel(name, "po", inputs[2], o * ro)?;
-                expect_numel(name, "pi", inputs[3], i * ri)?;
-                let [ms, vs] = states else {
-                    bail!("graph '{name}': expected 2 state views, got {n_states}");
-                };
-                expect_state_len(name, "m", ms, ro * ri * kk)?;
-                expect_state_len(name, "v", vs, ro * ri * kk)?;
-                let (w, ceu) = refimpl::coap_adam_conv_step_state(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    ms,
-                    vs,
-                    inputs[2].f32s(),
-                    inputs[3].f32s(),
-                    dims,
-                    ro,
-                    ri,
-                    inputs[4].scalar(),
-                    inputs[5].scalar(),
-                    inputs[6].scalar(),
-                    inputs[7].scalar(),
-                );
-                Ok(vec![Tensor::from_f32(dims, w), Tensor::scalar_f32(ceu)])
-            }
-            "coap_adafactor_conv_step" => {
-                expect_inputs(name, inputs, 6)?;
-                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
-                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
-                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
-                expect_numel(name, "w", inputs[0], o * i * kk)?;
-                expect_numel(name, "po", inputs[2], o * ro)?;
-                expect_numel(name, "pi", inputs[3], i * ri)?;
-                let [ms, rs, cs] = states else {
-                    bail!("graph '{name}': expected 3 state views, got {n_states}");
-                };
-                expect_state_len(name, "m", ms, ro * ri * kk)?;
-                expect_state_len(name, "r_fac", rs, ro)?;
-                expect_state_len(name, "c_fac", cs, ri * kk)?;
-                let t = (inputs[4].scalar().round() as usize).max(1);
-                let (w, ceu) = refimpl::coap_adafactor_conv_step_state(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    ms,
-                    rs,
-                    cs,
-                    inputs[2].f32s(),
-                    inputs[3].f32s(),
-                    dims,
-                    ro,
-                    ri,
-                    t,
-                    inputs[5].scalar(),
-                );
-                Ok(vec![Tensor::from_f32(dims, w), Tensor::scalar_f32(ceu)])
-            }
-            "coap_adam_convfull_step" => {
-                expect_inputs(name, inputs, 9)?;
-                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
-                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
-                let rs_rank = spec.rs.ok_or_else(|| anyhow!("'{name}': missing rS"))?;
-                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
-                expect_numel(name, "w", inputs[0], o * i * kk)?;
-                expect_numel(name, "po", inputs[2], o * ro)?;
-                expect_numel(name, "pi", inputs[3], i * ri)?;
-                expect_numel(name, "ps", inputs[4], kk * rs_rank)?;
-                let [ms, vs] = states else {
-                    bail!("graph '{name}': expected 2 state views, got {n_states}");
-                };
-                expect_state_len(name, "m", ms, ro * ri * rs_rank)?;
-                expect_state_len(name, "v", vs, ro * ri * rs_rank)?;
-                let (w, ceu) = refimpl::coap_adam_convfull_step_state(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    ms,
-                    vs,
-                    inputs[2].f32s(),
-                    inputs[3].f32s(),
-                    inputs[4].f32s(),
-                    dims,
-                    ro,
-                    ri,
-                    rs_rank,
-                    inputs[5].scalar(),
-                    inputs[6].scalar(),
-                    inputs[7].scalar(),
-                    inputs[8].scalar(),
-                );
-                Ok(vec![Tensor::from_f32(dims, w), Tensor::scalar_f32(ceu)])
-            }
-            _ => bail!("graph '{name}': template '{tpl}' has no fused state path"),
+        "coap_adam_step" => {
+            expect_inputs(name, inputs, 7)?;
+            let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+            let (m, n, mb, nb) = frame(dims);
+            expect_numel(name, "w", inputs[0], m * n)?;
+            expect_numel(name, "p", inputs[2], nb * r)?;
+            let [ms, vs] = states else {
+                bail!("graph '{name}': expected 2 state views, got {n_states}");
+            };
+            expect_state_len(name, "m", ms, mb * r)?;
+            expect_state_len(name, "v", vs, mb * r)?;
+            let (w, ceu) = refimpl::coap_adam_step_state_packed(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                ms,
+                vs,
+                inputs[2].f32s(),
+                mat_panels,
+                m,
+                n,
+                r,
+                inputs[3].scalar(),
+                inputs[4].scalar(),
+                inputs[5].scalar(),
+                inputs[6].scalar(),
+            );
+            Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
+        }
+        "coap_adafactor_step" => {
+            expect_inputs(name, inputs, 5)?;
+            let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+            let (m, n, mb, nb) = frame(dims);
+            expect_numel(name, "w", inputs[0], m * n)?;
+            expect_numel(name, "p", inputs[2], nb * r)?;
+            let [ms, rs, cs] = states else {
+                bail!("graph '{name}': expected 3 state views, got {n_states}");
+            };
+            expect_state_len(name, "m", ms, mb * r)?;
+            expect_state_len(name, "r_fac", rs, mb)?;
+            expect_state_len(name, "c_fac", cs, r)?;
+            let t = (inputs[3].scalar().round() as usize).max(1);
+            let (w, ceu) = refimpl::coap_adafactor_step_state_packed(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                ms,
+                rs,
+                cs,
+                inputs[2].f32s(),
+                mat_panels,
+                m,
+                n,
+                r,
+                t,
+                inputs[4].scalar(),
+            );
+            Ok(vec![Tensor::from_f32(&[m, n], w), Tensor::scalar_f32(ceu)])
+        }
+        "coap_adam_conv_step" => {
+            expect_inputs(name, inputs, 8)?;
+            let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+            let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+            let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+            expect_numel(name, "w", inputs[0], o * i * kk)?;
+            expect_numel(name, "po", inputs[2], o * ro)?;
+            expect_numel(name, "pi", inputs[3], i * ri)?;
+            let [ms, vs] = states else {
+                bail!("graph '{name}': expected 2 state views, got {n_states}");
+            };
+            expect_state_len(name, "m", ms, ro * ri * kk)?;
+            expect_state_len(name, "v", vs, ro * ri * kk)?;
+            let (w, ceu) = refimpl::coap_adam_conv_step_state_packed(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                ms,
+                vs,
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                conv_panels,
+                dims,
+                ro,
+                ri,
+                inputs[4].scalar(),
+                inputs[5].scalar(),
+                inputs[6].scalar(),
+                inputs[7].scalar(),
+            );
+            Ok(vec![Tensor::from_f32(dims, w), Tensor::scalar_f32(ceu)])
+        }
+        "coap_adafactor_conv_step" => {
+            expect_inputs(name, inputs, 6)?;
+            let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+            let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+            let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+            expect_numel(name, "w", inputs[0], o * i * kk)?;
+            expect_numel(name, "po", inputs[2], o * ro)?;
+            expect_numel(name, "pi", inputs[3], i * ri)?;
+            let [ms, rs, cs] = states else {
+                bail!("graph '{name}': expected 3 state views, got {n_states}");
+            };
+            expect_state_len(name, "m", ms, ro * ri * kk)?;
+            expect_state_len(name, "r_fac", rs, ro)?;
+            expect_state_len(name, "c_fac", cs, ri * kk)?;
+            let t = (inputs[4].scalar().round() as usize).max(1);
+            let (w, ceu) = refimpl::coap_adafactor_conv_step_state_packed(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                ms,
+                rs,
+                cs,
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                conv_panels,
+                dims,
+                ro,
+                ri,
+                t,
+                inputs[5].scalar(),
+            );
+            Ok(vec![Tensor::from_f32(dims, w), Tensor::scalar_f32(ceu)])
+        }
+        "coap_adam_convfull_step" => {
+            expect_inputs(name, inputs, 9)?;
+            let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+            let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+            let rs_rank = spec.rs.ok_or_else(|| anyhow!("'{name}': missing rS"))?;
+            let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+            expect_numel(name, "w", inputs[0], o * i * kk)?;
+            expect_numel(name, "po", inputs[2], o * ro)?;
+            expect_numel(name, "pi", inputs[3], i * ri)?;
+            expect_numel(name, "ps", inputs[4], kk * rs_rank)?;
+            let [ms, vs] = states else {
+                bail!("graph '{name}': expected 2 state views, got {n_states}");
+            };
+            expect_state_len(name, "m", ms, ro * ri * rs_rank)?;
+            expect_state_len(name, "v", vs, ro * ri * rs_rank)?;
+            let (w, ceu) = refimpl::coap_adam_convfull_step_state_packed(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                ms,
+                vs,
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                inputs[4].f32s(),
+                conv_panels,
+                dims,
+                ro,
+                ri,
+                rs_rank,
+                inputs[5].scalar(),
+                inputs[6].scalar(),
+                inputs[7].scalar(),
+                inputs[8].scalar(),
+            );
+            Ok(vec![Tensor::from_f32(dims, w), Tensor::scalar_f32(ceu)])
+        }
+        _ => bail!("graph '{name}': template '{tpl}' has no fused state path"),
+    }
+}
+
+/// Resolve a kernel template to its dispatcher at plan-build time — this
+/// `match` is the one string dispatch that used to run on every exec,
+/// now executed once per graph name. Only reached with templates from
+/// [`KERNEL_TEMPLATES`] (unknown templates are rejected when the plan is
+/// built), so the conv-refresh arm can be the catch-all.
+fn kernel_handler(tpl: &'static str) -> KernelFn {
+    match tpl {
+        "adam_step" | "adafactor_step" => kernel_fullrank_step,
+        "coap_adam_step" | "coap_adafactor_step" | "lora_adam_step" => kernel_proj_step,
+        "recalib" | "pupdate" | "galore_svd" => kernel_matrix_refresh,
+        "coap_adam_conv_step" | "coap_adafactor_conv_step" | "coap_adam_convfull_step" => {
+            kernel_conv_step
+        }
+        _ => kernel_conv_refresh,
+    }
+}
+
+fn expect_matrix_dims(name: &str, dims: &[usize]) -> Result<()> {
+    if dims.len() != 2 {
+        bail!("graph '{name}': matrix template needs an MxN shape, got {dims:?}");
+    }
+    Ok(())
+}
+
+/// Full-rank matrix steps (`adam_step`, `adafactor_step`).
+fn kernel_fullrank_step(
+    name: &str,
+    tpl: &'static str,
+    spec: &Spec,
+    inputs: &[&Tensor],
+) -> Result<Vec<Tensor>> {
+    let dims = &spec.dims;
+    expect_matrix_dims(name, dims)?;
+    match tpl {
+        "adam_step" => {
+            expect_inputs(name, inputs, 8)?;
+            let (m, n, _, _) = frame(dims);
+            expect_numel(name, "w", inputs[0], m * n)?;
+            expect_numel(name, "m", inputs[2], m * n)?;
+            let (w, mn, vn, ceu) = refimpl::adam_step_mat(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                inputs[4].scalar(),
+                inputs[5].scalar(),
+                inputs[6].scalar(),
+                inputs[7].scalar(),
+            );
+            Ok(vec![
+                Tensor::from_f32(&[m, n], w),
+                Tensor::from_f32(&[m, n], mn),
+                Tensor::from_f32(&[m, n], vn),
+                Tensor::scalar_f32(ceu),
+            ])
+        }
+        _ => {
+            expect_inputs(name, inputs, 7)?;
+            let (m, n, _, _) = frame(dims);
+            expect_numel(name, "w", inputs[0], m * n)?;
+            expect_numel(name, "r_fac", inputs[3], m)?;
+            expect_numel(name, "c_fac", inputs[4], n)?;
+            let t = (inputs[5].scalar().round() as usize).max(1);
+            let (w, mn, rf, cf, ceu) = refimpl::adafactor_step_mat(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                inputs[4].f32s(),
+                m,
+                n,
+                t,
+                inputs[6].scalar(),
+            );
+            Ok(vec![
+                Tensor::from_f32(&[m, n], w),
+                Tensor::from_f32(&[m, n], mn),
+                Tensor::from_f32(&[m, 1], rf),
+                Tensor::from_f32(&[1, n], cf),
+                Tensor::scalar_f32(ceu),
+            ])
         }
     }
+}
 
-    #[allow(clippy::too_many_lines)]
-    fn exec_kernel(
-        &self,
-        name: &str,
-        tpl: &str,
-        spec: &Spec,
-        inputs: &[&Tensor],
-    ) -> Result<Vec<Tensor>> {
-        let dims = &spec.dims;
-        let is_matrix_tpl = matches!(
-            tpl,
-            "adam_step" | "adafactor_step" | "coap_adam_step" | "coap_adafactor_step"
-                | "lora_adam_step" | "recalib" | "pupdate" | "galore_svd"
-        );
-        if is_matrix_tpl && dims.len() != 2 {
-            bail!("graph '{name}': matrix template needs an MxN shape, got {dims:?}");
+/// Projected matrix steps (`coap_adam_step`, `coap_adafactor_step`,
+/// `lora_adam_step`).
+#[allow(clippy::too_many_lines)]
+fn kernel_proj_step(
+    name: &str,
+    tpl: &'static str,
+    spec: &Spec,
+    inputs: &[&Tensor],
+) -> Result<Vec<Tensor>> {
+    let dims = &spec.dims;
+    expect_matrix_dims(name, dims)?;
+    match tpl {
+        "coap_adam_step" => {
+            expect_inputs(name, inputs, 9)?;
+            let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+            let (m, n, mb, nb) = frame(dims);
+            expect_numel(name, "w", inputs[0], m * n)?;
+            expect_numel(name, "m", inputs[2], mb * r)?;
+            expect_numel(name, "p", inputs[4], nb * r)?;
+            let (w, mn, vn, ceu) = refimpl::coap_adam_step_mat(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                inputs[4].f32s(),
+                m,
+                n,
+                r,
+                inputs[5].scalar(),
+                inputs[6].scalar(),
+                inputs[7].scalar(),
+                inputs[8].scalar(),
+            );
+            Ok(vec![
+                Tensor::from_f32(&[m, n], w),
+                Tensor::from_f32(&[mb, r], mn),
+                Tensor::from_f32(&[mb, r], vn),
+                Tensor::scalar_f32(ceu),
+            ])
         }
-        match tpl {
-            // --- full-rank matrix steps -----------------------------------
-            "adam_step" => {
-                expect_inputs(name, inputs, 8)?;
-                let (m, n, _, _) = frame(dims);
-                expect_numel(name, "w", inputs[0], m * n)?;
-                expect_numel(name, "m", inputs[2], m * n)?;
-                let (w, mn, vn, ceu) = refimpl::adam_step_mat(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    inputs[2].f32s(),
-                    inputs[3].f32s(),
-                    inputs[4].scalar(),
-                    inputs[5].scalar(),
-                    inputs[6].scalar(),
-                    inputs[7].scalar(),
-                );
-                Ok(vec![
-                    Tensor::from_f32(&[m, n], w),
-                    Tensor::from_f32(&[m, n], mn),
-                    Tensor::from_f32(&[m, n], vn),
-                    Tensor::scalar_f32(ceu),
-                ])
-            }
-            "adafactor_step" => {
-                expect_inputs(name, inputs, 7)?;
-                let (m, n, _, _) = frame(dims);
-                expect_numel(name, "w", inputs[0], m * n)?;
-                expect_numel(name, "r_fac", inputs[3], m)?;
-                expect_numel(name, "c_fac", inputs[4], n)?;
-                let t = (inputs[5].scalar().round() as usize).max(1);
-                let (w, mn, rf, cf, ceu) = refimpl::adafactor_step_mat(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    inputs[2].f32s(),
-                    inputs[3].f32s(),
-                    inputs[4].f32s(),
-                    m,
-                    n,
-                    t,
-                    inputs[6].scalar(),
-                );
-                Ok(vec![
-                    Tensor::from_f32(&[m, n], w),
-                    Tensor::from_f32(&[m, n], mn),
-                    Tensor::from_f32(&[m, 1], rf),
-                    Tensor::from_f32(&[1, n], cf),
-                    Tensor::scalar_f32(ceu),
-                ])
-            }
-            // --- projected matrix steps -----------------------------------
-            "coap_adam_step" => {
-                expect_inputs(name, inputs, 9)?;
-                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
-                let (m, n, mb, nb) = frame(dims);
-                expect_numel(name, "w", inputs[0], m * n)?;
-                expect_numel(name, "m", inputs[2], mb * r)?;
-                expect_numel(name, "p", inputs[4], nb * r)?;
-                let (w, mn, vn, ceu) = refimpl::coap_adam_step_mat(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    inputs[2].f32s(),
-                    inputs[3].f32s(),
-                    inputs[4].f32s(),
-                    m,
-                    n,
-                    r,
-                    inputs[5].scalar(),
-                    inputs[6].scalar(),
-                    inputs[7].scalar(),
-                    inputs[8].scalar(),
-                );
-                Ok(vec![
-                    Tensor::from_f32(&[m, n], w),
-                    Tensor::from_f32(&[mb, r], mn),
-                    Tensor::from_f32(&[mb, r], vn),
-                    Tensor::scalar_f32(ceu),
-                ])
-            }
-            "coap_adafactor_step" => {
-                expect_inputs(name, inputs, 8)?;
-                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
-                let (m, n, mb, nb) = frame(dims);
-                expect_numel(name, "w", inputs[0], m * n)?;
-                expect_numel(name, "m", inputs[2], mb * r)?;
-                expect_numel(name, "r_fac", inputs[3], mb)?;
-                expect_numel(name, "c_fac", inputs[4], r)?;
-                expect_numel(name, "p", inputs[5], nb * r)?;
-                let t = (inputs[6].scalar().round() as usize).max(1);
-                let (w, mn, rf, cf, ceu) = refimpl::coap_adafactor_step_mat(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    inputs[2].f32s(),
-                    inputs[3].f32s(),
-                    inputs[4].f32s(),
-                    inputs[5].f32s(),
-                    m,
-                    n,
-                    r,
-                    t,
-                    inputs[7].scalar(),
-                );
-                Ok(vec![
-                    Tensor::from_f32(&[m, n], w),
-                    Tensor::from_f32(&[mb, r], mn),
-                    Tensor::from_f32(&[mb, 1], rf),
-                    Tensor::from_f32(&[1, r], cf),
-                    Tensor::scalar_f32(ceu),
-                ])
-            }
-            "lora_adam_step" => {
-                expect_inputs(name, inputs, 11)?;
-                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
-                let (m, n, _, _) = frame(dims);
-                expect_numel(name, "a", inputs[1], r * n)?;
-                expect_numel(name, "b", inputs[2], m * r)?;
-                let (w, a, b, ma, va, mb_, vb, ceu) = refimpl::lora_adam_step_mat(
-                    inputs[0].f32s(),
-                    inputs[1].f32s(),
-                    inputs[2].f32s(),
-                    inputs[3].f32s(),
-                    inputs[4].f32s(),
-                    inputs[5].f32s(),
-                    inputs[6].f32s(),
-                    inputs[7].f32s(),
-                    m,
-                    n,
-                    r,
-                    inputs[8].scalar(),
-                    inputs[9].scalar(),
-                    inputs[10].scalar(),
-                );
-                Ok(vec![
-                    Tensor::from_f32(&[m, n], w),
-                    Tensor::from_f32(&[r, n], a),
-                    Tensor::from_f32(&[m, r], b),
-                    Tensor::from_f32(&[r, n], ma),
-                    Tensor::from_f32(&[r, n], va),
-                    Tensor::from_f32(&[m, r], mb_),
-                    Tensor::from_f32(&[m, r], vb),
-                    Tensor::scalar_f32(ceu),
-                ])
-            }
-            // --- matrix projection refreshes ------------------------------
-            "recalib" | "pupdate" | "galore_svd" => {
-                let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
-                let (m, n, mb, nb) = frame(dims);
-                let g_idx = match tpl {
-                    "galore_svd" => {
-                        expect_inputs(name, inputs, 1)?;
-                        0
-                    }
-                    "recalib" => {
-                        expect_inputs(name, inputs, 2)?;
-                        1
-                    }
-                    _ => {
-                        expect_inputs(name, inputs, 3)?;
-                        1
-                    }
-                };
-                expect_numel(name, "g", inputs[g_idx], m * n)?;
-                // Normalized frame: (max, min) with P on the small side.
-                let gn = if m < n {
-                    Tensor::from_f32(&[mb, nb], linalg::transpose(inputs[g_idx].f32s(), m, n))
-                } else {
-                    Tensor::from_f32(&[m, n], inputs[g_idx].f32s().to_vec())
-                };
-                let p_new = match tpl {
-                    "recalib" => {
-                        expect_numel(name, "p", inputs[0], nb * r)?;
-                        let p = Tensor::from_f32(&[nb, r], inputs[0].f32s().to_vec());
-                        refimpl::lowcost_recalib(&gn, &p, refimpl::SVD_SWEEPS)
-                    }
-                    "pupdate" => {
-                        expect_numel(name, "p", inputs[0], nb * r)?;
-                        expect_numel(name, "m_proj", inputs[2], mb * r)?;
-                        let p = Tensor::from_f32(&[nb, r], inputs[0].f32s().to_vec());
-                        let mp = Tensor::from_f32(&[mb, r], inputs[2].f32s().to_vec());
-                        refimpl::pupdate_sgd(
-                            &p,
-                            &gn,
-                            &mp,
-                            refimpl::PUPDATE_ITERS,
-                            refimpl::PUPDATE_LR,
-                        )
-                    }
-                    _ => refimpl::svd_topk(&gn, r, refimpl::SVD_SWEEPS).0,
-                };
-                Ok(vec![p_new])
-            }
-            // --- Tucker-2 conv steps --------------------------------------
-            "coap_adam_conv_step" | "coap_adafactor_conv_step" | "coap_adam_convfull_step" => {
-                if dims.len() != 4 {
-                    bail!("graph '{name}': conv step needs a 4-D shape");
-                }
-                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
-                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
-                let numel: usize = dims.iter().product();
-                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
-                if inputs.len() < 2 {
-                    bail!("graph '{name}': expected at least w and g inputs");
-                }
-                expect_numel(name, "w", inputs[0], numel)?;
-                expect_numel(name, "g", inputs[1], numel)?;
-                match tpl {
-                    "coap_adam_conv_step" => {
-                        expect_inputs(name, inputs, 10)?;
-                        expect_numel(name, "m", inputs[2], ro * ri * kk)?;
-                        expect_numel(name, "po", inputs[4], o * ro)?;
-                        expect_numel(name, "pi", inputs[5], i * ri)?;
-                        let (w, mn, vn, ceu) = refimpl::coap_adam_conv_step(
-                            inputs[0].f32s(),
-                            inputs[1].f32s(),
-                            inputs[2].f32s(),
-                            inputs[3].f32s(),
-                            inputs[4].f32s(),
-                            inputs[5].f32s(),
-                            dims,
-                            ro,
-                            ri,
-                            inputs[6].scalar(),
-                            inputs[7].scalar(),
-                            inputs[8].scalar(),
-                            inputs[9].scalar(),
-                        );
-                        let mdims = [ro, ri, dims[2], dims[3]];
-                        Ok(vec![
-                            Tensor::from_f32(dims, w),
-                            Tensor::from_f32(&mdims, mn),
-                            Tensor::from_f32(&mdims, vn),
-                            Tensor::scalar_f32(ceu),
-                        ])
-                    }
-                    "coap_adafactor_conv_step" => {
-                        expect_inputs(name, inputs, 9)?;
-                        expect_numel(name, "m", inputs[2], ro * ri * kk)?;
-                        expect_numel(name, "r_fac", inputs[3], ro)?;
-                        expect_numel(name, "c_fac", inputs[4], ri * kk)?;
-                        let t = (inputs[7].scalar().round() as usize).max(1);
-                        let (w, mn, rf, cf, ceu) = refimpl::coap_adafactor_conv_step(
-                            inputs[0].f32s(),
-                            inputs[1].f32s(),
-                            inputs[2].f32s(),
-                            inputs[3].f32s(),
-                            inputs[4].f32s(),
-                            inputs[5].f32s(),
-                            inputs[6].f32s(),
-                            dims,
-                            ro,
-                            ri,
-                            t,
-                            inputs[8].scalar(),
-                        );
-                        let mdims = [ro, ri, dims[2], dims[3]];
-                        Ok(vec![
-                            Tensor::from_f32(dims, w),
-                            Tensor::from_f32(&mdims, mn),
-                            Tensor::from_f32(&[ro, 1], rf),
-                            Tensor::from_f32(&[1, ri * kk], cf),
-                            Tensor::scalar_f32(ceu),
-                        ])
-                    }
-                    _ => {
-                        expect_inputs(name, inputs, 11)?;
-                        let rs = spec.rs.ok_or_else(|| anyhow!("'{name}': missing rS"))?;
-                        expect_numel(name, "m", inputs[2], ro * ri * rs)?;
-                        expect_numel(name, "ps", inputs[6], kk * rs)?;
-                        let (w, mn, vn, ceu) = refimpl::coap_adam_convfull_step(
-                            inputs[0].f32s(),
-                            inputs[1].f32s(),
-                            inputs[2].f32s(),
-                            inputs[3].f32s(),
-                            inputs[4].f32s(),
-                            inputs[5].f32s(),
-                            inputs[6].f32s(),
-                            dims,
-                            ro,
-                            ri,
-                            rs,
-                            inputs[7].scalar(),
-                            inputs[8].scalar(),
-                            inputs[9].scalar(),
-                            inputs[10].scalar(),
-                        );
-                        let mdims = [ro, ri, rs];
-                        Ok(vec![
-                            Tensor::from_f32(dims, w),
-                            Tensor::from_f32(&mdims, mn),
-                            Tensor::from_f32(&mdims, vn),
-                            Tensor::scalar_f32(ceu),
-                        ])
-                    }
-                }
-            }
-            // --- conv projection refreshes --------------------------------
-            "conv_recalib_o" | "conv_recalib_i" | "conv_svd_o" | "conv_svd_i"
-            | "conv_pupdate_o" | "conv_pupdate_i" => {
-                if dims.len() != 4 {
-                    bail!("graph '{name}': conv refresh needs a 4-D shape");
-                }
-                let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
-                let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
-                let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
-                let numel = o * i * kk;
-                let side_o = tpl.ends_with("_o");
-                let (pn, pr) = if side_o { (o, ro) } else { (i, ri) };
-                match tpl {
-                    "conv_svd_o" | "conv_svd_i" => {
-                        expect_inputs(name, inputs, 1)?;
-                        expect_numel(name, "g", inputs[0], numel)?;
-                        Ok(vec![refimpl::conv_svd_side(inputs[0].f32s(), dims, side_o, pr)])
-                    }
-                    "conv_recalib_o" | "conv_recalib_i" => {
-                        expect_inputs(name, inputs, 2)?;
-                        expect_numel(name, "p", inputs[0], pn * pr)?;
-                        expect_numel(name, "g", inputs[1], numel)?;
-                        let p = Tensor::from_f32(&[pn, pr], inputs[0].f32s().to_vec());
-                        Ok(vec![refimpl::conv_recalib_side(&p, inputs[1].f32s(), dims, side_o)])
-                    }
-                    _ => {
-                        expect_inputs(name, inputs, 4)?;
-                        expect_numel(name, "p", inputs[0], pn * pr)?;
-                        expect_numel(name, "g", inputs[1], numel)?;
-                        expect_numel(name, "m_proj", inputs[2], ro * ri * kk)?;
-                        let (on, or) = if side_o { (i, ri) } else { (o, ro) };
-                        expect_numel(name, "other_p", inputs[3], on * or)?;
-                        let p = Tensor::from_f32(&[pn, pr], inputs[0].f32s().to_vec());
-                        Ok(vec![refimpl::conv_pupdate_side(
-                            &p,
-                            inputs[1].f32s(),
-                            inputs[2].f32s(),
-                            inputs[3].f32s(),
-                            dims,
-                            ro,
-                            ri,
-                            side_o,
-                        )])
-                    }
-                }
-            }
-            _ => bail!("graph '{name}': template '{tpl}' not implemented by the native backend"),
+        "coap_adafactor_step" => {
+            expect_inputs(name, inputs, 8)?;
+            let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+            let (m, n, mb, nb) = frame(dims);
+            expect_numel(name, "w", inputs[0], m * n)?;
+            expect_numel(name, "m", inputs[2], mb * r)?;
+            expect_numel(name, "r_fac", inputs[3], mb)?;
+            expect_numel(name, "c_fac", inputs[4], r)?;
+            expect_numel(name, "p", inputs[5], nb * r)?;
+            let t = (inputs[6].scalar().round() as usize).max(1);
+            let (w, mn, rf, cf, ceu) = refimpl::coap_adafactor_step_mat(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                inputs[4].f32s(),
+                inputs[5].f32s(),
+                m,
+                n,
+                r,
+                t,
+                inputs[7].scalar(),
+            );
+            Ok(vec![
+                Tensor::from_f32(&[m, n], w),
+                Tensor::from_f32(&[mb, r], mn),
+                Tensor::from_f32(&[mb, 1], rf),
+                Tensor::from_f32(&[1, r], cf),
+                Tensor::scalar_f32(ceu),
+            ])
+        }
+        _ => {
+            expect_inputs(name, inputs, 11)?;
+            let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+            let (m, n, _, _) = frame(dims);
+            expect_numel(name, "a", inputs[1], r * n)?;
+            expect_numel(name, "b", inputs[2], m * r)?;
+            let (w, a, b, ma, va, mb_, vb, ceu) = refimpl::lora_adam_step_mat(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                inputs[4].f32s(),
+                inputs[5].f32s(),
+                inputs[6].f32s(),
+                inputs[7].f32s(),
+                m,
+                n,
+                r,
+                inputs[8].scalar(),
+                inputs[9].scalar(),
+                inputs[10].scalar(),
+            );
+            Ok(vec![
+                Tensor::from_f32(&[m, n], w),
+                Tensor::from_f32(&[r, n], a),
+                Tensor::from_f32(&[m, r], b),
+                Tensor::from_f32(&[r, n], ma),
+                Tensor::from_f32(&[r, n], va),
+                Tensor::from_f32(&[m, r], mb_),
+                Tensor::from_f32(&[m, r], vb),
+                Tensor::scalar_f32(ceu),
+            ])
+        }
+    }
+}
+
+/// Matrix projection refreshes (`recalib`, `pupdate`, `galore_svd`).
+fn kernel_matrix_refresh(
+    name: &str,
+    tpl: &'static str,
+    spec: &Spec,
+    inputs: &[&Tensor],
+) -> Result<Vec<Tensor>> {
+    let dims = &spec.dims;
+    expect_matrix_dims(name, dims)?;
+    let r = spec.r.ok_or_else(|| anyhow!("'{name}': missing rank"))?;
+    let (m, n, mb, nb) = frame(dims);
+    let g_idx = match tpl {
+        "galore_svd" => {
+            expect_inputs(name, inputs, 1)?;
+            0
+        }
+        "recalib" => {
+            expect_inputs(name, inputs, 2)?;
+            1
+        }
+        _ => {
+            expect_inputs(name, inputs, 3)?;
+            1
+        }
+    };
+    expect_numel(name, "g", inputs[g_idx], m * n)?;
+    // Normalized frame: (max, min) with P on the small side.
+    let gn = if m < n {
+        Tensor::from_f32(&[mb, nb], linalg::transpose(inputs[g_idx].f32s(), m, n))
+    } else {
+        Tensor::from_f32(&[m, n], inputs[g_idx].f32s().to_vec())
+    };
+    let p_new = match tpl {
+        "recalib" => {
+            expect_numel(name, "p", inputs[0], nb * r)?;
+            let p = Tensor::from_f32(&[nb, r], inputs[0].f32s().to_vec());
+            refimpl::lowcost_recalib(&gn, &p, refimpl::SVD_SWEEPS)
+        }
+        "pupdate" => {
+            expect_numel(name, "p", inputs[0], nb * r)?;
+            expect_numel(name, "m_proj", inputs[2], mb * r)?;
+            let p = Tensor::from_f32(&[nb, r], inputs[0].f32s().to_vec());
+            let mp = Tensor::from_f32(&[mb, r], inputs[2].f32s().to_vec());
+            refimpl::pupdate_sgd(&p, &gn, &mp, refimpl::PUPDATE_ITERS, refimpl::PUPDATE_LR)
+        }
+        _ => refimpl::svd_topk(&gn, r, refimpl::SVD_SWEEPS).0,
+    };
+    Ok(vec![p_new])
+}
+
+/// Tucker-2 conv steps (`coap_adam_conv_step`, `coap_adafactor_conv_step`,
+/// `coap_adam_convfull_step`).
+#[allow(clippy::too_many_lines)]
+fn kernel_conv_step(
+    name: &str,
+    tpl: &'static str,
+    spec: &Spec,
+    inputs: &[&Tensor],
+) -> Result<Vec<Tensor>> {
+    let dims = &spec.dims;
+    if dims.len() != 4 {
+        bail!("graph '{name}': conv step needs a 4-D shape");
+    }
+    let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+    let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+    let numel: usize = dims.iter().product();
+    let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+    if inputs.len() < 2 {
+        bail!("graph '{name}': expected at least w and g inputs");
+    }
+    expect_numel(name, "w", inputs[0], numel)?;
+    expect_numel(name, "g", inputs[1], numel)?;
+    match tpl {
+        "coap_adam_conv_step" => {
+            expect_inputs(name, inputs, 10)?;
+            expect_numel(name, "m", inputs[2], ro * ri * kk)?;
+            expect_numel(name, "po", inputs[4], o * ro)?;
+            expect_numel(name, "pi", inputs[5], i * ri)?;
+            let (w, mn, vn, ceu) = refimpl::coap_adam_conv_step(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                inputs[4].f32s(),
+                inputs[5].f32s(),
+                dims,
+                ro,
+                ri,
+                inputs[6].scalar(),
+                inputs[7].scalar(),
+                inputs[8].scalar(),
+                inputs[9].scalar(),
+            );
+            let mdims = [ro, ri, dims[2], dims[3]];
+            Ok(vec![
+                Tensor::from_f32(dims, w),
+                Tensor::from_f32(&mdims, mn),
+                Tensor::from_f32(&mdims, vn),
+                Tensor::scalar_f32(ceu),
+            ])
+        }
+        "coap_adafactor_conv_step" => {
+            expect_inputs(name, inputs, 9)?;
+            expect_numel(name, "m", inputs[2], ro * ri * kk)?;
+            expect_numel(name, "r_fac", inputs[3], ro)?;
+            expect_numel(name, "c_fac", inputs[4], ri * kk)?;
+            let t = (inputs[7].scalar().round() as usize).max(1);
+            let (w, mn, rf, cf, ceu) = refimpl::coap_adafactor_conv_step(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                inputs[4].f32s(),
+                inputs[5].f32s(),
+                inputs[6].f32s(),
+                dims,
+                ro,
+                ri,
+                t,
+                inputs[8].scalar(),
+            );
+            let mdims = [ro, ri, dims[2], dims[3]];
+            Ok(vec![
+                Tensor::from_f32(dims, w),
+                Tensor::from_f32(&mdims, mn),
+                Tensor::from_f32(&[ro, 1], rf),
+                Tensor::from_f32(&[1, ri * kk], cf),
+                Tensor::scalar_f32(ceu),
+            ])
+        }
+        _ => {
+            expect_inputs(name, inputs, 11)?;
+            let rs = spec.rs.ok_or_else(|| anyhow!("'{name}': missing rS"))?;
+            expect_numel(name, "m", inputs[2], ro * ri * rs)?;
+            expect_numel(name, "ps", inputs[6], kk * rs)?;
+            let (w, mn, vn, ceu) = refimpl::coap_adam_convfull_step(
+                inputs[0].f32s(),
+                inputs[1].f32s(),
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                inputs[4].f32s(),
+                inputs[5].f32s(),
+                inputs[6].f32s(),
+                dims,
+                ro,
+                ri,
+                rs,
+                inputs[7].scalar(),
+                inputs[8].scalar(),
+                inputs[9].scalar(),
+                inputs[10].scalar(),
+            );
+            let mdims = [ro, ri, rs];
+            Ok(vec![
+                Tensor::from_f32(dims, w),
+                Tensor::from_f32(&mdims, mn),
+                Tensor::from_f32(&mdims, vn),
+                Tensor::scalar_f32(ceu),
+            ])
+        }
+    }
+}
+
+/// Conv projection refreshes (`conv_recalib_*`, `conv_svd_*`,
+/// `conv_pupdate_*`).
+fn kernel_conv_refresh(
+    name: &str,
+    tpl: &'static str,
+    spec: &Spec,
+    inputs: &[&Tensor],
+) -> Result<Vec<Tensor>> {
+    let dims = &spec.dims;
+    if dims.len() != 4 {
+        bail!("graph '{name}': conv refresh needs a 4-D shape");
+    }
+    let ro = spec.ro.ok_or_else(|| anyhow!("'{name}': missing rO"))?;
+    let ri = spec.ri.ok_or_else(|| anyhow!("'{name}': missing rI"))?;
+    let (o, i, kk) = (dims[0], dims[1], dims[2] * dims[3]);
+    let numel = o * i * kk;
+    let side_o = tpl.ends_with("_o");
+    let (pn, pr) = if side_o { (o, ro) } else { (i, ri) };
+    match tpl {
+        "conv_svd_o" | "conv_svd_i" => {
+            expect_inputs(name, inputs, 1)?;
+            expect_numel(name, "g", inputs[0], numel)?;
+            Ok(vec![refimpl::conv_svd_side(inputs[0].f32s(), dims, side_o, pr)])
+        }
+        "conv_recalib_o" | "conv_recalib_i" => {
+            expect_inputs(name, inputs, 2)?;
+            expect_numel(name, "p", inputs[0], pn * pr)?;
+            expect_numel(name, "g", inputs[1], numel)?;
+            let p = Tensor::from_f32(&[pn, pr], inputs[0].f32s().to_vec());
+            Ok(vec![refimpl::conv_recalib_side(&p, inputs[1].f32s(), dims, side_o)])
+        }
+        _ => {
+            expect_inputs(name, inputs, 4)?;
+            expect_numel(name, "p", inputs[0], pn * pr)?;
+            expect_numel(name, "g", inputs[1], numel)?;
+            expect_numel(name, "m_proj", inputs[2], ro * ri * kk)?;
+            let (on, or) = if side_o { (i, ri) } else { (o, ro) };
+            expect_numel(name, "other_p", inputs[3], on * or)?;
+            let p = Tensor::from_f32(&[pn, pr], inputs[0].f32s().to_vec());
+            Ok(vec![refimpl::conv_pupdate_side(
+                &p,
+                inputs[1].f32s(),
+                inputs[2].f32s(),
+                inputs[3].f32s(),
+                dims,
+                ro,
+                ri,
+                side_o,
+            )])
         }
     }
 }
@@ -963,6 +1117,7 @@ mod tests {
         );
         assert!(be.fuses_states());
         assert_eq!(be.total_execs(), 1);
+        assert_eq!(be.plan_builds(), 1, "one name => one compiled plan");
     }
 
     #[test]
@@ -979,5 +1134,24 @@ mod tests {
                 .unwrap();
         }
         assert_eq!(be.total_execs(), 3);
+        assert_eq!(be.exec_counts().get(&name), Some(&3));
+        assert_eq!(be.plan_builds(), 1, "repeat execs must reuse the interned plan");
+    }
+
+    #[test]
+    fn plan_cache_interns_names_and_rejects_bad_ones() {
+        let be = NativeBackend::new();
+        assert_eq!(be.plan_builds(), 0);
+        let name = names::matrix_proj("recalib", 8, 4, 2);
+        let p1 = be.plan(&name).unwrap();
+        let p2 = be.plan(&name).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "same name must yield the same plan");
+        assert_eq!(be.plan_builds(), 1);
+        // Failures are not cached: same error on every call, no plan minted.
+        assert!(be.plan("warp_step__8x8").is_err());
+        assert!(be.plan("warp_step__8x8").is_err());
+        assert!(be.plan("not-a-minted-name").is_err());
+        assert_eq!(be.plan_builds(), 1);
+        assert!(be.exec_counts().is_empty(), "plan() alone must not count an exec");
     }
 }

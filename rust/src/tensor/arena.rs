@@ -1,0 +1,165 @@
+//! Per-thread step arena: a reusable pool of transient f32 buffers.
+//!
+//! The optimizer step path allocates a handful of short-lived Vecs per
+//! slot per step (projected gradient, Adam delta, restored update,
+//! backward scratch). Their sizes repeat every step, so after one
+//! warmup step the freelist can satisfy every [`take`] from retained
+//! capacity — the steady state performs zero transient heap
+//! allocations on this path, and [`alloc_events`] proves it (the
+//! steady-state tests assert the counter stays flat after warmup).
+//!
+//! Semantics are allocation-equivalent: `take(len)` returns a buffer
+//! bit-identical to `vec![0.0; len]` (recycled capacity is re-zeroed),
+//! so swapping `vec![0.0; n]` for `take(n)` + [`give`] cannot change
+//! any numeric result.
+//!
+//! The pool is thread-local (each worker recycles its own buffers — no
+//! locks on the hot path) and capped: [`give`] drops a buffer instead
+//! of retaining it once the pool holds [`ARENA_RETAIN_BYTES`] or
+//! [`ARENA_RETAIN_BUFS`] entries, so a one-off huge transient cannot
+//! pin memory. This pool is distinct from the GEMM pack scratch
+//! (`linalg::with_pack_scratch`): that one holds panel-packing buffers
+//! inside a `RefCell` borrow and must not be held across GEMM calls,
+//! while arena buffers are owned plain Vecs that can feed GEMMs.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Max bytes of f32 capacity one thread's freelist retains.
+pub const ARENA_RETAIN_BYTES: usize = 8 << 20;
+/// Max buffers one thread's freelist retains.
+pub const ARENA_RETAIN_BUFS: usize = 16;
+
+thread_local! {
+    static FREELIST: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static THREAD_MISSES: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Process-wide count of [`take`] calls that had to hit the allocator
+/// (no retained buffer had enough capacity). Flat across steady-state
+/// steps once every transient size has been seen. Summed over all
+/// threads — single-process tests (`tests/steady_state_cache.rs`)
+/// assert on this one; within the parallel unit-test harness use
+/// [`thread_alloc_events`].
+static ALLOC_EVENTS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of arena misses (true heap allocations) since process start,
+/// over all threads.
+pub fn alloc_events() -> usize {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Arena misses on THIS thread only (race-free under the parallel test
+/// harness; the freelist is thread-local, so misses are too).
+pub fn thread_alloc_events() -> usize {
+    THREAD_MISSES.with(|m| m.get())
+}
+
+/// Get a zeroed buffer of exactly `len` elements — bit-identical to
+/// `vec![0.0; len]`. Reuses the smallest retained buffer that fits;
+/// allocates (and ticks [`alloc_events`]) only on a miss.
+pub fn take(len: usize) -> Vec<f32> {
+    let reuse = FREELIST.with(|fl| {
+        let fl = &mut *fl.borrow_mut();
+        let best = fl
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| v.capacity() >= len)
+            .min_by_key(|(_, v)| v.capacity())
+            .map(|(i, _)| i);
+        best.map(|i| fl.swap_remove(i))
+    });
+    match reuse {
+        Some(mut v) => {
+            v.clear();
+            v.resize(len, 0.0);
+            v
+        }
+        None => {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+            THREAD_MISSES.with(|m| m.set(m.get() + 1));
+            vec![0.0; len]
+        }
+    }
+}
+
+/// Return a buffer to this thread's freelist for reuse. Dropped (not
+/// retained) once the pool is at its byte or entry cap.
+pub fn give(v: Vec<f32>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    FREELIST.with(|fl| {
+        let fl = &mut *fl.borrow_mut();
+        let held: usize = fl.iter().map(|b| b.capacity() * 4).sum();
+        if fl.len() < ARENA_RETAIN_BUFS && held + v.capacity() * 4 <= ARENA_RETAIN_BYTES {
+            fl.push(v);
+        }
+    });
+}
+
+/// Bytes of f32 capacity currently retained by THIS thread's freelist.
+pub fn retained_bytes() -> usize {
+    FREELIST.with(|fl| fl.borrow().iter().map(|b| b.capacity() * 4).sum())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_matches_fresh_zeroed_vec() {
+        let mut v = take(7);
+        assert_eq!(v, vec![0.0f32; 7]);
+        // Dirty it, give it back, take again: contents re-zeroed.
+        v.iter_mut().for_each(|x| *x = 3.5);
+        give(v);
+        let w = take(5);
+        assert_eq!(w, vec![0.0f32; 5]);
+        give(w);
+    }
+
+    #[test]
+    fn steady_state_reuse_stops_allocating() {
+        // Warmup: one take per size.
+        let sizes = [130usize, 64, 640];
+        for &s in &sizes {
+            give(take(s));
+        }
+        let misses0 = thread_alloc_events();
+        // Steady state: the same sizes (sequentially — at most one
+        // buffer outstanding, like the step kernels) never miss.
+        for _ in 0..10 {
+            for &s in &sizes {
+                give(take(s));
+            }
+        }
+        assert_eq!(thread_alloc_events(), misses0, "steady-state take() hit the allocator");
+    }
+
+    #[test]
+    fn retention_is_capped() {
+        // Hold more buffers than the entry cap, then return them all;
+        // the freelist must stop retaining at the cap.
+        let held: Vec<Vec<f32>> = (0..4 * ARENA_RETAIN_BUFS).map(|_| take(33)).collect();
+        for b in held {
+            give(b);
+        }
+        assert!(retained_bytes() <= ARENA_RETAIN_BYTES);
+        assert!(FREELIST.with(|fl| fl.borrow().len()) <= ARENA_RETAIN_BUFS);
+        // A buffer over the byte cap is dropped, not retained.
+        let huge = take(2 * ARENA_RETAIN_BYTES / 4);
+        let before = retained_bytes();
+        give(huge);
+        assert_eq!(retained_bytes(), before, "over-cap buffer was retained");
+    }
+
+    #[test]
+    fn smallest_fitting_buffer_is_reused() {
+        give(take(1000));
+        give(take(10));
+        let small = take(8); // should come from the 10-cap buffer
+        assert!(small.capacity() < 1000);
+        give(small);
+    }
+}

@@ -50,6 +50,20 @@
 //! [`SCRATCH_RETAIN_BYTES`] are released back to the allocator, and the
 //! high-water mark is tracked in [`peak_scratch_bytes`] for
 //! `MemoryBreakdown::opt_transient`.
+//!
+//! ## Pack-once caches
+//!
+//! An operand that is reused across many GEMMs (a projection matrix
+//! between Eqn-6 refreshes) can be packed once into a [`PackedMat`] and
+//! replayed through the `gemm_*_packed{,_into}` entry points, which
+//! skip the per-call pack phase for that side. Cached panels are built
+//! by the same `pack_a_generic`/`pack_b_generic` used on the uncached
+//! path and are walked in the same `jc → pc → ic → jr` block order, so
+//! every output element still accumulates in the fixed ascending-`k`
+//! order — cached and uncached results are bit-identical. Cache bytes
+//! live outside the thread-local scratch (they are charged to
+//! `MemoryBreakdown::pack_cache`, not `opt_transient`) and are tracked
+//! by [`pack_cache_bytes`] / [`packed_builds`].
 
 use crate::tensor::bf16::bf16_to_f32;
 use crate::tensor::quant::QuantizedBuf;
@@ -696,6 +710,409 @@ fn gemm_slab(
 }
 
 // ---------------------------------------------------------------------------
+// Pack-once cached operands (PackedMat)
+// ---------------------------------------------------------------------------
+
+/// Which side of the product a [`PackedMat`] caches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackSide {
+    /// Left operand: `MR`-row strips per (`pc`, `ic`) block.
+    A,
+    /// Right operand: dense `kc`×`nc` panels per (`jc`, `pc`) block.
+    B,
+}
+
+/// Total [`PackedMat`] builds since process start. Debug counter: the
+/// steady-state tests assert it stays flat across Keep steps (zero
+/// operand re-packing) and rises exactly on projection refreshes.
+static PACKED_BUILDS: AtomicUsize = AtomicUsize::new(0);
+/// Live bytes currently held by all [`PackedMat`] caches.
+static PACK_CACHE_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of [`PackedMat`] builds since process start.
+pub fn packed_builds() -> usize {
+    PACKED_BUILDS.load(Ordering::Relaxed)
+}
+
+/// Bytes currently held by live [`PackedMat`] caches, process-wide.
+/// Per-optimizer accounting (what `MemoryBreakdown::pack_cache`
+/// reports) sums the individual caches instead; this global is the
+/// leak-check / bench counterpart.
+pub fn pack_cache_bytes() -> usize {
+    PACK_CACHE_BYTES.load(Ordering::Relaxed)
+}
+
+/// One operand packed once into the exact panel layout the blocked core
+/// consumes, so repeated GEMMs against it skip the pack phase.
+///
+/// Panels are produced by the same generic packers as the uncached path
+/// (every [`KernelSet`] shares them — packing depends only on the
+/// operand, not the register-tile width), decode bf16/int8 storage
+/// exactly like pack-time decoding does, and are stored per block of
+/// the `gemm_slab` walk at their exact size. The `isa` tag records the
+/// active set at build time: panels stay *valid* for every set, but
+/// callers that cache across dispatch changes can use
+/// [`PackedMat::is_current`] to decide to rebuild.
+pub struct PackedMat {
+    isa: &'static str,
+    side: PackSide,
+    trans: bool,
+    /// Logical dims: (m, k) for [`PackSide::A`], (k, n) for
+    /// [`PackSide::B`].
+    d0: usize,
+    d1: usize,
+    dtype: &'static str,
+    data: Vec<f32>,
+    /// Panel start offsets, in walk order: `jb * kblocks + pb` for the
+    /// B side, `pb * mblocks + ib` for the A side.
+    offsets: Vec<usize>,
+}
+
+impl PackedMat {
+    /// Pack the full logical (k, n) right operand (stored (n, k)
+    /// row-major if `trans`) into `kc`×`nc` panels.
+    pub fn pack_b(b: MatRef<'_>, trans: bool, k: usize, n: usize) -> PackedMat {
+        assert_eq!(b.len(), k * n, "pack_b: operand is not {k}x{n}");
+        let ld = if trans { k } else { n };
+        // The (jc, pc) grid tiles k×n exactly, so the panel bytes sum
+        // to one dense copy of the operand.
+        let mut data = vec![0.0f32; k * n];
+        let mut offsets = Vec::with_capacity(k.div_ceil(KC) * n.div_ceil(NC));
+        let mut pos = 0;
+        let mut jc = 0;
+        while jc < n {
+            let nc = NC.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kc = KC.min(k - pc);
+                offsets.push(pos);
+                pack_b_generic(&mut data[pos..pos + kc * nc], b, ld, trans, pc, kc, jc, nc);
+                pos += kc * nc;
+                pc += KC;
+            }
+            jc += NC;
+        }
+        PackedMat::finish(PackSide::B, trans, k, n, b.dtype(), data, offsets)
+    }
+
+    /// Pack the full logical (m, k) left operand (stored (k, m)
+    /// row-major if `trans`) into `MR`-row strips per (`pc`, `ic`)
+    /// block.
+    pub fn pack_a(a: MatRef<'_>, trans: bool, m: usize, k: usize) -> PackedMat {
+        assert_eq!(a.len(), m * k, "pack_a: operand is not {m}x{k}");
+        let ld = if trans { m } else { k };
+        let mut offsets = Vec::with_capacity(k.div_ceil(KC) * m.div_ceil(MC));
+        let mut total = 0;
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                offsets.push(total);
+                total += mc.div_ceil(MR) * MR * kc;
+                ic += MC;
+            }
+            pc += KC;
+        }
+        let mut data = vec![0.0f32; total];
+        let mut idx = 0;
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let mut ic = 0;
+            while ic < m {
+                let mc = MC.min(m - ic);
+                let (pos, len) = (offsets[idx], mc.div_ceil(MR) * MR * kc);
+                pack_a_generic(&mut data[pos..pos + len], a, ld, trans, pc, kc, ic, mc);
+                idx += 1;
+                ic += MC;
+            }
+            pc += KC;
+        }
+        PackedMat::finish(PackSide::A, trans, m, k, a.dtype(), data, offsets)
+    }
+
+    fn finish(
+        side: PackSide,
+        trans: bool,
+        d0: usize,
+        d1: usize,
+        dtype: &'static str,
+        data: Vec<f32>,
+        offsets: Vec<usize>,
+    ) -> PackedMat {
+        let pm = PackedMat { isa: kernel_isa(), side, trans, d0, d1, dtype, data, offsets };
+        PACKED_BUILDS.fetch_add(1, Ordering::Relaxed);
+        PACK_CACHE_BYTES.fetch_add(pm.heap_bytes(), Ordering::Relaxed);
+        pm
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.data.capacity() * std::mem::size_of::<f32>()
+            + self.offsets.capacity() * std::mem::size_of::<usize>()
+    }
+
+    /// Retained cache bytes (panel data + offset table).
+    pub fn nbytes(&self) -> usize {
+        self.heap_bytes()
+    }
+
+    /// Kernel-set label active when the panels were built.
+    pub fn isa(&self) -> &'static str {
+        self.isa
+    }
+
+    /// Storage precision of the source operand ("f32"/"bf16"/"int8").
+    pub fn dtype(&self) -> &'static str {
+        self.dtype
+    }
+
+    /// Was this cache built under the currently dispatched kernel set?
+    /// Panels are valid for every set (the packers are shared), but
+    /// long-lived caches rebuild on a dispatch change to keep the
+    /// ISA-tag honest.
+    pub fn is_current(&self) -> bool {
+        self.isa == kernel_isa()
+    }
+
+    /// Logical dims of the cached operand: (m, k) for the A side,
+    /// (k, n) for the B side.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.d0, self.d1)
+    }
+
+    fn expect(&self, side: PackSide, trans: bool, d0: usize, d1: usize) {
+        assert!(
+            self.side == side && self.trans == trans && self.d0 == d0 && self.d1 == d1,
+            "PackedMat mismatch: cached {:?} trans={} {}x{}, call wants {:?} trans={} {}x{}",
+            self.side,
+            self.trans,
+            self.d0,
+            self.d1,
+            side,
+            trans,
+            d0,
+            d1,
+        );
+    }
+
+    /// The `kc`×`nc` B panel of grid cell (`jb`, `pb`).
+    fn b_panel(&self, jb: usize, pb: usize, len: usize) -> &[f32] {
+        let kblocks = self.d0.div_ceil(KC);
+        let pos = self.offsets[jb * kblocks + pb];
+        &self.data[pos..pos + len]
+    }
+
+    /// The strip-packed A block of grid cell (`pb`, `ib`).
+    fn a_panel(&self, pb: usize, ib: usize, len: usize) -> &[f32] {
+        let mblocks = self.d0.div_ceil(MC);
+        let pos = self.offsets[pb * mblocks + ib];
+        &self.data[pos..pos + len]
+    }
+}
+
+impl Drop for PackedMat {
+    fn drop(&mut self) {
+        PACK_CACHE_BYTES.fetch_sub(self.heap_bytes(), Ordering::Relaxed);
+    }
+}
+
+/// One side of a [`gemm_slab_cached`] product: packed on the fly into
+/// thread scratch (the `gemm_slab` behaviour) or read from a
+/// [`PackedMat`].
+#[derive(Clone, Copy)]
+enum PanelSrc<'p> {
+    Mat { mat: MatRef<'p>, trans: bool, ld: usize },
+    Cached(&'p PackedMat),
+}
+
+/// [`gemm_slab`] with either operand's panels optionally read from a
+/// [`PackedMat`] instead of re-packed. Identical block walk, panel
+/// layout, and microkernel call sequence — bit-identical results.
+/// Serial only (`row0 = 0`, full `m`): cached-panel GEMMs are the
+/// per-slot serial ones; parallelism lives a level up, across slots.
+fn gemm_slab_cached(
+    ks: &KernelSet,
+    out: &mut [f32],
+    a: PanelSrc<'_>,
+    m: usize,
+    b: PanelSrc<'_>,
+    k: usize,
+    n: usize,
+    bufs: &mut PackBufs,
+) {
+    if matches!(a, PanelSrc::Mat { .. }) {
+        bufs.a.resize(MC * KC, 0.0);
+    }
+    if matches!(b, PanelSrc::Mat { .. }) {
+        bufs.b.resize(KC * NC, 0.0);
+    }
+    let PackBufs { a: abuf, b: bbuf } = bufs;
+
+    let (mut jc, mut jb) = (0, 0);
+    while jc < n {
+        let nc = NC.min(n - jc);
+        let (mut pc, mut pb) = (0, 0);
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let bpack: &[f32] = match b {
+                PanelSrc::Mat { mat, trans, ld } => {
+                    (ks.pack_b)(bbuf, mat, ld, trans, pc, kc, jc, nc);
+                    bbuf
+                }
+                PanelSrc::Cached(pm) => pm.b_panel(jb, pb, kc * nc),
+            };
+            let (mut ic, mut ib) = (0, 0);
+            while ic < m {
+                let mc = MC.min(m - ic);
+                let strips = mc.div_ceil(MR);
+                let apack: &[f32] = match a {
+                    PanelSrc::Mat { mat, trans, ld } => {
+                        (ks.pack_a)(abuf, mat, ld, trans, pc, kc, ic, mc);
+                        abuf
+                    }
+                    PanelSrc::Cached(pm) => pm.a_panel(pb, ib, strips * MR * kc),
+                };
+                let mut jr = 0;
+                while jr < nc {
+                    let nr = ks.nr.min(nc - jr);
+                    for s in 0..strips {
+                        let r0 = ic + s * MR;
+                        let mr = MR.min(ic + mc - r0);
+                        let astrip = &apack[s * MR * kc..(s + 1) * MR * kc];
+                        (ks.microkernel)(out, n, r0, jc + jr, astrip, bpack, kc, nc, jr, mr, nr);
+                    }
+                    jr += ks.nr;
+                }
+                ic += MC;
+                ib += 1;
+            }
+            pc += KC;
+            pb += 1;
+        }
+        jc += NC;
+        jb += 1;
+    }
+}
+
+/// Shared head of the packed entry points: validate shapes, zero the
+/// output, run the cached slab serially, release scratch.
+fn gemm_packed_into(
+    out: &mut [f32],
+    a: PanelSrc<'_>,
+    m: usize,
+    b: PanelSrc<'_>,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(out.len(), m * n, "gemm_packed: out is not {m}x{n}");
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let ks = kernels();
+    PACK.with(|p| gemm_slab_cached(ks, out, a, m, b, k, n, &mut p.borrow_mut()));
+    release_scratch();
+}
+
+/// `out = a·b` with `b`'s panels replayed from a cache built by
+/// [`PackedMat::pack_b`]`(b, false, k, n)` — the per-call pack-B phase
+/// is skipped. Bit-identical to [`gemm_nn_into`].
+pub fn gemm_nn_packed_into(
+    out: &mut [f32],
+    a: &[f32],
+    pb: &PackedMat,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    pb.expect(PackSide::B, false, k, n);
+    assert_eq!(a.len(), m * k, "gemm_nn_packed: lhs is not {m}x{k}");
+    let asrc = PanelSrc::Mat { mat: MatRef::F32(a), trans: false, ld: k };
+    gemm_packed_into(out, asrc, m, PanelSrc::Cached(pb), k, n);
+}
+
+/// [`gemm_nn_packed_into`] with a fresh output buffer.
+pub fn gemm_nn_packed(a: &[f32], pb: &PackedMat, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gemm_nn_packed_into(&mut out, a, pb, m, k, n);
+    out
+}
+
+/// `out = a·bᵀ` (`b` stored (n, k)) with `b`'s transposed panels
+/// replayed from a cache built by [`PackedMat::pack_b`]`(b, true, k, n)`.
+/// Bit-identical to [`gemm_nt_into`].
+pub fn gemm_nt_packed_into(
+    out: &mut [f32],
+    a: &[f32],
+    pb: &PackedMat,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    pb.expect(PackSide::B, true, k, n);
+    assert_eq!(a.len(), m * k, "gemm_nt_packed: lhs is not {m}x{k}");
+    let asrc = PanelSrc::Mat { mat: MatRef::F32(a), trans: false, ld: k };
+    gemm_packed_into(out, asrc, m, PanelSrc::Cached(pb), k, n);
+}
+
+/// [`gemm_nt_packed_into`] with a fresh output buffer.
+pub fn gemm_nt_packed(a: &[f32], pb: &PackedMat, m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gemm_nt_packed_into(&mut out, a, pb, m, k, n);
+    out
+}
+
+/// `out = aᵀ·b` (`a` stored (rows, m)) with `a`'s strips replayed from
+/// a cache built by [`PackedMat::pack_a`]`(a, true, m, rows)`.
+/// Bit-identical to [`gemm_tn_into`].
+pub fn gemm_tn_packed_into(
+    out: &mut [f32],
+    pa: &PackedMat,
+    b: &[f32],
+    rows: usize,
+    m: usize,
+    n: usize,
+) {
+    pa.expect(PackSide::A, true, m, rows);
+    assert_eq!(b.len(), rows * n, "gemm_tn_packed: rhs is not {rows}x{n}");
+    let bsrc = PanelSrc::Mat { mat: MatRef::F32(b), trans: false, ld: n };
+    gemm_packed_into(out, PanelSrc::Cached(pa), m, bsrc, rows, n);
+}
+
+/// [`gemm_tn_packed_into`] with a fresh output buffer.
+pub fn gemm_tn_packed(pa: &PackedMat, b: &[f32], rows: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gemm_tn_packed_into(&mut out, pa, b, rows, m, n);
+    out
+}
+
+/// `out = a·b` with `a`'s strips replayed from a cache built by
+/// [`PackedMat::pack_a`]`(a, false, m, k)`. Bit-identical to
+/// [`gemm_nn_into`].
+pub fn gemm_nn_packed_a_into(
+    out: &mut [f32],
+    pa: &PackedMat,
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    pa.expect(PackSide::A, false, m, k);
+    assert_eq!(b.len(), k * n, "gemm_nn_packed_a: rhs is not {k}x{n}");
+    let bsrc = PanelSrc::Mat { mat: MatRef::F32(b), trans: false, ld: n };
+    gemm_packed_into(out, PanelSrc::Cached(pa), m, bsrc, k, n);
+}
+
+/// [`gemm_nn_packed_a_into`] with a fresh output buffer.
+pub fn gemm_nn_packed_a(pa: &PackedMat, b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gemm_nn_packed_a_into(&mut out, pa, b, m, k, n);
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Public GEMM entry points
 // ---------------------------------------------------------------------------
 
@@ -733,13 +1150,13 @@ pub fn gemm_mixed_into(
         let workers = pool.workers();
         if workers > 1 && 2 * m * k * n >= PAR_MIN_FLOPS && m >= 2 * MR {
             let chunk = round_up(m.div_ceil(workers), MR);
-            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            let jobs: Vec<_> = out
                 .chunks_mut(chunk * n)
                 .enumerate()
                 .map(|(ci, oc)| {
                     let row0 = ci * chunk;
                     let rows = oc.len() / n;
-                    Box::new(move || {
+                    move || {
                         PACK.with(|p| {
                             gemm_slab(
                                 ks,
@@ -758,7 +1175,7 @@ pub fn gemm_mixed_into(
                             );
                         });
                         release_scratch();
-                    }) as Box<dyn FnOnce() + Send + '_>
+                    }
                 })
                 .collect();
             pool.run_all_scoped(jobs);
@@ -1516,6 +1933,92 @@ mod tests {
         rot(&mut xa, &mut xb, 0.0, 1.0);
         assert_eq!(xa, vec![0.0, -1.0]);
         assert_eq!(xb, vec![1.0, 0.0]);
+    }
+
+    /// The pack-once contract: replaying cached B panels is
+    /// bit-identical to packing per call, for plain and transposed
+    /// operands, on shapes that cross every block boundary
+    /// (MC=64, KC=128, NC=528), for all storage precisions.
+    #[test]
+    fn packed_b_gemm_bit_matches_unpacked() {
+        let mut rng = Rng::new(48);
+        for &(m, k, n) in &[(5usize, 7usize, 9usize), (66, 130, 530), (130, 260, 540)] {
+            let a = rng.normal_vec(m * k, 0.5);
+            let b = rng.normal_vec(k * n, 0.5);
+            let pb = PackedMat::pack_b(MatRef::F32(&b), false, k, n);
+            assert_eq!(
+                gemm_nn_packed(&a, &pb, m, k, n),
+                gemm_nn(None, &a, &b, m, k, n),
+                "packed nn {m}x{k}x{n}"
+            );
+
+            let bt = transpose(&b, k, n); // stored (n, k)
+            let pbt = PackedMat::pack_b(MatRef::F32(&bt), true, k, n);
+            assert_eq!(
+                gemm_nt_packed(&a, &pbt, m, k, n),
+                gemm_nt(None, &a, &bt, m, k, n),
+                "packed nt {m}x{k}x{n}"
+            );
+        }
+        // Compressed-operand caches decode exactly like pack-time
+        // decoding, so they bit-match the uncached low-precision GEMM.
+        let (m, k, n) = (33usize, 70usize, 41usize);
+        let a = rng.normal_vec(m * k, 0.5);
+        let bsrc = rng.normal_vec(k * n, 0.5);
+        let mut bh = Vec::new();
+        bf16::encode(&bsrc, &mut bh);
+        let pb = PackedMat::pack_b(MatRef::Bf16(&bh), false, k, n);
+        assert_eq!(pb.dtype(), "bf16");
+        assert_eq!(gemm_nn_packed(&a, &pb, m, k, n), gemm_nn_bf16(None, &a, &bh, m, k, n));
+        let q = quant::quantize(&bsrc);
+        let pq = PackedMat::pack_b(MatRef::Q8(&q), false, k, n);
+        assert_eq!(gemm_nn_packed(&a, &pq, m, k, n), gemm_nn_q8(None, &a, &q, m, k, n));
+    }
+
+    #[test]
+    fn packed_a_gemm_bit_matches_unpacked() {
+        let mut rng = Rng::new(49);
+        for &(rows, m, n) in &[(7usize, 5usize, 9usize), (130, 66, 530), (260, 130, 67)] {
+            let a = rng.normal_vec(rows * m, 0.5); // stored (rows, m)
+            let b = rng.normal_vec(rows * n, 0.5);
+            let pa = PackedMat::pack_a(MatRef::F32(&a), true, m, rows);
+            assert_eq!(pa.dims(), (m, rows));
+            assert_eq!(
+                gemm_tn_packed(&pa, &b, rows, m, n),
+                gemm_tn(None, &a, &b, rows, m, n),
+                "packed tn rows={rows} {m}x{n}"
+            );
+
+            let an = transpose(&a, rows, m); // stored (m, rows)
+            let pan = PackedMat::pack_a(MatRef::F32(&an), false, m, rows);
+            assert_eq!(
+                gemm_nn_packed_a(&pan, &b, m, rows, n),
+                gemm_nn(None, &an, &b, m, rows, n),
+                "packed nn-a rows={rows} {m}x{n}"
+            );
+        }
+    }
+
+    /// Build/byte counters. The process-wide counters are shared with
+    /// every concurrently running test, so this only asserts
+    /// race-safe invariants (monotone builds; live bytes bound the
+    /// caches this thread holds). Exact flatness-on-replay and
+    /// drop-balance are pinned by `tests/steady_state_cache.rs`, which
+    /// owns its whole process.
+    #[test]
+    fn pack_cache_counters_track_builds() {
+        let mut rng = Rng::new(50);
+        let (k, n) = (40usize, 24usize);
+        let b = rng.normal_vec(k * n, 0.5);
+        let builds0 = packed_builds();
+        let pb = PackedMat::pack_b(MatRef::F32(&b), false, k, n);
+        assert!(packed_builds() > builds0, "build did not tick packed_builds");
+        assert!(pb.nbytes() >= k * n * 4);
+        // The global is the exact sum of live caches, so while `pb` is
+        // alive it is bounded below by this cache's bytes.
+        assert!(pack_cache_bytes() >= pb.nbytes());
+        assert!(pb.is_current());
+        assert_eq!(pb.isa(), kernel_isa());
     }
 
     #[test]

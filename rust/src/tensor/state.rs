@@ -21,6 +21,11 @@
 //! `tests/quant_fused_parity.rs` pins. Blocks are walked in ascending
 //! order on the calling thread, so results are also independent of the
 //! optimizer's per-slot worker fan-out.
+//!
+//! Whole-buffer transients the streaming path still needs (projected
+//! gradients, decoded scratch larger than one block) come from the
+//! per-thread step arena ([`super::arena`]), so the steady-state step
+//! path performs no heap allocation for them after warmup.
 
 use super::bf16;
 use super::linalg;

@@ -63,12 +63,25 @@ impl ThreadPool {
     /// job-index order regardless of completion order; if any job
     /// panicked, the first panic (by index) is re-raised here after every
     /// job of the batch has finished.
-    pub fn run_all_scoped<'scope, T: Send + 'scope>(
-        &self,
-        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'scope>>,
-    ) -> Vec<T> {
+    ///
+    /// Generic over the closure type so callers hand over plain (unboxed)
+    /// closures: each job is boxed exactly once here, by the wrapper that
+    /// pairs it with its result slot — the old `Vec<Box<dyn FnOnce>>`
+    /// signature forced a second box per job on the hot step path.
+    pub fn run_all_scoped<'scope, T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'scope,
+        F: FnOnce() -> T + Send + 'scope,
+    {
+        if jobs.is_empty() {
+            // Nothing to fan out: return before creating the result
+            // channel or touching the job queue.
+            return Vec::new();
+        }
         let n = jobs.len();
-        let (tx, rx) = mpsc::channel::<(usize, thread::Result<T>)>();
+        // Pre-sized rendezvous buffer: every send finds a free slot, so
+        // workers never block on the result channel.
+        let (tx, rx) = mpsc::sync_channel::<(usize, thread::Result<T>)>(n);
         for (i, job) in jobs.into_iter().enumerate() {
             let tx = tx.clone();
             let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
@@ -144,20 +157,31 @@ mod tests {
     fn scoped_jobs_mutate_borrowed_buffers() {
         let pool = ThreadPool::new(4);
         let mut data = vec![0usize; 16];
-        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+        // Unboxed closures straight into the pool — the generic
+        // signature boxes each exactly once internally.
+        let jobs: Vec<_> = data
             .chunks_mut(4)
             .enumerate()
             .map(|(i, chunk)| {
-                Box::new(move || {
+                move || {
                     for (j, c) in chunk.iter_mut().enumerate() {
                         *c = i * 10 + j;
                     }
-                }) as Box<dyn FnOnce() + Send + '_>
+                }
             })
             .collect();
         pool.run_all_scoped(jobs);
         assert_eq!(data[5], 11);
         assert_eq!(data[15], 33);
+    }
+
+    #[test]
+    fn empty_batch_returns_without_touching_the_pool() {
+        let pool = ThreadPool::new(2);
+        let out = pool.run_all_scoped(Vec::<fn() -> usize>::new());
+        assert!(out.is_empty());
+        // The pool is still fully usable afterwards.
+        assert_eq!(pool.run_all_scoped(vec![|| 5usize]), vec![5]);
     }
 
     #[test]

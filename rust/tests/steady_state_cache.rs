@@ -1,0 +1,281 @@
+//! Acceptance suite for the steady-state step-path caches: the packed
+//! projection panels (`linalg::PackedMat` via `refimpl::ProjPack`), the
+//! native backend's interned plan table, and the per-thread step arena.
+//!
+//! Contracts pinned here:
+//! - **Bit-identity.** Training with cached panels threaded through
+//!   `Backend::exec_with_state_packed` equals the unpacked fused path
+//!   bit-for-bit across projection policy × storage precision × worker
+//!   count — including across every refresh boundary, where the panels
+//!   must be invalidated and rebuilt from the new projections.
+//! - **Counters.** On pure `Keep` steps nothing re-packs
+//!   (`linalg::packed_builds` flat), nothing re-parses graph names
+//!   (`NativeBackend::plan_builds` flat), and the arena stops missing
+//!   (`arena::alloc_events` flat) once warm; a refresh step rebuilds the
+//!   panels (`packed_builds` rises).
+//!
+//! The counter checks read process-global counters, so every test in
+//! this file serializes on one mutex (other integration-test files run
+//! as separate processes and cannot interfere).
+
+use coap::config::{ConvFormat, MomentBase, OptKind, TrainConfig};
+use coap::coordinator::Trainer;
+use coap::model::ParamStore;
+use coap::optim::lowrank::LowRank;
+use coap::optim::Optimizer;
+use coap::runtime::{Backend, ExperimentInfo, ModelInfo, NativeBackend};
+use coap::tensor::linalg::MatRef;
+use coap::tensor::state::StateView;
+use coap::tensor::{arena, linalg, Precision, Tensor};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // A panicking test must not wedge the rest of the file.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Backend adapter that drops the cached panels: `exec_with_state_packed`
+/// is deliberately NOT overridden, so the trait default discards `pack`
+/// and every step takes the unpacked (pack-from-`p`-each-call) fused
+/// path. Everything else delegates to the real native backend.
+struct NoPack(NativeBackend);
+
+impl Backend for NoPack {
+    fn label(&self) -> &'static str {
+        "native-nopack"
+    }
+
+    fn exec(&self, name: &str, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.0.exec(name, inputs)
+    }
+
+    fn exec_with_state(
+        &self,
+        name: &str,
+        inputs: &[&Tensor],
+        states: &mut [StateView],
+    ) -> anyhow::Result<Vec<Tensor>> {
+        self.0.exec_with_state(name, inputs, states)
+    }
+
+    fn exec_pupdate(
+        &self,
+        name: &str,
+        p: &Tensor,
+        g2: &Tensor,
+        moment: MatRef<'_>,
+        mdims: (usize, usize),
+    ) -> anyhow::Result<Vec<Tensor>> {
+        self.0.exec_pupdate(name, p, g2, moment, mdims)
+    }
+
+    fn fuses_states(&self) -> bool {
+        self.0.fuses_states()
+    }
+
+    fn model(&self, name: &str) -> anyhow::Result<ModelInfo> {
+        self.0.model(name)
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        self.0.model_names()
+    }
+
+    fn has_graph(&self, name: &str) -> bool {
+        self.0.has_graph(name)
+    }
+
+    fn experiments(&self) -> Vec<ExperimentInfo> {
+        self.0.experiments()
+    }
+
+    fn total_execs(&self) -> u64 {
+        self.0.total_execs()
+    }
+}
+
+/// Six steps with `t_update = 2, λ = 2` crosses every refresh kind the
+/// policy can emit (Recalib at t = 1 and 4, PUpdate at t = 2 and 6), so
+/// a stale-panel bug anywhere in the invalidation rule shows up as a
+/// parameter diff.
+fn cfg(
+    model: &str,
+    opt: OptKind,
+    base: MomentBase,
+    fmt: ConvFormat,
+    prec: Precision,
+    threads: usize,
+) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = model.into();
+    c.optimizer = opt;
+    c.lowrank_base = base;
+    c.conv_format = fmt;
+    c.state_precision = prec;
+    c.threads = threads;
+    c.steps = 6;
+    c.t_update = 2;
+    c.lambda = 2;
+    c.lr = 2e-3;
+    c.eval_every = 0;
+    c.log_every = 0;
+    c
+}
+
+fn run_bits(c: TrainConfig, rt: Arc<dyn Backend>) -> Vec<Vec<u32>> {
+    let mut tr = Trainer::builder(c).backend(rt).quiet().build().unwrap();
+    tr.run().unwrap();
+    tr.params()
+        .iter()
+        .map(|t| t.f32s().iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// Packed runs (any worker count) must equal the unpacked reference
+/// bit-for-bit — the panel cache may never change a single bit.
+fn assert_packed_parity(model: &str, opt: OptKind, base: MomentBase, fmt: ConvFormat) {
+    let _g = lock();
+    for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+        let reference = run_bits(
+            cfg(model, opt, base, fmt, prec, 1),
+            Arc::new(NoPack(NativeBackend::new())),
+        );
+        for threads in [1usize, 2, 8] {
+            let packed = run_bits(
+                cfg(model, opt, base, fmt, prec, threads),
+                Arc::new(NativeBackend::new()),
+            );
+            assert_eq!(
+                reference, packed,
+                "panel cache drifted: {opt:?}/{base:?}/{model}/{fmt:?}/{prec:?} \
+                 threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn coap_matrix_packed_parity_all_precisions() {
+    assert_packed_parity("lm_micro", OptKind::Coap, MomentBase::Adam, ConvFormat::Tucker2);
+}
+
+#[test]
+fn galore_matrix_packed_parity_all_precisions() {
+    assert_packed_parity("lm_micro", OptKind::Galore, MomentBase::Adam, ConvFormat::Tucker2);
+}
+
+#[test]
+fn flora_matrix_packed_parity_all_precisions() {
+    assert_packed_parity("lm_micro", OptKind::Flora, MomentBase::Adam, ConvFormat::Tucker2);
+}
+
+#[test]
+fn coap_conv_tucker2_packed_parity_all_precisions() {
+    assert_packed_parity("cnn_micro", OptKind::Coap, MomentBase::Adam, ConvFormat::Tucker2);
+}
+
+#[test]
+fn coap_conv_full_tucker_packed_parity_all_precisions() {
+    assert_packed_parity("cnn_micro", OptKind::Coap, MomentBase::Adam, ConvFormat::Full);
+}
+
+#[test]
+fn coap_conv_adafactor_packed_parity_all_precisions() {
+    assert_packed_parity("cnn_micro", OptKind::Coap, MomentBase::Adafactor, ConvFormat::Tucker2);
+}
+
+/// Direct per-step driver: a `LowRank` on synthetic gradients, so each
+/// test controls the exact step number `t` the schedule sees (the
+/// trainer restarts `t` per `run()` call, which would re-trigger the
+/// t = 1 refresh).
+fn lowrank_rig(
+    be: &NativeBackend,
+    t_update: usize,
+    lambda: usize,
+) -> (LowRank, Vec<Tensor>, Vec<Tensor>) {
+    let info = be.model("lm_micro").unwrap();
+    let mut c = cfg(
+        "lm_micro",
+        OptKind::Coap,
+        MomentBase::Adam,
+        ConvFormat::Tucker2,
+        Precision::F32,
+        1,
+    );
+    c.t_update = t_update;
+    c.lambda = lambda;
+    let opt = LowRank::new(&c, &info).unwrap();
+    let store = ParamStore::init(&info, 0, false);
+    let grads: Vec<Tensor> = info
+        .params
+        .iter()
+        .map(|p| {
+            let vals: Vec<f32> = (0..p.numel()).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+            Tensor::from_f32(&p.shape, vals)
+        })
+        .collect();
+    (opt, store.params, grads)
+}
+
+/// Pure-`Keep` steady state: after warmup, further steps build no packed
+/// panels, compile no plans, and stop missing the arena.
+#[test]
+fn keep_steps_never_repack_reparse_or_allocate() {
+    let _g = lock();
+    let pack_bytes_baseline = linalg::pack_cache_bytes();
+    let be = NativeBackend::new();
+    // Only t = 1 refreshes; every later step is ProjAction::Keep.
+    let (mut opt, mut params, grads) = lowrank_rig(&be, 1000, 1000);
+
+    opt.step(1, 2e-3, &grads, &mut params, &be).unwrap(); // Recalib: panels built
+    opt.step(2, 2e-3, &grads, &mut params, &be).unwrap(); // Keep
+    let packs = linalg::packed_builds();
+    let plans = be.plan_builds();
+    assert!(packs > 0, "warmup never built packed panels");
+    assert!(plans > 0, "plan cache never compiled anything");
+    assert!(linalg::pack_cache_bytes() > pack_bytes_baseline, "no panels retained");
+    assert!(opt.pack_cache_bytes() > 0, "optimizer reports no pack-cache bytes");
+
+    // One more Keep step lets the arena freelists reach their fixed
+    // point before the alloc counter is pinned.
+    opt.step(3, 2e-3, &grads, &mut params, &be).unwrap();
+    let allocs = arena::alloc_events();
+    for t in 4..=8 {
+        opt.step(t, 2e-3, &grads, &mut params, &be).unwrap();
+    }
+    assert_eq!(linalg::packed_builds(), packs, "Keep steps re-packed projection panels");
+    assert_eq!(be.plan_builds(), plans, "steady-state steps re-parsed graph names");
+    assert_eq!(arena::alloc_events(), allocs, "steady-state steps missed the step arena");
+
+    // Dropping the optimizer frees every retained panel (Drop balance).
+    drop(opt);
+    assert_eq!(linalg::pack_cache_bytes(), pack_bytes_baseline, "pack-cache bytes leaked");
+}
+
+/// An Eqn-6/Eqn-7 refresh invalidates the cached panels: the next step
+/// rebuilds them from the new projections, while the interned plans are
+/// reused untouched.
+#[test]
+fn refresh_rebuilds_the_panel_cache() {
+    let _g = lock();
+    let be = NativeBackend::new();
+    let (mut opt, mut params, grads) = lowrank_rig(&be, 2, 2);
+
+    // t = 1 Recalib (initial build), t = 2 PUpdate (Eqn-6), t = 3 Keep.
+    for t in 1..=3 {
+        opt.step(t, 2e-3, &grads, &mut params, &be).unwrap();
+    }
+    let packs = linalg::packed_builds();
+    let plans = be.plan_builds();
+    assert!(packs > 0, "warmup never built panels");
+
+    opt.step(4, 2e-3, &grads, &mut params, &be).unwrap(); // Recalib (Eqn-7)
+    assert!(linalg::packed_builds() > packs, "refresh left stale packed panels in the cache");
+    assert_eq!(be.plan_builds(), plans, "refresh re-parsed already-interned graph names");
+
+    let packs = linalg::packed_builds();
+    opt.step(5, 2e-3, &grads, &mut params, &be).unwrap(); // Keep again
+    assert_eq!(linalg::packed_builds(), packs, "Keep step after refresh re-packed");
+}
