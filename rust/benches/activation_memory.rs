@@ -1,0 +1,100 @@
+//! Activation-memory receipt: measured saved-for-backward bytes vs
+//! recompute time across the gradient-checkpointing policies
+//! (`none | every<k> | all`) on zoo models from three families (lm
+//! trunk at two sizes, ControlNet-style conv).
+//!
+//! Two numbers per row, both from the same `train_step_cfg` path the
+//! trainer runs: the `tensor::activation_meter` thread high-water mark
+//! (bytes actually charged for saved caches/boundaries) and the mean
+//! step time, so the trajectory records the bytes-vs-recompute-time
+//! trade directly. The analytic `MemoryAccountant::activation_bytes`
+//! prediction rides along for drift tracking.
+//!
+//! Rows land in `target/bench-json/activation_memory.jsonl`; each line
+//! is checked against the bench-JSONL schema before it is appended —
+//! the CI smoke step relies on that.
+
+use coap::benchlib::model_inputs;
+use coap::config::CheckpointPolicy;
+use coap::coordinator::memory::MemoryAccountant;
+use coap::model::nativenet::{train_step_cfg, ActivationCfg};
+use coap::model::zoo;
+use coap::tensor::{activation_meter, linalg};
+use coap::util::bench::{append_json, jsonl_line, print_table, validate_jsonl_line, Bench};
+use std::time::Duration;
+
+/// Validate against the trajectory schema, then append.
+fn record(fields: &[(&str, String)]) {
+    let line = jsonl_line(fields);
+    validate_jsonl_line(&line)
+        .unwrap_or_else(|e| panic!("activation_memory bench row violates the JSONL schema: {e}"));
+    append_json("activation_memory", fields);
+}
+
+fn main() {
+    let bench = Bench { warmup: 2, iters: 20, max_total: Duration::from_secs(20) };
+    let isa = linalg::kernel_isa().to_string();
+    let policies: &[(&str, CheckpointPolicy)] = &[
+        ("none", CheckpointPolicy::None),
+        ("every1", CheckpointPolicy::EveryK(1)),
+        ("every2", CheckpointPolicy::EveryK(2)),
+        ("all", CheckpointPolicy::All),
+    ];
+    let mut rows = Vec::new();
+
+    for model in ["lm_micro", "lm_tiny", "ctrl_micro"] {
+        let info = zoo::models()
+            .into_iter()
+            .find(|m| m.name == model)
+            .unwrap_or_else(|| panic!("model '{model}' missing from the zoo"));
+        let inputs = model_inputs(&info, 13);
+        let refs: Vec<&coap::tensor::Tensor> = inputs.iter().collect();
+        let mut none_ms = None;
+
+        for &(label, policy) in policies {
+            let ac = ActivationCfg { checkpoint: policy, lowrank: false };
+
+            // Measured saved-activation peak: one step with the thread
+            // meter reset — the meter charges only saved-for-backward
+            // bytes, so recompute transients (arena scratch) don't show.
+            activation_meter::reset_thread_peak();
+            train_step_cfg(&info, &refs, None, ac)
+                .unwrap_or_else(|e| panic!("{model} step failed under {label}: {e}"));
+            let measured = activation_meter::thread_peak_bytes();
+            let analytic = MemoryAccountant::activation_bytes(&info, !policy.is_none());
+
+            let stat = bench.run(&format!("{model} {label}"), || {
+                std::hint::black_box(train_step_cfg(&info, &refs, None, ac).unwrap());
+            });
+            let step_ms = stat.mean_ms();
+            let base_ms = *none_ms.get_or_insert(step_ms);
+            let overhead = step_ms / base_ms;
+
+            rows.push(vec![
+                model.to_string(),
+                label.to_string(),
+                format!("{:.1}", measured as f64 / 1024.0),
+                format!("{:.1}", analytic as f64 / 1024.0),
+                format!("{step_ms:.3}"),
+                format!("{overhead:.2}x"),
+            ]);
+            record(&[
+                ("case", format!("{model} {label}")),
+                ("model", model.to_string()),
+                ("family", info.family.clone()),
+                ("policy", label.to_string()),
+                ("kernel_isa", isa.clone()),
+                ("saved_bytes_peak", measured.to_string()),
+                ("analytic_bytes", analytic.to_string()),
+                ("step_ms", format!("{step_ms:.5}")),
+                ("recompute_overhead_vs_none", format!("{overhead:.3}")),
+            ]);
+        }
+    }
+
+    print_table(
+        "Activation memory: measured saved bytes vs recompute time per checkpoint policy",
+        &["model", "policy", "saved peak (KiB)", "analytic (KiB)", "step (ms)", "vs none"],
+        &rows,
+    );
+}

@@ -13,12 +13,13 @@
 //! workers) or `COAP_BENCH_PROCS` / `--procs` (`coap worker`
 //! subprocesses).
 
-use crate::config::{ConvFormat, MomentBase, OptKind, TrainConfig};
+use crate::config::{CheckpointPolicy, ConvFormat, MomentBase, OptKind, TrainConfig};
 use crate::coordinator::events::ProgressSink;
 use crate::coordinator::sweep::Sweep;
 use crate::coordinator::TrainReport;
-use crate::runtime::{open_backend, Backend};
-use crate::tensor::Precision;
+use crate::rng::Rng;
+use crate::runtime::{open_backend, Backend, ModelInfo};
+use crate::tensor::{Precision, Tensor};
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
 use std::sync::Arc;
@@ -50,6 +51,46 @@ pub fn bench_procs() -> usize {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(0)
+}
+
+/// Deterministic synthetic inputs (params then data) for one native
+/// `train_step__*` / `eval_step__*` call, following the census's init
+/// specs — the same construction the nativenet unit tests use. Lets
+/// benches and profiling drivers run real steps on any zoo model
+/// without a `ParamStore`/dataset.
+pub fn model_inputs(info: &ModelInfo, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    let mut inputs = Vec::new();
+    for p in &info.params {
+        let t = match p.init.as_str() {
+            "ones" => Tensor::from_f32(&p.shape, vec![1.0; p.numel()]),
+            "zeros" => Tensor::zeros(&p.shape),
+            _ => Tensor::from_f32(&p.shape, rng.normal_vec(p.numel(), p.scale.max(0.05))),
+        };
+        inputs.push(t);
+    }
+    for dspec in &info.data {
+        let n: usize = dspec.shape.iter().product();
+        let t = match dspec.dtype.as_str() {
+            "i32" => {
+                let hi = info
+                    .cfg_usize_or("vocab", 0)
+                    .max(info.cfg_usize_or("classes", 0))
+                    .max(info.cfg_usize_or("answers", 0))
+                    .max(2);
+                Tensor::from_i32(&dspec.shape, (0..n).map(|_| rng.below(hi) as i32).collect())
+            }
+            _ => {
+                if dspec.name == "t" {
+                    Tensor::from_f32(&dspec.shape, (0..n).map(|_| rng.uniform()).collect())
+                } else {
+                    Tensor::from_f32(&dspec.shape, rng.normal_vec(n, 1.0))
+                }
+            }
+        };
+        inputs.push(t);
+    }
+    inputs
 }
 
 /// The procs↔workers half of the sharding policy: subprocesses, when
@@ -98,6 +139,13 @@ pub struct ShardEnv {
     pub rt: Arc<dyn Backend>,
     pub mode: ExecMode,
     pub row_threads: usize,
+    /// Sweep-level activation toggles, stamped onto every row so thread
+    /// workers (shared backend) and `coap worker` subprocesses (backend
+    /// re-opened from the row config) agree — reports stay bit-identical
+    /// across execution modes, and each row's analytic activation
+    /// accounting matches the path the backend actually ran.
+    pub row_checkpoint: CheckpointPolicy,
+    pub row_lowrank: bool,
 }
 
 impl ShardEnv {
@@ -120,6 +168,8 @@ impl ShardEnv {
     pub fn run(&self, mut specs: Vec<RunSpec>) -> Result<Vec<TrainReport>> {
         for s in &mut specs {
             s.cfg.threads = self.row_threads;
+            s.cfg.activation_checkpoint = self.row_checkpoint;
+            s.cfg.activation_lowrank = self.row_lowrank;
         }
         Sweep::new(specs)
             .mode(self.mode)
@@ -142,7 +192,13 @@ pub fn shard_env(args: &Args, mut cfg: TrainConfig) -> Result<ShardEnv> {
     }
     let mode = shard_mode(args.usize_or("workers", 1), args.usize_or("procs", 0));
     cfg.threads = shard_threads(cfg.threads, mode.width(), threads_explicit(args, &cfg));
-    Ok(ShardEnv { rt: open_backend(&cfg)?, mode, row_threads: cfg.threads })
+    Ok(ShardEnv {
+        rt: open_backend(&cfg)?,
+        mode,
+        row_threads: cfg.threads,
+        row_checkpoint: cfg.activation_checkpoint,
+        row_lowrank: cfg.activation_lowrank,
+    })
 }
 
 /// Resolve a [`ShardEnv`] from the bench env vars (`COAP_BENCH_WORKERS`
@@ -152,7 +208,13 @@ pub fn bench_env() -> Result<ShardEnv> {
     let mode = shard_mode(bench_workers(), bench_procs());
     let mut cfg = TrainConfig::default();
     cfg.threads = shard_threads(cfg.threads, mode.width(), false);
-    Ok(ShardEnv { rt: open_backend(&cfg)?, mode, row_threads: cfg.threads })
+    Ok(ShardEnv {
+        rt: open_backend(&cfg)?,
+        mode,
+        row_threads: cfg.threads,
+        row_checkpoint: cfg.activation_checkpoint,
+        row_lowrank: cfg.activation_lowrank,
+    })
 }
 
 fn base_cfg(model: &str, steps: usize, lr: f32) -> TrainConfig {

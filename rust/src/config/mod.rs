@@ -158,6 +158,16 @@ pub struct TrainConfig {
     /// Moment base for low-rank policies (GaLore/Flora under AdamW vs
     /// Adafactor). `coap-adafactor` forces Adafactor regardless.
     pub lowrank_base: MomentBase,
+    /// Gradient-checkpointing policy for the native backend
+    /// (`--activation-checkpoint none|every<k>|all`). Bit-identical to
+    /// the cached path; trades recompute time for saved-activation
+    /// bytes.
+    pub activation_checkpoint: CheckpointPolicy,
+    /// VeLoRA-style rank-1 (per-group mean) compression of the saved
+    /// checkpoint boundaries (`--activation-lowrank`). Explicitly
+    /// approximate: gradients differ from the exact path. Requires a
+    /// checkpointing policy (there are no saved boundaries otherwise).
+    pub activation_lowrank: bool,
 }
 
 /// Which moment machinery a low-rank policy wraps (the paper's AdamW vs
@@ -211,6 +221,66 @@ impl ConvFormat {
     }
 }
 
+/// Gradient-checkpointing policy for the native model paths: which
+/// trunk-block (or conv-layer) activations are *saved* for backward
+/// vs recomputed inside it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CheckpointPolicy {
+    /// Save every intra-block cache (no recompute) — the default.
+    #[default]
+    None,
+    /// Save a boundary activation every k blocks; recompute the rest.
+    EveryK(usize),
+    /// Save only the stack input — one segment covering every block
+    /// (maximum recompute, minimum saved bytes).
+    All,
+}
+
+impl CheckpointPolicy {
+    pub fn parse(s: &str) -> Result<CheckpointPolicy> {
+        Ok(match s {
+            "none" | "off" => CheckpointPolicy::None,
+            "all" => CheckpointPolicy::All,
+            _ => match s.strip_prefix("every") {
+                Some(k) => CheckpointPolicy::EveryK(
+                    k.parse()
+                        .ok()
+                        .filter(|&k: &usize| k >= 1)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("bad checkpoint interval in '{s}' (every<k>, k >= 1)")
+                        })?,
+                ),
+                None => {
+                    anyhow::bail!("unknown checkpoint policy '{s}' (none|every<k>|all)")
+                }
+            },
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CheckpointPolicy::None => "none".into(),
+            CheckpointPolicy::EveryK(k) => format!("every{k}"),
+            CheckpointPolicy::All => "all".into(),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, CheckpointPolicy::None)
+    }
+
+    /// Checkpoint segment length for a stack of `layers` blocks:
+    /// 0 = no checkpointing, otherwise save a boundary every `seg`
+    /// blocks (`All` -> one segment spanning the whole stack).
+    pub fn segment(&self, layers: usize) -> usize {
+        match *self {
+            CheckpointPolicy::None => 0,
+            CheckpointPolicy::EveryK(k) => k.max(1),
+            CheckpointPolicy::All => layers.max(1),
+        }
+    }
+}
+
 impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
@@ -239,6 +309,8 @@ impl Default for TrainConfig {
             flora_interval: 0,
             conv_format: ConvFormat::Tucker2,
             lowrank_base: MomentBase::Adam,
+            activation_checkpoint: CheckpointPolicy::None,
+            activation_lowrank: false,
         }
     }
 }
@@ -302,6 +374,12 @@ impl TrainConfig {
             "flora-interval" | "flora_interval" => self.flora_interval = val.parse()?,
             "conv-format" | "conv_format" => self.conv_format = ConvFormat::parse(val)?,
             "base" | "lowrank-base" => self.lowrank_base = MomentBase::parse(val)?,
+            "activation-checkpoint" | "activation_checkpoint" | "ac" => {
+                self.activation_checkpoint = CheckpointPolicy::parse(val)?
+            }
+            "activation-lowrank" | "activation_lowrank" => {
+                self.activation_lowrank = val.parse()?
+            }
             _ => anyhow::bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -348,6 +426,8 @@ impl TrainConfig {
         put("flora_interval", Json::Num(self.flora_interval as f64));
         put("conv_format", Json::Str(self.conv_format.label().into()));
         put("lowrank_base", Json::Str(self.lowrank_base.label().into()));
+        put("activation_checkpoint", Json::Str(self.activation_checkpoint.label()));
+        put("activation_lowrank", Json::Bool(self.activation_lowrank));
         Json::Obj(m)
     }
 
@@ -402,7 +482,34 @@ impl TrainConfig {
             flora_interval: uint(j, "flora_interval")?,
             conv_format: ConvFormat::parse(&string(j, "conv_format")?)?,
             lowrank_base: MomentBase::parse(&string(j, "lowrank_base")?)?,
+            activation_checkpoint: CheckpointPolicy::parse(&string(
+                j,
+                "activation_checkpoint",
+            )?)?,
+            activation_lowrank: boolean(j, "activation_lowrank")?,
         })
+    }
+
+    /// Reject activation-memory toggle combinations the selected
+    /// backend cannot honor — the toggles must never be silent no-ops.
+    /// Called by `runtime::open_backend` before backend construction.
+    pub fn validate_activation_toggles(&self) -> Result<()> {
+        if self.backend == BackendKind::Xla
+            && (!self.activation_checkpoint.is_none() || self.activation_lowrank)
+        {
+            anyhow::bail!(
+                "--activation-checkpoint / --activation-lowrank are native-backend \
+                 features; the xla replay backend executes pre-lowered graphs and \
+                 cannot honor them"
+            );
+        }
+        if self.activation_lowrank && self.activation_checkpoint.is_none() {
+            anyhow::bail!(
+                "--activation-lowrank compresses checkpointed boundary activations; \
+                 pick --activation-checkpoint every<k>|all to enable it"
+            );
+        }
+        Ok(())
     }
 
     /// Defaults -> (optional) --config file -> CLI flags.
@@ -519,6 +626,61 @@ mod tests {
         bad.insert("state_precision".into(), Json::Str("fp4".into()));
         assert!(TrainConfig::from_json(&Json::Obj(bad)).is_err());
         assert!(TrainConfig::from_json(&Json::Arr(vec![])).is_err());
+    }
+
+    #[test]
+    fn checkpoint_policy_parses_and_labels() {
+        assert_eq!(CheckpointPolicy::parse("none").unwrap(), CheckpointPolicy::None);
+        assert_eq!(CheckpointPolicy::parse("all").unwrap(), CheckpointPolicy::All);
+        assert_eq!(CheckpointPolicy::parse("every2").unwrap(), CheckpointPolicy::EveryK(2));
+        assert!(CheckpointPolicy::parse("every0").is_err());
+        assert!(CheckpointPolicy::parse("everyk").is_err());
+        assert!(CheckpointPolicy::parse("sometimes").is_err());
+        for p in [CheckpointPolicy::None, CheckpointPolicy::EveryK(3), CheckpointPolicy::All] {
+            assert_eq!(CheckpointPolicy::parse(&p.label()).unwrap(), p);
+        }
+        // Segment semantics: None = no checkpointing, EveryK = literal,
+        // All = one segment over the whole stack.
+        assert_eq!(CheckpointPolicy::None.segment(6), 0);
+        assert_eq!(CheckpointPolicy::EveryK(2).segment(6), 2);
+        assert_eq!(CheckpointPolicy::All.segment(6), 6);
+        assert_eq!(CheckpointPolicy::All.segment(0), 1);
+        assert!(CheckpointPolicy::default().is_none());
+    }
+
+    /// The activation toggles are config keys + exact wire fields, and
+    /// combinations the backend can't honor are rejected up front
+    /// instead of becoming silent no-ops.
+    #[test]
+    fn activation_toggles_parse_and_validate() {
+        let args = Args::parse(
+            ["--activation-checkpoint", "every2", "--activation-lowrank", "true"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let cfg = TrainConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.activation_checkpoint, CheckpointPolicy::EveryK(2));
+        assert!(cfg.activation_lowrank);
+        assert!(cfg.validate_activation_toggles().is_ok());
+        let wire = cfg.to_json().to_string();
+        let back = TrainConfig::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.activation_checkpoint, CheckpointPolicy::EveryK(2));
+        assert!(back.activation_lowrank);
+
+        // Lowrank without checkpointing has no saved boundaries to
+        // compress — rejected, not ignored.
+        let mut cfg = TrainConfig::default();
+        cfg.activation_lowrank = true;
+        let err = cfg.validate_activation_toggles().unwrap_err();
+        assert!(format!("{err:#}").contains("activation-lowrank"));
+
+        // The xla replay backend can't honor either toggle.
+        let mut cfg = TrainConfig::default();
+        cfg.backend = BackendKind::Xla;
+        cfg.activation_checkpoint = CheckpointPolicy::All;
+        let err = cfg.validate_activation_toggles().unwrap_err();
+        assert!(format!("{err:#}").contains("xla"));
+        assert!(TrainConfig::default().validate_activation_toggles().is_ok());
     }
 
     #[test]

@@ -22,7 +22,18 @@ pub struct MemoryBreakdown {
     pub params: usize,
     pub grads: usize,
     pub optimizer: usize,
+    /// Analytic saved-for-backward bytes (see
+    /// [`MemoryAccountant::activation_bytes`]).
     pub activations: usize,
+    /// *Measured* saved-for-backward high-water mark
+    /// (`tensor::activation_meter::peak_bytes`, process-wide monotone) —
+    /// what the native model paths actually held between forward and
+    /// backward. Zero until a native train/eval step has run. Reported
+    /// alongside `activations` but not folded into [`Self::total`] /
+    /// [`Self::peak`], which stay analytic compositions (the measured
+    /// peak may cover a different policy than this breakdown's
+    /// toggles).
+    pub activation_peak: usize,
     /// Pre-packed projection panels the optimizer retains across steps
     /// (`Optimizer::pack_cache_bytes`). Steady-state resident — part of
     /// [`MemoryBreakdown::total`]. Distinct from the kernel layer's
@@ -62,10 +73,27 @@ pub struct MemoryToggles {
 pub struct MemoryAccountant;
 
 impl MemoryAccountant {
-    /// Activation bytes for one training step (f32), analytically from
-    /// the model config. Transformer: per block ~ (attn probs + 10
-    /// activation tensors of size B*S*d); AC keeps one boundary tensor
-    /// per block plus one block's working set.
+    /// Analytic saved-for-backward bytes for one training step (f32),
+    /// from the model config. Mirrors exactly what the native backend
+    /// charges to `tensor::activation_meter` (the unit tests pin the
+    /// two against each other on every zoo micro model), so the
+    /// formulas below are the cache layouts of `model::nativenet`, not
+    /// generic estimates:
+    ///
+    /// - transformer trunk, cached: one `BlockCache` per block = 8
+    ///   `(tokens, d)` tensors plus the 4x MLP expansion → 12·B·S·d
+    ///   floats per block. llava pools its multimodal context into one
+    ///   trunk token per example (S = 1).
+    /// - transformer trunk, `ac`: modeled as the `EveryK(1)` policy —
+    ///   one saved boundary (B·S·d floats) per block; recompute
+    ///   transients are arena scratch, not saved bytes, so they don't
+    ///   appear here (or in the meter).
+    /// - cnn, cached: per hidden conv, im2col cols (cin·k² per pixel)
+    ///   plus the post-tanh map (w_i per pixel); cols only for the
+    ///   output conv; plus the control branch's two cols + two maps
+    ///   when present.
+    /// - cnn, `ac` (`EveryK(1)`): one boundary map per hidden-layer
+    ///   input except layer 0, whose input is the data tensor.
     pub fn activation_bytes(info: &ModelInfo, ac: bool) -> usize {
         let f = 4usize;
         match info.family.as_str() {
@@ -73,17 +101,20 @@ impl MemoryAccountant {
                 let b = info.cfg_usize("batch");
                 let d = info.cfg_usize("d");
                 let layers = info.cfg_usize("layers");
-                let heads = info.cfg_usize_or("heads", 8);
-                let s = info.cfg_usize_or("seq", {
-                    // vision transformers: token count from image geometry
-                    let img = info.cfg_usize_or("img", 0);
-                    let patch = info.cfg_usize_or("patch", 1);
-                    if img > 0 { (img / patch) * (img / patch) } else { 128 }
-                });
-                let per_block = b * s * d * 10 + b * heads * s * s;
+                let s = if info.family == "llava" {
+                    1
+                } else {
+                    info.cfg_usize_or("seq", {
+                        // vision transformers: token count from image geometry
+                        let img = info.cfg_usize_or("img", 0);
+                        let patch = info.cfg_usize_or("patch", 1);
+                        if img > 0 { (img / patch) * (img / patch) } else { 128 }
+                    })
+                };
+                let per_block = 12 * b * s * d;
                 let boundary = b * s * d;
                 if ac {
-                    (layers * boundary + per_block) * f
+                    layers * boundary * f
                 } else {
                     layers * per_block * f
                 }
@@ -91,15 +122,35 @@ impl MemoryAccountant {
             "cnn" => {
                 let b = info.cfg_usize("batch");
                 let img = info.cfg_usize("img");
-                // Sum of feature-map sizes over conv layers (~widths).
-                let widths: usize = info
+                let chans = info.cfg_usize("chans");
+                let k = info.cfg_usize_or("kernel", 3);
+                let control =
+                    info.cfg.get("control").and_then(|v| v.as_bool()).unwrap_or(false);
+                let widths: Vec<usize> = info
                     .cfg
                     .get("widths")
                     .and_then(|w| w.as_arr())
-                    .map(|a| a.iter().filter_map(|x| x.as_usize()).sum())
-                    .unwrap_or(64);
-                let maps = b * img * img * widths * 2;
-                if ac { maps / 4 * f } else { maps * f }
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default();
+                let nw = widths.len();
+                if nw == 0 {
+                    return 0;
+                }
+                let px = b * img * img;
+                if ac {
+                    return widths[..nw - 1].iter().sum::<usize>() * px * f;
+                }
+                let mut floats = 0usize;
+                let mut cin = chans;
+                for &w in &widths {
+                    floats += px * (cin * k * k + w);
+                    cin = w;
+                }
+                floats += px * cin * k * k; // output-conv cols (no act saved)
+                if control {
+                    floats += px * (k * k + 2 * widths[0] + widths[0] * k * k);
+                }
+                floats * f
             }
             _ => 0,
         }
@@ -133,6 +184,7 @@ impl MemoryAccountant {
             grads,
             optimizer: optimizer_bytes,
             activations: Self::activation_bytes(info, toggles.activation_checkpointing),
+            activation_peak: crate::tensor::activation_meter::peak_bytes(),
             pack_cache,
             opt_transient: optimizer_transient
                 + crate::tensor::linalg::peak_scratch_bytes(),
@@ -279,6 +331,48 @@ mod tests {
         let rt_bd = MemoryAccountant::breakdown(&info, pb, ob, roundtrip, 0, toggles);
         assert_eq!(rt_bd.total(), fu_bd.total(), "steady state is unchanged");
         assert!(fu_bd.peak() < rt_bd.peak(), "fused peak must drop");
+    }
+
+    /// The analytic formulas above are pinned to the *measured* meter
+    /// on every zoo micro model, cached and checkpointed. Tolerance is
+    /// 10%: the formulas model the dominant saved buffers exactly, and
+    /// any layout drift in `model::nativenet`'s caches shows up here
+    /// long before it distorts a reported breakdown.
+    #[test]
+    fn analytic_activation_bytes_match_measured_meter_on_micro_models() {
+        use crate::benchlib;
+        use crate::config::CheckpointPolicy;
+        use crate::model::nativenet::{self, ActivationCfg};
+        use crate::model::zoo;
+        use crate::tensor::activation_meter as meter;
+        let micros = zoo::micro_models();
+        assert!(micros.len() >= 6, "zoo lost its micro models?");
+        for info in micros {
+            let inputs = benchlib::model_inputs(&info, 13);
+            let refs: Vec<&crate::tensor::Tensor> = inputs.iter().collect();
+            for ac in [false, true] {
+                let cfg = ActivationCfg {
+                    checkpoint: if ac {
+                        CheckpointPolicy::EveryK(1)
+                    } else {
+                        CheckpointPolicy::None
+                    },
+                    lowrank: false,
+                };
+                meter::reset_thread_peak();
+                nativenet::train_step_cfg(&info, &refs, None, cfg).unwrap();
+                let measured = meter::thread_peak_bytes();
+                let analytic = MemoryAccountant::activation_bytes(&info, ac);
+                let err = (measured as f64 - analytic as f64).abs() / measured.max(1) as f64;
+                assert!(
+                    err <= 0.10,
+                    "{} (ac={ac}): analytic {analytic} vs measured {measured} \
+                     ({:.1}% off)",
+                    info.name,
+                    err * 100.0
+                );
+            }
+        }
     }
 
     /// The panel cache is steady-state resident memory: it raises

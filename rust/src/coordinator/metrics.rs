@@ -20,6 +20,10 @@ pub struct Metrics {
     /// Running CEU: sum over steps of sum_l ||W_t - W_{t-1}||_1.
     pub ceu_total: f64,
     pub ceu_curve: Vec<(usize, f64)>,
+    /// Measured per-step activation peak, maxed over the run
+    /// (`tensor::activation_meter::thread_peak_bytes` sampled after each
+    /// train step).
+    pub activation_peak_bytes: usize,
     ema_loss: Option<f64>,
 }
 
@@ -32,6 +36,11 @@ impl Metrics {
 
     pub fn ema(&self) -> f64 {
         self.ema_loss.unwrap_or(f64::NAN)
+    }
+
+    /// Fold one step's measured activation peak into the run maximum.
+    pub fn record_activation_peak(&mut self, bytes: usize) {
+        self.activation_peak_bytes = self.activation_peak_bytes.max(bytes);
     }
 
     pub fn record_ceu(&mut self, step: usize, ceu: f64) {

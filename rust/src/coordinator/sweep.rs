@@ -318,6 +318,8 @@ pub fn report_jsonl_fields(rep: &TrainReport) -> Vec<(&'static str, String)> {
         ("param_bytes", rep.param_bytes.to_string()),
         ("optimizer_bytes", rep.optimizer_bytes.to_string()),
         ("opt_transient_bytes", rep.opt_transient_bytes.to_string()),
+        ("activation_peak_bytes", rep.activation_peak_bytes.to_string()),
+        ("activation_analytic_bytes", rep.activation_analytic_bytes.to_string()),
         ("wall_s", num(rep.wall.as_secs_f64())),
         ("fwdbwd_s", num(rep.fwdbwd_time.as_secs_f64())),
         ("opt_step_s", num(rep.opt_step_time.as_secs_f64())),
@@ -363,6 +365,8 @@ mod tests {
             optimizer_bytes: opt_bytes,
             opt_transient_bytes: 0,
             param_bytes: 4096,
+            activation_peak_bytes: 2048,
+            activation_analytic_bytes: 2048,
             ceu_total: 2.0,
             train_losses: vec![(1, 2.0), (4, 1.25)],
             ceu_curve: vec![],

@@ -21,13 +21,14 @@
 
 use super::checkpoint::Checkpoint;
 use super::events::{EventSink, StderrSink, TrainEvent};
+use super::memory::MemoryAccountant;
 use super::metrics::{EvalPoint, Metrics};
 use crate::config::TrainConfig;
 use crate::data::{self, vision, DataSource};
 use crate::model::ParamStore;
 use crate::optim::{self, Optimizer};
 use crate::runtime::{open_backend, Backend, ModelInfo};
-use crate::tensor::Tensor;
+use crate::tensor::{activation_meter, Tensor};
 use anyhow::{Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -184,6 +185,15 @@ pub struct TrainReport {
     /// f32 copy per compressed slot on round-trip backends).
     pub opt_transient_bytes: usize,
     pub param_bytes: usize,
+    /// *Measured* saved-for-backward activation peak, maxed over the
+    /// run's train steps (`tensor::activation_meter`). Reflects the
+    /// configured checkpoint policy — recompute transients are arena
+    /// scratch and never counted here.
+    pub activation_peak_bytes: usize,
+    /// The analytic counterpart from
+    /// `MemoryAccountant::activation_bytes` for this run's model and
+    /// checkpoint toggle, reported side by side with the measured peak.
+    pub activation_analytic_bytes: usize,
     pub ceu_total: f64,
     pub train_losses: Vec<(usize, f64)>,
     pub ceu_curve: Vec<(usize, f64)>,
@@ -316,10 +326,15 @@ impl Trainer {
             let t0 = Instant::now();
             let mut inputs: Vec<&Tensor> = self.store.params.iter().collect();
             inputs.extend(batch.iter());
+            // Per-step measured activation window: reset before fwd/bwd,
+            // sample after (the native backend charges/discharges
+            // saved-for-backward bytes on this thread).
+            activation_meter::reset_thread_peak();
             let out = self
                 .rt
                 .exec(&self.model.train_step, &inputs)
                 .with_context(|| format!("train step {t}"))?;
+            self.metrics.record_activation_peak(activation_meter::thread_peak_bytes());
             fwdbwd += t0.elapsed();
 
             let loss = out[0].scalar() as f64;
@@ -386,6 +401,11 @@ impl Trainer {
             optimizer_bytes: self.opt.state_bytes(),
             opt_transient_bytes: self.opt.state_transient_bytes(self.rt.fuses_states()),
             param_bytes: self.store.param_bytes(),
+            activation_peak_bytes: self.metrics.activation_peak_bytes,
+            activation_analytic_bytes: MemoryAccountant::activation_bytes(
+                &self.model,
+                !self.cfg.activation_checkpoint.is_none(),
+            ),
             ceu_total: self.metrics.ceu_total,
             train_losses: self.metrics.train_losses.clone(),
             ceu_curve: self.metrics.ceu_curve.clone(),

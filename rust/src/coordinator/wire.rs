@@ -257,6 +257,8 @@ pub fn report_to_json(r: &TrainReport) -> Json {
         ("optimizer_bytes", Json::Num(r.optimizer_bytes as f64)),
         ("opt_transient_bytes", Json::Num(r.opt_transient_bytes as f64)),
         ("param_bytes", Json::Num(r.param_bytes as f64)),
+        ("activation_peak_bytes", Json::Num(r.activation_peak_bytes as f64)),
+        ("activation_analytic_bytes", Json::Num(r.activation_analytic_bytes as f64)),
         ("ceu_total", num_wire(r.ceu_total)),
         ("train_losses", curve_to_json(&r.train_losses)),
         ("ceu_curve", curve_to_json(&r.ceu_curve)),
@@ -281,6 +283,8 @@ pub fn report_from_json(j: &Json) -> Result<TrainReport> {
         optimizer_bytes: uint(j, "optimizer_bytes")?,
         opt_transient_bytes: uint(j, "opt_transient_bytes")?,
         param_bytes: uint(j, "param_bytes")?,
+        activation_peak_bytes: uint(j, "activation_peak_bytes")?,
+        activation_analytic_bytes: uint(j, "activation_analytic_bytes")?,
         ceu_total: float(j, "ceu_total")?,
         train_losses: curve_from_json(field(j, "train_losses")?)?,
         ceu_curve: curve_from_json(field(j, "ceu_curve")?)?,
@@ -568,6 +572,8 @@ mod tests {
             optimizer_bytes: 4096,
             opt_transient_bytes: 0,
             param_bytes: 1 << 20,
+            activation_peak_bytes: 3 << 16,
+            activation_analytic_bytes: 1 << 17,
             ceu_total: f64::INFINITY,
             train_losses: vec![(1, 2.0), (4, f64::NAN)],
             ceu_curve: vec![],

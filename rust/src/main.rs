@@ -93,6 +93,11 @@ fn train(args: &Args) -> Result<()> {
     println!("param memory        {}", memory::fmt_mb(report.param_bytes));
     println!("optimizer memory    {}", memory::fmt_mb(report.optimizer_bytes));
     println!(
+        "activation memory   {} measured peak (analytic {})",
+        memory::fmt_mb(report.activation_peak_bytes),
+        memory::fmt_mb(report.activation_analytic_bytes)
+    );
+    println!(
         "wall {:.1}s  (fwd/bwd {:.1}s, opt steps {:.1}s, proj updates {:.1}s)",
         report.wall.as_secs_f64(),
         report.fwdbwd_time.as_secs_f64(),
@@ -128,7 +133,16 @@ fn sweep(args: &Args) -> Result<()> {
     let name = name.expect("checked above");
     // Rows are defined by the registry; train-level overrides would be
     // silently ignored, so say so instead of recording wrong numbers.
-    const SWEEP_KEYS: &[&str] = &["workers", "procs", "steps", "json", "threads", "backend"];
+    const SWEEP_KEYS: &[&str] = &[
+        "workers",
+        "procs",
+        "steps",
+        "json",
+        "threads",
+        "backend",
+        "activation-checkpoint",
+        "activation-lowrank",
+    ];
     for key in args.seen_keys() {
         if SWEEP_KEYS.contains(&key.as_str()) {
             continue;
@@ -260,6 +274,16 @@ train flags (also JSON-settable via --config file.json):
                           (bit-identical results for any N)
   --steps N --lr F --wd F --seed S
   --track-ceu true        record the CEU metric (Fig 3)
+  --activation-checkpoint P
+                          none (default) | every<k> | all — gradient
+                          checkpointing on the native backend: keep only
+                          segment-boundary activations, recompute the rest
+                          in backward (bit-identical to the cached path)
+  --activation-lowrank true
+                          rank-1 (per-group-mean) compression of the saved
+                          boundaries; explicit approximation — loss stays
+                          exact, gradients become approximate; requires an
+                          --activation-checkpoint policy
   --save-checkpoint PATH  write params after training
   --load-checkpoint PATH  resume params before training (moments restart)
 

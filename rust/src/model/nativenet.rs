@@ -15,8 +15,9 @@
 //! Every backward formula here is validated against finite differences
 //! in `tests` (and was cross-checked in numpy before transcription).
 
+use crate::config::CheckpointPolicy;
 use crate::runtime::ModelInfo;
-use crate::tensor::{arena, linalg, Tensor};
+use crate::tensor::{activation_meter as meter, arena, linalg, Tensor};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 
@@ -30,6 +31,79 @@ use anyhow::{bail, Result};
 #[inline]
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
+}
+
+/// Activation-memory policy for a step: checkpointing (bit-exact
+/// recompute in backward) and the explicitly-approximate VeLoRA-style
+/// rank-1 compression of the saved checkpoint boundaries. The default
+/// (`None` / exact) is the historical cache-everything path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ActivationCfg {
+    pub checkpoint: CheckpointPolicy,
+    pub lowrank: bool,
+}
+
+/// Sub-token group width of the rank-1 boundary compressor: each run
+/// of `LOWRANK_GROUP` consecutive floats is stored as its mean
+/// (projection onto the normalized ones vector, VeLoRA's fixed
+/// projector) — a 4x reduction of saved boundary bytes.
+pub const LOWRANK_GROUP: usize = 4;
+
+/// A saved-for-backward checkpoint boundary: exact copy, or the rank-1
+/// per-group means. Charged to the activation meter while alive.
+enum SavedRepr {
+    Exact(Vec<f32>),
+    Rank1 { means: Vec<f32>, len: usize },
+}
+
+struct Saved {
+    repr: SavedRepr,
+    charged: usize,
+}
+
+impl Saved {
+    fn store(x: &[f32], lowrank: bool) -> Saved {
+        let (repr, charged) = if lowrank {
+            let ngroups = x.len().div_ceil(LOWRANK_GROUP);
+            let mut means = vec![0.0f32; ngroups];
+            for (g, m) in means.iter_mut().enumerate() {
+                let lo = g * LOWRANK_GROUP;
+                let hi = (lo + LOWRANK_GROUP).min(x.len());
+                *m = x[lo..hi].iter().sum::<f32>() / (hi - lo) as f32;
+            }
+            let bytes = means.len() * 4;
+            (SavedRepr::Rank1 { means, len: x.len() }, bytes)
+        } else {
+            (SavedRepr::Exact(x.to_vec()), x.len() * 4)
+        };
+        meter::charge(charged);
+        Saved { repr, charged }
+    }
+
+    /// Reconstruct into an arena-backed buffer (exact bytes, or the
+    /// group mean broadcast back over each group).
+    fn restore(&self) -> Vec<f32> {
+        match &self.repr {
+            SavedRepr::Exact(x) => {
+                let mut v = arena::take(x.len());
+                v.copy_from_slice(x);
+                v
+            }
+            SavedRepr::Rank1 { means, len } => {
+                let mut v = arena::take(*len);
+                for (i, vi) in v.iter_mut().enumerate() {
+                    *vi = means[i / LOWRANK_GROUP];
+                }
+                v
+            }
+        }
+    }
+}
+
+impl Drop for Saved {
+    fn drop(&mut self) {
+        meter::discharge(self.charged);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -46,6 +120,53 @@ struct BlockCache {
     x2: Vec<f32>,
     h2: Vec<f32>,
     u: Vec<f32>,
+    /// Bytes charged to the activation meter (0 for transient caches
+    /// recomputed inside a checkpointed backward).
+    charged: usize,
+}
+
+impl BlockCache {
+    fn bytes(&self) -> usize {
+        (self.x.len()
+            + self.h1.len()
+            + self.tq.len()
+            + self.sk.len()
+            + self.v.len()
+            + self.a.len()
+            + self.x2.len()
+            + self.h2.len()
+            + self.u.len())
+            * 4
+    }
+
+    /// Return every buffer to the step arena (transient caches only —
+    /// keeps checkpointed recompute allocation-flat in steady state).
+    fn recycle(mut self) {
+        arena::give(std::mem::take(&mut self.x));
+        arena::give(std::mem::take(&mut self.h1));
+        arena::give(std::mem::take(&mut self.tq));
+        arena::give(std::mem::take(&mut self.sk));
+        arena::give(std::mem::take(&mut self.v));
+        arena::give(std::mem::take(&mut self.a));
+        arena::give(std::mem::take(&mut self.x2));
+        arena::give(std::mem::take(&mut self.h2));
+        arena::give(std::mem::take(&mut self.u));
+    }
+}
+
+impl Drop for BlockCache {
+    fn drop(&mut self) {
+        meter::discharge(self.charged);
+    }
+}
+
+/// What `Trunk::forward` saved for backward: every per-block cache
+/// (policy `None`), or only segment-boundary activations plus the
+/// segment length (checkpointing — intra-segment caches are recomputed
+/// inside `backward`).
+enum TrunkSaved {
+    Full(Vec<BlockCache>),
+    Boundaries { xs: Vec<Saved>, seg: usize },
 }
 
 struct Trunk<'a> {
@@ -55,6 +176,7 @@ struct Trunk<'a> {
     layers: usize,
     d: usize,
     pool: Option<&'a ThreadPool>,
+    act: ActivationCfg,
 }
 
 impl<'a> Trunk<'a> {
@@ -62,118 +184,234 @@ impl<'a> Trunk<'a> {
         self.params[self.base + blk * 8 + off].f32s()
     }
 
-    /// x (n, d) -> (x_out, caches).
-    fn forward(&self, mut x: Vec<f32>, n: usize) -> (Vec<f32>, Vec<BlockCache>) {
+    /// One block forward: x -> (x3, cache). Both the retained and the
+    /// `transient` (checkpointed-recompute) variants run the same
+    /// kernels in the same order on identically-zeroed buffers
+    /// (`arena::take(len)` is bit-identical to `vec![0.0; len]`), so
+    /// cached and recomputed values are bit-equal. Transient caches
+    /// draw from the step arena and are not charged to the meter.
+    fn block_fwd(
+        &self,
+        blk: usize,
+        x: Vec<f32>,
+        n: usize,
+        transient: bool,
+    ) -> (Vec<f32>, BlockCache) {
         let d = self.d;
-        let mut caches = Vec::with_capacity(self.layers);
-        for blk in 0..self.layers {
-            let (ln1, wq, wk, wv) = (self.p(blk, 0), self.p(blk, 1), self.p(blk, 2), self.p(blk, 3));
-            let (wo, ln2, w1, w2) = (self.p(blk, 4), self.p(blk, 5), self.p(blk, 6), self.p(blk, 7));
-            let mut h1 = vec![0.0f32; n * d];
-            for r in 0..n {
-                for j in 0..d {
-                    h1[r * d + j] = x[r * d + j] * ln1[j];
-                }
+        let alloc = |len: usize| if transient { arena::take(len) } else { vec![0.0f32; len] };
+        let free = |v: Vec<f32>| {
+            if transient {
+                arena::give(v);
             }
-            let q = linalg::gemm_nn(self.pool, &h1, wq, n, d, d);
-            let k = linalg::gemm_nn(self.pool, &h1, wk, n, d, d);
-            let v = linalg::gemm_nn(self.pool, &h1, wv, n, d, d);
-            let tq: Vec<f32> = q.iter().map(|&z| z.tanh()).collect();
-            let sk: Vec<f32> = k.iter().map(|&z| sigmoid(z)).collect();
-            let a: Vec<f32> = (0..n * d).map(|i| tq[i] * sk[i] * v[i]).collect();
-            let o = linalg::gemm_nn(self.pool, &a, wo, n, d, d);
-            let x2: Vec<f32> = (0..n * d).map(|i| x[i] + o[i]).collect();
-            let mut h2 = vec![0.0f32; n * d];
-            for r in 0..n {
-                for j in 0..d {
-                    h2[r * d + j] = x2[r * d + j] * ln2[j];
-                }
+        };
+        let (ln1, wq, wk, wv) = (self.p(blk, 0), self.p(blk, 1), self.p(blk, 2), self.p(blk, 3));
+        let (wo, ln2, w1, w2) = (self.p(blk, 4), self.p(blk, 5), self.p(blk, 6), self.p(blk, 7));
+        let mut h1 = alloc(n * d);
+        for r in 0..n {
+            for j in 0..d {
+                h1[r * d + j] = x[r * d + j] * ln1[j];
             }
-            let z = linalg::gemm_nn(self.pool, &h2, w1, n, d, 4 * d);
-            let u: Vec<f32> = z.iter().map(|&y| y.tanh()).collect();
-            let f = linalg::gemm_nn(self.pool, &u, w2, n, 4 * d, d);
-            let x3: Vec<f32> = (0..n * d).map(|i| x2[i] + f[i]).collect();
-            caches.push(BlockCache { x, h1, tq, sk, v, a, x2, h2, u });
-            x = x3;
         }
-        (x, caches)
+        let mut q = alloc(n * d);
+        linalg::gemm_nn_into(self.pool, &mut q, &h1, wq, n, d, d);
+        let mut k = alloc(n * d);
+        linalg::gemm_nn_into(self.pool, &mut k, &h1, wk, n, d, d);
+        let mut v = alloc(n * d);
+        linalg::gemm_nn_into(self.pool, &mut v, &h1, wv, n, d, d);
+        let mut tq = alloc(n * d);
+        let mut sk = alloc(n * d);
+        let mut a = alloc(n * d);
+        for i in 0..n * d {
+            tq[i] = q[i].tanh();
+            sk[i] = sigmoid(k[i]);
+            a[i] = tq[i] * sk[i] * v[i];
+        }
+        free(q);
+        free(k);
+        let mut o = alloc(n * d);
+        linalg::gemm_nn_into(self.pool, &mut o, &a, wo, n, d, d);
+        let mut x2 = alloc(n * d);
+        for i in 0..n * d {
+            x2[i] = x[i] + o[i];
+        }
+        free(o);
+        let mut h2 = alloc(n * d);
+        for r in 0..n {
+            for j in 0..d {
+                h2[r * d + j] = x2[r * d + j] * ln2[j];
+            }
+        }
+        let mut z = alloc(n * 4 * d);
+        linalg::gemm_nn_into(self.pool, &mut z, &h2, w1, n, d, 4 * d);
+        let mut u = alloc(n * 4 * d);
+        for i in 0..n * 4 * d {
+            u[i] = z[i].tanh();
+        }
+        free(z);
+        let mut f = alloc(n * d);
+        linalg::gemm_nn_into(self.pool, &mut f, &u, w2, n, 4 * d, d);
+        let mut x3 = alloc(n * d);
+        for i in 0..n * d {
+            x3[i] = x2[i] + f[i];
+        }
+        free(f);
+        let mut cache = BlockCache { x, h1, tq, sk, v, a, x2, h2, u, charged: 0 };
+        if !transient {
+            cache.charged = cache.bytes();
+            meter::charge(cache.charged);
+        }
+        (x3, cache)
     }
 
-    /// dx3 (n, d) -> dx at the trunk input; writes per-block param grads
-    /// (census-shaped flat buffers) into `grads`.
+    /// One block backward: dx3 -> dx, writing this block's param grads
+    /// (census-shaped flat buffers) into `grads`. Shared verbatim by
+    /// the cached and the checkpointed paths — same kernels, same
+    /// accumulation order.
+    fn block_bwd(
+        &self,
+        blk: usize,
+        dx3: Vec<f32>,
+        n: usize,
+        c: &BlockCache,
+        grads: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        let d = self.d;
+        let (ln1, wq, wk, wv) = (self.p(blk, 0), self.p(blk, 1), self.p(blk, 2), self.p(blk, 3));
+        let (wo, ln2, w1, w2) = (self.p(blk, 4), self.p(blk, 5), self.p(blk, 6), self.p(blk, 7));
+        let gbase = self.base + blk * 8;
+
+        // MLP branch: x3 = x2 + tanh(h2 W1) W2
+        linalg::gemm_tn_into(self.pool, &mut grads[gbase + 7], &c.u, &dx3, n, 4 * d, d);
+        let du = linalg::gemm_nt(self.pool, &dx3, w2, n, d, 4 * d);
+        let dz: Vec<f32> = (0..n * 4 * d).map(|i| du[i] * (1.0 - c.u[i] * c.u[i])).collect();
+        linalg::gemm_tn_into(self.pool, &mut grads[gbase + 6], &c.h2, &dz, n, d, 4 * d);
+        let dh2 = linalg::gemm_nt(self.pool, &dz, w1, n, 4 * d, d);
+        let mut dln2 = vec![0.0f32; d];
+        let mut dx2 = dx3.clone();
+        for r in 0..n {
+            for j in 0..d {
+                let idx = r * d + j;
+                dln2[j] += dh2[idx] * c.x2[idx];
+                dx2[idx] += dh2[idx] * ln2[j];
+            }
+        }
+
+        // Gated-mix branch: x2 = x + (tq ⊙ sk ⊙ v) Wo
+        linalg::gemm_tn_into(self.pool, &mut grads[gbase + 4], &c.a, &dx2, n, d, d);
+        let da = linalg::gemm_nt(self.pool, &dx2, wo, n, d, d);
+        // Gate transients never leave this block — recycled through
+        // the step arena so steady-state backward stops allocating.
+        let mut dq = arena::take(n * d);
+        let mut dk = arena::take(n * d);
+        let mut dv = arena::take(n * d);
+        for i in 0..n * d {
+            let (tq, sk, v) = (c.tq[i], c.sk[i], c.v[i]);
+            dq[i] = da[i] * sk * v * (1.0 - tq * tq);
+            dk[i] = da[i] * tq * v * sk * (1.0 - sk);
+            dv[i] = da[i] * tq * sk;
+        }
+        linalg::gemm_tn_into(self.pool, &mut grads[gbase + 1], &c.h1, &dq, n, d, d);
+        linalg::gemm_tn_into(self.pool, &mut grads[gbase + 2], &c.h1, &dk, n, d, d);
+        linalg::gemm_tn_into(self.pool, &mut grads[gbase + 3], &c.h1, &dv, n, d, d);
+        let mut dh1 = linalg::gemm_nt(self.pool, &dq, wq, n, d, d);
+        let dh1k = linalg::gemm_nt(self.pool, &dk, wk, n, d, d);
+        let dh1v = linalg::gemm_nt(self.pool, &dv, wv, n, d, d);
+        arena::give(dq);
+        arena::give(dk);
+        arena::give(dv);
+        for i in 0..n * d {
+            dh1[i] += dh1k[i] + dh1v[i];
+        }
+        let mut dln1 = vec![0.0f32; d];
+        let mut dx = dx2;
+        for r in 0..n {
+            for j in 0..d {
+                let idx = r * d + j;
+                dln1[j] += dh1[idx] * c.x[idx];
+                dx[idx] += dh1[idx] * ln1[j];
+            }
+        }
+
+        // Matrix grads were written in place by the `*_into` GEMMs;
+        // only the layer-norm vectors remain.
+        grads[gbase] = dln1;
+        grads[gbase + 5] = dln2;
+        dx
+    }
+
+    /// x (n, d) -> (x_out, saved-for-backward). Under a checkpointing
+    /// policy only segment-boundary activations are saved (optionally
+    /// rank-1 compressed); intra-segment caches are recycled through
+    /// the arena immediately.
+    fn forward(&self, mut x: Vec<f32>, n: usize) -> (Vec<f32>, TrunkSaved) {
+        let seg = self.act.checkpoint.segment(self.layers);
+        if seg == 0 {
+            let mut caches = Vec::with_capacity(self.layers);
+            for blk in 0..self.layers {
+                let (x3, c) = self.block_fwd(blk, x, n, false);
+                caches.push(c);
+                x = x3;
+            }
+            (x, TrunkSaved::Full(caches))
+        } else {
+            let mut xs = Vec::with_capacity(self.layers.div_ceil(seg));
+            for blk in 0..self.layers {
+                if blk % seg == 0 {
+                    xs.push(Saved::store(&x, self.act.lowrank));
+                }
+                let (x3, c) = self.block_fwd(blk, x, n, true);
+                c.recycle();
+                x = x3;
+            }
+            (x, TrunkSaved::Boundaries { xs, seg })
+        }
+    }
+
+    /// dx3 (n, d) -> dx at the trunk input; writes per-block param
+    /// grads into `grads`. Checkpointed segments recompute their
+    /// `BlockCache`s from the saved boundary (arena-backed, uncharged)
+    /// and then run the identical per-block backward.
     fn backward(
         &self,
         mut dx3: Vec<f32>,
         n: usize,
-        caches: &[BlockCache],
+        saved: TrunkSaved,
         grads: &mut [Vec<f32>],
     ) -> Vec<f32> {
-        let d = self.d;
-        for blk in (0..self.layers).rev() {
-            let c = &caches[blk];
-            let (ln1, wq, wk, wv) = (self.p(blk, 0), self.p(blk, 1), self.p(blk, 2), self.p(blk, 3));
-            let (wo, ln2, w1, w2) = (self.p(blk, 4), self.p(blk, 5), self.p(blk, 6), self.p(blk, 7));
-            let gbase = self.base + blk * 8;
-
-            // MLP branch: x3 = x2 + tanh(h2 W1) W2
-            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 7], &c.u, &dx3, n, 4 * d, d);
-            let du = linalg::gemm_nt(self.pool, &dx3, w2, n, d, 4 * d);
-            let dz: Vec<f32> = (0..n * 4 * d).map(|i| du[i] * (1.0 - c.u[i] * c.u[i])).collect();
-            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 6], &c.h2, &dz, n, d, 4 * d);
-            let dh2 = linalg::gemm_nt(self.pool, &dz, w1, n, 4 * d, d);
-            let mut dln2 = vec![0.0f32; d];
-            let mut dx2 = dx3.clone();
-            for r in 0..n {
-                for j in 0..d {
-                    let idx = r * d + j;
-                    dln2[j] += dh2[idx] * c.x2[idx];
-                    dx2[idx] += dh2[idx] * ln2[j];
+        match saved {
+            TrunkSaved::Full(mut caches) => {
+                for blk in (0..self.layers).rev() {
+                    let c = caches.pop().expect("one cache per block");
+                    dx3 = self.block_bwd(blk, dx3, n, &c, grads);
+                    // Dropping here (not at scope end) lets the meter
+                    // show saved bytes shrinking through backward.
+                    drop(c);
                 }
+                dx3
             }
-
-            // Gated-mix branch: x2 = x + (tq ⊙ sk ⊙ v) Wo
-            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 4], &c.a, &dx2, n, d, d);
-            let da = linalg::gemm_nt(self.pool, &dx2, wo, n, d, d);
-            // Gate transients never leave this block — recycled through
-            // the step arena so steady-state backward stops allocating.
-            let mut dq = arena::take(n * d);
-            let mut dk = arena::take(n * d);
-            let mut dv = arena::take(n * d);
-            for i in 0..n * d {
-                let (tq, sk, v) = (c.tq[i], c.sk[i], c.v[i]);
-                dq[i] = da[i] * sk * v * (1.0 - tq * tq);
-                dk[i] = da[i] * tq * v * sk * (1.0 - sk);
-                dv[i] = da[i] * tq * sk;
-            }
-            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 1], &c.h1, &dq, n, d, d);
-            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 2], &c.h1, &dk, n, d, d);
-            linalg::gemm_tn_into(self.pool, &mut grads[gbase + 3], &c.h1, &dv, n, d, d);
-            let mut dh1 = linalg::gemm_nt(self.pool, &dq, wq, n, d, d);
-            let dh1k = linalg::gemm_nt(self.pool, &dk, wk, n, d, d);
-            let dh1v = linalg::gemm_nt(self.pool, &dv, wv, n, d, d);
-            arena::give(dq);
-            arena::give(dk);
-            arena::give(dv);
-            for i in 0..n * d {
-                dh1[i] += dh1k[i] + dh1v[i];
-            }
-            let mut dln1 = vec![0.0f32; d];
-            let mut dx = dx2;
-            for r in 0..n {
-                for j in 0..d {
-                    let idx = r * d + j;
-                    dln1[j] += dh1[idx] * c.x[idx];
-                    dx[idx] += dh1[idx] * ln1[j];
+            TrunkSaved::Boundaries { mut xs, seg } => {
+                for si in (0..xs.len()).rev() {
+                    let lo = si * seg;
+                    let hi = (lo + seg).min(self.layers);
+                    let boundary = xs.pop().expect("one boundary per segment");
+                    let mut x = boundary.restore();
+                    drop(boundary); // saved bytes released once restored
+                    let mut caches = Vec::with_capacity(hi - lo);
+                    for blk in lo..hi {
+                        let (x3, c) = self.block_fwd(blk, x, n, true);
+                        caches.push(c);
+                        x = x3;
+                    }
+                    arena::give(x); // segment output: next segment already done
+                    for blk in (lo..hi).rev() {
+                        let c = caches.pop().expect("one recomputed cache per block");
+                        dx3 = self.block_bwd(blk, dx3, n, &c, grads);
+                        c.recycle();
+                    }
                 }
+                dx3
             }
-
-            // Matrix grads were written in place by the `*_into` GEMMs;
-            // only the layer-norm vectors remain.
-            grads[gbase] = dln1;
-            grads[gbase + 5] = dln2;
-            dx3 = dx;
         }
-        dx3
     }
 }
 
@@ -477,7 +715,13 @@ struct LmRun {
     grads: Option<Vec<Vec<f32>>>,
 }
 
-fn lm_run(info: &ModelInfo, s: &Split, train: bool, pool: Option<&ThreadPool>) -> LmRun {
+fn lm_run(
+    info: &ModelInfo,
+    s: &Split,
+    train: bool,
+    pool: Option<&ThreadPool>,
+    ac: ActivationCfg,
+) -> LmRun {
     let d = info.cfg_usize("d");
     let layers = info.cfg_usize("layers");
     let vocab = info.cfg_usize("vocab");
@@ -485,7 +729,7 @@ fn lm_run(info: &ModelInfo, s: &Split, train: bool, pool: Option<&ThreadPool>) -
     let targets = s.data[1].i32s();
     let n = tokens.len();
     let embed = s.params[0].f32s();
-    let trunk = Trunk { params: s.params, base: 1, layers, d, pool };
+    let trunk = Trunk { params: s.params, base: 1, layers, d, pool, act: ac };
     let lnf_i = 1 + layers * 8;
 
     let mut x = vec![0.0f32; n * d];
@@ -493,7 +737,7 @@ fn lm_run(info: &ModelInfo, s: &Split, train: bool, pool: Option<&ThreadPool>) -
         let ti = (tok.max(0) as usize).min(vocab - 1);
         x[r * d..(r + 1) * d].copy_from_slice(&embed[ti * d..(ti + 1) * d]);
     }
-    let (h, caches) = trunk.forward(x, n);
+    let (h, saved) = trunk.forward(x, n);
     let (logits, y) =
         head_fwd(&h, n, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), vocab, pool);
     let (loss, dlogits, _) = ce_loss(&logits, n, vocab, targets);
@@ -514,7 +758,7 @@ fn lm_run(info: &ModelInfo, s: &Split, train: bool, pool: Option<&ThreadPool>) -
     );
     grads[lnf_i] = dlnf;
     grads[lnf_i + 1] = dwhead;
-    let dx = trunk.backward(dh, n, &caches, &mut grads);
+    let dx = trunk.backward(dh, n, saved, &mut grads);
     let dembed = &mut grads[0];
     for (r, &tok) in tokens.iter().enumerate() {
         let ti = (tok.max(0) as usize).min(vocab - 1);
@@ -532,6 +776,7 @@ fn vit_run(
     s: &Split,
     train: bool,
     pool: Option<&ThreadPool>,
+    ac: ActivationCfg,
 ) -> (f32, usize, Option<Vec<Vec<f32>>>) {
     let d = info.cfg_usize("d");
     let layers = info.cfg_usize("layers");
@@ -556,8 +801,8 @@ fn vit_run(
             }
         }
     }
-    let trunk = Trunk { params: s.params, base: 2, layers, d, pool };
-    let (h, caches) = trunk.forward(x, n);
+    let trunk = Trunk { params: s.params, base: 2, layers, d, pool, act: ac };
+    let (h, saved) = trunk.forward(x, n);
     // Mean-pool tokens per image.
     let mut pooled = vec![0.0f32; b * d];
     for bb in 0..b {
@@ -604,7 +849,7 @@ fn vit_run(
             }
         }
     }
-    let dx = trunk.backward(dh, n, &caches, &mut grads);
+    let dx = trunk.backward(dh, n, saved, &mut grads);
     linalg::gemm_tn_into(pool, &mut grads[0], &patches, &dx, n, pd, d);
     let dpos = &mut grads[1];
     for bb in 0..b {
@@ -624,6 +869,7 @@ fn sit_run(
     s: &Split,
     train: bool,
     pool: Option<&ThreadPool>,
+    ac: ActivationCfg,
 ) -> (f32, Option<Vec<Vec<f32>>>) {
     let d = info.cfg_usize("d");
     let layers = info.cfg_usize("layers");
@@ -665,8 +911,8 @@ fn sit_run(
             }
         }
     }
-    let trunk = Trunk { params: s.params, base: 3, layers, d, pool };
-    let (h, caches) = trunk.forward(x, n);
+    let trunk = Trunk { params: s.params, base: 3, layers, d, pool, act: ac };
+    let (h, saved) = trunk.forward(x, n);
     let lnf_i = 3 + layers * 8;
     let (out, y) =
         head_fwd(&h, n, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), pd, pool);
@@ -688,7 +934,7 @@ fn sit_run(
     );
     grads[lnf_i] = dlnf;
     grads[lnf_i + 1] = dwhead;
-    let dx = trunk.backward(dh, n, &caches, &mut grads);
+    let dx = trunk.backward(dh, n, saved, &mut grads);
     linalg::gemm_tn_into(pool, &mut grads[0], &patches, &dx, n, pd, d);
     {
         let dpos = &mut grads[1];
@@ -721,6 +967,7 @@ fn llava_run(
     s: &Split,
     train: bool,
     pool: Option<&ThreadPool>,
+    ac: ActivationCfg,
 ) -> (f32, usize, Option<Vec<Vec<f32>>>) {
     let d = info.cfg_usize("d");
     let layers = info.cfg_usize("layers");
@@ -744,8 +991,8 @@ fn llava_run(
             }
         }
     }
-    let trunk = Trunk { params: s.params, base: 2, layers, d, pool };
-    let (h, caches) = trunk.forward(x, b);
+    let trunk = Trunk { params: s.params, base: 2, layers, d, pool, act: ac };
+    let (h, saved) = trunk.forward(x, b);
     let lnf_i = 2 + layers * 8;
     let (logits, y) =
         head_fwd(&h, b, d, s.params[lnf_i].f32s(), s.params[lnf_i + 1].f32s(), answers, pool);
@@ -767,7 +1014,7 @@ fn llava_run(
     );
     grads[lnf_i] = dlnf;
     grads[lnf_i + 1] = dwhead;
-    let dx = trunk.backward(dh, b, &caches, &mut grads);
+    let dx = trunk.backward(dh, b, saved, &mut grads);
     linalg::gemm_tn_into(pool, &mut grads[0], feats, &dx, b, feat, d);
     let dembed = &mut grads[1];
     for bb in 0..b {
@@ -783,11 +1030,85 @@ fn llava_run(
 
 // --- cnn --------------------------------------------------------------------
 
+/// Saved-for-backward state of one conv layer: the im2col cache and
+/// the post-tanh activation (empty for the output conv, which has no
+/// nonlinearity). Retained caches are charged to the activation meter
+/// until drop; transient (checkpointed-recompute) caches are not.
+struct ConvLayerCache {
+    cols: Vec<f32>,
+    act: Vec<f32>,
+    charged: usize,
+}
+
+impl ConvLayerCache {
+    fn retained(cols: Vec<f32>, act: Vec<f32>) -> ConvLayerCache {
+        let charged = (cols.len() + act.len()) * 4;
+        meter::charge(charged);
+        ConvLayerCache { cols, act, charged }
+    }
+
+    fn transient(cols: Vec<f32>, act: Vec<f32>) -> ConvLayerCache {
+        ConvLayerCache { cols, act, charged: 0 }
+    }
+
+    fn recycle(mut self) {
+        arena::give(std::mem::take(&mut self.cols));
+        arena::give(std::mem::take(&mut self.act));
+    }
+}
+
+impl Drop for ConvLayerCache {
+    fn drop(&mut self) {
+        meter::discharge(self.charged);
+    }
+}
+
+/// Saved-for-backward state of the ControlNet conditioning branch.
+struct CtrlCache {
+    c0cols: Vec<f32>,
+    c0: Vec<f32>,
+    c1cols: Vec<f32>,
+    c0p: Vec<f32>,
+    charged: usize,
+}
+
+impl CtrlCache {
+    fn new(
+        c0cols: Vec<f32>,
+        c0: Vec<f32>,
+        c1cols: Vec<f32>,
+        c0p: Vec<f32>,
+        retained: bool,
+    ) -> CtrlCache {
+        let charged = if retained {
+            (c0cols.len() + c0.len() + c1cols.len() + c0p.len()) * 4
+        } else {
+            0
+        };
+        meter::charge(charged);
+        CtrlCache { c0cols, c0, c1cols, c0p, charged }
+    }
+
+    fn recycle(mut self) {
+        arena::give(std::mem::take(&mut self.c0cols));
+        arena::give(std::mem::take(&mut self.c0));
+        arena::give(std::mem::take(&mut self.c1cols));
+        arena::give(std::mem::take(&mut self.c0p));
+    }
+}
+
+impl Drop for CtrlCache {
+    fn drop(&mut self) {
+        meter::discharge(self.charged);
+    }
+}
+
 fn cnn_run(
     info: &ModelInfo,
     s: &Split,
     train: bool,
     pool: Option<&ThreadPool>,
+    ac: ActivationCfg,
 ) -> (f32, Option<Vec<f32>>, Option<Vec<Vec<f32>>>) {
     let img = info.cfg_usize("img");
     let chans = info.cfg_usize("chans");
@@ -811,11 +1132,12 @@ fn cnn_run(
         s.params[i].f32s()
     }
     let out_w = 2 * nw;
+    let seg = ac.checkpoint.segment(nw);
 
-    // Control branch forward.
-    let mut ctrl_cache: Option<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> = None;
-    let mut cmid: Option<Vec<f32>> = None;
-    if control {
+    // Control branch forward (shared by both policies — under
+    // checkpointing the caches are recycled instead of kept, and the
+    // whole branch is recomputed inside backward).
+    let ctrl_fwd = |transient: bool| -> (CtrlCache, Vec<f32>) {
         let cw0 = wp(s, out_w + 2);
         let cb0 = wp(s, out_w + 3);
         let cw1 = wp(s, out_w + 4);
@@ -824,62 +1146,211 @@ fn cnn_run(
         let (c0p, c0cols) = conv_fwd(cmap, b, 1, img, cw0, widths[0], k, cb0, pool);
         let c0: Vec<f32> = c0p.iter().map(|&z| z.tanh()).collect();
         let (cm, c1cols) = conv_fwd(&c0, b, widths[0], img, cw1, widths[mid_idx], k, cb1, pool);
-        ctrl_cache = Some((c0cols, c0, c1cols, c0p));
-        cmid = Some(cm);
+        (CtrlCache::new(c0cols, c0, c1cols, c0p, !transient), cm)
+    };
+
+    if seg == 0 {
+        // ---- cached path: save every (cols, act) pair ----------------
+        let mut ctrl_cache: Option<CtrlCache> = None;
+        let mut cmid: Option<Vec<f32>> = None;
+        if control {
+            let (cc, cm) = ctrl_fwd(false);
+            ctrl_cache = Some(cc);
+            cmid = Some(cm);
+        }
+
+        // Main stack: hidden convs with tanh, then conv_out.
+        let mut h = noisy.to_vec();
+        let mut cin = chans;
+        let mut caches: Vec<ConvLayerCache> = Vec::with_capacity(nw);
+        for (li, &wout) in widths.iter().enumerate() {
+            let (mut z, cols) =
+                conv_fwd(&h, b, cin, img, wp(s, 2 * li), wout, k, wp(s, 2 * li + 1), pool);
+            if control && li == mid_idx {
+                for (zi, ci) in z.iter_mut().zip(cmid.as_ref().unwrap()) {
+                    *zi += ci;
+                }
+            }
+            let actv: Vec<f32> = z.iter().map(|&v| v.tanh()).collect();
+            caches.push(ConvLayerCache::retained(cols, actv.clone()));
+            h = actv;
+            cin = wout;
+        }
+        let (out, out_cols) =
+            conv_fwd(&h, b, cin, img, wp(s, out_w), chans, k, wp(s, out_w + 1), pool);
+        let out_cache = ConvLayerCache::retained(out_cols, Vec::new());
+        let (loss, dout) = mse_loss(&out, clean);
+        if !train {
+            return (loss, Some(out), None);
+        }
+
+        let mut grads = zero_grads(info);
+        let (mut dh, dwo, dbo) =
+            conv_bwd(&dout, &out_cache.cols, wp(s, out_w), b, cin, img, chans, k, pool);
+        drop(out_cache);
+        grads[out_w] = dwo;
+        grads[out_w + 1] = dbo;
+        let mut dcmid: Option<Vec<f32>> = None;
+        for li in (0..nw).rev() {
+            let c = caches.pop().expect("one cache per conv layer");
+            let lin = if li == 0 { chans } else { widths[li - 1] };
+            // dz through tanh.
+            let dz: Vec<f32> =
+                dh.iter().zip(&c.act).map(|(&g, &a)| g * (1.0 - a * a)).collect();
+            if control && li == mid_idx {
+                dcmid = Some(dz.clone());
+            }
+            let (dx, dw, db) =
+                conv_bwd(&dz, &c.cols, wp(s, 2 * li), b, lin, img, widths[li], k, pool);
+            drop(c); // discharge this layer's saved bytes
+            grads[2 * li] = dw;
+            grads[2 * li + 1] = db;
+            dh = dx;
+        }
+        if let (Some(dcm), Some(cc)) = (dcmid, ctrl_cache) {
+            let cw1 = wp(s, out_w + 4);
+            let (dc0, dcw1, dcb1) =
+                conv_bwd(&dcm, &cc.c1cols, cw1, b, widths[0], img, widths[mid_idx], k, pool);
+            grads[out_w + 4] = dcw1;
+            grads[out_w + 5] = dcb1;
+            let dc0p: Vec<f32> =
+                dc0.iter().zip(&cc.c0).map(|(&g, &a)| g * (1.0 - a * a)).collect();
+            let (_, dcw0, dcb0) =
+                conv_bwd(&dc0p, &cc.c0cols, wp(s, out_w + 2), b, 1, img, widths[0], k, pool);
+            grads[out_w + 2] = dcw0;
+            grads[out_w + 3] = dcb0;
+        }
+        return (loss, Some(out), Some(grads));
     }
 
-    // Main stack: hidden convs with tanh, then conv_out.
+    // ---- checkpointed path: save only segment-boundary activations ----
+    // Boundary for segment 0 is the `noisy` data input itself (owned by
+    // the caller — not an activation, not charged); boundaries for
+    // segments 1.. are Saved (optionally rank-1 compressed).
+    let mut cmid: Option<Vec<f32>> = None;
+    if control {
+        let (cc, cm) = ctrl_fwd(true);
+        cc.recycle();
+        cmid = Some(cm);
+    }
     let mut h = noisy.to_vec();
     let mut cin = chans;
-    let mut caches: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(nw); // (cols, post-act)
+    let mut saved: Vec<Saved> = Vec::with_capacity(nw.div_ceil(seg).saturating_sub(1));
     for (li, &wout) in widths.iter().enumerate() {
+        if li > 0 && li % seg == 0 {
+            saved.push(Saved::store(&h, ac.lowrank));
+        }
         let (mut z, cols) =
             conv_fwd(&h, b, cin, img, wp(s, 2 * li), wout, k, wp(s, 2 * li + 1), pool);
+        arena::give(cols);
         if control && li == mid_idx {
             for (zi, ci) in z.iter_mut().zip(cmid.as_ref().unwrap()) {
                 *zi += ci;
             }
+            arena::give(cmid.take().expect("cmid consumed once"));
         }
-        let act: Vec<f32> = z.iter().map(|&v| v.tanh()).collect();
-        caches.push((cols, act.clone()));
-        h = act;
+        let actv: Vec<f32> = z.iter().map(|&v| v.tanh()).collect();
+        arena::give(z);
+        arena::give(std::mem::replace(&mut h, actv));
         cin = wout;
     }
     let (out, out_cols) =
         conv_fwd(&h, b, cin, img, wp(s, out_w), chans, k, wp(s, out_w + 1), pool);
+    arena::give(out_cols);
+    arena::give(h);
     let (loss, dout) = mse_loss(&out, clean);
     if !train {
         return (loss, Some(out), None);
     }
 
     let mut grads = zero_grads(info);
-    let (mut dh, dwo, dbo) =
-        conv_bwd(&dout, &out_cols, wp(s, out_w), b, cin, img, chans, k, pool);
-    grads[out_w] = dwo;
-    grads[out_w + 1] = dbo;
-    let mut dcmid: Option<Vec<f32>> = None;
-    for li in (0..nw).rev() {
-        let (cols, act) = &caches[li];
-        let lin = if li == 0 { chans } else { widths[li - 1] };
-        // dz through tanh.
-        let dz: Vec<f32> = dh.iter().zip(act).map(|(&g, &a)| g * (1.0 - a * a)).collect();
-        if control && li == mid_idx {
-            dcmid = Some(dz.clone());
-        }
-        let (dx, dw, db) = conv_bwd(&dz, cols, wp(s, 2 * li), b, lin, img, widths[li], k, pool);
-        grads[2 * li] = dw;
-        grads[2 * li + 1] = db;
-        dh = dx;
+    // Recompute the conditioning branch first: its caches are needed at
+    // the very end (control backward) and `cmid` is needed while
+    // recomputing any segment containing the mid layer.
+    let mut ctrl_cache: Option<CtrlCache> = None;
+    let mut cmid: Option<Vec<f32>> = None;
+    if control {
+        let (cc, cm) = ctrl_fwd(true);
+        ctrl_cache = Some(cc);
+        cmid = Some(cm);
     }
-    if let (Some(dcm), Some((c0cols, c0, c1cols, _c0p))) = (dcmid, ctrl_cache) {
+    let nseg = nw.div_ceil(seg);
+    let mut dh: Option<Vec<f32>> = None;
+    let mut dcmid: Option<Vec<f32>> = None;
+    for si in (0..nseg).rev() {
+        let lo = si * seg;
+        let hi = (lo + seg).min(nw);
+        // Segment input activation, then recompute the segment's caches
+        // (bit-identical: im2col and conv_fwd are pure, same kernels).
+        let mut hseg: Vec<f32> = if si == 0 {
+            noisy.to_vec()
+        } else {
+            let boundary = saved.pop().expect("one saved boundary per later segment");
+            let v = boundary.restore();
+            drop(boundary);
+            v
+        };
+        let mut cin_l = if lo == 0 { chans } else { widths[lo - 1] };
+        let mut caches: Vec<ConvLayerCache> = Vec::with_capacity(hi - lo);
+        for li in lo..hi {
+            let wout = widths[li];
+            let (mut z, cols) =
+                conv_fwd(&hseg, b, cin_l, img, wp(s, 2 * li), wout, k, wp(s, 2 * li + 1), pool);
+            if control && li == mid_idx {
+                for (zi, ci) in z.iter_mut().zip(cmid.as_ref().expect("cmid recomputed")) {
+                    *zi += ci;
+                }
+            }
+            let actv: Vec<f32> = z.iter().map(|&v| v.tanh()).collect();
+            arena::give(z);
+            arena::give(std::mem::replace(&mut hseg, actv.clone()));
+            caches.push(ConvLayerCache::transient(cols, actv));
+            cin_l = wout;
+        }
+        // Top of the stack: the output conv backs up first, fed by the
+        // im2col of the recomputed final activation.
+        if si == nseg - 1 {
+            let out_cols = im2col(&hseg, b, cin_l, img, k);
+            let (dhh, dwo, dbo) =
+                conv_bwd(&dout, &out_cols, wp(s, out_w), b, cin_l, img, chans, k, pool);
+            arena::give(out_cols);
+            grads[out_w] = dwo;
+            grads[out_w + 1] = dbo;
+            dh = Some(dhh);
+        }
+        arena::give(hseg);
+        let mut dcur = dh.take().expect("out-conv backward seeds dh");
+        for li in (lo..hi).rev() {
+            let c = caches.pop().expect("one recomputed cache per layer");
+            let lin = if li == 0 { chans } else { widths[li - 1] };
+            let dz: Vec<f32> =
+                dcur.iter().zip(&c.act).map(|(&g, &a)| g * (1.0 - a * a)).collect();
+            if control && li == mid_idx {
+                dcmid = Some(dz.clone());
+            }
+            let (dx, dw, db) =
+                conv_bwd(&dz, &c.cols, wp(s, 2 * li), b, lin, img, widths[li], k, pool);
+            c.recycle();
+            arena::give(dz);
+            grads[2 * li] = dw;
+            grads[2 * li + 1] = db;
+            arena::give(std::mem::replace(&mut dcur, dx));
+        }
+        dh = Some(dcur);
+    }
+    if let Some(cm) = cmid.take() {
+        arena::give(cm);
+    }
+    if let (Some(dcm), Some(cc)) = (dcmid, ctrl_cache) {
         let cw1 = wp(s, out_w + 4);
         let (dc0, dcw1, dcb1) =
-            conv_bwd(&dcm, &c1cols, cw1, b, widths[0], img, widths[mid_idx], k, pool);
+            conv_bwd(&dcm, &cc.c1cols, cw1, b, widths[0], img, widths[mid_idx], k, pool);
         grads[out_w + 4] = dcw1;
         grads[out_w + 5] = dcb1;
-        let dc0p: Vec<f32> = dc0.iter().zip(&c0).map(|(&g, &a)| g * (1.0 - a * a)).collect();
+        let dc0p: Vec<f32> = dc0.iter().zip(&cc.c0).map(|(&g, &a)| g * (1.0 - a * a)).collect();
         let (_, dcw0, dcb0) =
-            conv_bwd(&dc0p, &c0cols, wp(s, out_w + 2), b, 1, img, widths[0], k, pool);
+            conv_bwd(&dc0p, &cc.c0cols, wp(s, out_w + 2), b, 1, img, widths[0], k, pool);
+        cc.recycle();
         grads[out_w + 2] = dcw0;
         grads[out_w + 3] = dcb0;
     }
@@ -898,26 +1369,38 @@ pub fn train_step(
     inputs: &[&Tensor],
     pool: Option<&ThreadPool>,
 ) -> Result<Vec<Tensor>> {
+    train_step_cfg(info, inputs, pool, ActivationCfg::default())
+}
+
+/// [`train_step`] with an explicit activation policy (checkpointing /
+/// low-rank boundary compression). The default policy saves every
+/// cache; `EveryK`/`All` recompute inside backward, bit-identically.
+pub fn train_step_cfg(
+    info: &ModelInfo,
+    inputs: &[&Tensor],
+    pool: Option<&ThreadPool>,
+    ac: ActivationCfg,
+) -> Result<Vec<Tensor>> {
     let s = split_inputs(info, inputs)?;
     let (loss, grads) = match info.family.as_str() {
         "lm" => {
-            let r = lm_run(info, &s, true, pool);
+            let r = lm_run(info, &s, true, pool, ac);
             (r.loss, r.grads.unwrap())
         }
         "vit" => {
-            let (loss, _, g) = vit_run(info, &s, true, pool);
+            let (loss, _, g) = vit_run(info, &s, true, pool, ac);
             (loss, g.unwrap())
         }
         "sit" => {
-            let (loss, g) = sit_run(info, &s, true, pool);
+            let (loss, g) = sit_run(info, &s, true, pool, ac);
             (loss, g.unwrap())
         }
         "llava" => {
-            let (loss, _, g) = llava_run(info, &s, true, pool);
+            let (loss, _, g) = llava_run(info, &s, true, pool, ac);
             (loss, g.unwrap())
         }
         "cnn" => {
-            let (loss, _, g) = cnn_run(info, &s, true, pool);
+            let (loss, _, g) = cnn_run(info, &s, true, pool, ac);
             (loss, g.unwrap())
         }
         f => bail!("native backend: unknown model family '{f}'"),
@@ -931,23 +1414,33 @@ pub fn eval_step(
     inputs: &[&Tensor],
     pool: Option<&ThreadPool>,
 ) -> Result<Vec<Tensor>> {
+    eval_step_cfg(info, inputs, pool, ActivationCfg::default())
+}
+
+/// [`eval_step`] with an explicit activation policy.
+pub fn eval_step_cfg(
+    info: &ModelInfo,
+    inputs: &[&Tensor],
+    pool: Option<&ThreadPool>,
+    ac: ActivationCfg,
+) -> Result<Vec<Tensor>> {
     let s = split_inputs(info, inputs)?;
     let mut out = Vec::new();
     match info.family.as_str() {
-        "lm" => out.push(Tensor::scalar_f32(lm_run(info, &s, false, pool).loss)),
+        "lm" => out.push(Tensor::scalar_f32(lm_run(info, &s, false, pool, ac).loss)),
         "vit" => {
-            let (loss, correct, _) = vit_run(info, &s, false, pool);
+            let (loss, correct, _) = vit_run(info, &s, false, pool, ac);
             out.push(Tensor::scalar_f32(loss));
             out.push(Tensor::scalar_f32(correct as f32));
         }
-        "sit" => out.push(Tensor::scalar_f32(sit_run(info, &s, false, pool).0)),
+        "sit" => out.push(Tensor::scalar_f32(sit_run(info, &s, false, pool, ac).0)),
         "llava" => {
-            let (loss, correct, _) = llava_run(info, &s, false, pool);
+            let (loss, correct, _) = llava_run(info, &s, false, pool, ac);
             out.push(Tensor::scalar_f32(loss));
             out.push(Tensor::scalar_f32(correct as f32));
         }
         "cnn" => {
-            let (loss, pred, _) = cnn_run(info, &s, false, pool);
+            let (loss, pred, _) = cnn_run(info, &s, false, pool, ac);
             out.push(Tensor::scalar_f32(loss));
             if info.eval_outputs.iter().any(|o| o == "pred") {
                 let img = info.cfg_usize("img");
@@ -1100,5 +1593,163 @@ mod tests {
             assert_eq!(out.len(), info.eval_outputs.len(), "{name}");
             assert!(out[0].scalar().is_finite());
         }
+    }
+
+    /// The recompute-in-backward contract: for every model family (the
+    /// zoo micros cover all six, debug-build sized), every checkpoint
+    /// policy, and every worker count, the checkpointed step produces
+    /// the exact bits of the fully-cached serial step — loss and every
+    /// gradient. This includes ctrl_micro, whose conditioning branch
+    /// cache is recomputed inside backward.
+    #[test]
+    fn checkpointed_backward_is_bit_identical_for_every_model() {
+        use crate::util::threadpool::ThreadPool;
+        let policies = [
+            CheckpointPolicy::EveryK(1),
+            CheckpointPolicy::EveryK(2),
+            CheckpointPolicy::All,
+        ];
+        for info in zoo::micro_models() {
+            let inputs = build_inputs(&info, 11);
+            let refs: Vec<&Tensor> = inputs.iter().collect();
+            let baseline = train_step(&info, &refs, None).unwrap();
+            for policy in policies {
+                let ac = ActivationCfg { checkpoint: policy, lowrank: false };
+                for workers in [0usize, 2, 8] {
+                    let pool = (workers > 0).then(|| ThreadPool::new(workers));
+                    let ck = train_step_cfg(&info, &refs, pool.as_ref(), ac).unwrap();
+                    assert_eq!(baseline.len(), ck.len());
+                    for (a, b) in baseline.iter().zip(&ck) {
+                        assert_eq!(
+                            a.f32s(),
+                            b.f32s(),
+                            "{} drifted under {:?} with {workers} workers",
+                            info.name,
+                            policy
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Same contract at a size where the trunk GEMMs are above the
+    /// parallel-dispatch threshold, so recompute really runs on the
+    /// row-block fan-out path.
+    #[test]
+    fn checkpointed_backward_is_bit_identical_under_gemm_parallelism() {
+        use crate::util::threadpool::ThreadPool;
+        let info = zoo::models().into_iter().find(|m| m.name == "lm_tiny").unwrap();
+        let inputs = build_inputs(&info, 5);
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let baseline = train_step(&info, &refs, None).unwrap();
+        let ac = ActivationCfg { checkpoint: CheckpointPolicy::EveryK(1), lowrank: false };
+        for workers in [2usize, 8] {
+            let pool = ThreadPool::new(workers);
+            let ck = train_step_cfg(&info, &refs, Some(&pool), ac).unwrap();
+            for (a, b) in baseline.iter().zip(&ck) {
+                assert_eq!(a.f32s(), b.f32s(), "checkpoint drift with {workers} workers");
+            }
+        }
+    }
+
+    /// Low-rank boundary compression is an explicit approximation: the
+    /// forward loss is computed online (bit-exact), but the recomputed
+    /// backward sees rank-1 boundaries, so gradients must differ from
+    /// the exact run — while staying finite.
+    #[test]
+    fn lowrank_boundaries_are_approximate_but_finite() {
+        let info = zoo::models().into_iter().find(|m| m.name == "lm_tiny").unwrap();
+        let inputs = build_inputs(&info, 9);
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let exact = train_step(&info, &refs, None).unwrap();
+        let ac = ActivationCfg { checkpoint: CheckpointPolicy::EveryK(1), lowrank: true };
+        let lr = train_step_cfg(&info, &refs, None, ac).unwrap();
+        assert_eq!(exact[0].scalar(), lr[0].scalar(), "forward loss must stay bit-exact");
+        let mut any_diff = false;
+        for (a, b) in exact[1..].iter().zip(&lr[1..]) {
+            for (&x, &y) in a.f32s().iter().zip(b.f32s()) {
+                assert!(y.is_finite(), "low-rank gradient went non-finite");
+                any_diff |= x != y;
+            }
+        }
+        assert!(any_diff, "rank-1 boundaries produced bit-identical grads (compression no-op?)");
+    }
+
+    /// Every charge the meter sees during a step must be paired with a
+    /// discharge — no saved buffer may leak its accounting past the
+    /// step, for any family or policy.
+    #[test]
+    fn activation_meter_balances_to_zero_after_each_step() {
+        let policies =
+            [CheckpointPolicy::None, CheckpointPolicy::EveryK(1), CheckpointPolicy::All];
+        for info in zoo::micro_models() {
+            let inputs = build_inputs(&info, 4);
+            let refs: Vec<&Tensor> = inputs.iter().collect();
+            for policy in policies {
+                for lowrank in [false, true] {
+                    if lowrank && policy.is_none() {
+                        continue;
+                    }
+                    let before = meter::current_bytes();
+                    let ac = ActivationCfg { checkpoint: policy, lowrank };
+                    train_step_cfg(&info, &refs, None, ac).unwrap();
+                    eval_step_cfg(&info, &refs, None, ac).unwrap();
+                    assert_eq!(
+                        meter::current_bytes(),
+                        before,
+                        "{} leaked meter charge under {:?}",
+                        info.name,
+                        policy
+                    );
+                }
+            }
+        }
+    }
+
+    /// Checkpointed recompute draws its transients from the step arena:
+    /// after warmup the freelist satisfies every size, so steady-state
+    /// steps perform zero transient heap allocations on this thread.
+    #[test]
+    fn checkpointed_steps_keep_arena_alloc_events_flat() {
+        let info = zoo::models().into_iter().find(|m| m.name == "lm_micro").unwrap();
+        let inputs = build_inputs(&info, 2);
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let ac = ActivationCfg { checkpoint: CheckpointPolicy::EveryK(1), lowrank: false };
+        for _ in 0..3 {
+            train_step_cfg(&info, &refs, None, ac).unwrap(); // warmup
+        }
+        let misses0 = crate::tensor::arena::thread_alloc_events();
+        for _ in 0..5 {
+            train_step_cfg(&info, &refs, None, ac).unwrap();
+        }
+        assert_eq!(
+            crate::tensor::arena::thread_alloc_events(),
+            misses0,
+            "steady-state checkpointed step hit the allocator"
+        );
+    }
+
+    /// Checkpointing must actually shrink the measured saved-bytes
+    /// peak, and strictly more aggressive policies must shrink it more.
+    #[test]
+    fn every_k_strictly_reduces_measured_peak() {
+        let info = zoo::models().into_iter().find(|m| m.name == "lm_tiny").unwrap();
+        let inputs = build_inputs(&info, 6);
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let peak_of = |policy: CheckpointPolicy| {
+            meter::reset_thread_peak();
+            let ac = ActivationCfg { checkpoint: policy, lowrank: false };
+            train_step_cfg(&info, &refs, None, ac).unwrap();
+            meter::thread_peak_bytes()
+        };
+        let none = peak_of(CheckpointPolicy::None);
+        let k1 = peak_of(CheckpointPolicy::EveryK(1));
+        let k2 = peak_of(CheckpointPolicy::EveryK(2));
+        let all = peak_of(CheckpointPolicy::All);
+        assert!(k1 < none, "every1 ({k1}) did not beat cached ({none})");
+        assert!(k2 < k1, "every2 ({k2}) did not beat every1 ({k1}) on lm_tiny");
+        assert!(all <= k2, "all ({all}) exceeded every2 ({k2})");
+        assert!(none >= 2 * k1, "every1 saved less than 2x on lm_tiny");
     }
 }

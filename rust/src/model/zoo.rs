@@ -255,6 +255,12 @@ pub fn models() -> Vec<ModelInfo> {
     ]
 }
 
+/// The native-only micro models (one per family) — the set the
+/// activation-memory and recompute-correctness suites sweep.
+pub fn micro_models() -> Vec<ModelInfo> {
+    models().into_iter().filter(|m| m.name.ends_with("_micro")).collect()
+}
+
 /// Paper tables/figures (mirror of shapes.py EXPERIMENTS).
 pub fn experiments() -> Vec<ExperimentInfo> {
     let e = |id: &str, model: &str, ratios: &[f64], note: &str| ExperimentInfo {

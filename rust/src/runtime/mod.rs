@@ -188,11 +188,20 @@ pub trait Backend: Send + Sync {
 
 /// Construct the backend the config asks for (`--backend native|xla`).
 pub fn open_backend(cfg: &TrainConfig) -> Result<Arc<dyn Backend>> {
+    // Reject policy combinations the selected engine cannot honor
+    // before the engine-specific arms, so `--backend xla
+    // --activation-checkpoint ...` names the real conflict instead of
+    // silently no-opting (or hiding behind the missing-feature error).
+    cfg.validate_activation_toggles()?;
     match cfg.backend {
         // `--threads N` feeds both the per-slot optimizer fan-out and
         // the kernel layer's row-block GEMM parallelism inside model
         // fwd/bwd; results are bit-identical for any N.
-        BackendKind::Native => Ok(Arc::new(NativeBackend::with_threads(cfg.threads))),
+        BackendKind::Native => Ok(Arc::new(
+            NativeBackend::with_threads(cfg.threads)
+                .with_checkpoint(cfg.activation_checkpoint)
+                .with_activation_lowrank(cfg.activation_lowrank),
+        )),
         BackendKind::Xla => {
             #[cfg(feature = "xla")]
             {
@@ -231,5 +240,27 @@ mod tests {
         cfg.backend = BackendKind::Xla;
         let err = open_backend(&cfg).err().expect("should fail");
         assert!(format!("{err:#}").contains("xla"));
+    }
+
+    /// Activation toggles the engine cannot honor must be rejected at
+    /// open time with an error that names the toggle — regardless of
+    /// whether the xla feature is compiled in.
+    #[test]
+    fn xla_backend_rejects_activation_toggles() {
+        let mut cfg = TrainConfig::default();
+        cfg.backend = BackendKind::Xla;
+        cfg.activation_checkpoint = crate::config::CheckpointPolicy::EveryK(1);
+        let err = open_backend(&cfg).err().expect("should fail");
+        assert!(
+            format!("{err:#}").contains("activation-checkpoint"),
+            "error must name the unsupported toggle, got: {err:#}"
+        );
+    }
+
+    #[test]
+    fn native_backend_accepts_checkpoint_config() {
+        let mut cfg = TrainConfig::default();
+        cfg.activation_checkpoint = crate::config::CheckpointPolicy::EveryK(2);
+        assert_eq!(open_backend(&cfg).unwrap().label(), "native");
     }
 }

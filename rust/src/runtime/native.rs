@@ -12,6 +12,7 @@
 //! like the XLA backend does.
 
 use super::{names, Backend, ExperimentInfo, ModelInfo};
+use crate::model::nativenet::ActivationCfg;
 use crate::model::{nativenet, zoo};
 use crate::optim::refimpl;
 use crate::tensor::linalg::MatRef;
@@ -42,6 +43,9 @@ pub struct NativeBackend {
     /// (The `Mutex` only exists to keep the backend `Sync`; the trainer
     /// drives fwd/bwd from a single thread.)
     pool: Option<Mutex<ThreadPool>>,
+    /// Activation policy for model fwd/bwd (`--activation-checkpoint` /
+    /// `--activation-lowrank`). Default: cache everything.
+    act: ActivationCfg,
 }
 
 #[derive(Default)]
@@ -93,7 +97,26 @@ impl NativeBackend {
             plans: RwLock::new(PlanTable::default()),
             plan_builds: AtomicU64::new(0),
             pool: if threads > 1 { Some(Mutex::new(ThreadPool::new(threads))) } else { None },
+            act: ActivationCfg::default(),
         }
+    }
+
+    /// Set the gradient-checkpointing policy for every `train_step__*` /
+    /// `eval_step__*` this backend executes. Bit-identical to the cached
+    /// default for any policy (recompute uses the same kernels in the
+    /// same order).
+    pub fn with_checkpoint(mut self, policy: crate::config::CheckpointPolicy) -> NativeBackend {
+        self.act.checkpoint = policy;
+        self
+    }
+
+    /// Enable rank-1 (per-group mean) compression of saved checkpoint
+    /// boundaries — an explicit approximation, never composed silently
+    /// with the bit-exact paths (it only applies under a checkpointing
+    /// policy, which config validation enforces).
+    pub fn with_activation_lowrank(mut self, lowrank: bool) -> NativeBackend {
+        self.act.lowrank = lowrank;
+        self
     }
 
     fn model_ref(&self, name: &str) -> Result<&ModelInfo> {
@@ -277,11 +300,11 @@ impl Backend for NativeBackend {
         let out = match &plan.kind {
             PlanKind::TrainStep(mi) => {
                 let guard = self.pool.as_ref().map(|p| p.lock().expect("gemm pool poisoned"));
-                nativenet::train_step(mi, inputs, guard.as_deref())?
+                nativenet::train_step_cfg(mi, inputs, guard.as_deref(), self.act)?
             }
             PlanKind::EvalStep(mi) => {
                 let guard = self.pool.as_ref().map(|p| p.lock().expect("gemm pool poisoned"));
-                nativenet::eval_step(mi, inputs, guard.as_deref())?
+                nativenet::eval_step_cfg(mi, inputs, guard.as_deref(), self.act)?
             }
             PlanKind::Kernel { tpl, spec, kernel, .. } => kernel(name, tpl, spec, inputs)?,
         };

@@ -1,0 +1,120 @@
+//! Measured activation memory: a thread-aware high-water counter for
+//! saved-for-backward bytes, same pattern as `linalg::peak_scratch_bytes`.
+//!
+//! The native model paths charge the meter when they *save* a buffer
+//! for backward (a trunk `BlockCache`, a checkpoint boundary, a conv
+//! im2col cache) and discharge it when the buffer is consumed or
+//! dropped. Transient recompute buffers inside a checkpointed backward
+//! are drawn from [`super::arena`] and are **not** charged — they are
+//! step scratch, already visible through `alloc_events` /
+//! `retained_bytes`, and charging them would double count the exact
+//! bytes checkpointing exists to avoid keeping live. The meter
+//! therefore answers one question: how many bytes were held *between*
+//! forward and backward, which is the activation slice of the paper's
+//! Fig. 5 breakdown.
+//!
+//! Two peaks are kept: a thread-local one ([`thread_peak_bytes`],
+//! resettable per step via [`reset_thread_peak`] — race-free under the
+//! parallel test harness) and a process-wide monotone one
+//! ([`peak_bytes`]) for `MemoryBreakdown`.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+thread_local! {
+    static CURRENT: Cell<usize> = const { Cell::new(0) };
+    static THREAD_PEAK: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Process-wide high-water mark over all threads (monotone).
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// Charge `bytes` of saved-for-backward activation memory to this
+/// thread and bump both peaks.
+pub fn charge(bytes: usize) {
+    CURRENT.with(|c| {
+        let now = c.get() + bytes;
+        c.set(now);
+        THREAD_PEAK.with(|p| {
+            if now > p.get() {
+                p.set(now);
+            }
+        });
+        PEAK.fetch_max(now, Ordering::Relaxed);
+    });
+}
+
+/// Release `bytes` previously charged on this thread (saturating — a
+/// stray double-discharge clamps at zero rather than wrapping).
+pub fn discharge(bytes: usize) {
+    CURRENT.with(|c| c.set(c.get().saturating_sub(bytes)));
+}
+
+/// Bytes currently charged on THIS thread. Zero outside a step — the
+/// balance tests assert every charge is paired with a discharge.
+pub fn current_bytes() -> usize {
+    CURRENT.with(|c| c.get())
+}
+
+/// High-water mark on THIS thread since the last [`reset_thread_peak`].
+pub fn thread_peak_bytes() -> usize {
+    THREAD_PEAK.with(|p| p.get())
+}
+
+/// Reset this thread's peak to its current charge (call at step start,
+/// read [`thread_peak_bytes`] after the step for a per-step peak).
+pub fn reset_thread_peak() {
+    CURRENT.with(|c| THREAD_PEAK.with(|p| p.set(c.get())));
+}
+
+/// Process-wide high-water mark since process start (all threads).
+pub fn peak_bytes() -> usize {
+    PEAK.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_discharge_balance_and_peak() {
+        reset_thread_peak();
+        let base = current_bytes();
+        charge(1024);
+        charge(512);
+        assert_eq!(current_bytes(), base + 1536);
+        assert!(thread_peak_bytes() >= base + 1536);
+        assert!(peak_bytes() >= base + 1536);
+        discharge(512);
+        discharge(1024);
+        assert_eq!(current_bytes(), base);
+        // Peak survives the discharge until the next reset.
+        assert!(thread_peak_bytes() >= base + 1536);
+        reset_thread_peak();
+        assert_eq!(thread_peak_bytes(), base);
+    }
+
+    #[test]
+    fn discharge_saturates_at_zero() {
+        let base = current_bytes();
+        discharge(base + (1 << 30));
+        assert_eq!(current_bytes(), 0);
+        charge(base); // restore for sibling tests on this thread
+    }
+
+    #[test]
+    fn thread_peak_is_thread_local() {
+        reset_thread_peak();
+        charge(64);
+        let here = thread_peak_bytes();
+        let other = std::thread::spawn(|| {
+            reset_thread_peak();
+            thread_peak_bytes()
+        })
+        .join()
+        .unwrap();
+        assert_eq!(other, 0, "fresh thread saw this thread's charge");
+        assert!(here >= 64);
+        discharge(64);
+    }
+}

@@ -25,10 +25,13 @@
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Max bytes of f32 capacity one thread's freelist retains.
-pub const ARENA_RETAIN_BYTES: usize = 8 << 20;
+/// Max bytes of f32 capacity one thread's freelist retains. Sized for
+/// the checkpointed-backward recompute path, which holds a full trunk
+/// `BlockCache` (~9 buffers) plus gate transients at once on top of
+/// the optimizer-step transients.
+pub const ARENA_RETAIN_BYTES: usize = 16 << 20;
 /// Max buffers one thread's freelist retains.
-pub const ARENA_RETAIN_BUFS: usize = 16;
+pub const ARENA_RETAIN_BUFS: usize = 32;
 
 thread_local! {
     static FREELIST: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };

@@ -9,6 +9,7 @@
 //! core ([`linalg`]) that every matmul in the crate (model fwd/bwd,
 //! optimizer kernels, runtime dispatch) runs on.
 
+pub mod activation_meter;
 pub mod arena;
 pub mod bf16;
 pub mod linalg;

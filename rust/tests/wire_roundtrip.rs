@@ -12,7 +12,9 @@
 //! equality IS field-for-field equality — no PartialEq needed on types
 //! that deliberately don't derive it.
 
-use coap::config::{BackendKind, ConvFormat, MomentBase, OptKind, TrainConfig};
+use coap::config::{
+    BackendKind, CheckpointPolicy, ConvFormat, MomentBase, OptKind, TrainConfig,
+};
 use coap::coordinator::wire::{self, Frame};
 use coap::coordinator::{EvalPoint, RunSpec, TrainEvent, TrainReport};
 use coap::rng::Rng;
@@ -108,6 +110,13 @@ fn gen_config(r: &mut Rng) -> TrainConfig {
     c.conv_format = FMTS[r.below(FMTS.len())];
     c.lowrank_base =
         if r.below(2) == 0 { MomentBase::Adam } else { MomentBase::Adafactor };
+    c.activation_checkpoint = match r.below(4) {
+        0 => CheckpointPolicy::None,
+        1 => CheckpointPolicy::EveryK(1 + r.below(16)),
+        2 => CheckpointPolicy::EveryK(1),
+        _ => CheckpointPolicy::All,
+    };
+    c.activation_lowrank = r.below(2) == 0;
     c
 }
 
@@ -169,6 +178,8 @@ fn gen_report(r: &mut Rng) -> TrainReport {
         optimizer_bytes: r.below(1 << 40),
         opt_transient_bytes: r.below(1 << 30),
         param_bytes: r.below(1 << 40),
+        activation_peak_bytes: r.below(1 << 40),
+        activation_analytic_bytes: r.below(1 << 40),
         ceu_total: gen_f64(r),
         train_losses: curve(r),
         ceu_curve: curve(r),
