@@ -1,0 +1,122 @@
+//! Remote dispatch overhead receipt: the same micro sweep pushed
+//! through both in-tree transports — `proc` (one `coap worker`
+//! subprocess per row over stdin/stdout) and loopback TCP (`coap
+//! serve-worker` peers) — with a single peer, so the gap between the
+//! sweep's wall clock and the sum of the rows' own measured walls IS
+//! the per-row dispatch cost (spawn/connect + spec/report framing).
+//!
+//! Rows land in `target/bench-json/remote_dispatch.jsonl`, tagged with
+//! `transport` and `peer`, each line checked against the bench-JSONL
+//! schema (`util::bench::validate_jsonl_line`) before it is appended.
+
+use coap::config::{OptKind, TrainConfig};
+use coap::coordinator::remote::{self, RemoteOpts};
+use coap::coordinator::wire;
+use coap::coordinator::{ExecMode, RunSpec, Sweep};
+use coap::runtime::{Backend, NativeBackend};
+use coap::util::bench::{append_json, jsonl_line, print_table, validate_jsonl_line};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Validate against the trajectory schema, then append.
+fn record(fields: &[(&str, String)]) {
+    let line = jsonl_line(fields);
+    validate_jsonl_line(&line)
+        .unwrap_or_else(|e| panic!("remote_dispatch bench row violates the JSONL schema: {e}"));
+    append_json("remote_dispatch", fields);
+}
+
+fn mk(label: &str, model: &str, opt: OptKind, steps: usize) -> RunSpec {
+    let mut c = TrainConfig::default();
+    c.model = model.into();
+    c.optimizer = opt;
+    c.steps = steps;
+    c.lr = 3e-3;
+    c.t_update = 3;
+    c.lambda = 2;
+    c.eval_every = 0;
+    c.log_every = 0;
+    RunSpec::new(label, c)
+}
+
+fn micro_specs(steps: usize) -> Vec<RunSpec> {
+    vec![
+        mk("coap/lm", "lm_micro", OptKind::Coap, steps),
+        mk("adamw/lm", "lm_micro", OptKind::AdamW, steps),
+        mk("coap-af/lm", "lm_micro", OptKind::CoapAdafactor, steps),
+        mk("flora/cnn", "cnn_micro", OptKind::Flora, steps),
+    ]
+}
+
+/// One measured sweep over `peers`: returns (sweep wall ms, sum of the
+/// rows' worker-measured wall ms).
+fn run_once(rt: &Arc<dyn Backend>, steps: usize, peers: Vec<String>) -> (f64, f64) {
+    let t0 = Instant::now();
+    let reports = Sweep::new(micro_specs(steps))
+        .mode(ExecMode::Remote { peers })
+        .remote_opts(RemoteOpts::default())
+        .run(rt)
+        .unwrap_or_else(|e| panic!("remote_dispatch bench sweep failed: {e:#}"));
+    let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let rows_ms: f64 = reports.iter().map(|r| r.wall.as_secs_f64() * 1e3).sum();
+    (sweep_ms, rows_ms)
+}
+
+fn main() {
+    // The real `coap` binary: the `proc` transport spawns it per row,
+    // and the TCP transport talks to it as a `serve-worker` peer.
+    let exe = wire::default_worker_exe()
+        .expect("remote_dispatch bench needs the `coap` binary: run `cargo build --release` first");
+    let rt: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let (steps, iters) = (3usize, 3usize);
+    let n_rows = micro_specs(steps).len();
+
+    // Keep the TCP peer alive across iterations — connection reuse is
+    // part of what the transport comparison is measuring.
+    let mut serve = remote::spawn_serve_worker(&exe, &[]).expect("spawn serve-worker peer");
+
+    let mut table = Vec::new();
+    let cases: &[(&str, Vec<String>)] = &[
+        ("proc", vec![format!("proc:{}", exe.display())]),
+        ("tcp", vec![serve.addr.clone()]),
+    ];
+    for (transport, peers) in cases {
+        let peer = peers[0].clone();
+        // Warmup: first contact pays one-off costs (page cache, accept).
+        let _ = run_once(&rt, steps, peers.clone());
+        let (mut sweep_ms, mut rows_ms) = (0.0, 0.0);
+        for _ in 0..iters {
+            let (s, r) = run_once(&rt, steps, peers.clone());
+            sweep_ms += s / iters as f64;
+            rows_ms += r / iters as f64;
+        }
+        let overhead_ms = (sweep_ms - rows_ms).max(0.0);
+        let per_row = overhead_ms / n_rows as f64;
+        table.push(vec![
+            transport.to_string(),
+            peer.clone(),
+            n_rows.to_string(),
+            format!("{sweep_ms:.1}"),
+            format!("{rows_ms:.1}"),
+            format!("{per_row:.2}"),
+        ]);
+        record(&[
+            ("case", format!("dispatch-{transport}")),
+            ("transport", transport.to_string()),
+            ("peer", peer),
+            ("rows", n_rows.to_string()),
+            ("steps", steps.to_string()),
+            ("iters", iters.to_string()),
+            ("sweep_wall_ms", format!("{sweep_ms:.3}")),
+            ("row_wall_ms_sum", format!("{rows_ms:.3}")),
+            ("dispatch_overhead_ms_per_row", format!("{per_row:.3}")),
+        ]);
+    }
+    serve.kill();
+
+    print_table(
+        "Remote dispatch overhead: proc (subprocess/row) vs loopback TCP (serve-worker)",
+        &["transport", "peer", "rows", "sweep (ms)", "rows' own (ms)", "overhead/row (ms)"],
+        &table,
+    );
+}

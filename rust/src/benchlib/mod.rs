@@ -14,7 +14,7 @@
 //! subprocesses).
 
 use crate::config::{CheckpointPolicy, ConvFormat, MomentBase, OptKind, TrainConfig};
-use crate::coordinator::events::ProgressSink;
+use crate::coordinator::events::{EventSink, Fanout, ProgressSink};
 use crate::coordinator::sweep::Sweep;
 use crate::coordinator::TrainReport;
 use crate::rng::Rng;
@@ -154,43 +154,78 @@ impl ShardEnv {
         self.mode.width()
     }
 
-    /// `"N workers"` / `"N procs"` for env banners and table footers.
+    /// `"N workers"` / `"N procs"` / `"N remote peers"` for env banners
+    /// and table footers.
     pub fn pool_label(&self) -> String {
-        match self.mode {
+        match &self.mode {
             ExecMode::Threads { workers } => format!("{workers} workers"),
             ExecMode::Process { max_procs } => format!("{max_procs} procs"),
+            ExecMode::Remote { peers } => format!("{} remote peers", peers.len()),
         }
     }
 
     /// Stamp `specs` with the resolved row thread count and run them as
     /// a sharded sweep with a progress line per row, returning reports
     /// in spec order (bit-identical across execution modes).
-    pub fn run(&self, mut specs: Vec<RunSpec>) -> Result<Vec<TrainReport>> {
+    pub fn run(&self, specs: Vec<RunSpec>) -> Result<Vec<TrainReport>> {
+        self.run_with(specs, None)
+    }
+
+    /// [`ShardEnv::run`] with an optional extra sink fanned in beside
+    /// the progress line — how `coap sweep --remote` records the
+    /// dispatch events its per-peer JSONL rows are built from.
+    pub fn run_with(
+        &self,
+        mut specs: Vec<RunSpec>,
+        extra: Option<Arc<dyn EventSink>>,
+    ) -> Result<Vec<TrainReport>> {
         for s in &mut specs {
             s.cfg.threads = self.row_threads;
             s.cfg.activation_checkpoint = self.row_checkpoint;
             s.cfg.activation_lowrank = self.row_lowrank;
         }
+        let events: Arc<dyn EventSink> = match extra {
+            None => Arc::new(ProgressSink),
+            Some(sink) => Arc::new(Fanout(vec![Arc::new(ProgressSink), sink])),
+        };
         Sweep::new(specs)
-            .mode(self.mode)
-            .events(Arc::new(ProgressSink))
+            .mode(self.mode.clone())
+            .events(events)
             .run(&self.rt)
     }
 }
 
 /// Resolve a [`ShardEnv`] from CLI flags (`--workers`, `--procs`,
-/// `--threads`, `--backend`, `--config`) — the `coap sweep` subcommand
-/// and the example drivers. `--workers` and `--procs` are mutually
-/// exclusive: a row runs either on an in-process thread or in a
-/// subprocess, never both.
+/// `--remote`, `--threads`, `--backend`, `--config`) — the `coap sweep`
+/// subcommand and the example drivers. `--workers`, `--procs` and
+/// `--remote` are mutually exclusive: a row runs in exactly one place
+/// (an in-process thread, a subprocess, or a remote peer).
 pub fn shard_env(args: &Args, mut cfg: TrainConfig) -> Result<ShardEnv> {
-    if args.has("workers") && args.has("procs") {
+    let pools = [args.has("workers"), args.has("procs"), args.has("remote")]
+        .iter()
+        .filter(|&&p| p)
+        .count();
+    if pools > 1 {
         bail!(
-            "--workers (thread sharding) and --procs (subprocess sharding) \
-             are mutually exclusive"
+            "--workers (thread sharding), --procs (subprocess sharding) and \
+             --remote (remote peers) are mutually exclusive"
         );
     }
-    let mode = shard_mode(args.usize_or("workers", 1), args.usize_or("procs", 0));
+    let mode = match args.get("remote") {
+        Some(list) => {
+            let peers: Vec<String> = list
+                .split(',')
+                .map(str::trim)
+                .filter(|p| !p.is_empty())
+                .map(String::from)
+                .collect();
+            if peers.is_empty() {
+                bail!("--remote needs at least one peer (HOST:PORT or proc[:exe], comma list)");
+            }
+            ExecMode::Remote { peers }
+        }
+        None => shard_mode(args.usize_or("workers", 1), args.usize_or("procs", 0)),
+    };
     cfg.threads = shard_threads(cfg.threads, mode.width(), threads_explicit(args, &cfg));
     Ok(ShardEnv {
         rt: open_backend(&cfg)?,
@@ -656,6 +691,29 @@ mod tests {
         assert_eq!(env.row_threads, 1);
         assert_eq!(env.pool_label(), "2 procs");
         assert_eq!(env.width(), 2);
+    }
+
+    /// `--remote` parses a comma list into a Remote pool, defaults its
+    /// rows single-threaded like any multi-worker pool, and is mutually
+    /// exclusive with the local pool flags.
+    #[test]
+    fn remote_flag_policy() {
+        let remote =
+            Args::parse(["--remote", "127.0.0.1:7177, proc"].iter().map(|s| s.to_string()));
+        let env = shard_env(&remote, TrainConfig::default()).unwrap();
+        assert_eq!(
+            env.mode,
+            ExecMode::Remote { peers: vec!["127.0.0.1:7177".into(), "proc".into()] }
+        );
+        assert_eq!(env.pool_label(), "2 remote peers");
+        assert_eq!(env.width(), 2);
+        assert_eq!(env.row_threads, 1);
+
+        let clash =
+            Args::parse(["--remote", "proc", "--procs", "2"].iter().map(|s| s.to_string()));
+        assert!(shard_env(&clash, TrainConfig::default()).is_err());
+        let empty = Args::parse(["--remote", " ,"].iter().map(|s| s.to_string()));
+        assert!(shard_env(&empty, TrainConfig::default()).is_err());
     }
 
     /// Sharded rows default to single-threaded (backend pool + per-row

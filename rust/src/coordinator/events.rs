@@ -40,6 +40,19 @@ pub enum TrainEvent {
     /// `step` is the last fully-completed step of this run (the same
     /// local scale the `Step` events use).
     RunFailed { run: usize, label: Arc<str>, step: usize, error: String },
+    /// A remote sweep handed this row to a peer (`coap sweep
+    /// --remote`). `attempt` counts from 1; a value above 1 means the
+    /// row was re-dispatched after an earlier attempt's transport died.
+    /// Dispatch events stream live (they narrate the scheduler), unlike
+    /// the row's own events, which are buffered per attempt and
+    /// flushed only when the attempt concludes.
+    RowDispatched { run: usize, label: Arc<str>, peer: String, attempt: usize },
+    /// A dispatch attempt died at the transport layer (peer dead, hung
+    /// past its heartbeat window, or version-skewed) and the row went
+    /// back on the queue for a healthy peer. Row-level failures (an
+    /// error frame from a live worker) are deterministic and are NOT
+    /// requeued — they terminate the row with `RunFailed` semantics.
+    RowRequeued { run: usize, label: Arc<str>, peer: String, attempt: usize, error: String },
 }
 
 impl TrainEvent {
@@ -51,7 +64,9 @@ impl TrainEvent {
             | TrainEvent::ProjRefresh { run, .. }
             | TrainEvent::Eval { run, .. }
             | TrainEvent::RunFinished { run, .. }
-            | TrainEvent::RunFailed { run, .. } => *run,
+            | TrainEvent::RunFailed { run, .. }
+            | TrainEvent::RowDispatched { run, .. }
+            | TrainEvent::RowRequeued { run, .. } => *run,
         }
     }
 
@@ -63,7 +78,9 @@ impl TrainEvent {
             | TrainEvent::ProjRefresh { label, .. }
             | TrainEvent::Eval { label, .. }
             | TrainEvent::RunFinished { label, .. }
-            | TrainEvent::RunFailed { label, .. } => label,
+            | TrainEvent::RunFailed { label, .. }
+            | TrainEvent::RowDispatched { label, .. }
+            | TrainEvent::RowRequeued { label, .. } => label,
         }
     }
 }
@@ -238,6 +255,19 @@ mod tests {
                 label: "a".into(),
                 step: 1,
                 error: "boom".into(),
+            },
+            TrainEvent::RowDispatched {
+                run: 3,
+                label: "a".into(),
+                peer: "127.0.0.1:7177".into(),
+                attempt: 1,
+            },
+            TrainEvent::RowRequeued {
+                run: 3,
+                label: "a".into(),
+                peer: "127.0.0.1:7177".into(),
+                attempt: 1,
+                error: "peer hung".into(),
             },
         ];
         for ev in &evs {

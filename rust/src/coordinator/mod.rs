@@ -6,6 +6,7 @@ pub mod checkpoint;
 pub mod events;
 pub mod memory;
 pub mod metrics;
+pub mod remote;
 pub mod sweep;
 pub mod trainer;
 pub mod wire;

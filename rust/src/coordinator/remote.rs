@@ -1,0 +1,1300 @@
+//! `coordinator::remote` — remote sweep dispatch over the frame wire.
+//!
+//! PR 5 pushed sweep rows across a process boundary as versioned JSONL
+//! frames (`coordinator::wire`); this module points that wire at
+//! *remote* workers. Three layers:
+//!
+//! 1. **[`Transport`]** — one row's frame conversation with a peer,
+//!    abstracted over how the bytes move. [`TcpTransport`] speaks a
+//!    length-delimited framing ([`write_frame`]/[`read_frame`]) to a
+//!    `coap serve-worker` peer over a persistent connection;
+//!    [`ProcessTransport`] wraps the PR-5 `coap worker` subprocess path
+//!    (one child per row over stdin/stdout) so `--remote proc` and
+//!    mixed pools exercise the same scheduler.
+//! 2. **[`serve_worker`]** — the peer: `coap serve-worker --listen
+//!    ADDR` accepts connections, banners a hello frame (protocol
+//!    version + backends), then loops request frames: each spec runs
+//!    through the same [`wire::run_spec_row`] loop `coap worker` uses,
+//!    streaming event/report frames back interleaved with periodic
+//!    heartbeat frames from a side thread.
+//! 3. **[`run_remote`]** — the coordinator: a latency-weighted shared
+//!    cursor ([`Scheduler`]) grants the next row to the idle peer with
+//!    the lowest per-step-time EWMA; a dead, hung or version-skewed
+//!    peer's in-flight row is re-dispatched to a healthy peer with
+//!    bounded retries and exponential backoff.
+//!
+//! **Determinism contract** (the acceptance bar, pinned in
+//! `tests/remote_sweep_parity.rs`): reports come back **bit-identical
+//! to serial execution, in spec order**, with first-error-by-spec-index
+//! semantics — *including* across re-dispatch. Two rules make retries
+//! invisible: a row's own events are buffered per attempt and flushed
+//! only when the attempt concludes (so an abandoned half-row never
+//! leaks partial events into the merged sink), and a row-level error
+//! frame from a live worker is deterministic — it terminates the row
+//! and is **never** retried. Only transport-layer deaths (connection
+//! lost, stream truncated, version skew, worker killed) requeue.
+
+use super::events::{EventSink, TrainEvent};
+use super::sweep::RunSpec;
+use super::trainer::TrainReport;
+use super::wire::{self, Frame, WireHello};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Length-delimited framing (the TCP codec)
+// ---------------------------------------------------------------------------
+
+/// Write one frame line as `XXXXXXXX\n<payload>\n` — 8 lowercase hex
+/// digits of payload length, then the payload. The explicit length lets
+/// the reader pre-check against [`wire::MAX_FRAME_LEN`] *before*
+/// allocating, which newline-scanning cannot.
+pub fn write_frame<W: Write>(w: &mut W, line: &str) -> Result<()> {
+    if line.len() > wire::MAX_FRAME_LEN {
+        bail!(
+            "refusing to send wire frame of {} bytes (MAX_FRAME_LEN is {})",
+            line.len(),
+            wire::MAX_FRAME_LEN
+        );
+    }
+    writeln!(w, "{:08x}", line.len()).context("writing frame header")?;
+    w.write_all(line.as_bytes()).context("writing frame payload")?;
+    w.write_all(b"\n").context("writing frame terminator")?;
+    w.flush().context("flushing frame")
+}
+
+/// Read exactly `buf.len()` bytes; `Ok(false)` on a clean EOF at byte
+/// 0, an error on EOF mid-buffer (a peer that died mid-frame).
+fn read_exact_or_clean_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) => bail!("stream ended mid-frame ({got} of {} bytes)", buf.len()),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e).context("reading frame bytes"),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one length-delimited frame. `Ok(None)` is a clean hang-up
+/// between frames; length is validated against [`wire::MAX_FRAME_LEN`]
+/// before the payload buffer is allocated.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<String>> {
+    let mut hdr = [0u8; 9];
+    if !read_exact_or_clean_eof(r, &mut hdr)? {
+        return Ok(None);
+    }
+    if hdr[8] != b'\n' {
+        bail!("malformed frame header (no newline after length)");
+    }
+    let hex = std::str::from_utf8(&hdr[..8]).context("frame header is not UTF-8")?;
+    let len = usize::from_str_radix(hex, 16)
+        .with_context(|| format!("frame header '{hex}' is not hex"))?;
+    if len > wire::MAX_FRAME_LEN {
+        bail!(
+            "refusing wire frame of {len} bytes (MAX_FRAME_LEN is {})",
+            wire::MAX_FRAME_LEN
+        );
+    }
+    let mut payload = vec![0u8; len + 1];
+    if !read_exact_or_clean_eof(r, &mut payload)? {
+        bail!("stream ended between frame header and payload");
+    }
+    if payload.pop() != Some(b'\n') {
+        bail!("malformed frame (no newline after payload)");
+    }
+    String::from_utf8(payload)
+        .map(Some)
+        .map_err(|e| anyhow!("frame payload is not UTF-8: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Transport: one row's frame conversation with a peer
+// ---------------------------------------------------------------------------
+
+/// How a dispatch attempt's frames reach a worker and come back. One
+/// transport owns one peer connection (TCP) or one child per row
+/// (subprocess); the scheduler drives it row by row.
+pub trait Transport: Send {
+    /// Display name for events and errors.
+    fn peer(&self) -> &str;
+    /// The peer's hello banner, when the transport has one (TCP).
+    fn hello(&self) -> Option<&WireHello> {
+        None
+    }
+    /// Start one row: deliver its spec frame.
+    fn send_spec(&mut self, index: usize, spec: &RunSpec) -> Result<()>;
+    /// Next worker->coordinator frame; `Ok(None)` is end-of-stream.
+    fn recv(&mut self) -> Result<Option<Frame>>;
+    /// Called after the row's report frame arrived — the subprocess
+    /// transport reaps its child here (exit status is part of the row's
+    /// verdict); TCP keeps the connection for the next row.
+    fn finish_row(&mut self) -> Result<()>;
+    /// Best-effort graceful goodbye (never fails, never blocks long).
+    fn shutdown(&mut self);
+}
+
+/// Persistent length-delimited TCP connection to a `coap serve-worker`
+/// peer. Read/write timeouts bound a hung peer: a heartbeat-silent
+/// connection surfaces as a timed-out read, which the scheduler treats
+/// as a transport death and re-dispatches the row.
+pub struct TcpTransport {
+    peer: String,
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    hello: WireHello,
+}
+
+impl TcpTransport {
+    /// Connect, exchange the hello banner, and verify protocol
+    /// equality. A version-skewed peer is refused here, before any row
+    /// is risked on it.
+    pub fn connect(
+        addr: &str,
+        connect_timeout: Duration,
+        idle_timeout: Duration,
+    ) -> Result<TcpTransport> {
+        let sock: SocketAddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving remote peer '{addr}'"))?
+            .next()
+            .with_context(|| format!("remote peer '{addr}' resolved to no address"))?;
+        let stream = TcpStream::connect_timeout(&sock, connect_timeout)
+            .with_context(|| format!("connecting to remote peer {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(idle_timeout))
+            .context("setting read timeout")?;
+        stream
+            .set_write_timeout(Some(idle_timeout))
+            .context("setting write timeout")?;
+        let reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+        let writer = BufWriter::new(stream.try_clone().context("cloning stream")?);
+        let mut t = TcpTransport {
+            peer: addr.to_string(),
+            stream,
+            reader,
+            writer,
+            hello: WireHello { proto: 0, peer: String::new(), backends: Vec::new() },
+        };
+        let banner = read_frame(&mut t.reader)
+            .with_context(|| format!("reading hello from {addr}"))?
+            .with_context(|| format!("peer {addr} hung up before its hello frame"))?;
+        match wire::decode_frame(&banner).with_context(|| format!("decoding hello from {addr}"))? {
+            Frame::Hello(h) => {
+                if h.proto != wire::WIRE_VERSION {
+                    bail!(
+                        "peer {addr} speaks wire v{} but this build speaks v{} — \
+                         version-skewed peers are refused (the wire format is internal; \
+                         run matching builds on both ends)",
+                        h.proto,
+                        wire::WIRE_VERSION
+                    );
+                }
+                t.hello = h;
+            }
+            _ => bail!("peer {addr} opened with a non-hello frame"),
+        }
+        Ok(t)
+    }
+}
+
+impl Transport for TcpTransport {
+    fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    fn hello(&self) -> Option<&WireHello> {
+        Some(&self.hello)
+    }
+
+    fn send_spec(&mut self, index: usize, spec: &RunSpec) -> Result<()> {
+        write_frame(&mut self.writer, &wire::encode_spec(index, spec))
+            .with_context(|| format!("sending spec to {}", self.peer))
+    }
+
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        match read_frame(&mut self.reader)? {
+            None => Ok(None),
+            Some(line) => wire::decode_frame(&line).map(Some),
+        }
+    }
+
+    fn finish_row(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn shutdown(&mut self) {
+        let _ = write_frame(&mut self.writer, &wire::encode_shutdown());
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
+/// The PR-5 subprocess path behind the [`Transport`] trait: one fresh
+/// `coap worker` child per row over stdin/stdout. No hello (the child
+/// is this build), no heartbeat (a dead child is an EOF).
+pub struct ProcessTransport {
+    peer: String,
+    exe: PathBuf,
+    child: Option<Child>,
+    reader: Option<BufReader<ChildStdout>>,
+}
+
+impl ProcessTransport {
+    pub fn new(peer: &str, exe: PathBuf) -> ProcessTransport {
+        ProcessTransport { peer: peer.to_string(), exe, child: None, reader: None }
+    }
+
+    fn abandon_child(&mut self) {
+        self.reader = None;
+        if let Some(mut c) = self.child.take() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+impl Transport for ProcessTransport {
+    fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    fn send_spec(&mut self, index: usize, spec: &RunSpec) -> Result<()> {
+        self.abandon_child();
+        let mut child = Command::new(&self.exe)
+            .arg("worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning worker {}", self.exe.display()))?;
+        // Dropping the handle closes stdin; a dead child makes this
+        // EPIPE, which the recv loop diagnoses via the stream.
+        if let Some(mut si) = child.stdin.take() {
+            let _ = writeln!(si, "{}", wire::encode_spec(index, spec));
+        }
+        self.reader = Some(BufReader::new(
+            child.stdout.take().context("worker stdout not captured")?,
+        ));
+        self.child = Some(child);
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Option<Frame>> {
+        let reader = self.reader.as_mut().context("recv before send_spec")?;
+        loop {
+            match wire::read_frame_line(reader)? {
+                None => return Ok(None),
+                Some(line) if line.is_empty() => continue,
+                Some(line) => return wire::decode_frame(&line).map(Some),
+            }
+        }
+    }
+
+    fn finish_row(&mut self) -> Result<()> {
+        self.reader = None;
+        if let Some(mut c) = self.child.take() {
+            let status = c.wait().context("waiting for worker")?;
+            if !status.success() {
+                bail!("worker exited with {status} before finishing its row");
+            }
+        }
+        Ok(())
+    }
+
+    fn shutdown(&mut self) {
+        self.abandon_child();
+    }
+}
+
+impl Drop for ProcessTransport {
+    fn drop(&mut self) {
+        self.abandon_child();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Peer specs
+// ---------------------------------------------------------------------------
+
+/// One `--remote` pool entry: `host:port` (TCP to a `serve-worker`) or
+/// `proc`/`proc:<exe>` (local subprocess workers through the same
+/// scheduler).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PeerSpec {
+    Tcp(String),
+    Proc(Option<PathBuf>),
+}
+
+/// Parse one peer out of a `--remote` comma list.
+pub fn parse_peer(s: &str) -> Result<PeerSpec> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty peer in --remote list");
+    }
+    if s == "proc" {
+        return Ok(PeerSpec::Proc(None));
+    }
+    if let Some(exe) = s.strip_prefix("proc:") {
+        if exe.is_empty() {
+            bail!("'proc:' needs a worker binary path (or use plain 'proc')");
+        }
+        return Ok(PeerSpec::Proc(Some(PathBuf::from(exe))));
+    }
+    if !s.contains(':') {
+        bail!(
+            "peer '{s}' is neither 'proc[:exe]' nor a host:port address \
+             (e.g. 127.0.0.1:7177)"
+        );
+    }
+    Ok(PeerSpec::Tcp(s.to_string()))
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler: latency-weighted shared cursor with re-dispatch
+// ---------------------------------------------------------------------------
+
+/// Retry/timeout/balancing knobs for [`run_remote`].
+#[derive(Debug, Clone)]
+pub struct RemoteOpts {
+    /// Dispatch attempts per row before it fails the sweep (transport
+    /// deaths only; row-level errors are deterministic and never
+    /// retried).
+    pub max_attempts: usize,
+    /// First retry delay; doubles per attempt, capped at 8 s.
+    pub backoff_base: Duration,
+    /// TCP connect timeout per attempt.
+    pub connect_timeout: Duration,
+    /// Read/write timeout on an established connection — the hung-peer
+    /// bound. Must comfortably exceed the serve-worker heartbeat period
+    /// (default 250 ms), since heartbeats are what keep a slow row's
+    /// connection warm.
+    pub idle_timeout: Duration,
+    /// Consecutive failed connects before a peer is declared dead
+    /// (connect failures do not burn row attempts).
+    pub connect_attempts: usize,
+    /// EWMA blend factor for per-peer step time (higher = newer rows
+    /// weigh more).
+    pub ewma_alpha: f64,
+}
+
+impl Default for RemoteOpts {
+    fn default() -> RemoteOpts {
+        RemoteOpts {
+            max_attempts: 3,
+            backoff_base: Duration::from_millis(100),
+            connect_timeout: Duration::from_secs(3),
+            idle_timeout: Duration::from_secs(10),
+            connect_attempts: 3,
+            ewma_alpha: 0.3,
+        }
+    }
+}
+
+/// Exponential backoff: `base * 2^(attempt-1)`, capped at 8 s.
+fn backoff_delay(attempt: usize, base: Duration) -> Duration {
+    let shift = attempt.saturating_sub(1).min(6) as u32;
+    (base * (1u32 << shift)).min(Duration::from_secs(8))
+}
+
+/// One queued row.
+struct Task {
+    index: usize,
+    /// Dispatch attempt this grant would be (counts from 1).
+    attempt: usize,
+    /// Routing key from the spec (`cfg.backend.label()`).
+    backend: &'static str,
+    /// Earliest instant this task may be granted (retry backoff).
+    not_before: Instant,
+}
+
+/// What [`Scheduler::next`] hands a peer loop.
+enum Grant {
+    /// Run this row now.
+    Run(Task),
+    /// These rows route to no live peer — fail them and stop.
+    Unroutable(Vec<Task>),
+    /// Queue drained (or sweep stopped): exit the loop.
+    Exit,
+}
+
+struct SchedState {
+    queue: VecDeque<Task>,
+    /// Per-peer: currently waiting in `next()`.
+    idle: Vec<bool>,
+    /// Per-peer ms-per-step EWMA; `None` until a first row lands.
+    ewma: Vec<Option<f64>>,
+    /// Per-peer advertised backends; `None` until the hello arrives
+    /// (assume capable until told otherwise).
+    caps: Vec<Option<Vec<String>>>,
+    alive: Vec<bool>,
+    inflight: usize,
+    stop: bool,
+}
+
+impl SchedState {
+    fn peer_capable(&self, peer: usize, backend: &str) -> bool {
+        self.alive[peer]
+            && match &self.caps[peer] {
+                None => true,
+                Some(b) => b.iter().any(|x| x == backend),
+            }
+    }
+
+    /// Any live peer (by current knowledge) that could run `backend`.
+    fn routable(&self, backend: &str) -> bool {
+        (0..self.alive.len()).any(|p| self.peer_capable(p, backend))
+    }
+
+    /// The idle live peer with the lowest EWMA that can run `backend`.
+    /// Unmeasured peers (EWMA `None`) rank first so every peer gets
+    /// probed; ties break by peer id for determinism.
+    fn best_idle(&self, backend: &str) -> Option<usize> {
+        (0..self.alive.len())
+            .filter(|&p| self.idle[p] && self.peer_capable(p, backend))
+            .min_by(|&a, &b| {
+                let ka = self.ewma[a].unwrap_or(-1.0);
+                let kb = self.ewma[b].unwrap_or(-1.0);
+                ka.total_cmp(&kb).then(a.cmp(&b))
+            })
+    }
+}
+
+/// The latency-weighted shared cursor. Replaces the FIFO
+/// `AtomicUsize` cursor of `sweep::run_pool` for remote pools: idle
+/// peers contend for the head-most *ready* task, and the grant goes to
+/// the peer with the lowest observed ms-per-step EWMA — so a fast peer
+/// absorbs more rows, while spec order (and with it
+/// first-error-by-spec-index) is preserved by the queue itself.
+struct Scheduler {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+impl Scheduler {
+    fn new(specs: &[RunSpec], peers: usize) -> Scheduler {
+        let now = Instant::now();
+        let queue = specs
+            .iter()
+            .enumerate()
+            .map(|(index, spec)| Task {
+                index,
+                attempt: 1,
+                backend: spec.cfg.backend.label(),
+                not_before: now,
+            })
+            .collect();
+        Scheduler {
+            state: Mutex::new(SchedState {
+                queue,
+                idle: vec![false; peers],
+                ewma: vec![None; peers],
+                caps: vec![None; peers],
+                alive: vec![true; peers],
+                inflight: 0,
+                stop: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until this peer gets a task, the queue drains, or the
+    /// sweep stops. Polls every 25 ms so `not_before` backoffs wake up
+    /// without a dedicated timer thread.
+    fn next(&self, peer: usize) -> Grant {
+        let mut st = self.state.lock().unwrap();
+        st.idle[peer] = true;
+        loop {
+            if !st.alive[peer] || st.stop || (st.queue.is_empty() && st.inflight == 0) {
+                st.idle[peer] = false;
+                return Grant::Exit;
+            }
+            // Fail rows no live peer can ever route (anti-deadlock:
+            // without this a backend-less row would wait forever).
+            let orphans: Vec<usize> = st
+                .queue
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| !st.routable(t.backend))
+                .map(|(qi, _)| qi)
+                .collect();
+            if !orphans.is_empty() {
+                let mut out = Vec::new();
+                for qi in orphans.into_iter().rev() {
+                    out.push(st.queue.remove(qi).unwrap());
+                }
+                st.stop = true;
+                st.idle[peer] = false;
+                self.cv.notify_all();
+                return Grant::Unroutable(out);
+            }
+            let now = Instant::now();
+            let ready = st
+                .queue
+                .iter()
+                .position(|t| t.not_before <= now && st.peer_capable(peer, t.backend));
+            if let Some(qi) = ready {
+                let backend = st.queue[qi].backend;
+                if st.best_idle(backend) == Some(peer) {
+                    let task = st.queue.remove(qi).unwrap();
+                    st.idle[peer] = false;
+                    st.inflight += 1;
+                    self.cv.notify_all();
+                    return Grant::Run(task);
+                }
+            }
+            st = self.cv.wait_timeout(st, Duration::from_millis(25)).unwrap().0;
+        }
+    }
+
+    /// A transport death: put the row back with its attempt burned and
+    /// a backoff window.
+    fn requeue(&self, task: Task, delay: Duration) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight -= 1;
+        st.queue.push_front(Task {
+            attempt: task.attempt + 1,
+            not_before: Instant::now() + delay,
+            ..task
+        });
+        self.cv.notify_all();
+    }
+
+    /// Put the row back *without* burning an attempt — the peer never
+    /// actually tried it (connect failure, capability mismatch).
+    fn requeue_unburned(&self, task: Task) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight -= 1;
+        st.queue.push_front(Task { not_before: Instant::now(), ..task });
+        self.cv.notify_all();
+    }
+
+    /// The row concluded (report or deterministic failure).
+    fn settle(&self, failed: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.inflight -= 1;
+        if failed {
+            st.stop = true;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Blend a finished row's ms-per-step into the peer's EWMA.
+    fn record_ewma(&self, peer: usize, ms_per_step: f64, alpha: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.ewma[peer] = Some(match st.ewma[peer] {
+            None => ms_per_step,
+            Some(prev) => alpha * ms_per_step + (1.0 - alpha) * prev,
+        });
+        self.cv.notify_all();
+    }
+
+    /// Record the peer's advertised backends from its hello.
+    fn set_caps(&self, peer: usize, backends: Vec<String>) {
+        let mut st = self.state.lock().unwrap();
+        st.caps[peer] = Some(backends);
+        self.cv.notify_all();
+    }
+
+    /// Declare a peer dead. If it was the last live peer, the queue is
+    /// drained and returned so the caller can fail those rows.
+    fn mark_dead(&self, peer: usize) -> Vec<Task> {
+        let mut st = self.state.lock().unwrap();
+        st.alive[peer] = false;
+        let mut orphans = Vec::new();
+        if !st.alive.iter().any(|&a| a) {
+            orphans = st.queue.drain(..).collect();
+            st.stop = true;
+        }
+        self.cv.notify_all();
+        orphans
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch: one row over one transport
+// ---------------------------------------------------------------------------
+
+/// How one dispatch attempt ended.
+enum RowOutcome {
+    /// Report arrived; the buffered events are the attempt's stream.
+    Done(Box<TrainReport>, Vec<TrainEvent>),
+    /// The worker itself reported an error frame — deterministic, not
+    /// retried.
+    RowFailed(anyhow::Error, Vec<TrainEvent>),
+    /// The transport died (connection lost, truncated stream, worker
+    /// killed): the row is re-dispatchable.
+    Transport(anyhow::Error),
+}
+
+/// Run one row over `t`, buffering its events. Error precedence
+/// mirrors `wire::run_worker`: an error frame beats any transport
+/// verdict that follows it.
+fn dispatch_row(t: &mut dyn Transport, index: usize, spec: &RunSpec) -> RowOutcome {
+    if let Err(e) = t.send_spec(index, spec) {
+        return RowOutcome::Transport(e);
+    }
+    let mut events = Vec::new();
+    loop {
+        match t.recv() {
+            Ok(Some(Frame::Event(ev))) => events.push(ev),
+            Ok(Some(Frame::Heartbeat { .. })) | Ok(Some(Frame::Hello(_))) => {}
+            Ok(Some(Frame::Report(rep))) => {
+                return match t.finish_row() {
+                    Ok(()) => RowOutcome::Done(rep, events),
+                    Err(e) => RowOutcome::Transport(e),
+                };
+            }
+            Ok(Some(Frame::Error(msg))) => {
+                return RowOutcome::RowFailed(anyhow!("worker failed: {msg}"), events);
+            }
+            Ok(None) => {
+                return RowOutcome::Transport(anyhow!(
+                    "peer stream ended without a report frame (was the worker killed?)"
+                ));
+            }
+            Err(e) => return RowOutcome::Transport(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The coordinator: run_remote
+// ---------------------------------------------------------------------------
+
+type RowSlot = Mutex<Option<Result<TrainReport>>>;
+
+fn connect_transport(
+    peer: &PeerSpec,
+    name: &str,
+    worker_exe: Option<&Path>,
+    opts: &RemoteOpts,
+) -> Result<Box<dyn Transport>> {
+    match peer {
+        PeerSpec::Tcp(addr) => Ok(Box::new(TcpTransport::connect(
+            addr,
+            opts.connect_timeout,
+            opts.idle_timeout,
+        )?)),
+        PeerSpec::Proc(exe) => {
+            let exe = match (exe, worker_exe) {
+                (Some(e), _) => e.clone(),
+                (None, Some(e)) => e.to_path_buf(),
+                (None, None) => wire::default_worker_exe()?,
+            };
+            Ok(Box::new(ProcessTransport::new(name, exe)))
+        }
+    }
+}
+
+struct PeerCtx<'a> {
+    id: usize,
+    spec: &'a PeerSpec,
+    name: &'a str,
+    specs: &'a [RunSpec],
+    slots: &'a [RowSlot],
+    sched: &'a Scheduler,
+    sink: &'a dyn EventSink,
+    worker_exe: Option<&'a Path>,
+    opts: &'a RemoteOpts,
+}
+
+fn fail_tasks(tasks: Vec<Task>, slots: &[RowSlot], msg: impl Fn(&Task) -> String) {
+    for t in tasks {
+        let mut slot = slots[t.index].lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(Err(anyhow!("{}", msg(&t))));
+        }
+    }
+}
+
+/// One peer's dispatch loop: pull granted rows from the scheduler,
+/// (re)connect the transport as needed, run rows, flush their buffered
+/// events, and feed completion/latency back.
+fn peer_loop(ctx: PeerCtx<'_>) {
+    let PeerCtx { id, spec, name, specs, slots, sched, sink, worker_exe, opts } = ctx;
+    let mut transport: Option<Box<dyn Transport>> = None;
+    let mut connect_failures = 0usize;
+    loop {
+        let task = match sched.next(id) {
+            Grant::Exit => break,
+            Grant::Unroutable(tasks) => {
+                fail_tasks(tasks, slots, |t| {
+                    format!(
+                        "no live remote peer supports backend '{}' (row '{}')",
+                        t.backend, specs[t.index].label
+                    )
+                });
+                break;
+            }
+            Grant::Run(task) => task,
+        };
+        // Ensure a transport. Connect failures don't burn row attempts
+        // — the row never reached a worker — but repeated failures kill
+        // the peer.
+        if transport.is_none() {
+            match connect_transport(spec, name, worker_exe, opts) {
+                Ok(t) => {
+                    connect_failures = 0;
+                    if let Some(h) = t.hello() {
+                        sched.set_caps(id, h.backends.clone());
+                    }
+                    transport = Some(t);
+                }
+                Err(e) => {
+                    sched.requeue_unburned(task);
+                    connect_failures += 1;
+                    if connect_failures >= opts.connect_attempts {
+                        eprintln!("remote peer {name} is unreachable, dropping it: {e:#}");
+                        let orphans = sched.mark_dead(id);
+                        fail_tasks(orphans, slots, |t| {
+                            format!(
+                                "no live remote peers remain (row '{}' undispatched; \
+                                 last peer {name} unreachable: {e:#})",
+                                specs[t.index].label
+                            )
+                        });
+                        break;
+                    }
+                    std::thread::sleep(backoff_delay(connect_failures, opts.backoff_base));
+                    continue;
+                }
+            }
+        }
+        let t = transport.as_mut().unwrap();
+        // Capability re-check against the live hello: the scheduler
+        // granted on possibly-stale knowledge.
+        if let Some(h) = t.hello() {
+            if !h.backends.iter().any(|b| b == task.backend) {
+                sink.event(&TrainEvent::RowRequeued {
+                    run: task.index,
+                    label: specs[task.index].label.as_str().into(),
+                    peer: name.to_string(),
+                    attempt: task.attempt,
+                    error: format!("peer lacks backend '{}'", task.backend),
+                });
+                sched.requeue_unburned(task);
+                continue;
+            }
+        }
+        // Dispatch events stream live; the row's own events are
+        // buffered inside dispatch_row and flushed on conclusion.
+        sink.event(&TrainEvent::RowDispatched {
+            run: task.index,
+            label: specs[task.index].label.as_str().into(),
+            peer: name.to_string(),
+            attempt: task.attempt,
+        });
+        match dispatch_row(t.as_mut(), task.index, &specs[task.index]) {
+            RowOutcome::Done(rep, events) => {
+                for ev in &events {
+                    sink.event(ev);
+                }
+                let ms = rep.wall.as_secs_f64() * 1e3 / rep.steps.max(1) as f64;
+                sched.record_ewma(id, ms, opts.ewma_alpha);
+                *slots[task.index].lock().unwrap() = Some(Ok(*rep));
+                sched.settle(false);
+            }
+            RowOutcome::RowFailed(e, events) => {
+                for ev in &events {
+                    sink.event(ev);
+                }
+                *slots[task.index].lock().unwrap() = Some(Err(e));
+                sched.settle(true);
+            }
+            RowOutcome::Transport(e) => {
+                // The connection (or child) is in an unknown state:
+                // drop it; the next grant reconnects.
+                if let Some(mut dead) = transport.take() {
+                    dead.shutdown();
+                }
+                // Blend in a pessimistic latency: an unmeasured peer
+                // ranks first in the balancer, so a hung-but-accepting
+                // peer would otherwise win every re-dispatch of the
+                // same row and starve it of attempts while healthy
+                // peers sit idle.
+                sched.record_ewma(id, opts.idle_timeout.as_secs_f64() * 1e3, opts.ewma_alpha);
+                sink.event(&TrainEvent::RowRequeued {
+                    run: task.index,
+                    label: specs[task.index].label.as_str().into(),
+                    peer: name.to_string(),
+                    attempt: task.attempt,
+                    error: format!("{e:#}"),
+                });
+                if task.attempt >= opts.max_attempts {
+                    *slots[task.index].lock().unwrap() = Some(Err(anyhow!(
+                        "row dispatch failed after {} attempts (last peer {name}): {e:#}",
+                        task.attempt
+                    )));
+                    sched.settle(true);
+                } else {
+                    let delay = backoff_delay(task.attempt, opts.backoff_base);
+                    sched.requeue(task, delay);
+                }
+            }
+        }
+    }
+    if let Some(mut t) = transport {
+        t.shutdown();
+    }
+}
+
+/// Collapse slots into spec-ordered reports. Re-dispatch means a
+/// failing row can leave *lower*-index rows unrun (their peer died
+/// before reaching them), so the first *error* by spec index wins —
+/// scanning for the first empty slot would mask the real failure.
+fn collapse(specs: &[RunSpec], slots: Vec<RowSlot>) -> Result<Vec<TrainReport>> {
+    let mut outs: Vec<Option<Result<TrainReport>>> = slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("remote sweep slot poisoned"))
+        .collect();
+    if let Some(i) = outs.iter().position(|o| matches!(o, Some(Err(_)))) {
+        let Some(Err(e)) = outs[i].take() else { unreachable!() };
+        return Err(e).with_context(|| format!("sweep row {i} ('{}')", specs[i].label));
+    }
+    let mut reports = Vec::with_capacity(outs.len());
+    for (i, out) in outs.into_iter().enumerate() {
+        match out {
+            Some(Ok(rep)) => reports.push(rep),
+            _ => bail!(
+                "sweep row {i} ('{}') was never run (dispatch stopped early)",
+                specs[i].label
+            ),
+        }
+    }
+    Ok(reports)
+}
+
+/// Execute `specs` across a pool of remote peers, returning reports in
+/// spec order, bit-identical to serial execution (see the module doc
+/// for the determinism contract).
+pub fn run_remote(
+    specs: &[RunSpec],
+    peers: &[String],
+    sink: &dyn EventSink,
+    worker_exe: Option<&Path>,
+    opts: &RemoteOpts,
+) -> Result<Vec<TrainReport>> {
+    if specs.is_empty() {
+        return Ok(Vec::new());
+    }
+    if peers.is_empty() {
+        bail!("remote sweep needs at least one peer (--remote HOST:PORT[,..])");
+    }
+    let parsed: Vec<PeerSpec> = peers
+        .iter()
+        .map(|p| parse_peer(p))
+        .collect::<Result<Vec<_>>>()?;
+    // Display names: duplicate pool entries get a #id suffix so events
+    // and the per-peer JSONL rows stay distinguishable.
+    let names: Vec<String> = peers
+        .iter()
+        .enumerate()
+        .map(|(id, p)| {
+            if peers.iter().filter(|q| *q == p).count() > 1 {
+                format!("{p}#{id}")
+            } else {
+                p.clone()
+            }
+        })
+        .collect();
+    let slots: Vec<RowSlot> = (0..specs.len()).map(|_| Mutex::new(None)).collect();
+    let sched = Scheduler::new(specs, parsed.len());
+    std::thread::scope(|scope| {
+        for (id, (spec, name)) in parsed.iter().zip(&names).enumerate() {
+            let ctx = PeerCtx {
+                id,
+                spec,
+                name,
+                specs,
+                slots: &slots,
+                sched: &sched,
+                sink,
+                worker_exe,
+                opts,
+            };
+            scope.spawn(move || peer_loop(ctx));
+        }
+    });
+    collapse(specs, slots)
+}
+
+// ---------------------------------------------------------------------------
+// The peer: coap serve-worker
+// ---------------------------------------------------------------------------
+
+/// `coap serve-worker` knobs.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Heartbeat period per connection (keeps a slow row's connection
+    /// warm past the coordinator's idle timeout).
+    pub heartbeat: Duration,
+    /// Test hook: kill the whole process (exit 9) right after the
+    /// first frame of the Nth row served (1-based, across all
+    /// connections) — how `tests/remote_sweep_parity.rs` produces a
+    /// peer that dies mid-row.
+    pub die_mid_row: Option<usize>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { heartbeat: Duration::from_millis(250), die_mid_row: None }
+    }
+}
+
+/// Serve rows forever on `listen`. Prints `listening <addr>` on stdout
+/// once bound (how tests and scripts discover a `--listen 127.0.0.1:0`
+/// ephemeral port), then accepts connections until killed; each
+/// connection gets a hello banner, a heartbeat thread, and a
+/// spec/shutdown request loop. A connection error never kills the
+/// server.
+pub fn serve_worker(listen: &str, opts: ServeOpts) -> Result<()> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("binding serve-worker to {listen}"))?;
+    let addr = listener.local_addr().context("reading bound address")?;
+    println!("listening {addr}");
+    eprintln!(
+        "coap serve-worker: listening on {addr} (wire v{}, backends: {})",
+        wire::WIRE_VERSION,
+        wire::local_backends().join(",")
+    );
+    let rows_started = Arc::new(AtomicUsize::new(0));
+    let opts = Arc::new(opts);
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve-worker: accept failed: {e}");
+                continue;
+            }
+        };
+        let rows = Arc::clone(&rows_started);
+        let opts = Arc::clone(&opts);
+        std::thread::spawn(move || {
+            let who = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".into());
+            if let Err(e) = handle_conn(stream, &opts, &rows) {
+                eprintln!("serve-worker: connection {who} failed: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// One coordinator connection: hello banner, heartbeat thread, request
+/// loop. All frame writes go through one `Arc<Mutex<BufWriter>>` so
+/// heartbeats never interleave mid-frame with row traffic.
+fn handle_conn(
+    stream: TcpStream,
+    opts: &ServeOpts,
+    rows_started: &AtomicUsize,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_write_timeout(Some(Duration::from_secs(30)))
+        .context("setting write timeout")?;
+    let writer = Arc::new(Mutex::new(BufWriter::new(
+        stream.try_clone().context("cloning connection")?,
+    )));
+    {
+        let mut w = writer.lock().unwrap();
+        write_frame(
+            &mut *w,
+            &wire::encode_hello(&WireHello {
+                proto: wire::WIRE_VERSION,
+                peer: format!("serve-worker:{}", std::process::id()),
+                backends: wire::local_backends(),
+            }),
+        )
+        .context("sending hello")?;
+    }
+    // Heartbeat thread: a tick under the shared writer lock. On a write
+    // failure the coordinator is gone — shut the socket down both ways
+    // so the request loop's blocking read unblocks too.
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let writer = Arc::clone(&writer);
+        let stop = Arc::clone(&stop);
+        let period = opts.heartbeat;
+        let sock = stream.try_clone().context("cloning connection")?;
+        std::thread::spawn(move || {
+            let mut seq = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(period);
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                seq += 1;
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &wire::encode_heartbeat(seq)).is_err() {
+                    let _ = sock.shutdown(Shutdown::Both);
+                    break;
+                }
+            }
+        })
+    };
+    let out = serve_rows(stream, &writer, opts, rows_started);
+    stop.store(true, Ordering::SeqCst);
+    let _ = hb.join();
+    out
+}
+
+fn serve_rows(
+    mut stream: TcpStream,
+    writer: &Arc<Mutex<BufWriter<TcpStream>>>,
+    opts: &ServeOpts,
+    rows_started: &AtomicUsize,
+) -> Result<()> {
+    loop {
+        let line = match read_frame(&mut stream)? {
+            None => return Ok(()), // coordinator hung up between rows
+            Some(l) => l,
+        };
+        let (index, spec) = match wire::decode_request(&line) {
+            Ok(wire::Request::Shutdown) => return Ok(()),
+            Ok(wire::Request::Spec(index, spec)) => (index, spec),
+            Err(e) => {
+                let mut w = writer.lock().unwrap();
+                let _ = write_frame(&mut *w, &wire::encode_error(&format!("bad request: {e:#}")));
+                bail!("bad request frame: {e:#}");
+            }
+        };
+        let row_no = rows_started.fetch_add(1, Ordering::SeqCst) + 1;
+        let die_after_first_frame = opts.die_mid_row == Some(row_no);
+        let broken = Arc::new(AtomicBool::new(false));
+        let emit: Arc<dyn Fn(&str) + Send + Sync> = {
+            let writer = Arc::clone(writer);
+            let broken = Arc::clone(&broken);
+            let emitted = AtomicUsize::new(0);
+            Arc::new(move |frame: &str| {
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, frame).is_err() {
+                    broken.store(true, Ordering::SeqCst);
+                }
+                drop(w);
+                if die_after_first_frame && emitted.fetch_add(1, Ordering::SeqCst) == 0 {
+                    // Test hook: a peer killed mid-row. Exit hard, no
+                    // unwinding — the coordinator must see a truncated
+                    // stream, exactly like a crashed machine.
+                    std::process::exit(9);
+                }
+            })
+        };
+        // A failed row already sent its error frame; the connection
+        // stays up for the next request.
+        let _ = wire::run_spec_row(index, spec, emit);
+        if broken.load(Ordering::SeqCst) {
+            bail!("coordinator connection lost mid-row");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Test/bench helper: spawn a serve-worker child on an ephemeral port
+// ---------------------------------------------------------------------------
+
+/// A spawned `coap serve-worker` child (tests and benches). Killed on
+/// drop.
+pub struct ServeHandle {
+    pub addr: String,
+    child: Child,
+    /// Held so the child's stdout pipe stays open (the banner reader).
+    _stdout: BufReader<ChildStdout>,
+}
+
+impl ServeHandle {
+    /// Kill the peer now (simulating a crashed machine).
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn `exe serve-worker --listen 127.0.0.1:0 <extra_args>` and wait
+/// for its `listening <addr>` banner.
+pub fn spawn_serve_worker(exe: &Path, extra_args: &[&str]) -> Result<ServeHandle> {
+    let mut child = Command::new(exe)
+        .arg("serve-worker")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .args(extra_args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning serve-worker {}", exe.display()))?;
+    let mut stdout = BufReader::new(child.stdout.take().context("no stdout")?);
+    let mut banner = String::new();
+    stdout
+        .read_line(&mut banner)
+        .context("reading serve-worker banner")?;
+    let addr = banner
+        .trim()
+        .strip_prefix("listening ")
+        .with_context(|| format!("unexpected serve-worker banner: {banner:?}"))?
+        .to_string();
+    if addr.is_empty() {
+        let _ = child.kill();
+        bail!("serve-worker exited before binding");
+    }
+    Ok(ServeHandle { addr, child, _stdout: stdout })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use std::io::Cursor;
+
+    #[test]
+    fn framing_roundtrips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "hello frame").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        write_frame(&mut buf, "third\twith\ttabs").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("hello frame"));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(""));
+        assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some("third\twith\ttabs"));
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        // A hostile peer claims a 256 MiB frame: rejected by the header
+        // check, no 256 MiB buffer is ever allocated.
+        let mut bytes = format!("{:08x}\n", 256 << 20).into_bytes();
+        bytes.extend_from_slice(b"payload that never gets read\n");
+        let err = read_frame(&mut Cursor::new(bytes)).unwrap_err();
+        assert!(format!("{err:#}").contains("MAX_FRAME_LEN"), "{err:#}");
+        // Garbage headers are errors, not panics.
+        assert!(read_frame(&mut Cursor::new(b"not hex!\nx\n".to_vec())).is_err());
+        assert!(read_frame(&mut Cursor::new(b"00000003?abc\n".to_vec())).is_err());
+    }
+
+    #[test]
+    fn truncated_streams_are_errors_not_hangs() {
+        // Clean EOF between frames: None.
+        assert_eq!(read_frame(&mut Cursor::new(Vec::new())).unwrap(), None);
+        // EOF mid-header and mid-payload: errors.
+        assert!(read_frame(&mut Cursor::new(b"0000".to_vec())).is_err());
+        assert!(read_frame(&mut Cursor::new(b"0000000a\nshort".to_vec())).is_err());
+        // Payload present but terminator wrong.
+        assert!(read_frame(&mut Cursor::new(b"00000003\nabcX".to_vec())).is_err());
+    }
+
+    #[test]
+    fn peer_specs_parse() {
+        assert_eq!(
+            parse_peer("127.0.0.1:7177").unwrap(),
+            PeerSpec::Tcp("127.0.0.1:7177".into())
+        );
+        assert_eq!(parse_peer(" host:9 ").unwrap(), PeerSpec::Tcp("host:9".into()));
+        assert_eq!(parse_peer("proc").unwrap(), PeerSpec::Proc(None));
+        assert_eq!(
+            parse_peer("proc:/tmp/coap").unwrap(),
+            PeerSpec::Proc(Some(PathBuf::from("/tmp/coap")))
+        );
+        assert!(parse_peer("").is_err());
+        assert!(parse_peer("proc:").is_err());
+        assert!(parse_peer("no-port-here").is_err());
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let base = Duration::from_millis(100);
+        assert_eq!(backoff_delay(1, base), Duration::from_millis(100));
+        assert_eq!(backoff_delay(2, base), Duration::from_millis(200));
+        assert_eq!(backoff_delay(3, base), Duration::from_millis(400));
+        // Deep attempts cap at 8 s rather than overflowing.
+        assert_eq!(backoff_delay(50, Duration::from_secs(1)), Duration::from_secs(8));
+    }
+
+    #[test]
+    fn remote_opts_defaults_are_sane() {
+        let o = RemoteOpts::default();
+        assert!(o.max_attempts >= 2, "one retry minimum for the re-dispatch contract");
+        assert!(
+            o.idle_timeout > ServeOpts::default().heartbeat * 4,
+            "idle timeout must clear several heartbeat periods"
+        );
+    }
+
+    /// A row whose backend no peer advertises must fail the sweep, not
+    /// deadlock the scheduler.
+    #[test]
+    fn unroutable_rows_fail_instead_of_deadlocking() {
+        let specs = vec![RunSpec::new("row", TrainConfig::default())];
+        let sched = Scheduler::new(&specs, 1);
+        sched.set_caps(0, vec!["definitely-not-native".into()]);
+        match sched.next(0) {
+            Grant::Unroutable(tasks) => {
+                assert_eq!(tasks.len(), 1);
+                assert_eq!(tasks[0].index, 0);
+            }
+            Grant::Run(_) => panic!("granted an unroutable row"),
+            Grant::Exit => panic!("exited without failing the row"),
+        }
+    }
+
+    /// The EWMA grant prefers the measured-faster peer; unmeasured
+    /// peers rank first so every peer gets probed.
+    #[test]
+    fn scheduler_prefers_low_ewma_peers() {
+        let specs = vec![
+            RunSpec::new("a", TrainConfig::default()),
+            RunSpec::new("b", TrainConfig::default()),
+        ];
+        let sched = Scheduler::new(&specs, 2);
+        sched.record_ewma(0, 50.0, 0.3);
+        sched.record_ewma(1, 5.0, 0.3);
+        {
+            let mut st = sched.state.lock().unwrap();
+            st.idle = vec![true, true];
+            assert_eq!(st.best_idle("native"), Some(1));
+            // An unmeasured peer outranks both measured ones.
+            st.ewma[0] = None;
+            assert_eq!(st.best_idle("native"), Some(0));
+            // A dead peer is never granted.
+            st.alive[0] = false;
+            assert_eq!(st.best_idle("native"), Some(1));
+        }
+        // EWMA blending: alpha-weighted toward the new sample.
+        sched.record_ewma(1, 15.0, 0.5);
+        assert_eq!(sched.state.lock().unwrap().ewma[1], Some(10.0));
+    }
+
+    /// Killing the last live peer drains the queue so the coordinator
+    /// can fail the undispatched rows instead of hanging.
+    #[test]
+    fn last_dead_peer_orphans_the_queue() {
+        let specs = vec![
+            RunSpec::new("a", TrainConfig::default()),
+            RunSpec::new("b", TrainConfig::default()),
+        ];
+        let sched = Scheduler::new(&specs, 2);
+        assert!(sched.mark_dead(0).is_empty(), "one peer still lives");
+        let orphans = sched.mark_dead(1);
+        assert_eq!(orphans.len(), 2);
+        assert!(matches!(sched.next(0), Grant::Exit));
+    }
+}

@@ -2,11 +2,14 @@
 //!
 //! A paper table is a list of [`RunSpec`]s; [`Sweep`] executes them
 //! across a pool of workers — in-process threads
-//! (`Sweep::new(specs).workers(n).run(&rt)?`) or `coap worker`
+//! (`Sweep::new(specs).workers(n).run(&rt)?`), `coap worker`
 //! subprocesses ([`ExecMode::Process`], one child per row over the
-//! [`coordinator::wire`](super::wire) event wire) — streaming every
-//! run's [`TrainEvent`](super::events::TrainEvent)s through one merged
-//! sink and returning [`TrainReport`]s **in spec order**.
+//! [`coordinator::wire`](super::wire) event wire), or remote
+//! `coap serve-worker` peers ([`ExecMode::Remote`], the fault-tolerant
+//! TCP scheduler in [`coordinator::remote`](super::remote)) —
+//! streaming every run's [`TrainEvent`](super::events::TrainEvent)s
+//! through one merged sink and returning [`TrainReport`]s **in spec
+//! order**.
 //!
 //! Determinism: each run owns its trainer, parameter store, optimizer
 //! state and RNG streams (all seeded from its own `TrainConfig::seed`),
@@ -18,6 +21,7 @@
 //! same guarantee `--threads` gives inside a single run.
 
 use super::events::{EventSink, NullSink};
+use super::remote;
 use super::trainer::{TrainReport, Trainer};
 use super::wire;
 use crate::config::TrainConfig;
@@ -45,7 +49,7 @@ impl RunSpec {
 /// How a [`Sweep`] executes its rows. Every mode returns bit-identical
 /// reports in spec order; the choice is an execution-layout decision,
 /// not a semantic one.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ExecMode {
     /// Rows on a pool of in-process scoped threads sharing the
     /// `Arc<dyn Backend>`. `workers == 1` is serial execution.
@@ -53,18 +57,26 @@ pub enum ExecMode {
     /// One `coap worker` subprocess per row, at most `max_procs` alive
     /// at once, each opening its own backend and streaming
     /// events/report back over the [`wire`](super::wire). The process
-    /// boundary is what later lets rows land on heterogeneous backends
-    /// or other machines.
+    /// boundary is what lets rows land on heterogeneous backends or
+    /// other machines.
     Process { max_procs: usize },
+    /// Rows dispatched across a pool of remote peers
+    /// ([`coordinator::remote`](super::remote)): `host:port` entries
+    /// are `coap serve-worker` TCP peers, `proc[:exe]` entries are
+    /// local subprocess workers driven through the same
+    /// latency-weighted scheduler. Dead/hung peers get their in-flight
+    /// row re-dispatched; reports stay bit-identical and spec-ordered.
+    Remote { peers: Vec<String> },
 }
 
 impl ExecMode {
-    /// Pool width: thread workers, or max concurrent subprocesses —
-    /// what the sharding policies count as "workers" in either mode.
+    /// Pool width: thread workers, max concurrent subprocesses, or
+    /// remote peers — what the sharding policies count as "workers".
     pub fn width(&self) -> usize {
         match self {
             ExecMode::Threads { workers } => *workers,
             ExecMode::Process { max_procs } => *max_procs,
+            ExecMode::Remote { peers } => peers.len().max(1),
         }
     }
 
@@ -73,6 +85,7 @@ impl ExecMode {
         match self {
             ExecMode::Threads { .. } => "threads",
             ExecMode::Process { .. } => "procs",
+            ExecMode::Remote { .. } => "remote",
         }
     }
 }
@@ -83,6 +96,7 @@ pub struct Sweep {
     mode: ExecMode,
     events: Arc<dyn EventSink>,
     worker_exe: Option<PathBuf>,
+    remote: remote::RemoteOpts,
 }
 
 impl Sweep {
@@ -92,6 +106,7 @@ impl Sweep {
             mode: ExecMode::Threads { workers: 1 },
             events: Arc::new(NullSink),
             worker_exe: None,
+            remote: remote::RemoteOpts::default(),
         }
     }
 
@@ -102,7 +117,15 @@ impl Sweep {
         self.mode = match mode {
             ExecMode::Threads { workers } => ExecMode::Threads { workers: workers.max(1) },
             ExecMode::Process { max_procs } => ExecMode::Process { max_procs: max_procs.max(1) },
+            ExecMode::Remote { peers } => ExecMode::Remote { peers },
         };
+        self
+    }
+
+    /// Retry/timeout/balancing knobs for [`ExecMode::Remote`] (ignored
+    /// by the other modes).
+    pub fn remote_opts(mut self, opts: remote::RemoteOpts) -> Sweep {
+        self.remote = opts;
         self
     }
 
@@ -147,9 +170,9 @@ impl Sweep {
         if self.specs.is_empty() {
             return Ok(Vec::new());
         }
-        match self.mode {
+        match &self.mode {
             ExecMode::Threads { workers } => {
-                let width = workers.min(self.specs.len());
+                let width = (*workers).min(self.specs.len());
                 run_pool(&self.specs, width, |i, spec| {
                     run_row(rt, spec, i, Arc::clone(&self.events))
                 })
@@ -159,11 +182,18 @@ impl Sweep {
                     Some(p) => p.clone(),
                     None => wire::default_worker_exe()?,
                 };
-                let width = max_procs.min(self.specs.len());
+                let width = (*max_procs).min(self.specs.len());
                 run_pool(&self.specs, width, |i, spec| {
                     wire::run_worker(&exe, spec, i, self.events.as_ref())
                 })
             }
+            ExecMode::Remote { peers } => remote::run_remote(
+                &self.specs,
+                peers,
+                self.events.as_ref(),
+                self.worker_exe.as_deref(),
+                &self.remote,
+            ),
         }
     }
 }
@@ -407,6 +437,13 @@ mod tests {
             probe(Sweep::new(Vec::new())),
             ExecMode::Threads { workers: 1 }
         );
+        // Remote pools are sized by their peer list; an empty list
+        // still reports width 1 (run_remote rejects it with a real
+        // error before any dispatch).
+        let remote = ExecMode::Remote { peers: vec!["127.0.0.1:7177".into(), "proc".into()] };
+        assert_eq!(remote.width(), 2);
+        assert_eq!(remote.label(), "remote");
+        assert_eq!(ExecMode::Remote { peers: Vec::new() }.width(), 1);
     }
 
     #[test]

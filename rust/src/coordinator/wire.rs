@@ -1,22 +1,30 @@
-//! `coordinator::wire` — the serialized event wire between a process
-//! sweep parent and its `coap worker` children.
+//! `coordinator::wire` — the serialized frame protocol between a sweep
+//! coordinator and its workers (`coap worker` subprocesses over
+//! stdin/stdout, or `coap serve-worker` peers over the TCP transport in
+//! [`coordinator::remote`](super::remote)).
 //!
 //! The format is **internal and unstable**: it exists so `coap sweep
-//! --procs N` can shard rows across subprocesses, not as a public API.
-//! Both ends must come from the same build; every frame carries
-//! [`WIRE_VERSION`] and a version mismatch is a decode error, never a
-//! guess.
+//! --procs N` / `--remote ADDR,...` can shard rows across workers, not
+//! as a public API. Both ends must come from the same build; every
+//! frame carries a version and a frame outside the accepted range
+//! (`1..=`[`WIRE_VERSION`]) is a decode error, never a guess. v2 added
+//! the `heartbeat`/`hello`/`shutdown` frames and the spec-frame
+//! `backend`/`precision` routing keys; v1 frames still decode.
 //!
 //! One frame per line, each a single JSON object (`util::json`; no
 //! serde offline):
 //!
 //! ```text
-//! parent -> child stdin:
-//!   {"v":1,"frame":"spec","spec":{"index":3,"label":"COAP","cfg":{...}}}
-//! child -> parent stdout (in order):
-//!   {"v":1,"frame":"event","event":{"type":"run_started",...}}   (0+)
-//!   {"v":1,"frame":"report","report":{...}}                       (1, last on success)
-//!   {"v":1,"frame":"error","error":"..."}                         (1, last on failure)
+//! coordinator -> worker:
+//!   {"v":2,"frame":"spec","spec":{"index":3,"label":"COAP",
+//!                                 "backend":"native","precision":"f32","cfg":{...}}}
+//!   {"v":2,"frame":"shutdown"}                                    (serve-worker only)
+//! worker -> coordinator (in order):
+//!   {"v":2,"frame":"hello","hello":{"proto":2,"peer":"...","backends":["native"]}}
+//!   {"v":2,"frame":"event","event":{"type":"run_started",...}}    (0+)
+//!   {"v":2,"frame":"heartbeat","heartbeat":{"seq":7}}             (0+, serve-worker)
+//!   {"v":2,"frame":"report","report":{...}}                       (1, last on success)
+//!   {"v":2,"frame":"error","error":"..."}                         (1, last on failure)
 //! ```
 //!
 //! Scalar encodings are exact: non-finite floats go through
@@ -24,8 +32,15 @@
 //! literals for them), u64 seeds through `util::json::u64_wire`
 //! (decimal strings — f64 holds integers exactly only to 2^53), and
 //! durations as `[secs, subsec_nanos]` integer pairs. That is what lets
-//! `tests/sweep_process_parity.rs` hold process sharding to the same
-//! **bit-identical** contract as thread sharding.
+//! `tests/sweep_process_parity.rs` and `tests/remote_sweep_parity.rs`
+//! hold process and remote sharding to the same **bit-identical**
+//! contract as thread sharding.
+//!
+//! Every decoder bounds its input: a line longer than
+//! [`MAX_FRAME_LEN`] is rejected before any payload parsing, and the
+//! stream readers ([`read_frame_line`] here, the length-delimited TCP
+//! codec in `remote`) stop buffering at that bound — a hostile or
+//! broken peer cannot OOM the coordinator.
 
 use super::events::{EventSink, TrainEvent};
 use super::metrics::EvalPoint;
@@ -38,14 +53,25 @@ use crate::util::json::{
 };
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::path::{Path, PathBuf};
 use std::process::{Command, Stdio};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Version stamped on (and required of) every frame.
-pub const WIRE_VERSION: u64 = 1;
+/// Version stamped on every emitted frame. Decoders accept the whole
+/// `1..=WIRE_VERSION` range (v2 only added frame kinds and optional
+/// spec keys), so a parent from this build still reads v1 streams; a
+/// frame from a *newer* build is a version-mismatch error.
+pub const WIRE_VERSION: u64 = 2;
+
+/// Hard ceiling on one frame line's byte length. Enforced before any
+/// payload allocation or JSON parsing: `decode_frame`/`decode_spec`
+/// reject longer lines by key, [`read_frame_line`] stops buffering at
+/// the bound, and the TCP codec checks its length prefix against this
+/// before allocating. 8 MiB fits any real report (curves for the
+/// longest quality runs are ~KBs) with orders of magnitude to spare.
+pub const MAX_FRAME_LEN: usize = 8 << 20;
 
 // ---------------------------------------------------------------------------
 // Field helpers (the strict wire_* accessors live in util::json, shared
@@ -194,6 +220,21 @@ pub fn event_to_json(ev: &TrainEvent) -> Json {
             ("step", Json::Num(*step as f64)),
             ("error", Json::Str(error.clone())),
         ]),
+        TrainEvent::RowDispatched { run, label, peer, attempt } => obj(vec![
+            ("type", Json::Str("row_dispatched".into())),
+            ("run", Json::Num(*run as f64)),
+            ("label", Json::Str(label.to_string())),
+            ("peer", Json::Str(peer.clone())),
+            ("attempt", Json::Num(*attempt as f64)),
+        ]),
+        TrainEvent::RowRequeued { run, label, peer, attempt, error } => obj(vec![
+            ("type", Json::Str("row_requeued".into())),
+            ("run", Json::Num(*run as f64)),
+            ("label", Json::Str(label.to_string())),
+            ("peer", Json::Str(peer.clone())),
+            ("attempt", Json::Num(*attempt as f64)),
+            ("error", Json::Str(error.clone())),
+        ]),
     }
 }
 
@@ -237,6 +278,19 @@ pub fn event_from_json(j: &Json) -> Result<TrainEvent> {
             run,
             label,
             step: uint(j, "step")?,
+            error: string(j, "error")?,
+        },
+        "row_dispatched" => TrainEvent::RowDispatched {
+            run,
+            label,
+            peer: string(j, "peer")?,
+            attempt: uint(j, "attempt")?,
+        },
+        "row_requeued" => TrainEvent::RowRequeued {
+            run,
+            label,
+            peer: string(j, "peer")?,
+            attempt: uint(j, "attempt")?,
             error: string(j, "error")?,
         },
         other => bail!("unknown event type '{other}'"),
@@ -301,11 +355,45 @@ pub fn report_from_json(j: &Json) -> Result<TrainReport> {
 // Frames
 // ---------------------------------------------------------------------------
 
-/// One child->parent frame.
+/// One worker->coordinator frame.
 pub enum Frame {
     Event(TrainEvent),
     Report(Box<TrainReport>),
     Error(String),
+    /// Liveness tick from a `serve-worker` peer (v2). Carries only a
+    /// sequence number; receivers treat any successfully-read frame as
+    /// proof of life, so the payload is diagnostic.
+    Heartbeat { seq: u64 },
+    /// Connection banner from a `serve-worker` peer (v2): its native
+    /// protocol version, a display name, and the backends it can open
+    /// (the scheduler routes rows by the spec's `backend` key).
+    Hello(WireHello),
+}
+
+/// Payload of a [`Frame::Hello`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireHello {
+    pub proto: u64,
+    pub peer: String,
+    pub backends: Vec<String>,
+}
+
+/// One coordinator->`serve-worker` frame.
+pub enum Request {
+    Spec(usize, RunSpec),
+    /// Graceful goodbye: the peer finishes nothing further on this
+    /// connection and closes it.
+    Shutdown,
+}
+
+/// The backends this build can open — what a `serve-worker` advertises
+/// in its hello frame.
+pub fn local_backends() -> Vec<String> {
+    let mut b = vec!["native".to_string()];
+    if cfg!(feature = "xla") {
+        b.push("xla".to_string());
+    }
+    b
 }
 
 fn frame_line(kind: &str, key: &str, payload: Json) -> String {
@@ -328,6 +416,36 @@ pub fn encode_error(msg: &str) -> String {
     frame_line("error", "error", Json::Str(msg.to_string()))
 }
 
+pub fn encode_heartbeat(seq: u64) -> String {
+    frame_line("heartbeat", "heartbeat", obj(vec![("seq", Json::Num(seq as f64))]))
+}
+
+pub fn encode_hello(hello: &WireHello) -> String {
+    frame_line(
+        "hello",
+        "hello",
+        obj(vec![
+            ("proto", Json::Num(hello.proto as f64)),
+            ("peer", Json::Str(hello.peer.clone())),
+            (
+                "backends",
+                Json::Arr(hello.backends.iter().map(|b| Json::Str(b.clone())).collect()),
+            ),
+        ]),
+    )
+}
+
+pub fn encode_shutdown() -> String {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(WIRE_VERSION as f64));
+    m.insert("frame".to_string(), Json::Str("shutdown".to_string()));
+    Json::Obj(m).to_string()
+}
+
+/// The spec frame carries the row's backend/precision as top-level
+/// routing keys beside the full `cfg`, so schedulers and heterogeneous
+/// pools can route without decoding a `TrainConfig` — and so a decoded
+/// spec can never silently disagree with its routing summary.
 pub fn encode_spec(index: usize, spec: &RunSpec) -> String {
     frame_line(
         "spec",
@@ -335,52 +453,148 @@ pub fn encode_spec(index: usize, spec: &RunSpec) -> String {
         obj(vec![
             ("index", Json::Num(index as f64)),
             ("label", Json::Str(spec.label.clone())),
+            ("backend", Json::Str(spec.cfg.backend.label().to_string())),
+            ("precision", Json::Str(spec.cfg.state_precision.label().to_string())),
             ("cfg", spec.cfg.to_json()),
         ]),
     )
 }
 
-/// Parse the envelope: version check first, then the frame kind.
+/// Parse the envelope: length bound first (before any payload parsing
+/// allocates), then the version, then the frame kind.
 fn open_frame(line: &str) -> Result<(String, Json)> {
+    if line.len() > MAX_FRAME_LEN {
+        bail!(
+            "refusing wire frame of {} bytes (MAX_FRAME_LEN is {MAX_FRAME_LEN})",
+            line.len()
+        );
+    }
     let j = Json::parse(line).map_err(|e| anyhow!("{e}"))?;
     let v = field(&j, "v")?
         .as_f64()
         .context("wire key 'v' must be a number")?;
-    if v != WIRE_VERSION as f64 {
-        bail!("wire version mismatch: frame is v{v}, this build speaks v{WIRE_VERSION}");
+    if v.fract() != 0.0 || v < 1.0 || v > WIRE_VERSION as f64 {
+        bail!(
+            "wire version mismatch: frame is v{v}, this build speaks v1..v{WIRE_VERSION} \
+             (both ends of the wire must come from compatible builds)"
+        );
     }
     let kind = string(&j, "frame")?;
     Ok((kind, j))
 }
 
-/// Decode one child->parent line. Schema-checked: any missing key,
-/// wrong type, unknown tag or version mismatch is an `Err` (and the
-/// parent maps it into the failing row's error) — never a panic, the
-/// bytes crossed a process boundary.
+/// Decode one worker->coordinator line. Schema-checked: any missing
+/// key, wrong type, unknown tag, over-length line or version mismatch
+/// is an `Err` (and the coordinator maps it into the failing row's
+/// error) — never a panic, the bytes crossed a process boundary.
 pub fn decode_frame(line: &str) -> Result<Frame> {
     let (kind, j) = open_frame(line)?;
     Ok(match kind.as_str() {
         "event" => Frame::Event(event_from_json(field(&j, "event")?)?),
         "report" => Frame::Report(Box::new(report_from_json(field(&j, "report")?)?)),
         "error" => Frame::Error(string(&j, "error")?),
+        "heartbeat" => Frame::Heartbeat { seq: uint(field(&j, "heartbeat")?, "seq")? as u64 },
+        "hello" => Frame::Hello(hello_from_json(field(&j, "hello")?)?),
         other => bail!("unknown frame kind '{other}'"),
     })
 }
 
-/// Decode the parent->child spec frame.
+fn hello_from_json(p: &Json) -> Result<WireHello> {
+    let backends = field(p, "backends")?
+        .as_arr()
+        .context("wire key 'backends' must be an array")?
+        .iter()
+        .map(|b| match b {
+            Json::Str(s) => Ok(s.clone()),
+            other => bail!("wire key 'backends' entries must be strings, got {other:?}"),
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(WireHello {
+        proto: uint(p, "proto")? as u64,
+        peer: string(p, "peer")?,
+        backends,
+    })
+}
+
+fn spec_from_frame(j: &Json) -> Result<(usize, RunSpec)> {
+    let p = field(j, "spec")?;
+    let spec = RunSpec {
+        label: string(p, "label")?,
+        cfg: TrainConfig::from_json(field(p, "cfg")?)?,
+    };
+    // The routing keys are optional (v1 frames predate them) but may
+    // never disagree with the cfg they summarize.
+    if let Some(Json::Str(b)) = p.get("backend") {
+        if b != spec.cfg.backend.label() {
+            bail!(
+                "spec routing key 'backend' ({b}) disagrees with cfg.backend ({})",
+                spec.cfg.backend.label()
+            );
+        }
+    }
+    if let Some(Json::Str(pr)) = p.get("precision") {
+        if pr != spec.cfg.state_precision.label() {
+            bail!(
+                "spec routing key 'precision' ({pr}) disagrees with cfg precision ({})",
+                spec.cfg.state_precision.label()
+            );
+        }
+    }
+    Ok((uint(p, "index")?, spec))
+}
+
+/// Decode the coordinator->worker spec frame.
 pub fn decode_spec(line: &str) -> Result<(usize, RunSpec)> {
     let (kind, j) = open_frame(line)?;
     if kind != "spec" {
         bail!("expected a spec frame, got '{kind}'");
     }
-    let p = field(&j, "spec")?;
-    Ok((
-        uint(p, "index")?,
-        RunSpec {
-            label: string(p, "label")?,
-            cfg: TrainConfig::from_json(field(p, "cfg")?)?,
-        },
-    ))
+    spec_from_frame(&j)
+}
+
+/// Decode one coordinator->`serve-worker` line (spec or shutdown).
+pub fn decode_request(line: &str) -> Result<Request> {
+    let (kind, j) = open_frame(line)?;
+    match kind.as_str() {
+        "spec" => {
+            let (index, spec) = spec_from_frame(&j)?;
+            Ok(Request::Spec(index, spec))
+        }
+        "shutdown" => Ok(Request::Shutdown),
+        other => bail!("expected a spec or shutdown frame, got '{other}'"),
+    }
+}
+
+/// Read one newline-terminated frame line from a buffered stream,
+/// refusing to buffer more than [`MAX_FRAME_LEN`] bytes — the bounded
+/// replacement for `BufRead::lines()` on bytes that crossed a process
+/// boundary. `Ok(None)` is clean end-of-stream; a final line without a
+/// trailing newline is returned as-is (the decoder owns diagnosing the
+/// truncation, matching the old `lines()` behaviour).
+pub fn read_frame_line<R: BufRead>(r: &mut R) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = r
+        .take(MAX_FRAME_LEN as u64 + 2)
+        .read_until(b'\n', &mut buf)
+        .context("reading frame line")?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+    }
+    if buf.len() > MAX_FRAME_LEN {
+        bail!(
+            "refusing frame line over {MAX_FRAME_LEN} bytes (got {}+ without a newline)",
+            buf.len()
+        );
+    }
+    String::from_utf8(buf)
+        .map(Some)
+        .map_err(|e| anyhow!("frame line is not UTF-8: {e}"))
 }
 
 // ---------------------------------------------------------------------------
@@ -398,37 +612,58 @@ impl EventSink for StdoutWireSink {
     }
 }
 
-/// The hidden `coap worker` subcommand: read one spec frame from stdin,
-/// run it through the ordinary [`Trainer`], stream events + the final
-/// report (or an error frame) back over stdout. Exit status is nonzero
-/// on any failure, so a parent that lost the stream still sees it.
-pub fn worker_main() -> Result<()> {
-    let mut line = String::new();
-    std::io::stdin()
-        .read_line(&mut line)
-        .context("reading the spec frame from stdin")?;
-    let (index, spec) = decode_spec(line.trim_end()).context(
-        "decoding the spec frame (the `coap worker` wire is internal; \
-         drive it through `coap sweep --procs N`)",
-    )?;
+/// The one-row loop every worker flavour shares (`coap worker` over
+/// stdin/stdout, `coap serve-worker` over a TCP connection): build the
+/// trainer from the spec, stream every [`TrainEvent`] through `emit` as
+/// an encoded frame line, then emit the final report frame — or an
+/// error frame, in which case the `Err` is also returned so process
+/// workers can exit nonzero.
+pub fn run_spec_row(
+    index: usize,
+    spec: RunSpec,
+    emit: Arc<dyn Fn(&str) + Send + Sync>,
+) -> Result<()> {
+    struct EmitSink(Arc<dyn Fn(&str) + Send + Sync>);
+    impl EventSink for EmitSink {
+        fn event(&self, ev: &TrainEvent) {
+            (self.0)(&encode_event(ev));
+        }
+    }
     let run = || -> Result<TrainReport> {
         let mut tr = Trainer::builder(spec.cfg)
             .label(&spec.label)
             .run_index(index)
-            .events(Arc::new(StdoutWireSink))
+            .events(Arc::new(EmitSink(Arc::clone(&emit))))
             .build()?;
         tr.run()
     };
     match run() {
         Ok(rep) => {
-            println!("{}", encode_report(&rep));
+            emit(&encode_report(&rep));
             Ok(())
         }
         Err(e) => {
-            println!("{}", encode_error(&format!("{e:#}")));
+            emit(&encode_error(&format!("{e:#}")));
             Err(e)
         }
     }
+}
+
+/// The hidden `coap worker` subcommand: read one spec frame from stdin
+/// (length-bounded), run it through [`run_spec_row`], stream events +
+/// the final report (or an error frame) back over stdout. Exit status
+/// is nonzero on any failure, so a parent that lost the stream still
+/// sees it.
+pub fn worker_main() -> Result<()> {
+    let stdin = std::io::stdin();
+    let line = read_frame_line(&mut stdin.lock())
+        .context("reading the spec frame from stdin")?
+        .context("stdin closed before a spec frame arrived")?;
+    let (index, spec) = decode_spec(&line).context(
+        "decoding the spec frame (the `coap worker` wire is internal; \
+         drive it through `coap sweep --procs N`)",
+    )?;
+    run_spec_row(index, spec, Arc::new(|line: &str| println!("{line}")))
 }
 
 // ---------------------------------------------------------------------------
@@ -493,13 +728,17 @@ pub fn run_worker(
         .take()
         .map(|mut si| writeln!(si, "{spec_line}"));
     let stdout = child.stdout.take().context("worker stdout not captured")?;
+    let mut reader = BufReader::new(stdout);
     let mut report: Option<TrainReport> = None;
     let mut failure: Option<anyhow::Error> = None;
-    for line in BufReader::new(stdout).lines() {
-        let line = match line {
-            Ok(l) => l,
+    loop {
+        // Bounded read: a worker that streams an endless or giant line
+        // is a failed row, not an OOM.
+        let line = match read_frame_line(&mut reader) {
+            Ok(Some(l)) => l,
+            Ok(None) => break,
             Err(e) => {
-                failure = Some(anyhow!("reading worker stream: {e}"));
+                failure = Some(anyhow!("reading worker stream: {e:#}"));
                 break;
             }
         };
@@ -509,6 +748,9 @@ pub fn run_worker(
         match decode_frame(&line) {
             Ok(Frame::Event(ev)) => sink.event(&ev),
             Ok(Frame::Report(r)) => report = Some(*r),
+            // Liveness/banner frames are transport concerns; the
+            // subprocess path has no timeouts to feed them to.
+            Ok(Frame::Heartbeat { .. }) | Ok(Frame::Hello(_)) => {}
             Ok(Frame::Error(msg)) => {
                 failure = Some(anyhow!("worker failed: {msg}"));
                 break;
@@ -607,6 +849,19 @@ mod tests {
                 step: 1,
                 error: "boom: at step 1".into(),
             },
+            TrainEvent::RowDispatched {
+                run: 4,
+                label: "f".into(),
+                peer: "127.0.0.1:7177".into(),
+                attempt: 1,
+            },
+            TrainEvent::RowRequeued {
+                run: 4,
+                label: "f".into(),
+                peer: "127.0.0.1:7177".into(),
+                attempt: 2,
+                error: "peer went silent".into(),
+            },
         ];
         for ev in &evs {
             let line = encode_event(ev);
@@ -654,10 +909,17 @@ mod tests {
     #[test]
     fn version_mismatch_and_malformed_frames_are_rejected() {
         let good = encode_event(&ev_step(0));
-        // Version bumped: rejected with a version message.
-        let bumped = good.replacen("\"v\":1", "\"v\":2", 1);
+        assert!(good.contains("\"v\":2"), "{good}");
+        // A frame from a newer build: rejected with a version message.
+        let bumped = good.replacen("\"v\":2", "\"v\":3", 1);
         let err = decode_frame(&bumped).unwrap_err();
         assert!(format!("{err:#}").contains("version mismatch"), "{err:#}");
+        // Pre-heartbeat v1 frames still decode (old frames stay valid).
+        let v1 = good.replacen("\"v\":2", "\"v\":1", 1);
+        assert!(matches!(decode_frame(&v1), Ok(Frame::Event(_))), "{v1}");
+        // ...but v0 and fractional versions never existed.
+        assert!(decode_frame(&good.replacen("\"v\":2", "\"v\":0", 1)).is_err());
+        assert!(decode_frame(&good.replacen("\"v\":2", "\"v\":1.5", 1)).is_err());
         // Unknown kind / missing envelope keys / not JSON / truncation.
         assert!(decode_frame(&good.replacen("\"frame\":\"event\"", "\"frame\":\"evnt\"", 1))
             .is_err());
@@ -666,9 +928,116 @@ mod tests {
         for cut in 0..good.len() {
             assert!(decode_frame(&good[..cut]).is_err(), "cut at {cut} decoded");
         }
-        // A spec frame is not a child->parent frame.
+        // A spec frame is not a worker->coordinator frame.
         let spec = encode_spec(0, &RunSpec::new("r", TrainConfig::default()));
         assert!(decode_frame(&spec).is_err());
         assert!(decode_spec(&good).is_err());
+    }
+
+    #[test]
+    fn heartbeat_and_hello_frames_roundtrip() {
+        match decode_frame(&encode_heartbeat(41)).unwrap() {
+            Frame::Heartbeat { seq } => assert_eq!(seq, 41),
+            _ => panic!("not a heartbeat frame"),
+        }
+        let hello = WireHello {
+            proto: WIRE_VERSION,
+            peer: "worker-a".into(),
+            backends: local_backends(),
+        };
+        match decode_frame(&encode_hello(&hello)).unwrap() {
+            Frame::Hello(back) => assert_eq!(back, hello),
+            _ => panic!("not a hello frame"),
+        }
+        assert!(local_backends().contains(&"native".to_string()));
+    }
+
+    #[test]
+    fn request_decoding_covers_spec_and_shutdown() {
+        let spec = RunSpec::new("row", TrainConfig::default());
+        match decode_request(&encode_spec(5, &spec)).unwrap() {
+            Request::Spec(index, back) => {
+                assert_eq!(index, 5);
+                assert_eq!(back.label, "row");
+            }
+            _ => panic!("not a spec request"),
+        }
+        assert!(matches!(decode_request(&encode_shutdown()), Ok(Request::Shutdown)));
+        // A worker->coordinator frame is not a request.
+        assert!(decode_request(&encode_heartbeat(0)).is_err());
+    }
+
+    /// The spec routing keys (v2) are optional — v1 frames lack them —
+    /// but may never contradict the cfg they summarize.
+    #[test]
+    fn spec_routing_keys_are_optional_but_checked() {
+        let spec = RunSpec::new("row", TrainConfig::default());
+        let line = encode_spec(1, &spec);
+        assert!(line.contains("\"backend\":\"native\""), "{line}");
+        assert!(line.contains("\"precision\":\"f32\""), "{line}");
+        // Without them (the v1 shape), the spec still decodes.
+        let v1 = line
+            .replacen("\"backend\":\"native\",", "", 1)
+            .replacen("\"precision\":\"f32\",", "", 1);
+        assert!(decode_spec(&v1).is_ok(), "{v1}");
+        // A summary that disagrees with the cfg is a decode error.
+        let skewed = line.replacen("\"precision\":\"f32\"", "\"precision\":\"int8\"", 1);
+        let err = decode_spec(&skewed).unwrap_err();
+        assert!(format!("{err:#}").contains("precision"), "{err:#}");
+    }
+
+    /// Satellite: unbounded input. Over-length lines are rejected by
+    /// the envelope check before payload parsing, and the bounded line
+    /// reader refuses to buffer past the cap.
+    #[test]
+    fn oversized_frames_are_rejected_without_buffering() {
+        let huge = format!(
+            "{{\"v\":2,\"frame\":\"error\",\"error\":\"{}\"}}",
+            "x".repeat(MAX_FRAME_LEN)
+        );
+        let err = decode_frame(&huge).unwrap_err();
+        assert!(format!("{err:#}").contains("MAX_FRAME_LEN"), "{err:#}");
+        assert!(decode_spec(&huge).is_err());
+        assert!(decode_request(&huge).is_err());
+
+        // Bounded reader: a giant line errors, what follows is unread.
+        let mut stream = std::io::Cursor::new({
+            let mut bytes = vec![b'y'; MAX_FRAME_LEN + 1];
+            bytes.extend_from_slice(b"\nnext\n");
+            bytes
+        });
+        assert!(read_frame_line(&mut stream).is_err());
+        // Normal traffic: lines come back newline-stripped, then EOF.
+        let mut ok = std::io::Cursor::new(b"one\r\ntwo\n".to_vec());
+        assert_eq!(read_frame_line(&mut ok).unwrap().as_deref(), Some("one"));
+        assert_eq!(read_frame_line(&mut ok).unwrap().as_deref(), Some("two"));
+        assert_eq!(read_frame_line(&mut ok).unwrap(), None);
+        // A line of exactly MAX_FRAME_LEN bytes is still legal.
+        let mut edge = std::io::Cursor::new({
+            let mut bytes = vec![b'z'; MAX_FRAME_LEN];
+            bytes.push(b'\n');
+            bytes
+        });
+        assert_eq!(read_frame_line(&mut edge).unwrap().map(|l| l.len()), Some(MAX_FRAME_LEN));
+    }
+
+    /// Mid-frame truncation (a peer that died while writing) must be a
+    /// decode error for every frame kind, not a panic or a guess.
+    #[test]
+    fn truncated_new_frame_kinds_are_rejected() {
+        for line in [
+            encode_heartbeat(3),
+            encode_hello(&WireHello {
+                proto: WIRE_VERSION,
+                peer: "p".into(),
+                backends: local_backends(),
+            }),
+            encode_shutdown(),
+        ] {
+            for cut in 0..line.len() {
+                assert!(decode_frame(&line[..cut]).is_err(), "cut at {cut}: {line}");
+                assert!(decode_request(&line[..cut]).is_err(), "cut at {cut}: {line}");
+            }
+        }
     }
 }

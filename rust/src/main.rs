@@ -1,13 +1,16 @@
 //! `coap` — the training-coordinator CLI (L3 leader entrypoint).
 //!
 //! Subcommands:
-//!   train       run one training job per config/CLI flags
-//!   sweep       run a named paper table/figure sharded across workers
-//!               (thread workers via --workers, subprocesses via --procs)
-//!   info        summarize the backend's model census
-//!   experiments list the paper tables/figures and how to regenerate them
-//!   worker      (hidden, internal) one sweep row over the stdin/stdout
-//!               wire — spawned by `sweep --procs`, not for direct use
+//!   train        run one training job per config/CLI flags
+//!   sweep        run a named paper table/figure sharded across workers
+//!                (threads via --workers, subprocesses via --procs,
+//!                remote peers via --remote HOST:PORT,...)
+//!   serve-worker accept sweep rows over TCP (`--listen ADDR`) — the
+//!                peer end of `sweep --remote`
+//!   info         summarize the backend's model census
+//!   experiments  list the paper tables/figures and how to regenerate them
+//!   worker       (hidden, internal) one sweep row over the stdin/stdout
+//!                wire — spawned by `sweep --procs`, not for direct use
 //!
 //! Examples:
 //!   coap train --model lm_small --optimizer coap --steps 300 --lr 2e-3
@@ -15,19 +18,23 @@
 //!        --rank-ratio 8 --precision int8 --steps 200
 //!   coap sweep table1 --workers 2 --json out.jsonl
 //!   coap sweep table1 --procs 2
+//!   coap serve-worker --listen 0.0.0.0:7177
+//!   coap sweep table1 --remote 10.0.0.5:7177,10.0.0.6:7177
 //!   coap train --backend xla --model lm_tiny   # needs --features xla
 //!   coap info
 
-use anyhow::Result;
-use coap::benchlib;
+use anyhow::{Context, Result};
+use coap::benchlib::{self, ExecMode};
 use coap::config::TrainConfig;
 use coap::coordinator::sweep::{print_report_table, report_jsonl_fields};
-use coap::coordinator::{memory, Trainer};
+use coap::coordinator::{memory, remote, CollectSink, EventSink, TrainEvent, Trainer};
 use coap::runtime::open_backend;
 use coap::util::bench::{append_json, jsonl_line};
 use coap::util::cli::Args;
+use std::collections::BTreeMap;
 use std::io::Write;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn main() {
     if let Err(e) = run() {
@@ -45,6 +52,7 @@ fn run() -> Result<()> {
         // Hidden: one sweep row over the coordinator::wire stdin/stdout
         // protocol. Spawned by `coap sweep --procs N`; internal/unstable.
         "worker" => coap::coordinator::wire::worker_main(),
+        "serve-worker" => serve_worker_cmd(&args),
         "info" => info(&args),
         "experiments" => experiments(&args),
         _ => {
@@ -111,18 +119,40 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `coap sweep <name> [--workers N | --procs N] [--steps N]
-/// [--json out.jsonl]` — run one named paper table/figure sharded
-/// across a worker pool (in-process threads, or `coap worker`
-/// subprocesses with `--procs`; reports are bit-identical either way),
-/// print the paper-style report table, append the sweep wall-clock +
-/// per-row step-time to the bench-JSON trajectory, and optionally write
-/// the full per-row reports as JSONL.
+/// `coap serve-worker --listen ADDR [--heartbeat-ms N]` — the peer end
+/// of `coap sweep --remote`: accept spec frames over TCP, run each row
+/// through the shared worker row loop, stream events/report frames
+/// back with periodic heartbeats. Runs until killed. `--die-mid-row N`
+/// is a test hook (exit hard after the first frame of the Nth row) for
+/// the re-dispatch parity tests.
+fn serve_worker_cmd(args: &Args) -> Result<()> {
+    let listen = args
+        .get("listen")
+        .context("serve-worker needs --listen ADDR (e.g. --listen 0.0.0.0:7177)")?;
+    let opts = remote::ServeOpts {
+        heartbeat: Duration::from_millis(args.u64_or("heartbeat-ms", 250)),
+        die_mid_row: args
+            .get("die-mid-row")
+            .map(|n| n.parse().context("--die-mid-row must be a row number"))
+            .transpose()?,
+    };
+    remote::serve_worker(listen, opts)
+}
+
+/// `coap sweep <name> [--workers N | --procs N | --remote PEERS]
+/// [--steps N] [--json out.jsonl]` — run one named paper table/figure
+/// sharded across a worker pool (in-process threads, `coap worker`
+/// subprocesses with `--procs`, or remote `serve-worker` peers with
+/// `--remote`; reports are bit-identical in every mode), print the
+/// paper-style report table, append the sweep wall-clock + per-row
+/// step-time (+ per-peer dispatch rows when remote) to the bench-JSON
+/// trajectory, and optionally write the full per-row reports as JSONL.
 fn sweep(args: &Args) -> Result<()> {
     let name = args.positional.get(1).map(|s| s.as_str());
     if args.has("help") || name == Some("help") || name.is_none() {
         eprintln!(
-            "usage: coap sweep <name> [--workers N | --procs N] [--steps N] [--json out.jsonl]"
+            "usage: coap sweep <name> [--workers N | --procs N | --remote PEERS] \
+             [--steps N] [--json out.jsonl]"
         );
         eprintln!("names: {}", benchlib::SWEEP_NAMES.join(" "));
         if name.is_none() && !args.has("help") {
@@ -136,6 +166,7 @@ fn sweep(args: &Args) -> Result<()> {
     const SWEEP_KEYS: &[&str] = &[
         "workers",
         "procs",
+        "remote",
         "steps",
         "json",
         "threads",
@@ -176,9 +207,30 @@ fn sweep(args: &Args) -> Result<()> {
         pool,
         env.rt.label()
     );
+    // Remote sweeps record their dispatch events (RowDispatched /
+    // RowRequeued) so the trajectory can attribute each row to the peer
+    // that actually ran it, and count re-dispatch attempts.
+    let collect = match env.mode {
+        ExecMode::Remote { .. } => Some(Arc::new(CollectSink::default())),
+        _ => None,
+    };
+    let extra: Option<Arc<dyn EventSink>> = match &collect {
+        Some(c) => Some(c.clone()),
+        None => None,
+    };
     let t0 = Instant::now();
-    let reports = env.run(named.specs)?;
+    let reports = env.run_with(named.specs, extra)?;
     let sweep_wall = t0.elapsed();
+    // run -> (peer, attempts): the last RowDispatched for a spec index
+    // is the attempt that concluded the row.
+    let mut dispatch: BTreeMap<usize, (String, usize)> = BTreeMap::new();
+    if let Some(c) = &collect {
+        for ev in c.snapshot() {
+            if let TrainEvent::RowDispatched { run, peer, attempt, .. } = ev {
+                dispatch.insert(run, (peer, attempt));
+            }
+        }
+    }
     print_report_table(&named.title, named.model, named.control, &reports);
     println!(
         "\nsweep wall-clock {:.1}s over {} rows ({})",
@@ -188,8 +240,9 @@ fn sweep(args: &Args) -> Result<()> {
     );
     // Bench-JSON trajectory (target/bench-json/sweep.jsonl): one record
     // per row, stamped with the sweep-level wall-clock so successive
-    // runs track the sharding win next to the per-row step times.
-    for rep in &reports {
+    // runs track the sharding win next to the per-row step times. Remote
+    // rows also carry the peer that ran them and the attempt count.
+    for (i, rep) in reports.iter().enumerate() {
         let mut fields: Vec<(&str, String)> = vec![
             ("sweep", named.name.clone()),
             ("workers", env.width().to_string()),
@@ -197,7 +250,36 @@ fn sweep(args: &Args) -> Result<()> {
             ("sweep_wall_s", format!("{}", sweep_wall.as_secs_f64())),
         ];
         fields.extend(report_jsonl_fields(rep));
+        if let Some((peer, attempts)) = dispatch.get(&i) {
+            fields.push(("peer", peer.clone()));
+            fields.push(("dispatch_attempts", attempts.to_string()));
+        }
         append_json("sweep", &fields);
+    }
+    // Per-peer aggregate rows (remote only): how the pool's rows and
+    // step times distributed across peers — the load-balancer's ledger.
+    let mut per_peer: BTreeMap<&str, (usize, f64, usize)> = BTreeMap::new();
+    for (i, rep) in reports.iter().enumerate() {
+        if let Some((peer, attempts)) = dispatch.get(&i) {
+            let e = per_peer.entry(peer.as_str()).or_insert((0, 0.0, 0));
+            e.0 += 1;
+            e.1 += rep.wall.as_secs_f64() * 1e3 / rep.steps.max(1) as f64;
+            e.2 += attempts;
+        }
+    }
+    for (peer, (rows, ms_sum, attempts)) in &per_peer {
+        append_json(
+            "sweep",
+            &[
+                ("record", "peer".to_string()),
+                ("sweep", named.name.clone()),
+                ("peer", peer.to_string()),
+                ("rows", rows.to_string()),
+                ("mean_step_ms", format!("{}", ms_sum / (*rows).max(1) as f64)),
+                ("dispatch_attempts", attempts.to_string()),
+            ],
+        );
+        eprintln!("peer {peer}: {rows} rows, mean {:.1} ms/step", ms_sum / (*rows).max(1) as f64);
     }
     if let Some(path) = args.get("json") {
         if let Some(parent) = std::path::Path::new(path).parent() {
@@ -208,8 +290,13 @@ fn sweep(args: &Args) -> Result<()> {
         let mut f = std::fs::File::create(path)
             .map(std::io::BufWriter::new)
             .map_err(|e| anyhow::anyhow!("creating {path}: {e}"))?;
-        for rep in &reports {
-            writeln!(f, "{}", jsonl_line(&report_jsonl_fields(rep)))?;
+        for (i, rep) in reports.iter().enumerate() {
+            let mut fields = report_jsonl_fields(rep);
+            if let Some((peer, attempts)) = dispatch.get(&i) {
+                fields.push(("peer", peer.clone()));
+                fields.push(("dispatch_attempts", attempts.to_string()));
+            }
+            writeln!(f, "{}", jsonl_line(&fields))?;
         }
         f.flush()?;
         eprintln!("wrote {} report rows to {path}", reports.len());
@@ -258,7 +345,7 @@ fn print_help() {
     println!(
         "coap — COAP (correlation-aware gradient projection) training coordinator
 
-USAGE: coap <train|sweep|info|experiments> [--flags]
+USAGE: coap <train|sweep|serve-worker|info|experiments> [--flags]
 
 train flags (also JSON-settable via --config file.json):
   --backend B             native (default, hermetic pure-Rust) | xla
@@ -298,12 +385,24 @@ sweep — run a paper table/figure as a sharded multi-run session:
                           own process + backend; reports bit-identical to
                           serial and to --workers; same --threads 1 row
                           default; mutually exclusive with --workers)
+  --remote PEERS          shard rows across remote `coap serve-worker`
+                          peers (comma list of HOST:PORT, plus proc[:exe]
+                          for local subprocess peers); latency-weighted
+                          dispatch, dead/hung peers re-dispatched with
+                          bounded retries; reports still bit-identical;
+                          mutually exclusive with --workers/--procs
   --steps N               steps per row (default: the bench default,
                           env-overridable via COAP_BENCH_STEPS)
   --json out.jsonl        write one schema-checked JSONL record per row
-  (the sweep also appends wall-clock + per-row step-time records to
-   target/bench-json/sweep.jsonl; see util::bench::append_json. the
-   worker wire is internal/unstable — see rust/README.md)
+  (the sweep also appends wall-clock + per-row step-time records — and
+   per-peer dispatch rows when remote — to target/bench-json/sweep.jsonl;
+   see util::bench::append_json. the worker wire is internal/unstable —
+   see rust/README.md)
+
+serve-worker — accept sweep rows over TCP (the --remote peer end):
+  coap serve-worker --listen 0.0.0.0:7177 [--heartbeat-ms 250]
+  (binds, prints 'listening <addr>' on stdout, serves rows until killed;
+   wire-version-skewed coordinators are refused at the hello handshake)
 
 see also: examples/ (quality drivers) and `cargo bench` (paper tables).",
         names = benchlib::SWEEP_NAMES.join("|")

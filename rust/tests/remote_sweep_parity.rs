@@ -1,0 +1,420 @@
+//! Acceptance suite for remote sweep dispatch (`coordinator::remote`):
+//! a sweep fanned out over loopback `coap serve-worker` peers must
+//! return `TrainReport` rows **bit-identical** to serial execution, in
+//! spec order, with identical per-run event sequences — including when
+//! a peer is killed mid-row and its in-flight row is re-dispatched to a
+//! healthy peer. Plus the refusal surface: version-skewed peers are
+//! rejected at the hello, hung peers time out and lose the row to a
+//! healthy peer, row-level errors keep first-error-by-spec-index
+//! semantics and are never retried, and rows whose backend no peer
+//! advertises fail cleanly instead of deadlocking.
+//!
+//! The peers are the real `coap` CLI (CARGO_BIN_EXE_coap) speaking the
+//! real TCP framing, so this suite pins `coap serve-worker` end to end.
+
+use coap::config::{BackendKind, OptKind, TrainConfig};
+use coap::coordinator::remote::{self, RemoteOpts};
+use coap::coordinator::wire::{self, WireHello};
+use coap::coordinator::{CollectSink, ExecMode, RunSpec, Sweep, TrainEvent, TrainReport};
+use coap::runtime::{Backend, NativeBackend};
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The `coap` binary cargo built for this test run.
+const WORKER_EXE: &str = env!("CARGO_BIN_EXE_coap");
+
+fn backend() -> Arc<dyn Backend> {
+    Arc::new(NativeBackend::new())
+}
+
+fn mk(label: &str, model: &str, opt: OptKind, steps: usize) -> RunSpec {
+    let mut c = TrainConfig::default();
+    c.model = model.into();
+    c.optimizer = opt;
+    c.steps = steps;
+    c.lr = 3e-3;
+    c.t_update = 3;
+    c.lambda = 2;
+    c.eval_every = steps;
+    c.eval_batches = 1;
+    c.log_every = 0;
+    c.track_ceu = true;
+    RunSpec::new(label, c)
+}
+
+/// Four micro rows spanning matrix, vector and conv slots — enough for
+/// both peers to see work and for a killed peer to leave rows behind.
+fn micro_specs(steps: usize) -> Vec<RunSpec> {
+    vec![
+        mk("coap/lm", "lm_micro", OptKind::Coap, steps),
+        mk("adamw/lm", "lm_micro", OptKind::AdamW, steps),
+        mk("galore/vit", "vit_micro", OptKind::Galore, steps),
+        mk("flora/cnn", "cnn_micro", OptKind::Flora, steps),
+    ]
+}
+
+/// Everything deterministic in a report, with floats as raw bits
+/// (wall-clock fields excluded — they are measured, not computed).
+type RowKey = (String, Vec<(usize, u64)>, Vec<(usize, u64)>, Vec<u64>, usize, usize);
+
+fn row_key(r: &TrainReport) -> RowKey {
+    (
+        r.label.clone(),
+        r.train_losses.iter().map(|(s, l)| (*s, l.to_bits())).collect(),
+        r.ceu_curve.iter().map(|(s, c)| (*s, c.to_bits())).collect(),
+        r.evals.iter().map(|e| e.loss.to_bits()).collect(),
+        r.optimizer_bytes,
+        r.param_bytes,
+    )
+}
+
+/// Everything deterministic in an event (timing fields excluded).
+fn event_key(ev: &TrainEvent) -> String {
+    match ev {
+        TrainEvent::RunStarted { run, label, model, steps } => {
+            format!("started {run} '{label}' {model} {steps}")
+        }
+        TrainEvent::Step { run, label, step, loss, ema, .. } => {
+            format!("step {run} '{label}' {step} {:x} {:x}", loss.to_bits(), ema.to_bits())
+        }
+        TrainEvent::ProjRefresh { run, label, step, .. } => {
+            format!("proj {run} '{label}' {step}")
+        }
+        TrainEvent::Eval { run, label, eval } => {
+            format!("eval {run} '{label}' {} {:x}", eval.step, eval.loss.to_bits())
+        }
+        TrainEvent::RunFinished { run, label, steps, final_train_loss, .. } => {
+            format!("finished {run} '{label}' {steps} {:x}", final_train_loss.to_bits())
+        }
+        TrainEvent::RunFailed { run, label, step, .. } => {
+            format!("failed {run} '{label}' {step}")
+        }
+        TrainEvent::RowDispatched { run, label, peer, attempt } => {
+            format!("dispatched {run} '{label}' {peer} {attempt}")
+        }
+        TrainEvent::RowRequeued { run, label, peer, attempt, .. } => {
+            format!("requeued {run} '{label}' {peer} {attempt}")
+        }
+    }
+}
+
+fn is_dispatch(ev: &TrainEvent) -> bool {
+    matches!(ev, TrainEvent::RowDispatched { .. } | TrainEvent::RowRequeued { .. })
+}
+
+/// Retry knobs tuned so fault-injection tests run in seconds.
+fn fast_opts() -> RemoteOpts {
+    RemoteOpts {
+        backoff_base: Duration::from_millis(20),
+        connect_timeout: Duration::from_secs(2),
+        ..RemoteOpts::default()
+    }
+}
+
+fn run_mode(
+    specs: Vec<RunSpec>,
+    mode: ExecMode,
+    opts: RemoteOpts,
+) -> (Vec<TrainReport>, Vec<TrainEvent>) {
+    let rt = backend();
+    let sink = Arc::new(CollectSink::default());
+    let reports = Sweep::new(specs)
+        .mode(mode.clone())
+        .worker_exe(WORKER_EXE)
+        .remote_opts(opts)
+        .events(sink.clone())
+        .run(&rt)
+        .unwrap_or_else(|e| panic!("sweep under {mode:?}: {e:#}"));
+    (reports, sink.take())
+}
+
+/// Assert `reports`/`events` from a remote run match the serial
+/// baseline: bit-identical spec-ordered rows, and per-run event
+/// sequences identical once the dispatch bookkeeping (which peer ran a
+/// row — not part of the row's result) is filtered out.
+fn assert_matches_serial(
+    n: usize,
+    serial: &(Vec<TrainReport>, Vec<TrainEvent>),
+    remote: &(Vec<TrainReport>, Vec<TrainEvent>),
+    what: &str,
+) {
+    assert_eq!(remote.0.len(), n, "{what}: row count");
+    let serial_keys: Vec<RowKey> = serial.0.iter().map(row_key).collect();
+    let remote_keys: Vec<RowKey> = remote.0.iter().map(row_key).collect();
+    assert_eq!(serial_keys, remote_keys, "{what}: reports drifted from serial");
+    for run in 0..n {
+        let want: Vec<String> = serial
+            .1
+            .iter()
+            .filter(|e| e.run() == run && !is_dispatch(e))
+            .map(event_key)
+            .collect();
+        let got: Vec<String> = remote
+            .1
+            .iter()
+            .filter(|e| e.run() == run && !is_dispatch(e))
+            .map(event_key)
+            .collect();
+        assert_eq!(want, got, "{what}: run {run} event sequence drifted from serial");
+    }
+}
+
+/// A minimal in-test TCP peer: accepts connections forever and hands
+/// each to `serve`. The thread leaks (blocked in accept) when the test
+/// ends — the process exit reaps it.
+fn fake_peer(serve: impl Fn(std::net::TcpStream) + Send + 'static) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind fake peer");
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            match conn {
+                Ok(s) => serve(s),
+                Err(_) => break,
+            }
+        }
+    });
+    addr
+}
+
+/// The tentpole contract: a sweep across two loopback `serve-worker`
+/// peers is bit-identical to serial execution.
+#[test]
+fn tcp_remote_sweep_matches_serial_bitwise() {
+    let steps = 5;
+    let n = micro_specs(steps).len();
+    let serial = run_mode(
+        micro_specs(steps),
+        ExecMode::Threads { workers: 1 },
+        RemoteOpts::default(),
+    );
+
+    let exe = Path::new(WORKER_EXE);
+    let a = remote::spawn_serve_worker(exe, &[]).expect("spawn peer a");
+    let b = remote::spawn_serve_worker(exe, &[]).expect("spawn peer b");
+    let remote_run = run_mode(
+        micro_specs(steps),
+        ExecMode::Remote { peers: vec![a.addr.clone(), b.addr.clone()] },
+        fast_opts(),
+    );
+    assert_matches_serial(n, &serial, &remote_run, "tcp x2");
+
+    // Every row was dispatched somewhere, and the dispatch events name
+    // real pool members.
+    let peers = [a.addr.clone(), b.addr.clone()];
+    let mut dispatched = vec![false; n];
+    for ev in &remote_run.1 {
+        if let TrainEvent::RowDispatched { run, peer, .. } = ev {
+            dispatched[*run] = true;
+            assert!(peers.contains(peer), "dispatch names unknown peer {peer}");
+        }
+    }
+    assert!(dispatched.iter().all(|&d| d), "undispatched rows: {dispatched:?}");
+}
+
+/// `proc` peers (the PR-5 subprocess transport behind the same
+/// scheduler) produce the same bits as serial too — the two in-tree
+/// transports are interchangeable.
+#[test]
+fn proc_peers_match_serial_bitwise() {
+    let steps = 4;
+    let n = micro_specs(steps).len();
+    let serial = run_mode(
+        micro_specs(steps),
+        ExecMode::Threads { workers: 1 },
+        RemoteOpts::default(),
+    );
+    let remote_run = run_mode(
+        micro_specs(steps),
+        ExecMode::Remote { peers: vec!["proc".into(), "proc".into()] },
+        fast_opts(),
+    );
+    assert_matches_serial(n, &serial, &remote_run, "proc x2");
+}
+
+/// The fault-tolerance acceptance: one peer killed mid-row (exit(9)
+/// after the first frame of its first row) — the orphaned row is
+/// re-dispatched to the healthy peer and the sweep is still
+/// bit-identical to serial. The aborted attempt's partial events are
+/// discarded, never fanned out.
+#[test]
+fn killed_peer_mid_row_redispatches_bit_identically() {
+    let steps = 5;
+    let n = micro_specs(steps).len();
+    let serial = run_mode(
+        micro_specs(steps),
+        ExecMode::Threads { workers: 1 },
+        RemoteOpts::default(),
+    );
+
+    let exe = Path::new(WORKER_EXE);
+    let dying = remote::spawn_serve_worker(exe, &["--die-mid-row", "1"]).expect("spawn dying");
+    let healthy = remote::spawn_serve_worker(exe, &[]).expect("spawn healthy");
+    let remote_run = run_mode(
+        micro_specs(steps),
+        ExecMode::Remote { peers: vec![dying.addr.clone(), healthy.addr.clone()] },
+        fast_opts(),
+    );
+    assert_matches_serial(n, &serial, &remote_run, "kill mid-row");
+
+    // The kill actually happened: some row was requeued off the dying
+    // peer and re-dispatched on a later attempt.
+    let requeued = remote_run
+        .1
+        .iter()
+        .any(|e| matches!(e, TrainEvent::RowRequeued { peer, .. } if *peer == dying.addr));
+    assert!(requeued, "dying peer never lost a row — test hook inert?");
+    let retried = remote_run
+        .1
+        .iter()
+        .any(|e| matches!(e, TrainEvent::RowDispatched { attempt, .. } if *attempt > 1));
+    assert!(retried, "no re-dispatch attempt observed");
+}
+
+/// A version-skewed peer is refused at the hello — and with a healthy
+/// peer beside it the sweep still completes, bit-identical to serial.
+#[test]
+fn version_skewed_peer_is_refused_but_sweep_survives() {
+    let skewed = fake_peer(|mut s| {
+        let hello = WireHello {
+            proto: wire::WIRE_VERSION + 41,
+            peer: "old-build".into(),
+            backends: vec!["native".into()],
+        };
+        let _ = remote::write_frame(&mut s, &wire::encode_hello(&hello));
+    });
+
+    // Direct connect: the refusal names the skew.
+    let timeout = Duration::from_secs(2);
+    let err = remote::TcpTransport::connect(&skewed, timeout, timeout)
+        .expect_err("skewed hello accepted");
+    assert!(
+        format!("{err:#}").contains("version-skewed"),
+        "refusal does not name the skew: {err:#}"
+    );
+
+    let steps = 3;
+    let specs = || micro_specs(steps)[..2].to_vec();
+    let serial = run_mode(specs(), ExecMode::Threads { workers: 1 }, RemoteOpts::default());
+    let healthy = remote::spawn_serve_worker(Path::new(WORKER_EXE), &[]).expect("spawn healthy");
+    let remote_run = run_mode(
+        specs(),
+        ExecMode::Remote { peers: vec![skewed, healthy.addr.clone()] },
+        fast_opts(),
+    );
+    assert_matches_serial(2, &serial, &remote_run, "skewed + healthy");
+    // Every completed dispatch landed on the healthy peer.
+    for ev in &remote_run.1 {
+        if let TrainEvent::RowDispatched { peer, .. } = ev {
+            assert_eq!(*peer, healthy.addr, "row dispatched to the skewed peer");
+        }
+    }
+}
+
+/// A hung peer — valid hello, then silence — times out at the idle
+/// bound; the row is re-dispatched to the healthy peer and the sweep
+/// still matches serial. This also pins the balancer's pessimistic
+/// penalty: without it the unmeasured hung peer would rank first and
+/// win every re-dispatch of the same row until its attempts ran out.
+#[test]
+fn hung_peer_times_out_and_healthy_peer_absorbs_the_row() {
+    let hung = fake_peer(|mut s| {
+        let hello = WireHello {
+            proto: wire::WIRE_VERSION,
+            peer: "hung".into(),
+            backends: vec!["native".into()],
+        };
+        let _ = remote::write_frame(&mut s, &wire::encode_hello(&hello));
+        // Hold the connection open, sending nothing: reads on the
+        // coordinator side must hit the idle timeout, not EOF.
+        std::thread::sleep(Duration::from_secs(30));
+    });
+    let healthy = remote::spawn_serve_worker(Path::new(WORKER_EXE), &[]).expect("spawn healthy");
+
+    let steps = 3;
+    let specs = || micro_specs(steps)[..2].to_vec();
+    let serial = run_mode(specs(), ExecMode::Threads { workers: 1 }, RemoteOpts::default());
+    let opts = RemoteOpts { idle_timeout: Duration::from_millis(700), ..fast_opts() };
+    let remote_run = run_mode(
+        specs(),
+        ExecMode::Remote { peers: vec![hung, healthy.addr.clone()] },
+        opts,
+    );
+    assert_matches_serial(2, &serial, &remote_run, "hung + healthy");
+    let timed_out = remote_run
+        .1
+        .iter()
+        .any(|e| matches!(e, TrainEvent::RowRequeued { peer, .. } if *peer != healthy.addr));
+    assert!(timed_out, "hung peer never timed out a row");
+}
+
+/// Row-level errors stay deterministic under remote dispatch: the
+/// failing row surfaces as first-error-by-spec-index with its label,
+/// and is dispatched exactly once — error frames are never retried.
+#[test]
+fn row_error_is_spec_indexed_and_never_retried() {
+    let exe = Path::new(WORKER_EXE);
+    let a = remote::spawn_serve_worker(exe, &[]).expect("spawn peer a");
+    let b = remote::spawn_serve_worker(exe, &[]).expect("spawn peer b");
+
+    let mut specs = micro_specs(3);
+    let mut bad = TrainConfig::default();
+    bad.model = "no_such_model".into();
+    bad.steps = 3;
+    specs.insert(1, RunSpec::new("broken-row", bad));
+
+    let rt = backend();
+    let sink = Arc::new(CollectSink::default());
+    let err = Sweep::new(specs)
+        .mode(ExecMode::Remote { peers: vec![a.addr.clone(), b.addr.clone()] })
+        .remote_opts(fast_opts())
+        .events(sink.clone())
+        .run(&rt)
+        .expect_err("broken row succeeded");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("sweep row 1"), "error lacks spec index: {msg}");
+    assert!(msg.contains("broken-row"), "error lacks spec label: {msg}");
+    assert!(msg.contains("worker failed"), "error lost the worker verdict: {msg}");
+
+    let events = sink.take();
+    let broken_dispatches = events
+        .iter()
+        .filter(|e| matches!(e, TrainEvent::RowDispatched { run: 1, .. }))
+        .count();
+    assert_eq!(broken_dispatches, 1, "deterministic row failure was retried");
+    assert!(
+        !events.iter().any(|e| matches!(e, TrainEvent::RowRequeued { run: 1, .. })),
+        "deterministic row failure was requeued"
+    );
+}
+
+/// A row whose backend no live peer advertises fails cleanly (naming
+/// the backend) instead of deadlocking the scheduler, and the peers'
+/// hellos — not coordinator guesswork — are what decide routability.
+#[test]
+fn unroutable_backend_fails_instead_of_deadlocking() {
+    let exe = Path::new(WORKER_EXE);
+    let peer = remote::spawn_serve_worker(exe, &[]).expect("spawn peer");
+    // serve-worker advertises native-only unless built with the xla
+    // feature — in which case this scenario can't arise and the test
+    // has nothing to pin.
+    if cfg!(feature = "xla") {
+        return;
+    }
+    let mut xla_row = mk("needs-xla", "lm_micro", OptKind::Coap, 2);
+    xla_row.cfg.backend = BackendKind::Xla;
+
+    let rt = backend();
+    let err = Sweep::new(vec![xla_row])
+        .mode(ExecMode::Remote { peers: vec![peer.addr.clone()] })
+        .remote_opts(fast_opts())
+        .run(&rt)
+        .expect_err("unroutable row succeeded");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("sweep row 0"), "{msg}");
+    assert!(
+        msg.contains("backend 'xla'") || msg.contains("supports backend"),
+        "error does not name the unroutable backend: {msg}"
+    );
+}

@@ -117,6 +117,15 @@ fn event_key(ev: &TrainEvent) -> String {
         TrainEvent::RunFailed { run, label, step, .. } => {
             format!("failed {run} '{label}' {step}")
         }
+        // Remote dispatch bookkeeping: never emitted by thread/process
+        // pools, and excluded from cross-mode parity by construction
+        // (which peer ran a row is not part of the row's result).
+        TrainEvent::RowDispatched { run, label, peer, attempt } => {
+            format!("dispatched {run} '{label}' {peer} {attempt}")
+        }
+        TrainEvent::RowRequeued { run, label, peer, attempt, .. } => {
+            format!("requeued {run} '{label}' {peer} {attempt}")
+        }
     }
 }
 
@@ -272,6 +281,40 @@ fn killed_child_stream_is_a_spec_indexed_error() {
         .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("sweep row 0") && msg.contains("spawning worker"), "{msg}");
+}
+
+/// Error precedence: a worker that emits a clean error frame and THEN
+/// exits nonzero must surface the error frame's message — the exit
+/// status is the less specific verdict and must not mask it. Pinned
+/// with a fake worker script so the precedence can't silently invert.
+#[cfg(unix)]
+#[test]
+fn error_frame_beats_nonzero_exit_and_keeps_spec_index() {
+    use std::os::unix::fs::PermissionsExt;
+    let dir = std::env::temp_dir().join(format!("coap-wire-prec-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let frame = wire::encode_error("deterministic kaboom at step 2");
+    assert!(!frame.contains('\''), "frame must be single-quote-safe for sh: {frame}");
+    let script = dir.join("lying-worker.sh");
+    std::fs::write(&script, format!("#!/bin/sh\necho '{frame}'\nexit 3\n")).unwrap();
+    let mut perm = std::fs::metadata(&script).unwrap().permissions();
+    perm.set_mode(0o755);
+    std::fs::set_permissions(&script, perm).unwrap();
+
+    let rt = backend();
+    let err = Sweep::new(micro_sweep("lm-micro", 2))
+        .mode(ExecMode::Process { max_procs: 1 })
+        .worker_exe(&script)
+        .run(&rt)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("worker failed: deterministic kaboom at step 2"),
+        "error frame message lost: {msg}"
+    );
+    assert!(!msg.contains("exited with"), "exit status masked the error frame: {msg}");
+    assert!(msg.contains("sweep row 0") && msg.contains("coap/lm"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Drive `coap worker` by hand: every stdout line must be a

@@ -15,7 +15,7 @@
 use coap::config::{
     BackendKind, CheckpointPolicy, ConvFormat, MomentBase, OptKind, TrainConfig,
 };
-use coap::coordinator::wire::{self, Frame};
+use coap::coordinator::wire::{self, Frame, Request, WireHello};
 use coap::coordinator::{EvalPoint, RunSpec, TrainEvent, TrainReport};
 use coap::rng::Rng;
 use coap::tensor::Precision;
@@ -123,7 +123,7 @@ fn gen_config(r: &mut Rng) -> TrainConfig {
 fn gen_event(r: &mut Rng) -> TrainEvent {
     let run = r.below(64);
     let label: Arc<str> = Arc::from(gen_label(r));
-    match r.below(6) {
+    match r.below(8) {
         0 => TrainEvent::RunStarted {
             run,
             label,
@@ -152,10 +152,23 @@ fn gen_event(r: &mut Rng) -> TrainEvent {
             final_train_loss: gen_f64(r),
             wall_s: gen_f64(r),
         },
-        _ => TrainEvent::RunFailed {
+        5 => TrainEvent::RunFailed {
             run,
             label,
             step: r.below(100_000),
+            error: gen_label(r),
+        },
+        6 => TrainEvent::RowDispatched {
+            run,
+            label,
+            peer: gen_label(r),
+            attempt: 1 + r.below(4),
+        },
+        _ => TrainEvent::RowRequeued {
+            run,
+            label,
+            peer: gen_label(r),
+            attempt: 1 + r.below(4),
             error: gen_label(r),
         },
     }
@@ -306,8 +319,13 @@ fn version_mismatched_frames_are_rejected() {
     };
     let good = wire::encode_event(&ev);
     assert!(wire::decode_frame(&good).is_ok());
-    for v in ["0", "2", "999", "\"1\"", "null"] {
-        let skewed = good.replacen("\"v\":1", &format!("\"v\":{v}"), 1);
+    // Backwards compatibility: a v1 frame (from a pre-remote build)
+    // still decodes under the v2 envelope check.
+    let v1 = good.replacen("\"v\":2", "\"v\":1", 1);
+    assert_ne!(v1, good, "encoder no longer stamps v2");
+    assert!(wire::decode_frame(&v1).is_ok(), "v1 frames must still decode");
+    for v in ["0", "3", "999", "\"2\"", "null"] {
+        let skewed = good.replacen("\"v\":2", &format!("\"v\":{v}"), 1);
         assert_ne!(skewed, good, "replacement failed for v={v}");
         let err = wire::decode_frame(&skewed).unwrap_err();
         let msg = format!("{err:#}");
@@ -332,4 +350,47 @@ fn cross_kind_frames_are_rejected() {
     assert!(wire::decode_frame("{\"v\":1,\"frame\":\"telemetry\"}").is_err());
     assert!(wire::decode_frame("[1,2,3]").is_err());
     assert!(wire::decode_frame("").is_err());
+}
+
+/// The v2 control frames (heartbeat, hello, shutdown) and the
+/// coordinator->peer `Request` envelope roundtrip exactly.
+#[test]
+fn v2_control_frames_roundtrip_exactly() {
+    // Seq/proto ride plain JSON numbers (exact for integers < 2^53 —
+    // they are counters, not seeds).
+    for seq in [0u64, 1, 7, (1 << 52) + 3] {
+        match wire::decode_frame(&wire::encode_heartbeat(seq)) {
+            Ok(Frame::Heartbeat { seq: back }) => assert_eq!(back, seq),
+            _ => panic!("heartbeat seq={seq} did not roundtrip"),
+        }
+    }
+
+    let mut r = Rng::new(0xC0AF_0005);
+    for case in 0..100 {
+        let hello = WireHello {
+            proto: r.next_u64() >> 12,
+            peer: gen_label(&mut r),
+            backends: (0..r.below(4)).map(|_| gen_label(&mut r)).collect(),
+        };
+        let line = wire::encode_hello(&hello);
+        assert!(!line.contains('\n'), "case {case}: frame spans lines");
+        match wire::decode_frame(&line) {
+            Ok(Frame::Hello(back)) => assert_eq!(back, hello, "case {case}"),
+            _ => panic!("case {case}: hello did not roundtrip: {line}"),
+        }
+    }
+
+    // Requests: a spec frame decodes as Request::Spec, shutdown as
+    // Request::Shutdown, and child->parent frames are not requests.
+    let spec = RunSpec::new("req-row", TrainConfig::default());
+    match wire::decode_request(&wire::encode_spec(11, &spec)) {
+        Ok(Request::Spec(index, back)) => {
+            assert_eq!(index, 11);
+            assert_eq!(back.label, "req-row");
+        }
+        _ => panic!("spec frame is not a Spec request"),
+    }
+    assert!(matches!(wire::decode_request(&wire::encode_shutdown()), Ok(Request::Shutdown)));
+    assert!(wire::decode_request(&wire::encode_heartbeat(0)).is_err());
+    assert!(wire::decode_request(&wire::encode_error("x")).is_err());
 }
