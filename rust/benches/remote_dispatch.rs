@@ -1,9 +1,12 @@
 //! Remote dispatch overhead receipt: the same micro sweep pushed
-//! through both in-tree transports — `proc` (one `coap worker`
-//! subprocess per row over stdin/stdout) and loopback TCP (`coap
-//! serve-worker` peers) — with a single peer, so the gap between the
-//! sweep's wall clock and the sum of the rows' own measured walls IS
-//! the per-row dispatch cost (spawn/connect + spec/report framing).
+//! through the in-tree transports — `proc` (one `coap worker`
+//! subprocess per row over stdin/stdout), loopback TCP (`coap
+//! serve-worker` peers), and the resident `coap serve` scheduler
+//! (submit → journal → dispatch → journaled done) — each with a single
+//! peer, so the gap between the sweep's wall clock and the sum of the
+//! rows' own measured walls IS the per-row dispatch cost
+//! (spawn/connect + spec/report framing; for `serve`, plus the journal
+//! fsyncs — the durability tax).
 //!
 //! Rows land in `target/bench-json/remote_dispatch.jsonl`, tagged with
 //! `transport` and `peer`, each line checked against the bench-JSONL
@@ -11,12 +14,13 @@
 
 use coap::config::{OptKind, TrainConfig};
 use coap::coordinator::remote::{self, RemoteOpts};
-use coap::coordinator::wire;
+use coap::coordinator::serve;
+use coap::coordinator::wire::{self, JobSpec};
 use coap::coordinator::{ExecMode, RunSpec, Sweep};
 use coap::runtime::{Backend, NativeBackend};
 use coap::util::bench::{append_json, jsonl_line, print_table, validate_jsonl_line};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Validate against the trajectory schema, then append.
 fn record(fields: &[(&str, String)]) {
@@ -114,8 +118,62 @@ fn main() {
     }
     serve.kill();
 
+    // Scheduler-daemon case: the same rows through the resident `coap
+    // serve` queue — its overhead additionally buys a durable journal
+    // (fsync per accepted job + per finished row + verdict).
+    {
+        let state = std::env::temp_dir().join(format!("coap_bench_serve_{}", std::process::id()));
+        std::fs::remove_dir_all(&state).ok();
+        let peer = format!("proc:{}", exe.display());
+        let daemon = serve::spawn_serve(&exe, &state, &["--peers", &peer])
+            .expect("spawn coap serve daemon");
+        let timeout = Duration::from_secs(5);
+        let submit_once = || -> (f64, f64) {
+            let job = JobSpec { name: "bench".into(), priority: 0, specs: micro_specs(steps) };
+            let t0 = Instant::now();
+            let ack = serve::client_submit(&daemon.addr, &job, timeout).expect("bench submit");
+            assert!(ack.accepted, "bench submit refused: {}", ack.reason);
+            let reports = serve::client_watch(&daemon.addr, ack.job, timeout, None)
+                .expect("bench job watch");
+            let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let rows_ms: f64 = reports.iter().map(|r| r.wall.as_secs_f64() * 1e3).sum();
+            (sweep_ms, rows_ms)
+        };
+        let _ = submit_once();
+        let (mut sweep_ms, mut rows_ms) = (0.0, 0.0);
+        for _ in 0..iters {
+            let (s, r) = submit_once();
+            sweep_ms += s / iters as f64;
+            rows_ms += r / iters as f64;
+        }
+        let overhead_ms = (sweep_ms - rows_ms).max(0.0);
+        let per_row = overhead_ms / n_rows as f64;
+        table.push(vec![
+            "serve".to_string(),
+            peer.clone(),
+            n_rows.to_string(),
+            format!("{sweep_ms:.1}"),
+            format!("{rows_ms:.1}"),
+            format!("{per_row:.2}"),
+        ]);
+        record(&[
+            ("case", "dispatch-serve".to_string()),
+            ("transport", "serve".to_string()),
+            ("peer", peer),
+            ("rows", n_rows.to_string()),
+            ("steps", steps.to_string()),
+            ("iters", iters.to_string()),
+            ("sweep_wall_ms", format!("{sweep_ms:.3}")),
+            ("row_wall_ms_sum", format!("{rows_ms:.3}")),
+            ("dispatch_overhead_ms_per_row", format!("{per_row:.3}")),
+        ]);
+        drop(daemon);
+        std::fs::remove_dir_all(&state).ok();
+    }
+
     print_table(
-        "Remote dispatch overhead: proc (subprocess/row) vs loopback TCP (serve-worker)",
+        "Remote dispatch overhead: proc (subprocess/row) vs loopback TCP \
+         (serve-worker) vs resident scheduler (coap serve, journaled)",
         &["transport", "peer", "rows", "sweep (ms)", "rows' own (ms)", "overhead/row (ms)"],
         &table,
     );

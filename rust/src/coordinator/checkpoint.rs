@@ -27,34 +27,67 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Atomic save: the full image is written to a `.tmp` sibling and
+    /// fsynced before being renamed over `path`, so a crash at any point
+    /// leaves either the previous checkpoint or the new one — never a
+    /// truncated half-write. Elastic resume depends on this: the last
+    /// durable checkpoint must survive the save of its successor.
     pub fn save(&self, path: &str) -> Result<()> {
-        let mut w = std::io::BufWriter::new(
-            std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
-        );
-        w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
-        w.write_all(&self.step.to_le_bytes())?;
-        write_str(&mut w, &self.model)?;
-        w.write_all(&(self.params.len() as u32).to_le_bytes())?;
-        for (name, t) in &self.params {
-            write_str(&mut w, name)?;
-            w.write_all(&(t.dims().len() as u32).to_le_bytes())?;
-            for &d in t.dims() {
-                w.write_all(&(d as u64).to_le_bytes())?;
+        let tmp = format!("{path}.tmp");
+        {
+            let file =
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp}"))?;
+            let mut w = std::io::BufWriter::new(file);
+            w.write_all(MAGIC)?;
+            w.write_all(&VERSION.to_le_bytes())?;
+            w.write_all(&self.step.to_le_bytes())?;
+            write_str(&mut w, &self.model)?;
+            w.write_all(&(self.params.len() as u32).to_le_bytes())?;
+            for (name, t) in &self.params {
+                write_str(&mut w, name)?;
+                w.write_all(&(t.dims().len() as u32).to_le_bytes())?;
+                for &d in t.dims() {
+                    w.write_all(&(d as u64).to_le_bytes())?;
+                }
+                let data = t.f32s();
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                w.write_all(bytes)?;
             }
-            let data = t.f32s();
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+            w.flush().with_context(|| format!("writing {tmp}"))?;
+            w.get_ref()
+                .sync_all()
+                .with_context(|| format!("fsyncing {tmp}"))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {tmp} over {path}"))?;
+        // Make the rename itself durable where the platform allows it;
+        // directory fsync is advisory (not all filesystems support it).
+        #[cfg(unix)]
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let dir = if dir.as_os_str().is_empty() {
+                std::path::Path::new(".")
+            } else {
+                dir
             };
-            w.write_all(bytes)?;
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
         }
         Ok(())
     }
 
     pub fn load(path: &str) -> Result<Checkpoint> {
-        let mut r = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening {path}"))?,
-        );
+        let file = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+        // On-disk dims are untrusted: the tensor payload they describe
+        // can never exceed what is actually in the file, so the file
+        // length bounds every allocation below.
+        let file_len = file
+            .metadata()
+            .with_context(|| format!("stat {path}"))?
+            .len();
+        let mut r = std::io::BufReader::new(file);
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
         if &magic != MAGIC {
@@ -78,8 +111,20 @@ impl Checkpoint {
             for _ in 0..ndims {
                 dims.push(read_u64(&mut r)? as usize);
             }
-            let numel: usize = dims.iter().product();
-            let mut buf = vec![0u8; numel * 4];
+            let numel = dims
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .with_context(|| format!("{path}: corrupt dims for {name}: {dims:?}"))?;
+            let nbytes = numel
+                .checked_mul(4)
+                .with_context(|| format!("{path}: corrupt dims for {name}: {dims:?}"))?;
+            if nbytes as u64 > file_len {
+                bail!(
+                    "{path}: corrupt dims for {name}: {dims:?} needs {nbytes} bytes, \
+                     file is only {file_len}"
+                );
+            }
+            let mut buf = vec![0u8; nbytes];
             r.read_exact(&mut buf)?;
             let data: Vec<f32> = buf
                 .chunks_exact(4)
@@ -242,6 +287,79 @@ mod tests {
             ("b".into(), Tensor::zeros(&[4])),
         ]);
         assert!(bad2.into_params_for(&info).is_err());
+    }
+
+    /// Satellite regression: a crash mid-save must never destroy the
+    /// previous checkpoint. We simulate the kill by leaving a torn
+    /// `.tmp` sibling (exactly the on-disk state a SIGKILL between the
+    /// partial write and the rename produces) and assert the original
+    /// file still loads — and that a subsequent save replaces both.
+    #[test]
+    fn crash_mid_save_keeps_old_checkpoint() {
+        let dir = std::env::temp_dir().join(format!("coap_ckpt_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let path = path.to_str().unwrap();
+        let ck1 = Checkpoint {
+            model: "lm_tiny".into(),
+            step: 7,
+            params: vec![("w".into(), Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]))],
+        };
+        ck1.save(path).unwrap();
+        // Crash mid-save of the successor: a torn partial image sits at
+        // the tmp path, the real path untouched.
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, &b"COAPCKPT\x01\x00\x00"[..]).unwrap();
+        let back = Checkpoint::load(path).unwrap();
+        assert_eq!(back.step, 7);
+        assert_eq!(back.params[0].1.f32s(), ck1.params[0].1.f32s());
+        // A completed save renames over both path and tmp debris.
+        let ck2 = Checkpoint {
+            model: "lm_tiny".into(),
+            step: 8,
+            params: vec![("w".into(), Tensor::from_f32(&[2, 2], vec![5., 6., 7., 8.]))],
+        };
+        ck2.save(path).unwrap();
+        assert!(!std::path::Path::new(&tmp).exists(), "tmp file left behind");
+        assert_eq!(Checkpoint::load(path).unwrap().step, 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite regression: corrupt on-disk dims must be rejected
+    /// before allocation, both when the product overflows `usize` and
+    /// when it is absurd-but-representable (bounded by file length).
+    #[test]
+    fn rejects_corrupt_dims_before_allocating() {
+        let dir = std::env::temp_dir().join(format!("coap_ckpt_dims_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let write_with_dims = |fname: &str, dims: &[u64]| -> String {
+            let path = dir.join(fname);
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+            w.write_all(MAGIC).unwrap();
+            w.write_all(&VERSION.to_le_bytes()).unwrap();
+            w.write_all(&1u64.to_le_bytes()).unwrap(); // step
+            write_str(&mut w, "lm_tiny").unwrap();
+            w.write_all(&1u32.to_le_bytes()).unwrap(); // n_params
+            write_str(&mut w, "w").unwrap();
+            w.write_all(&(dims.len() as u32).to_le_bytes()).unwrap();
+            for &d in dims {
+                w.write_all(&d.to_le_bytes()).unwrap();
+            }
+            // A little payload so only the dims are wrong.
+            w.write_all(&[0u8; 64]).unwrap();
+            w.flush().unwrap();
+            path.to_str().unwrap().to_string()
+        };
+        // Overflowing product: u64::MAX * 16 wraps usize.
+        let p1 = write_with_dims("overflow.ckpt", &[u64::MAX, 16]);
+        let e1 = Checkpoint::load(&p1).unwrap_err().to_string();
+        assert!(e1.contains("corrupt dims"), "got: {e1}");
+        // Absurd but non-overflowing numel: 2^40 elements = 4 TiB, far
+        // beyond the 100-and-change bytes actually in the file.
+        let p2 = write_with_dims("absurd.ckpt", &[1 << 40]);
+        let e2 = Checkpoint::load(&p2).unwrap_err().to_string();
+        assert!(e2.contains("corrupt dims"), "got: {e2}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod events;
 pub mod memory;
 pub mod metrics;
 pub mod remote;
+pub mod serve;
 pub mod sweep;
 pub mod trainer;
 pub mod wire;

@@ -45,8 +45,19 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::path::{Path, PathBuf};
 use std::process::{Child, ChildStdout, Command, Stdio};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the guard from a poisoned lock. Every
+/// mutex in this module guards plain always-valid data (a task queue,
+/// a report slot, a buffered writer) with no multi-step invariants, so
+/// a panic elsewhere while the lock was held leaves the data usable —
+/// recovering here means one panicking peer thread fails its own row
+/// instead of cascading `PoisonError` panics through every other peer
+/// and killing the whole sweep.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 // ---------------------------------------------------------------------------
 // Length-delimited framing (the TCP codec)
@@ -402,13 +413,23 @@ impl Default for RemoteOpts {
     }
 }
 
-/// Exponential backoff: `base * 2^(attempt-1)`, capped at 8 s.
+/// Exponential backoff: `base * 2^(attempt-1)`, capped at 8 s. The
+/// multiplication saturates at the cap instead of panicking — a
+/// user-set `backoff_base` near `Duration::MAX` overflows `Duration`
+/// multiplication otherwise.
 fn backoff_delay(attempt: usize, base: Duration) -> Duration {
+    const CAP: Duration = Duration::from_secs(8);
     let shift = attempt.saturating_sub(1).min(6) as u32;
-    (base * (1u32 << shift)).min(Duration::from_secs(8))
+    match base.checked_mul(1u32 << shift) {
+        Some(d) => d.min(CAP),
+        None => CAP,
+    }
 }
 
-/// One queued row.
+/// One queued row. `index` is the row's position in the dispatch
+/// set (`rows[index]`), not necessarily its wire/spec index — the
+/// resident daemon dispatches journal-filtered subsets where the two
+/// differ.
 struct Task {
     index: usize,
     /// Dispatch attempt this grant would be (counts from 1).
@@ -480,15 +501,20 @@ impl SchedState {
 struct Scheduler {
     state: Mutex<SchedState>,
     cv: Condvar,
+    /// Times a peer woke inside `next()` and re-evaluated without being
+    /// granted anything — the idle-churn gauge. Waits are bounded by the
+    /// earliest backoff deadline (or unbounded when nothing is backing
+    /// off), so an idle resident daemon sits parked instead of polling.
+    wakeups: AtomicUsize,
 }
 
 impl Scheduler {
-    fn new(specs: &[RunSpec], peers: usize) -> Scheduler {
+    fn new(rows: &[(usize, RunSpec)], peers: usize) -> Scheduler {
         let now = Instant::now();
-        let queue = specs
+        let queue = rows
             .iter()
             .enumerate()
-            .map(|(index, spec)| Task {
+            .map(|(index, (_, spec))| Task {
                 index,
                 attempt: 1,
                 backend: spec.cfg.backend.label(),
@@ -506,14 +532,18 @@ impl Scheduler {
                 stop: false,
             }),
             cv: Condvar::new(),
+            wakeups: AtomicUsize::new(0),
         }
     }
 
     /// Block until this peer gets a task, the queue drains, or the
-    /// sweep stops. Polls every 25 ms so `not_before` backoffs wake up
-    /// without a dedicated timer thread.
+    /// sweep stops. The wait is exact: bounded by the earliest
+    /// `not_before` among tasks this peer could run when something is
+    /// backing off, park-until-notify otherwise — every state change
+    /// that could alter the verdict (`requeue*`, `settle`,
+    /// `record_ewma`, `set_caps`, `mark_dead`) broadcasts the condvar.
     fn next(&self, peer: usize) -> Grant {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         st.idle[peer] = true;
         loop {
             if !st.alive[peer] || st.stop || (st.queue.is_empty() && st.inflight == 0) {
@@ -554,14 +584,35 @@ impl Scheduler {
                     return Grant::Run(task);
                 }
             }
-            st = self.cv.wait_timeout(st, Duration::from_millis(25)).unwrap().0;
+            // Earliest backoff expiry among tasks this peer could run;
+            // anything already ready is someone else's grant and their
+            // state change will notify us.
+            let deadline = st
+                .queue
+                .iter()
+                .filter(|t| t.not_before > now && st.peer_capable(peer, t.backend))
+                .map(|t| t.not_before)
+                .min();
+            st = match deadline {
+                Some(dl) => {
+                    self.cv
+                        .wait_timeout(st, dl.saturating_duration_since(now))
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .0
+                }
+                None => self
+                    .cv
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner),
+            };
+            self.wakeups.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     /// A transport death: put the row back with its attempt burned and
     /// a backoff window.
     fn requeue(&self, task: Task, delay: Duration) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         st.inflight -= 1;
         st.queue.push_front(Task {
             attempt: task.attempt + 1,
@@ -574,7 +625,7 @@ impl Scheduler {
     /// Put the row back *without* burning an attempt — the peer never
     /// actually tried it (connect failure, capability mismatch).
     fn requeue_unburned(&self, task: Task) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         st.inflight -= 1;
         st.queue.push_front(Task { not_before: Instant::now(), ..task });
         self.cv.notify_all();
@@ -582,7 +633,7 @@ impl Scheduler {
 
     /// The row concluded (report or deterministic failure).
     fn settle(&self, failed: bool) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         st.inflight -= 1;
         if failed {
             st.stop = true;
@@ -592,7 +643,7 @@ impl Scheduler {
 
     /// Blend a finished row's ms-per-step into the peer's EWMA.
     fn record_ewma(&self, peer: usize, ms_per_step: f64, alpha: f64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         st.ewma[peer] = Some(match st.ewma[peer] {
             None => ms_per_step,
             Some(prev) => alpha * ms_per_step + (1.0 - alpha) * prev,
@@ -602,7 +653,7 @@ impl Scheduler {
 
     /// Record the peer's advertised backends from its hello.
     fn set_caps(&self, peer: usize, backends: Vec<String>) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         st.caps[peer] = Some(backends);
         self.cv.notify_all();
     }
@@ -610,7 +661,7 @@ impl Scheduler {
     /// Declare a peer dead. If it was the last live peer, the queue is
     /// drained and returned so the caller can fail those rows.
     fn mark_dead(&self, peer: usize) -> Vec<Task> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
         st.alive[peer] = false;
         let mut orphans = Vec::new();
         if !st.alive.iter().any(|&a| a) {
@@ -670,12 +721,23 @@ fn dispatch_row(t: &mut dyn Transport, index: usize, spec: &RunSpec) -> RowOutco
 }
 
 // ---------------------------------------------------------------------------
-// The coordinator: run_remote
+// The coordinator: dispatch_rows / run_remote
 // ---------------------------------------------------------------------------
 
 type RowSlot = Mutex<Option<Result<TrainReport>>>;
 
-fn connect_transport(
+/// How a peer's transport gets (re)built. `run_remote` wraps
+/// [`connect_transport`] over a parsed `--remote` pool entry; the
+/// resident daemon reuses its parsed pool across jobs, and tests
+/// inject in-process transports (including deliberately panicking
+/// ones) without a socket in sight.
+pub(crate) struct PeerDef<'a> {
+    pub name: String,
+    pub connect: Box<dyn Fn() -> Result<Box<dyn Transport>> + Send + 'a>,
+}
+
+/// Build a transport for one parsed pool entry.
+pub(crate) fn connect_transport(
     peer: &PeerSpec,
     name: &str,
     worker_exe: Option<&Path>,
@@ -698,24 +760,62 @@ fn connect_transport(
     }
 }
 
+/// Build peer definitions from a raw `--remote` pool list. Display
+/// names give duplicate pool entries a `#id` suffix so events and the
+/// per-peer JSONL rows stay distinguishable.
+pub(crate) fn peer_defs<'a>(
+    peers: &'a [String],
+    parsed: &'a [PeerSpec],
+    worker_exe: Option<&'a Path>,
+    opts: &'a RemoteOpts,
+) -> Vec<PeerDef<'a>> {
+    peers
+        .iter()
+        .enumerate()
+        .map(|(id, p)| {
+            let name = if peers.iter().filter(|q| *q == p).count() > 1 {
+                format!("{p}#{id}")
+            } else {
+                p.clone()
+            };
+            let spec = &parsed[id];
+            let cname = name.clone();
+            PeerDef {
+                name,
+                connect: Box::new(move || connect_transport(spec, &cname, worker_exe, opts)),
+            }
+        })
+        .collect()
+}
+
 struct PeerCtx<'a> {
     id: usize,
-    spec: &'a PeerSpec,
-    name: &'a str,
-    specs: &'a [RunSpec],
+    def: &'a PeerDef<'a>,
+    rows: &'a [(usize, RunSpec)],
     slots: &'a [RowSlot],
     sched: &'a Scheduler,
     sink: &'a dyn EventSink,
-    worker_exe: Option<&'a Path>,
+    on_row: Option<&'a (dyn Fn(usize, &TrainReport) + Sync)>,
     opts: &'a RemoteOpts,
 }
 
 fn fail_tasks(tasks: Vec<Task>, slots: &[RowSlot], msg: impl Fn(&Task) -> String) {
     for t in tasks {
-        let mut slot = slots[t.index].lock().unwrap();
+        let mut slot = lock_unpoisoned(&slots[t.index]);
         if slot.is_none() {
             *slot = Some(Err(anyhow!("{}", msg(&t))));
         }
+    }
+}
+
+/// Extract something printable from a caught panic payload.
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -723,7 +823,8 @@ fn fail_tasks(tasks: Vec<Task>, slots: &[RowSlot], msg: impl Fn(&Task) -> String
 /// (re)connect the transport as needed, run rows, flush their buffered
 /// events, and feed completion/latency back.
 fn peer_loop(ctx: PeerCtx<'_>) {
-    let PeerCtx { id, spec, name, specs, slots, sched, sink, worker_exe, opts } = ctx;
+    let PeerCtx { id, def, rows, slots, sched, sink, on_row, opts } = ctx;
+    let name = def.name.as_str();
     let mut transport: Option<Box<dyn Transport>> = None;
     let mut connect_failures = 0usize;
     loop {
@@ -733,18 +834,19 @@ fn peer_loop(ctx: PeerCtx<'_>) {
                 fail_tasks(tasks, slots, |t| {
                     format!(
                         "no live remote peer supports backend '{}' (row '{}')",
-                        t.backend, specs[t.index].label
+                        t.backend, rows[t.index].1.label
                     )
                 });
                 break;
             }
             Grant::Run(task) => task,
         };
+        let (run, spec) = (rows[task.index].0, &rows[task.index].1);
         // Ensure a transport. Connect failures don't burn row attempts
         // — the row never reached a worker — but repeated failures kill
         // the peer.
         if transport.is_none() {
-            match connect_transport(spec, name, worker_exe, opts) {
+            match (def.connect)() {
                 Ok(t) => {
                     connect_failures = 0;
                     if let Some(h) = t.hello() {
@@ -762,7 +864,7 @@ fn peer_loop(ctx: PeerCtx<'_>) {
                             format!(
                                 "no live remote peers remain (row '{}' undispatched; \
                                  last peer {name} unreachable: {e:#})",
-                                specs[t.index].label
+                                rows[t.index].1.label
                             )
                         });
                         break;
@@ -778,8 +880,8 @@ fn peer_loop(ctx: PeerCtx<'_>) {
         if let Some(h) = t.hello() {
             if !h.backends.iter().any(|b| b == task.backend) {
                 sink.event(&TrainEvent::RowRequeued {
-                    run: task.index,
-                    label: specs[task.index].label.as_str().into(),
+                    run,
+                    label: spec.label.as_str().into(),
                     peer: name.to_string(),
                     attempt: task.attempt,
                     error: format!("peer lacks backend '{}'", task.backend),
@@ -791,26 +893,42 @@ fn peer_loop(ctx: PeerCtx<'_>) {
         // Dispatch events stream live; the row's own events are
         // buffered inside dispatch_row and flushed on conclusion.
         sink.event(&TrainEvent::RowDispatched {
-            run: task.index,
-            label: specs[task.index].label.as_str().into(),
+            run,
+            label: spec.label.as_str().into(),
             peer: name.to_string(),
             attempt: task.attempt,
         });
-        match dispatch_row(t.as_mut(), task.index, &specs[task.index]) {
+        // A panicking transport must not take the sweep down: catch the
+        // unwind and treat it exactly like a transport death (the
+        // connection state is unknowable afterwards anyway). Without
+        // this, the panic would propagate out of the scoped thread and
+        // re-raise in `dispatch_rows`, killing every other peer's work;
+        // with it, the row re-dispatches to a healthy peer.
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                dispatch_row(t.as_mut(), run, spec)
+            }))
+            .unwrap_or_else(|p| {
+                RowOutcome::Transport(anyhow!("peer transport panicked: {}", panic_msg(&*p)))
+            });
+        match outcome {
             RowOutcome::Done(rep, events) => {
                 for ev in &events {
                     sink.event(ev);
                 }
                 let ms = rep.wall.as_secs_f64() * 1e3 / rep.steps.max(1) as f64;
                 sched.record_ewma(id, ms, opts.ewma_alpha);
-                *slots[task.index].lock().unwrap() = Some(Ok(*rep));
+                if let Some(f) = on_row {
+                    f(run, &rep);
+                }
+                *lock_unpoisoned(&slots[task.index]) = Some(Ok(*rep));
                 sched.settle(false);
             }
             RowOutcome::RowFailed(e, events) => {
                 for ev in &events {
                     sink.event(ev);
                 }
-                *slots[task.index].lock().unwrap() = Some(Err(e));
+                *lock_unpoisoned(&slots[task.index]) = Some(Err(e));
                 sched.settle(true);
             }
             RowOutcome::Transport(e) => {
@@ -826,14 +944,14 @@ fn peer_loop(ctx: PeerCtx<'_>) {
                 // peers sit idle.
                 sched.record_ewma(id, opts.idle_timeout.as_secs_f64() * 1e3, opts.ewma_alpha);
                 sink.event(&TrainEvent::RowRequeued {
-                    run: task.index,
-                    label: specs[task.index].label.as_str().into(),
+                    run,
+                    label: spec.label.as_str().into(),
                     peer: name.to_string(),
                     attempt: task.attempt,
                     error: format!("{e:#}"),
                 });
                 if task.attempt >= opts.max_attempts {
-                    *slots[task.index].lock().unwrap() = Some(Err(anyhow!(
+                    *lock_unpoisoned(&slots[task.index]) = Some(Err(anyhow!(
                         "row dispatch failed after {} attempts (last peer {name}): {e:#}",
                         task.attempt
                     )));
@@ -850,30 +968,71 @@ fn peer_loop(ctx: PeerCtx<'_>) {
     }
 }
 
-/// Collapse slots into spec-ordered reports. Re-dispatch means a
+/// Collapse slots into row-ordered reports. Re-dispatch means a
 /// failing row can leave *lower*-index rows unrun (their peer died
-/// before reaching them), so the first *error* by spec index wins —
+/// before reaching them), so the first *error* by row position wins —
 /// scanning for the first empty slot would mask the real failure.
-fn collapse(specs: &[RunSpec], slots: Vec<RowSlot>) -> Result<Vec<TrainReport>> {
+fn collapse(rows: &[(usize, RunSpec)], slots: Vec<RowSlot>) -> Result<Vec<(usize, TrainReport)>> {
     let mut outs: Vec<Option<Result<TrainReport>>> = slots
         .into_iter()
-        .map(|s| s.into_inner().expect("remote sweep slot poisoned"))
+        .map(|s| s.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner))
         .collect();
     if let Some(i) = outs.iter().position(|o| matches!(o, Some(Err(_)))) {
         let Some(Err(e)) = outs[i].take() else { unreachable!() };
-        return Err(e).with_context(|| format!("sweep row {i} ('{}')", specs[i].label));
+        return Err(e)
+            .with_context(|| format!("sweep row {} ('{}')", rows[i].0, rows[i].1.label));
     }
     let mut reports = Vec::with_capacity(outs.len());
     for (i, out) in outs.into_iter().enumerate() {
         match out {
-            Some(Ok(rep)) => reports.push(rep),
+            Some(Ok(rep)) => reports.push((rows[i].0, rep)),
             _ => bail!(
-                "sweep row {i} ('{}') was never run (dispatch stopped early)",
-                specs[i].label
+                "sweep row {} ('{}') was never run (dispatch stopped early)",
+                rows[i].0,
+                rows[i].1.label
             ),
         }
     }
     Ok(reports)
+}
+
+/// Execute a set of `(run index, spec)` rows across a peer pool,
+/// returning `(run index, report)` pairs in row order. The journaled
+/// queue of the resident daemon and the one-shot `run_remote` both
+/// funnel through here; `on_row` fires as each row's report lands (in
+/// completion order, not row order) — the daemon journals there, so a
+/// row is durable the moment it finishes.
+pub(crate) fn dispatch_rows(
+    rows: &[(usize, RunSpec)],
+    peers: Vec<PeerDef<'_>>,
+    sink: &dyn EventSink,
+    opts: &RemoteOpts,
+    on_row: Option<&(dyn Fn(usize, &TrainReport) + Sync)>,
+) -> Result<Vec<(usize, TrainReport)>> {
+    if rows.is_empty() {
+        return Ok(Vec::new());
+    }
+    if peers.is_empty() {
+        bail!("remote sweep needs at least one peer (--remote HOST:PORT[,..])");
+    }
+    let slots: Vec<RowSlot> = (0..rows.len()).map(|_| Mutex::new(None)).collect();
+    let sched = Scheduler::new(rows, peers.len());
+    std::thread::scope(|scope| {
+        for (id, def) in peers.iter().enumerate() {
+            let ctx = PeerCtx {
+                id,
+                def,
+                rows,
+                slots: &slots,
+                sched: &sched,
+                sink,
+                on_row,
+                opts,
+            };
+            scope.spawn(move || peer_loop(ctx));
+        }
+    });
+    collapse(rows, slots)
 }
 
 /// Execute `specs` across a pool of remote peers, returning reports in
@@ -889,45 +1048,14 @@ pub fn run_remote(
     if specs.is_empty() {
         return Ok(Vec::new());
     }
-    if peers.is_empty() {
-        bail!("remote sweep needs at least one peer (--remote HOST:PORT[,..])");
-    }
     let parsed: Vec<PeerSpec> = peers
         .iter()
         .map(|p| parse_peer(p))
         .collect::<Result<Vec<_>>>()?;
-    // Display names: duplicate pool entries get a #id suffix so events
-    // and the per-peer JSONL rows stay distinguishable.
-    let names: Vec<String> = peers
-        .iter()
-        .enumerate()
-        .map(|(id, p)| {
-            if peers.iter().filter(|q| *q == p).count() > 1 {
-                format!("{p}#{id}")
-            } else {
-                p.clone()
-            }
-        })
-        .collect();
-    let slots: Vec<RowSlot> = (0..specs.len()).map(|_| Mutex::new(None)).collect();
-    let sched = Scheduler::new(specs, parsed.len());
-    std::thread::scope(|scope| {
-        for (id, (spec, name)) in parsed.iter().zip(&names).enumerate() {
-            let ctx = PeerCtx {
-                id,
-                spec,
-                name,
-                specs,
-                slots: &slots,
-                sched: &sched,
-                sink,
-                worker_exe,
-                opts,
-            };
-            scope.spawn(move || peer_loop(ctx));
-        }
-    });
-    collapse(specs, slots)
+    let rows: Vec<(usize, RunSpec)> = specs.iter().cloned().enumerate().collect();
+    let defs = peer_defs(peers, &parsed, worker_exe, opts);
+    let out = dispatch_rows(&rows, defs, sink, opts, None)?;
+    Ok(out.into_iter().map(|(_, r)| r).collect())
 }
 
 // ---------------------------------------------------------------------------
@@ -1010,7 +1138,7 @@ fn handle_conn(
         stream.try_clone().context("cloning connection")?,
     )));
     {
-        let mut w = writer.lock().unwrap();
+        let mut w = lock_unpoisoned(&writer);
         write_frame(
             &mut *w,
             &wire::encode_hello(&WireHello {
@@ -1038,7 +1166,7 @@ fn handle_conn(
                     break;
                 }
                 seq += 1;
-                let mut w = writer.lock().unwrap();
+                let mut w = lock_unpoisoned(&writer);
                 if write_frame(&mut *w, &wire::encode_heartbeat(seq)).is_err() {
                     let _ = sock.shutdown(Shutdown::Both);
                     break;
@@ -1067,7 +1195,7 @@ fn serve_rows(
             Ok(wire::Request::Shutdown) => return Ok(()),
             Ok(wire::Request::Spec(index, spec)) => (index, spec),
             Err(e) => {
-                let mut w = writer.lock().unwrap();
+                let mut w = lock_unpoisoned(&writer);
                 let _ = write_frame(&mut *w, &wire::encode_error(&format!("bad request: {e:#}")));
                 bail!("bad request frame: {e:#}");
             }
@@ -1080,7 +1208,7 @@ fn serve_rows(
             let broken = Arc::clone(&broken);
             let emitted = AtomicUsize::new(0);
             Arc::new(move |frame: &str| {
-                let mut w = writer.lock().unwrap();
+                let mut w = lock_unpoisoned(&writer);
                 if write_frame(&mut *w, frame).is_err() {
                     broken.store(true, Ordering::SeqCst);
                 }
@@ -1229,6 +1357,24 @@ mod tests {
         assert_eq!(backoff_delay(50, Duration::from_secs(1)), Duration::from_secs(8));
     }
 
+    /// Satellite regression: `Duration::MAX`-adjacent bases used to
+    /// panic on `Duration` multiplication overflow inside
+    /// `backoff_delay`; they must saturate at the 8 s cap instead.
+    #[test]
+    fn backoff_saturates_at_duration_max_adjacent_bases() {
+        let cap = Duration::from_secs(8);
+        assert_eq!(backoff_delay(1, Duration::MAX), cap);
+        assert_eq!(backoff_delay(2, Duration::MAX), cap);
+        assert_eq!(backoff_delay(usize::MAX, Duration::MAX), cap);
+        // One nanosecond shy of MAX, deepest shift: still the cap.
+        assert_eq!(backoff_delay(7, Duration::MAX - Duration::from_nanos(1)), cap);
+        // A base that overflows only once shifted.
+        let half = Duration::from_secs(u64::MAX / 2);
+        assert_eq!(backoff_delay(3, half), cap);
+        // Zero base never backs off, at any depth.
+        assert_eq!(backoff_delay(usize::MAX, Duration::ZERO), Duration::ZERO);
+    }
+
     #[test]
     fn remote_opts_defaults_are_sane() {
         let o = RemoteOpts::default();
@@ -1239,12 +1385,17 @@ mod tests {
         );
     }
 
+    /// Wrap specs as `(run index, spec)` dispatch rows.
+    fn as_rows(specs: Vec<RunSpec>) -> Vec<(usize, RunSpec)> {
+        specs.into_iter().enumerate().collect()
+    }
+
     /// A row whose backend no peer advertises must fail the sweep, not
     /// deadlock the scheduler.
     #[test]
     fn unroutable_rows_fail_instead_of_deadlocking() {
-        let specs = vec![RunSpec::new("row", TrainConfig::default())];
-        let sched = Scheduler::new(&specs, 1);
+        let rows = as_rows(vec![RunSpec::new("row", TrainConfig::default())]);
+        let sched = Scheduler::new(&rows, 1);
         sched.set_caps(0, vec!["definitely-not-native".into()]);
         match sched.next(0) {
             Grant::Unroutable(tasks) => {
@@ -1260,11 +1411,11 @@ mod tests {
     /// peers rank first so every peer gets probed.
     #[test]
     fn scheduler_prefers_low_ewma_peers() {
-        let specs = vec![
+        let rows = as_rows(vec![
             RunSpec::new("a", TrainConfig::default()),
             RunSpec::new("b", TrainConfig::default()),
-        ];
-        let sched = Scheduler::new(&specs, 2);
+        ]);
+        let sched = Scheduler::new(&rows, 2);
         sched.record_ewma(0, 50.0, 0.3);
         sched.record_ewma(1, 5.0, 0.3);
         {
@@ -1287,14 +1438,240 @@ mod tests {
     /// can fail the undispatched rows instead of hanging.
     #[test]
     fn last_dead_peer_orphans_the_queue() {
-        let specs = vec![
+        let rows = as_rows(vec![
             RunSpec::new("a", TrainConfig::default()),
             RunSpec::new("b", TrainConfig::default()),
-        ];
-        let sched = Scheduler::new(&specs, 2);
+        ]);
+        let sched = Scheduler::new(&rows, 2);
         assert!(sched.mark_dead(0).is_empty(), "one peer still lives");
         let orphans = sched.mark_dead(1);
         assert_eq!(orphans.len(), 2);
         assert!(matches!(sched.next(0), Grant::Exit));
+    }
+
+    /// Satellite regression (idle wakeups): a peer parked in `next()`
+    /// with nothing backing off must wait on the condvar, not poll.
+    /// The old 25 ms poll would re-evaluate ~16 times in 400 ms; the
+    /// deadline-driven wait allows only spurious wakeups (bounded
+    /// loosely at 3 here).
+    #[test]
+    fn idle_peer_parks_instead_of_polling() {
+        let rows = as_rows(vec![RunSpec::new("a", TrainConfig::default())]);
+        let sched = Scheduler::new(&rows, 2);
+        // Peer 0 takes the only row and holds it in flight.
+        let task = match sched.next(0) {
+            Grant::Run(t) => t,
+            _ => panic!("peer 0 should be granted the row"),
+        };
+        let baseline = sched.wakeups.load(Ordering::Relaxed);
+        std::thread::scope(|scope| {
+            // Peer 1 has nothing to do until the in-flight row settles:
+            // it must park, not spin.
+            scope.spawn(|| match sched.next(1) {
+                Grant::Exit => {}
+                _ => panic!("peer 1 should exit once the queue drains"),
+            });
+            std::thread::sleep(Duration::from_millis(400));
+            let idle_wakes = sched.wakeups.load(Ordering::Relaxed) - baseline;
+            assert!(
+                idle_wakes <= 3,
+                "idle peer woke {idle_wakes} times in 400 ms — next() is polling again"
+            );
+            // Settling the row drains the queue and releases peer 1.
+            drop(task);
+            sched.settle(false);
+        });
+    }
+
+    /// Satellite regression (poisoned mutexes): a panic while holding
+    /// the scheduler lock must not take down every other peer thread.
+    /// All lock sites recover the guard — the state is a plain queue,
+    /// always valid.
+    #[test]
+    fn scheduler_survives_poisoned_state_lock() {
+        let rows = as_rows(vec![
+            RunSpec::new("a", TrainConfig::default()),
+            RunSpec::new("b", TrainConfig::default()),
+        ]);
+        let sched = Scheduler::new(&rows, 1);
+        // Poison the state mutex the way a panicking peer thread would.
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = sched.state.lock().unwrap();
+            panic!("peer thread exploded while holding the scheduler lock");
+        }));
+        assert!(poison.is_err());
+        assert!(sched.state.is_poisoned());
+        // Every scheduler entry point still works on the poisoned lock.
+        let t = match sched.next(0) {
+            Grant::Run(t) => t,
+            _ => panic!("poisoned scheduler refused a grant"),
+        };
+        assert_eq!(t.index, 0);
+        sched.record_ewma(0, 5.0, 0.3);
+        sched.set_caps(0, vec!["native".into()]);
+        sched.settle(false);
+        match sched.next(0) {
+            Grant::Run(t2) => {
+                assert_eq!(t2.index, 1);
+                sched.requeue(t2, Duration::ZERO);
+            }
+            _ => panic!("poisoned scheduler refused the second grant"),
+        }
+        assert_eq!(sched.mark_dead(0).len(), 1, "queue drains on last death");
+    }
+
+    /// A transport that panics mid-dispatch — the regression shape for
+    /// the poisoned-mutex cascade: before the `catch_unwind` in
+    /// `peer_loop`, this panic unwound through the scoped thread and
+    /// killed the whole sweep.
+    struct PanickyTransport;
+
+    impl Transport for PanickyTransport {
+        fn peer(&self) -> &str {
+            "panicky"
+        }
+        fn send_spec(&mut self, _index: usize, _spec: &RunSpec) -> Result<()> {
+            panic!("transport exploded mid-send");
+        }
+        fn recv(&mut self) -> Result<Option<Frame>> {
+            unreachable!("send_spec always panics first")
+        }
+        fn finish_row(&mut self) -> Result<()> {
+            Ok(())
+        }
+        fn shutdown(&mut self) {}
+    }
+
+    /// An in-process transport that runs the row through the real
+    /// `wire::run_spec_row` loop and replays the emitted frames — the
+    /// full dispatch path with no subprocess or socket.
+    struct InlineTransport {
+        frames: VecDeque<String>,
+    }
+
+    impl Transport for InlineTransport {
+        fn peer(&self) -> &str {
+            "inline"
+        }
+        fn send_spec(&mut self, index: usize, spec: &RunSpec) -> Result<()> {
+            let buf = Arc::new(Mutex::new(VecDeque::new()));
+            let sink = Arc::clone(&buf);
+            let emit: Arc<dyn Fn(&str) + Send + Sync> = Arc::new(move |frame: &str| {
+                lock_unpoisoned(&sink).push_back(frame.to_string());
+            });
+            let _ = wire::run_spec_row(index, spec.clone(), emit);
+            self.frames = std::mem::take(&mut *lock_unpoisoned(&buf));
+            Ok(())
+        }
+        fn recv(&mut self) -> Result<Option<Frame>> {
+            match self.frames.pop_front() {
+                None => Ok(None),
+                Some(line) => wire::decode_frame(&line).map(Some),
+            }
+        }
+        fn finish_row(&mut self) -> Result<()> {
+            Ok(())
+        }
+        fn shutdown(&mut self) {}
+    }
+
+    fn micro_spec(label: &str) -> RunSpec {
+        let mut c = TrainConfig::default();
+        c.model = "lm_micro".into();
+        c.steps = 2;
+        c.eval_every = 0;
+        c.log_every = 0;
+        RunSpec::new(label, c)
+    }
+
+    /// Satellite regression (poison recovery, end to end): a transport
+    /// that panics mid-dispatch fails over to the healthy peer instead
+    /// of killing the sweep. The panic is caught in `peer_loop`,
+    /// surfaced as a transport death (RowRequeued event), and the row
+    /// re-dispatches; the sweep still returns every report.
+    #[test]
+    fn panicking_transport_fails_over_instead_of_killing_the_sweep() {
+        use super::super::events::CollectSink;
+        let rows = as_rows(vec![micro_spec("row-a"), micro_spec("row-b")]);
+        let panicked = AtomicUsize::new(0);
+        let peers = vec![
+            PeerDef {
+                name: "panicky".into(),
+                connect: Box::new(|| {
+                    if panicked.fetch_add(1, Ordering::SeqCst) == 0 {
+                        Ok(Box::new(PanickyTransport) as Box<dyn Transport>)
+                    } else {
+                        // After the panic the peer loop reconnects and
+                        // gets a healthy transport — the panic was a
+                        // one-off, not a dead peer.
+                        Ok(Box::new(InlineTransport { frames: VecDeque::new() }))
+                    }
+                }),
+            },
+            PeerDef {
+                name: "healthy".into(),
+                connect: Box::new(|| {
+                    Ok(Box::new(InlineTransport { frames: VecDeque::new() })
+                        as Box<dyn Transport>)
+                }),
+            },
+        ];
+        let sink = CollectSink::default();
+        let opts = RemoteOpts {
+            backoff_base: Duration::from_millis(10),
+            ..RemoteOpts::default()
+        };
+        let out = dispatch_rows(&rows, peers, &sink, &opts, None)
+            .expect("a panicking transport must not fail the sweep");
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, 0);
+        assert_eq!(out[1].0, 1);
+        assert!(panicked.load(Ordering::SeqCst) >= 1, "panicky transport never connected");
+        // The panic surfaced as a requeue with the panic message, not
+        // as a process abort.
+        let events = sink.take();
+        let requeued: Vec<String> = events
+            .iter()
+            .filter_map(|e| match e {
+                TrainEvent::RowRequeued { error, .. } => Some(error.clone()),
+                _ => None,
+            })
+            .collect();
+        assert!(
+            requeued.iter().any(|e| e.contains("panicked")),
+            "expected a RowRequeued event carrying the panic, got: {requeued:?}"
+        );
+    }
+
+    /// `on_row` fires per completed row with its run index — the hook
+    /// the resident daemon journals from.
+    #[test]
+    fn dispatch_rows_reports_completions_via_on_row() {
+        // Non-contiguous run indices: a journal-filtered resume set.
+        let rows = vec![(3usize, micro_spec("row-d")), (5usize, micro_spec("row-f"))];
+        let seen = Mutex::new(Vec::new());
+        let on_row = |run: usize, rep: &TrainReport| {
+            lock_unpoisoned(&seen).push((run, rep.steps));
+        };
+        let peers = vec![PeerDef {
+            name: "inline".into(),
+            connect: Box::new(|| {
+                Ok(Box::new(InlineTransport { frames: VecDeque::new() }) as Box<dyn Transport>)
+            }),
+        }];
+        let out = dispatch_rows(
+            &rows,
+            peers,
+            &super::super::events::NullSink,
+            &RemoteOpts::default(),
+            Some(&on_row),
+        )
+        .unwrap();
+        assert_eq!(out.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![3, 5]);
+        let mut hooks = lock_unpoisoned(&seen).clone();
+        hooks.sort_unstable();
+        assert_eq!(hooks.len(), 2);
+        assert_eq!(hooks[0].0, 3);
+        assert_eq!(hooks[1].0, 5);
     }
 }

@@ -1,0 +1,1025 @@
+//! `coordinator::serve` — the resident sweep scheduler (`coap serve`).
+//!
+//! PR 9's `run_remote` runs one sweep and exits; this module keeps the
+//! same peer pool resident behind a TCP endpoint and makes the work
+//! durable. Three pieces:
+//!
+//! 1. **[`Journal`]** — an append-only JSONL file under `--state-dir`.
+//!    Every accepted submission, every completed row's full report,
+//!    and every job verdict is appended and fsynced *before* it is
+//!    acknowledged or acted on, so a SIGKILL at any instant loses at
+//!    most work-in-flight — never an acknowledged job or a finished
+//!    row. On restart [`replay`] rebuilds the queue: finished jobs
+//!    serve their journaled reports, interrupted jobs re-enter the
+//!    queue and re-run **only their unfinished rows** (row reports are
+//!    deterministic functions of their `TrainConfig`, so a journaled
+//!    report and a re-run are bit-identical — the same contract
+//!    `tests/remote_sweep_parity.rs` pins for one-shot sweeps).
+//! 2. **The daemon loop** — clients submit [`wire::JobSpec`]s over the
+//!    v3 frames (`coap submit` is the in-tree client). A bounded queue
+//!    applies backpressure: a submit past `--queue-max` is refused in
+//!    the ack (`accepted:false`) and *not* journaled. One job runs at
+//!    a time (highest priority first, FIFO within a priority), its
+//!    rows fanned across the `--peers` pool through
+//!    [`remote::dispatch_rows`] — the same journaled queue serving the
+//!    one-shot path. Watchers get the job's `TrainEvent`s streamed as
+//!    `job_event` frames and a terminal `job_done`/`job_failed`.
+//! 3. **The client helpers** — [`client_submit`], [`client_watch`],
+//!    [`client_status`], [`client_shutdown`]: one connection, one
+//!    request frame, replies until terminal.
+//!
+//! The journal format is internal (like the wire format): it is a
+//! crash log for one daemon's state dir, not an interchange format;
+//! nothing outside this module may parse it.
+
+use super::events::{EventSink, TrainEvent};
+use super::remote::{self, read_frame, write_frame, PeerSpec, RemoteOpts};
+use super::sweep::RunSpec;
+use super::trainer::TrainReport;
+use super::wire::{self, JobSpec, JobStatus, ServeReply, ServeRequest, SubmitAck};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Default bound on jobs *waiting* in the queue (the running job does
+/// not count). Submits past the bound get `accepted:false`.
+pub const DEFAULT_QUEUE_MAX: usize = 16;
+
+/// `coap serve` knobs.
+#[derive(Debug, Clone)]
+pub struct DaemonOpts {
+    /// Directory holding the job journal; created if absent.
+    pub state_dir: PathBuf,
+    /// The peer pool every job's rows are dispatched across
+    /// (`proc[:exe]` or `host:port`, as in `--remote`).
+    pub peers: Vec<String>,
+    /// Bounded-queue backpressure threshold (waiting jobs).
+    pub queue_max: usize,
+    /// Dispatch retry/timeout knobs, shared with one-shot sweeps.
+    pub remote: RemoteOpts,
+    /// Test hook: exit(9) immediately after fsyncing the Nth row
+    /// journal entry (1-based, counted from daemon start) — a
+    /// deterministic stand-in for a SIGKILL mid-job, used by
+    /// `tests/serve_resume.rs` and mirrored by a real `kill -9` in CI.
+    pub die_after_rows: Option<usize>,
+}
+
+impl Default for DaemonOpts {
+    fn default() -> DaemonOpts {
+        DaemonOpts {
+            state_dir: PathBuf::from("serve-state"),
+            peers: vec!["proc".to_string()],
+            queue_max: DEFAULT_QUEUE_MAX,
+            remote: RemoteOpts::default(),
+            die_after_rows: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Journal
+// ---------------------------------------------------------------------------
+
+/// The append-only job journal. Each entry is one JSON line:
+///
+/// ```text
+/// {"t":"submit","job":1,"name":"table1","priority":0,"specs":[{label,cfg},..]}
+/// {"t":"row","job":1,"row":0,"report":{...}}       (full wire report)
+/// {"t":"done","job":1}
+/// {"t":"fail","job":1,"error":"..."}
+/// ```
+///
+/// Appends are fsynced before returning: an entry either survives a
+/// SIGKILL or was never acknowledged. Replay tolerates exactly one
+/// torn *trailing* line (the append a crash interrupted); corruption
+/// anywhere else is an error, not a guess.
+pub struct Journal {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl Journal {
+    pub fn open(state_dir: &Path) -> Result<Journal> {
+        std::fs::create_dir_all(state_dir)
+            .with_context(|| format!("creating state dir {}", state_dir.display()))?;
+        let path = state_dir.join("journal.jsonl");
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        Ok(Journal { file, path })
+    }
+
+    /// Append one entry durably: write, then fsync, then return.
+    fn append(&mut self, entry: &Json) -> Result<()> {
+        let line = entry.to_string();
+        self.file
+            .write_all(line.as_bytes())
+            .and_then(|_| self.file.write_all(b"\n"))
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        self.file
+            .sync_data()
+            .with_context(|| format!("fsyncing journal {}", self.path.display()))
+    }
+}
+
+fn jnum(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn submit_entry(job: u64, spec: &JobSpec) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("t".into(), Json::Str("submit".into()));
+    m.insert("job".into(), jnum(job));
+    m.insert("name".into(), Json::Str(spec.name.clone()));
+    m.insert("priority".into(), Json::Num(spec.priority as f64));
+    m.insert(
+        "specs".into(),
+        Json::Arr(spec.specs.iter().map(wire::spec_to_json).collect()),
+    );
+    Json::Obj(m)
+}
+
+fn row_entry(job: u64, row: usize, report: &TrainReport) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("t".into(), Json::Str("row".into()));
+    m.insert("job".into(), jnum(job));
+    m.insert("row".into(), jnum(row as u64));
+    m.insert("report".into(), wire::report_to_json(report));
+    Json::Obj(m)
+}
+
+fn verdict_entry(job: u64, failed: Option<&str>) -> Json {
+    let mut m = BTreeMap::new();
+    match failed {
+        None => {
+            m.insert("t".into(), Json::Str("done".into()));
+        }
+        Some(e) => {
+            m.insert("t".into(), Json::Str("fail".into()));
+            m.insert("error".into(), Json::Str(e.to_string()));
+        }
+    }
+    m.insert("job".into(), jnum(job));
+    Json::Obj(m)
+}
+
+/// A job's lifecycle. Replay maps any non-terminal state back to
+/// `Queued` — an interrupted "running" job just runs again, minus its
+/// journaled rows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed(String),
+}
+
+impl JobState {
+    fn label(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed(_) => "failed",
+        }
+    }
+}
+
+struct Job {
+    name: String,
+    priority: i64,
+    specs: Vec<RunSpec>,
+    /// Row index -> journaled report (completed rows only).
+    done_rows: BTreeMap<usize, TrainReport>,
+    state: JobState,
+}
+
+/// Replay a journal into the job table. Returns the jobs and the next
+/// unused job id.
+fn replay(path: &Path) -> Result<(BTreeMap<u64, Job>, u64)> {
+    let mut jobs: BTreeMap<u64, Job> = BTreeMap::new();
+    let data = match std::fs::read_to_string(path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading journal {}", path.display()))
+        }
+    };
+    let lines: Vec<&str> = data.lines().collect();
+    // A crash can tear exactly the final append (the write happens
+    // before the fsync); anything else is corruption.
+    let last = lines.len().saturating_sub(1);
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed: Result<()> = (|| {
+            let j = Json::parse(line).map_err(|e| anyhow!("{e}"))?;
+            let t = j
+                .get("t")
+                .and_then(|v| v.as_str())
+                .context("journal entry missing 't'")?
+                .to_string();
+            let job_id = j
+                .get("job")
+                .and_then(|v| v.as_usize())
+                .context("journal entry missing 'job'")? as u64;
+            match t.as_str() {
+                "submit" => {
+                    let name = j
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .context("submit entry missing 'name'")?
+                        .to_string();
+                    let priority = j
+                        .get("priority")
+                        .and_then(|v| v.as_f64())
+                        .context("submit entry missing 'priority'")?
+                        as i64;
+                    let specs = j
+                        .get("specs")
+                        .and_then(|v| v.as_arr())
+                        .context("submit entry missing 'specs'")?
+                        .iter()
+                        .map(wire::spec_from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    jobs.insert(
+                        job_id,
+                        Job {
+                            name,
+                            priority,
+                            specs,
+                            done_rows: BTreeMap::new(),
+                            state: JobState::Queued,
+                        },
+                    );
+                }
+                "row" => {
+                    let row = j
+                        .get("row")
+                        .and_then(|v| v.as_usize())
+                        .context("row entry missing 'row'")?;
+                    let report =
+                        wire::report_from_json(j.get("report").context("row entry missing 'report'")?)?;
+                    let job = jobs
+                        .get_mut(&job_id)
+                        .with_context(|| format!("row entry for unknown job {job_id}"))?;
+                    if row >= job.specs.len() {
+                        bail!("row entry {row} out of range for job {job_id}");
+                    }
+                    job.done_rows.insert(row, report);
+                }
+                "done" => {
+                    jobs.get_mut(&job_id)
+                        .with_context(|| format!("done entry for unknown job {job_id}"))?
+                        .state = JobState::Done;
+                }
+                "fail" => {
+                    let error = j
+                        .get("error")
+                        .and_then(|v| v.as_str())
+                        .context("fail entry missing 'error'")?
+                        .to_string();
+                    jobs.get_mut(&job_id)
+                        .with_context(|| format!("fail entry for unknown job {job_id}"))?
+                        .state = JobState::Failed(error);
+                }
+                other => bail!("unknown journal entry type '{other}'"),
+            }
+            Ok(())
+        })();
+        if let Err(e) = parsed {
+            if i == last {
+                eprintln!(
+                    "coap serve: dropping torn trailing journal line {} ({e:#})",
+                    i + 1
+                );
+                break;
+            }
+            return Err(e).with_context(|| {
+                format!("journal {} corrupt at line {}", path.display(), i + 1)
+            });
+        }
+    }
+    let next_id = jobs.keys().max().map_or(1, |m| m + 1);
+    Ok((jobs, next_id))
+}
+
+/// The next job to run: highest priority first, lowest id (submission
+/// order) within a priority. Only `Queued` jobs are candidates.
+fn next_runnable(jobs: &BTreeMap<u64, Job>) -> Option<u64> {
+    jobs.iter()
+        .filter(|(_, j)| j.state == JobState::Queued)
+        .max_by_key(|(id, j)| (j.priority, std::cmp::Reverse(**id)))
+        .map(|(id, _)| *id)
+}
+
+// ---------------------------------------------------------------------------
+// The daemon
+// ---------------------------------------------------------------------------
+
+struct ServeState {
+    jobs: BTreeMap<u64, Job>,
+    next_id: u64,
+}
+
+/// One watching connection: terminal frames close it.
+struct Watcher {
+    job: u64,
+    stream: TcpStream,
+}
+
+struct Shared {
+    state: Mutex<ServeState>,
+    /// Wakes the scheduler thread on submit.
+    cv: Condvar,
+    journal: Mutex<Journal>,
+    watchers: Mutex<Vec<Watcher>>,
+    /// Row journal entries appended since daemon start (the
+    /// `die_after_rows` hook counts these).
+    rows_journaled: AtomicUsize,
+    opts: DaemonOpts,
+}
+
+impl Shared {
+    /// Stream one dispatch event to every watcher of `job`, dropping
+    /// watchers whose connection died.
+    fn broadcast_event(&self, job: u64, ev: &TrainEvent) {
+        let frame = wire::encode_job_event(job, ev);
+        let mut ws = lock(&self.watchers);
+        ws.retain_mut(|w| w.job != job || write_frame(&mut w.stream, &frame).is_ok());
+    }
+
+    /// Send the terminal frame to every watcher of `job` and drop them.
+    fn broadcast_terminal(&self, job: u64, frame: &str) {
+        let mut ws = lock(&self.watchers);
+        ws.retain_mut(|w| {
+            if w.job != job {
+                return true;
+            }
+            let _ = write_frame(&mut w.stream, frame);
+            false
+        });
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Per-job event sink: forwards every dispatch event to the job's
+/// watchers as `job_event` frames.
+struct JobSink<'a> {
+    job: u64,
+    shared: &'a Shared,
+}
+
+impl EventSink for JobSink<'_> {
+    fn event(&self, ev: &TrainEvent) {
+        self.shared.broadcast_event(self.job, ev);
+    }
+}
+
+/// Run the resident scheduler daemon on `listen`. Prints `serving
+/// <addr>` on stdout once bound (ephemeral-port discovery, like
+/// serve-worker's `listening` banner), replays the journal, resumes
+/// interrupted jobs, then accepts client connections until killed or
+/// asked to shut down.
+pub fn serve(listen: &str, opts: DaemonOpts) -> Result<()> {
+    let mut journal = Journal::open(&opts.state_dir)?;
+    let (jobs, next_id) = replay(&journal.path)?;
+    let resumed = jobs
+        .values()
+        .filter(|j| j.state == JobState::Queued)
+        .count();
+    // Validate the pool up front: a typo'd peer should fail the daemon
+    // at startup, not every job forever.
+    for p in &opts.peers {
+        remote::parse_peer(p)?;
+    }
+    if opts.peers.is_empty() {
+        bail!("coap serve needs at least one peer (--peers proc[,host:port,..])");
+    }
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("binding coap serve to {listen}"))?;
+    let addr = listener.local_addr().context("reading bound address")?;
+    println!("serving {addr}");
+    eprintln!(
+        "coap serve: listening on {addr} (wire v{}, state dir {}, {} job(s) replayed, \
+         {resumed} to resume, peers: {})",
+        wire::WIRE_VERSION,
+        opts.state_dir.display(),
+        jobs.len(),
+        opts.peers.join(",")
+    );
+    // Compact debris from a crash mid-append: replay already dropped a
+    // torn trailing line; appending after it would corrupt the file
+    // for the *next* replay, so rewrite the journal to the replayed
+    // truth. (Cheap: journals are per-state-dir and job-scale.)
+    journal = rewrite_journal(journal, &jobs)?;
+    let shared = Arc::new(Shared {
+        state: Mutex::new(ServeState { jobs, next_id }),
+        cv: Condvar::new(),
+        journal: Mutex::new(journal),
+        watchers: Mutex::new(Vec::new()),
+        rows_journaled: AtomicUsize::new(0),
+        opts,
+    });
+    {
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || scheduler_loop(&shared));
+    }
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("coap serve: accept failed: {e}");
+                continue;
+            }
+        };
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            let who = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?".into());
+            if let Err(e) = handle_client(stream, &shared) {
+                eprintln!("coap serve: connection {who} failed: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+/// Rewrite the journal from replayed state (dropping any torn tail).
+/// The rewrite itself is crash-safe the same way `Checkpoint::save`
+/// is: full tmp write, fsync, rename.
+fn rewrite_journal(journal: Journal, jobs: &BTreeMap<u64, Job>) -> Result<Journal> {
+    let path = journal.path.clone();
+    let state_dir = path
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."));
+    drop(journal);
+    let tmp = path.with_extension("jsonl.tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        for (id, job) in jobs {
+            let spec = JobSpec {
+                name: job.name.clone(),
+                priority: job.priority,
+                specs: job.specs.clone(),
+            };
+            writeln!(f, "{}", submit_entry(*id, &spec))?;
+            for (row, rep) in &job.done_rows {
+                writeln!(f, "{}", row_entry(*id, *row, rep))?;
+            }
+            match &job.state {
+                JobState::Done => writeln!(f, "{}", verdict_entry(*id, None))?,
+                JobState::Failed(e) => writeln!(f, "{}", verdict_entry(*id, Some(e)))?,
+                JobState::Queued | JobState::Running => {}
+            }
+        }
+        f.sync_all().context("fsyncing rewritten journal")?;
+    }
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+    Journal::open(&state_dir)
+}
+
+/// The resident loop: pop the highest-priority queued job, run its
+/// unfinished rows across the peer pool, journal as rows land, settle
+/// the verdict. One job at a time — rows, not jobs, are the unit of
+/// parallelism (a job's rows already saturate the pool).
+fn scheduler_loop(shared: &Shared) {
+    loop {
+        let (id, specs, done) = {
+            let mut st = lock(&shared.state);
+            let id = loop {
+                match next_runnable(&st.jobs) {
+                    Some(id) => break id,
+                    None => {
+                        st = shared
+                            .cv
+                            .wait(st)
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    }
+                }
+            };
+            let job = st.jobs.get_mut(&id).expect("next_runnable returned a live id");
+            job.state = JobState::Running;
+            (id, job.specs.clone(), job.done_rows.keys().copied().collect::<Vec<_>>())
+        };
+        let verdict = run_job(shared, id, &specs, &done);
+        // Journal the verdict (done and fail alike): a deterministic
+        // row failure must stay failed across restarts, not re-run on
+        // every daemon start.
+        {
+            let entry = match &verdict {
+                Ok(()) => verdict_entry(id, None),
+                Err(e) => verdict_entry(id, Some(&format!("{e:#}"))),
+            };
+            let mut journal = lock(&shared.journal);
+            if let Err(e) = journal.append(&entry) {
+                eprintln!("coap serve: journaling job {id} verdict failed: {e:#}");
+            }
+        }
+        let frame = {
+            let mut st = lock(&shared.state);
+            let job = st.jobs.get_mut(&id).expect("running job vanished");
+            match &verdict {
+                Ok(()) => {
+                    job.state = JobState::Done;
+                    let reports: Vec<TrainReport> =
+                        job.done_rows.values().cloned().collect();
+                    wire::encode_job_done(id, &reports)
+                }
+                Err(e) => {
+                    job.state = JobState::Failed(format!("{e:#}"));
+                    wire::encode_job_failed(id, &format!("{e:#}"))
+                }
+            }
+        };
+        shared.broadcast_terminal(id, &frame);
+    }
+}
+
+/// Run one job's unfinished rows. Completed rows are served from the
+/// journal (never re-run); each newly finished row is journaled and
+/// fsynced from the dispatch `on_row` hook *before* the job can
+/// conclude — the durability point the kill-and-restart test probes.
+fn run_job(shared: &Shared, id: u64, specs: &[RunSpec], done: &[usize]) -> Result<()> {
+    let rows: Vec<(usize, RunSpec)> = specs
+        .iter()
+        .cloned()
+        .enumerate()
+        .filter(|(i, _)| !done.contains(i))
+        .collect();
+    if !rows.is_empty() {
+        let parsed: Vec<PeerSpec> = shared
+            .opts
+            .peers
+            .iter()
+            .map(|p| remote::parse_peer(p))
+            .collect::<Result<Vec<_>>>()?;
+        let defs = remote::peer_defs(&shared.opts.peers, &parsed, None, &shared.opts.remote);
+        let sink = JobSink { job: id, shared };
+        let on_row = |row: usize, rep: &TrainReport| {
+            {
+                let mut journal = lock(&shared.journal);
+                if let Err(e) = journal.append(&row_entry(id, row, rep)) {
+                    // A dead journal means resume would re-run this row
+                    // — correct, just wasteful. Keep going.
+                    eprintln!("coap serve: journaling job {id} row {row} failed: {e:#}");
+                }
+            }
+            let n = shared.rows_journaled.fetch_add(1, Ordering::SeqCst) + 1;
+            if shared.opts.die_after_rows == Some(n) {
+                // Test hook: die exactly at the durability point, no
+                // unwinding — the journal has the row, nothing else
+                // survives. CI does the same with a real SIGKILL.
+                std::process::exit(9);
+            }
+            let mut st = lock(&shared.state);
+            if let Some(job) = st.jobs.get_mut(&id) {
+                job.done_rows.insert(row, rep.clone());
+            }
+        };
+        remote::dispatch_rows(&rows, defs, &sink, &shared.opts.remote, Some(&on_row))
+            .with_context(|| format!("job {id} dispatch"))?;
+    }
+    Ok(())
+}
+
+/// One client connection: a single request frame, then replies.
+fn handle_client(mut stream: TcpStream, shared: &Shared) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let line = match read_frame(&mut stream)? {
+        None => return Ok(()), // connected and left
+        Some(l) => l,
+    };
+    match wire::decode_serve_request(&line) {
+        Ok(ServeRequest::Submit(job)) => {
+            let ack = submit(shared, job);
+            write_frame(&mut stream, &wire::encode_ack(&ack))
+        }
+        Ok(ServeRequest::Status) => {
+            let st = lock(&shared.state);
+            let rows: Vec<JobStatus> = st
+                .jobs
+                .iter()
+                .map(|(id, j)| JobStatus {
+                    job: *id,
+                    name: j.name.clone(),
+                    priority: j.priority,
+                    state: j.state.label().to_string(),
+                    rows_done: j.done_rows.len(),
+                    rows_total: j.specs.len(),
+                })
+                .collect();
+            drop(st);
+            write_frame(&mut stream, &wire::encode_jobs(&rows))
+        }
+        Ok(ServeRequest::Watch { job }) => {
+            let st = lock(&shared.state);
+            let frame = match st.jobs.get(&job) {
+                None => Some(wire::encode_job_failed(job, "unknown job")),
+                Some(j) => match &j.state {
+                    JobState::Done => {
+                        let reports: Vec<TrainReport> = j.done_rows.values().cloned().collect();
+                        Some(wire::encode_job_done(job, &reports))
+                    }
+                    JobState::Failed(e) => Some(wire::encode_job_failed(job, e)),
+                    JobState::Queued | JobState::Running => None,
+                },
+            };
+            match frame {
+                Some(f) => {
+                    drop(st);
+                    write_frame(&mut stream, &f)
+                }
+                None => {
+                    // Live job: the stream moves into the watcher list
+                    // *under the state lock* — the scheduler needs that
+                    // lock to settle the verdict, so it cannot broadcast
+                    // the terminal frame before this watcher is listed.
+                    lock(&shared.watchers).push(Watcher { job, stream });
+                    drop(st);
+                    Ok(())
+                }
+            }
+        }
+        Ok(ServeRequest::Shutdown) => {
+            eprintln!("coap serve: shutdown requested; journal is durable, exiting");
+            std::process::exit(0);
+        }
+        Err(e) => {
+            let _ = write_frame(
+                &mut stream,
+                &wire::encode_job_failed(0, &format!("bad request: {e:#}")),
+            );
+            bail!("bad request frame: {e:#}");
+        }
+    }
+}
+
+/// Accept or refuse a submission. An accepted job is journaled and
+/// fsynced *before* the ack — `accepted:true` means the job survives
+/// any crash from here on.
+fn submit(shared: &Shared, job: JobSpec) -> SubmitAck {
+    if job.specs.is_empty() {
+        return SubmitAck {
+            job: 0,
+            accepted: false,
+            reason: "job has no rows".into(),
+            queued: 0,
+        };
+    }
+    let mut st = lock(&shared.state);
+    let queued = st
+        .jobs
+        .values()
+        .filter(|j| j.state == JobState::Queued)
+        .count();
+    if queued >= shared.opts.queue_max {
+        return SubmitAck {
+            job: 0,
+            accepted: false,
+            reason: format!(
+                "queue full: {queued} job(s) queued (bounded at {}); resubmit later",
+                shared.opts.queue_max
+            ),
+            queued,
+        };
+    }
+    let id = st.next_id;
+    {
+        let mut journal = lock(&shared.journal);
+        if let Err(e) = journal.append(&submit_entry(id, &job)) {
+            return SubmitAck {
+                job: 0,
+                accepted: false,
+                reason: format!("journal append failed: {e:#}"),
+                queued,
+            };
+        }
+    }
+    st.next_id += 1;
+    st.jobs.insert(
+        id,
+        Job {
+            name: job.name,
+            priority: job.priority,
+            specs: job.specs,
+            done_rows: BTreeMap::new(),
+            state: JobState::Queued,
+        },
+    );
+    shared.cv.notify_all();
+    SubmitAck { job: id, accepted: true, reason: String::new(), queued: queued + 1 }
+}
+
+// ---------------------------------------------------------------------------
+// Client helpers (`coap submit` and tests)
+// ---------------------------------------------------------------------------
+
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let sock: SocketAddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving '{addr}'"))?
+        .next()
+        .with_context(|| format!("'{addr}' resolved to no address"))?;
+    let stream = TcpStream::connect_timeout(&sock, timeout)
+        .with_context(|| format!("connecting to coap serve at {addr}"))?;
+    stream.set_nodelay(true).ok();
+    Ok(stream)
+}
+
+/// Submit a job; the ack carries the assigned id (or the backpressure
+/// refusal).
+pub fn client_submit(addr: &str, job: &JobSpec, timeout: Duration) -> Result<SubmitAck> {
+    let mut stream = connect(addr, timeout)?;
+    write_frame(&mut stream, &wire::encode_submit(job))?;
+    let line = read_frame(&mut stream)?
+        .with_context(|| format!("coap serve at {addr} hung up before its ack"))?;
+    match wire::decode_serve_reply(&line)? {
+        ServeReply::Ack(a) => Ok(a),
+        _ => bail!("coap serve replied to a submit with a non-ack frame"),
+    }
+}
+
+/// Queue snapshot.
+pub fn client_status(addr: &str, timeout: Duration) -> Result<Vec<JobStatus>> {
+    let mut stream = connect(addr, timeout)?;
+    write_frame(&mut stream, &wire::encode_status_request())?;
+    let line = read_frame(&mut stream)?
+        .with_context(|| format!("coap serve at {addr} hung up before its status reply"))?;
+    match wire::decode_serve_reply(&line)? {
+        ServeReply::Jobs(j) => Ok(j),
+        _ => bail!("coap serve replied to a status with a non-jobs frame"),
+    }
+}
+
+/// Watch a job to its terminal frame, forwarding streamed events to
+/// `sink`; returns the job's reports in spec order. Blocks as long as
+/// the job runs (no read timeout — a queued job may sit behind others).
+pub fn client_watch(
+    addr: &str,
+    job: u64,
+    timeout: Duration,
+    sink: Option<&dyn EventSink>,
+) -> Result<Vec<TrainReport>> {
+    let mut stream = connect(addr, timeout)?;
+    write_frame(&mut stream, &wire::encode_watch(job))?;
+    loop {
+        let line = read_frame(&mut stream)?
+            .with_context(|| format!("coap serve at {addr} hung up mid-watch of job {job}"))?;
+        match wire::decode_serve_reply(&line)? {
+            ServeReply::JobEvent { event, .. } => {
+                if let Some(s) = sink {
+                    s.event(&event);
+                }
+            }
+            ServeReply::JobDone { reports, .. } => return Ok(reports),
+            ServeReply::JobFailed { error, .. } => {
+                bail!("job {job} failed: {error}")
+            }
+            _ => bail!("unexpected frame mid-watch"),
+        }
+    }
+}
+
+/// Ask the daemon to exit (the journal makes this safe at any point).
+pub fn client_shutdown(addr: &str, timeout: Duration) -> Result<()> {
+    let mut stream = connect(addr, timeout)?;
+    write_frame(&mut stream, &wire::encode_shutdown())
+}
+
+// ---------------------------------------------------------------------------
+// Test/CI helper: spawn a daemon on an ephemeral port
+// ---------------------------------------------------------------------------
+
+/// A spawned `coap serve` child (tests). Killed on drop.
+pub struct DaemonHandle {
+    pub addr: String,
+    child: Child,
+    _stdout: BufReader<ChildStdout>,
+}
+
+impl DaemonHandle {
+    /// SIGKILL the daemon (the crash the journal exists for).
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    /// Wait for the daemon to exit on its own (the `die_after_rows`
+    /// hook path).
+    pub fn wait_exit(&mut self) -> Result<std::process::ExitStatus> {
+        self.child.wait().context("waiting for coap serve")
+    }
+}
+
+impl Drop for DaemonHandle {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn `exe serve --listen 127.0.0.1:0 --state-dir <dir> <extra>`
+/// and wait for its `serving <addr>` banner.
+pub fn spawn_serve(exe: &Path, state_dir: &Path, extra_args: &[&str]) -> Result<DaemonHandle> {
+    let mut child = Command::new(exe)
+        .arg("serve")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--state-dir")
+        .arg(state_dir)
+        .args(extra_args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .with_context(|| format!("spawning coap serve {}", exe.display()))?;
+    let mut stdout = BufReader::new(child.stdout.take().context("no stdout")?);
+    let mut banner = String::new();
+    stdout
+        .read_line(&mut banner)
+        .context("reading coap serve banner")?;
+    let addr = banner
+        .trim()
+        .strip_prefix("serving ")
+        .with_context(|| format!("unexpected coap serve banner: {banner:?}"))?
+        .to_string();
+    if addr.is_empty() {
+        let _ = child.kill();
+        bail!("coap serve exited before binding");
+    }
+    Ok(DaemonHandle { addr, child, _stdout: stdout })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::coordinator::metrics::EvalPoint;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("coap_serve_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn spec(label: &str) -> RunSpec {
+        let mut c = TrainConfig::default();
+        c.steps = 3;
+        RunSpec::new(label, c)
+    }
+
+    fn report(label: &str) -> TrainReport {
+        TrainReport {
+            label: label.into(),
+            model: "lm_micro".into(),
+            steps: 3,
+            final_train_loss: 1.5,
+            final_eval: EvalPoint {
+                step: 3,
+                loss: 1.0,
+                ppl: std::f64::consts::E,
+                accuracy: None,
+                aux: None,
+            },
+            wall: Duration::from_millis(12),
+            fwdbwd_time: Duration::from_millis(9),
+            opt_step_time: Duration::from_micros(7),
+            proj_time: Duration::ZERO,
+            optimizer_bytes: 4096,
+            opt_transient_bytes: 0,
+            param_bytes: 1 << 20,
+            activation_peak_bytes: 3 << 16,
+            activation_analytic_bytes: 1 << 17,
+            ceu_total: f64::NAN,
+            train_losses: vec![(1, 2.0)],
+            ceu_curve: vec![],
+            evals: vec![],
+        }
+    }
+
+    /// The journal survives a replay cycle: submits, rows (with
+    /// non-finite report floats), verdicts; a torn trailing line is
+    /// dropped, mid-file corruption is a hard error.
+    #[test]
+    fn journal_replays_and_tolerates_torn_tail() {
+        let dir = tmpdir("journal");
+        let mut j = Journal::open(&dir).unwrap();
+        let job = JobSpec {
+            name: "t1".into(),
+            priority: 2,
+            specs: vec![spec("a"), spec("b")],
+        };
+        j.append(&submit_entry(1, &job)).unwrap();
+        j.append(&row_entry(1, 0, &report("a"))).unwrap();
+        j.append(&submit_entry(2, &JobSpec { name: "t2".into(), priority: 0, specs: vec![spec("c")] }))
+            .unwrap();
+        j.append(&verdict_entry(2, Some("exploded"))).unwrap();
+        let (jobs, next_id) = replay(&j.path).unwrap();
+        assert_eq!(next_id, 3);
+        assert_eq!(jobs.len(), 2);
+        let j1 = &jobs[&1];
+        assert_eq!(j1.state, JobState::Queued, "interrupted job resumes");
+        assert_eq!(j1.specs.len(), 2);
+        assert_eq!(j1.done_rows.len(), 1);
+        assert_eq!(j1.done_rows[&0].label, "a");
+        assert!(j1.done_rows[&0].ceu_total.is_nan(), "exact float replay");
+        assert_eq!(jobs[&2].state, JobState::Failed("exploded".into()));
+        // A torn trailing append (crash mid-write) is dropped...
+        let path = j.path.clone();
+        let mut raw = std::fs::read_to_string(&path).unwrap();
+        raw.push_str("{\"t\":\"row\",\"job\":1,\"ro");
+        std::fs::write(&path, &raw).unwrap();
+        let (jobs2, _) = replay(&path).unwrap();
+        assert_eq!(jobs2[&1].done_rows.len(), 1);
+        // ...but the same garbage mid-file is corruption.
+        let torn_then_more = raw + "\n" + &verdict_entry(1, None).to_string();
+        std::fs::write(&path, torn_then_more).unwrap();
+        assert!(replay(&path).is_err(), "mid-file corruption must not be guessed over");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Replay of an empty / missing journal is a clean empty state.
+    #[test]
+    fn empty_journal_replays_clean() {
+        let dir = tmpdir("empty");
+        let (jobs, next_id) = replay(&dir.join("journal.jsonl")).unwrap();
+        assert!(jobs.is_empty());
+        assert_eq!(next_id, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Priority order: higher priority first, FIFO (lower id) within a
+    /// priority; running/done/failed jobs are never picked.
+    #[test]
+    fn next_runnable_orders_by_priority_then_id() {
+        let mk = |priority, state| Job {
+            name: "j".into(),
+            priority,
+            specs: vec![spec("r")],
+            done_rows: BTreeMap::new(),
+            state,
+        };
+        let mut jobs = BTreeMap::new();
+        assert_eq!(next_runnable(&jobs), None);
+        jobs.insert(1, mk(0, JobState::Queued));
+        jobs.insert(2, mk(5, JobState::Queued));
+        jobs.insert(3, mk(5, JobState::Queued));
+        jobs.insert(4, mk(9, JobState::Done));
+        jobs.insert(5, mk(9, JobState::Running));
+        jobs.insert(6, mk(9, JobState::Failed("x".into())));
+        // Highest queued priority is 5; id 2 beats id 3 (FIFO).
+        assert_eq!(next_runnable(&jobs), Some(2));
+        jobs.get_mut(&2).unwrap().state = JobState::Running;
+        assert_eq!(next_runnable(&jobs), Some(3));
+        jobs.get_mut(&3).unwrap().state = JobState::Done;
+        assert_eq!(next_runnable(&jobs), Some(1));
+        jobs.get_mut(&1).unwrap().state = JobState::Failed("y".into());
+        assert_eq!(next_runnable(&jobs), None);
+    }
+
+    /// The journal rewrite (startup compaction) preserves replayed
+    /// state exactly, including done-row reports.
+    #[test]
+    fn journal_rewrite_preserves_state() {
+        let dir = tmpdir("rewrite");
+        let mut j = Journal::open(&dir).unwrap();
+        let job = JobSpec { name: "t".into(), priority: 1, specs: vec![spec("a"), spec("b")] };
+        j.append(&submit_entry(1, &job)).unwrap();
+        j.append(&row_entry(1, 1, &report("b"))).unwrap();
+        // Torn tail to be compacted away.
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&j.path).unwrap();
+            f.write_all(b"{\"t\":\"don").unwrap();
+        }
+        let (jobs, _) = replay(&j.path).unwrap();
+        let j2 = rewrite_journal(j, &jobs).unwrap();
+        let (jobs2, next_id) = replay(&j2.path).unwrap();
+        assert_eq!(next_id, 2);
+        assert_eq!(jobs2[&1].state, JobState::Queued);
+        assert_eq!(jobs2[&1].done_rows.len(), 1);
+        assert_eq!(
+            Json::to_string(&wire::report_to_json(&jobs2[&1].done_rows[&1])),
+            Json::to_string(&wire::report_to_json(&jobs[&1].done_rows[&1])),
+            "rewrite must preserve reports bit-exactly"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -9,22 +9,34 @@
 //! frame carries a version and a frame outside the accepted range
 //! (`1..=`[`WIRE_VERSION`]) is a decode error, never a guess. v2 added
 //! the `heartbeat`/`hello`/`shutdown` frames and the spec-frame
-//! `backend`/`precision` routing keys; v1 frames still decode.
+//! `backend`/`precision` routing keys; v3 added the `coap serve` job
+//! frames (`submit`/`ack`/`status`/`watch`/`jobs`/`job_event`/
+//! `job_done`/`job_failed`). v1 and v2 frames still decode.
 //!
 //! One frame per line, each a single JSON object (`util::json`; no
 //! serde offline):
 //!
 //! ```text
 //! coordinator -> worker:
-//!   {"v":2,"frame":"spec","spec":{"index":3,"label":"COAP",
+//!   {"v":3,"frame":"spec","spec":{"index":3,"label":"COAP",
 //!                                 "backend":"native","precision":"f32","cfg":{...}}}
-//!   {"v":2,"frame":"shutdown"}                                    (serve-worker only)
+//!   {"v":3,"frame":"shutdown"}                                    (serve-worker only)
 //! worker -> coordinator (in order):
-//!   {"v":2,"frame":"hello","hello":{"proto":2,"peer":"...","backends":["native"]}}
-//!   {"v":2,"frame":"event","event":{"type":"run_started",...}}    (0+)
-//!   {"v":2,"frame":"heartbeat","heartbeat":{"seq":7}}             (0+, serve-worker)
-//!   {"v":2,"frame":"report","report":{...}}                       (1, last on success)
-//!   {"v":2,"frame":"error","error":"..."}                         (1, last on failure)
+//!   {"v":3,"frame":"hello","hello":{"proto":3,"peer":"...","backends":["native"]}}
+//!   {"v":3,"frame":"event","event":{"type":"run_started",...}}    (0+)
+//!   {"v":3,"frame":"heartbeat","heartbeat":{"seq":7}}             (0+, serve-worker)
+//!   {"v":3,"frame":"report","report":{...}}                       (1, last on success)
+//!   {"v":3,"frame":"error","error":"..."}                         (1, last on failure)
+//! client -> `coap serve` daemon (v3):
+//!   {"v":3,"frame":"submit","submit":{"name":"t1","priority":0,"specs":[...]}}
+//!   {"v":3,"frame":"status"}
+//!   {"v":3,"frame":"watch","watch":{"job":1}}
+//! daemon -> client (v3):
+//!   {"v":3,"frame":"ack","ack":{"job":1,"accepted":true,"reason":"","queued":1}}
+//!   {"v":3,"frame":"jobs","jobs":[{"job":1,"name":"t1","priority":0,...}]}
+//!   {"v":3,"frame":"job_event","job_event":{"job":1,"event":{...}}}  (0+, watch)
+//!   {"v":3,"frame":"job_done","job_done":{"job":1,"reports":[...]}}
+//!   {"v":3,"frame":"job_failed","job_failed":{"job":1,"error":"..."}}
 //! ```
 //!
 //! Scalar encodings are exact: non-finite floats go through
@@ -60,10 +72,11 @@ use std::sync::Arc;
 use std::time::Duration;
 
 /// Version stamped on every emitted frame. Decoders accept the whole
-/// `1..=WIRE_VERSION` range (v2 only added frame kinds and optional
-/// spec keys), so a parent from this build still reads v1 streams; a
-/// frame from a *newer* build is a version-mismatch error.
-pub const WIRE_VERSION: u64 = 2;
+/// `1..=WIRE_VERSION` range (v2 and v3 only added frame kinds and
+/// optional spec keys), so a parent from this build still reads v1 and
+/// v2 streams; a frame from a *newer* build is a version-mismatch
+/// error.
+pub const WIRE_VERSION: u64 = 3;
 
 /// Hard ceiling on one frame line's byte length. Enforced before any
 /// payload allocation or JSON parsing: `decode_frame`/`decode_spec`
@@ -565,6 +578,281 @@ pub fn decode_request(line: &str) -> Result<Request> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// The `coap serve` job protocol (v3) — submissions, acks, job streams
+// ---------------------------------------------------------------------------
+
+/// Encode one sweep row as a bare `{label, cfg}` object — the shape
+/// shared by `submit` frames and the daemon's job journal. Scalars ride
+/// the same exact encodings as everything else on the wire, so a spec
+/// that crosses a submit/replay boundary decodes bit-identically.
+pub fn spec_to_json(spec: &RunSpec) -> Json {
+    obj(vec![
+        ("label", Json::Str(spec.label.clone())),
+        ("cfg", spec.cfg.to_json()),
+    ])
+}
+
+/// Decode a `{label, cfg}` sweep row.
+pub fn spec_from_json(j: &Json) -> Result<RunSpec> {
+    Ok(RunSpec {
+        label: string(j, "label")?,
+        cfg: TrainConfig::from_json(field(j, "cfg")?)?,
+    })
+}
+
+/// Signed integer on the wire (priorities): exact within
+/// `±MAX_SAFE_INT`, refused outside it.
+fn int_wire(v: i64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn int_unwire(j: &Json, k: &str) -> Result<i64> {
+    let v = field(j, k)?
+        .as_f64()
+        .with_context(|| format!("wire key '{k}' must be a number"))?;
+    if v.fract() != 0.0 || v.abs() > MAX_SAFE_INT {
+        bail!("wire key '{k}' must be an integer within ±2^53, got {v}");
+    }
+    Ok(v as i64)
+}
+
+/// One job submission: a named batch of sweep rows with a scheduling
+/// priority (higher runs first; ties run in submission order).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub priority: i64,
+    pub specs: Vec<RunSpec>,
+}
+
+/// One client->daemon request on a `coap serve` connection.
+pub enum ServeRequest {
+    Submit(JobSpec),
+    /// Queue snapshot: replied with a `jobs` frame.
+    Status,
+    /// Stream `job_event` frames for the job until its terminal
+    /// `job_done`/`job_failed`; an already-finished job gets its
+    /// terminal frame immediately (reports replayed from the journal).
+    Watch { job: u64 },
+    /// Graceful daemon shutdown (the journal makes it safe at any
+    /// point; a SIGKILL is equally safe, just less polite).
+    Shutdown,
+}
+
+/// The daemon's submit reply. `accepted: false` is the backpressure
+/// path: the bounded queue is full and the job was **not** journaled —
+/// resubmit later. `queued` is the number of jobs waiting (not
+/// running) after this submit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubmitAck {
+    pub job: u64,
+    pub accepted: bool,
+    pub reason: String,
+    pub queued: usize,
+}
+
+/// One row of a `jobs` status reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobStatus {
+    pub job: u64,
+    pub name: String,
+    pub priority: i64,
+    pub state: String,
+    pub rows_done: usize,
+    pub rows_total: usize,
+}
+
+/// One daemon->client frame.
+pub enum ServeReply {
+    Ack(SubmitAck),
+    Jobs(Vec<JobStatus>),
+    JobEvent { job: u64, event: TrainEvent },
+    JobDone { job: u64, reports: Vec<TrainReport> },
+    JobFailed { job: u64, error: String },
+}
+
+pub fn encode_submit(job: &JobSpec) -> String {
+    frame_line(
+        "submit",
+        "submit",
+        obj(vec![
+            ("name", Json::Str(job.name.clone())),
+            ("priority", int_wire(job.priority)),
+            ("specs", Json::Arr(job.specs.iter().map(spec_to_json).collect())),
+        ]),
+    )
+}
+
+pub fn encode_status_request() -> String {
+    bare_frame("status")
+}
+
+pub fn encode_watch(job: u64) -> String {
+    frame_line("watch", "watch", obj(vec![("job", Json::Num(job as f64))]))
+}
+
+pub fn encode_ack(ack: &SubmitAck) -> String {
+    frame_line(
+        "ack",
+        "ack",
+        obj(vec![
+            ("job", Json::Num(ack.job as f64)),
+            ("accepted", Json::Bool(ack.accepted)),
+            ("reason", Json::Str(ack.reason.clone())),
+            ("queued", Json::Num(ack.queued as f64)),
+        ]),
+    )
+}
+
+pub fn encode_jobs(jobs: &[JobStatus]) -> String {
+    frame_line(
+        "jobs",
+        "jobs",
+        Json::Arr(
+            jobs.iter()
+                .map(|s| {
+                    obj(vec![
+                        ("job", Json::Num(s.job as f64)),
+                        ("name", Json::Str(s.name.clone())),
+                        ("priority", int_wire(s.priority)),
+                        ("state", Json::Str(s.state.clone())),
+                        ("rows_done", Json::Num(s.rows_done as f64)),
+                        ("rows_total", Json::Num(s.rows_total as f64)),
+                    ])
+                })
+                .collect(),
+        ),
+    )
+}
+
+pub fn encode_job_event(job: u64, ev: &TrainEvent) -> String {
+    frame_line(
+        "job_event",
+        "job_event",
+        obj(vec![("job", Json::Num(job as f64)), ("event", event_to_json(ev))]),
+    )
+}
+
+/// All reports ride one frame; [`MAX_FRAME_LEN`] bounds it, which caps
+/// a job at ~8 MiB of reports — orders of magnitude above any real
+/// sweep's worth of curves.
+pub fn encode_job_done(job: u64, reports: &[TrainReport]) -> String {
+    frame_line(
+        "job_done",
+        "job_done",
+        obj(vec![
+            ("job", Json::Num(job as f64)),
+            ("reports", Json::Arr(reports.iter().map(report_to_json).collect())),
+        ]),
+    )
+}
+
+pub fn encode_job_failed(job: u64, error: &str) -> String {
+    frame_line(
+        "job_failed",
+        "job_failed",
+        obj(vec![
+            ("job", Json::Num(job as f64)),
+            ("error", Json::Str(error.to_string())),
+        ]),
+    )
+}
+
+fn bare_frame(kind: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Num(WIRE_VERSION as f64));
+    m.insert("frame".to_string(), Json::Str(kind.to_string()));
+    Json::Obj(m).to_string()
+}
+
+fn job_spec_from_json(p: &Json) -> Result<JobSpec> {
+    let specs = field(p, "specs")?
+        .as_arr()
+        .context("wire key 'specs' must be an array")?
+        .iter()
+        .map(spec_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    Ok(JobSpec {
+        name: string(p, "name")?,
+        priority: int_unwire(p, "priority")?,
+        specs,
+    })
+}
+
+/// Decode one client->daemon line.
+pub fn decode_serve_request(line: &str) -> Result<ServeRequest> {
+    let (kind, j) = open_frame(line)?;
+    Ok(match kind.as_str() {
+        "submit" => ServeRequest::Submit(job_spec_from_json(field(&j, "submit")?)?),
+        "status" => ServeRequest::Status,
+        "watch" => ServeRequest::Watch { job: uint(field(&j, "watch")?, "job")? as u64 },
+        "shutdown" => ServeRequest::Shutdown,
+        other => bail!("expected a submit/status/watch/shutdown frame, got '{other}'"),
+    })
+}
+
+/// Decode one daemon->client line.
+pub fn decode_serve_reply(line: &str) -> Result<ServeReply> {
+    let (kind, j) = open_frame(line)?;
+    Ok(match kind.as_str() {
+        "ack" => {
+            let p = field(&j, "ack")?;
+            ServeReply::Ack(SubmitAck {
+                job: uint(p, "job")? as u64,
+                accepted: crate::util::json::wire_bool(p, "accepted")?,
+                reason: string(p, "reason")?,
+                queued: uint(p, "queued")?,
+            })
+        }
+        "jobs" => {
+            let rows = field(&j, "jobs")?
+                .as_arr()
+                .context("wire key 'jobs' must be an array")?
+                .iter()
+                .map(|p| {
+                    Ok(JobStatus {
+                        job: uint(p, "job")? as u64,
+                        name: string(p, "name")?,
+                        priority: int_unwire(p, "priority")?,
+                        state: string(p, "state")?,
+                        rows_done: uint(p, "rows_done")?,
+                        rows_total: uint(p, "rows_total")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            ServeReply::Jobs(rows)
+        }
+        "job_event" => {
+            let p = field(&j, "job_event")?;
+            ServeReply::JobEvent {
+                job: uint(p, "job")? as u64,
+                event: event_from_json(field(p, "event")?)?,
+            }
+        }
+        "job_done" => {
+            let p = field(&j, "job_done")?;
+            let reports = field(p, "reports")?
+                .as_arr()
+                .context("wire key 'reports' must be an array")?
+                .iter()
+                .map(report_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            ServeReply::JobDone { job: uint(p, "job")? as u64, reports }
+        }
+        "job_failed" => {
+            let p = field(&j, "job_failed")?;
+            ServeReply::JobFailed {
+                job: uint(p, "job")? as u64,
+                error: string(p, "error")?,
+            }
+        }
+        other => {
+            bail!("expected an ack/jobs/job_event/job_done/job_failed frame, got '{other}'")
+        }
+    })
+}
+
 /// Read one newline-terminated frame line from a buffered stream,
 /// refusing to buffer more than [`MAX_FRAME_LEN`] bytes — the bounded
 /// replacement for `BufRead::lines()` on bytes that crossed a process
@@ -909,17 +1197,20 @@ mod tests {
     #[test]
     fn version_mismatch_and_malformed_frames_are_rejected() {
         let good = encode_event(&ev_step(0));
-        assert!(good.contains("\"v\":2"), "{good}");
+        assert!(good.contains("\"v\":3"), "{good}");
         // A frame from a newer build: rejected with a version message.
-        let bumped = good.replacen("\"v\":2", "\"v\":3", 1);
+        let bumped = good.replacen("\"v\":3", "\"v\":4", 1);
         let err = decode_frame(&bumped).unwrap_err();
         assert!(format!("{err:#}").contains("version mismatch"), "{err:#}");
-        // Pre-heartbeat v1 frames still decode (old frames stay valid).
-        let v1 = good.replacen("\"v\":2", "\"v\":1", 1);
+        // Pre-heartbeat v1 and pre-serve v2 frames still decode (old
+        // frames stay valid).
+        let v1 = good.replacen("\"v\":3", "\"v\":1", 1);
         assert!(matches!(decode_frame(&v1), Ok(Frame::Event(_))), "{v1}");
+        let v2 = good.replacen("\"v\":3", "\"v\":2", 1);
+        assert!(matches!(decode_frame(&v2), Ok(Frame::Event(_))), "{v2}");
         // ...but v0 and fractional versions never existed.
-        assert!(decode_frame(&good.replacen("\"v\":2", "\"v\":0", 1)).is_err());
-        assert!(decode_frame(&good.replacen("\"v\":2", "\"v\":1.5", 1)).is_err());
+        assert!(decode_frame(&good.replacen("\"v\":3", "\"v\":0", 1)).is_err());
+        assert!(decode_frame(&good.replacen("\"v\":3", "\"v\":1.5", 1)).is_err());
         // Unknown kind / missing envelope keys / not JSON / truncation.
         assert!(decode_frame(&good.replacen("\"frame\":\"event\"", "\"frame\":\"evnt\"", 1))
             .is_err());
@@ -1037,6 +1328,120 @@ mod tests {
             for cut in 0..line.len() {
                 assert!(decode_frame(&line[..cut]).is_err(), "cut at {cut}: {line}");
                 assert!(decode_request(&line[..cut]).is_err(), "cut at {cut}: {line}");
+            }
+        }
+    }
+
+    fn job_spec() -> JobSpec {
+        let mut cfg = TrainConfig::default();
+        cfg.steps = 7;
+        JobSpec {
+            name: "table1".into(),
+            priority: -2,
+            specs: vec![
+                RunSpec::new("coap", cfg.clone()),
+                RunSpec::new("adamw", cfg),
+            ],
+        }
+    }
+
+    /// The v3 serve request frames roundtrip: submit (with negative
+    /// priorities and full specs), status, watch, shutdown.
+    #[test]
+    fn serve_request_frames_roundtrip() {
+        let line = encode_submit(&job_spec());
+        match decode_serve_request(&line).unwrap() {
+            ServeRequest::Submit(j) => {
+                assert_eq!(j.name, "table1");
+                assert_eq!(j.priority, -2);
+                assert_eq!(j.specs.len(), 2);
+                assert_eq!(j.specs[0].label, "coap");
+                assert_eq!(j.specs[1].cfg.steps, 7);
+                // The decoded spec re-encodes to the same bytes — the
+                // exactness property the journal and resume depend on.
+                assert_eq!(encode_submit(&j), line);
+            }
+            _ => panic!("not a submit"),
+        }
+        assert!(matches!(
+            decode_serve_request(&encode_status_request()).unwrap(),
+            ServeRequest::Status
+        ));
+        assert!(matches!(
+            decode_serve_request(&encode_watch(42)).unwrap(),
+            ServeRequest::Watch { job: 42 }
+        ));
+        assert!(matches!(
+            decode_serve_request(&encode_shutdown()).unwrap(),
+            ServeRequest::Shutdown
+        ));
+        // A worker frame is not a serve request.
+        assert!(decode_serve_request(&encode_heartbeat(1)).is_err());
+    }
+
+    /// The v3 serve reply frames roundtrip, including report payloads
+    /// with non-finite floats (the journal replay path rides these).
+    #[test]
+    fn serve_reply_frames_roundtrip() {
+        let ack = SubmitAck {
+            job: 9,
+            accepted: false,
+            reason: "queue full: 16 jobs queued".into(),
+            queued: 16,
+        };
+        match decode_serve_reply(&encode_ack(&ack)).unwrap() {
+            ServeReply::Ack(a) => assert_eq!(a, ack),
+            _ => panic!("not an ack"),
+        }
+        let jobs = vec![JobStatus {
+            job: 3,
+            name: "t2".into(),
+            priority: 5,
+            state: "running".into(),
+            rows_done: 1,
+            rows_total: 4,
+        }];
+        match decode_serve_reply(&encode_jobs(&jobs)).unwrap() {
+            ServeReply::Jobs(j) => assert_eq!(j, jobs),
+            _ => panic!("not a jobs reply"),
+        }
+        match decode_serve_reply(&encode_job_event(7, &ev_step(0))).unwrap() {
+            ServeReply::JobEvent { job, event } => {
+                assert_eq!(job, 7);
+                assert_eq!(encode_event(&event), encode_event(&ev_step(0)));
+            }
+            _ => panic!("not a job_event"),
+        }
+        let line = encode_job_done(2, &[report()]);
+        match decode_serve_reply(&line).unwrap() {
+            ServeReply::JobDone { job, reports } => {
+                assert_eq!(job, 2);
+                assert_eq!(reports.len(), 1);
+                // Bit-exact payload roundtrip (NaN/inf included).
+                assert_eq!(encode_job_done(2, &reports), line);
+            }
+            _ => panic!("not a job_done"),
+        }
+        match decode_serve_reply(&encode_job_failed(4, "row 1 exploded")).unwrap() {
+            ServeReply::JobFailed { job, error } => {
+                assert_eq!(job, 4);
+                assert!(error.contains("exploded"));
+            }
+            _ => panic!("not a job_failed"),
+        }
+        // Truncations of every serve frame are errors, not panics.
+        for line in [
+            encode_submit(&job_spec()),
+            encode_ack(&ack),
+            encode_jobs(&jobs),
+            encode_job_done(2, &[report()]),
+            encode_job_failed(4, "e"),
+            encode_watch(1),
+            encode_status_request(),
+        ] {
+            for cut in 0..line.len() {
+                assert!(decode_serve_request(&line[..cut]).is_err(), "cut {cut}: {line}");
+                assert!(decode_serve_reply(&line[..cut]).is_err(), "cut {cut}: {line}");
             }
         }
     }

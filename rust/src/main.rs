@@ -7,6 +7,12 @@
 //!                remote peers via --remote HOST:PORT,...)
 //!   serve-worker accept sweep rows over TCP (`--listen ADDR`) — the
 //!                peer end of `sweep --remote`
+//!   serve        resident sweep scheduler: accept job submissions over
+//!                TCP, journal them durably under `--state-dir`, run
+//!                them across a peer pool; crash/restart resumes
+//!                interrupted jobs re-running only unfinished rows
+//!   submit       client for `serve`: submit a named sweep (and watch
+//!                it to completion), query status, watch or shut down
 //!   info         summarize the backend's model census
 //!   experiments  list the paper tables/figures and how to regenerate them
 //!   worker       (hidden, internal) one sweep row over the stdin/stdout
@@ -20,6 +26,8 @@
 //!   coap sweep table1 --procs 2
 //!   coap serve-worker --listen 0.0.0.0:7177
 //!   coap sweep table1 --remote 10.0.0.5:7177,10.0.0.6:7177
+//!   coap serve --listen 0.0.0.0:7178 --state-dir sweeps --peers proc,proc
+//!   coap submit table1 --to 10.0.0.7:7178 --steps 16 --json out.jsonl
 //!   coap train --backend xla --model lm_tiny   # needs --features xla
 //!   coap info
 
@@ -27,7 +35,8 @@ use anyhow::{Context, Result};
 use coap::benchlib::{self, ExecMode};
 use coap::config::TrainConfig;
 use coap::coordinator::sweep::{print_report_table, report_jsonl_fields};
-use coap::coordinator::{memory, remote, CollectSink, EventSink, TrainEvent, Trainer};
+use coap::coordinator::wire::JobSpec;
+use coap::coordinator::{memory, remote, serve, CollectSink, EventSink, TrainEvent, Trainer};
 use coap::runtime::open_backend;
 use coap::util::bench::{append_json, jsonl_line};
 use coap::util::cli::Args;
@@ -53,6 +62,8 @@ fn run() -> Result<()> {
         // protocol. Spawned by `coap sweep --procs N`; internal/unstable.
         "worker" => coap::coordinator::wire::worker_main(),
         "serve-worker" => serve_worker_cmd(&args),
+        "serve" => serve_cmd(&args),
+        "submit" => submit_cmd(&args),
         "info" => info(&args),
         "experiments" => experiments(&args),
         _ => {
@@ -137,6 +148,171 @@ fn serve_worker_cmd(args: &Args) -> Result<()> {
             .transpose()?,
     };
     remote::serve_worker(listen, opts)
+}
+
+/// `coap serve --listen ADDR --state-dir DIR [--peers P,..]
+/// [--queue-max N]` — the resident sweep scheduler. Accepts job
+/// submissions from `coap submit`, journals them durably under the
+/// state dir, and runs them (highest priority first) across the peer
+/// pool. Killing the daemon at any instant is safe: on restart it
+/// replays the journal and resumes interrupted jobs, re-running only
+/// rows whose reports were not yet journaled (completed rows are
+/// served from the journal bit-identically). `--die-after-rows N` is a
+/// test hook: exit hard after journaling the Nth row, the crash the
+/// resume tests rehearse.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let listen = args
+        .get("listen")
+        .context("serve needs --listen ADDR (e.g. --listen 0.0.0.0:7178)")?;
+    let state_dir = args
+        .get("state-dir")
+        .context("serve needs --state-dir DIR (the job journal lives there)")?;
+    let peers: Vec<String> = args
+        .get("peers")
+        .unwrap_or("proc")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let opts = serve::DaemonOpts {
+        state_dir: std::path::PathBuf::from(state_dir),
+        peers,
+        queue_max: args.u64_or("queue-max", serve::DEFAULT_QUEUE_MAX as u64) as usize,
+        remote: remote::RemoteOpts::default(),
+        die_after_rows: args
+            .get("die-after-rows")
+            .map(|n| n.parse().context("--die-after-rows must be a row count"))
+            .transpose()?,
+    };
+    serve::serve(listen, opts)
+}
+
+/// Narrates a watched job's streamed events: scheduler-level dispatch
+/// events plus per-row completion lines.
+struct WatchSink;
+
+impl EventSink for WatchSink {
+    fn event(&self, ev: &TrainEvent) {
+        match ev {
+            TrainEvent::RowDispatched { run, label, peer, attempt } => {
+                if *attempt > 1 {
+                    eprintln!("row {run} [{label}] -> {peer} (attempt {attempt})");
+                } else {
+                    eprintln!("row {run} [{label}] -> {peer}");
+                }
+            }
+            TrainEvent::RowRequeued { run, label, peer, error, .. } => {
+                eprintln!("row {run} [{label}] requeued off {peer}: {error}");
+            }
+            TrainEvent::RunFinished { run, label, wall_s, .. } => {
+                eprintln!("row {run} [{label}] done in {wall_s:.1}s");
+            }
+            TrainEvent::RunFailed { run, label, error, .. } => {
+                eprintln!("row {run} [{label}] FAILED: {error}");
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Write watched-job reports as schema-stable JSONL (same shape as
+/// `coap sweep --json`).
+fn write_report_jsonl(path: &str, reports: &[coap::coordinator::TrainReport]) -> Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).ok();
+        }
+    }
+    let mut f = std::fs::File::create(path)
+        .map(std::io::BufWriter::new)
+        .with_context(|| format!("creating {path}"))?;
+    for rep in reports {
+        writeln!(f, "{}", jsonl_line(&report_jsonl_fields(rep)))?;
+    }
+    f.flush()?;
+    eprintln!("wrote {} report rows to {path}", reports.len());
+    Ok(())
+}
+
+/// `coap submit` — the `coap serve` client:
+///   coap submit <name> --to ADDR [--steps N] [--priority P]
+///       [--detach] [--json out.jsonl]     submit a named sweep; unless
+///                                         --detach, watch it to its
+///                                         terminal frame and print the
+///                                         paper-style report table
+///   coap submit --status --to ADDR        queue snapshot
+///   coap submit --watch JOB --to ADDR [--json out.jsonl]
+///                                         attach to a submitted job
+///   coap submit --shutdown --to ADDR      graceful daemon exit
+fn submit_cmd(args: &Args) -> Result<()> {
+    let to = args
+        .get("to")
+        .context("submit needs --to ADDR (the `coap serve` endpoint)")?;
+    let timeout = Duration::from_secs(5);
+    if args.has("shutdown") {
+        serve::client_shutdown(to, timeout)?;
+        eprintln!("shutdown sent to {to}");
+        return Ok(());
+    }
+    if args.has("status") {
+        let jobs = serve::client_status(to, timeout)?;
+        if jobs.is_empty() {
+            println!("no jobs");
+            return Ok(());
+        }
+        println!("{:>5}  {:<20} {:>8}  {:<8} {:>9}", "job", "name", "priority", "state", "rows");
+        for j in jobs {
+            println!(
+                "{:>5}  {:<20} {:>8}  {:<8} {:>4}/{:<4}",
+                j.job, j.name, j.priority, j.state, j.rows_done, j.rows_total
+            );
+        }
+        return Ok(());
+    }
+    let narrator: &dyn EventSink = &WatchSink;
+    if let Some(job) = args.get("watch") {
+        let job: u64 = job.parse().context("--watch takes a job id")?;
+        let reports = serve::client_watch(to, job, timeout, Some(narrator))?;
+        println!("job {job}: {} rows", reports.len());
+        if let Some(path) = args.get("json") {
+            write_report_jsonl(path, &reports)?;
+        }
+        return Ok(());
+    }
+    let name = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("submit needs a sweep name (or --status/--watch/--shutdown)")?;
+    let steps = args.get("steps").map(|v| v.parse()).transpose()?;
+    let named = benchlib::named_sweep(name, steps)?;
+    let priority: i64 = args
+        .get("priority")
+        .map(|p| p.parse().context("--priority takes an integer"))
+        .transpose()?
+        .unwrap_or(0);
+    let job = JobSpec { name: named.name.clone(), priority, specs: named.specs };
+    eprintln!(
+        "submitting {name}: {} rows × {} steps on {} to {to} (priority {priority})",
+        job.specs.len(),
+        named.steps,
+        named.model
+    );
+    let ack = serve::client_submit(to, &job, timeout)?;
+    if !ack.accepted {
+        anyhow::bail!("submit refused by {to}: {}", ack.reason);
+    }
+    eprintln!("job {} accepted ({} queued)", ack.job, ack.queued);
+    if args.has("detach") {
+        println!("{}", ack.job);
+        return Ok(());
+    }
+    let reports = serve::client_watch(to, ack.job, timeout, Some(narrator))?;
+    print_report_table(&named.title, named.model, named.control, &reports);
+    if let Some(path) = args.get("json") {
+        write_report_jsonl(path, &reports)?;
+    }
+    Ok(())
 }
 
 /// `coap sweep <name> [--workers N | --procs N | --remote PEERS]
@@ -345,7 +521,7 @@ fn print_help() {
     println!(
         "coap — COAP (correlation-aware gradient projection) training coordinator
 
-USAGE: coap <train|sweep|serve-worker|info|experiments> [--flags]
+USAGE: coap <train|sweep|serve-worker|serve|submit|info|experiments> [--flags]
 
 train flags (also JSON-settable via --config file.json):
   --backend B             native (default, hermetic pure-Rust) | xla
@@ -403,6 +579,29 @@ serve-worker — accept sweep rows over TCP (the --remote peer end):
   coap serve-worker --listen 0.0.0.0:7177 [--heartbeat-ms 250]
   (binds, prints 'listening <addr>' on stdout, serves rows until killed;
    wire-version-skewed coordinators are refused at the hello handshake)
+
+serve — resident sweep scheduler (submit jobs, survive crashes):
+  coap serve --listen 0.0.0.0:7178 --state-dir DIR
+  --peers P,..            worker pool the jobs' rows run on: proc[:exe]
+                          subprocess workers and/or serve-worker
+                          HOST:PORT peers (default: proc)
+  --queue-max N           waiting-job bound; submits past it are refused
+                          in the ack, not queued (default 16)
+  (binds, prints 'serving <addr>' on stdout; every accepted job and
+   every finished row is journaled + fsynced under --state-dir before
+   it is acknowledged, so kill -9 at any instant is safe: restart
+   replays the journal and re-runs only unfinished rows — completed
+   rows come back bit-identical from the journal)
+
+submit — client for `coap serve`:
+  coap submit <name> --to ADDR [--steps N] [--priority P] [--detach]
+                     [--json out.jsonl]
+  coap submit --status --to ADDR
+  coap submit --watch JOB --to ADDR [--json out.jsonl]
+  coap submit --shutdown --to ADDR
+  (submits a named sweep — same registry as `coap sweep` — and, unless
+   --detach, streams its events and prints the report table; higher
+   --priority runs first, FIFO within a priority)
 
 see also: examples/ (quality drivers) and `cargo bench` (paper tables).",
         names = benchlib::SWEEP_NAMES.join("|")

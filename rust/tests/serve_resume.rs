@@ -1,0 +1,237 @@
+//! Acceptance suite for the resident sweep scheduler (`coap serve`):
+//! a journaled job killed mid-run (SIGKILL semantics — the daemon
+//! exits without unwinding straight after fsyncing a row) and resumed
+//! by a fresh daemon must produce spec-ordered reports **bit-identical**
+//! to serial in-process execution, re-running only the rows whose
+//! reports were not yet journaled. Plus the service surface: bounded-
+//! queue backpressure refuses (and does not journal) excess submits,
+//! status reflects the queue, finished jobs replay their reports from
+//! the journal alone, and graceful shutdown exits clean.
+//!
+//! The daemon is the real `coap` CLI (CARGO_BIN_EXE_coap) speaking the
+//! real TCP framing with real `coap worker` subprocess peers, so this
+//! suite pins `coap serve` + `coap submit` end to end.
+
+use coap::config::{OptKind, TrainConfig};
+use coap::coordinator::serve::{self, spawn_serve, DaemonHandle};
+use coap::coordinator::wire::JobSpec;
+use coap::coordinator::{ExecMode, RunSpec, Sweep, TrainReport};
+use coap::runtime::{Backend, NativeBackend};
+use coap::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+const EXE: &str = env!("CARGO_BIN_EXE_coap");
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+fn state_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("coap_serve_resume_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn mk(label: &str, model: &str, opt: OptKind, steps: usize) -> RunSpec {
+    let mut c = TrainConfig::default();
+    c.model = model.into();
+    c.optimizer = opt;
+    c.steps = steps;
+    c.lr = 3e-3;
+    c.t_update = 2;
+    c.lambda = 2;
+    c.eval_every = steps;
+    c.eval_batches = 1;
+    c.log_every = 0;
+    RunSpec::new(label, c)
+}
+
+/// Three micro rows — enough that `--die-after-rows 1` provably leaves
+/// unfinished work behind for the resumed daemon.
+fn micro_specs() -> Vec<RunSpec> {
+    vec![
+        mk("coap/lm", "lm_micro", OptKind::Coap, 3),
+        mk("adamw/lm", "lm_micro", OptKind::AdamW, 3),
+        mk("coap/vit", "vit_micro", OptKind::Coap, 3),
+    ]
+}
+
+/// Everything deterministic in a report, floats as raw bits (measured
+/// wall-clock fields excluded) — the same comparison the remote-sweep
+/// parity suite pins.
+type RowKey = (String, Vec<(usize, u64)>, Vec<u64>, usize, usize);
+
+fn row_key(r: &TrainReport) -> RowKey {
+    (
+        r.label.clone(),
+        r.train_losses.iter().map(|(s, l)| (*s, l.to_bits())).collect(),
+        r.evals.iter().map(|e| e.loss.to_bits()).collect(),
+        r.optimizer_bytes,
+        r.param_bytes,
+    )
+}
+
+/// All parseable `{"t":"row"}` journal entries as `(job, row, line)`.
+/// An unparseable line is tolerated only at the tail (a SIGKILL can
+/// tear the final append — replay drops it, and so do we).
+fn journal_rows(dir: &Path) -> Vec<(u64, usize, String)> {
+    let data = std::fs::read_to_string(dir.join("journal.jsonl")).expect("journal exists");
+    let lines: Vec<&str> = data.lines().collect();
+    let mut rows = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let Ok(j) = Json::parse(line) else {
+            assert_eq!(i, lines.len() - 1, "only the final journal line may be torn: {line:?}");
+            continue;
+        };
+        if j.get("t").and_then(|t| t.as_str()) == Some("row") {
+            rows.push((
+                j.get("job").and_then(|v| v.as_usize()).expect("row entry has job") as u64,
+                j.get("row").and_then(|v| v.as_usize()).expect("row entry has row"),
+                line.to_string(),
+            ));
+        }
+    }
+    rows
+}
+
+fn submit_micro(addr: &str) -> u64 {
+    let job = JobSpec { name: "micro".into(), priority: 0, specs: micro_specs() };
+    let ack = serve::client_submit(addr, &job, TIMEOUT).expect("submit");
+    assert!(ack.accepted, "submit refused: {}", ack.reason);
+    ack.job
+}
+
+/// The PR's acceptance test: kill the daemon right after it journals
+/// its first row report, restart it on the same state dir, and require
+/// (a) the resumed job's reports bit-identical to serial in-process
+/// execution, (b) journaled rows served verbatim from the journal
+/// rather than re-run, and (c) a finished job replayable from the
+/// journal alone by yet another daemon.
+#[test]
+fn killed_daemon_resumes_bit_identical_to_serial() {
+    let dir = state_dir("kill");
+    // Serial baseline, same specs, in this process.
+    let rt: Arc<dyn Backend> = Arc::new(NativeBackend::new());
+    let serial = Sweep::new(micro_specs())
+        .mode(ExecMode::Threads { workers: 1 })
+        .run(&rt)
+        .expect("serial baseline");
+    let serial_keys: Vec<RowKey> = serial.iter().map(row_key).collect();
+
+    // Daemon #1: dies without unwinding straight after fsyncing the
+    // first row report — the crash the journal exists for.
+    let mut d1 = spawn_serve(
+        Path::new(EXE),
+        &dir,
+        &["--peers", "proc,proc", "--die-after-rows", "1"],
+    )
+    .expect("spawn daemon 1");
+    let job = submit_micro(&d1.addr);
+    let status = d1.wait_exit().expect("daemon 1 exit");
+    assert_eq!(status.code(), Some(9), "daemon must die via the exit(9) hook");
+    let before = journal_rows(&dir);
+    assert!(
+        !before.is_empty() && before.len() < micro_specs().len(),
+        "the kill must land mid-job: {} of {} rows journaled",
+        before.len(),
+        micro_specs().len()
+    );
+
+    // Daemon #2: replays the journal, resumes the job, runs only the
+    // missing rows. Watching the job blocks to its terminal frame.
+    let mut d2 =
+        spawn_serve(Path::new(EXE), &dir, &["--peers", "proc,proc"]).expect("spawn daemon 2");
+    let reports = serve::client_watch(&d2.addr, job, TIMEOUT, None).expect("resumed job");
+    let resumed_keys: Vec<RowKey> = reports.iter().map(row_key).collect();
+    assert_eq!(
+        resumed_keys, serial_keys,
+        "resumed reports drifted from the serial baseline"
+    );
+
+    // The journal must hold exactly one report per row — a duplicate
+    // (job, row) pair would mean a completed row was re-run.
+    let after = journal_rows(&dir);
+    let mut pairs: Vec<(u64, usize)> = after.iter().map(|(j, r, _)| (*j, *r)).collect();
+    pairs.sort_unstable();
+    pairs.dedup();
+    assert_eq!(
+        pairs.len(),
+        after.len(),
+        "duplicate journal row entries: a completed row was re-run"
+    );
+    assert_eq!(after.len(), micro_specs().len(), "one journaled report per row");
+    // Pre-kill rows must survive byte-for-byte: the resumed daemon
+    // serves them from the journal, it does not recompute them.
+    for (j, r, line) in &before {
+        assert!(
+            after.iter().any(|(aj, ar, al)| aj == j && ar == r && al == line),
+            "journaled report for row {r} was rewritten by the resumed daemon"
+        );
+    }
+    // Status agrees: the job is done, all rows accounted for.
+    let jobs = serve::client_status(&d2.addr, TIMEOUT).expect("status");
+    let js = jobs.iter().find(|s| s.job == job).expect("job in status");
+    assert_eq!((js.state.as_str(), js.rows_done, js.rows_total), ("done", 3, 3));
+
+    // Daemon #3: a finished job replays entirely from the journal —
+    // same bits, no peers ever contacted (a bad pool would fail rows,
+    // not replay). SIGKILL d2 first; its journal is already durable.
+    d2.kill();
+    let d3 = spawn_serve(Path::new(EXE), &dir, &["--peers", "proc"]).expect("spawn daemon 3");
+    let replayed = serve::client_watch(&d3.addr, job, TIMEOUT, None).expect("replayed job");
+    let replayed_keys: Vec<RowKey> = replayed.iter().map(row_key).collect();
+    assert_eq!(replayed_keys, serial_keys, "journal replay drifted");
+    drop(d3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Bounded-queue backpressure: a daemon with `--queue-max 0` refuses
+/// every submission in the ack and journals nothing — the refusal is
+/// advisory, not a crash, and the daemon stays serviceable.
+#[test]
+fn full_queue_refuses_submit_without_journaling() {
+    let dir = state_dir("backpressure");
+    let d = spawn_serve(Path::new(EXE), &dir, &["--peers", "proc", "--queue-max", "0"])
+        .expect("spawn daemon");
+    let job = JobSpec { name: "micro".into(), priority: 0, specs: micro_specs() };
+    let ack = serve::client_submit(&d.addr, &job, TIMEOUT).expect("submit completes");
+    assert!(!ack.accepted, "queue-max 0 must refuse");
+    assert!(ack.reason.contains("queue full"), "reason: {}", ack.reason);
+    // Not journaled, and the daemon still answers.
+    assert!(serve::client_status(&d.addr, TIMEOUT).expect("status").is_empty());
+    let journal = std::fs::read_to_string(dir.join("journal.jsonl")).unwrap_or_default();
+    assert!(
+        !journal.contains("\"t\":\"submit\""),
+        "a refused submit must not reach the journal"
+    );
+    drop(d);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// An empty job is refused outright (nothing to journal or run), and a
+/// watch of an unknown job fails cleanly instead of hanging.
+#[test]
+fn degenerate_requests_fail_cleanly() {
+    let dir = state_dir("degenerate");
+    let d = spawn_serve(Path::new(EXE), &dir, &["--peers", "proc"]).expect("spawn daemon");
+    let empty = JobSpec { name: "empty".into(), priority: 0, specs: vec![] };
+    let ack = serve::client_submit(&d.addr, &empty, TIMEOUT).expect("submit completes");
+    assert!(!ack.accepted, "an empty job must be refused");
+    let err = serve::client_watch(&d.addr, 777, TIMEOUT, None)
+        .expect_err("watching an unknown job must fail");
+    assert!(format!("{err:#}").contains("unknown job"), "{err:#}");
+    drop(d);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Graceful shutdown: the daemon exits 0 on request; the journal makes
+/// the timing immaterial.
+#[test]
+fn shutdown_request_exits_clean() {
+    let dir = state_dir("shutdown");
+    let mut d: DaemonHandle =
+        spawn_serve(Path::new(EXE), &dir, &["--peers", "proc"]).expect("spawn daemon");
+    serve::client_shutdown(&d.addr, TIMEOUT).expect("shutdown send");
+    let status = d.wait_exit().expect("daemon exit");
+    assert_eq!(status.code(), Some(0), "graceful shutdown must exit 0");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -319,13 +319,18 @@ fn version_mismatched_frames_are_rejected() {
     };
     let good = wire::encode_event(&ev);
     assert!(wire::decode_frame(&good).is_ok());
-    // Backwards compatibility: a v1 frame (from a pre-remote build)
-    // still decodes under the v2 envelope check.
-    let v1 = good.replacen("\"v\":2", "\"v\":1", 1);
-    assert_ne!(v1, good, "encoder no longer stamps v2");
-    assert!(wire::decode_frame(&v1).is_ok(), "v1 frames must still decode");
-    for v in ["0", "3", "999", "\"2\"", "null"] {
-        let skewed = good.replacen("\"v\":2", &format!("\"v\":{v}"), 1);
+    // Backwards compatibility: v1 (pre-remote) and v2 (pre-serve)
+    // frames still decode under the v3 envelope check.
+    for old in ["1", "2"] {
+        let prior = good.replacen("\"v\":3", &format!("\"v\":{old}"), 1);
+        assert_ne!(prior, good, "encoder no longer stamps v3");
+        assert!(
+            wire::decode_frame(&prior).is_ok(),
+            "v{old} frames must still decode"
+        );
+    }
+    for v in ["0", "4", "999", "\"3\"", "null"] {
+        let skewed = good.replacen("\"v\":3", &format!("\"v\":{v}"), 1);
         assert_ne!(skewed, good, "replacement failed for v={v}");
         let err = wire::decode_frame(&skewed).unwrap_err();
         let msg = format!("{err:#}");
